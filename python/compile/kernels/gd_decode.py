@@ -1,0 +1,235 @@
+"""L1 — Pallas kernels for clustered-sparse-network (CNN) global decoding & training.
+
+The paper's compute hot-spot is eq. (1):
+
+    v_{n_i'} = AND_{i=1..c} OR_{j=1..l} ( w_{(i,j)(i')} AND v_{(i,j)} )
+
+i.e. a P_II neuron fires iff *every* cluster of P_I has at least one active
+connection to it.  Because local decoding (LD) activates exactly one neuron per
+cluster, the OR over j degenerates to "read the one weight row the LD selected"
+— the paper implements this in hardware by fusing the one-hot decoder with the
+SRAM word-lines (Fig. 4).
+
+TPU rethink (see DESIGN.md §Hardware-Adaptation): a gather of one row per
+cluster followed by a popcount across clusters is exactly a *matmul against a
+one-hot matrix*:
+
+    counts = U @ W          U ∈ {0,1}^{B×(c·l)}  (LD one-hots, concatenated)
+                            W ∈ {0,1}^{(c·l)×M}  (binary connection weights)
+    act    = counts >= c    (AND across clusters == all c clusters hit)
+
+which maps onto the MXU systolic array in a single pass.  The ζ-group OR that
+drives the CAM compare-enable lines (Fig. 4, right) is a max-pool over the
+minor axis, fused into the same kernel before writeback so only B×(M/ζ) enable
+bits leave VMEM alongside the activation map.
+
+`W` is tiled along M via BlockSpec so each (B-tile, M-tile) stays VMEM-resident
+— the analogue of the paper's per-cluster SRAM banking.
+
+All kernels run with interpret=True: real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute (see /opt/xla-example/README).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["gd_decode", "gd_decode_gather", "train_weights", "DEFAULT_BLOCK_M"]
+
+# Default M-tile. 256 f32 columns × (c·l) rows plus a B×256 accumulator is a
+# few tens of KiB — comfortably inside one TPU core's ~16 MiB VMEM even for
+# B=64, leaving room for double-buffering the W stream from HBM.
+DEFAULT_BLOCK_M = 256
+
+
+def _gd_tile_kernel(u_ref, w_ref, act_ref, en_ref, *, c: int, zeta: int):
+    """One (B, block_m) tile of global decode + fused ζ-group OR."""
+    u = u_ref[...]  # (B, c·l) f32 one-hots
+    w = w_ref[...]  # (c·l, block_m) f32 binary weights
+    # MXU pass: per-neuron count of clusters with an active connection.
+    counts = jnp.dot(u, w, preferred_element_type=jnp.float32)
+    # AND across clusters: every one of the c clusters contributed a hit.
+    act = (counts >= c).astype(jnp.float32)
+    act_ref[...] = act
+    b, mt = act.shape
+    # ζ-group OR → compare-enable bits, fused before writeback.
+    en_ref[...] = jnp.max(act.reshape(b, mt // zeta, zeta), axis=-1)
+
+
+def gd_decode(
+    u: jax.Array,
+    w: jax.Array,
+    *,
+    c: int,
+    zeta: int,
+    block_m: int | None = None,
+    interpret: bool = True,
+):
+    """Batched global decode.
+
+    Args:
+      u: (B, c·l) f32 — concatenated one-hot LD outputs, one 1 per cluster.
+      w: (c·l, M) f32 — binary connection weights (0.0 / 1.0).
+      c: number of clusters in P_I.
+      zeta: CAM rows per compare-enabled sub-block (ζ).
+      block_m: M-tile width; must divide M and be a multiple of ζ.
+      interpret: run the Pallas kernel in interpret mode (required on CPU).
+
+    Returns:
+      act:     (B, M)   f32 — P_II neural activations (0/1).
+      enables: (B, M/ζ) f32 — per-sub-block compare-enable bits (0/1).
+    """
+    b, cl = u.shape
+    cl_w, m = w.shape
+    if cl != cl_w:
+        raise ValueError(f"u/w cluster-dim mismatch: {cl} vs {cl_w}")
+    if m % zeta != 0:
+        raise ValueError(f"M={m} not divisible by zeta={zeta}")
+    if block_m is None:
+        block_m = min(m, DEFAULT_BLOCK_M)
+    if m % block_m != 0 or block_m % zeta != 0:
+        raise ValueError(f"block_m={block_m} must divide M={m} and be a multiple of zeta={zeta}")
+
+    grid = (m // block_m,)
+    return pl.pallas_call(
+        functools.partial(_gd_tile_kernel, c=c, zeta=zeta),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, cl), lambda i: (0, 0)),  # U broadcast to every tile
+            pl.BlockSpec((cl_w, block_m), lambda i: (0, i)),  # W streamed along M
+        ],
+        out_specs=[
+            pl.BlockSpec((b, block_m), lambda i: (0, i)),
+            pl.BlockSpec((b, block_m // zeta), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, m), jnp.float32),
+            jax.ShapeDtypeStruct((b, m // zeta), jnp.float32),
+        ],
+        interpret=interpret,
+    )(u, w)
+
+
+def _gd_gather_tile_kernel(idx_ref, w_ref, act_ref, en_ref, *, c: int, l: int, zeta: int):
+    """Gather-formulation tile: read ONE weight row per cluster and AND.
+
+    This is the literal transcription of the paper's Fig. 4 trick — the
+    one-hot decoder fused with the SRAM word-lines so only the c selected
+    rows are ever read ("inherently eliminates unnecessary w ∧ v
+    operations").  On TPU the matmul formulation usually wins (the MXU is
+    free; VMEM bandwidth is not), but this variant exists to (a) mirror the
+    hardware exactly and (b) A/B the two lowerings; both are tested against
+    the same oracle and each other.
+    """
+    idx = idx_ref[...]  # (B, c) int32 cluster indices
+    w = w_ref[...]  # (c·l, block_m)
+    b = idx.shape[0]
+    mt = w.shape[1]
+    acc = jnp.ones((b, mt), dtype=jnp.float32)
+    for cluster in range(c):
+        # row gather: (B, block_m) — one SRAM row per cluster per query
+        rows = jnp.take(w, cluster * l + idx[:, cluster], axis=0)
+        acc = acc * rows  # AND over clusters (0/1 values)
+    act_ref[...] = acc
+    en_ref[...] = jnp.max(acc.reshape(b, mt // zeta, zeta), axis=-1)
+
+
+def gd_decode_gather(
+    idx: jax.Array,
+    w: jax.Array,
+    *,
+    c: int,
+    l: int,
+    zeta: int,
+    block_m: int | None = None,
+    interpret: bool = True,
+):
+    """Batched global decode, row-gather formulation (Fig. 4 literal).
+
+    Args:
+      idx: (B, c) int32 — LD cluster indices (not one-hots).
+      w:   (c·l, M) f32 — binary connection weights.
+
+    Returns the same (act, enables) pair as :func:`gd_decode`.
+    """
+    b, c_in = idx.shape
+    cl_w, m = w.shape
+    if c_in != c or cl_w != c * l:
+        raise ValueError(f"idx/w geometry mismatch: idx c={c_in}, w rows={cl_w}, c·l={c * l}")
+    if m % zeta != 0:
+        raise ValueError(f"M={m} not divisible by zeta={zeta}")
+    if block_m is None:
+        block_m = min(m, DEFAULT_BLOCK_M)
+    if m % block_m != 0 or block_m % zeta != 0:
+        raise ValueError(f"block_m={block_m} must divide M={m} and be a multiple of zeta={zeta}")
+
+    grid = (m // block_m,)
+    return pl.pallas_call(
+        functools.partial(_gd_gather_tile_kernel, c=c, l=l, zeta=zeta),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, c), lambda i: (0, 0)),
+            pl.BlockSpec((cl_w, block_m), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, block_m), lambda i: (0, i)),
+            pl.BlockSpec((b, block_m // zeta), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, m), jnp.float32),
+            jax.ShapeDtypeStruct((b, m // zeta), jnp.float32),
+        ],
+        interpret=interpret,
+    )(idx, w)
+
+
+def _train_tile_kernel(u_ref, a_ref, w_ref):
+    """One (c·l, block_m) tile of the weight matrix from a full training set."""
+    u = u_ref[...]  # (E, c·l) — LD one-hots of the stored reduced tags
+    a = a_ref[...]  # (E, block_m) — one-hot CAM addresses (tile)
+    # Binary weights: a connection exists if *any* stored entry created it.
+    # min(1, Uᵀ·A) == OR over entries — matmul + clamp, one MXU pass.
+    w_ref[...] = jnp.minimum(jnp.dot(u.T, a, preferred_element_type=jnp.float32), 1.0)
+
+
+def train_weights(
+    u: jax.Array,
+    a: jax.Array,
+    *,
+    block_m: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Batch-train the binary weight matrix from all stored entries at once.
+
+    Args:
+      u: (E, c·l) f32 — LD one-hots of the E stored entries' reduced tags.
+      a: (E, M)   f32 — one-hot CAM addresses of the same entries.
+
+    Returns:
+      w: (c·l, M) f32 binary weights.
+    """
+    e, cl = u.shape
+    e_a, m = a.shape
+    if e != e_a:
+        raise ValueError(f"entry-count mismatch: {e} vs {e_a}")
+    if block_m is None:
+        block_m = min(m, DEFAULT_BLOCK_M)
+    if m % block_m != 0:
+        raise ValueError(f"block_m={block_m} must divide M={m}")
+
+    grid = (m // block_m,)
+    return pl.pallas_call(
+        _train_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((e, cl), lambda i: (0, 0)),
+            pl.BlockSpec((e, block_m), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((cl, block_m), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((cl, m), jnp.float32),
+        interpret=interpret,
+    )(u, a)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the CNN global-decode / training kernels.
+
+Deliberately written as a *semantic* transcription of the paper's eq. (1) —
+per-cluster OR, then AND across clusters — rather than the matmul formulation
+the Pallas kernel uses, so the two implementations are genuinely independent.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["gd_decode_ref", "train_weights_ref", "lambda_ref"]
+
+
+def gd_decode_ref(u, w, *, c: int, zeta: int):
+    """Reference global decode.
+
+    Computes eq. (1) literally:  v_{n_i'} = AND_i OR_j (w_{(i,j)(i')} ∧ v_{(i,j)}),
+    then the ζ-group OR producing compare-enable bits (Fig. 4).
+
+    Args / returns match kernels.gd_decode.
+    """
+    b, cl = u.shape
+    _, m = w.shape
+    l = cl // c
+    u3 = u.reshape(b, c, l)  # per-cluster neural values
+    w3 = w.reshape(c, l, m)  # per-cluster connection weights
+    # OR_j (w ∧ v): with 0/1 values, "any product nonzero" == sum > 0.
+    cluster_hit = jnp.einsum("bcl,clm->bcm", u3, w3) > 0.0
+    act = jnp.all(cluster_hit, axis=1).astype(jnp.float32)  # AND_i
+    enables = act.reshape(b, m // zeta, zeta).max(axis=-1)  # ζ-group OR
+    return act, enables
+
+
+def train_weights_ref(u, a):
+    """Reference training: w_{(i,j)(i')} = 1 iff some stored entry links them."""
+    e, cl = u.shape
+    _, m = a.shape
+    w = jnp.zeros((cl, m), dtype=jnp.float32)
+    # OR over entries of the one-hot outer products — loop form on purpose.
+    for ei in range(e):
+        w = jnp.maximum(w, jnp.outer(u[ei], a[ei]))
+    return w
+
+
+def lambda_ref(act):
+    """Number of activated P_II neurons per query (the paper's λ)."""
+    return jnp.sum(act, axis=-1).astype(jnp.int32)

@@ -1,0 +1,123 @@
+"""L2 — JAX compute graphs for the clustered-sparse-network CAM classifier.
+
+Build-time only: these functions are lowered once by `compile/aot.py` into HLO
+text artifacts that the Rust coordinator loads via PJRT.  Python never runs on
+the request path.
+
+Graphs
+------
+decode(idx, w)        — LD one-hot → GD Pallas kernel → ζ-group enables + λ.
+train(idx, addr)      — full retrain of the binary weight matrix.
+add_entry(w, idx, a)  — incremental single-entry train (CAM insert path).
+
+`idx` is the reduced-length tag already split into c cluster indices
+(B, c) int32 — tag-bit selection is trivial bit surgery done natively by the
+Rust coordinator (`cnn::bitselect`); shipping c small integers keeps the
+host↔PJRT marshaling minimal (the paper's analogue: only the q reduced bits
+enter the CNN block, Fig. 4 left).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gd_decode import gd_decode, train_weights
+
+__all__ = ["CnnConfig", "local_decode", "decode", "train", "add_entry"]
+
+
+class CnnConfig:
+    """Static CNN geometry (Table I names).
+
+    Attributes:
+      m: number of CAM entries (M).
+      c: number of P_I clusters.
+      l: neurons per cluster (l = 2^k, k bits of tag per cluster).
+      zeta: CAM rows per compare-enabled sub-block (ζ); β = M/ζ sub-blocks.
+    """
+
+    def __init__(self, m: int = 512, c: int = 3, l: int = 8, zeta: int = 8):
+        if m % zeta != 0:
+            raise ValueError(f"M={m} must be divisible by zeta={zeta}")
+        if l & (l - 1):
+            raise ValueError(f"l={l} must be a power of two")
+        self.m = m
+        self.c = c
+        self.l = l
+        self.zeta = zeta
+
+    @property
+    def q(self) -> int:
+        """Reduced-tag length in bits: q = c·log2(l)."""
+        return self.c * (self.l.bit_length() - 1)
+
+    @property
+    def beta(self) -> int:
+        """Number of CAM sub-blocks: β = M/ζ."""
+        return self.m // self.zeta
+
+    @property
+    def cl(self) -> int:
+        return self.c * self.l
+
+    def __repr__(self):
+        return f"CnnConfig(m={self.m}, c={self.c}, l={self.l}, zeta={self.zeta})"
+
+
+def local_decode(idx: jax.Array, cfg: CnnConfig) -> jax.Array:
+    """LD: one neuron per cluster, direct binary-to-integer mapping.
+
+    (B, c) int32 cluster indices → (B, c·l) f32 concatenated one-hots.
+    """
+    oh = jax.nn.one_hot(idx, cfg.l, dtype=jnp.float32)  # (B, c, l)
+    return oh.reshape(idx.shape[0], cfg.cl)
+
+
+def decode(idx: jax.Array, w: jax.Array, cfg: CnnConfig, *, interpret: bool = True):
+    """Full CNN decode: LD → GD (Pallas) → compare-enables + ambiguity count.
+
+    Args:
+      idx: (B, c) int32 cluster indices of the reduced tags.
+      w:   (c·l, M) f32 binary weights.
+
+    Returns:
+      enables: (B, M/ζ) f32 — sub-block compare-enable bits.
+      lam:     (B,)     i32 — λ, the number of activated P_II neurons
+               (ambiguity statistic of Fig. 3).
+    """
+    u = local_decode(idx, cfg)
+    act, enables = gd_decode(u, w, c=cfg.c, zeta=cfg.zeta, interpret=interpret)
+    lam = jnp.sum(act, axis=-1).astype(jnp.int32)
+    return enables, lam
+
+
+def train(idx: jax.Array, addr: jax.Array, cfg: CnnConfig, *, interpret: bool = True) -> jax.Array:
+    """Full (re)train from all stored entries.
+
+    Args:
+      idx:  (E, c) int32 reduced-tag cluster indices of stored entries.
+      addr: (E,)   int32 CAM addresses of the same entries.
+
+    Returns:
+      w: (c·l, M) f32 binary weight matrix.
+    """
+    u = local_decode(idx, cfg)
+    a = jax.nn.one_hot(addr, cfg.m, dtype=jnp.float32)
+    return train_weights(u, a, interpret=interpret)
+
+
+def add_entry(w: jax.Array, idx: jax.Array, addr: jax.Array, cfg: CnnConfig) -> jax.Array:
+    """Incremental train of one association (the CAM insert path).
+
+    Args:
+      w:    (c·l, M) f32 current weights.
+      idx:  (c,) int32 reduced-tag cluster indices of the new entry.
+      addr: ()   int32 its CAM address.
+
+    Returns:
+      updated (c·l, M) weights — OR of the old weights with the new outer product.
+    """
+    u = local_decode(idx[None, :], cfg)[0]  # (c·l,)
+    a = jax.nn.one_hot(addr, cfg.m, dtype=jnp.float32)  # (M,)
+    return jnp.maximum(w, jnp.outer(u, a))

@@ -1,0 +1,181 @@
+"""L1 correctness: Pallas GD / training kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps geometry (B, c, l, M, ζ, block_m) and weight densities;
+every case asserts exact agreement (the values are binary, so allclose with
+tight tolerance == exact).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.gd_decode import gd_decode, gd_decode_gather, train_weights
+from compile.kernels.ref import gd_decode_ref, lambda_ref, train_weights_ref
+
+
+def _make_onehots(rng, batch, c, l):
+    """Concatenated one-hot LD outputs: exactly one active neuron per cluster."""
+    u = np.zeros((batch, c * l), dtype=np.float32)
+    idx = rng.integers(0, l, size=(batch, c))
+    for b in range(batch):
+        for i in range(c):
+            u[b, i * l + idx[b, i]] = 1.0
+    return u, idx
+
+
+geometry = st.tuples(
+    st.integers(1, 8),                     # batch
+    st.integers(1, 4),                     # c
+    st.sampled_from([2, 4, 8, 16]),        # l
+    st.sampled_from([8, 16, 32, 64, 128]), # M
+    st.sampled_from([1, 2, 4, 8]),         # zeta
+    st.integers(0, 2**31 - 1),             # seed
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(geometry, st.floats(0.0, 1.0))
+def test_gd_decode_matches_ref(geom, density):
+    batch, c, l, m, zeta, seed = geom
+    if m % zeta != 0:
+        m = zeta * max(1, m // zeta)
+    rng = np.random.default_rng(seed)
+    u, _ = _make_onehots(rng, batch, c, l)
+    w = (rng.random((c * l, m)) < density).astype(np.float32)
+
+    act, en = gd_decode(jnp.asarray(u), jnp.asarray(w), c=c, zeta=zeta)
+    act_r, en_r = gd_decode_ref(jnp.asarray(u), jnp.asarray(w), c=c, zeta=zeta)
+
+    np.testing.assert_allclose(np.asarray(act), np.asarray(act_r), atol=0)
+    np.testing.assert_allclose(np.asarray(en), np.asarray(en_r), atol=0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(geometry, st.floats(0.0, 1.0))
+def test_gather_formulation_matches_matmul_formulation(geom, density):
+    """The Fig. 4 row-gather kernel and the MXU matmul kernel are two
+    lowerings of the same eq. (1) — they must agree bit-for-bit."""
+    batch, c, l, m, zeta, seed = geom
+    if m % zeta != 0:
+        m = zeta * max(1, m // zeta)
+    rng = np.random.default_rng(seed)
+    u, idx = _make_onehots(rng, batch, c, l)
+    w = (rng.random((c * l, m)) < density).astype(np.float32)
+
+    act_mm, en_mm = gd_decode(jnp.asarray(u), jnp.asarray(w), c=c, zeta=zeta)
+    act_g, en_g = gd_decode_gather(
+        jnp.asarray(idx.astype(np.int32)), jnp.asarray(w), c=c, l=l, zeta=zeta
+    )
+    np.testing.assert_array_equal(np.asarray(act_mm), np.asarray(act_g))
+    np.testing.assert_array_equal(np.asarray(en_mm), np.asarray(en_g))
+
+
+def test_gather_shape_validation():
+    idx = jnp.zeros((2, 3), jnp.int32)
+    w = jnp.zeros((24, 16), jnp.float32)
+    with pytest.raises(ValueError):
+        gd_decode_gather(idx, w, c=2, l=8, zeta=4)  # c mismatch
+    with pytest.raises(ValueError):
+        gd_decode_gather(idx, w, c=3, l=4, zeta=4)  # c·l mismatch
+    with pytest.raises(ValueError):
+        gd_decode_gather(idx, w, c=3, l=8, zeta=5)  # zeta ∤ M
+
+
+@settings(max_examples=40, deadline=None)
+@given(geometry)
+def test_train_matches_ref(geom):
+    entries, c, l, m, _, seed = geom
+    rng = np.random.default_rng(seed)
+    u, _ = _make_onehots(rng, entries, c, l)
+    addr = rng.integers(0, m, size=entries)
+    a = np.eye(m, dtype=np.float32)[addr]
+
+    w = train_weights(jnp.asarray(u), jnp.asarray(a))
+    w_r = train_weights_ref(jnp.asarray(u), jnp.asarray(a))
+    np.testing.assert_allclose(np.asarray(w), np.asarray(w_r), atol=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(geometry)
+def test_train_then_decode_no_false_negative(geom):
+    """The paper's correctness invariant: the CNN may over-activate
+    (ambiguities cost power) but must NEVER miss the trained entry —
+    'accuracy of the final output is not affected' (§I)."""
+    entries, c, l, m, zeta, seed = geom
+    if m % zeta != 0:
+        m = zeta * max(1, m // zeta)
+    entries = min(entries, m)
+    rng = np.random.default_rng(seed)
+    u, _ = _make_onehots(rng, entries, c, l)
+    addr = rng.choice(m, size=entries, replace=False)
+    a = np.eye(m, dtype=np.float32)[addr]
+
+    w = train_weights(jnp.asarray(u), jnp.asarray(a))
+    act, en = gd_decode(jnp.asarray(u), w, c=c, zeta=zeta)
+    act = np.asarray(act)
+    en = np.asarray(en)
+    for e in range(entries):
+        assert act[e, addr[e]] == 1.0, "trained P_II neuron must activate"
+        assert en[e, addr[e] // zeta] == 1.0, "its sub-block must be enabled"
+
+
+@pytest.mark.parametrize("block_m", [8, 16, 32, 64, 128])
+def test_block_m_invariance(block_m):
+    """Tiling must not change results — the VMEM schedule is semantics-free."""
+    rng = np.random.default_rng(7)
+    c, l, m, zeta, batch = 3, 8, 128, 4, 5
+    u, _ = _make_onehots(rng, batch, c, l)
+    w = (rng.random((c * l, m)) < 0.1).astype(np.float32)
+    base_act, base_en = gd_decode(jnp.asarray(u), jnp.asarray(w), c=c, zeta=zeta, block_m=m)
+    act, en = gd_decode(jnp.asarray(u), jnp.asarray(w), c=c, zeta=zeta, block_m=block_m)
+    np.testing.assert_array_equal(np.asarray(act), np.asarray(base_act))
+    np.testing.assert_array_equal(np.asarray(en), np.asarray(base_en))
+
+
+def test_empty_weights_activate_nothing():
+    u = np.zeros((2, 6), dtype=np.float32)
+    u[:, 0] = 1.0
+    u[:, 3] = 1.0  # c=2, l=3... use l=4 power of two geometry instead
+    c, l, m, zeta = 2, 4, 16, 4
+    u = np.zeros((2, c * l), dtype=np.float32)
+    u[:, 1] = 1.0
+    u[:, l + 2] = 1.0
+    w = np.zeros((c * l, m), dtype=np.float32)
+    act, en = gd_decode(jnp.asarray(u), jnp.asarray(w), c=c, zeta=zeta)
+    assert np.asarray(act).sum() == 0
+    assert np.asarray(en).sum() == 0
+
+
+def test_full_weights_activate_everything():
+    c, l, m, zeta = 3, 4, 32, 8
+    rng = np.random.default_rng(3)
+    u, _ = _make_onehots(rng, 4, c, l)
+    w = np.ones((c * l, m), dtype=np.float32)
+    act, en = gd_decode(jnp.asarray(u), jnp.asarray(w), c=c, zeta=zeta)
+    assert np.asarray(act).min() == 1.0
+    assert np.asarray(en).min() == 1.0
+
+
+def test_lambda_counts_activations():
+    c, l, m, zeta = 2, 4, 16, 2
+    rng = np.random.default_rng(11)
+    u, _ = _make_onehots(rng, 6, c, l)
+    w = (rng.random((c * l, m)) < 0.5).astype(np.float32)
+    act, _ = gd_decode(jnp.asarray(u), jnp.asarray(w), c=c, zeta=zeta)
+    lam = lambda_ref(act)
+    np.testing.assert_array_equal(np.asarray(lam), np.asarray(act).sum(-1).astype(np.int32))
+
+
+def test_shape_validation():
+    u = jnp.zeros((2, 8), jnp.float32)
+    w = jnp.zeros((6, 16), jnp.float32)
+    with pytest.raises(ValueError):
+        gd_decode(u, w, c=2, zeta=4)  # cl mismatch
+    w = jnp.zeros((8, 15), jnp.float32)
+    with pytest.raises(ValueError):
+        gd_decode(u, w, c=2, zeta=4)  # M not divisible by zeta
+    w = jnp.zeros((8, 16), jnp.float32)
+    with pytest.raises(ValueError):
+        gd_decode(u, w, c=2, zeta=4, block_m=6)  # bad tile

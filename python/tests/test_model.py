@@ -1,0 +1,128 @@
+"""L2 correctness: decode/train/add_entry graphs, geometry, and the paper's
+statistical claims (E(λ) vs q closed form, §II-B / Fig. 3)."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile.model import CnnConfig, add_entry, decode, local_decode, train
+
+
+def _random_entries(rng, cfg, entries):
+    idx = rng.integers(0, cfg.l, size=(entries, cfg.c)).astype(np.int32)
+    addr = np.arange(entries, dtype=np.int32)
+    return jnp.asarray(idx), jnp.asarray(addr)
+
+
+class TestConfig:
+    def test_reference_design_point(self):
+        """Table I: M=512, ζ=8 → β=64; c=3, l=8 → q=9."""
+        cfg = CnnConfig(m=512, c=3, l=8, zeta=8)
+        assert cfg.q == 9
+        assert cfg.beta == 64
+        assert cfg.cl == 24
+
+    def test_rejects_bad_geometry(self):
+        with pytest.raises(ValueError):
+            CnnConfig(m=100, zeta=8)
+        with pytest.raises(ValueError):
+            CnnConfig(l=6)
+
+    @pytest.mark.parametrize("c,l,q", [(1, 2, 1), (2, 4, 4), (3, 8, 9), (4, 16, 16)])
+    def test_q_formula(self, c, l, q):
+        assert CnnConfig(m=64, c=c, l=l, zeta=4).q == q
+
+
+class TestLocalDecode:
+    def test_one_hot_per_cluster(self):
+        cfg = CnnConfig(m=64, c=3, l=8, zeta=4)
+        idx = jnp.asarray([[0, 7, 3], [5, 5, 5]], dtype=jnp.int32)
+        u = np.asarray(local_decode(idx, cfg))
+        assert u.shape == (2, 24)
+        # exactly one activation per cluster
+        assert (u.reshape(2, 3, 8).sum(-1) == 1).all()
+        assert u[0, 0] == 1 and u[0, 8 + 7] == 1 and u[0, 16 + 3] == 1
+
+
+class TestTrainDecode:
+    def test_roundtrip_finds_entry(self):
+        cfg = CnnConfig(m=128, c=3, l=8, zeta=8)
+        rng = np.random.default_rng(0)
+        idx, addr = _random_entries(rng, cfg, cfg.m)
+        w = train(idx, addr, cfg)
+        enables, lam = decode(idx, w, cfg)
+        enables = np.asarray(enables)
+        for e in range(cfg.m):
+            assert enables[e, int(addr[e]) // cfg.zeta] == 1.0
+        assert (np.asarray(lam) >= 1).all()
+
+    def test_untrained_query_may_miss(self):
+        """A query whose reduced tag collides with no stored entry enables
+        nothing — zero comparisons, the best case for energy."""
+        cfg = CnnConfig(m=64, c=2, l=16, zeta=8)
+        idx = jnp.asarray([[3, 4]], dtype=jnp.int32)
+        w = jnp.zeros((cfg.cl, cfg.m), jnp.float32)
+        enables, lam = decode(idx, w, cfg)
+        assert np.asarray(enables).sum() == 0
+        assert int(lam[0]) == 0
+
+    def test_add_entry_equals_batch_train(self):
+        cfg = CnnConfig(m=64, c=3, l=4, zeta=4)
+        rng = np.random.default_rng(1)
+        idx, addr = _random_entries(rng, cfg, 32)
+        w_batch = np.asarray(train(idx, addr, cfg))
+        w_inc = jnp.zeros((cfg.cl, cfg.m), jnp.float32)
+        for e in range(32):
+            w_inc = add_entry(w_inc, idx[e], addr[e], cfg)
+        np.testing.assert_array_equal(w_batch, np.asarray(w_inc))
+
+    def test_add_entry_idempotent(self):
+        cfg = CnnConfig(m=32, c=2, l=4, zeta=4)
+        w0 = jnp.zeros((cfg.cl, cfg.m), jnp.float32)
+        idx = jnp.asarray([1, 3], dtype=jnp.int32)
+        w1 = add_entry(w0, idx, jnp.asarray(5), cfg)
+        w2 = add_entry(w1, idx, jnp.asarray(5), cfg)
+        np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))
+
+    def test_weights_monotone_in_entries(self):
+        cfg = CnnConfig(m=32, c=2, l=4, zeta=4)
+        rng = np.random.default_rng(2)
+        idx, addr = _random_entries(rng, cfg, 16)
+        w_half = np.asarray(train(idx[:8], addr[:8], cfg))
+        # train() lowers with E = idx.shape[0]; keep full set for comparison
+        w_full = np.asarray(train(idx, addr, cfg))
+        assert (w_full >= w_half).all()
+
+
+class TestAmbiguityStatistics:
+    """Fig. 3 / §II-B: with uniform reduced tags, E(λ) = 1 + (M−1)/2^q for a
+    query equal to a stored tag. The paper's design point (M=512, q=9) gives
+    E(λ) ≈ 2 ⇒ 'on average only two comparisons'."""
+
+    def test_expected_lambda_matches_closed_form(self):
+        cfg = CnnConfig(m=256, c=3, l=8, zeta=8)  # q=9
+        rng = np.random.default_rng(42)
+        trials = []
+        for t in range(8):
+            idx = rng.integers(0, cfg.l, size=(cfg.m, cfg.c)).astype(np.int32)
+            addr = np.arange(cfg.m, dtype=np.int32)
+            w = train(jnp.asarray(idx), jnp.asarray(addr), cfg)
+            _, lam = decode(jnp.asarray(idx), w, cfg)
+            trials.append(np.asarray(lam).mean())
+        measured = float(np.mean(trials))
+        expected = 1.0 + (cfg.m - 1) / 2**cfg.q
+        assert abs(measured - expected) / expected < 0.05
+
+    def test_lambda_decreases_with_q(self):
+        """Fig. 3's monotone shape: more reduced-tag bits → fewer ambiguities."""
+        rng = np.random.default_rng(7)
+        means = []
+        for c in [1, 2, 3]:  # q = 3, 6, 9 with l=8
+            cfg = CnnConfig(m=128, c=c, l=8, zeta=8)
+            idx = rng.integers(0, cfg.l, size=(cfg.m, cfg.c)).astype(np.int32)
+            addr = np.arange(cfg.m, dtype=np.int32)
+            w = train(jnp.asarray(idx), jnp.asarray(addr), cfg)
+            _, lam = decode(jnp.asarray(idx), w, cfg)
+            means.append(np.asarray(lam).mean())
+        assert means[0] > means[1] > means[2]

@@ -1,0 +1,177 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!  A1  ζ sweep at the reference point — comparisons / energy / wiring
+//!      trade-off (§III-B criteria 1 & 2);
+//!  A2  q sweep (c at fixed l) — CNN complexity vs ambiguity (§II-B,
+//!      the Fig. 3 trade-off priced in energy and area);
+//!  A3  bit-selection policy on non-uniform (router/ACL) tags — the §II-B
+//!      "select bits to reduce correlation" claim, measured;
+//!  A4  NOR vs NAND match-lines inside the *proposed* sub-blocks — the
+//!      §III-B argument for exploiting NOR's low latency once only ~2
+//!      sub-blocks are active;
+//!  A5  hit-ratio sensitivity — misses are cheaper than hits (zero-block
+//!      decodes), the inverse of a conventional CAM.
+//!
+//! Run: `cargo bench --bench ablations`
+
+use cscam::cam::MatchlineKind;
+use cscam::cnn::Selection;
+use cscam::config::DesignConfig;
+use cscam::coordinator::LookupEngine;
+use cscam::energy::{proposed_search_energy, CalibrationConstants};
+use cscam::stats::OnlineStats;
+use cscam::timing::{proposed_delay, DelayConstants};
+use cscam::transistor::{overhead_vs_nand, TransistorAssumptions};
+use cscam::util::Rng;
+use cscam::workload::{AclTrace, QueryMix, TagDistribution};
+
+fn main() {
+    let calib = CalibrationConstants::reference_130nm();
+    let delays = DelayConstants::reference();
+
+    println!("# A1 — ζ sweep at M=512, N=128, q=9");
+    println!(
+        "{:>5} {:>6} {:>10} {:>16} {:>11} {:>10}",
+        "ζ", "β", "E[cmp]", "E [fJ/bit/srch]", "cycle [ns]", "overhead"
+    );
+    for zeta in [1usize, 2, 4, 8, 16, 32, 64, 128] {
+        let cfg = DesignConfig { zeta, ..DesignConfig::reference() };
+        let e = proposed_search_energy(&cfg, &calib).per_bit(cfg.m, cfg.n);
+        let d = proposed_delay(&cfg, &delays);
+        let o = overhead_vs_nand(&cfg, &TransistorAssumptions::default());
+        println!(
+            "{:>5} {:>6} {:>10.2} {:>16.4} {:>11.3} {:>9.2}%",
+            zeta,
+            cfg.beta(),
+            cfg.expected_comparisons(),
+            e,
+            d.cycle_ns,
+            100.0 * o
+        );
+    }
+
+    println!("\n# A2 — q sweep (l=8 fixed, c varies)");
+    println!(
+        "{:>4} {:>4} {:>10} {:>16} {:>11} {:>10}",
+        "c", "q", "E[λ]", "E [fJ/bit/srch]", "cycle [ns]", "overhead"
+    );
+    for c in 1..=6usize {
+        let cfg = DesignConfig { c, ..DesignConfig::reference() };
+        let e = proposed_search_energy(&cfg, &calib).per_bit(cfg.m, cfg.n);
+        let d = proposed_delay(&cfg, &delays);
+        let o = overhead_vs_nand(&cfg, &TransistorAssumptions::default());
+        println!(
+            "{:>4} {:>4} {:>10.3} {:>16.4} {:>11.3} {:>9.2}%",
+            c,
+            cfg.q(),
+            cfg.expected_lambda(),
+            e,
+            d.cycle_ns,
+            100.0 * o
+        );
+    }
+
+    println!("\n# A3 — bit selection on router/ACL tags (measured, 512 rules)");
+    let cfg = DesignConfig::reference();
+    let mut rng = Rng::seed_from_u64(33);
+    let rules = AclTrace { n: cfg.n, prefixes: 6, prefix_len: 48 }.generate(cfg.m, &mut rng);
+    println!("{:<30} {:>10} {:>12} {:>16}", "policy", "λ̄", "blocks̄", "E [fJ/bit/srch]");
+    let policies: Vec<(&str, Selection)> = vec![
+        ("high-bits (prefix, worst)", Selection::explicit((cfg.n - cfg.q()..cfg.n).collect(), cfg.k())),
+        ("contiguous (low bits)", Selection::contiguous(cfg.c, cfg.k())),
+        ("strided", Selection::strided(cfg.n, cfg.c, cfg.k())),
+        ("entropy-greedy", Selection::entropy_greedy(&rules, cfg.n, cfg.c, cfg.k())),
+    ];
+    for (name, sel) in policies {
+        let mut engine = LookupEngine::with_selection(cfg.clone(), sel);
+        for r in &rules {
+            engine.insert(r).unwrap();
+        }
+        let (mut lam, mut blk, mut en) = (OnlineStats::new(), OnlineStats::new(), OnlineStats::new());
+        for r in &rules {
+            let out = engine.lookup(r).unwrap();
+            lam.push(out.lambda as f64);
+            blk.push(out.enabled_blocks as f64);
+            en.push(out.energy.per_bit(cfg.m, cfg.n));
+        }
+        println!("{:<30} {:>10.2} {:>12.2} {:>16.4}", name, lam.mean(), blk.mean(), en.mean());
+    }
+
+    println!("\n# A4 — match-line family inside the proposed sub-blocks");
+    println!("{:>6} {:>16} {:>11} {:>13}", "ML", "E [fJ/bit/srch]", "cycle [ns]", "latency [ns]");
+    for ml in [MatchlineKind::Nor, MatchlineKind::Nand] {
+        let cfg = DesignConfig { ml_kind: ml, ..DesignConfig::reference() };
+        let e = proposed_search_energy(&cfg, &calib).per_bit(cfg.m, cfg.n);
+        let d = proposed_delay(&cfg, &delays);
+        println!("{:>6} {:>16.4} {:>11.3} {:>13.3}", ml.name(), e, d.cycle_ns, d.latency_ns);
+    }
+    println!("(NAND-ML sub-blocks would save energy but blow the cycle time — §III-B's call)");
+
+    println!("\n# A6 — churn: enable bloat vs rewrites/slot, and the retrain payoff");
+    println!(
+        "{:>14} {:>10} {:>10} {:>16}",
+        "rewrites/slot", "λ̄", "blocks̄", "blocks̄ (retrained)"
+    );
+    {
+        let small = DesignConfig { m: 256, n: 64, zeta: 8, c: 3, l: 8, ..DesignConfig::reference() };
+        for mult in [0usize, 1, 2, 4, 8] {
+            let r = cscam::cnn::capacity::simulate_churn(&small, mult * small.m, 17);
+            println!(
+                "{:>14.1} {:>10.2} {:>10.2} {:>16.2}",
+                r.rewrites_per_slot, r.mean_lambda, r.mean_blocks, r.mean_blocks_after_retrain
+            );
+        }
+        println!(
+            "(theory: P(dead neuron fires) = d^c with d = 1−(1−1/l)^t; retrain restores blocks̄ → {:.2})",
+            small.expected_active_blocks()
+        );
+    }
+
+    println!("\n# A7 — wave-pipelining feasibility across array sizes (§IV)");
+    println!("{:>6} {:>12} {:>12} {:>12} {:>8}", "M", "Dmax [ns]", "Tclk [ns]", "clk2 [ns]", "waves");
+    for m in [256usize, 512, 1024, 2048] {
+        let c = DesignConfig { m, ..DesignConfig::reference() };
+        let w = cscam::timing::wave::analyze(&c, &delays);
+        println!(
+            "{:>6} {:>12.3} {:>12.3} {:>12.3} {:>8}",
+            m, w.d_max_ns, w.t_clk_min_ns, w.clk2_offset_ns, w.waves_in_flight
+        );
+    }
+
+    println!("\n# A8 — silicon area (µm², 0.13 µm) and where the β budget goes");
+    println!("{:>5} {:>12} {:>14} {:>14} {:>10}", "ζ", "total [µm²]", "enable wiring", "CNN SRAM", "overhead");
+    let ka = cscam::transistor::area::AreaConstants::reference_130nm();
+    for zeta in [1usize, 2, 4, 8, 16, 64] {
+        let c = DesignConfig { zeta, ..DesignConfig::reference() };
+        let a = cscam::transistor::area::proposed_area(&c, &ka);
+        let o = cscam::transistor::area::area_overhead_vs_nand(&c, &ka);
+        println!(
+            "{:>5} {:>12.0} {:>14.0} {:>14.0} {:>9.1}%",
+            zeta,
+            a.total_um2(),
+            a.enable_routing_um2,
+            a.cnn_sram_um2,
+            100.0 * o
+        );
+    }
+
+    println!("\n# A5 — hit-ratio sensitivity (measured, 20k searches each)");
+    println!("{:>10} {:>16} {:>10}", "hit ratio", "E [fJ/bit/srch]", "blocks̄");
+    let mut engine = LookupEngine::new(cfg.clone());
+    let mut rng = Rng::seed_from_u64(44);
+    let stored = TagDistribution::Uniform.sample_distinct(cfg.n, cfg.m, &mut rng);
+    for t in &stored {
+        engine.insert(t).unwrap();
+    }
+    for hit in [0.0, 0.25, 0.5, 0.75, 1.0] {
+        let mix = QueryMix { hit_ratio: hit, zipf_s: 0.0 };
+        let (mut en, mut blk) = (OnlineStats::new(), OnlineStats::new());
+        for _ in 0..20_000 {
+            let (tag, _) = mix.sample(&stored, cfg.n, &mut rng);
+            let out = engine.lookup(&tag).unwrap();
+            en.push(out.energy.per_bit(cfg.m, cfg.n));
+            blk.push(out.enabled_blocks as f64);
+        }
+        println!("{:>10.2} {:>16.4} {:>10.3}", hit, en.mean(), blk.mean());
+    }
+}

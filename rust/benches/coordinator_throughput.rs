@@ -1,0 +1,141 @@
+//! Coordinator throughput: lookups/s through the threaded serve loop under
+//! varying client concurrency and batch policies — the L3 claim is that the
+//! coordinator never bottlenecks the modelled device (DESIGN.md §Perf).
+//!
+//! Run: `cargo bench --bench coordinator_throughput`
+
+use std::time::{Duration, Instant};
+
+use cscam::config::DesignConfig;
+use cscam::coordinator::{BatchPolicy, CamServer, DecodeBackend, LookupEngine};
+use cscam::runtime::{artifacts_available, default_artifact_dir, ArtifactStore};
+use cscam::util::Rng;
+use cscam::workload::{QueryMix, TagDistribution};
+
+fn run_serve(
+    name: &str,
+    backend: DecodeBackend,
+    threads: usize,
+    lookups: usize,
+    policy: BatchPolicy,
+) {
+    let cfg = DesignConfig::reference();
+    let mut engine = LookupEngine::new(cfg.clone());
+    let mut rng = Rng::seed_from_u64(1);
+    let stored = TagDistribution::Uniform.sample_distinct(cfg.n, cfg.m, &mut rng);
+    for t in &stored {
+        engine.insert(t).unwrap();
+    }
+    let h = CamServer::with_engine(engine, backend, policy).spawn();
+
+    let mix = QueryMix { hit_ratio: 0.9, zipf_s: 0.0 };
+    let mut per_thread: Vec<Vec<cscam::bits::BitVec>> = vec![Vec::new(); threads];
+    for i in 0..lookups {
+        let (tag, _) = mix.sample(&stored, cfg.n, &mut rng);
+        per_thread[i % threads].push(tag);
+    }
+
+    let t0 = Instant::now();
+    let joins: Vec<_> = per_thread
+        .into_iter()
+        .map(|qs| {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                for t in qs {
+                    let _ = h.lookup(t).unwrap();
+                }
+            })
+        })
+        .collect();
+    for j in joins {
+        j.join().unwrap();
+    }
+    let wall = t0.elapsed();
+    let m = h.metrics().unwrap();
+    println!(
+        "{:<44} {:>10.0} lookups/s  (batch̄ {:>5.1}, p50 {:>7} ns, p99 {:>8} ns)",
+        name,
+        lookups as f64 / wall.as_secs_f64(),
+        m.batch_size.mean(),
+        m.host_latency_ns.quantile(0.5),
+        m.host_latency_ns.quantile(0.99),
+    );
+}
+
+fn run_bulk(name: &str, backend: DecodeBackend, lookups: usize, chunk: usize) {
+    let cfg = DesignConfig::reference();
+    let mut engine = LookupEngine::new(cfg.clone());
+    let mut rng = Rng::seed_from_u64(1);
+    let stored = TagDistribution::Uniform.sample_distinct(cfg.n, cfg.m, &mut rng);
+    for t in &stored {
+        engine.insert(t).unwrap();
+    }
+    let h = CamServer::with_engine(
+        engine,
+        backend,
+        BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(100) },
+    )
+    .spawn();
+    let mix = QueryMix { hit_ratio: 0.9, zipf_s: 0.0 };
+    let batches: Vec<Vec<cscam::bits::BitVec>> = (0..lookups / chunk)
+        .map(|_| (0..chunk).map(|_| mix.sample(&stored, cfg.n, &mut rng).0).collect())
+        .collect();
+    let t0 = Instant::now();
+    for b in batches {
+        for r in h.lookup_many(b) {
+            let _ = r.unwrap();
+        }
+    }
+    let wall = t0.elapsed();
+    println!(
+        "{:<44} {:>10.0} lookups/s  (bulk chunks of {chunk})",
+        name,
+        lookups as f64 / wall.as_secs_f64()
+    );
+}
+
+fn main() {
+    println!("# coordinator throughput (reference design, 90 % hit mix)");
+    let fast = BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(100) };
+    for threads in [1usize, 2, 4, 8, 16] {
+        run_serve(
+            &format!("native/threads={threads}/max_batch=64"),
+            DecodeBackend::Native,
+            threads,
+            200_000,
+            fast,
+        );
+    }
+    println!();
+    for max_batch in [1usize, 8, 64, 256] {
+        run_serve(
+            &format!("native/threads=8/max_batch={max_batch}"),
+            DecodeBackend::Native,
+            8,
+            200_000,
+            BatchPolicy { max_batch, max_wait: Duration::from_micros(100) },
+        );
+    }
+
+    println!();
+    run_bulk("native/bulk=256", DecodeBackend::Native, 500_000, 256);
+    run_bulk("native/bulk=4096", DecodeBackend::Native, 500_000, 4096);
+
+    if artifacts_available() {
+        println!();
+        for threads in [4usize, 16] {
+            let store = ArtifactStore::load(&default_artifact_dir()).expect("artifacts");
+            run_serve(
+                &format!("pjrt/threads={threads}/max_batch=64"),
+                DecodeBackend::Pjrt(Box::new(store)),
+                threads,
+                20_000,
+                fast,
+            );
+        }
+        let store = ArtifactStore::load(&default_artifact_dir()).expect("artifacts");
+        run_bulk("pjrt/bulk=64", DecodeBackend::Pjrt(Box::new(store)), 50_000, 64);
+    } else {
+        println!("(skipping pjrt rows: run `make artifacts`)");
+    }
+}

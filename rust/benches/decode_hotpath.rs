@@ -1,0 +1,121 @@
+//! Micro-benchmarks of the L3 hot path (EXPERIMENTS.md §Perf):
+//! the native CNN decode (`decode_into`), tag-bit selection, the ζ-group
+//! OR, the full engine lookup, and — when artifacts are present — the
+//! batched PJRT decode per-query cost.
+//!
+//! Perf target (DESIGN.md §Perf): native decode ≥ 10 M lookups/s
+//! single-thread at the reference geometry, so the coordinator is never
+//! the bottleneck against the modelled 1.4 GHz device.
+//!
+//! Run: `cargo bench --bench decode_hotpath`
+
+use cscam::bits::BitVec;
+use cscam::cnn::{ClusteredNetwork, Selection};
+use cscam::config::DesignConfig;
+use cscam::coordinator::LookupEngine;
+use cscam::runtime::{artifacts_available, default_artifact_dir, ArtifactStore};
+use cscam::util::bench::{black_box, BenchTimer};
+use cscam::util::Rng;
+use cscam::workload::TagDistribution;
+
+fn trained(cfg: &DesignConfig, seed: u64) -> (ClusteredNetwork, Vec<Vec<u16>>) {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut net = ClusteredNetwork::from_config(cfg);
+    let mut idxs = Vec::new();
+    for addr in 0..cfg.m {
+        let idx: Vec<u16> = (0..cfg.c).map(|_| rng.gen_range(cfg.l) as u16).collect();
+        net.train(&idx, addr);
+        idxs.push(idx);
+    }
+    (net, idxs)
+}
+
+fn main() {
+    let timer = BenchTimer::default();
+    let cfg = DesignConfig::reference();
+
+    // 1. native GD decode, reference geometry (512 entries, c=3)
+    let (net, idxs) = trained(&cfg, 1);
+    let mut act = BitVec::zeros(cfg.m);
+    let mut en = BitVec::zeros(cfg.beta());
+    let mut i = 0usize;
+    let r = timer.run("cnn_decode_into/M=512,c=3,l=8,zeta=8", || {
+        i = (i + 1) % idxs.len();
+        net.decode_into(&idxs[i], &mut act, &mut en)
+    });
+    println!(
+        "   → {:.1} M decodes/s (target ≥ 10 M/s: {})",
+        r.per_second() / 1e6,
+        if r.per_second() >= 10e6 { "PASS" } else { "MISS" }
+    );
+
+    // 2. geometry scaling of the decode
+    for (m, c) in [(1024usize, 3usize), (4096, 3), (512, 6)] {
+        let big = DesignConfig { m, c, zeta: 8, ..DesignConfig::reference() };
+        let (net, idxs) = trained(&big, 2);
+        let mut act = BitVec::zeros(big.m);
+        let mut en = BitVec::zeros(big.beta());
+        let mut i = 0usize;
+        timer.run(&format!("cnn_decode_into/M={m},c={c}"), || {
+            i = (i + 1) % idxs.len();
+            net.decode_into(&idxs[i], &mut act, &mut en)
+        });
+    }
+
+    // 3. tag-bit selection (strided), hot-path variant
+    let sel = Selection::strided(cfg.n, cfg.c, cfg.k());
+    let mut rng = Rng::seed_from_u64(3);
+    let tags: Vec<BitVec> = (0..256).map(|_| cscam::workload::random_tag(cfg.n, &mut rng)).collect();
+    let mut buf = Vec::new();
+    let mut i = 0usize;
+    timer.run("selection_apply_into/N=128,q=9", || {
+        i = (i + 1) % tags.len();
+        sel.apply_into(&tags[i], &mut buf);
+        buf.len()
+    });
+
+    // 4. full engine lookup (selection + decode + CAM search + energy)
+    let mut engine = LookupEngine::new(cfg.clone());
+    let mut rng = Rng::seed_from_u64(4);
+    let stored = TagDistribution::Uniform.sample_distinct(cfg.n, cfg.m, &mut rng);
+    for t in &stored {
+        engine.insert(t).unwrap();
+    }
+    let mut i = 0usize;
+    let r = timer.run("engine_lookup/reference,hit", || {
+        i = (i + 1) % stored.len();
+        black_box(engine.lookup(&stored[i]).unwrap().comparisons)
+    });
+    println!("   → {:.2} M lookups/s end-to-end (incl. energy accounting)", r.per_second() / 1e6);
+    let miss = cscam::workload::random_tag(cfg.n, &mut rng);
+    timer.run("engine_lookup/reference,miss", || {
+        black_box(engine.lookup(&miss).unwrap().comparisons)
+    });
+
+    // 5. PJRT batched decode (per-query amortized), if artifacts exist
+    if artifacts_available() {
+        let mut store = ArtifactStore::load(&default_artifact_dir()).expect("artifacts");
+        let mcfg = store.manifest().config.clone();
+        let acfg = DesignConfig {
+            m: mcfg.m,
+            zeta: mcfg.zeta,
+            c: mcfg.c,
+            l: mcfg.l,
+            ..DesignConfig::reference()
+        };
+        let (net, idxs) = trained(&acfg, 5);
+        store.set_weights(net.rows()).expect("weights");
+        for &batch in &store.batch_sizes() {
+            let queries: Vec<Vec<u16>> = (0..batch).map(|i| idxs[i % idxs.len()].clone()).collect();
+            let r = timer.run(&format!("pjrt_decode/batch={batch}"), || {
+                store.decode(&queries).unwrap().lambda.len()
+            });
+            println!(
+                "   → {:.2} µs/query amortized at batch {batch}",
+                r.mean_ns / 1000.0 / batch as f64
+            );
+        }
+    } else {
+        println!("(skipping pjrt_decode benches: run `make artifacts`)");
+    }
+}

@@ -1,0 +1,57 @@
+//! Bench/regeneration harness for **Fig. 3**: expected number of required
+//! comparisons vs the number of reduced-length tag bits q, for several CAM
+//! sizes, from one million uniformly-random reduced tags (the paper's
+//! methodology) — Monte Carlo through the real CNN decode path, printed
+//! next to the closed form E[λ] = 1 + (M−1)/2^q.
+//!
+//! Run: `cargo bench --bench fig3_ambiguity`
+
+use cscam::stats::{expected_lambda, simulate_lambda};
+use cscam::util::bench::BenchTimer;
+use cscam::util::Rng;
+
+fn main() {
+    let sizes = [256usize, 512, 1024];
+    let total_trials = 1_000_000usize;
+    let qmin = 4usize;
+    let qmax = 16usize;
+    let per_point = total_trials / (qmax - qmin + 1);
+
+    println!("# Fig. 3 — E[#comparisons] vs q (ζ=1 view), {total_trials} total trials");
+    print!("{:>4}", "q");
+    for m in sizes {
+        print!("{:>12}{:>12}", format!("M={m} sim"), "closed");
+    }
+    println!();
+
+    let mut rng = Rng::seed_from_u64(3);
+    for q in qmin..=qmax {
+        print!("{q:>4}");
+        for m in sizes {
+            let est = simulate_lambda(m, q, 1, per_point, &mut rng);
+            print!("{:>12.4}{:>12.4}", est.mean_lambda, expected_lambda(m, q));
+        }
+        println!();
+    }
+
+    // The paper's reading of the figure: the knee where E[comparisons]→2
+    // sits at q = log2(M) (+1 for the final approach to 1 ambiguity).
+    for m in sizes {
+        let knee = (m as f64).log2() as usize;
+        let e = expected_lambda(m, knee);
+        println!("M={m}: E[λ] at q=log2(M)={knee}: {e:.3} (two comparisons)");
+    }
+
+    // Timing: how fast the Monte-Carlo estimator itself runs (the native
+    // decode path is the workhorse of every simulation in the repo).
+    println!("\n# estimator timing");
+    let timer = BenchTimer::coarse();
+    let mut trng = Rng::seed_from_u64(99);
+    timer.run("simulate_lambda(M=512, q=9, 1k trials)", || {
+        simulate_lambda(512, 9, 1, 1_000, &mut trng)
+    });
+    let mut trng2 = Rng::seed_from_u64(100);
+    timer.run("simulate_lambda(M=1024, q=12, 1k trials)", || {
+        simulate_lambda(1024, 12, 1, 1_000, &mut trng2)
+    });
+}

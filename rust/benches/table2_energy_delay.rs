@@ -1,0 +1,122 @@
+//! Bench/regeneration harness for **Table II** (+ the headline ratios and
+//! the 90 nm projection): prints the published anchor rows, our calibrated
+//! conventional rows, and the *predicted* proposed row — then validates the
+//! analytic prediction against a measured 100k-search workload through the
+//! functional simulator, which is what a SPECTRE testbench would do.
+//!
+//! Run: `cargo bench --bench table2_energy_delay`
+
+use cscam::baselines::{anchor_rows, PbCam};
+use cscam::cam::MatchlineKind;
+use cscam::config::DesignConfig;
+use cscam::coordinator::LookupEngine;
+use cscam::energy::{conventional_search_energy, proposed_search_energy, CalibrationConstants};
+use cscam::stats::OnlineStats;
+use cscam::tech::{self, NODE_130NM, NODE_90NM};
+use cscam::timing::{conventional_delay, proposed_delay, scaled_delay, DelayConstants};
+use cscam::transistor::{overhead_vs_nand, TransistorAssumptions};
+use cscam::util::Rng;
+use cscam::workload::{QueryMix, TagDistribution};
+
+fn main() {
+    let cfg = DesignConfig::reference();
+    let calib = CalibrationConstants::reference_130nm();
+    let delays = DelayConstants::reference();
+
+    println!("# Table II — result comparisons");
+    println!(
+        "{:<12} {:>9} {:>8} {:>10} {:>15}  {}",
+        "design", "config", "tech", "delay[ns]", "E[fJ/bit/srch]", "source"
+    );
+    for r in anchor_rows() {
+        println!(
+            "{:<12} {:>9} {:>8} {:>10.3} {:>15.3}  published {}",
+            r.name,
+            format!("{}x{}", r.config.0, r.config.1),
+            r.node.name,
+            r.delay_ns,
+            r.energy_fj_bit,
+            r.reference
+        );
+    }
+    let nand_e = conventional_search_energy(cfg.m, cfg.n, MatchlineKind::Nand, &calib);
+    let nor_e = conventional_search_energy(cfg.m, cfg.n, MatchlineKind::Nor, &calib);
+    let prop_e = proposed_search_energy(&cfg, &calib);
+    let nand_d = conventional_delay(cfg.m, cfg.n, MatchlineKind::Nand, &delays, NODE_130NM);
+    let nor_d = conventional_delay(cfg.m, cfg.n, MatchlineKind::Nor, &delays, NODE_130NM);
+    let prop_d = proposed_delay(&cfg, &delays);
+    for (name, d, e) in [
+        ("Ref. NAND", nand_d.cycle_ns, nand_e.per_bit(cfg.m, cfg.n)),
+        ("Ref. NOR", nor_d.cycle_ns, nor_e.per_bit(cfg.m, cfg.n)),
+        ("Proposed", prop_d.cycle_ns, prop_e.per_bit(cfg.m, cfg.n)),
+    ] {
+        println!(
+            "{:<12} {:>9} {:>8} {:>10.3} {:>15.3}  model (this work)",
+            name,
+            format!("{}x{}", cfg.m, cfg.n),
+            "0.13um",
+            d,
+            e
+        );
+    }
+    let pb = PbCam::expected_full_comparisons(cfg.m, cfg.n);
+    println!(
+        "{:<12} {:>9} {:>8} {:>10} {:>15.3}  model — {:.1} expected full comparisons",
+        "PB-CAM [4]",
+        format!("{}x{}", cfg.m, cfg.n),
+        "0.13um",
+        "-",
+        PbCam::new(cfg.m, cfg.n).search_energy(pb.round() as usize, &calib).per_bit(cfg.m, cfg.n),
+        pb
+    );
+
+    println!("\n# headline (paper: energy 9.5 %, delay 30.4 %, +3.4 % transistors)");
+    println!("energy : {:.2} %", 100.0 * prop_e.per_bit(cfg.m, cfg.n) / 1.30);
+    println!("delay  : {:.2} %", 100.0 * prop_d.cycle_ns / nand_d.cycle_ns);
+    println!(
+        "trans. : +{:.2} %",
+        100.0 * overhead_vs_nand(&cfg, &TransistorAssumptions::default())
+    );
+
+    let e90 = tech::scale_energy(prop_e.per_bit(cfg.m, cfg.n), NODE_130NM, NODE_90NM);
+    let d90 = scaled_delay(prop_d, NODE_130NM, NODE_90NM);
+    println!("\n# 90 nm projection (paper: 0.060 fJ/bit/search, 0.582 ns)");
+    println!("energy : {:.4} fJ/bit/search", e90);
+    println!("delay  : {:.3} ns", d90.cycle_ns);
+
+    // Validation: measured energy over a real workload through the
+    // functional simulator vs the closed-form prediction.
+    println!("\n# measured-workload validation (100k searches, 90 % hits, full CAM)");
+    let mut engine = LookupEngine::new(cfg.clone());
+    let mut rng = Rng::seed_from_u64(22);
+    let stored = TagDistribution::Uniform.sample_distinct(cfg.n, cfg.m, &mut rng);
+    for t in &stored {
+        engine.insert(t).unwrap();
+    }
+    let mix = QueryMix { hit_ratio: 0.9, zipf_s: 0.0 };
+    let mut energy = OnlineStats::new();
+    let mut blocks = OnlineStats::new();
+    let t0 = std::time::Instant::now();
+    let searches = 100_000;
+    for _ in 0..searches {
+        let (tag, _) = mix.sample(&stored, cfg.n, &mut rng);
+        let out = engine.lookup(&tag).unwrap();
+        energy.push(out.energy.per_bit(cfg.m, cfg.n));
+        blocks.push(out.enabled_blocks as f64);
+    }
+    let wall = t0.elapsed();
+    println!(
+        "measured: {:.4} ± {:.4} fJ/bit/search (analytic {:.4}); blocks̄ {:.3} (analytic {:.3})",
+        energy.mean(),
+        energy.sem(),
+        prop_e.per_bit(cfg.m, cfg.n),
+        blocks.mean(),
+        cfg.expected_active_blocks()
+    );
+    println!(
+        "simulator rate: {:.2} M searches/s ({} searches in {:.2} s)",
+        searches as f64 / wall.as_secs_f64() / 1e6,
+        searches,
+        wall.as_secs_f64()
+    );
+}

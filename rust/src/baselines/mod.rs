@@ -1,0 +1,7 @@
+//! Baseline architectures for Table II and the PB-CAM comparison of §I.
+
+pub mod literature;
+pub mod pbcam;
+
+pub use literature::{anchor_rows, AnchorRow};
+pub use pbcam::PbCam;

@@ -1,0 +1,219 @@
+//! Minimal bit-vector utilities shared by the CNN (weight rows, activation
+//! maps) and the CAM (tags, compare-enable masks).
+//!
+//! Bits are packed little-endian into `u64` words: bit `i` lives in word
+//! `i / 64` at position `i % 64`.  The hot loops of the native decode path
+//! ([`crate::cnn`]) operate directly on the word slices, so the layout here
+//! *is* the performance contract.
+
+
+/// A fixed-length packed bit vector.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BitVec {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitVec {
+    /// All-zeros vector of `len` bits.
+    pub fn zeros(len: usize) -> Self {
+        BitVec { words: vec![0; len.div_ceil(64)], len }
+    }
+
+    /// All-ones vector of `len` bits (trailing bits in the last word clear).
+    pub fn ones(len: usize) -> Self {
+        let mut v = BitVec { words: vec![!0u64; len.div_ceil(64)], len };
+        v.mask_tail();
+        v
+    }
+
+    /// Build from explicit bools.
+    pub fn from_bools(bits: &[bool]) -> Self {
+        let mut v = BitVec::zeros(bits.len());
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                v.set(i, true);
+            }
+        }
+        v
+    }
+
+    /// Build from the low `len` bits of a u128 (little-endian).
+    pub fn from_u128(value: u128, len: usize) -> Self {
+        assert!(len <= 128);
+        let mut v = BitVec::zeros(len);
+        if len > 0 {
+            v.words[0] = value as u64;
+            if len > 64 {
+                v.words[1] = (value >> 64) as u64;
+            }
+            v.mask_tail();
+        }
+        v
+    }
+
+    fn mask_tail(&mut self) {
+        let rem = self.len % 64;
+        if rem != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << rem) - 1;
+            }
+        }
+    }
+
+    /// Number of bits.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if `len() == 0`.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Read bit `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Write bit `i`.
+    #[inline]
+    pub fn set(&mut self, i: usize, value: bool) {
+        debug_assert!(i < self.len);
+        let (w, b) = (i / 64, i % 64);
+        if value {
+            self.words[w] |= 1 << b;
+        } else {
+            self.words[w] &= !(1 << b);
+        }
+    }
+
+    /// Number of set bits.
+    #[inline]
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// True if no bit is set.
+    pub fn is_zero(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// In-place AND with another vector of the same length.
+    #[inline]
+    pub fn and_assign(&mut self, other: &BitVec) {
+        debug_assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= *b;
+        }
+    }
+
+    /// In-place OR with another vector of the same length.
+    #[inline]
+    pub fn or_assign(&mut self, other: &BitVec) {
+        debug_assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= *b;
+        }
+    }
+
+    /// Hamming distance to another vector of the same length.
+    pub fn hamming(&self, other: &BitVec) -> usize {
+        debug_assert_eq!(self.len, other.len);
+        self.words.iter().zip(&other.words).map(|(a, b)| (a ^ b).count_ones() as usize).sum()
+    }
+
+    /// Indices of all set bits, ascending.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+
+    /// Raw word access (hot-path decode loops).
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Mutable raw word access.
+    #[inline]
+    pub fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut v = BitVec::zeros(130);
+        for i in [0, 1, 63, 64, 65, 127, 128, 129] {
+            assert!(!v.get(i));
+            v.set(i, true);
+            assert!(v.get(i));
+        }
+        assert_eq!(v.count_ones(), 8);
+        v.set(64, false);
+        assert!(!v.get(64));
+        assert_eq!(v.count_ones(), 7);
+    }
+
+    #[test]
+    fn ones_masks_tail() {
+        let v = BitVec::ones(70);
+        assert_eq!(v.count_ones(), 70);
+        assert_eq!(v.words()[1], (1u64 << 6) - 1);
+    }
+
+    #[test]
+    fn and_or_semantics() {
+        let a = BitVec::from_bools(&[true, true, false, false]);
+        let b = BitVec::from_bools(&[true, false, true, false]);
+        let mut and = a.clone();
+        and.and_assign(&b);
+        assert_eq!(and, BitVec::from_bools(&[true, false, false, false]));
+        let mut or = a.clone();
+        or.or_assign(&b);
+        assert_eq!(or, BitVec::from_bools(&[true, true, true, false]));
+    }
+
+    #[test]
+    fn hamming_distance() {
+        let a = BitVec::from_u128(0b1011, 100);
+        let b = BitVec::from_u128(0b0110, 100);
+        assert_eq!(a.hamming(&b), 3);
+        assert_eq!(a.hamming(&a), 0);
+    }
+
+    #[test]
+    fn iter_ones_crosses_word_boundaries() {
+        let mut v = BitVec::zeros(200);
+        let idx = [3, 63, 64, 100, 199];
+        for &i in &idx {
+            v.set(i, true);
+        }
+        assert_eq!(v.iter_ones().collect::<Vec<_>>(), idx);
+    }
+
+    #[test]
+    fn from_u128_layout() {
+        let v = BitVec::from_u128(u128::MAX, 128);
+        assert_eq!(v.count_ones(), 128);
+        let v = BitVec::from_u128(1u128 << 64, 65);
+        assert_eq!(v.iter_ones().collect::<Vec<_>>(), vec![64]);
+    }
+}

@@ -1,0 +1,237 @@
+//! Functional CAM array with per-search switching-activity accounting.
+
+use crate::bits::BitVec;
+use crate::energy::SearchActivity;
+
+/// One search's outcome: the matching addresses plus the switching activity
+/// the energy/timing models consume.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchResult {
+    /// Addresses of valid entries that matched the full tag, ascending.
+    pub matches: Vec<usize>,
+    /// Switching-activity counters for the energy model.
+    pub activity: SearchActivity,
+}
+
+/// A binary CAM of `m` entries × `n` tag bits, split into `m/ζ` sub-blocks
+/// with independent compare enables (Fig. 5).
+#[derive(Debug, Clone)]
+pub struct CamArray {
+    n: usize,
+    zeta: usize,
+    tags: Vec<BitVec>,
+    valid: BitVec,
+}
+
+impl CamArray {
+    /// Empty array. `m` must be a positive multiple of `zeta`.
+    pub fn new(m: usize, n: usize, zeta: usize) -> Self {
+        assert!(m > 0 && n > 0, "M and N must be positive");
+        assert!(zeta > 0 && m % zeta == 0, "ζ must divide M");
+        CamArray {
+            n,
+            zeta,
+            tags: vec![BitVec::zeros(n); m],
+            valid: BitVec::zeros(m),
+        }
+    }
+
+    /// Number of entries (M).
+    pub fn m(&self) -> usize {
+        self.tags.len()
+    }
+
+    /// Tag width in bits (N).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Rows per sub-block (ζ).
+    pub fn zeta(&self) -> usize {
+        self.zeta
+    }
+
+    /// Number of sub-blocks (β = M/ζ).
+    pub fn beta(&self) -> usize {
+        self.m() / self.zeta
+    }
+
+    /// Number of valid (occupied) entries.
+    pub fn occupancy(&self) -> usize {
+        self.valid.count_ones()
+    }
+
+    /// Store `tag` at `addr`, marking it valid.
+    pub fn write(&mut self, addr: usize, tag: BitVec) {
+        assert_eq!(tag.len(), self.n, "tag width mismatch");
+        assert!(addr < self.m(), "address out of range");
+        self.tags[addr] = tag;
+        self.valid.set(addr, true);
+    }
+
+    /// Invalidate `addr`.
+    pub fn erase(&mut self, addr: usize) {
+        assert!(addr < self.m(), "address out of range");
+        self.valid.set(addr, false);
+    }
+
+    /// Read back the stored tag, if valid.
+    pub fn read(&self, addr: usize) -> Option<&BitVec> {
+        if addr < self.m() && self.valid.get(addr) {
+            Some(&self.tags[addr])
+        } else {
+            None
+        }
+    }
+
+    /// The sub-block index of an entry.
+    pub fn block_of(&self, addr: usize) -> usize {
+        addr / self.zeta
+    }
+
+    /// Search with all sub-blocks enabled — the conventional CAM behaviour.
+    pub fn search_all(&self, tag: &BitVec) -> SearchResult {
+        self.search(tag, &BitVec::ones(self.beta()))
+    }
+
+    /// Search with only the sub-blocks set in `enables` compare-enabled —
+    /// the proposed architecture's behaviour. `enables` has β bits (the
+    /// compare-enable lines the CNN drives in Fig. 4/5).
+    ///
+    /// Every *valid* row of an enabled block burns compare energy; disabled
+    /// blocks keep their search-lines and match-lines quiet.  The activity
+    /// counters record exactly what switched.
+    pub fn search(&self, tag: &BitVec, enables: &BitVec) -> SearchResult {
+        assert_eq!(tag.len(), self.n, "tag width mismatch");
+        assert_eq!(enables.len(), self.beta(), "enable mask width mismatch");
+
+        let mut matches = Vec::new();
+        let mut activity = SearchActivity::default();
+        activity.total_blocks = self.beta();
+        activity.tag_bits = self.n;
+
+        for block in enables.iter_ones() {
+            activity.enabled_blocks += 1;
+            let base = block * self.zeta;
+            for row in base..base + self.zeta {
+                activity.enabled_rows += 1;
+                if !self.valid.get(row) {
+                    // Invalid rows are compare-enabled (the enable line is
+                    // per block) but their MLs are held by the valid bit:
+                    // they precharge and immediately discharge — count as a
+                    // full mismatch row, no bit comparisons resolved.
+                    activity.mismatched_rows += 1;
+                    activity.mismatch_bits += self.n / 2; // paper's half-bit assumption
+                    continue;
+                }
+                activity.compared_rows += 1;
+                activity.compared_bits += self.n;
+                let dist = self.tags[row].hamming(tag);
+                if dist == 0 {
+                    activity.matched_rows += 1;
+                    matches.push(row);
+                } else {
+                    activity.mismatched_rows += 1;
+                    activity.mismatch_bits += dist;
+                }
+            }
+        }
+        SearchResult { matches, activity }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tag(v: u128, n: usize) -> BitVec {
+        BitVec::from_u128(v, n)
+    }
+
+    #[test]
+    fn write_search_roundtrip() {
+        let mut cam = CamArray::new(16, 32, 4);
+        cam.write(5, tag(0xDEAD, 32));
+        cam.write(9, tag(0xBEEF, 32));
+        let r = cam.search_all(&tag(0xDEAD, 32));
+        assert_eq!(r.matches, vec![5]);
+        let r = cam.search_all(&tag(0xBEEF, 32));
+        assert_eq!(r.matches, vec![9]);
+        let r = cam.search_all(&tag(0x1234, 32));
+        assert!(r.matches.is_empty());
+    }
+
+    #[test]
+    fn disabled_blocks_hide_matches_and_burn_nothing() {
+        let mut cam = CamArray::new(16, 32, 4);
+        cam.write(5, tag(0xDEAD, 32)); // block 1
+        let mut en = BitVec::zeros(4);
+        en.set(0, true); // only block 0 enabled
+        let r = cam.search(&tag(0xDEAD, 32), &en);
+        assert!(r.matches.is_empty());
+        assert_eq!(r.activity.enabled_blocks, 1);
+        assert_eq!(r.activity.enabled_rows, 4);
+
+        en.set(1, true);
+        let r = cam.search(&tag(0xDEAD, 32), &en);
+        assert_eq!(r.matches, vec![5]);
+        assert_eq!(r.activity.enabled_blocks, 2);
+    }
+
+    #[test]
+    fn erase_invalidates() {
+        let mut cam = CamArray::new(8, 16, 2);
+        cam.write(3, tag(0xAB, 16));
+        assert_eq!(cam.search_all(&tag(0xAB, 16)).matches, vec![3]);
+        cam.erase(3);
+        assert!(cam.search_all(&tag(0xAB, 16)).matches.is_empty());
+        assert!(cam.read(3).is_none());
+        assert_eq!(cam.occupancy(), 0);
+    }
+
+    #[test]
+    fn duplicate_tags_all_match() {
+        let mut cam = CamArray::new(8, 16, 2);
+        cam.write(1, tag(0x7, 16));
+        cam.write(6, tag(0x7, 16));
+        assert_eq!(cam.search_all(&tag(0x7, 16)).matches, vec![1, 6]);
+    }
+
+    #[test]
+    fn activity_counts_mismatch_bits_exactly() {
+        let mut cam = CamArray::new(4, 8, 4);
+        cam.write(0, tag(0b0000_0000, 8));
+        cam.write(1, tag(0b0000_0111, 8)); // 3 bits from query 0
+        let r = cam.search_all(&tag(0, 8));
+        assert_eq!(r.matches, vec![0]);
+        assert_eq!(r.activity.compared_rows, 2);
+        assert_eq!(r.activity.matched_rows, 1);
+        // rows 2,3 invalid → half-bit assumption: 2 × 8/2 = 8; row 1: 3 bits
+        assert_eq!(r.activity.mismatch_bits, 3 + 8);
+        assert_eq!(r.activity.compared_bits, 16);
+    }
+
+    #[test]
+    fn overwrite_replaces_tag() {
+        let mut cam = CamArray::new(4, 16, 2);
+        cam.write(2, tag(0x11, 16));
+        cam.write(2, tag(0x22, 16));
+        assert!(cam.search_all(&tag(0x11, 16)).matches.is_empty());
+        assert_eq!(cam.search_all(&tag(0x22, 16)).matches, vec![2]);
+    }
+
+    #[test]
+    fn block_of_maps_rows_to_blocks() {
+        let cam = CamArray::new(16, 8, 4);
+        assert_eq!(cam.block_of(0), 0);
+        assert_eq!(cam.block_of(3), 0);
+        assert_eq!(cam.block_of(4), 1);
+        assert_eq!(cam.block_of(15), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "ζ must divide M")]
+    fn bad_geometry_panics() {
+        CamArray::new(10, 8, 4);
+    }
+}

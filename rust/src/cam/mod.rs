@@ -1,0 +1,63 @@
+//! The CAM array — the modelled device (Fig. 5).
+//!
+//! Functional simulator of a binary CAM of `M` entries × `N` tag bits,
+//! hierarchically organized into `β = M/ζ` sub-blocks that can be
+//! compare-enabled independently (the paper's architectural hook).  A search
+//! both *answers the query* (which valid entries match) and *accounts the
+//! switching activity* (how many rows were enabled, how many bits compared,
+//! how many match-lines discharged) that the energy model turns into
+//! femtojoules.
+
+pub mod array;
+
+pub use array::{CamArray, SearchResult};
+
+
+/// Match-line circuit family (survey [7]; Table II "ML Arch.").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MatchlineKind {
+    /// Parallel NOR match-line: fast (single pull-down depth) but every
+    /// mismatching row discharges its precharged ML — high energy.
+    Nor,
+    /// Series NAND chain: only the matching row conducts end-to-end — low
+    /// energy, but delay grows with the chain length N.
+    Nand,
+}
+
+impl MatchlineKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MatchlineKind::Nor => "NOR",
+            MatchlineKind::Nand => "NAND",
+        }
+    }
+}
+
+/// CAM cell circuit (Table I "CAM type"). Determines the transistor count
+/// and which ML families it can drive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CellKind {
+    /// 9-transistor XOR-type cell (the paper's choice for the proposed and
+    /// Ref. NOR designs): 6T storage + 3T XOR compare.
+    Xor9T,
+    /// 10-transistor NAND-type cell (conventional Ref. NAND design):
+    /// 6T storage + 4T compare/pass.
+    Nand10T,
+}
+
+impl CellKind {
+    /// Transistors per cell.
+    pub fn transistors(&self) -> usize {
+        match self {
+            CellKind::Xor9T => 9,
+            CellKind::Nand10T => 10,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CellKind::Xor9T => "XOR-9T",
+            CellKind::Nand10T => "NAND-10T",
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! Tag-length reduction: choosing which q of the N tag bits feed the CNN.
+//!
+//! §II-B: "it is possible to select the bits in the reduced length tag in
+//! such a way to reduce correlations."  Uniformly random tags make any
+//! selection equally good; real workloads (TLB VPNs, router prefixes) have
+//! low-entropy regions (high-order bits nearly constant, strides in the low
+//! bits), and a bad selection inflates E(λ) — more enabled sub-blocks, more
+//! energy, never wrong results.
+//!
+//! Three policies:
+//! * [`Selection::contiguous`] — naive truncation (the strawman);
+//! * [`Selection::strided`] — spread evenly across the tag;
+//! * [`Selection::entropy_greedy`] — data-driven: greedily pick the bit with
+//!   the highest marginal entropy, penalized by correlation with the bits
+//!   already picked (the paper's "according to a pattern to reduce the tag
+//!   correlation", made concrete).
+
+
+use crate::bits::BitVec;
+
+/// An ordered choice of q bit positions within an N-bit tag, plus the
+/// cluster geometry used to map them to P_I neuron indices.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Selection {
+    positions: Vec<usize>,
+    k: usize,
+}
+
+impl Selection {
+    /// The first `c·k` bits of the tag, in order (naive truncation).
+    pub fn contiguous(c: usize, k: usize) -> Self {
+        Selection { positions: (0..c * k).collect(), k }
+    }
+
+    /// `c·k` positions spread evenly across an `n`-bit tag.
+    pub fn strided(n: usize, c: usize, k: usize) -> Self {
+        let q = c * k;
+        assert!(q <= n, "q={q} exceeds tag width {n}");
+        let positions = (0..q).map(|i| i * n / q).collect();
+        Selection { positions, k }
+    }
+
+    /// Explicit positions (must be in-range and distinct; length must be c·k).
+    pub fn explicit(positions: Vec<usize>, k: usize) -> Self {
+        assert!(k > 0 && positions.len() % k == 0, "positions must fill whole clusters");
+        Selection { positions, k }
+    }
+
+    /// Data-driven greedy selection from a tag sample: repeatedly take the
+    /// position maximizing `H(bit) − μ·mean|corr(bit, chosen)|`.
+    pub fn entropy_greedy(sample: &[BitVec], n: usize, c: usize, k: usize) -> Self {
+        let q = c * k;
+        assert!(q <= n);
+        assert!(!sample.is_empty(), "need a non-empty sample");
+        let s = sample.len() as f64;
+
+        // per-bit means
+        let p: Vec<f64> = (0..n)
+            .map(|b| sample.iter().filter(|t| t.get(b)).count() as f64 / s)
+            .collect();
+        let entropy = |pb: f64| {
+            if pb <= 0.0 || pb >= 1.0 {
+                0.0
+            } else {
+                -(pb * pb.log2() + (1.0 - pb) * (1.0 - pb).log2())
+            }
+        };
+        let corr = |a: usize, b: usize| -> f64 {
+            let pab = sample.iter().filter(|t| t.get(a) && t.get(b)).count() as f64 / s;
+            let cov = pab - p[a] * p[b];
+            let va = p[a] * (1.0 - p[a]);
+            let vb = p[b] * (1.0 - p[b]);
+            if va <= 0.0 || vb <= 0.0 {
+                0.0
+            } else {
+                (cov / (va * vb).sqrt()).abs()
+            }
+        };
+
+        const MU: f64 = 0.5; // correlation penalty weight
+        let mut chosen: Vec<usize> = Vec::with_capacity(q);
+        let mut remaining: Vec<usize> = (0..n).collect();
+        for _ in 0..q {
+            let (pos_i, _best) = remaining
+                .iter()
+                .enumerate()
+                .map(|(i, &b)| {
+                    let pen = if chosen.is_empty() {
+                        0.0
+                    } else {
+                        chosen.iter().map(|&a| corr(a, b)).sum::<f64>() / chosen.len() as f64
+                    };
+                    (i, entropy(p[b]) - MU * pen)
+                })
+                .max_by(|a, b| a.1.total_cmp(&b.1))
+                .expect("remaining non-empty");
+            chosen.push(remaining.swap_remove(pos_i));
+        }
+        Selection { positions: chosen, k }
+    }
+
+    /// Reduced-tag width q.
+    pub fn q(&self) -> usize {
+        self.positions.len()
+    }
+
+    /// Number of clusters this selection feeds.
+    pub fn c(&self) -> usize {
+        self.positions.len() / self.k
+    }
+
+    /// Bits per cluster.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// The chosen positions (cluster-major: positions[i·k..(i+1)·k] feed
+    /// cluster i, LSB first).
+    pub fn positions(&self) -> &[usize] {
+        &self.positions
+    }
+
+    /// Apply to a full tag: produce the c cluster indices (LD inputs).
+    pub fn apply(&self, tag: &BitVec) -> Vec<u16> {
+        let mut out = Vec::with_capacity(self.c());
+        self.apply_into(tag, &mut out);
+        out
+    }
+
+    /// Allocation-free apply (hot path).
+    #[inline]
+    pub fn apply_into(&self, tag: &BitVec, out: &mut Vec<u16>) {
+        out.clear();
+        for cluster in self.positions.chunks(self.k) {
+            let mut v: u16 = 0;
+            for (bit, &pos) in cluster.iter().enumerate() {
+                if tag.get(pos) {
+                    v |= 1 << bit;
+                }
+            }
+            out.push(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn contiguous_is_truncation() {
+        let sel = Selection::contiguous(3, 3);
+        assert_eq!(sel.q(), 9);
+        assert_eq!(sel.c(), 3);
+        assert_eq!(sel.positions(), &[0, 1, 2, 3, 4, 5, 6, 7, 8]);
+        // §II-A example: tag bits '101110' (LSB-first here) split 3+3.
+        let tag = BitVec::from_u128(0b101110, 32);
+        let idx = Selection::contiguous(2, 3).apply(&tag);
+        assert_eq!(idx, vec![0b110, 0b101]);
+    }
+
+    #[test]
+    fn strided_spreads_positions() {
+        let sel = Selection::strided(128, 3, 3);
+        assert_eq!(sel.q(), 9);
+        let pos = sel.positions();
+        assert_eq!(pos[0], 0);
+        assert!(pos.windows(2).all(|w| w[1] > w[0]));
+        assert!(*pos.last().unwrap() >= 100, "spread to the high bits");
+    }
+
+    #[test]
+    fn apply_is_binary_to_integer_mapping() {
+        let sel = Selection::explicit(vec![0, 2, 4, 1, 3, 5], 3);
+        let tag = BitVec::from_bools(&[true, false, true, true, false, false]);
+        // cluster 0 reads bits 0,2,4 → 1,1,0 → 0b011 = 3
+        // cluster 1 reads bits 1,3,5 → 0,1,0 → 0b010 = 2
+        assert_eq!(sel.apply(&tag), vec![3, 2]);
+    }
+
+    #[test]
+    fn entropy_greedy_avoids_constant_bits() {
+        //
+
+        // Tags whose upper half is constant: the greedy picker must choose
+        // only positions from the varying lower half.
+        let mut rng = Rng::seed_from_u64(1);
+        let n = 32;
+        let sample: Vec<BitVec> = (0..400)
+            .map(|_| BitVec::from_u128((rng.gen_u64() as u16) as u128, n))
+            .collect();
+        let sel = Selection::entropy_greedy(&sample, n, 3, 3);
+        assert!(sel.positions().iter().all(|&p| p < 16), "picked {:?}", sel.positions());
+    }
+
+    #[test]
+    fn entropy_greedy_penalizes_duplicated_bits() {
+        // Bit 1 mirrors bit 0; a correlation-aware picker choosing 2 bits
+        // from {0,1,2,3} must not take both 0 and 1.
+        let mut rng = Rng::seed_from_u64(2);
+        let sample: Vec<BitVec> = (0..500)
+            .map(|_| {
+                let b0 = rng.gen_bool(0.5);
+                let b2 = rng.gen_bool(0.5);
+                let b3 = rng.gen_bool(0.5);
+                BitVec::from_bools(&[b0, b0, b2, b3])
+            })
+            .collect();
+        let sel = Selection::entropy_greedy(&sample, 4, 2, 1);
+        let pos = sel.positions();
+        assert!(
+            !(pos.contains(&0) && pos.contains(&1)),
+            "correlated pair picked: {pos:?}"
+        );
+    }
+
+    #[test]
+    fn apply_into_reuses_buffer() {
+        let sel = Selection::contiguous(3, 3);
+        let mut buf = Vec::new();
+        let tag = BitVec::from_u128(0x1FF, 16);
+        sel.apply_into(&tag, &mut buf);
+        assert_eq!(buf, vec![7, 7, 7]);
+        sel.apply_into(&BitVec::zeros(16), &mut buf);
+        assert_eq!(buf, vec![0, 0, 0]);
+    }
+}

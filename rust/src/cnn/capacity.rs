@@ -1,0 +1,149 @@
+//! Weight-density and churn analysis — the Gripon–Berrou capacity theory
+//! ([8], [9]) applied to this CAM's operating regime.
+//!
+//! In the classifier, P_II neuron `j` holds exactly `c` weights while entry
+//! `j` is live.  Two effects make extra weights accumulate:
+//!
+//! 1. **address reuse** — rewriting a CAM slot trains new weights on the
+//!    same neuron without clearing the old ones (superposition);
+//! 2. **deletes without retrain** — the coordinator invalidates the CAM row
+//!    but leaves the weights (correct, per §I, but they keep firing).
+//!
+//! Weight density `d` (fraction of the l·M possible connections per cluster
+//! that are set) drives the false-activation probability of a *dead*
+//! neuron: `P(fire) = d^c` for a uniform random query, so the expected
+//! extra enabled blocks grow as `M_stale · d^c / ζ`-ish.  This module gives
+//! the closed forms and a Monte-Carlo churn simulator used to pick the
+//! coordinator's retrain threshold (`LookupEngine::retrain_threshold`).
+
+use crate::config::DesignConfig;
+use crate::coordinator::LookupEngine;
+use crate::util::Rng;
+use crate::workload::TagDistribution;
+
+/// Per-cluster weight density after `t` trainings of one neuron with
+/// uniform cluster indices: `1 − (1 − 1/l)^t`.
+pub fn weight_density(l: usize, trainings: usize) -> f64 {
+    1.0 - (1.0 - 1.0 / l as f64).powi(trainings as i32)
+}
+
+/// Probability a neuron trained `t` times fires on a uniform random query:
+/// each cluster independently hits one of its set weights.
+pub fn fire_probability(c: usize, l: usize, trainings: usize) -> f64 {
+    weight_density(l, trainings).powi(c as i32)
+}
+
+/// Expected λ for a random (non-stored) query against a network whose every
+/// neuron was trained `t` times (churned network).
+pub fn expected_lambda_churned(cfg: &DesignConfig, trainings: usize) -> f64 {
+    cfg.m as f64 * fire_probability(cfg.c, cfg.l, trainings)
+}
+
+/// Measured churn outcome.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChurnReport {
+    /// Replacements applied per slot on average.
+    pub rewrites_per_slot: f64,
+    /// Mean λ on stored-tag queries after churn.
+    pub mean_lambda: f64,
+    /// Mean enabled blocks after churn.
+    pub mean_blocks: f64,
+    /// Same engine immediately after a retrain.
+    pub mean_blocks_after_retrain: f64,
+}
+
+/// Monte-Carlo churn: fill the engine, then apply `rewrites` random
+/// replacements with retraining disabled, and measure the enable bloat a
+/// retrain removes.
+pub fn simulate_churn(cfg: &DesignConfig, rewrites: usize, seed: u64) -> ChurnReport {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut engine = LookupEngine::new(cfg.clone());
+    engine.retrain_threshold = 0.0; // manual control
+    let mut tags = TagDistribution::Uniform.sample_distinct(cfg.n, cfg.m, &mut rng);
+    for t in &tags {
+        engine.insert(t).unwrap();
+    }
+    for _ in 0..rewrites {
+        let slot = rng.gen_range(cfg.m);
+        let fresh = crate::workload::random_tag(cfg.n, &mut rng);
+        engine.insert_at(slot, &fresh).unwrap();
+        tags[slot] = fresh;
+    }
+    let probe = |engine: &mut LookupEngine, rng: &mut Rng| {
+        let (mut lam, mut blk) = (0.0, 0.0);
+        let samples = 512.min(cfg.m);
+        for _ in 0..samples {
+            let out = engine.lookup(&tags[rng.gen_range(cfg.m)]).unwrap();
+            lam += out.lambda as f64;
+            blk += out.enabled_blocks as f64;
+        }
+        (lam / samples as f64, blk / samples as f64)
+    };
+    let (mean_lambda, mean_blocks) = probe(&mut engine, &mut rng);
+    engine.retrain();
+    let (_, mean_blocks_after_retrain) = probe(&mut engine, &mut rng);
+    ChurnReport {
+        rewrites_per_slot: rewrites as f64 / cfg.m as f64,
+        mean_lambda,
+        mean_blocks,
+        mean_blocks_after_retrain,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn density_closed_form() {
+        assert_eq!(weight_density(8, 0), 0.0);
+        assert!((weight_density(8, 1) - 0.125).abs() < 1e-12);
+        assert!(weight_density(8, 100) > 0.999_99);
+        // monotone in trainings
+        assert!(weight_density(8, 5) < weight_density(8, 10));
+    }
+
+    #[test]
+    fn fire_probability_drops_with_more_clusters() {
+        // more clusters = more independent AND terms (the sparse-network
+        // robustness of [8])
+        assert!(fire_probability(4, 8, 3) < fire_probability(2, 8, 3));
+        assert!(fire_probability(3, 8, 1) < 0.01);
+    }
+
+    #[test]
+    fn churn_bloats_enables_and_retrain_recovers() {
+        let cfg = DesignConfig::small_test();
+        let r = simulate_churn(&cfg, 2 * cfg.m, 3);
+        assert!(
+            r.mean_blocks > r.mean_blocks_after_retrain,
+            "churned {} vs retrained {}",
+            r.mean_blocks,
+            r.mean_blocks_after_retrain
+        );
+        assert!(r.mean_lambda >= 1.0, "stored tags must still activate");
+    }
+
+    #[test]
+    fn churned_lambda_tracks_theory_order_of_magnitude() {
+        // After ~2 rewrites/slot every neuron has been trained ~3 times on
+        // average; predicted extra activations for the small config:
+        let cfg = DesignConfig::small_test();
+        let r = simulate_churn(&cfg, 2 * cfg.m, 9);
+        let predicted_extra = expected_lambda_churned(&cfg, 3);
+        // loose band: same order of magnitude
+        assert!(
+            r.mean_lambda - 1.0 < 10.0 * (predicted_extra + 1.0),
+            "measured extra {} vs predicted {}",
+            r.mean_lambda - 1.0,
+            predicted_extra
+        );
+    }
+
+    #[test]
+    fn no_churn_means_no_bloat() {
+        let cfg = DesignConfig::small_test();
+        let r = simulate_churn(&cfg, 0, 5);
+        assert!((r.mean_blocks - r.mean_blocks_after_retrain).abs() < 0.2);
+    }
+}

@@ -1,0 +1,19 @@
+//! The clustered-sparse-network classifier — native, bit-packed (Fig. 2/4).
+//!
+//! This is the Rust-side twin of the Pallas kernel (L1): the coordinator's
+//! hot path uses it for single-query lookups and Monte-Carlo sweeps (Fig. 3
+//! runs a million decodes), while batched decodes can go through the PJRT
+//! artifact ([`crate::runtime`]).  An integration test cross-checks the two
+//! implementations bit-for-bit.
+//!
+//! Representation: the weight matrix is stored row-major as `c·l` rows of
+//! `M` bits — exactly the SRAM organization of Fig. 4 (c blocks of l rows ×
+//! M columns).  A decode reads one row per cluster (the fused
+//! decoder/word-line trick) and ANDs them: `M/64 · c` word operations.
+
+pub mod bitselect;
+pub mod capacity;
+pub mod network;
+
+pub use bitselect::Selection;
+pub use network::{Activation, ClusteredNetwork};

@@ -1,0 +1,330 @@
+//! Bit-packed clustered-sparse-network: training and global decoding.
+
+
+use crate::bits::BitVec;
+
+/// Result of one decode: the P_II activation map and the derived
+/// compare-enable mask.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Activation {
+    /// P_II neural values — bit `i` set iff entry `i`'s neuron activated.
+    pub act: BitVec,
+    /// ζ-group OR of `act` — bit `b` set iff sub-block `b` must be
+    /// compare-enabled (the `En` lines of Fig. 5).
+    pub enables: BitVec,
+    /// λ — number of activated P_II neurons (ambiguity count, Fig. 3).
+    pub lambda: usize,
+}
+
+/// The CNN of Fig. 2: `c` clusters of `l` binary neurons in P_I, fully
+/// (binary-)connected to `M` neurons in P_II.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusteredNetwork {
+    c: usize,
+    l: usize,
+    m: usize,
+    zeta: usize,
+    /// `c·l` rows of `M` bits; row `i·l + j` holds w_{(i,j)(·)} — the SRAM
+    /// layout of Fig. 4.
+    rows: Vec<BitVec>,
+}
+
+impl ClusteredNetwork {
+    /// Untrained network. `l` must be a power of two; `zeta` must divide `m`.
+    pub fn new(c: usize, l: usize, m: usize, zeta: usize) -> Self {
+        assert!(c > 0 && l.is_power_of_two(), "bad cluster geometry");
+        assert!(zeta > 0 && m % zeta == 0, "ζ must divide M");
+        ClusteredNetwork { c, l, m, zeta, rows: vec![BitVec::zeros(m); c * l] }
+    }
+
+    /// Build with geometry from a design config.
+    pub fn from_config(cfg: &crate::config::DesignConfig) -> Self {
+        Self::new(cfg.c, cfg.l, cfg.m, cfg.zeta)
+    }
+
+    pub fn c(&self) -> usize {
+        self.c
+    }
+    pub fn l(&self) -> usize {
+        self.l
+    }
+    pub fn m(&self) -> usize {
+        self.m
+    }
+    pub fn zeta(&self) -> usize {
+        self.zeta
+    }
+    pub fn beta(&self) -> usize {
+        self.m / self.zeta
+    }
+
+    /// Number of stored (set) weights — hardware occupancy statistic.
+    pub fn weight_count(&self) -> usize {
+        self.rows.iter().map(|r| r.count_ones()).sum()
+    }
+
+    /// Raw weight rows (the Fig. 4 SRAM contents) — used to ship W to the
+    /// PJRT decode artifact.
+    pub fn rows(&self) -> &[BitVec] {
+        &self.rows
+    }
+
+    /// Train the association between a reduced tag (as `c` cluster indices,
+    /// each `< l`) and CAM address `addr` (§II-A.1).
+    pub fn train(&mut self, idx: &[u16], addr: usize) {
+        assert_eq!(idx.len(), self.c, "need one index per cluster");
+        assert!(addr < self.m, "address out of range");
+        for (cluster, &j) in idx.iter().enumerate() {
+            assert!((j as usize) < self.l, "neuron index out of range");
+            self.rows[cluster * self.l + j as usize].set(addr, true);
+        }
+    }
+
+    /// Forget everything (weights are superposed, so deleting a single
+    /// association requires a rebuild — see the coordinator's retrain path).
+    pub fn clear(&mut self) {
+        for r in &mut self.rows {
+            *r = BitVec::zeros(self.m);
+        }
+    }
+
+    /// Rebuild from a full association list.
+    pub fn retrain_from<'a>(&mut self, entries: impl IntoIterator<Item = (&'a [u16], usize)>) {
+        self.clear();
+        for (idx, addr) in entries {
+            self.train(idx, addr);
+        }
+    }
+
+    /// Global decode (eq. 1): AND of the one selected row per cluster, then
+    /// the ζ-group OR producing the compare-enable mask (§II-A.2).
+    pub fn decode(&self, idx: &[u16]) -> Activation {
+        let mut act = BitVec::zeros(self.m);
+        let mut enables = BitVec::zeros(self.beta());
+        let lambda = self.decode_into(idx, &mut act, &mut enables);
+        Activation { act, enables, lambda }
+    }
+
+    /// Allocation-free decode into caller-provided buffers; returns λ.
+    /// This is the coordinator's hot path.
+    #[inline]
+    pub fn decode_into(&self, idx: &[u16], act: &mut BitVec, enables: &mut BitVec) -> usize {
+        debug_assert_eq!(idx.len(), self.c);
+        debug_assert_eq!(act.len(), self.m);
+        debug_assert_eq!(enables.len(), self.beta());
+
+        // AND the selected row of each cluster (LD fused into row select).
+        let first = &self.rows[idx[0] as usize];
+        act.words_mut().copy_from_slice(first.words());
+        for (cluster, &j) in idx.iter().enumerate().skip(1) {
+            debug_assert!((j as usize) < self.l);
+            let row = &self.rows[cluster * self.l + j as usize];
+            for (a, w) in act.words_mut().iter_mut().zip(row.words()) {
+                *a &= *w;
+            }
+        }
+
+        // ζ-group OR → enable bits, plus λ popcount, in one pass.
+        let mut lambda = 0usize;
+        for w in enables.words_mut() {
+            *w = 0;
+        }
+        if self.zeta.is_power_of_two() && self.zeta <= 64 {
+            group_or_pow2(act.words(), self.m, self.zeta, enables.words_mut(), &mut lambda);
+        } else {
+            lambda = act.count_ones();
+            for i in act.iter_ones() {
+                enables.set(i / self.zeta, true);
+            }
+        }
+        lambda
+    }
+
+    /// Convenience: decode and return just the enable mask.
+    pub fn enables(&self, idx: &[u16]) -> BitVec {
+        self.decode(idx).enables
+    }
+}
+
+/// Fold an M-bit activation map into M/ζ enable bits for power-of-two ζ,
+/// word-at-a-time, accumulating λ on the way.
+///
+/// Perf notes (EXPERIMENTS.md §Perf): activation maps are sparse (λ ≈ 2 of
+/// M bits at the reference point), so all-zero words short-circuit; for the
+/// reference ζ = 8 the per-group bit pick is a single multiply-gather of
+/// the byte LSBs instead of a 8-iteration shift loop.
+#[inline]
+fn group_or_pow2(act: &[u64], m: usize, zeta: usize, enables: &mut [u64], lambda: &mut usize) {
+    let mut out_bit = 0usize;
+    for (wi, &w0) in act.iter().enumerate() {
+        let groups_in_word = (64 / zeta).min((m - wi * 64).div_ceil(zeta));
+        if w0 == 0 {
+            // fast path: nothing activated in this word (the common case)
+            out_bit += groups_in_word;
+            continue;
+        }
+        *lambda += w0.count_ones() as usize;
+        let mut w = w0;
+        // OR-fold within the word: after k steps each surviving bit is the
+        // OR of a 2^k-bit group aligned to its low end.
+        let mut width = 1usize;
+        while width < zeta {
+            w |= w >> width;
+            width *= 2;
+        }
+        if zeta == 8 && groups_in_word == 8 {
+            // gather the 8 byte-LSBs in one multiply: masked bits sit at
+            // positions 8i; ·0x0102040810204080 places bit i of the result
+            // at position 56+i with provably no carry collisions.
+            let gathered =
+                ((w & 0x0101_0101_0101_0101).wrapping_mul(0x0102_0408_1020_4080) >> 56) as u64;
+            enables[out_bit / 64] |= gathered << (out_bit % 64);
+            out_bit += 8;
+            continue;
+        }
+        // pick every ζ-th bit
+        for g in 0..groups_in_word {
+            if (w >> (g * zeta)) & 1 == 1 {
+                enables[out_bit / 64] |= 1 << (out_bit % 64);
+            }
+            out_bit += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn train_then_decode_activates_exactly_trained_entry() {
+        let mut net = ClusteredNetwork::new(3, 8, 64, 8);
+        net.train(&[1, 5, 7], 42);
+        let a = net.decode(&[1, 5, 7]);
+        assert!(a.act.get(42));
+        assert_eq!(a.lambda, 1);
+        assert!(a.enables.get(42 / 8));
+        assert_eq!(a.enables.count_ones(), 1);
+    }
+
+    #[test]
+    fn untrained_pattern_activates_nothing() {
+        let mut net = ClusteredNetwork::new(3, 8, 64, 8);
+        net.train(&[1, 5, 7], 42);
+        let a = net.decode(&[2, 5, 7]);
+        assert_eq!(a.lambda, 0);
+        assert!(a.enables.is_zero());
+    }
+
+    #[test]
+    fn paper_example_section_iia() {
+        // §II-A.1: c=2, q=6 (l=8), truncated tag '101110' → clusters
+        // '101'=5, '110'=6, fourth entry ⇒ w_(1,5)(4) and w_(2,6)(4) set.
+        let mut net = ClusteredNetwork::new(2, 8, 16, 4);
+        net.train(&[5, 6], 4);
+        assert!(net.rows()[5].get(4)); // cluster 1, neuron 5
+        assert!(net.rows()[8 + 6].get(4)); // cluster 2, neuron 6
+        assert_eq!(net.weight_count(), 2);
+        assert_eq!(net.decode(&[5, 6]).lambda, 1);
+    }
+
+    #[test]
+    fn superposition_creates_ambiguity_not_misses() {
+        // Two entries sharing the same reduced tag must both activate —
+        // "ambiguities cost power but never correctness" (§I).
+        let mut net = ClusteredNetwork::new(3, 4, 32, 4);
+        net.train(&[0, 1, 2], 3);
+        net.train(&[0, 1, 2], 17);
+        let a = net.decode(&[0, 1, 2]);
+        assert_eq!(a.lambda, 2);
+        assert!(a.act.get(3) && a.act.get(17));
+        assert!(a.enables.get(0) && a.enables.get(4));
+    }
+
+    #[test]
+    fn cross_cluster_phantom_activation() {
+        // The classic Gripon–Berrou phantom: entries (0,0)→a and (1,1)→b do
+        // NOT make (0,1) activate anything, but (0,0) trained to two
+        // different addresses keeps both. Check a genuine phantom case:
+        // entry A trains (0,*,0)→1, entry B trains (0,*,1)→2 with shared
+        // first cluster; query (0,*,1) must not activate entry 1.
+        let mut net = ClusteredNetwork::new(2, 4, 8, 2);
+        net.train(&[0, 0], 1);
+        net.train(&[0, 1], 2);
+        let a = net.decode(&[0, 1]);
+        assert!(a.act.get(2) && !a.act.get(1));
+    }
+
+    #[test]
+    fn decode_into_matches_decode_and_is_reusable() {
+        let mut net = ClusteredNetwork::new(3, 8, 128, 8);
+        for e in 0..64 {
+            net.train(&[(e % 8) as u16, ((e / 8) % 8) as u16, ((e / 64) % 8) as u16], e);
+        }
+        let mut act = BitVec::zeros(128);
+        let mut en = BitVec::zeros(16);
+        for q in 0..8u16 {
+            let idx = [q % 8, (q + 3) % 8, 0];
+            let lam = net.decode_into(&idx, &mut act, &mut en);
+            let full = net.decode(&idx);
+            assert_eq!(lam, full.lambda);
+            assert_eq!(act, full.act);
+            assert_eq!(en, full.enables);
+        }
+    }
+
+    #[test]
+    fn group_or_handles_all_pow2_zetas() {
+        for zeta in [1usize, 2, 4, 8, 16, 32, 64] {
+            let m = 256;
+            let mut net = ClusteredNetwork::new(2, 4, m, zeta);
+            net.train(&[3, 2], 200);
+            net.train(&[3, 2], 5);
+            let a = net.decode(&[3, 2]);
+            assert_eq!(a.lambda, 2, "zeta={zeta}");
+            assert_eq!(
+                a.enables.iter_ones().collect::<Vec<_>>(),
+                {
+                    let mut v = vec![5 / zeta, 200 / zeta];
+                    v.dedup();
+                    v
+                },
+                "zeta={zeta}"
+            );
+        }
+    }
+
+    #[test]
+    fn retrain_rebuilds_cleanly() {
+        let mut net = ClusteredNetwork::new(2, 4, 16, 4);
+        net.train(&[1, 1], 7);
+        let e1: Vec<(Vec<u16>, usize)> = vec![(vec![2, 3], 9), (vec![0, 0], 0)];
+        net.retrain_from(e1.iter().map(|(i, a)| (i.as_slice(), *a)));
+        assert_eq!(net.decode(&[1, 1]).lambda, 0, "old association gone");
+        assert_eq!(net.decode(&[2, 3]).lambda, 1);
+        assert_eq!(net.decode(&[0, 0]).lambda, 1);
+        assert_eq!(net.weight_count(), 4);
+    }
+
+    #[test]
+    fn weight_count_saturates_on_duplicates() {
+        let mut net = ClusteredNetwork::new(3, 8, 64, 8);
+        net.train(&[1, 2, 3], 10);
+        net.train(&[1, 2, 3], 10);
+        assert_eq!(net.weight_count(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "address out of range")]
+    fn train_rejects_bad_address() {
+        let mut net = ClusteredNetwork::new(2, 4, 16, 4);
+        net.train(&[0, 0], 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "neuron index out of range")]
+    fn train_rejects_bad_neuron() {
+        let mut net = ClusteredNetwork::new(2, 4, 16, 4);
+        net.train(&[4, 0], 3);
+    }
+}

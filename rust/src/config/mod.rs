@@ -1,0 +1,286 @@
+//! Design-point configuration (the knobs of Table I).
+//!
+//! A [`DesignConfig`] fully determines a hardware instance: CAM geometry
+//! (M entries × N tag bits, ζ rows per sub-block), CNN geometry (c clusters
+//! of l neurons, q = c·log2(l) reduced-tag bits), cell/match-line choice and
+//! technology node.  Configs serialize to/from TOML for the CLI and the
+//! design-space sweep.
+
+
+use crate::cam::MatchlineKind;
+use crate::tech::{self, TechNode};
+
+/// Which architecture a model evaluation refers to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Architecture {
+    /// Conventional monolithic CAM, NAND match-lines (Table II "Ref. NAND").
+    ConventionalNand,
+    /// Conventional monolithic CAM, NOR match-lines (Table II "Ref. NOR").
+    ConventionalNor,
+    /// The paper's CNN-classified sub-blocked CAM ("Proposed").
+    Proposed,
+    /// Precomputation-based CAM baseline (Lin et al. [4]) — ones-count
+    /// parameter narrows the search before full comparison.
+    PbCam,
+}
+
+impl Architecture {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Architecture::ConventionalNand => "Ref. NAND",
+            Architecture::ConventionalNor => "Ref. NOR",
+            Architecture::Proposed => "Proposed",
+            Architecture::PbCam => "PB-CAM",
+        }
+    }
+}
+
+/// A complete design point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DesignConfig {
+    /// Number of CAM entries (Table I: M).
+    pub m: usize,
+    /// Tag width in bits (Table I: N).
+    pub n: usize,
+    /// CAM rows per compare-enabled sub-block (Table I: ζ).
+    pub zeta: usize,
+    /// Number of P_I clusters (Table I: c).
+    pub c: usize,
+    /// Neurons per cluster (Table I: l = 2^k).
+    pub l: usize,
+    /// Match-line architecture of the (sub-blocked) CAM array.
+    pub ml_kind: MatchlineKind,
+    /// Technology node name (resolved via [`tech::node_by_name`]).
+    pub node: String,
+}
+
+impl DesignConfig {
+    /// Table I reference design: M=512, N=128, ζ=8 (β=64), q=9 (c=3, l=8),
+    /// XOR cells with NOR match-lines, 0.13 µm @ 1.2 V.
+    pub fn reference() -> Self {
+        DesignConfig {
+            m: 512,
+            n: 128,
+            zeta: 8,
+            c: 3,
+            l: 8,
+            ml_kind: MatchlineKind::Nor,
+            node: "0.13um".to_string(),
+        }
+    }
+
+    /// A small config for fast tests (keeps all invariants of the reference).
+    pub fn small_test() -> Self {
+        DesignConfig {
+            m: 64,
+            n: 32,
+            zeta: 4,
+            c: 3,
+            l: 4,
+            ml_kind: MatchlineKind::Nor,
+            node: "0.13um".to_string(),
+        }
+    }
+
+    /// Reduced-length tag width: q = c·log2(l) (§II-A).
+    pub fn q(&self) -> usize {
+        self.c * self.l.trailing_zeros() as usize
+    }
+
+    /// Number of CAM sub-blocks: β = M/ζ (§III-B).
+    pub fn beta(&self) -> usize {
+        self.m / self.zeta
+    }
+
+    /// Bits of tag mapped to each cluster: k = log2(l).
+    pub fn k(&self) -> usize {
+        self.l.trailing_zeros() as usize
+    }
+
+    /// Total P_I neurons: c·l.
+    pub fn cl(&self) -> usize {
+        self.c * self.l
+    }
+
+    /// Resolved technology node.
+    pub fn tech(&self) -> TechNode {
+        tech::node_by_name(&self.node).unwrap_or(tech::NODE_130NM)
+    }
+
+    /// Closed-form expected ambiguity count E(λ) for uniformly distributed
+    /// reduced tags when the query equals a stored tag (§II-B / Fig. 3):
+    /// the true entry plus Binomial(M−1, 2^−q) colliding entries.
+    pub fn expected_lambda(&self) -> f64 {
+        1.0 + (self.m as f64 - 1.0) / 2f64.powi(self.q() as i32)
+    }
+
+    /// Closed-form expected number of *activated sub-blocks*: the true
+    /// entry's block plus each colliding entry's block when it differs.
+    pub fn expected_active_blocks(&self) -> f64 {
+        let extras = self.expected_lambda() - 1.0;
+        // A colliding entry lands in the true block w.p. (ζ−1)/(M−1); block
+        // double-counting among extras is O(extras²/β), negligible here.
+        1.0 + extras * (1.0 - (self.zeta as f64 - 1.0) / (self.m as f64 - 1.0))
+    }
+
+    /// Expected number of entry comparisons per search: ζ × active blocks.
+    pub fn expected_comparisons(&self) -> f64 {
+        self.zeta as f64 * self.expected_active_blocks()
+    }
+
+    /// Validate all structural invariants.
+    pub fn validate(&self) -> crate::Result<()> {
+        use anyhow::ensure;
+        ensure!(self.m > 0 && self.n > 0, "M and N must be positive");
+        ensure!(self.m % self.zeta == 0, "ζ={} must divide M={}", self.zeta, self.m);
+        ensure!(self.l.is_power_of_two(), "l={} must be a power of two", self.l);
+        ensure!(self.c > 0, "c must be positive");
+        ensure!(
+            self.q() <= self.n,
+            "reduced tag q={} cannot exceed tag width N={}",
+            self.q(),
+            self.n
+        );
+        ensure!(
+            tech::node_by_name(&self.node).is_some(),
+            "unknown technology node '{}'",
+            self.node
+        );
+        Ok(())
+    }
+
+    /// Load from a `key = value` config file (a TOML subset: one scalar per
+    /// line, `#` comments; keys are the field names of this struct).
+    pub fn from_kv_file(path: &std::path::Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let cfg = Self::from_kv(&text)?;
+        Ok(cfg)
+    }
+
+    /// Parse from `key = value` text; missing keys default to the reference
+    /// design point.
+    pub fn from_kv(text: &str) -> crate::Result<Self> {
+        use anyhow::{bail, Context};
+        let mut cfg = DesignConfig::reference();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected 'key = value', got '{raw}'", lineno + 1);
+            };
+            let (k, v) = (k.trim(), v.trim().trim_matches('"'));
+            let ctx = || format!("line {}: bad value for {k}", lineno + 1);
+            match k {
+                "m" => cfg.m = v.parse().with_context(ctx)?,
+                "n" => cfg.n = v.parse().with_context(ctx)?,
+                "zeta" => cfg.zeta = v.parse().with_context(ctx)?,
+                "c" => cfg.c = v.parse().with_context(ctx)?,
+                "l" => cfg.l = v.parse().with_context(ctx)?,
+                "ml_kind" => {
+                    cfg.ml_kind = match v.to_ascii_uppercase().as_str() {
+                        "NOR" => MatchlineKind::Nor,
+                        "NAND" => MatchlineKind::Nand,
+                        _ => bail!("line {}: ml_kind must be NOR or NAND", lineno + 1),
+                    }
+                }
+                "node" => cfg.node = v.to_string(),
+                _ => bail!("line {}: unknown key '{k}'", lineno + 1),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Serialize to the `key = value` format accepted by [`Self::from_kv`].
+    pub fn to_kv(&self) -> String {
+        format!(
+            "# cscam design point (Table I names)\nm = {}\nn = {}\nzeta = {}\nc = {}\nl = {}\nml_kind = \"{}\"\nnode = \"{}\"\n",
+            self.m,
+            self.n,
+            self.zeta,
+            self.c,
+            self.l,
+            self.ml_kind.name(),
+            self.node
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_matches_table1() {
+        let cfg = DesignConfig::reference();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.q(), 9);
+        assert_eq!(cfg.beta(), 64);
+        assert_eq!(cfg.k(), 3);
+        assert_eq!(cfg.cl(), 24);
+        // Table I: E(λ) = 1 (ambiguities beyond the true entry ≈ 1, i.e.
+        // "only two comparisons" ⇒ expected_lambda ≈ 2 activations).
+        assert!((cfg.expected_lambda() - 1.998).abs() < 0.01);
+    }
+
+    #[test]
+    fn expected_comparisons_reference_is_about_two_blocks() {
+        let cfg = DesignConfig::reference();
+        let blocks = cfg.expected_active_blocks();
+        assert!((1.9..2.0).contains(&blocks), "blocks = {blocks}");
+        assert!((15.0..16.0).contains(&cfg.expected_comparisons()));
+    }
+
+    #[test]
+    fn validation_catches_bad_geometry() {
+        let mut cfg = DesignConfig::reference();
+        cfg.zeta = 7;
+        assert!(cfg.validate().is_err());
+        let mut cfg = DesignConfig::reference();
+        cfg.l = 6;
+        assert!(cfg.validate().is_err());
+        let mut cfg = DesignConfig::reference();
+        cfg.c = 100; // q = 300 > N
+        assert!(cfg.validate().is_err());
+        let mut cfg = DesignConfig::reference();
+        cfg.node = "7nm".into();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn kv_roundtrip() {
+        let cfg = DesignConfig::reference();
+        let text = cfg.to_kv();
+        let back = DesignConfig::from_kv(&text).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn kv_partial_overrides_reference() {
+        let cfg = DesignConfig::from_kv("m = 1024\nzeta = 16 # comment\n\n# c stays 3\n").unwrap();
+        assert_eq!(cfg.m, 1024);
+        assert_eq!(cfg.zeta, 16);
+        assert_eq!(cfg.c, 3);
+        assert_eq!(cfg.ml_kind, MatchlineKind::Nor);
+    }
+
+    #[test]
+    fn kv_rejects_unknown_keys_and_bad_values() {
+        assert!(DesignConfig::from_kv("bogus = 1").is_err());
+        assert!(DesignConfig::from_kv("m = banana").is_err());
+        assert!(DesignConfig::from_kv("ml_kind = \"XNOR\"").is_err());
+        assert!(DesignConfig::from_kv("m 512").is_err());
+        // structurally invalid after parse
+        assert!(DesignConfig::from_kv("zeta = 7").is_err());
+    }
+
+    #[test]
+    fn lambda_decreases_with_q() {
+        let mk = |c: usize| DesignConfig { c, ..DesignConfig::reference() };
+        assert!(mk(1).expected_lambda() > mk(2).expected_lambda());
+        assert!(mk(2).expected_lambda() > mk(3).expected_lambda());
+        assert!(mk(3).expected_lambda() > mk(4).expected_lambda());
+    }
+}

@@ -1,0 +1,135 @@
+//! Dynamic batching for the decode stage.
+//!
+//! The PJRT decode artifact is compiled for fixed batch sizes at AOT time
+//! (the paper's analogue: the CNN is a fixed-width datapath), so the serve
+//! loop accumulates requests and flushes either when the largest compiled
+//! batch fills or when the oldest request has waited `max_wait` — the
+//! classic size-or-deadline policy of serving systems.
+//!
+//! The batcher is a *pure state machine* (no tasks, no clocks of its own):
+//! the server drives it with `push`/`due`/`flush`, which makes the policy
+//! unit-testable without tokio.
+
+use std::time::{Duration, Instant};
+
+/// Flush policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchPolicy {
+    /// Flush as soon as this many requests are queued.
+    pub max_batch: usize,
+    /// Flush when the oldest queued request has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(200) }
+    }
+}
+
+/// A size/deadline batcher over opaque items.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    queue: Vec<T>,
+    oldest: Option<Instant>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch > 0);
+        Batcher { policy, queue: Vec::with_capacity(policy.max_batch), oldest: None }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Queue an item at `now`; returns a full batch if the size trigger
+    /// fired.
+    pub fn push(&mut self, item: T, now: Instant) -> Option<Vec<T>> {
+        if self.queue.is_empty() {
+            self.oldest = Some(now);
+        }
+        self.queue.push(item);
+        if self.queue.len() >= self.policy.max_batch {
+            Some(self.flush())
+        } else {
+            None
+        }
+    }
+
+    /// The instant at which the deadline trigger will fire, if any.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.oldest.map(|t| t + self.policy.max_wait)
+    }
+
+    /// True if the deadline has passed at `now`.
+    pub fn due(&self, now: Instant) -> bool {
+        matches!(self.deadline(), Some(d) if now >= d)
+    }
+
+    /// Take everything queued.
+    pub fn flush(&mut self) -> Vec<T> {
+        self.oldest = None;
+        std::mem::take(&mut self.queue)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t0() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn size_trigger_flushes_exactly_at_max() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(1) });
+        let now = t0();
+        assert!(b.push(1, now).is_none());
+        assert!(b.push(2, now).is_none());
+        let batch = b.push(3, now).expect("size trigger");
+        assert_eq!(batch, vec![1, 2, 3]);
+        assert!(b.is_empty());
+        assert_eq!(b.deadline(), None);
+    }
+
+    #[test]
+    fn deadline_trigger_counts_from_oldest() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(5) });
+        let now = t0();
+        b.push('a', now);
+        b.push('b', now + Duration::from_millis(4));
+        assert!(!b.due(now + Duration::from_millis(4)));
+        assert!(b.due(now + Duration::from_millis(5)));
+        assert_eq!(b.flush(), vec!['a', 'b']);
+        assert!(!b.due(now + Duration::from_secs(9)), "empty batcher is never due");
+    }
+
+    #[test]
+    fn deadline_resets_after_flush() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 10, max_wait: Duration::from_millis(1) });
+        let now = t0();
+        b.push(1, now);
+        b.flush();
+        b.push(2, now + Duration::from_millis(10));
+        let d = b.deadline().unwrap();
+        assert_eq!(d, now + Duration::from_millis(11));
+    }
+
+    #[test]
+    fn single_item_batches_allowed() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 1, max_wait: Duration::ZERO });
+        assert_eq!(b.push(42, t0()), Some(vec![42]));
+    }
+}

@@ -1,0 +1,174 @@
+//! Serving metrics: request counters, hit ratio, energy & ambiguity
+//! aggregation, host-side latency histogram.
+
+
+use crate::stats::{Histogram, OnlineStats};
+
+/// Aggregated serving metrics for one engine/server.
+#[derive(Debug, Clone)]
+pub struct Metrics {
+    pub lookups: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    pub deletes: u64,
+    pub retrains: u64,
+    pub batches: u64,
+    /// Modelled per-search energy (fJ) — the paper's metric.
+    pub energy_fj: OnlineStats,
+    /// λ per lookup.
+    pub lambda: OnlineStats,
+    /// Enabled sub-blocks per lookup.
+    pub enabled_blocks: OnlineStats,
+    /// Host-side service latency (nanoseconds).
+    pub host_latency_ns: Histogram,
+    /// Decode batch sizes seen.
+    pub batch_size: OnlineStats,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            lookups: 0,
+            hits: 0,
+            misses: 0,
+            inserts: 0,
+            deletes: 0,
+            retrains: 0,
+            batches: 0,
+            energy_fj: OnlineStats::new(),
+            lambda: OnlineStats::new(),
+            enabled_blocks: OnlineStats::new(),
+            host_latency_ns: Histogram::exponential(1 << 30),
+            batch_size: OnlineStats::new(),
+        }
+    }
+
+    /// Record one lookup outcome.
+    pub fn record_lookup(&mut self, outcome: &crate::coordinator::engine::LookupOutcome) {
+        self.lookups += 1;
+        if outcome.addr.is_some() {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+        }
+        self.energy_fj.push(outcome.energy.total_fj());
+        self.lambda.push(outcome.lambda as f64);
+        self.enabled_blocks.push(outcome.enabled_blocks as f64);
+    }
+
+    /// Record one decode batch dispatch.
+    pub fn record_batch(&mut self, size: usize) {
+        self.batches += 1;
+        self.batch_size.push(size as f64);
+    }
+
+    /// Record host-side latency of a served request.
+    pub fn record_latency(&mut self, nanos: u64) {
+        self.host_latency_ns.record(nanos);
+    }
+
+    pub fn hit_ratio(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups as f64
+        }
+    }
+
+    /// fJ/bit/search given the array geometry — Table II's metric.
+    pub fn energy_per_bit(&self, m: usize, n: usize) -> f64 {
+        self.energy_fj.mean() / (m as f64 * n as f64)
+    }
+
+    /// Merge a peer's metrics (shard aggregation).
+    pub fn merge(&mut self, other: &Metrics) {
+        self.lookups += other.lookups;
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.inserts += other.inserts;
+        self.deletes += other.deletes;
+        self.retrains += other.retrains;
+        self.batches += other.batches;
+        self.energy_fj.merge(&other.energy_fj);
+        self.lambda.merge(&other.lambda);
+        self.enabled_blocks.merge(&other.enabled_blocks);
+        self.batch_size.merge(&other.batch_size);
+        self.host_latency_ns.merge(&other.host_latency_ns);
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self, m: usize, n: usize) -> String {
+        format!(
+            "lookups={} hits={} ({:.1}%) E={:.4} fJ/bit/search λ̄={:.3} blocks̄={:.3} p50={}ns p99={}ns",
+            self.lookups,
+            self.hits,
+            100.0 * self.hit_ratio(),
+            self.energy_per_bit(m, n),
+            self.lambda.mean(),
+            self.enabled_blocks.mean(),
+            self.host_latency_ns.quantile(0.5),
+            self.host_latency_ns.quantile(0.99),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::EnergyBreakdown;
+    use crate::timing::DelayReport;
+
+    fn outcome(hit: bool, energy: f64, lambda: usize) -> crate::coordinator::LookupOutcome {
+        crate::coordinator::LookupOutcome {
+            addr: hit.then_some(3),
+            all_matches: if hit { vec![3] } else { vec![] },
+            lambda,
+            enabled_blocks: lambda.max(1),
+            comparisons: 8,
+            energy: EnergyBreakdown { matchline_fj: energy, ..Default::default() },
+            delay: DelayReport { cycle_ns: 0.7, latency_ns: 1.3 },
+        }
+    }
+
+    #[test]
+    fn hit_ratio_and_energy() {
+        let mut m = Metrics::new();
+        m.record_lookup(&outcome(true, 100.0, 2));
+        m.record_lookup(&outcome(false, 50.0, 1));
+        m.record_lookup(&outcome(true, 150.0, 3));
+        assert_eq!(m.lookups, 3);
+        assert!((m.hit_ratio() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((m.energy_fj.mean() - 100.0).abs() < 1e-12);
+        assert!((m.lambda.mean() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let mut a = Metrics::new();
+        a.record_lookup(&outcome(true, 10.0, 1));
+        let mut b = Metrics::new();
+        b.record_lookup(&outcome(false, 30.0, 2));
+        b.record_batch(16);
+        a.merge(&b);
+        assert_eq!(a.lookups, 2);
+        assert_eq!(a.batches, 1);
+        assert!((a.energy_fj.mean() - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_formats() {
+        let mut m = Metrics::new();
+        m.record_lookup(&outcome(true, 7887.0, 2));
+        m.record_latency(1234);
+        let s = m.summary(512, 128);
+        assert!(s.contains("lookups=1"));
+        assert!(s.contains("fJ/bit/search"));
+    }
+}

@@ -1,0 +1,26 @@
+//! L3 — the serving coordinator.
+//!
+//! The paper's device is a lookup engine; the coordinator wraps it the way
+//! a TLB/router integration would: an async request loop with a dynamic
+//! batcher in front of the decode stage, shard routing across multiple CAM
+//! macros, an insert/delete path that keeps the CNN consistent with the
+//! array, and per-request energy/latency accounting.
+//!
+//! * [`engine`] — one CAM macro + its CNN classifier (the Fig. 1 system).
+//! * [`batcher`] — size/deadline dynamic batching for the decode stage
+//!   (feeds the PJRT artifact whose batch sizes are fixed at AOT time).
+//! * [`server`] — tokio serve loop: mpsc in, oneshot out, graceful drain.
+//! * [`router`] — hash-sharding across engines (multi-macro scale-out).
+//! * [`metrics`] — counters + latency/energy aggregation.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use engine::{EngineError, LookupEngine, LookupOutcome};
+pub use metrics::Metrics;
+pub use router::ShardRouter;
+pub use server::{CamServer, DecodeBackend, ServerHandle};

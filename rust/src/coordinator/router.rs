@@ -1,0 +1,158 @@
+//! Shard routing across multiple CAM macros.
+//!
+//! The paper notes power inefficiency has kept TLBs under 512 entries; the
+//! system answer to bigger tables is horizontal scaling — several proposed
+//! macros behind a deterministic tag-hash router (the same shape as a
+//! multi-bank TLB or a router line card with several CAM chips).  Lookups
+//! touch exactly one shard; total capacity is `shards × M`.
+
+use crate::bits::BitVec;
+use crate::config::DesignConfig;
+use crate::coordinator::engine::{EngineError, LookupEngine, LookupOutcome};
+
+/// A set of lookup engines behind a tag-hash.
+#[derive(Debug)]
+pub struct ShardRouter {
+    shards: Vec<LookupEngine>,
+}
+
+impl ShardRouter {
+    /// `shards` identical engines of the given design point.
+    pub fn new(cfg: DesignConfig, shards: usize) -> Self {
+        assert!(shards > 0);
+        ShardRouter { shards: (0..shards).map(|_| LookupEngine::new(cfg.clone())).collect() }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn total_capacity(&self) -> usize {
+        self.shards.iter().map(|s| s.config().m).sum()
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.shards.iter().map(|s| s.occupancy()).sum()
+    }
+
+    /// Deterministic shard for a tag (FNV-1a over the packed words).
+    pub fn shard_of(&self, tag: &BitVec) -> usize {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for &w in tag.words() {
+            for b in w.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x1000_0000_01b3);
+            }
+        }
+        (h % self.shards.len() as u64) as usize
+    }
+
+    /// Insert into the owning shard; returns (shard, local address).
+    pub fn insert(&mut self, tag: &BitVec) -> Result<(usize, usize), EngineError> {
+        let s = self.shard_of(tag);
+        let addr = self.shards[s].insert(tag)?;
+        Ok((s, addr))
+    }
+
+    /// Lookup in the owning shard; returns (shard, outcome).
+    pub fn lookup(&mut self, tag: &BitVec) -> Result<(usize, LookupOutcome), EngineError> {
+        let s = self.shard_of(tag);
+        let out = self.shards[s].lookup(tag)?;
+        Ok((s, out))
+    }
+
+    /// Delete from the owning shard by tag (lookup + erase).
+    pub fn delete(&mut self, tag: &BitVec) -> Result<bool, EngineError> {
+        let s = self.shard_of(tag);
+        let out = self.shards[s].lookup(tag)?;
+        match out.addr {
+            Some(a) => {
+                self.shards[s].delete(a)?;
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+
+    /// Access a shard (metrics, retrain, …).
+    pub fn shard_mut(&mut self, i: usize) -> &mut LookupEngine {
+        &mut self.shards[i]
+    }
+
+    pub fn shards(&self) -> &[LookupEngine] {
+        &self.shards
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::TagDistribution;
+    use crate::util::Rng;
+
+    fn router(shards: usize) -> ShardRouter {
+        ShardRouter::new(DesignConfig::small_test(), shards)
+    }
+
+    #[test]
+    fn routing_is_deterministic() {
+        let r = router(4);
+        let mut rng = Rng::seed_from_u64(1);
+        for _ in 0..50 {
+            let t = crate::workload::random_tag(32, &mut rng);
+            assert_eq!(r.shard_of(&t), r.shard_of(&t));
+        }
+    }
+
+    #[test]
+    fn inserted_tags_are_found_in_their_shard() {
+        let mut r = router(4);
+        let mut rng = Rng::seed_from_u64(2);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 100, &mut rng);
+        for t in &tags {
+            r.insert(t).unwrap();
+        }
+        assert_eq!(r.occupancy(), 100);
+        for t in &tags {
+            let (s, out) = r.lookup(t).unwrap();
+            assert_eq!(s, r.shard_of(t));
+            assert!(out.addr.is_some(), "tag lost");
+        }
+    }
+
+    #[test]
+    fn shards_balance_roughly() {
+        let mut r = router(4);
+        let mut rng = Rng::seed_from_u64(3);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 200, &mut rng);
+        let mut counts = [0usize; 4];
+        for t in &tags {
+            counts[r.shard_of(t)] += 1;
+        }
+        for c in counts {
+            assert!((20..90).contains(&c), "imbalanced: {counts:?}");
+        }
+        let _ = &mut r;
+    }
+
+    #[test]
+    fn delete_by_tag() {
+        let mut r = router(2);
+        let mut rng = Rng::seed_from_u64(4);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 10, &mut rng);
+        for t in &tags {
+            r.insert(t).unwrap();
+        }
+        assert!(r.delete(&tags[5]).unwrap());
+        let (_, out) = r.lookup(&tags[5]).unwrap();
+        assert_eq!(out.addr, None);
+        assert!(!r.delete(&tags[5]).unwrap(), "double delete is a no-op");
+        assert_eq!(r.occupancy(), 9);
+    }
+
+    #[test]
+    fn capacity_scales_with_shards() {
+        assert_eq!(router(1).total_capacity(), 64);
+        assert_eq!(router(8).total_capacity(), 512);
+    }
+}

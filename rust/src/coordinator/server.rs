@@ -1,0 +1,455 @@
+//! The serve loop: a single-owner engine thread fed by an mpsc channel,
+//! with dynamic batching of the decode stage and per-request response
+//! channels.
+//!
+//! Shape: `ServerHandle` (cheap to clone, one per client thread) → mpsc →
+//! engine thread.  Lookups are queued into the [`Batcher`]; inserts /
+//! deletes / metrics are *barriers* (they flush the pending batch first, so
+//! a lookup never observes a half-applied mutation).  The decode stage runs
+//! either natively (bit-packed CNN) or through the PJRT artifact
+//! ([`crate::runtime::ArtifactStore`]) — the three-layer configuration with
+//! Python strictly at build time.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::bits::BitVec;
+use crate::config::DesignConfig;
+use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::coordinator::engine::{EngineError, LookupEngine, LookupOutcome};
+use crate::coordinator::metrics::Metrics;
+use crate::runtime::ArtifactStore;
+
+/// Which implementation runs the CNN decode stage.
+pub enum DecodeBackend {
+    /// Bit-packed native decode (reference hot path).
+    Native,
+    /// AOT-compiled PJRT artifact (the three-layer stack).
+    Pjrt(Box<ArtifactStore>),
+}
+
+// SAFETY: the xla crate's PJRT handles are `!Send` only because
+// `PjRtClient` wraps its FFI handle in an `Rc`.  `ArtifactStore` creates
+// the client itself and owns every object cloned from it (executables,
+// resident buffers), so all `Rc` clones live inside the one store.  The
+// server moves the whole store onto its single engine thread at spawn and
+// never aliases it afterwards — every clone crosses threads together,
+// exactly once, which is the condition `Rc` needs.
+unsafe impl Send for DecodeBackend {}
+
+impl std::fmt::Debug for DecodeBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeBackend::Native => write!(f, "Native"),
+            DecodeBackend::Pjrt(_) => write!(f, "Pjrt"),
+        }
+    }
+}
+
+type LookupResp = mpsc::SyncSender<Result<LookupOutcome, EngineError>>;
+
+type BulkResp = mpsc::SyncSender<Vec<Result<LookupOutcome, EngineError>>>;
+
+enum Request {
+    Lookup { tag: BitVec, enqueued: Instant, resp: LookupResp },
+    BulkLookup { tags: Vec<BitVec>, enqueued: Instant, resp: BulkResp },
+    Insert { tag: BitVec, resp: mpsc::SyncSender<Result<usize, EngineError>> },
+    Delete { addr: usize, resp: mpsc::SyncSender<Result<(), EngineError>> },
+    Metrics { resp: mpsc::SyncSender<Box<Metrics>> },
+    Drain { resp: mpsc::SyncSender<()> },
+}
+
+/// Cloneable client handle to a running [`CamServer`].
+///
+/// All methods block the calling thread until the engine thread responds;
+/// issue requests from multiple threads to exercise batching.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+impl ServerHandle {
+    /// Lookup (dynamically batched with concurrent callers).
+    pub fn lookup(&self, tag: BitVec) -> Result<LookupOutcome, EngineError> {
+        let (resp, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request::Lookup { tag, enqueued: Instant::now(), resp })
+            .map_err(|_| EngineError::Full)?;
+        rx.recv().map_err(|_| EngineError::Full)?
+    }
+
+    /// Bulk lookup: ship many tags in one request — one channel round-trip
+    /// amortized over the whole slice (EXPERIMENTS.md §Perf iteration 3).
+    /// The batch is decoded in `max_batch`-sized chunks, preserving order.
+    pub fn lookup_many(&self, tags: Vec<BitVec>) -> Vec<Result<LookupOutcome, EngineError>> {
+        if tags.is_empty() {
+            return Vec::new();
+        }
+        let n = tags.len();
+        let (resp, rx) = mpsc::sync_channel(1);
+        if self.tx.send(Request::BulkLookup { tags, enqueued: Instant::now(), resp }).is_err() {
+            return (0..n).map(|_| Err(EngineError::Full)).collect();
+        }
+        rx.recv().unwrap_or_else(|_| (0..n).map(|_| Err(EngineError::Full)).collect())
+    }
+
+    /// Insert a tag; returns once the CNN + CAM are updated.
+    pub fn insert(&self, tag: BitVec) -> Result<usize, EngineError> {
+        let (resp, rx) = mpsc::sync_channel(1);
+        self.tx.send(Request::Insert { tag, resp }).map_err(|_| EngineError::Full)?;
+        rx.recv().map_err(|_| EngineError::Full)?
+    }
+
+    /// Delete by address.
+    pub fn delete(&self, addr: usize) -> Result<(), EngineError> {
+        let (resp, rx) = mpsc::sync_channel(1);
+        self.tx.send(Request::Delete { addr, resp }).map_err(|_| EngineError::Full)?;
+        rx.recv().map_err(|_| EngineError::Full)?
+    }
+
+    /// Snapshot of the server metrics.
+    pub fn metrics(&self) -> Option<Box<Metrics>> {
+        let (resp, rx) = mpsc::sync_channel(1);
+        self.tx.send(Request::Metrics { resp }).ok()?;
+        rx.recv().ok()
+    }
+
+    /// Flush pending work and wait for it to complete.
+    pub fn drain(&self) {
+        let (resp, rx) = mpsc::sync_channel(1);
+        if self.tx.send(Request::Drain { resp }).is_ok() {
+            let _ = rx.recv();
+        }
+    }
+}
+
+/// The serve-thread owner.
+pub struct CamServer {
+    engine: LookupEngine,
+    backend: DecodeBackend,
+    policy: BatchPolicy,
+    metrics: Metrics,
+    weights_dirty: bool,
+}
+
+impl CamServer {
+    /// Build a server around a fresh engine.
+    pub fn new(cfg: DesignConfig, backend: DecodeBackend, policy: BatchPolicy) -> Self {
+        Self::with_engine(LookupEngine::new(cfg), backend, policy)
+    }
+
+    /// Build around an existing (pre-populated) engine.
+    pub fn with_engine(engine: LookupEngine, backend: DecodeBackend, policy: BatchPolicy) -> Self {
+        CamServer { engine, backend, policy, metrics: Metrics::new(), weights_dirty: true }
+    }
+
+    /// Spawn the serve loop on a dedicated thread.  The thread exits when
+    /// every [`ServerHandle`] clone has been dropped.
+    pub fn spawn(self) -> ServerHandle {
+        let (tx, rx) = mpsc::channel();
+        std::thread::Builder::new()
+            .name("cscam-server".into())
+            .spawn(move || self.run(rx))
+            .expect("spawn server thread");
+        ServerHandle { tx }
+    }
+
+    fn run(mut self, rx: mpsc::Receiver<Request>) {
+        let mut batcher: Batcher<(BitVec, Instant, LookupResp)> = Batcher::new(self.policy);
+        loop {
+            let req = match batcher.deadline() {
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        let batch = batcher.flush();
+                        self.run_batch(batch);
+                        continue;
+                    }
+                    match rx.recv_timeout(d - now) {
+                        Ok(r) => Some(r),
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            let batch = batcher.flush();
+                            self.run_batch(batch);
+                            continue;
+                        }
+                        Err(mpsc::RecvTimeoutError::Disconnected) => None,
+                    }
+                }
+                None => rx.recv().ok(),
+            };
+            match req {
+                Some(Request::Lookup { tag, enqueued, resp }) => {
+                    if let Some(batch) = batcher.push((tag, enqueued, resp), Instant::now()) {
+                        self.run_batch(batch);
+                    }
+                    // Greedy drain (EXPERIMENTS.md §Perf iteration 2):
+                    // batch everything already queued, then serve
+                    // immediately instead of sleeping out max_wait — the
+                    // classic "batch what's there" adaptive policy.  The
+                    // deadline path above remains as the bound for
+                    // requests that arrive while a batch is running.
+                    loop {
+                        match rx.try_recv() {
+                            Ok(Request::Lookup { tag, enqueued, resp }) => {
+                                if let Some(batch) =
+                                    batcher.push((tag, enqueued, resp), Instant::now())
+                                {
+                                    self.run_batch(batch);
+                                }
+                            }
+                            Ok(other) => {
+                                let batch = batcher.flush();
+                                self.run_batch(batch);
+                                self.handle_barrier(other);
+                                break;
+                            }
+                            Err(mpsc::TryRecvError::Empty) => {
+                                let batch = batcher.flush();
+                                self.run_batch(batch);
+                                break;
+                            }
+                            Err(mpsc::TryRecvError::Disconnected) => {
+                                let batch = batcher.flush();
+                                self.run_batch(batch);
+                                return;
+                            }
+                        }
+                    }
+                }
+                Some(other) => {
+                    // barrier: mutations and snapshots see a flushed queue
+                    let batch = batcher.flush();
+                    self.run_batch(batch);
+                    self.handle_barrier(other);
+                }
+                None => {
+                    // all handles dropped: drain and exit
+                    let batch = batcher.flush();
+                    self.run_batch(batch);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Handle a non-lookup request (the pending batch is already flushed).
+    fn handle_barrier(&mut self, req: Request) {
+        match req {
+            Request::Insert { tag, resp } => {
+                let r = self.engine.insert(&tag);
+                if r.is_ok() {
+                    self.metrics.inserts += 1;
+                    self.weights_dirty = true;
+                }
+                let _ = resp.send(r);
+            }
+            Request::Delete { addr, resp } => {
+                let r = self.engine.delete(addr);
+                if r.is_ok() {
+                    self.metrics.deletes += 1;
+                    self.weights_dirty = true;
+                }
+                let _ = resp.send(r);
+            }
+            Request::BulkLookup { tags, enqueued, resp } => {
+                let results = self.run_bulk(tags, enqueued);
+                let _ = resp.send(results);
+            }
+            Request::Metrics { resp } => {
+                let _ = resp.send(Box::new(self.metrics.clone()));
+            }
+            Request::Drain { resp } => {
+                let _ = resp.send(());
+            }
+            Request::Lookup { .. } => unreachable!("lookups are batched, not barriers"),
+        }
+    }
+
+    /// Serve a pre-assembled batch of tags in order, chunked to the batch
+    /// policy (and thus to the compiled PJRT batch sizes).
+    fn run_bulk(
+        &mut self,
+        tags: Vec<BitVec>,
+        enqueued: Instant,
+    ) -> Vec<Result<LookupOutcome, EngineError>> {
+        let mut out = Vec::with_capacity(tags.len());
+        for chunk in tags.chunks(self.policy.max_batch.max(1)) {
+            self.metrics.record_batch(chunk.len());
+            let decoded: Option<crate::runtime::DecodeOutput> = match &mut self.backend {
+                DecodeBackend::Native => None,
+                DecodeBackend::Pjrt(store) => {
+                    if self.weights_dirty && store.set_weights(self.engine.weight_rows()).is_ok() {
+                        self.weights_dirty = false;
+                    }
+                    if self.weights_dirty {
+                        None
+                    } else {
+                        let idx: Vec<Vec<u16>> =
+                            chunk.iter().map(|t| self.engine.cluster_indices(t)).collect();
+                        store.decode(&idx).ok()
+                    }
+                }
+            };
+            for (i, tag) in chunk.iter().enumerate() {
+                let r = match &decoded {
+                    Some(d) => {
+                        self.engine.lookup_with_enables(tag, &d.enables[i], d.lambda[i] as usize)
+                    }
+                    None => self.engine.lookup(tag),
+                };
+                if let Ok(o) = &r {
+                    self.metrics.record_lookup(o);
+                }
+                out.push(r);
+            }
+        }
+        self.metrics.record_latency(enqueued.elapsed().as_nanos() as u64);
+        out
+    }
+
+    fn run_batch(&mut self, batch: Vec<(BitVec, Instant, LookupResp)>) {
+        if batch.is_empty() {
+            return;
+        }
+        self.metrics.record_batch(batch.len());
+
+        // PJRT path: one artifact call covers the whole batch's decode stage.
+        let decoded: Option<crate::runtime::DecodeOutput> = match &mut self.backend {
+            DecodeBackend::Native => None,
+            DecodeBackend::Pjrt(store) => {
+                if self.weights_dirty && store.set_weights(self.engine.weight_rows()).is_ok() {
+                    self.weights_dirty = false;
+                }
+                if self.weights_dirty {
+                    None // weight upload failed: fall back to native decode
+                } else {
+                    let idx: Vec<Vec<u16>> =
+                        batch.iter().map(|(t, _, _)| self.engine.cluster_indices(t)).collect();
+                    store.decode(&idx).ok()
+                }
+            }
+        };
+
+        for (i, (tag, enqueued, resp)) in batch.into_iter().enumerate() {
+            let out = match &decoded {
+                Some(d) => {
+                    self.engine.lookup_with_enables(&tag, &d.enables[i], d.lambda[i] as usize)
+                }
+                None => self.engine.lookup(&tag),
+            };
+            if let Ok(o) = &out {
+                self.metrics.record_lookup(o);
+            }
+            self.metrics.record_latency(enqueued.elapsed().as_nanos() as u64);
+            let _ = resp.send(out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use crate::workload::TagDistribution;
+    use std::time::Duration;
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(100) }
+    }
+
+    #[test]
+    fn serve_native_roundtrip() {
+        let server = CamServer::new(DesignConfig::small_test(), DecodeBackend::Native, policy());
+        let h = server.spawn();
+        let mut rng = Rng::seed_from_u64(1);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 20, &mut rng);
+        for (i, t) in tags.iter().enumerate() {
+            assert_eq!(h.insert(t.clone()).unwrap(), i);
+        }
+        for (i, t) in tags.iter().enumerate() {
+            let out = h.lookup(t.clone()).unwrap();
+            assert_eq!(out.addr, Some(i));
+        }
+        let m = h.metrics().unwrap();
+        assert_eq!(m.lookups, 20);
+        assert_eq!(m.hits, 20);
+        assert_eq!(m.inserts, 20);
+    }
+
+    #[test]
+    fn concurrent_lookups_batch_together() {
+        let server = CamServer::new(
+            DesignConfig::small_test(),
+            DecodeBackend::Native,
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20) },
+        );
+        let h = server.spawn();
+        let mut rng = Rng::seed_from_u64(2);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 32, &mut rng);
+        for t in &tags {
+            h.insert(t.clone()).unwrap();
+        }
+        let mut joins = Vec::new();
+        for t in tags {
+            let h = h.clone();
+            joins.push(std::thread::spawn(move || h.lookup(t).unwrap().addr.is_some()));
+        }
+        let hits = joins.into_iter().map(|j| j.join().unwrap()).filter(|&b| b).count();
+        assert_eq!(hits, 32);
+        let m = h.metrics().unwrap();
+        assert_eq!(m.lookups, 32);
+        assert!(m.batches < 32, "some batching must occur: {} batches", m.batches);
+        assert!(m.batch_size.mean() > 1.0);
+    }
+
+    #[test]
+    fn delete_barrier_orders_before_following_lookups() {
+        let server = CamServer::new(DesignConfig::small_test(), DecodeBackend::Native, policy());
+        let h = server.spawn();
+        let mut rng = Rng::seed_from_u64(3);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 4, &mut rng);
+        for t in &tags {
+            h.insert(t.clone()).unwrap();
+        }
+        h.delete(2).unwrap();
+        let out = h.lookup(tags[2].clone()).unwrap();
+        assert_eq!(out.addr, None);
+    }
+
+    #[test]
+    fn drain_is_a_noop_on_idle_server() {
+        let server = CamServer::new(DesignConfig::small_test(), DecodeBackend::Native, policy());
+        let h = server.spawn();
+        h.drain();
+        assert_eq!(h.metrics().unwrap().lookups, 0);
+    }
+
+    #[test]
+    fn lookup_many_matches_singles_and_preserves_order() {
+        let server = CamServer::new(DesignConfig::small_test(), DecodeBackend::Native, policy());
+        let h = server.spawn();
+        let mut rng = Rng::seed_from_u64(8);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 30, &mut rng);
+        for t in &tags {
+            h.insert(t.clone()).unwrap();
+        }
+        let singles: Vec<_> = tags.iter().map(|t| h.lookup(t.clone()).unwrap().addr).collect();
+        let bulk = h.lookup_many(tags.clone());
+        assert_eq!(bulk.len(), 30);
+        for (i, r) in bulk.iter().enumerate() {
+            assert_eq!(r.as_ref().unwrap().addr, singles[i], "order must be preserved");
+        }
+        assert!(h.lookup_many(Vec::new()).is_empty());
+    }
+
+    #[test]
+    fn server_exits_when_handles_drop() {
+        let server = CamServer::new(DesignConfig::small_test(), DecodeBackend::Native, policy());
+        let h = server.spawn();
+        let h2 = h.clone();
+        drop(h);
+        drop(h2);
+        // nothing to assert directly; the thread exiting keeps the process
+        // from hanging at test end (would deadlock `cargo test` otherwise)
+    }
+}

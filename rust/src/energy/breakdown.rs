@@ -1,0 +1,163 @@
+//! Per-component energy breakdown and the switching-activity counters that
+//! feed it.
+
+
+/// Switching activity of one CAM search — what the functional simulator
+//  ([`crate::cam::CamArray::search`]) actually observed.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SearchActivity {
+    /// Total sub-blocks in the array (β).
+    pub total_blocks: usize,
+    /// Sub-blocks that were compare-enabled this search.
+    pub enabled_blocks: usize,
+    /// Rows inside enabled blocks (= enabled_blocks × ζ).
+    pub enabled_rows: usize,
+    /// Enabled rows holding valid entries (these resolve full comparisons).
+    pub compared_rows: usize,
+    /// Valid rows whose tag matched the query exactly.
+    pub matched_rows: usize,
+    /// Enabled rows that mismatched (valid mismatches + invalid rows).
+    pub mismatched_rows: usize,
+    /// Exact number of bit positions compared (compared_rows × N).
+    pub compared_bits: usize,
+    /// Exact number of mismatching bit positions (ML discharge paths).
+    pub mismatch_bits: usize,
+    /// Tag width N.
+    pub tag_bits: usize,
+}
+
+impl SearchActivity {
+    /// Merge another search's counters into this one (for aggregating a
+    /// whole workload's activity).
+    pub fn accumulate(&mut self, other: &SearchActivity) {
+        self.total_blocks = other.total_blocks;
+        self.tag_bits = other.tag_bits;
+        self.enabled_blocks += other.enabled_blocks;
+        self.enabled_rows += other.enabled_rows;
+        self.compared_rows += other.compared_rows;
+        self.matched_rows += other.matched_rows;
+        self.mismatched_rows += other.mismatched_rows;
+        self.compared_bits += other.compared_bits;
+        self.mismatch_bits += other.mismatch_bits;
+    }
+}
+
+/// Energy of one search, split by physical component (femtojoules).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    /// Search-line gate+local-wire energy in enabled rows.
+    pub searchline_fj: f64,
+    /// Match-line precharge/evaluate energy in enabled rows.
+    pub matchline_fj: f64,
+    /// Un-gateable global search-data broadcast wire.
+    pub global_wire_fj: f64,
+    /// CNN weight-SRAM row reads (c rows of M bits).
+    pub sram_read_fj: f64,
+    /// CNN one-hot decoders.
+    pub decoder_fj: f64,
+    /// P_II AND/OR logic.
+    pub pii_logic_fj: f64,
+    /// Compare-enable line drivers (activated blocks).
+    pub enable_driver_fj: f64,
+    /// Per-row enable gating overhead on the precharge path.
+    pub enable_gate_fj: f64,
+}
+
+impl EnergyBreakdown {
+    /// Total energy per search in femtojoules.
+    pub fn total_fj(&self) -> f64 {
+        self.searchline_fj
+            + self.matchline_fj
+            + self.global_wire_fj
+            + self.sram_read_fj
+            + self.decoder_fj
+            + self.pii_logic_fj
+            + self.enable_driver_fj
+            + self.enable_gate_fj
+    }
+
+    /// The CNN classifier's share (everything that is not the CAM array).
+    pub fn cnn_fj(&self) -> f64 {
+        self.sram_read_fj + self.decoder_fj + self.pii_logic_fj + self.enable_driver_fj
+    }
+
+    /// The CAM array's share.
+    pub fn cam_fj(&self) -> f64 {
+        self.searchline_fj + self.matchline_fj + self.global_wire_fj + self.enable_gate_fj
+    }
+
+    /// Table II's metric: fJ/bit/search over an M×N array.
+    pub fn per_bit(&self, m: usize, n: usize) -> f64 {
+        self.total_fj() / (m as f64 * n as f64)
+    }
+
+    /// Element-wise sum (aggregate a workload, then divide by searches).
+    pub fn add(&mut self, other: &EnergyBreakdown) {
+        self.searchline_fj += other.searchline_fj;
+        self.matchline_fj += other.matchline_fj;
+        self.global_wire_fj += other.global_wire_fj;
+        self.sram_read_fj += other.sram_read_fj;
+        self.decoder_fj += other.decoder_fj;
+        self.pii_logic_fj += other.pii_logic_fj;
+        self.enable_driver_fj += other.enable_driver_fj;
+        self.enable_gate_fj += other.enable_gate_fj;
+    }
+
+    /// Scale every component (e.g. averaging, technology scaling).
+    pub fn scaled(&self, k: f64) -> EnergyBreakdown {
+        EnergyBreakdown {
+            searchline_fj: self.searchline_fj * k,
+            matchline_fj: self.matchline_fj * k,
+            global_wire_fj: self.global_wire_fj * k,
+            sram_read_fj: self.sram_read_fj * k,
+            decoder_fj: self.decoder_fj * k,
+            pii_logic_fj: self.pii_logic_fj * k,
+            enable_driver_fj: self.enable_driver_fj * k,
+            enable_gate_fj: self.enable_gate_fj * k,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_are_component_sums() {
+        let b = EnergyBreakdown {
+            searchline_fj: 1.0,
+            matchline_fj: 2.0,
+            global_wire_fj: 3.0,
+            sram_read_fj: 4.0,
+            decoder_fj: 5.0,
+            pii_logic_fj: 6.0,
+            enable_driver_fj: 7.0,
+            enable_gate_fj: 8.0,
+        };
+        assert_eq!(b.total_fj(), 36.0);
+        assert_eq!(b.cnn_fj(), 22.0);
+        assert_eq!(b.cam_fj(), 14.0);
+        assert!((b.cnn_fj() + b.cam_fj() - b.total_fj()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_bit_normalizes() {
+        let b = EnergyBreakdown { searchline_fj: 650.0, ..Default::default() };
+        assert!((b.per_bit(512, 128) - 650.0 / 65536.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accumulate_sums_activity() {
+        let mut a = SearchActivity { enabled_blocks: 2, enabled_rows: 16, ..Default::default() };
+        let b = SearchActivity { enabled_blocks: 3, enabled_rows: 24, ..Default::default() };
+        a.accumulate(&b);
+        assert_eq!(a.enabled_blocks, 5);
+        assert_eq!(a.enabled_rows, 40);
+    }
+
+    #[test]
+    fn scaled_is_linear() {
+        let b = EnergyBreakdown { matchline_fj: 10.0, sram_read_fj: 4.0, ..Default::default() };
+        assert_eq!(b.scaled(0.5).total_fj(), 7.0);
+    }
+}

@@ -1,0 +1,119 @@
+//! Calibrated energy primitives at the reference node (0.13 µm, 1.2 V).
+//!
+//! # Fitting procedure (documented substitution, DESIGN.md §6)
+//!
+//! Per-cell search energy in a CAM decomposes into three physically distinct
+//! components (Pagiamtzis & Sheikholeslami's survey [7]):
+//!
+//! 1. **search-line (SL)** — charging the differential search-line pair's
+//!    gate + local-wire capacitance through the cell's compare transistors;
+//! 2. **match-line (ML)** — precharging the ML and discharging it on a
+//!    mismatch (NOR) / evaluating the series chain (NAND);
+//! 3. **global search-data wire** — the un-gateable vertical broadcast wire
+//!    that spans the array height regardless of which sub-blocks are enabled
+//!    (hierarchical search-line schemes buffer the *local* SLs per block but
+//!    still drive the global wire).
+//!
+//! Anchors (Table II, our own SPECTRE rows in the paper):
+//!
+//! ```text
+//!   e_sl_cell + e_ml_nor  + e_global_wire = 2.39 fJ   (Ref. NOR, all enabled)
+//!   e_sl_cell + e_ml_nand + e_global_wire = 1.30 fJ   (Ref. NAND)
+//! ```
+//!
+//! with the ML share of a NOR cell's energy set to 60 % per [7] and the
+//! global wire at 0.01 fJ/row/bit (extracted-wire ballpark for 0.13 µm, a
+//! ~0.4 % effect on the conventional designs but the dominant *floor* of the
+//! proposed one).  Solving: `e_ml_nor = 1.43`, `e_sl_cell = 0.95`,
+//! `e_ml_nand = 0.34`.  The CNN-side primitives (SRAM read, decoder, logic)
+//! are standard 0.13 µm ballparks and are *not* fitted to any proposed-design
+//! number.
+
+
+/// Energy primitives (all femtojoules per event, at 0.13 µm / 1.2 V).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CalibrationConstants {
+    /// SL energy per *enabled* CAM cell per search (gate + local wire).
+    pub e_sl_cell: f64,
+    /// NOR-type ML precharge+evaluate energy per cell per search.
+    pub e_ml_nor: f64,
+    /// NAND-type ML energy per cell per search (series chain, low swing).
+    pub e_ml_nand: f64,
+    /// Global search-data broadcast wire, per row per bit, un-gateable.
+    pub e_global_wire: f64,
+    /// CNN weight-SRAM read energy per bit (word-line + bit-line precharge
+    /// amortized over the M-bit row).
+    pub e_sram_read_bit: f64,
+    /// One-hot decoder energy per output line per decode.
+    pub e_decoder_line: f64,
+    /// P_II logic (c-input AND + ζ-group OR) switching energy per neuron per
+    /// decode, activity-weighted (most gates don't toggle).
+    pub e_pii_logic_neuron: f64,
+    /// Compare-enable line driver energy per *activated* sub-block (drives ζ
+    /// rows' enable gating).
+    pub e_enable_driver_block: f64,
+    /// ML precharge-control overhead per enabled row (enable gating adds one
+    /// pass device on the precharge path).
+    pub e_enable_gate_row: f64,
+}
+
+impl CalibrationConstants {
+    /// The reference calibration at 0.13 µm / 1.2 V (see module docs).
+    pub const fn reference_130nm() -> Self {
+        CalibrationConstants {
+            e_sl_cell: 0.95,
+            e_ml_nor: 1.43,
+            e_ml_nand: 0.34,
+            e_global_wire: 0.01,
+            e_sram_read_bit: 1.5,
+            e_decoder_line: 2.0,
+            e_pii_logic_neuron: 0.05,
+            e_enable_driver_block: 5.0,
+            e_enable_gate_row: 0.5,
+        }
+    }
+
+    /// Per-cell search energy of a fully-enabled conventional cell with the
+    /// given match-line architecture.
+    pub fn conventional_cell_energy(&self, ml: crate::cam::MatchlineKind) -> f64 {
+        let ml_e = match ml {
+            crate::cam::MatchlineKind::Nor => self.e_ml_nor,
+            crate::cam::MatchlineKind::Nand => self.e_ml_nand,
+        };
+        self.e_sl_cell + ml_e + self.e_global_wire
+    }
+}
+
+impl Default for CalibrationConstants {
+    fn default() -> Self {
+        Self::reference_130nm()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cam::MatchlineKind;
+
+    #[test]
+    fn anchors_reproduce_table2_conventional_rows() {
+        let c = CalibrationConstants::reference_130nm();
+        // Ref. NOR: 2.39 fJ/bit/search, Ref. NAND: 1.30 fJ/bit/search.
+        assert!((c.conventional_cell_energy(MatchlineKind::Nor) - 2.39).abs() < 1e-9);
+        assert!((c.conventional_cell_energy(MatchlineKind::Nand) - 1.30).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ml_share_of_nor_cell_is_about_60_percent() {
+        // The [7]-survey split used in the fit.
+        let c = CalibrationConstants::reference_130nm();
+        let share = c.e_ml_nor / c.conventional_cell_energy(MatchlineKind::Nor);
+        assert!((0.55..0.65).contains(&share), "share = {share}");
+    }
+
+    #[test]
+    fn global_wire_is_a_small_fraction_of_conventional() {
+        let c = CalibrationConstants::reference_130nm();
+        assert!(c.e_global_wire / c.conventional_cell_energy(MatchlineKind::Nor) < 0.01);
+    }
+}

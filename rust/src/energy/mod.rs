@@ -1,0 +1,24 @@
+//! Dynamic-energy model — the SPECTRE substitute (DESIGN.md §2, §6).
+//!
+//! All energies are *switched-capacitance* dynamic energies, `E = α·C·V²`,
+//! expressed directly in femtojoules at the reference node (0.13 µm, 1.2 V)
+//! and rescaled to other nodes with [`crate::tech::scale_energy`].
+//!
+//! Calibration contract: the four CAM-cell primitives are fitted **once**
+//! so that the two *conventional* reference designs reproduce the paper's
+//! SPECTRE measurements (Table II: Ref. NAND = 1.30 fJ/bit/search, Ref. NOR
+//! = 2.39 fJ/bit/search at 512×128).  Every other number this module
+//! produces — the proposed design, all sweeps, all ablations, all other
+//! nodes — is a *prediction* of the same structural model.  The headline
+//! 9.5 % energy ratio is an output, not an input.
+
+pub mod breakdown;
+pub mod calib;
+pub mod model;
+
+pub use breakdown::{EnergyBreakdown, SearchActivity};
+pub use calib::CalibrationConstants;
+pub use model::{
+    cnn_decode_energy, conventional_search_energy, energy_from_activity, proposed_search_energy,
+    EnergyModel,
+};

@@ -1,0 +1,232 @@
+//! The energy model proper: conventional, proposed (analytic and
+//! activity-measured), and the CNN classifier's own consumption.
+
+use crate::cam::MatchlineKind;
+use crate::config::DesignConfig;
+use crate::tech::{self, TechNode};
+
+use super::breakdown::{EnergyBreakdown, SearchActivity};
+use super::calib::CalibrationConstants;
+
+/// Convenience wrapper binding a calibration to a design point.
+#[derive(Debug, Clone)]
+pub struct EnergyModel {
+    pub calib: CalibrationConstants,
+    pub cfg: DesignConfig,
+}
+
+impl EnergyModel {
+    pub fn new(cfg: DesignConfig) -> Self {
+        EnergyModel { calib: CalibrationConstants::reference_130nm(), cfg }
+    }
+
+    /// Conventional (monolithic) search energy at the config's node.
+    pub fn conventional(&self, ml: MatchlineKind) -> EnergyBreakdown {
+        let b = conventional_search_energy(self.cfg.m, self.cfg.n, ml, &self.calib);
+        rescale(b, self.cfg.tech())
+    }
+
+    /// Proposed-design energy using the closed-form expected activity
+    /// (uniform reduced tags), at the config's node.
+    pub fn proposed_expected(&self) -> EnergyBreakdown {
+        let b = proposed_search_energy(&self.cfg, &self.calib);
+        rescale(b, self.cfg.tech())
+    }
+
+    /// Per-search proposed-design energy from *measured* switching activity,
+    /// at the config's node.  `activity` may be the accumulation of
+    /// `searches` individual searches; the result is the per-search average.
+    pub fn proposed_measured(&self, activity: &SearchActivity, searches: usize) -> EnergyBreakdown {
+        let searches = searches.max(1) as f64;
+        let mut total = energy_from_activity(&self.cfg, &self.calib, activity, searches as usize);
+        let mut cnn = cnn_decode_energy(&self.cfg, &self.calib).scaled(searches);
+        cnn.enable_driver_fj = self.calib.e_enable_driver_block * activity.enabled_blocks as f64;
+        total.add(&cnn);
+        rescale(total.scaled(1.0 / searches), self.cfg.tech())
+    }
+}
+
+fn rescale(b: EnergyBreakdown, node: TechNode) -> EnergyBreakdown {
+    let k = tech::scale_energy(1.0, tech::NODE_130NM, node);
+    b.scaled(k)
+}
+
+/// Search energy of a conventional M×N CAM (all rows compare every cycle):
+/// every cell burns SL + ML + its share of global wire.
+pub fn conventional_search_energy(
+    m: usize,
+    n: usize,
+    ml: MatchlineKind,
+    calib: &CalibrationConstants,
+) -> EnergyBreakdown {
+    let cells = (m * n) as f64;
+    let ml_e = match ml {
+        MatchlineKind::Nor => calib.e_ml_nor,
+        MatchlineKind::Nand => calib.e_ml_nand,
+    };
+    EnergyBreakdown {
+        searchline_fj: cells * calib.e_sl_cell,
+        matchline_fj: cells * ml_e,
+        global_wire_fj: cells * calib.e_global_wire,
+        ..Default::default()
+    }
+}
+
+/// The CNN classifier's per-decode energy (Fig. 4): c one-hot decoders, one
+/// M-bit SRAM row read per cluster, and the P_II AND/OR logic.  The
+/// compare-enable drivers are activity-dependent and added by the caller.
+pub fn cnn_decode_energy(cfg: &DesignConfig, calib: &CalibrationConstants) -> EnergyBreakdown {
+    EnergyBreakdown {
+        decoder_fj: (cfg.cl()) as f64 * calib.e_decoder_line,
+        sram_read_fj: (cfg.c * cfg.m) as f64 * calib.e_sram_read_bit,
+        pii_logic_fj: cfg.m as f64 * calib.e_pii_logic_neuron,
+        ..Default::default()
+    }
+}
+
+/// Closed-form expected per-search energy of the proposed design under
+/// uniformly distributed reduced tags (the paper's design-point analysis):
+/// only `E[active blocks]·ζ` rows burn SL+ML energy; the global broadcast
+/// wire and the CNN always switch.
+pub fn proposed_search_energy(cfg: &DesignConfig, calib: &CalibrationConstants) -> EnergyBreakdown {
+    let blocks = cfg.expected_active_blocks();
+    let rows = blocks * cfg.zeta as f64;
+    let cells = rows * cfg.n as f64;
+    let ml_e = match cfg.ml_kind {
+        MatchlineKind::Nor => calib.e_ml_nor,
+        MatchlineKind::Nand => calib.e_ml_nand,
+    };
+    let mut b = cnn_decode_energy(cfg, calib);
+    b.searchline_fj = cells * calib.e_sl_cell;
+    b.matchline_fj = cells * ml_e;
+    b.global_wire_fj = (cfg.m * cfg.n) as f64 * calib.e_global_wire;
+    b.enable_driver_fj = blocks * calib.e_enable_driver_block;
+    b.enable_gate_fj = rows * calib.e_enable_gate_row;
+    b
+}
+
+/// CAM-side energy of `searches` searches whose accumulated switching
+/// activity is `activity` (no CNN components — see
+/// [`EnergyModel::proposed_measured`] which adds them per decode).  Enabled
+/// rows burn SL+ML; the global broadcast wire burns once per search.
+pub fn energy_from_activity(
+    cfg: &DesignConfig,
+    calib: &CalibrationConstants,
+    activity: &SearchActivity,
+    searches: usize,
+) -> EnergyBreakdown {
+    let cells = (activity.enabled_rows * cfg.n) as f64;
+    let ml_e = match cfg.ml_kind {
+        MatchlineKind::Nor => calib.e_ml_nor,
+        MatchlineKind::Nand => calib.e_ml_nand,
+    };
+    EnergyBreakdown {
+        searchline_fj: cells * calib.e_sl_cell,
+        matchline_fj: cells * ml_e,
+        global_wire_fj: searches as f64 * (cfg.m * cfg.n) as f64 * calib.e_global_wire,
+        enable_gate_fj: activity.enabled_rows as f64 * calib.e_enable_gate_row,
+        ..Default::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reference() -> DesignConfig {
+        DesignConfig::reference()
+    }
+
+    #[test]
+    fn conventional_nand_reproduces_paper_anchor() {
+        let cfg = reference();
+        let calib = CalibrationConstants::reference_130nm();
+        let b = conventional_search_energy(cfg.m, cfg.n, MatchlineKind::Nand, &calib);
+        let per_bit = b.per_bit(cfg.m, cfg.n);
+        assert!((per_bit - 1.30).abs() < 1e-9, "got {per_bit}");
+    }
+
+    #[test]
+    fn conventional_nor_reproduces_paper_anchor() {
+        let cfg = reference();
+        let calib = CalibrationConstants::reference_130nm();
+        let b = conventional_search_energy(cfg.m, cfg.n, MatchlineKind::Nor, &calib);
+        let per_bit = b.per_bit(cfg.m, cfg.n);
+        assert!((per_bit - 2.39).abs() < 1e-9, "got {per_bit}");
+    }
+
+    #[test]
+    fn proposed_prediction_lands_near_paper() {
+        // Paper: 0.124 fJ/bit/search (9.5 % of Ref. NAND). Our structural
+        // prediction must land in the same band without being fitted to it.
+        let cfg = reference();
+        let calib = CalibrationConstants::reference_130nm();
+        let per_bit = proposed_search_energy(&cfg, &calib).per_bit(cfg.m, cfg.n);
+        assert!(
+            (0.105..0.145).contains(&per_bit),
+            "proposed prediction {per_bit} fJ/bit/search out of band"
+        );
+        let ratio = per_bit / 1.30;
+        assert!((0.08..0.11).contains(&ratio), "energy ratio {ratio} out of band");
+    }
+
+    #[test]
+    fn cnn_share_is_dominated_by_sram_reads() {
+        let cfg = reference();
+        let calib = CalibrationConstants::reference_130nm();
+        let b = cnn_decode_energy(&cfg, &calib);
+        assert!(b.sram_read_fj > 0.8 * b.total_fj());
+    }
+
+    #[test]
+    fn proposed_beats_both_conventionals_at_reference_point() {
+        let m = EnergyModel::new(reference());
+        let p = m.proposed_expected().total_fj();
+        assert!(p < m.conventional(MatchlineKind::Nand).total_fj());
+        assert!(p < m.conventional(MatchlineKind::Nor).total_fj());
+    }
+
+    #[test]
+    fn proposed_degrades_gracefully_with_more_ambiguity() {
+        // Fewer reduced-tag bits (smaller q) ⇒ more active blocks ⇒ more energy.
+        let calib = CalibrationConstants::reference_130nm();
+        let mut prev = 0.0;
+        for c in (1..=3).rev() {
+            let cfg = DesignConfig { c, ..reference() };
+            let e = proposed_search_energy(&cfg, &calib).total_fj();
+            assert!(e > prev, "energy must rise as q shrinks: {e} vs {prev}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn measured_matches_expected_on_exact_activity() {
+        // Feed the measured path the exact expected activity — it must agree
+        // with the closed form to first order.
+        let cfg = reference();
+        let model = EnergyModel::new(cfg.clone());
+        let blocks = cfg.expected_active_blocks();
+        let act = SearchActivity {
+            total_blocks: cfg.beta(),
+            enabled_blocks: blocks.round() as usize,
+            enabled_rows: (blocks * cfg.zeta as f64).round() as usize,
+            tag_bits: cfg.n,
+            ..Default::default()
+        };
+        let measured = model.proposed_measured(&act, 1).total_fj();
+        let expected = model.proposed_expected().total_fj();
+        let rel = (measured - expected).abs() / expected;
+        assert!(rel < 0.02, "measured {measured} vs expected {expected}");
+    }
+
+    #[test]
+    fn energy_scales_to_90nm_like_the_paper() {
+        let mut cfg = reference();
+        cfg.node = "90nm".into();
+        let (m, n) = (cfg.m, cfg.n);
+        let model = EnergyModel::new(cfg);
+        let per_bit = model.proposed_expected().per_bit(m, n);
+        // Paper §IV: 0.060 fJ/bit/search at 90 nm / 1.0 V.
+        assert!((0.050..0.070).contains(&per_bit), "got {per_bit}");
+    }
+}

@@ -1,0 +1,57 @@
+//! # cscam — Low-power CAM based on clustered-sparse-networks
+//!
+//! Full-system reproduction of Jarollahi, Gripon, Onizawa & Gross,
+//! *"A Low-Power Content-Addressable-Memory Based on Clustered-Sparse-Networks"*
+//! (ASAP 2013).
+//!
+//! The paper couples a clustered sparse network (CNN) classifier to a CAM
+//! array split into `β = M/ζ` independently compare-enabled sub-blocks: the
+//! CNN decodes a reduced-length tag and enables, on average, only ~2
+//! sub-blocks, eliminating most of the parallel match-line comparisons that
+//! dominate CAM search energy.
+//!
+//! ## Layout (three-layer architecture, see DESIGN.md)
+//!
+//! - [`cnn`] — the clustered-sparse-network classifier (bit-packed native
+//!   implementation: training, global decode, tag-bit selection).
+//! - [`cam`] — functional + circuit-level model of the sub-blocked CAM array
+//!   (Fig. 5): XOR/NAND/NOR cells, match-lines, compare-enables.
+//! - [`energy`], [`timing`], [`transistor`] — the SPECTRE-substitute circuit
+//!   simulator: switched-capacitance energy, logical-effort delay, and
+//!   structural transistor counting (calibration documented in DESIGN.md §6).
+//! - [`tech`] — CMOS technology nodes and the scaling method of Huang &
+//!   Hwang [6] used for the paper's 90 nm projection.
+//! - [`baselines`] — conventional NAND/NOR references, the PB-CAM
+//!   precomputation baseline, and the literature anchor rows of Table II.
+//! - [`workload`] — tag/trace generators (uniform, correlated, Zipf,
+//!   synthetic TLB and router/ACL traces).
+//! - [`stats`] — estimators for the ambiguity statistics of Fig. 3.
+//! - [`config`], [`sweep`] — design-point configuration and the Table I
+//!   design-space exploration.
+//! - [`runtime`] — PJRT bridge: loads the AOT-lowered HLO text artifacts
+//!   produced by `python/compile/aot.py` and executes them on the request
+//!   path (Python is build-time only).
+//! - [`coordinator`] — the L3 serving system: request router, dynamic
+//!   batcher, lookup engine, insert/delete paths, metrics.
+
+pub mod baselines;
+pub mod bits;
+pub mod cam;
+pub mod cnn;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod runtime;
+pub mod stats;
+pub mod sweep;
+pub mod tech;
+pub mod timing;
+pub mod transistor;
+pub mod util;
+pub mod workload;
+
+pub use config::DesignConfig;
+pub use coordinator::engine::{LookupEngine, LookupOutcome};
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,301 @@
+//! `cscam` — CLI for the clustered-sparse-network CAM reproduction.
+//!
+//! Subcommands map one-to-one onto the paper's artifacts:
+//! * `fig3`   — E(#comparisons) vs q Monte-Carlo sweep (Fig. 3);
+//! * `table2` — energy/delay comparison table (Table II + headline ratios);
+//! * `sweep`  — the 15-point design-space exploration behind Table I;
+//! * `serve`  — run the lookup engine on a synthetic workload through the
+//!   threaded coordinator (native or PJRT decode backend);
+//! * `info`   — print the resolved design point and model predictions.
+//!
+//! Global option: `--config <file>` loads a `key = value` design point
+//! (defaults to the Table I reference).
+
+use anyhow::{bail, Result};
+
+use cscam::baselines::{anchor_rows, PbCam};
+use cscam::cam::MatchlineKind;
+use cscam::config::DesignConfig;
+use cscam::coordinator::{BatchPolicy, CamServer, DecodeBackend};
+use cscam::energy::{conventional_search_energy, proposed_search_energy, CalibrationConstants};
+use cscam::stats::{expected_comparisons, simulate_lambda};
+use cscam::sweep::{run_sweep, SweepConstraints};
+use cscam::tech;
+use cscam::timing::{conventional_delay, proposed_delay, scaled_delay, DelayConstants};
+use cscam::transistor::{overhead_vs_nand, TransistorAssumptions};
+use cscam::util::cli::Args;
+use cscam::util::Rng;
+use cscam::workload::{QueryMix, TagDistribution};
+
+const USAGE: &str = "\
+cscam — low-power CAM via clustered-sparse-networks (ASAP 2013 reproduction)
+
+USAGE: cscam [--config FILE] <COMMAND> [OPTIONS]
+
+COMMANDS:
+  fig3    reproduce Fig. 3      --sizes 256,512,1024  --trials N  --seed S
+  table2  reproduce Table II    --node 90nm (optional projection)
+  sweep   reproduce Table I     --m 512 --n 128
+  serve   run the coordinator   --lookups N --hit-ratio R --pjrt --max-batch B
+                                --threads T --seed S
+  info    print the design point and all model predictions
+";
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(raw, &["pjrt", "help"])?;
+    if args.flag("help") || args.positional().is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let cfg = match args.get("config") {
+        Some(p) => DesignConfig::from_kv_file(std::path::Path::new(p))?,
+        None => DesignConfig::reference(),
+    };
+    match args.positional()[0].as_str() {
+        "fig3" => fig3(&args),
+        "table2" => table2(&cfg, &args),
+        "sweep" => sweep_cmd(&args),
+        "serve" => serve(&cfg, &args),
+        "info" => info(&cfg),
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn fig3(args: &Args) -> Result<()> {
+    let sizes: Vec<usize> = args.get_list("sizes", vec![256, 512, 1024])?;
+    let trials: usize = args.get_parse("trials", 1_000_000)?;
+    let seed: u64 = args.get_parse("seed", 42)?;
+
+    println!("# Fig. 3 — E[#comparisons] vs reduced-tag bits q (ζ=1 view)");
+    print!("{:>4}", "q");
+    for m in &sizes {
+        print!("{:>12}", format!("M={m}"));
+    }
+    println!();
+    let mut rng = Rng::seed_from_u64(seed);
+    let qmax = sizes.iter().map(|m| (*m as f64).log2() as usize + 6).max().unwrap();
+    let qmin = 4;
+    let per_point = (trials / (qmax - qmin + 1)).max(1000);
+    for q in qmin..=qmax {
+        print!("{q:>4}");
+        for &m in &sizes {
+            let est = simulate_lambda(m, q, 1, per_point, &mut rng);
+            print!("{:>12.4}", est.mean_lambda);
+        }
+        println!();
+    }
+    println!(
+        "\nclosed form: E[λ] = 1 + (M−1)/2^q; Table I point (M=512, q=9): {:.4}",
+        cscam::stats::expected_lambda(512, 9)
+    );
+    Ok(())
+}
+
+fn table2(cfg: &DesignConfig, args: &Args) -> Result<()> {
+    let calib = CalibrationConstants::reference_130nm();
+    let delays = DelayConstants::reference();
+    let n130 = tech::NODE_130NM;
+
+    println!("# Table II — result comparisons (512×128 for our rows)");
+    println!(
+        "{:<12} {:>11} {:>8} {:>10} {:>15} {:>20}",
+        "design", "config", "tech", "delay[ns]", "E[fJ/bit/srch]", "source"
+    );
+    for r in anchor_rows() {
+        println!(
+            "{:<12} {:>11} {:>8} {:>10.3} {:>15.3} {:>20}",
+            r.name,
+            format!("{}x{}", r.config.0, r.config.1),
+            r.node.name,
+            r.delay_ns,
+            r.energy_fj_bit,
+            "published"
+        );
+    }
+
+    let nand_e =
+        conventional_search_energy(cfg.m, cfg.n, MatchlineKind::Nand, &calib).per_bit(cfg.m, cfg.n);
+    let nor_e =
+        conventional_search_energy(cfg.m, cfg.n, MatchlineKind::Nor, &calib).per_bit(cfg.m, cfg.n);
+    let prop_e = proposed_search_energy(cfg, &calib).per_bit(cfg.m, cfg.n);
+    let nand_d = conventional_delay(cfg.m, cfg.n, MatchlineKind::Nand, &delays, n130);
+    let nor_d = conventional_delay(cfg.m, cfg.n, MatchlineKind::Nor, &delays, n130);
+    let prop_d = proposed_delay(cfg, &delays);
+
+    for (name, d, e) in [
+        ("Ref. NAND", nand_d.cycle_ns, nand_e),
+        ("Ref. NOR", nor_d.cycle_ns, nor_e),
+        ("Proposed", prop_d.cycle_ns, prop_e),
+    ] {
+        println!(
+            "{:<12} {:>11} {:>8} {:>10.3} {:>15.3} {:>20}",
+            name,
+            format!("{}x{}", cfg.m, cfg.n),
+            "0.13um",
+            d,
+            e,
+            "model (this work)"
+        );
+    }
+
+    // PB-CAM comparison row (functional baseline, §I)
+    let pb_full = PbCam::expected_full_comparisons(cfg.m, cfg.n);
+    let pb = PbCam::new(cfg.m, cfg.n);
+    let pb_e = pb.search_energy(pb_full.round() as usize, &calib).per_bit(cfg.m, cfg.n);
+    println!(
+        "{:<12} {:>11} {:>8} {:>10} {:>15.3} {:>20}",
+        "PB-CAM [4]",
+        format!("{}x{}", cfg.m, cfg.n),
+        "0.13um",
+        "-",
+        pb_e,
+        "model (this work)"
+    );
+
+    println!("\n# headline ratios vs Ref. NAND (paper: energy 9.5 %, delay 30.4 %, +3.4 % transistors)");
+    println!("energy  : {:.1} %", 100.0 * prop_e / nand_e);
+    println!("delay   : {:.1} %", 100.0 * prop_d.cycle_ns / nand_d.cycle_ns);
+    let ovh = overhead_vs_nand(cfg, &TransistorAssumptions::default());
+    println!("trans.  : +{:.1} %", 100.0 * ovh);
+    println!("E[comparisons]/search: {:.2} (of {})", cfg.expected_comparisons(), cfg.m);
+
+    if let Some(name) = args.get("node") {
+        let Some(target) = tech::node_by_name(name) else { bail!("unknown node {name}") };
+        let e90 = tech::scale_energy(prop_e, n130, target);
+        let d90 = scaled_delay(prop_d, n130, target);
+        println!(
+            "\n# projected to {} / {:.1} V (method of [6]; paper @90nm: 0.060 fJ/bit/search, 0.582 ns)",
+            target.name, target.vdd
+        );
+        println!("proposed: {:.3} fJ/bit/search, {:.3} ns", e90, d90.cycle_ns);
+    }
+    Ok(())
+}
+
+fn sweep_cmd(args: &Args) -> Result<()> {
+    let m: usize = args.get_parse("m", 512)?;
+    let n: usize = args.get_parse("n", 128)?;
+    let constraints = SweepConstraints::default();
+    println!("# Table I design-space exploration: M={m}, N={n}");
+    println!(
+        "{:<4} {:<4} {:<5} {:<4} {:<5} {:>15} {:>10} {:>9} {:>8} {:>9}",
+        "c", "l", "zeta", "q", "beta", "E[fJ/bit/srch]", "cycle[ns]", "overhead", "E[cmp]", "feasible"
+    );
+    for p in run_sweep(m, n, &constraints) {
+        println!(
+            "{:<4} {:<4} {:<5} {:<4} {:<5} {:>15.4} {:>10.3} {:>8.1}% {:>8.2} {:>9}",
+            p.cfg.c,
+            p.cfg.l,
+            p.cfg.zeta,
+            p.cfg.q(),
+            p.cfg.beta(),
+            p.energy_fj_bit,
+            p.cycle_ns,
+            100.0 * p.overhead,
+            p.comparisons,
+            if p.feasible { "yes" } else { "no" }
+        );
+    }
+    if let Some(best) = cscam::sweep::select_design(m, n, &constraints) {
+        println!(
+            "\nselected: c={} l={} ζ={} (q={}, β={}) — Table I: c=3 l=8 ζ=8 (q=9, β=64)",
+            best.cfg.c,
+            best.cfg.l,
+            best.cfg.zeta,
+            best.cfg.q(),
+            best.cfg.beta()
+        );
+    }
+    Ok(())
+}
+
+fn serve(cfg: &DesignConfig, args: &Args) -> Result<()> {
+    let lookups: usize = args.get_parse("lookups", 10_000)?;
+    let hit_ratio: f64 = args.get_parse("hit-ratio", 0.9)?;
+    let pjrt = args.flag("pjrt");
+    let max_batch: usize = args.get_parse("max-batch", 64)?;
+    let threads: usize = args.get_parse("threads", 8)?;
+    let seed: u64 = args.get_parse("seed", 7)?;
+
+    let backend = if pjrt {
+        let dir = cscam::runtime::default_artifact_dir();
+        let store = cscam::runtime::ArtifactStore::load(&dir)?;
+        anyhow::ensure!(
+            store.manifest().config.m == cfg.m,
+            "artifact geometry (M={}) != config (M={}); re-run `make artifacts`",
+            store.manifest().config.m,
+            cfg.m
+        );
+        DecodeBackend::Pjrt(Box::new(store))
+    } else {
+        DecodeBackend::Native
+    };
+    let policy = BatchPolicy { max_batch, ..Default::default() };
+    let h = CamServer::new(cfg.clone(), backend, policy).spawn();
+
+    let mut rng = Rng::seed_from_u64(seed);
+    let stored = TagDistribution::Uniform.sample_distinct(cfg.n, cfg.m, &mut rng);
+    for t in &stored {
+        h.insert(t.clone()).expect("insert");
+    }
+    let mix = QueryMix { hit_ratio, zipf_s: 0.0 };
+
+    // pre-draw queries, then fire from `threads` client threads
+    let mut queries: Vec<Vec<cscam::bits::BitVec>> = vec![Vec::new(); threads];
+    for i in 0..lookups {
+        let (tag, _) = mix.sample(&stored, cfg.n, &mut rng);
+        queries[i % threads].push(tag);
+    }
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for qs in queries {
+        let h = h.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut hits = 0usize;
+            for t in qs {
+                hits += h.lookup(t).expect("lookup").addr.is_some() as usize;
+            }
+            hits
+        }));
+    }
+    let hits: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+    let wall = t0.elapsed();
+
+    let m = h.metrics().expect("metrics");
+    println!("# serve — backend={}, {threads} client threads", if pjrt { "pjrt" } else { "native" });
+    println!("{}", m.summary(cfg.m, cfg.n));
+    println!(
+        "hits: {hits}/{lookups}; throughput: {:.0} lookups/s (wall {:.3} s), mean batch {:.1}",
+        lookups as f64 / wall.as_secs_f64(),
+        wall.as_secs_f64(),
+        m.batch_size.mean()
+    );
+    Ok(())
+}
+
+fn info(cfg: &DesignConfig) -> Result<()> {
+    let calib = CalibrationConstants::reference_130nm();
+    let delays = DelayConstants::reference();
+    println!("design point:\n{}", cfg.to_kv());
+    println!("q = {} bits, β = {} sub-blocks, k = {}", cfg.q(), cfg.beta(), cfg.k());
+    println!(
+        "E[λ] = {:.4}, E[blocks] = {:.4}, E[comparisons] = {:.2}",
+        cfg.expected_lambda(),
+        cfg.expected_active_blocks(),
+        cfg.expected_comparisons()
+    );
+    let e = proposed_search_energy(cfg, &calib);
+    println!(
+        "energy/search = {:.1} fJ ({:.4} fJ/bit/search)",
+        e.total_fj(),
+        e.per_bit(cfg.m, cfg.n)
+    );
+    println!("  CNN share: {:.1} fJ, CAM share: {:.1} fJ", e.cnn_fj(), e.cam_fj());
+    let d = proposed_delay(cfg, &delays);
+    println!("cycle = {:.3} ns, latency = {:.3} ns", d.cycle_ns, d.latency_ns);
+    let ovh = overhead_vs_nand(cfg, &TransistorAssumptions::default());
+    println!("transistor overhead vs Ref. NAND: +{:.2} %", 100.0 * ovh);
+    println!("closed-form comparisons check: {:.3}", expected_comparisons(cfg.m, cfg.q(), cfg.zeta));
+    Ok(())
+}

@@ -1,0 +1,182 @@
+//! The artifact manifest emitted by `python/compile/aot.py`, parsed with the
+//! in-tree JSON parser ([`crate::util::json`]).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context};
+
+use crate::util::json::JsonValue;
+use crate::Result;
+
+/// CNN geometry the artifacts were lowered for (mirrors `CnnConfig`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestConfig {
+    pub m: usize,
+    pub c: usize,
+    pub l: usize,
+    pub zeta: usize,
+    pub q: usize,
+    pub beta: usize,
+}
+
+/// A tensor descriptor in the manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorInfo {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactInfo {
+    pub kind: String,
+    pub batch: Option<usize>,
+    pub entries: Option<usize>,
+    pub inputs: Vec<TensorInfo>,
+    pub outputs: Vec<TensorInfo>,
+}
+
+/// `manifest.json` as a whole.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    pub config: ManifestConfig,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+}
+
+fn tensor(v: &JsonValue) -> Result<TensorInfo> {
+    Ok(TensorInfo {
+        name: v.req("name")?.as_str()?.to_string(),
+        dtype: v.req("dtype")?.as_str()?.to_string(),
+        shape: v.req("shape")?.as_array()?.iter().map(|s| s.as_usize()).collect::<Result<_>>()?,
+    })
+}
+
+impl Manifest {
+    /// Parse from a JSON string.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = JsonValue::parse(text).context("parsing manifest.json")?;
+        let cfg = v.req("config")?;
+        let config = ManifestConfig {
+            m: cfg.req("m")?.as_usize()?,
+            c: cfg.req("c")?.as_usize()?,
+            l: cfg.req("l")?.as_usize()?,
+            zeta: cfg.req("zeta")?.as_usize()?,
+            q: cfg.req("q")?.as_usize()?,
+            beta: cfg.req("beta")?.as_usize()?,
+        };
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in v.req("artifacts")?.as_object()? {
+            let info = ArtifactInfo {
+                kind: a.req("kind")?.as_str()?.to_string(),
+                batch: match a.get("batch") {
+                    Some(b) => Some(b.as_usize()?),
+                    None => None,
+                },
+                entries: match a.get("entries") {
+                    Some(e) => Some(e.as_usize()?),
+                    None => None,
+                },
+                inputs: a.req("inputs")?.as_array()?.iter().map(tensor).collect::<Result<_>>()?,
+                outputs: a.req("outputs")?.as_array()?.iter().map(tensor).collect::<Result<_>>()?,
+            };
+            artifacts.insert(name.clone(), info);
+        }
+        let m = Manifest { config, artifacts };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::from_json(&text)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let c = &self.config;
+        ensure!(c.m > 0 && c.c > 0 && c.l > 0 && c.zeta > 0, "non-positive geometry");
+        ensure!(c.m % c.zeta == 0, "ζ must divide M");
+        ensure!(c.beta == c.m / c.zeta, "β inconsistent with M/ζ");
+        ensure!(c.q == c.c * (c.l.trailing_zeros() as usize), "q inconsistent with c·log2(l)");
+        for (name, a) in &self.artifacts {
+            ensure!(!a.inputs.is_empty(), "artifact {name} has no inputs");
+            ensure!(!a.outputs.is_empty(), "artifact {name} has no outputs");
+            if a.kind == "decode" {
+                let Some(b) = a.batch else { bail!("decode {name} missing batch") };
+                ensure!(
+                    a.outputs[0].shape == vec![b, c.beta],
+                    "decode {name} enables shape mismatch"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> String {
+        r#"{
+            "config": {"m": 64, "c": 3, "l": 8, "zeta": 8, "q": 9, "beta": 8},
+            "artifacts": {
+                "gd_decode_b2": {
+                    "kind": "decode",
+                    "batch": 2,
+                    "inputs": [
+                        {"name": "idx", "dtype": "s32", "shape": [2, 3]},
+                        {"name": "w", "dtype": "f32", "shape": [24, 64]}
+                    ],
+                    "outputs": [
+                        {"name": "enables", "dtype": "f32", "shape": [2, 8]},
+                        {"name": "lam", "dtype": "s32", "shape": [2]}
+                    ]
+                }
+            }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parse_and_validate() {
+        let m = Manifest::from_json(&sample_json()).unwrap();
+        assert_eq!(m.config.beta, 8);
+        assert_eq!(m.artifacts["gd_decode_b2"].batch, Some(2));
+        assert_eq!(m.artifacts["gd_decode_b2"].inputs[1].shape, vec![24, 64]);
+    }
+
+    #[test]
+    fn validation_rejects_inconsistent_beta() {
+        let mut m = Manifest::from_json(&sample_json()).unwrap();
+        m.config.beta = 9;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_q() {
+        let mut m = Manifest::from_json(&sample_json()).unwrap();
+        m.config.q = 10;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn validation_rejects_enable_shape_mismatch() {
+        let mut m = Manifest::from_json(&sample_json()).unwrap();
+        m.artifacts.get_mut("gd_decode_b2").unwrap().outputs[0].shape = vec![2, 9];
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_built() {
+        let dir = crate::runtime::default_artifact_dir();
+        let p = dir.join("manifest.json");
+        if p.exists() {
+            let m = Manifest::load(&p).unwrap();
+            assert!(m.artifacts.keys().any(|k| k.starts_with("gd_decode_b")));
+        }
+    }
+}

@@ -1,0 +1,263 @@
+//! PJRT runtime — loads the AOT-lowered HLO text artifacts and executes
+//! them on the request path (the L3 ↔ L2 bridge).
+//!
+//! `python/compile/aot.py` lowers the JAX decode/train graphs once at build
+//! time (`make artifacts`) into `artifacts/*.hlo.txt` plus `manifest.json`;
+//! this module compiles them on a [`xla::PjRtClient`] at startup and keeps
+//! the weight matrix resident as a device buffer, so a lookup only ships
+//! `B × c` i32 cluster indices in and `B × β` enable bits (+ λ) out.
+//! Python never runs after build.
+//!
+//! HLO *text* is the interchange format — the crate's xla_extension 0.5.1
+//! rejects jax ≥ 0.5 serialized protos (64-bit ids); the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+pub mod manifest;
+
+pub use manifest::{ArtifactInfo, Manifest};
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::anyhow;
+
+use crate::bits::BitVec;
+use crate::Result;
+
+/// Outputs of one batched decode through the PJRT artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecodeOutput {
+    /// Per-query compare-enable masks (β bits each).
+    pub enables: Vec<BitVec>,
+    /// Per-query λ (number of activated P_II neurons).
+    pub lambda: Vec<u32>,
+}
+
+/// Compiled artifact store: one executable per decode batch size, plus the
+/// train / add-entry graphs, plus the resident weight buffer.
+pub struct ArtifactStore {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    decode: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    train: Option<xla::PjRtLoadedExecutable>,
+    /// (c·l) × M weight matrix as a resident device buffer.
+    weights: Option<xla::PjRtBuffer>,
+}
+
+impl std::fmt::Debug for ArtifactStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ArtifactStore")
+            .field("platform", &self.client.platform_name())
+            .field("batches", &self.decode.keys().collect::<Vec<_>>())
+            .field("has_train", &self.train.is_some())
+            .field("has_weights", &self.weights.is_some())
+            .finish()
+    }
+}
+
+impl ArtifactStore {
+    /// Load and compile every artifact listed in `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+
+        let mut decode = BTreeMap::new();
+        let mut train = None;
+        for (name, info) in &manifest.artifacts {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            match info.kind.as_str() {
+                "decode" => {
+                    let batch = info.batch.ok_or_else(|| anyhow!("decode artifact without batch"))?;
+                    decode.insert(batch, compile_hlo(&client, &path)?);
+                }
+                "train" => train = Some(compile_hlo(&client, &path)?),
+                // add_entry loads lazily if ever needed; the native path
+                // handles inserts (see coordinator::engine).
+                _ => {}
+            }
+        }
+        anyhow::ensure!(!decode.is_empty(), "no decode artifacts in manifest");
+        Ok(ArtifactStore { client, manifest, decode, train, weights: None })
+    }
+
+    /// Geometry the artifacts were lowered for.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Batch sizes with a compiled decode executable, ascending.
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.decode.keys().copied().collect()
+    }
+
+    /// Smallest compiled batch ≥ `n` (or the largest available).
+    pub fn pick_batch(&self, n: usize) -> usize {
+        self.decode
+            .keys()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| *self.decode.keys().last().expect("non-empty"))
+    }
+
+    /// Upload the CNN weight rows (the Fig. 4 SRAM contents) as the resident
+    /// device buffer used by subsequent [`Self::decode`] calls.
+    pub fn set_weights(&mut self, rows: &[BitVec]) -> Result<()> {
+        let cfg = &self.manifest.config;
+        anyhow::ensure!(rows.len() == cfg.c * cfg.l, "expected c·l weight rows");
+        let mut host = vec![0f32; cfg.c * cfg.l * cfg.m];
+        for (r, row) in rows.iter().enumerate() {
+            anyhow::ensure!(row.len() == cfg.m, "weight row width mismatch");
+            for i in row.iter_ones() {
+                host[r * cfg.m + i] = 1.0;
+            }
+        }
+        let buf = self
+            .client
+            .buffer_from_host_buffer(&host, &[cfg.c * cfg.l, cfg.m], None)
+            .map_err(|e| anyhow!("upload weights: {e}"))?;
+        self.weights = Some(buf);
+        Ok(())
+    }
+
+    /// Batched decode: `idx` holds `c` cluster indices per query.  The
+    /// queries are padded up to a compiled batch size with index 0 and the
+    /// padding rows are dropped from the output.
+    pub fn decode(&self, idx: &[Vec<u16>]) -> Result<DecodeOutput> {
+        let cfg = &self.manifest.config;
+        let weights =
+            self.weights.as_ref().ok_or_else(|| anyhow!("weights not uploaded; call set_weights"))?;
+        anyhow::ensure!(!idx.is_empty(), "empty decode batch");
+        let batch = self.pick_batch(idx.len());
+        anyhow::ensure!(idx.len() <= batch, "batch {} exceeds compiled sizes", idx.len());
+        let exe = &self.decode[&batch];
+
+        let mut host = vec![0i32; batch * cfg.c];
+        for (i, q) in idx.iter().enumerate() {
+            anyhow::ensure!(q.len() == cfg.c, "query must carry c cluster indices");
+            for (j, &v) in q.iter().enumerate() {
+                host[i * cfg.c + j] = v as i32;
+            }
+        }
+        let idx_buf = self
+            .client
+            .buffer_from_host_buffer(&host, &[batch, cfg.c], None)
+            .map_err(|e| anyhow!("upload idx: {e}"))?;
+
+        let outs = exe.execute_b(&[&idx_buf, weights]).map_err(|e| anyhow!("execute: {e}"))?;
+        let lit = outs[0][0].to_literal_sync().map_err(|e| anyhow!("fetch: {e}"))?;
+        let (en_lit, lam_lit) = lit.to_tuple2().map_err(|e| anyhow!("untuple: {e}"))?;
+        let en: Vec<f32> = en_lit.to_vec().map_err(|e| anyhow!("enables: {e}"))?;
+        let lam: Vec<i32> = lam_lit.to_vec().map_err(|e| anyhow!("lambda: {e}"))?;
+
+        let beta = cfg.beta;
+        let mut enables = Vec::with_capacity(idx.len());
+        let mut lambda = Vec::with_capacity(idx.len());
+        for i in 0..idx.len() {
+            let mut bv = BitVec::zeros(beta);
+            for b in 0..beta {
+                if en[i * beta + b] != 0.0 {
+                    bv.set(b, true);
+                }
+            }
+            enables.push(bv);
+            lambda.push(lam[i] as u32);
+        }
+        Ok(DecodeOutput { enables, lambda })
+    }
+
+    /// Full retrain through the PJRT train artifact: takes the M stored
+    /// entries' cluster indices and addresses, produces the weight matrix
+    /// and installs it as the resident buffer.  Returns the weight rows.
+    pub fn train(&mut self, idx: &[Vec<u16>], addr: &[u32]) -> Result<Vec<BitVec>> {
+        let cfg = self.manifest.config.clone();
+        let exe = self.train.as_ref().ok_or_else(|| anyhow!("no train artifact"))?;
+        anyhow::ensure!(idx.len() == cfg.m && addr.len() == cfg.m, "train expects exactly M entries");
+
+        let mut idx_host = vec![0i32; cfg.m * cfg.c];
+        for (i, q) in idx.iter().enumerate() {
+            for (j, &v) in q.iter().enumerate() {
+                idx_host[i * cfg.c + j] = v as i32;
+            }
+        }
+        let addr_host: Vec<i32> = addr.iter().map(|&a| a as i32).collect();
+        let idx_buf = self
+            .client
+            .buffer_from_host_buffer(&idx_host, &[cfg.m, cfg.c], None)
+            .map_err(|e| anyhow!("upload idx: {e}"))?;
+        let addr_buf = self
+            .client
+            .buffer_from_host_buffer(&addr_host, &[cfg.m], None)
+            .map_err(|e| anyhow!("upload addr: {e}"))?;
+
+        let outs = exe.execute_b(&[&idx_buf, &addr_buf]).map_err(|e| anyhow!("execute: {e}"))?;
+        let lit = outs[0][0].to_literal_sync().map_err(|e| anyhow!("fetch: {e}"))?;
+        let w_lit = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+        let w: Vec<f32> = w_lit.to_vec().map_err(|e| anyhow!("weights: {e}"))?;
+
+        let mut rows = Vec::with_capacity(cfg.c * cfg.l);
+        for r in 0..cfg.c * cfg.l {
+            let mut bv = BitVec::zeros(cfg.m);
+            for m in 0..cfg.m {
+                if w[r * cfg.m + m] != 0.0 {
+                    bv.set(m, true);
+                }
+            }
+            rows.push(bv);
+        }
+        self.set_weights(&rows)?;
+        Ok(rows)
+    }
+}
+
+fn compile_hlo(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).map_err(|e| anyhow!("compile {}: {e}", path.display()))
+}
+
+/// Locate the artifacts directory: `$CSCAM_ARTIFACTS`, else `./artifacts`,
+/// else `<crate root>/artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("CSCAM_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.join("manifest.json").exists() {
+        return cwd;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True if AOT artifacts are present (tests skip PJRT paths otherwise).
+pub fn artifacts_available() -> bool {
+    default_artifact_dir().join("manifest.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT-dependent tests live in rust/tests/pjrt_roundtrip.rs (they need
+    // `make artifacts` to have run).  Here: manifest-independent logic.
+
+    #[test]
+    fn pick_batch_prefers_smallest_fit() {
+        // Synthesize a store-shaped map (no PJRT needed for this logic).
+        let sizes = [1usize, 16, 64];
+        let pick = |n: usize| sizes.iter().copied().find(|&b| b >= n).unwrap_or(64);
+        assert_eq!(pick(1), 1);
+        assert_eq!(pick(2), 16);
+        assert_eq!(pick(16), 16);
+        assert_eq!(pick(17), 64);
+        assert_eq!(pick(64), 64);
+        assert_eq!(pick(65), 64);
+    }
+
+    #[test]
+    fn default_dir_env_override() {
+        std::env::set_var("CSCAM_ARTIFACTS", "/tmp/xyz-artifacts");
+        assert_eq!(default_artifact_dir(), PathBuf::from("/tmp/xyz-artifacts"));
+        std::env::remove_var("CSCAM_ARTIFACTS");
+    }
+}

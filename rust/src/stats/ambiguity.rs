@@ -1,0 +1,150 @@
+//! Ambiguity (λ) estimators — closed form and Monte Carlo — behind Fig. 3.
+//!
+//! Model: M entries stored with i.i.d. uniform q-bit reduced tags, each
+//! trained to its own P_II neuron; the query equals one stored entry's
+//! reduced tag.  A P_II neuron activates iff its entry's reduced tag matches
+//! the query in *every* cluster — i.e. iff the full q-bit reduced tags are
+//! equal (each address is trained exactly once, so the per-cluster OR
+//! degenerates to the entry's own weight).  Hence
+//!
+//!   λ = 1 + Binomial(M − 1, 2^(−q)),      E[λ] = 1 + (M − 1)/2^q.
+//!
+//! Fig. 3 plots E[#required comparisons] against q for two CAM sizes with
+//! one independently-enabled entry per neuron (the ζ = 1 view); with
+//! grouping, comparisons = ζ · #activated blocks.
+
+use crate::cnn::ClusteredNetwork;
+use crate::util::Rng;
+
+/// Closed-form E\[λ\] for uniform reduced tags (stored-tag query).
+pub fn expected_lambda(m: usize, q: usize) -> f64 {
+    1.0 + (m as f64 - 1.0) / 2f64.powi(q as i32)
+}
+
+/// Closed-form E\[#comparisons\] with ζ-row sub-blocks:
+/// ζ × E\[#activated blocks\].
+pub fn expected_comparisons(m: usize, q: usize, zeta: usize) -> f64 {
+    let extras = expected_lambda(m, q) - 1.0;
+    let blocks = 1.0 + extras * (1.0 - (zeta as f64 - 1.0) / (m as f64 - 1.0));
+    zeta as f64 * blocks
+}
+
+/// A Monte-Carlo λ estimate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LambdaEstimate {
+    /// Mean λ over all trials.
+    pub mean_lambda: f64,
+    /// Mean number of activated sub-blocks.
+    pub mean_blocks: f64,
+    /// Mean number of comparisons (ζ × blocks).
+    pub mean_comparisons: f64,
+    /// Number of query trials.
+    pub trials: usize,
+}
+
+/// Monte-Carlo estimate of λ through the *real* CNN code path: train a
+/// [`ClusteredNetwork`] with M uniform reduced tags, decode stored tags.
+///
+/// `q` is split into `q` clusters of 1 bit (l = 2) — the ambiguity law
+/// depends only on q, not on the (c, l) split (see module docs), and this
+/// split is valid for every q.  `trials` queries are drawn by re-sampling
+/// stored entries (fresh networks every `m` queries so the tag sets vary).
+pub fn simulate_lambda(
+    m: usize,
+    q: usize,
+    zeta: usize,
+    trials: usize,
+    rng: &mut Rng,
+) -> LambdaEstimate {
+    assert!(q >= 1 && m >= 1 && trials >= 1);
+    let mut sum_lambda = 0.0;
+    let mut sum_blocks = 0.0;
+    let mut done = 0usize;
+
+    let mut act = crate::bits::BitVec::zeros(m);
+    let mut enables = crate::bits::BitVec::zeros(m / zeta);
+
+    while done < trials {
+        // fresh random tag set
+        let tags: Vec<Vec<u16>> =
+            (0..m).map(|_| (0..q).map(|_| rng.gen_range(2) as u16).collect()).collect();
+        let mut net = ClusteredNetwork::new(q, 2, m, zeta);
+        for (addr, t) in tags.iter().enumerate() {
+            net.train(t, addr);
+        }
+        let batch = (trials - done).min(m);
+        for _ in 0..batch {
+            let probe = &tags[rng.gen_range(m)];
+            let lambda = net.decode_into(probe, &mut act, &mut enables);
+            sum_lambda += lambda as f64;
+            sum_blocks += enables.count_ones() as f64;
+        }
+        done += batch;
+    }
+
+    LambdaEstimate {
+        mean_lambda: sum_lambda / done as f64,
+        mean_blocks: sum_blocks / done as f64,
+        mean_comparisons: zeta as f64 * sum_blocks / done as f64,
+        trials: done,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn closed_form_reference_point() {
+        // Table I: M=512, q=9 → E(λ) ≈ 2 activations, i.e. E(ambiguities)=1.
+        let e = expected_lambda(512, 9);
+        assert!((e - 1.998).abs() < 0.01);
+    }
+
+    #[test]
+    fn closed_form_limits() {
+        assert!((expected_lambda(512, 30) - 1.0).abs() < 1e-6, "large q → no ambiguity");
+        assert!(expected_lambda(512, 1) > 250.0, "tiny q → ~M/2 collisions");
+    }
+
+    #[test]
+    fn monte_carlo_matches_closed_form() {
+        let mut rng = Rng::seed_from_u64(42);
+        for (m, q) in [(128usize, 7usize), (256, 9), (512, 9)] {
+            let est = simulate_lambda(m, q, 1, 20_000, &mut rng);
+            let exp = expected_lambda(m, q);
+            let rel = (est.mean_lambda - exp).abs() / exp;
+            assert!(rel < 0.05, "M={m} q={q}: sim {} vs closed {exp}", est.mean_lambda);
+        }
+    }
+
+    #[test]
+    fn comparisons_account_for_block_grouping() {
+        let mut rng = Rng::seed_from_u64(7);
+        let est = simulate_lambda(512, 9, 8, 20_000, &mut rng);
+        let exp = expected_comparisons(512, 9, 8);
+        let rel = (est.mean_comparisons - exp).abs() / exp;
+        assert!(rel < 0.05, "sim {} vs closed {exp}", est.mean_comparisons);
+        // ~2 blocks of 8 rows each at the reference point
+        assert!((15.0..17.0).contains(&est.mean_comparisons));
+    }
+
+    #[test]
+    fn zeta_one_comparisons_equal_lambda() {
+        let mut rng = Rng::seed_from_u64(3);
+        let est = simulate_lambda(128, 8, 1, 5_000, &mut rng);
+        assert!((est.mean_comparisons - est.mean_lambda).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig3_monotone_in_q() {
+        let mut rng = Rng::seed_from_u64(9);
+        let mut prev = f64::INFINITY;
+        for q in [6usize, 8, 10, 12] {
+            let est = simulate_lambda(256, q, 1, 8_000, &mut rng);
+            assert!(est.mean_lambda < prev, "q={q}");
+            prev = est.mean_lambda;
+        }
+    }
+}

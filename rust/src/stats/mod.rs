@@ -1,0 +1,239 @@
+//! Statistics: online accumulators, histograms, and the ambiguity (λ)
+//! estimators behind Fig. 3.
+
+pub mod ambiguity;
+
+pub use ambiguity::{expected_comparisons, expected_lambda, simulate_lambda, LambdaEstimate};
+
+
+/// Numerically stable online mean/variance (Welford).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        OnlineStats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Standard error of the mean.
+    pub fn sem(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.std_dev() / (self.n as f64).sqrt()
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &OnlineStats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = *other;
+            return;
+        }
+        let n = (self.n + other.n) as f64;
+        let d = other.mean - self.mean;
+        self.mean += d * other.n as f64 / n;
+        self.m2 += other.m2 + d * d * self.n as f64 * other.n as f64 / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Fixed-bucket latency/size histogram with u64 samples.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    bounds: Vec<u64>,
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl Histogram {
+    /// Buckets: (−∞, bounds[0]], (bounds[0], bounds[1]], …, (last, ∞).
+    pub fn new(bounds: Vec<u64>) -> Self {
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must be ascending");
+        let n = bounds.len() + 1;
+        Histogram { bounds, counts: vec![0; n], total: 0 }
+    }
+
+    /// Exponential buckets 1, 2, 4, … up to `max`.
+    pub fn exponential(max: u64) -> Self {
+        let mut bounds = Vec::new();
+        let mut b = 1u64;
+        while b <= max {
+            bounds.push(b);
+            b *= 2;
+        }
+        Self::new(bounds)
+    }
+
+    pub fn record(&mut self, v: u64) {
+        let i = self.bounds.partition_point(|&b| b < v);
+        self.counts[i] += 1;
+        self.total += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Upper bound of the bucket containing quantile `q` ∈ [0,1]
+    /// (`u64::MAX` for the overflow bucket).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut cum = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target.max(1) {
+                return self.bounds.get(i).copied().unwrap_or(u64::MAX);
+            }
+        }
+        u64::MAX
+    }
+
+    /// Bucket-wise merge of a histogram with identical bounds (shard
+    /// aggregation). Panics on layout mismatch.
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.bounds, other.bounds, "histogram layouts differ");
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
+
+    pub fn buckets(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        self.bounds
+            .iter()
+            .copied()
+            .chain(std::iter::once(u64::MAX))
+            .zip(self.counts.iter().copied())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_stats_basic() {
+        let mut s = OnlineStats::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.variance() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut whole = OnlineStats::new();
+        xs.iter().for_each(|&x| whole.push(x));
+        let mut a = OnlineStats::new();
+        let mut b = OnlineStats::new();
+        xs[..37].iter().for_each(|&x| a.push(x));
+        xs[37..].iter().for_each(|&x| b.push(x));
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+        assert!((a.variance() - whole.variance()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let mut h = Histogram::exponential(1 << 10);
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.total(), 1000);
+        assert!(h.quantile(0.5) >= 512 / 2 && h.quantile(0.5) <= 512);
+        assert!(h.quantile(1.0) >= 1000);
+        assert!(h.quantile(0.0) <= 2);
+    }
+
+    #[test]
+    fn histogram_merge_adds_buckets() {
+        let mut a = Histogram::new(vec![10, 20]);
+        let mut b = Histogram::new(vec![10, 20]);
+        a.record(5);
+        b.record(15);
+        b.record(25);
+        a.merge(&b);
+        assert_eq!(a.total(), 3);
+        let counts: Vec<_> = a.buckets().map(|(_, c)| c).collect();
+        assert_eq!(counts, vec![1, 1, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "histogram layouts differ")]
+    fn histogram_merge_rejects_mismatched_layouts() {
+        let mut a = Histogram::new(vec![10]);
+        a.merge(&Histogram::new(vec![20]));
+    }
+
+    #[test]
+    fn histogram_overflow_bucket() {
+        let mut h = Histogram::new(vec![10, 20]);
+        h.record(5);
+        h.record(15);
+        h.record(99);
+        let counts: Vec<_> = h.buckets().map(|(_, c)| c).collect();
+        assert_eq!(counts, vec![1, 1, 1]);
+        assert_eq!(h.quantile(1.0), u64::MAX);
+    }
+}

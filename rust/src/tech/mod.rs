@@ -1,0 +1,146 @@
+//! CMOS technology nodes and inter-node scaling.
+//!
+//! The paper evaluates at 0.13 µm / 1.2 V and projects the proposed design to
+//! 90 nm / 1.0 V "using the method in [6]" (Huang & Hwang, JSSC 2011).  The
+//! projected numbers in the paper (0.060 fJ/bit/search, 0.582 ns from
+//! 0.124 fJ/bit/search, 0.70 ns) pin the method down exactly:
+//!
+//! ```text
+//!   energy scale = (L / L0) · (V / V0)²      (switched capacitance C·V²,
+//!                                             C ∝ feature size)
+//!   delay  scale = (L / L0) · (V0 / V)       (gate delay ∝ C·V / I,
+//!                                             I ∝ V² ⇒ t ∝ L / V)
+//! ```
+//!
+//! `0.124 · (90/130) · (1.0/1.2)² = 0.0596 ≈ 0.060` and
+//! `0.70 · (90/130) · (1.2/1.0) = 0.5815 ≈ 0.582` — both match the paper to
+//! rounding. [`scale_energy`] / [`scale_delay`] implement these rules and are
+//! unit-tested against the paper's projection.
+
+
+/// A CMOS process node, the knobs the energy/delay models depend on.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TechNode {
+    /// Human name, e.g. "0.13um".
+    pub name: &'static str,
+    /// Drawn feature size in nanometres.
+    pub feature_nm: f64,
+    /// Nominal supply voltage in volts.
+    pub vdd: f64,
+    /// Fanout-of-4 inverter delay in picoseconds — the unit of the
+    /// logical-effort delay model in [`crate::timing`].
+    pub fo4_ps: f64,
+}
+
+/// 0.18 µm node (PF-CDPD [12] silicon).
+pub const NODE_180NM: TechNode = TechNode {
+    name: "0.18um",
+    feature_nm: 180.0,
+    vdd: 1.8,
+    fo4_ps: 70.0,
+};
+
+/// 0.13 µm node — the paper's SPECTRE testbed (1.2 V).
+pub const NODE_130NM: TechNode = TechNode {
+    name: "0.13um",
+    feature_nm: 130.0,
+    vdd: 1.2,
+    fo4_ps: 50.0,
+};
+
+/// 90 nm node at 1.0 V — the paper's projection target (as in [3]/[6]).
+pub const NODE_90NM: TechNode = TechNode {
+    name: "90nm",
+    feature_nm: 90.0,
+    vdd: 1.0,
+    fo4_ps: 35.0,
+};
+
+/// 65 nm node (the [6] TCAM macro).
+pub const NODE_65NM: TechNode = TechNode {
+    name: "65nm",
+    feature_nm: 65.0,
+    vdd: 1.0,
+    fo4_ps: 25.0,
+};
+
+/// 32 nm node (HS-WA [1] silicon).
+pub const NODE_32NM: TechNode = TechNode {
+    name: "32nm",
+    feature_nm: 32.0,
+    vdd: 0.9,
+    fo4_ps: 14.0,
+};
+
+/// All nodes known to the simulator, coarsest first.
+pub const ALL_NODES: [TechNode; 5] = [NODE_180NM, NODE_130NM, NODE_90NM, NODE_65NM, NODE_32NM];
+
+/// Look a node up by name ("0.13um", "90nm", …).
+pub fn node_by_name(name: &str) -> Option<TechNode> {
+    ALL_NODES.iter().copied().find(|n| {
+        n.name.eq_ignore_ascii_case(name)
+            || n.name.trim_end_matches("um").trim_end_matches("nm") == name
+    })
+}
+
+/// Scale a dynamic energy measured at `from` to node `to`
+/// (method of [6]: E ∝ L·V²).
+pub fn scale_energy(energy: f64, from: TechNode, to: TechNode) -> f64 {
+    energy * (to.feature_nm / from.feature_nm) * (to.vdd / from.vdd).powi(2)
+}
+
+/// Scale a delay measured at `from` to node `to`
+/// (method of [6]: t ∝ L/V).
+pub fn scale_delay(delay: f64, from: TechNode, to: TechNode) -> f64 {
+    delay * (to.feature_nm / from.feature_nm) * (from.vdd / to.vdd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_90nm_energy_projection() {
+        // §IV: 0.124 fJ/bit/search @ 0.13 µm/1.2 V → 0.060 @ 90 nm/1.0 V.
+        let e = scale_energy(0.124, NODE_130NM, NODE_90NM);
+        assert!((e - 0.060).abs() < 0.001, "got {e}");
+    }
+
+    #[test]
+    fn paper_90nm_delay_projection() {
+        // §IV: 0.70 ns @ 0.13 µm/1.2 V → 0.582 ns @ 90 nm/1.0 V.
+        let d = scale_delay(0.70, NODE_130NM, NODE_90NM);
+        assert!((d - 0.582).abs() < 0.001, "got {d}");
+    }
+
+    #[test]
+    fn scaling_is_identity_on_same_node() {
+        assert_eq!(scale_energy(1.3, NODE_130NM, NODE_130NM), 1.3);
+        assert_eq!(scale_delay(2.3, NODE_130NM, NODE_130NM), 2.3);
+    }
+
+    #[test]
+    fn scaling_composes() {
+        // 0.13µm → 90nm → 65nm equals 0.13µm → 65nm.
+        let direct = scale_energy(1.0, NODE_130NM, NODE_65NM);
+        let via = scale_energy(scale_energy(1.0, NODE_130NM, NODE_90NM), NODE_90NM, NODE_65NM);
+        assert!((direct - via).abs() < 1e-12);
+    }
+
+    #[test]
+    fn node_lookup() {
+        assert_eq!(node_by_name("90nm"), Some(NODE_90NM));
+        assert_eq!(node_by_name("0.13um"), Some(NODE_130NM));
+        assert_eq!(node_by_name("7nm"), None);
+    }
+
+    #[test]
+    fn smaller_nodes_are_cheaper_and_faster() {
+        for pair in ALL_NODES.windows(2) {
+            let (a, b) = (pair[0], pair[1]);
+            assert!(scale_energy(1.0, a, b) < 1.0, "{} -> {}", a.name, b.name);
+            // delay also shrinks whenever V doesn't drop too fast; true for our ladder
+            assert!(scale_delay(1.0, a, b) < 1.1, "{} -> {}", a.name, b.name);
+        }
+    }
+}

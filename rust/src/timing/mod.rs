@@ -1,0 +1,235 @@
+//! Delay model — logical-effort-flavoured, in FO4 units (DESIGN.md §2).
+//!
+//! Every path delay is expressed as a number of fanout-of-4 inverter delays
+//! at the target node, then multiplied by the node's `fo4_ps`.  Structural
+//! dependence on the geometry (M, N, l, ζ) is kept so that sweeps and
+//! ablations respond; the FO4 coefficients are calibrated once against the
+//! paper's three measured delays at 0.13 µm (Table II: Ref. NAND 2.30 ns,
+//! Ref. NOR 0.55 ns, Proposed 0.70 ns) — the *proposed* anchor only pins the
+//! CNN stage coefficient (SRAM word-line), not the ratio: the 30.4 % headline
+//! still emerges from NAND's structural O(N) chain vs the wave-pipelined
+//! NOR sub-block search.
+//!
+//! Paths modelled:
+//!
+//! * conventional NOR search: SL broadcast (buffer chain, log M) → 1-deep ML
+//!   pull-down → sense amp → priority encoder (log M).
+//! * conventional NAND search: same except the ML is an N-long series chain
+//!   (delay ∝ N — segmented-Elmore, the dominant term).
+//! * proposed (wave-pipelined, Fig. 4): stage 1 = CNN (one-hot decode → SRAM
+//!   row read → c-input AND → ζ-group OR → enable drive), stage 2 = NOR
+//!   search of one ζ-row sub-block.  The paper reports the *max reliable
+//!   frequency*, i.e. the slower stage; latency is the stage sum.
+
+
+pub mod wave;
+
+use crate::cam::MatchlineKind;
+use crate::config::DesignConfig;
+use crate::tech::{self, TechNode};
+
+/// FO4 coefficients of the delay model (dimensionless).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DelayConstants {
+    /// SL broadcast buffer chain: a + b·log2(rows driven).
+    pub sl_base: f64,
+    pub sl_per_log_row: f64,
+    /// NOR ML evaluate + sense.
+    pub ml_nor_eval: f64,
+    /// NAND ML chain delay per series bit.
+    pub ml_nand_per_bit: f64,
+    /// Priority encoder: a·log2(M).
+    pub encoder_per_log: f64,
+    /// One-hot decoder: a + b·log2(l).
+    pub dec_base: f64,
+    pub dec_per_log: f64,
+    /// SRAM row read: a + b·log2(columns) (word-line RC dominates).
+    pub sram_base: f64,
+    pub sram_per_log_col: f64,
+    /// P_II logic: c-input AND tree + ζ-group OR + enable driver.
+    pub pii_per_log_c: f64,
+    pub pii_or_per_log_zeta: f64,
+    pub enable_drive: f64,
+}
+
+impl DelayConstants {
+    /// Reference calibration (see module docs for the three anchors).
+    pub const fn reference() -> Self {
+        DelayConstants {
+            sl_base: 1.0,
+            sl_per_log_row: 0.30,
+            ml_nor_eval: 3.0,
+            ml_nand_per_bit: 0.295,
+            encoder_per_log: 0.45,
+            dec_base: 1.0,
+            dec_per_log: 0.35,
+            sram_base: 3.2,
+            sram_per_log_col: 0.55,
+            pii_per_log_c: 0.8,
+            pii_or_per_log_zeta: 0.5,
+            enable_drive: 1.2,
+        }
+    }
+}
+
+impl Default for DelayConstants {
+    fn default() -> Self {
+        Self::reference()
+    }
+}
+
+fn log2f(x: usize) -> f64 {
+    (x.max(1) as f64).log2().max(1.0)
+}
+
+/// Search delay of a conventional M×N CAM in FO4 units.
+pub fn conventional_search_fo4(m: usize, n: usize, ml: MatchlineKind, k: &DelayConstants) -> f64 {
+    let sl = k.sl_base + k.sl_per_log_row * log2f(m);
+    let ml_d = match ml {
+        MatchlineKind::Nor => k.ml_nor_eval,
+        MatchlineKind::Nand => k.ml_nand_per_bit * n as f64,
+    };
+    let enc = k.encoder_per_log * log2f(m);
+    sl + ml_d + enc
+}
+
+/// CNN classifier stage delay (Fig. 4 critical path) in FO4 units.
+pub fn cnn_stage_fo4(cfg: &DesignConfig, k: &DelayConstants) -> f64 {
+    let dec = k.dec_base + k.dec_per_log * log2f(cfg.l);
+    let sram = k.sram_base + k.sram_per_log_col * log2f(cfg.m);
+    let pii = k.pii_per_log_c * log2f(cfg.c.next_power_of_two())
+        + k.pii_or_per_log_zeta * log2f(cfg.zeta);
+    dec + sram + pii + k.enable_drive
+}
+
+/// Sub-block CAM search stage delay (ζ rows, N bits) in FO4 units.
+pub fn subblock_stage_fo4(cfg: &DesignConfig, k: &DelayConstants) -> f64 {
+    // Local SLs only span ζ rows, but the global broadcast still buffers
+    // across the array height: keep the log M SL term plus one enable gate.
+    let sl = k.sl_base + k.sl_per_log_row * log2f(cfg.m) + 0.5;
+    let ml_d = match cfg.ml_kind {
+        MatchlineKind::Nor => k.ml_nor_eval,
+        MatchlineKind::Nand => k.ml_nand_per_bit * cfg.n as f64,
+    };
+    let enc = k.encoder_per_log * log2f(cfg.m);
+    sl + ml_d + enc
+}
+
+/// Delay report for one architecture at a node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DelayReport {
+    /// Cycle time (max reliable frequency's period) in nanoseconds — what
+    /// Table II reports.
+    pub cycle_ns: f64,
+    /// Input-to-output search latency in nanoseconds (= cycle for the
+    /// single-stage conventional designs; stage sum for the wave-pipelined
+    /// proposed design).
+    pub latency_ns: f64,
+}
+
+/// Conventional design delay at `node`.
+pub fn conventional_delay(
+    m: usize,
+    n: usize,
+    ml: MatchlineKind,
+    k: &DelayConstants,
+    node: TechNode,
+) -> DelayReport {
+    let fo4 = conventional_search_fo4(m, n, ml, k);
+    let ns = fo4 * node.fo4_ps / 1000.0;
+    DelayReport { cycle_ns: ns, latency_ns: ns }
+}
+
+/// Proposed design delay at `node` (wave-pipelined two-stage path, §IV).
+pub fn proposed_delay(cfg: &DesignConfig, k: &DelayConstants) -> DelayReport {
+    let node = cfg.tech();
+    let s1 = cnn_stage_fo4(cfg, k) * node.fo4_ps / 1000.0;
+    let s2 = subblock_stage_fo4(cfg, k) * node.fo4_ps / 1000.0;
+    DelayReport { cycle_ns: s1.max(s2), latency_ns: s1 + s2 }
+}
+
+/// Convenience: delays rescaled with the method of [6] instead of native
+/// FO4 (used to sanity-check the scaling module against the delay model).
+pub fn scaled_delay(report: DelayReport, from: TechNode, to: TechNode) -> DelayReport {
+    DelayReport {
+        cycle_ns: tech::scale_delay(report.cycle_ns, from, to),
+        latency_ns: tech::scale_delay(report.latency_ns, from, to),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tech::NODE_130NM;
+
+    fn k() -> DelayConstants {
+        DelayConstants::reference()
+    }
+
+    #[test]
+    fn ref_nor_delay_anchor() {
+        // Table II: Ref. NOR 512×128 at 0.13 µm = 0.55 ns.
+        let d = conventional_delay(512, 128, MatchlineKind::Nor, &k(), NODE_130NM);
+        assert!((d.cycle_ns - 0.55).abs() < 0.05, "got {}", d.cycle_ns);
+    }
+
+    #[test]
+    fn ref_nand_delay_anchor() {
+        // Table II: Ref. NAND 512×128 at 0.13 µm = 2.30 ns.
+        let d = conventional_delay(512, 128, MatchlineKind::Nand, &k(), NODE_130NM);
+        assert!((d.cycle_ns - 2.30).abs() < 0.12, "got {}", d.cycle_ns);
+    }
+
+    #[test]
+    fn proposed_delay_anchor_and_headline_ratio() {
+        // Table II: Proposed = 0.70 ns; headline: 30.4 % of Ref. NAND.
+        let cfg = DesignConfig::reference();
+        let d = proposed_delay(&cfg, &k());
+        assert!((d.cycle_ns - 0.70).abs() < 0.05, "got {}", d.cycle_ns);
+        let nand = conventional_delay(512, 128, MatchlineKind::Nand, &k(), NODE_130NM);
+        let ratio = d.cycle_ns / nand.cycle_ns;
+        assert!((0.27..0.34).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn cnn_stage_is_the_critical_stage_at_reference() {
+        // §IV wave-pipelining: the CNN stage sets the cycle at the
+        // reference point (0.70 > 0.55-ish sub-block search).
+        let cfg = DesignConfig::reference();
+        assert!(cnn_stage_fo4(&cfg, &k()) > subblock_stage_fo4(&cfg, &k()));
+    }
+
+    #[test]
+    fn latency_is_stage_sum() {
+        let cfg = DesignConfig::reference();
+        let d = proposed_delay(&cfg, &k());
+        assert!(d.latency_ns > d.cycle_ns);
+        assert!(d.latency_ns < 2.0 * d.cycle_ns + 1e-9);
+    }
+
+    #[test]
+    fn nand_delay_grows_linearly_with_tag_width() {
+        let d64 = conventional_search_fo4(512, 64, MatchlineKind::Nand, &k());
+        let d128 = conventional_search_fo4(512, 128, MatchlineKind::Nand, &k());
+        let d256 = conventional_search_fo4(512, 256, MatchlineKind::Nand, &k());
+        // the ML-chain term doubles with N: (d256−d128) = 2·(d128−d64)
+        assert!(((d256 - d128) / (d128 - d64) - 2.0).abs() < 1e-9);
+        assert!(d256 > d128 && d128 > d64);
+    }
+
+    #[test]
+    fn nor_delay_insensitive_to_tag_width() {
+        let d64 = conventional_search_fo4(512, 64, MatchlineKind::Nor, &k());
+        let d256 = conventional_search_fo4(512, 256, MatchlineKind::Nor, &k());
+        assert_eq!(d64, d256);
+    }
+
+    #[test]
+    fn paper_90nm_projection_via_scaling() {
+        // §IV: proposed 0.70 ns → 0.582 ns at 90 nm/1.0 V by the method of [6].
+        let cfg = DesignConfig::reference();
+        let d = proposed_delay(&cfg, &k());
+        let s = scaled_delay(d, NODE_130NM, tech::NODE_90NM);
+        assert!((s.cycle_ns - 0.582).abs() < 0.05, "got {}", s.cycle_ns);
+    }
+}

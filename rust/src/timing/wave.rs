@@ -1,0 +1,143 @@
+//! Wave-pipelining analysis (§IV): "a wave-pipelining approach under
+//! worst-case process conditions (slow-slow) has been followed for clk1 and
+//! clk2 signals in Fig. 4 to integrate the CNN and the CAM module."
+//!
+//! Wave pipelining launches a new input into the CNN stage before the
+//! previous wave has left the CAM stage, with no register between them.
+//! It works iff the *fast* path of wave k+1 cannot catch the *slow* path of
+//! wave k at the CAM sampling point:
+//!
+//! ```text
+//!   T_clk ≥ (D_max − D_min) + t_setup + t_skew      (race constraint)
+//!   T_clk ≥ D_max_stage                             (throughput bound)
+//!   clk2 offset = D_max_cnn − T_clk·floor(D_max_cnn/T_clk)
+//! ```
+//!
+//! where D_max/D_min are the slowest/fastest combinational paths through
+//! the unregistered CNN→CAM cascade.  Process corners derate the nominal
+//! delays: the paper quotes the slow-slow corner, modelled here as a
+//! multiplicative factor on every path.
+
+use crate::config::DesignConfig;
+use crate::timing::{cnn_stage_fo4, subblock_stage_fo4, DelayConstants};
+
+/// Process corner derating factors (× nominal delay).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Corner {
+    /// Typical-typical.
+    TT,
+    /// Slow-slow (worst-case, the paper's sign-off corner).
+    SS,
+    /// Fast-fast (best-case — sets the *minimum* path for race checks).
+    FF,
+}
+
+impl Corner {
+    pub fn derate(&self) -> f64 {
+        match self {
+            Corner::TT => 1.0,
+            Corner::SS => 1.25,
+            Corner::FF => 0.80,
+        }
+    }
+}
+
+/// Wave-pipelining feasibility report for a design point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WaveReport {
+    /// Slowest path through CNN + sub-block search at SS, ns.
+    pub d_max_ns: f64,
+    /// Fastest path at FF, ns (shortest logic depth: decode of an
+    /// all-zeros row that settles the enable immediately).
+    pub d_min_ns: f64,
+    /// Minimum safe clock period, ns.
+    pub t_clk_min_ns: f64,
+    /// clk2 sampling offset after clk1, ns.
+    pub clk2_offset_ns: f64,
+    /// Number of waves in flight at T_clk_min.
+    pub waves_in_flight: usize,
+}
+
+/// Setup + skew guard band, ns (0.13 µm flop + tree ballpark).
+pub const GUARD_NS: f64 = 0.08;
+
+/// Analyze wave-pipelined operation of the proposed design.
+pub fn analyze(cfg: &DesignConfig, k: &DelayConstants) -> WaveReport {
+    let node = cfg.tech();
+    let cnn_nom = cnn_stage_fo4(cfg, k) * node.fo4_ps / 1000.0;
+    let cam_nom = subblock_stage_fo4(cfg, k) * node.fo4_ps / 1000.0;
+
+    let d_max = (cnn_nom + cam_nom) * Corner::SS.derate();
+    // fastest path: one decoder level + SRAM hit + the single AND that
+    // kills the enable — about 40 % of the nominal stage depth, at FF.
+    let d_min = 0.4 * (cnn_nom + cam_nom) * Corner::FF.derate();
+
+    let race = (d_max - d_min) + GUARD_NS;
+    let stage = cnn_nom.max(cam_nom) * Corner::SS.derate();
+    let t_clk = race.max(stage);
+
+    let clk2_offset = {
+        let dmax_cnn = cnn_nom * Corner::SS.derate();
+        dmax_cnn - t_clk * (dmax_cnn / t_clk).floor()
+    };
+    WaveReport {
+        d_max_ns: d_max,
+        d_min_ns: d_min,
+        t_clk_min_ns: t_clk,
+        clk2_offset_ns: clk2_offset,
+        waves_in_flight: (d_max / t_clk).ceil() as usize,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DesignConfig;
+    use crate::timing::DelayConstants;
+
+    fn report() -> WaveReport {
+        analyze(&DesignConfig::reference(), &DelayConstants::reference())
+    }
+
+    #[test]
+    fn race_constraint_dominates_at_reference() {
+        // With an unregistered 2-stage cascade the D_max−D_min spread, not
+        // the stage delay, sets T_clk — the cost of skipping the register.
+        let r = report();
+        assert!(r.t_clk_min_ns > 0.0);
+        assert!(r.d_max_ns > r.d_min_ns);
+        assert!(r.t_clk_min_ns >= (r.d_max_ns - r.d_min_ns));
+    }
+
+    #[test]
+    fn clock_period_is_within_paper_band() {
+        // The paper reports 0.70 ns max reliable frequency at SS; the wave
+        // analysis must land in the same regime (sub-2 ns, super-0.5 ns).
+        let r = report();
+        assert!((0.5..2.0).contains(&r.t_clk_min_ns), "T_clk {}", r.t_clk_min_ns);
+    }
+
+    #[test]
+    fn multiple_waves_in_flight() {
+        let r = report();
+        assert!(r.waves_in_flight >= 1);
+        assert!(r.waves_in_flight <= 4);
+        assert!(r.clk2_offset_ns >= 0.0 && r.clk2_offset_ns <= r.t_clk_min_ns);
+    }
+
+    #[test]
+    fn ss_corner_is_slowest() {
+        assert!(Corner::SS.derate() > Corner::TT.derate());
+        assert!(Corner::FF.derate() < Corner::TT.derate());
+    }
+
+    #[test]
+    fn bigger_arrays_need_slower_clocks() {
+        let small = analyze(&DesignConfig::reference(), &DelayConstants::reference());
+        let big = analyze(
+            &DesignConfig { m: 4096, ..DesignConfig::reference() },
+            &DelayConstants::reference(),
+        );
+        assert!(big.t_clk_min_ns > small.t_clk_min_ns);
+    }
+}

@@ -1,0 +1,180 @@
+//! Silicon-area estimation (µm²) — makes §III-B's "not too many sub-blocks
+//! to expand the layout and complicate the interconnections" quantitative.
+//!
+//! Transistor counts alone miss the cost the paper's criterion 1 is about:
+//! each sub-block adds a compare-enable line that must be *routed* across
+//! the array width, and the block decoder/driver column grows with β.  This
+//! module prices cells by layout area and wiring by track length × pitch,
+//! which is what actually limits β in a real floorplan.
+//!
+//! All areas at the reference node (0.13 µm); scale with the square of the
+//! feature-size ratio for other nodes.
+
+use crate::cam::CellKind;
+use crate::config::DesignConfig;
+use crate::tech::TechNode;
+
+/// Layout constants at 0.13 µm (standard-cell / compiled-macro ballparks).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AreaConstants {
+    /// CAM cell footprint, µm² (9T XOR ≈ 10T NAND to first order).
+    pub cam_cell_um2: f64,
+    /// 6T SRAM bit, µm².
+    pub sram_bit_um2: f64,
+    /// Generic logic per transistor, µm² (routed standard cell).
+    pub logic_per_t_um2: f64,
+    /// Metal routing pitch, µm (one track's width+space).
+    pub wire_pitch_um: f64,
+    /// CAM cell pitch, µm (row height ≈ column width for a square-ish cell).
+    pub cell_pitch_um: f64,
+}
+
+impl AreaConstants {
+    pub const fn reference_130nm() -> Self {
+        AreaConstants {
+            cam_cell_um2: 5.5,
+            sram_bit_um2: 2.5,
+            logic_per_t_um2: 0.9,
+            wire_pitch_um: 0.41,
+            cell_pitch_um: 2.4,
+        }
+    }
+}
+
+impl Default for AreaConstants {
+    fn default() -> Self {
+        Self::reference_130nm()
+    }
+}
+
+/// Area report, µm².
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AreaReport {
+    /// CAM tag array.
+    pub cam_array_um2: f64,
+    /// Output data SRAM.
+    pub data_sram_um2: f64,
+    /// CNN weight SRAM.
+    pub cnn_sram_um2: f64,
+    /// CNN + CAM peripheral logic.
+    pub logic_um2: f64,
+    /// Compare-enable distribution: β horizontal lines spanning the array
+    /// width plus the vertical enable trunk spanning the array height.
+    pub enable_routing_um2: f64,
+}
+
+impl AreaReport {
+    pub fn total_um2(&self) -> f64 {
+        self.cam_array_um2
+            + self.data_sram_um2
+            + self.cnn_sram_um2
+            + self.logic_um2
+            + self.enable_routing_um2
+    }
+}
+
+/// Area of the proposed design at the reference node.
+pub fn proposed_area(cfg: &DesignConfig, k: &AreaConstants) -> AreaReport {
+    let t = super::proposed_count(cfg, &super::TransistorAssumptions::default());
+    // array width spans N tag bits (+ data), height spans M rows
+    let array_width_um = cfg.n as f64 * k.cell_pitch_um;
+    let array_height_um = cfg.m as f64 * k.cell_pitch_um;
+    AreaReport {
+        cam_array_um2: (cfg.m * cfg.n) as f64 * k.cam_cell_um2,
+        data_sram_um2: t.data_sram as f64 / 6.0 * k.sram_bit_um2,
+        cnn_sram_um2: (cfg.c * cfg.l * cfg.m) as f64 * k.sram_bit_um2,
+        logic_um2: (t.cam_periphery + t.cnn_logic) as f64 * k.logic_per_t_um2,
+        // β horizontal enable lines across the array width + one vertical
+        // trunk per block column down the array height
+        enable_routing_um2: cfg.beta() as f64 * array_width_um * k.wire_pitch_um
+            + array_height_um * k.wire_pitch_um,
+    }
+}
+
+/// Area of the conventional design (no CNN, no enable routing).
+pub fn conventional_area(cfg: &DesignConfig, cell: CellKind, k: &AreaConstants) -> AreaReport {
+    let t = super::conventional_count(cfg.m, cfg.n, cell, &super::TransistorAssumptions::default());
+    AreaReport {
+        cam_array_um2: (cfg.m * cfg.n) as f64 * k.cam_cell_um2,
+        data_sram_um2: t.data_sram as f64 / 6.0 * k.sram_bit_um2,
+        cnn_sram_um2: 0.0,
+        logic_um2: t.cam_periphery as f64 * k.logic_per_t_um2,
+        enable_routing_um2: 0.0,
+    }
+}
+
+/// Area overhead of the proposed design vs the conventional NAND macro.
+pub fn area_overhead_vs_nand(cfg: &DesignConfig, k: &AreaConstants) -> f64 {
+    proposed_area(cfg, k).total_um2() / conventional_area(cfg, CellKind::Nand10T, k).total_um2()
+        - 1.0
+}
+
+/// Scale a report to another node (area ∝ L²).
+pub fn scale_area(report: &AreaReport, from: TechNode, to: TechNode) -> AreaReport {
+    let s = (to.feature_nm / from.feature_nm).powi(2);
+    AreaReport {
+        cam_array_um2: report.cam_array_um2 * s,
+        data_sram_um2: report.data_sram_um2 * s,
+        cnn_sram_um2: report.cnn_sram_um2 * s,
+        logic_um2: report.logic_um2 * s,
+        enable_routing_um2: report.enable_routing_um2 * s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DesignConfig;
+
+    fn k() -> AreaConstants {
+        AreaConstants::reference_130nm()
+    }
+
+    #[test]
+    fn reference_area_overhead_is_single_digit_percent() {
+        // Consistent with the transistor-count picture (paper: +3.4 %).
+        let ovh = area_overhead_vs_nand(&DesignConfig::reference(), &k());
+        assert!((0.01..0.12).contains(&ovh), "area overhead {ovh}");
+    }
+
+    #[test]
+    fn enable_routing_grows_linearly_with_beta() {
+        let a8 = proposed_area(&DesignConfig { zeta: 8, ..DesignConfig::reference() }, &k());
+        let a4 = proposed_area(&DesignConfig { zeta: 4, ..DesignConfig::reference() }, &k());
+        let a2 = proposed_area(&DesignConfig { zeta: 2, ..DesignConfig::reference() }, &k());
+        // halving ζ doubles β and (asymptotically) the horizontal routing
+        let d84 = a4.enable_routing_um2 - a8.enable_routing_um2;
+        let d42 = a2.enable_routing_um2 - a4.enable_routing_um2;
+        assert!(d84 > 0.0 && (d42 / d84 - 2.0).abs() < 0.05, "d84={d84} d42={d42}");
+    }
+
+    #[test]
+    fn routing_cost_is_why_beta_is_capped() {
+        // §III-B criterion 1, quantified: at β = 512 (ζ = 1) the enable
+        // routing alone exceeds the entire CNN SRAM area.
+        let fine = proposed_area(&DesignConfig { zeta: 1, ..DesignConfig::reference() }, &k());
+        assert!(fine.enable_routing_um2 > fine.cnn_sram_um2);
+        // while at the Table I point it is a small fraction
+        let ref_pt = proposed_area(&DesignConfig::reference(), &k());
+        assert!(ref_pt.enable_routing_um2 < 0.3 * ref_pt.cnn_sram_um2);
+    }
+
+    #[test]
+    fn area_scales_quadratically() {
+        let a = proposed_area(&DesignConfig::reference(), &k());
+        let s = scale_area(&a, crate::tech::NODE_130NM, crate::tech::NODE_65NM);
+        let ratio = s.total_um2() / a.total_um2();
+        assert!((ratio - (65.0f64 / 130.0).powi(2)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn totals_are_component_sums() {
+        let a = proposed_area(&DesignConfig::reference(), &k());
+        let sum = a.cam_array_um2
+            + a.data_sram_um2
+            + a.cnn_sram_um2
+            + a.logic_um2
+            + a.enable_routing_um2;
+        assert!((a.total_um2() - sum).abs() < 1e-9);
+    }
+}

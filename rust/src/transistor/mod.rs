@@ -1,0 +1,175 @@
+//! Structural transistor counting (the paper's +3.4 % overhead claim).
+//!
+//! Counts are *structural* — cells × transistors-per-cell plus explicit
+//! peripheral circuits — with documented assumptions; nothing here is fitted
+//! to the paper's 3.4 %.  The absolute overhead we predict depends on
+//! peripheral sizing the paper does not publish (see EXPERIMENTS.md), but
+//! the *shape* — a small single-digit-percent overhead that shrinks as the
+//! data payload grows — is structural and holds.
+
+
+pub mod area;
+
+use crate::cam::CellKind;
+use crate::config::DesignConfig;
+
+/// Transistor inventory of one design.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransistorCount {
+    /// CAM tag array cells (M × N × cell transistors).
+    pub cam_cells: usize,
+    /// Output data SRAM (M × data_width × 6T) — both designs store the
+    /// payload the CAM retrieves.
+    pub data_sram: usize,
+    /// CAM peripherals: SL drivers, ML precharge, sense amps, priority
+    /// encoder, read/write column circuitry.
+    pub cam_periphery: usize,
+    /// CNN weight SRAM (c · l · M bits × 6T).
+    pub cnn_sram: usize,
+    /// CNN logic: one-hot decoders, P_II c-input ANDs, ζ-group ORs,
+    /// compare-enable drivers, SRAM read periphery.
+    pub cnn_logic: usize,
+}
+
+impl TransistorCount {
+    /// Grand total.
+    pub fn total(&self) -> usize {
+        self.cam_cells + self.data_sram + self.cam_periphery + self.cnn_sram + self.cnn_logic
+    }
+
+    /// The CNN's addition on top of the CAM macro.
+    pub fn cnn_total(&self) -> usize {
+        self.cnn_sram + self.cnn_logic
+    }
+}
+
+/// Structural assumptions (documented; defaults are standard-cell ballparks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TransistorAssumptions {
+    /// Width of the data word each entry retrieves (the paper's macro is a
+    /// tag-CAM + data-RAM pair; Table II configs quote tag width only — we
+    /// default data to the same width).
+    pub data_width: usize,
+    /// Per-ML precharge + sense + valid gating.
+    pub per_row_ml_circuit: usize,
+    /// Per-bit SL driver pair.
+    pub per_bit_sl_driver: usize,
+    /// Priority-encoder transistors per entry.
+    pub encoder_per_entry: usize,
+    /// SRAM column circuitry (precharge + write + sense) per column.
+    pub sram_col_circuit: usize,
+}
+
+impl Default for TransistorAssumptions {
+    fn default() -> Self {
+        TransistorAssumptions {
+            data_width: 128,
+            per_row_ml_circuit: 12,
+            per_bit_sl_driver: 8,
+            encoder_per_entry: 4,
+            sram_col_circuit: 10,
+        }
+    }
+}
+
+/// Conventional monolithic CAM (tag array + data RAM + peripherals).
+pub fn conventional_count(
+    m: usize,
+    n: usize,
+    cell: CellKind,
+    a: &TransistorAssumptions,
+) -> TransistorCount {
+    TransistorCount {
+        cam_cells: m * n * cell.transistors(),
+        data_sram: m * a.data_width * 6 + a.data_width * a.sram_col_circuit,
+        cam_periphery: m * a.per_row_ml_circuit + n * a.per_bit_sl_driver + m * a.encoder_per_entry,
+        cnn_sram: 0,
+        cnn_logic: 0,
+    }
+}
+
+/// The proposed design: sub-blocked CAM (same cells, per-block enable
+/// gating) + the CNN classifier of Fig. 4.
+pub fn proposed_count(cfg: &DesignConfig, a: &TransistorAssumptions) -> TransistorCount {
+    let mut t = conventional_count(cfg.m, cfg.n, CellKind::Xor9T, a);
+    // per-block compare-enable gating on the precharge path: 2T per row +
+    // a 4T driver per block.
+    t.cam_periphery += cfg.m * 2 + cfg.beta() * 4;
+    // CNN weight SRAM: c blocks of l rows × M columns, 6T bits + column circuitry.
+    t.cnn_sram = cfg.c * cfg.l * cfg.m * 6 + cfg.c * cfg.m * a.sram_col_circuit;
+    // CNN logic: c decoders (≈4T per output line), M c-input AND gates
+    // (2·c T each), β ζ-input OR gates (2·ζ T each), β enable drivers (4T).
+    t.cnn_logic =
+        cfg.cl() * 4 + cfg.m * 2 * cfg.c + cfg.beta() * 2 * cfg.zeta + cfg.beta() * 4;
+    t
+}
+
+/// Overhead of the proposed design relative to the conventional NAND design
+/// (the paper's +3.4 % comparison).
+pub fn overhead_vs_nand(cfg: &DesignConfig, a: &TransistorAssumptions) -> f64 {
+    let nand = conventional_count(cfg.m, cfg.n, CellKind::Nand10T, a).total() as f64;
+    let prop = proposed_count(cfg, a).total() as f64;
+    prop / nand - 1.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_overhead_is_small_single_digit_percent() {
+        // Paper: +3.4 %.  Structurally (XOR-9T vs NAND-10T cells offsetting
+        // most of the CNN SRAM) we land in the low single digits; the exact
+        // figure depends on unpublished peripheral sizing — see
+        // EXPERIMENTS.md for the paper-vs-model discussion.
+        let cfg = DesignConfig::reference();
+        let ovh = overhead_vs_nand(&cfg, &TransistorAssumptions::default());
+        assert!((0.0..0.10).contains(&ovh), "overhead {ovh}");
+    }
+
+    #[test]
+    fn cnn_sram_dominates_cnn_addition() {
+        let cfg = DesignConfig::reference();
+        let t = proposed_count(&cfg, &TransistorAssumptions::default());
+        assert!(t.cnn_sram > 5 * t.cnn_logic);
+    }
+
+    #[test]
+    fn reference_cnn_sram_size() {
+        // c·l·M = 3·8·512 = 12 288 weight bits → 73 728 storage transistors.
+        let cfg = DesignConfig::reference();
+        let t = proposed_count(&cfg, &TransistorAssumptions::default());
+        assert_eq!(t.cnn_sram, 12_288 * 6 + 3 * 512 * 10);
+    }
+
+    #[test]
+    fn overhead_shrinks_with_wider_data() {
+        let cfg = DesignConfig::reference();
+        let narrow = overhead_vs_nand(&cfg, &TransistorAssumptions { data_width: 128, ..Default::default() });
+        let wide = overhead_vs_nand(&cfg, &TransistorAssumptions { data_width: 512, ..Default::default() });
+        assert!(wide < narrow);
+    }
+
+    #[test]
+    fn overhead_grows_with_l() {
+        // Doubling l doubles the weight SRAM — the §II-B complexity argument
+        // against training on full-length tags.
+        let cfg = DesignConfig::reference();
+        let big = DesignConfig { l: 64, c: 3, ..DesignConfig::reference() };
+        let a = TransistorAssumptions::default();
+        assert!(
+            proposed_count(&big, &a).cnn_total() > 4 * proposed_count(&cfg, &a).cnn_total()
+        );
+    }
+
+    #[test]
+    fn totals_are_consistent() {
+        let cfg = DesignConfig::reference();
+        let t = proposed_count(&cfg, &TransistorAssumptions::default());
+        assert_eq!(
+            t.total(),
+            t.cam_cells + t.data_sram + t.cam_periphery + t.cnn_sram + t.cnn_logic
+        );
+        assert_eq!(t.cnn_total(), t.cnn_sram + t.cnn_logic);
+    }
+}

@@ -1,0 +1,142 @@
+//! Micro-benchmark timer used by the `harness = false` bench binaries
+//! (criterion-style warmup + repeated sampling, implemented in-tree).
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark: per-iteration timings in nanoseconds.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Mean ns/iter.
+    pub mean_ns: f64,
+    /// Standard deviation of the sample means.
+    pub std_ns: f64,
+    /// Best sample (ns/iter).
+    pub min_ns: f64,
+    /// Iterations per sample.
+    pub iters_per_sample: u64,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    /// criterion-ish one-liner.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12.1} ns/iter (±{:>8.1}, min {:>10.1}, {} samples × {} iters)",
+            self.name, self.mean_ns, self.std_ns, self.min_ns, self.samples, self.iters_per_sample
+        )
+    }
+
+    /// Throughput helper.
+    pub fn per_second(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+/// Warmup-then-sample bench driver.
+pub struct BenchTimer {
+    warmup: Duration,
+    sample_time: Duration,
+    samples: usize,
+}
+
+impl Default for BenchTimer {
+    fn default() -> Self {
+        BenchTimer {
+            warmup: Duration::from_millis(300),
+            sample_time: Duration::from_millis(200),
+            samples: 10,
+        }
+    }
+}
+
+impl BenchTimer {
+    pub fn new(warmup: Duration, sample_time: Duration, samples: usize) -> Self {
+        assert!(samples >= 2);
+        BenchTimer { warmup, sample_time, samples }
+    }
+
+    /// Quick preset for heavyweight bodies (whole-workload benches).
+    pub fn coarse() -> Self {
+        BenchTimer {
+            warmup: Duration::from_millis(50),
+            sample_time: Duration::from_millis(400),
+            samples: 5,
+        }
+    }
+
+    /// Run `body` repeatedly; `body` must return something observable to
+    /// keep the optimizer honest (its result is black-boxed here).
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut body: F) -> BenchResult {
+        // warmup + calibration: how many iters fit in sample_time?
+        let w0 = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while w0.elapsed() < self.warmup {
+            black_box(body());
+            warm_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / warm_iters.max(1) as f64;
+        let iters = ((self.sample_time.as_secs_f64() / per_iter).ceil() as u64).max(1);
+
+        let mut means = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                black_box(body());
+            }
+            means.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        let mean = means.iter().sum::<f64>() / means.len() as f64;
+        let var =
+            means.iter().map(|m| (m - mean) * (m - mean)).sum::<f64>() / (means.len() - 1) as f64;
+        let min = means.iter().copied().fold(f64::INFINITY, f64::min);
+        let result = BenchResult {
+            name: name.to_string(),
+            mean_ns: mean,
+            std_ns: var.sqrt(),
+            min_ns: min,
+            iters_per_sample: iters,
+            samples: self.samples,
+        };
+        println!("{}", result.report());
+        result
+    }
+}
+
+/// Optimizer barrier (stable-Rust equivalent of `std::hint::black_box` —
+/// which we also call; the volatile read guards against inlining through).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_produces_sane_numbers() {
+        let t = BenchTimer::new(
+            Duration::from_millis(5),
+            Duration::from_millis(5),
+            3,
+        );
+        let r = t.run("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.mean_ns * 1.5);
+        assert!(r.per_second() > 0.0);
+    }
+
+    #[test]
+    fn report_contains_name() {
+        let t = BenchTimer::new(Duration::from_millis(2), Duration::from_millis(2), 2);
+        let r = t.run("my-bench", || 42u32);
+        assert!(r.report().contains("my-bench"));
+    }
+}

@@ -1,0 +1,139 @@
+//! Tiny CLI argument helper (offline build — no clap): `--flag`,
+//! `--key value`, and positional arguments, with typed accessors and an
+//! unknown-flag check.
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed argument bag.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    positional: Vec<String>,
+    flags: Vec<String>,
+    options: Vec<(String, String)>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (not including argv[0]).
+    /// `bool_flags` lists the flags that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, bool_flags: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.push((k.to_string(), v.to_string()));
+                } else if bool_flags.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("flag --{name} expects a value"))?;
+                    out.options.push((name.to_string(), v));
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        // last occurrence wins (shell-override convention)
+        self.options.iter().rev().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name} {v}: {e}")),
+        }
+    }
+
+    /// Multi-value option: `--sizes 256,512,1024`.
+    pub fn get_list<T: std::str::FromStr>(&self, name: &str, default: Vec<T>) -> Result<Vec<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse().map_err(|e| anyhow!("--{name} '{s}': {e}")))
+                .collect(),
+        }
+    }
+
+    /// Error on flags/options outside the allowed set (catches typos).
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for f in &self.flags {
+            if !known.contains(&f.as_str()) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        for (k, _) in &self.options {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown option --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_args() {
+        let a = Args::parse(
+            sv(&["serve", "--lookups", "100", "--pjrt", "--hit-ratio=0.9"]),
+            &["pjrt"],
+        )
+        .unwrap();
+        assert_eq!(a.positional(), &["serve".to_string()]);
+        assert!(a.flag("pjrt"));
+        assert_eq!(a.get("lookups"), Some("100"));
+        assert_eq!(a.get_parse("hit-ratio", 0.5f64).unwrap(), 0.9);
+        assert_eq!(a.get_parse("missing", 7usize).unwrap(), 7);
+    }
+
+    #[test]
+    fn list_option() {
+        let a = Args::parse(sv(&["--sizes", "256,512, 1024"]), &[]).unwrap();
+        assert_eq!(a.get_list("sizes", vec![1usize]).unwrap(), vec![256, 512, 1024]);
+        assert_eq!(a.get_list("other", vec![9usize]).unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(sv(&["--lookups"]), &[]).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_check() {
+        let a = Args::parse(sv(&["--weird", "1"]), &[]).unwrap();
+        assert!(a.check_known(&["lookups"]).is_err());
+        assert!(a.check_known(&["weird"]).is_ok());
+    }
+
+    #[test]
+    fn last_occurrence_wins() {
+        let a = Args::parse(sv(&["--m", "1", "--m", "2"]), &[]).unwrap();
+        assert_eq!(a.get("m"), Some("2"));
+    }
+}

@@ -1,0 +1,312 @@
+//! Minimal JSON parser — enough for `artifacts/manifest.json`.
+//!
+//! Supports the full JSON value grammar (objects, arrays, strings with
+//! escapes, numbers, booleans, null); rejects trailing garbage.  Not
+//! performance-critical: the manifest is parsed once at startup.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    Number(f64),
+    String(String),
+    Array(Vec<JsonValue>),
+    Object(BTreeMap<String, JsonValue>),
+}
+
+impl JsonValue {
+    /// Parse a complete JSON document.
+    pub fn parse(text: &str) -> Result<JsonValue> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            bail!("trailing garbage at byte {}", p.pos);
+        }
+        Ok(v)
+    }
+
+    /// Object field access.
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Object(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// Required object field.
+    pub fn req(&self, key: &str) -> Result<&JsonValue> {
+        self.get(key).ok_or_else(|| anyhow!("missing field '{key}'"))
+    }
+
+    pub fn as_object(&self) -> Result<&BTreeMap<String, JsonValue>> {
+        match self {
+            JsonValue::Object(m) => Ok(m),
+            _ => bail!("expected object, got {self:?}"),
+        }
+    }
+
+    pub fn as_array(&self) -> Result<&[JsonValue]> {
+        match self {
+            JsonValue::Array(a) => Ok(a),
+            _ => bail!("expected array, got {self:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            JsonValue::String(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        match self {
+            JsonValue::Number(x) if *x >= 0.0 && x.fract() == 0.0 => Ok(*x as usize),
+            _ => bail!("expected non-negative integer, got {self:?}"),
+        }
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Result<u8> {
+        let b = self.peek().ok_or_else(|| anyhow!("unexpected end of input"))?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        let got = self.bump()?;
+        if got != b {
+            bail!("expected '{}' at byte {}, got '{}'", b as char, self.pos - 1, got as char);
+        }
+        Ok(())
+    }
+
+    fn literal(&mut self, text: &str, v: JsonValue) -> Result<JsonValue> {
+        if self.bytes[self.pos..].starts_with(text.as_bytes()) {
+            self.pos += text.len();
+            Ok(v)
+        } else {
+            bail!("invalid literal at byte {}", self.pos)
+        }
+    }
+
+    fn value(&mut self) -> Result<JsonValue> {
+        self.skip_ws();
+        match self.peek().ok_or_else(|| anyhow!("unexpected end of input"))? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(JsonValue::String(self.string()?)),
+            b't' => self.literal("true", JsonValue::Bool(true)),
+            b'f' => self.literal("false", JsonValue::Bool(false)),
+            b'n' => self.literal("null", JsonValue::Null),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => bail!("unexpected '{}' at byte {}", c as char, self.pos),
+        }
+    }
+
+    fn object(&mut self) -> Result<JsonValue> {
+        self.expect(b'{')?;
+        let mut map = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(JsonValue::Object(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            map.insert(key, val);
+            self.skip_ws();
+            match self.bump()? {
+                b',' => continue,
+                b'}' => return Ok(JsonValue::Object(map)),
+                c => bail!("expected ',' or '}}', got '{}'", c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<JsonValue> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(JsonValue::Array(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.bump()? {
+                b',' => continue,
+                b']' => return Ok(JsonValue::Array(items)),
+                c => bail!("expected ',' or ']', got '{}'", c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.bump()? {
+                b'"' => return Ok(out),
+                b'\\' => match self.bump()? {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'b' => out.push('\u{0008}'),
+                    b'f' => out.push('\u{000C}'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'u' => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let c = self.bump()? as char;
+                            code = code * 16
+                                + c.to_digit(16)
+                                    .ok_or_else(|| anyhow!("bad \\u escape"))?;
+                        }
+                        out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                    }
+                    c => bail!("bad escape '\\{}'", c as char),
+                },
+                c if c < 0x20 => bail!("raw control character in string"),
+                c => {
+                    // re-assemble UTF-8 multibyte sequences
+                    if c < 0x80 {
+                        out.push(c as char);
+                    } else {
+                        let start = self.pos - 1;
+                        let len = utf8_len(c);
+                        self.pos = start + len;
+                        let s = std::str::from_utf8(&self.bytes[start..self.pos])
+                            .map_err(|_| anyhow!("invalid utf-8 in string"))?;
+                        out.push_str(s);
+                    }
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<JsonValue> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')) {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let x: f64 = s.parse().map_err(|_| anyhow!("bad number '{s}'"))?;
+        Ok(JsonValue::Number(x))
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_shaped_document() {
+        let doc = r#"{
+            "config": {"m": 512, "c": 3, "l": 8, "zeta": 8, "q": 9, "beta": 64},
+            "artifacts": {
+                "gd_decode_b1": {
+                    "kind": "decode", "batch": 1,
+                    "inputs": [{"name": "idx", "dtype": "s32", "shape": [1, 3]}],
+                    "outputs": [{"name": "enables", "dtype": "f32", "shape": [1, 64]}]
+                }
+            }
+        }"#;
+        let v = JsonValue::parse(doc).unwrap();
+        assert_eq!(v.req("config").unwrap().req("m").unwrap().as_usize().unwrap(), 512);
+        let art = v.req("artifacts").unwrap().as_object().unwrap();
+        let dec = &art["gd_decode_b1"];
+        assert_eq!(dec.req("kind").unwrap().as_str().unwrap(), "decode");
+        let shape = dec.req("outputs").unwrap().as_array().unwrap()[0]
+            .req("shape")
+            .unwrap()
+            .as_array()
+            .unwrap();
+        assert_eq!(shape[1].as_usize().unwrap(), 64);
+    }
+
+    #[test]
+    fn scalars_and_arrays() {
+        assert_eq!(JsonValue::parse("true").unwrap(), JsonValue::Bool(true));
+        assert_eq!(JsonValue::parse("null").unwrap(), JsonValue::Null);
+        assert_eq!(JsonValue::parse("-2.5e2").unwrap(), JsonValue::Number(-250.0));
+        assert_eq!(
+            JsonValue::parse("[1, 2, 3]").unwrap(),
+            JsonValue::Array(vec![
+                JsonValue::Number(1.0),
+                JsonValue::Number(2.0),
+                JsonValue::Number(3.0)
+            ])
+        );
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = JsonValue::parse(r#""a\n\"b\"A π""#).unwrap();
+        assert_eq!(v, JsonValue::String("a\n\"b\"A π".to_string()));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(JsonValue::parse("{").is_err());
+        assert!(JsonValue::parse("[1,]").is_err());
+        assert!(JsonValue::parse("{} extra").is_err());
+        assert!(JsonValue::parse(r#"{"a" 1}"#).is_err());
+        assert!(JsonValue::parse("tru").is_err());
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(JsonValue::parse("{}").unwrap(), JsonValue::Object(BTreeMap::new()));
+        assert_eq!(JsonValue::parse("[]").unwrap(), JsonValue::Array(vec![]));
+        assert_eq!(JsonValue::parse("  { }  ").unwrap(), JsonValue::Object(BTreeMap::new()));
+    }
+
+    #[test]
+    fn as_usize_rejects_fractions_and_negatives() {
+        assert!(JsonValue::Number(1.5).as_usize().is_err());
+        assert!(JsonValue::Number(-1.0).as_usize().is_err());
+        assert_eq!(JsonValue::Number(7.0).as_usize().unwrap(), 7);
+    }
+}

@@ -1,0 +1,12 @@
+//! Self-contained utilities (the build environment is offline, so the crate
+//! carries its own deterministic RNG, JSON parser, CLI helper and bench
+//! timer instead of pulling `rand`/`serde_json`/`clap`/`criterion`).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+
+pub use bench::BenchTimer;
+pub use json::JsonValue;
+pub use rng::Rng;

@@ -1,0 +1,317 @@
+//! Workload generators: tag populations and query streams.
+//!
+//! The paper's intro motivates CAMs with TLBs [1] and network routers [2];
+//! its analysis assumes uniformly random reduced tags and warns that
+//! non-uniform inputs cost power but not correctness (§I/§II-B).  These
+//! generators provide all of those regimes:
+//!
+//! * [`TagDistribution::Uniform`] — i.i.d. uniform tags (the paper's model);
+//! * [`TagDistribution::Correlated`] — low-entropy tags: a fixed prefix and
+//!   duplicated bit fields, the adversarial case for naive bit selection;
+//! * [`TlbTrace`] — synthetic virtual-page-number stream with a working set
+//!   and sequential strides (TLB regime);
+//! * [`AclTrace`] — synthetic router/classifier tags built from a small
+//!   pool of prefixes with random host bits (IPv6 regime of [2]);
+//! * [`QueryMix`] — hit/miss-controlled query stream over a stored set,
+//!   optionally Zipf-skewed toward hot entries.
+
+use crate::util::Rng;
+
+use crate::bits::BitVec;
+
+/// How full tags are distributed.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TagDistribution {
+    /// Every bit i.i.d. Bernoulli(1/2).
+    Uniform,
+    /// Structured low-entropy tags: the top `fixed_bits` are a constant
+    /// pattern (e.g. a process/VM id), and each bit in `mirror_span` repeats
+    /// the bit below it (strong pairwise correlation).
+    Correlated { fixed_bits: usize, mirror_span: usize },
+}
+
+impl TagDistribution {
+    /// Draw one n-bit tag.
+    pub fn sample(&self, n: usize, rng: &mut Rng) -> BitVec {
+        match self {
+            TagDistribution::Uniform => random_tag(n, rng),
+            TagDistribution::Correlated { fixed_bits, mirror_span } => {
+                let mut t = random_tag(n, rng);
+                // constant high field
+                for b in n.saturating_sub(*fixed_bits)..n {
+                    t.set(b, (b % 2) == 0);
+                }
+                // mirrored low field: bit b copies bit b−1 for odd b
+                let span = (*mirror_span).min(n.saturating_sub(*fixed_bits));
+                for b in (1..span).step_by(2) {
+                    let below = t.get(b - 1);
+                    t.set(b, below);
+                }
+                t
+            }
+        }
+    }
+
+    /// Draw `count` *distinct* tags (the CAM stores unique entries).
+    pub fn sample_distinct(&self, n: usize, count: usize, rng: &mut Rng) -> Vec<BitVec> {
+        let mut seen = std::collections::HashSet::new();
+        let mut out = Vec::with_capacity(count);
+        let mut guard = 0usize;
+        while out.len() < count {
+            let t = self.sample(n, rng);
+            guard += 1;
+            assert!(
+                guard < count * 1000 + 10_000,
+                "tag space too small for {count} distinct tags"
+            );
+            if seen.insert(t.clone()) {
+                out.push(t);
+            }
+        }
+        out
+    }
+}
+
+/// One uniform n-bit tag.
+pub fn random_tag(n: usize, rng: &mut Rng) -> BitVec {
+    let mut t = BitVec::zeros(n);
+    for w in t.words_mut() {
+        *w = rng.gen_u64();
+    }
+    // mask tail
+    let rem = n % 64;
+    if rem != 0 {
+        if let Some(last) = t.words_mut().last_mut() {
+            *last &= (1u64 << rem) - 1;
+        }
+    }
+    t
+}
+
+/// A query stream over a stored tag set with a controlled hit ratio and
+/// optional Zipf skew toward low-index (hot) entries.
+#[derive(Debug, Clone)]
+pub struct QueryMix {
+    /// Probability a query hits a stored tag.
+    pub hit_ratio: f64,
+    /// Zipf exponent over the stored set (0.0 = uniform over entries).
+    pub zipf_s: f64,
+}
+
+impl Default for QueryMix {
+    fn default() -> Self {
+        QueryMix { hit_ratio: 1.0, zipf_s: 0.0 }
+    }
+}
+
+impl QueryMix {
+    /// Draw one query: a stored tag (hit) or a fresh random tag (miss).
+    pub fn sample<'a>(
+        &self,
+        stored: &'a [BitVec],
+        n: usize,
+        rng: &mut Rng,
+    ) -> (BitVec, Option<usize>) {
+        if !stored.is_empty() && rng.gen_bool(self.hit_ratio.clamp(0.0, 1.0)) {
+            let i = if self.zipf_s > 0.0 {
+                zipf_index(stored.len(), self.zipf_s, rng)
+            } else {
+                rng.gen_range(stored.len())
+            };
+            (stored[i].clone(), Some(i))
+        } else {
+            (random_tag(n, rng), None)
+        }
+    }
+}
+
+/// Draw an index in [0, n) with P(i) ∝ 1/(i+1)^s (simple inverse-CDF walk —
+/// fine for the n ≤ a few thousand this simulator uses).
+fn zipf_index(n: usize, s: f64, rng: &mut Rng) -> usize {
+    let h: f64 = (0..n).map(|i| 1.0 / ((i + 1) as f64).powf(s)).sum();
+    let mut u = rng.gen_f64() * h;
+    for i in 0..n {
+        u -= 1.0 / ((i + 1) as f64).powf(s);
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    n - 1
+}
+
+/// Synthetic TLB trace: virtual page numbers with a hot working set,
+/// sequential strides (page walks), and occasional random jumps.
+#[derive(Debug, Clone)]
+pub struct TlbTrace {
+    /// Tag width (VPN bits, zero-extended to the CAM's N).
+    pub n: usize,
+    /// Working-set size in pages.
+    pub working_set: usize,
+    /// Probability of a sequential next-page access.
+    pub p_sequential: f64,
+    /// Probability of jumping to a brand-new page (TLB miss pressure).
+    pub p_new: f64,
+}
+
+impl TlbTrace {
+    /// Generate `len` VPN accesses; returns the trace and the set of unique
+    /// pages touched (in first-touch order) for CAM population.
+    pub fn generate(&self, len: usize, rng: &mut Rng) -> (Vec<BitVec>, Vec<BitVec>) {
+        assert!(self.working_set > 0 && self.n <= 63);
+        let mask = (1u64 << self.n) - 1;
+        let mut pages: Vec<u64> = (0..self.working_set).map(|_| rng.gen_u64() & mask).collect();
+        let mut trace = Vec::with_capacity(len);
+        let mut seen = std::collections::HashSet::new();
+        let mut uniq = Vec::new();
+        let mut cur = pages[0];
+        for _ in 0..len {
+            let r = rng.gen_f64();
+            if r < self.p_sequential {
+                cur = cur.wrapping_add(1) & mask;
+            } else if r < self.p_sequential + self.p_new {
+                cur = rng.gen_u64() & mask;
+                pages.push(cur);
+            } else {
+                cur = pages[rng.gen_range(pages.len())];
+            }
+            let tag = BitVec::from_u128(cur as u128, self.n);
+            if seen.insert(cur) {
+                uniq.push(tag.clone());
+            }
+            trace.push(tag);
+        }
+        (trace, uniq)
+    }
+}
+
+/// Synthetic router/ACL tags: a handful of route prefixes (high bits) with
+/// uniform host bits — strongly non-uniform in the high field, exactly the
+/// case §II-B's bit selection addresses.
+#[derive(Debug, Clone)]
+pub struct AclTrace {
+    pub n: usize,
+    /// Number of distinct prefixes.
+    pub prefixes: usize,
+    /// Prefix length in bits.
+    pub prefix_len: usize,
+}
+
+impl AclTrace {
+    /// Generate `count` distinct classifier tags.
+    pub fn generate(&self, count: usize, rng: &mut Rng) -> Vec<BitVec> {
+        assert!(self.prefix_len < self.n);
+        let prefixes: Vec<u64> = (0..self.prefixes).map(|_| rng.gen_u64()).collect();
+        let mut seen = std::collections::HashSet::new();
+        let mut out = Vec::with_capacity(count);
+        while out.len() < count {
+            let p = prefixes[rng.gen_range(prefixes.len())];
+            let mut t = random_tag(self.n, rng);
+            for b in 0..self.prefix_len {
+                t.set(self.n - 1 - b, (p >> (b % 64)) & 1 == 1);
+            }
+            if seen.insert(t.clone()) {
+                out.push(t);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn uniform_tags_have_full_entropy() {
+        let mut rng = Rng::seed_from_u64(1);
+        let tags = TagDistribution::Uniform.sample_distinct(128, 500, &mut rng);
+        assert_eq!(tags.len(), 500);
+        // every bit position should be ~half set
+        for b in [0usize, 31, 64, 127] {
+            let ones = tags.iter().filter(|t| t.get(b)).count();
+            assert!((150..350).contains(&ones), "bit {b}: {ones}");
+        }
+    }
+
+    #[test]
+    fn correlated_tags_have_constant_high_field() {
+        let mut rng = Rng::seed_from_u64(2);
+        let d = TagDistribution::Correlated { fixed_bits: 32, mirror_span: 16 };
+        let tags: Vec<_> = (0..100).map(|_| d.sample(128, &mut rng)).collect();
+        for b in 96..128 {
+            let ones = tags.iter().filter(|t| t.get(b)).count();
+            assert!(ones == 0 || ones == 100, "bit {b} should be constant");
+        }
+        // mirrored: odd low bits equal the bit below
+        for t in &tags {
+            for b in (1..16).step_by(2) {
+                assert_eq!(t.get(b), t.get(b - 1));
+            }
+        }
+    }
+
+    #[test]
+    fn query_mix_hits_controlled() {
+        let mut rng = Rng::seed_from_u64(3);
+        let stored = TagDistribution::Uniform.sample_distinct(64, 50, &mut rng);
+        let mix = QueryMix { hit_ratio: 0.8, zipf_s: 0.0 };
+        let mut hits = 0;
+        for _ in 0..1000 {
+            let (_, hit) = mix.sample(&stored, 64, &mut rng);
+            hits += hit.is_some() as usize;
+        }
+        assert!((730..870).contains(&hits), "hits = {hits}");
+    }
+
+    #[test]
+    fn zipf_skews_to_head() {
+        let mut rng = Rng::seed_from_u64(4);
+        let stored = TagDistribution::Uniform.sample_distinct(64, 100, &mut rng);
+        let mix = QueryMix { hit_ratio: 1.0, zipf_s: 1.2 };
+        let mut head = 0;
+        for _ in 0..2000 {
+            let (_, hit) = mix.sample(&stored, 64, &mut rng);
+            if hit.unwrap() < 10 {
+                head += 1;
+            }
+        }
+        // top-10 of 100 entries should draw well over 10 % of queries
+        assert!(head > 600, "head = {head}");
+    }
+
+    #[test]
+    fn tlb_trace_has_locality() {
+        let mut rng = Rng::seed_from_u64(5);
+        let t = TlbTrace { n: 52, working_set: 32, p_sequential: 0.5, p_new: 0.02 };
+        let (trace, uniq) = t.generate(2000, &mut rng);
+        assert_eq!(trace.len(), 2000);
+        assert!(!uniq.is_empty());
+        // locality ⇒ far fewer unique pages than accesses
+        assert!(uniq.len() < 800, "unique = {}", uniq.len());
+    }
+
+    #[test]
+    fn acl_trace_prefixes_are_reused() {
+        let mut rng = Rng::seed_from_u64(6);
+        let a = AclTrace { n: 128, prefixes: 4, prefix_len: 48 };
+        let tags = a.generate(200, &mut rng);
+        assert_eq!(tags.len(), 200);
+        // high prefix bits take at most `prefixes` distinct patterns
+        let mut pats = std::collections::HashSet::new();
+        for t in &tags {
+            let pat: Vec<bool> = (0..48).map(|b| t.get(127 - b)).collect();
+            pats.insert(pat);
+        }
+        assert!(pats.len() <= 4, "{} prefixes", pats.len());
+    }
+
+    #[test]
+    fn distinct_sampler_rejects_impossible_requests() {
+        let mut rng = Rng::seed_from_u64(7);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            TagDistribution::Uniform.sample_distinct(2, 100, &mut rng)
+        }));
+        assert!(r.is_err(), "2-bit space cannot hold 100 distinct tags");
+    }
+}

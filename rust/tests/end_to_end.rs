@@ -1,0 +1,187 @@
+//! End-to-end system tests: full workloads through the coordinator,
+//! non-uniform-input behaviour, shard scale-out, and the paper's §II claim
+//! that non-uniformity costs power but never accuracy.
+
+use std::time::Duration;
+
+use cscam::cnn::Selection;
+use cscam::config::DesignConfig;
+use cscam::coordinator::{BatchPolicy, CamServer, DecodeBackend, LookupEngine, ShardRouter};
+use cscam::util::Rng;
+use cscam::workload::{AclTrace, QueryMix, TagDistribution, TlbTrace};
+
+#[test]
+fn reference_design_full_occupancy_workload() {
+    // Fill the full 512-entry reference CAM and serve a hit/miss mix; check
+    // hit accounting, ambiguity statistics and the energy band.
+    let cfg = DesignConfig::reference();
+    let mut engine = LookupEngine::new(cfg.clone());
+    let mut rng = Rng::seed_from_u64(11);
+    let stored = TagDistribution::Uniform.sample_distinct(cfg.n, cfg.m, &mut rng);
+    for t in &stored {
+        engine.insert(t).unwrap();
+    }
+    assert_eq!(engine.occupancy(), cfg.m);
+
+    let mix = QueryMix { hit_ratio: 0.75, zipf_s: 0.0 };
+    let mut hits = 0usize;
+    let mut energy = 0.0;
+    let mut lambda_sum = 0usize;
+    let queries = 2_000;
+    for _ in 0..queries {
+        let (tag, expect) = mix.sample(&stored, cfg.n, &mut rng);
+        let out = engine.lookup(&tag).unwrap();
+        match expect {
+            Some(i) => {
+                assert_eq!(out.addr, Some(i));
+                hits += 1;
+                lambda_sum += out.lambda;
+            }
+            None => assert_eq!(out.addr, None, "false positive on a random miss"),
+        }
+        energy += out.energy.total_fj();
+    }
+    assert!((0.70..0.80).contains(&(hits as f64 / queries as f64)));
+    // measured λ on hits ≈ closed form (±10 %)
+    let mean_lambda = lambda_sum as f64 / hits as f64;
+    let expected = cfg.expected_lambda();
+    assert!((mean_lambda - expected).abs() / expected < 0.10, "λ̄ {mean_lambda} vs {expected}");
+    // measured per-search energy lands in the paper band (hit-heavy mix)
+    let per_bit = energy / queries as f64 / (cfg.m * cfg.n) as f64;
+    assert!((0.08..0.16).contains(&per_bit), "measured {per_bit} fJ/bit/search");
+}
+
+#[test]
+fn tlb_workload_through_server_with_replacement() {
+    // A TLB in front of a page table: misses insert (with FIFO replacement
+    // once full), hits are served; the CNN stays consistent throughout.
+    let cfg = DesignConfig { m: 64, n: 52, zeta: 8, c: 3, l: 4, ..DesignConfig::reference() };
+    let mut engine = LookupEngine::new(cfg.clone());
+    let mut rng = Rng::seed_from_u64(5);
+    let trace = TlbTrace { n: 52, working_set: 48, p_sequential: 0.15, p_new: 0.01 }
+        .generate(3_000, &mut rng)
+        .0;
+
+    let mut resident: Vec<Option<cscam::bits::BitVec>> = vec![None; cfg.m];
+    let mut next_victim = 0usize;
+    let (mut hits, mut misses) = (0usize, 0usize);
+    for vpn in &trace {
+        let out = engine.lookup(vpn).unwrap();
+        match out.addr {
+            Some(addr) => {
+                hits += 1;
+                assert_eq!(resident[addr].as_ref(), Some(vpn), "TLB returned the wrong page");
+            }
+            None => {
+                misses += 1;
+                let victim = next_victim;
+                next_victim = (next_victim + 1) % cfg.m;
+                engine.insert_at(victim, vpn).unwrap();
+                resident[victim] = Some(vpn.clone());
+            }
+        }
+    }
+    assert!(hits > misses, "locality should make hits dominate: {hits} vs {misses}");
+}
+
+#[test]
+fn correlated_tags_cost_energy_not_accuracy() {
+    // §I/§II-B: non-uniform reduced tags enable more sub-blocks (more
+    // energy) but the result stays exact.  Naive contiguous selection on
+    // ACL-style tags (constant prefix in the selected window when selecting
+    // high bits) must still answer correctly, just less efficiently than
+    // the strided selection.
+    let cfg = DesignConfig { m: 128, n: 64, zeta: 8, c: 3, l: 4, ..DesignConfig::reference() };
+    let mut rng = Rng::seed_from_u64(77);
+    let tags = AclTrace { n: cfg.n, prefixes: 4, prefix_len: 40 }.generate(cfg.m, &mut rng);
+
+    // bad: select q bits from the nearly-constant prefix (top of the tag)
+    let q = cfg.q();
+    let bad = Selection::explicit((cfg.n - q..cfg.n).collect(), cfg.k());
+    // good: entropy-driven selection from a sample
+    let good = Selection::entropy_greedy(&tags, cfg.n, cfg.c, cfg.k());
+
+    let mut results = Vec::new();
+    for sel in [bad, good] {
+        let mut engine = LookupEngine::with_selection(cfg.clone(), sel);
+        for t in &tags {
+            engine.insert(t).unwrap();
+        }
+        let mut comparisons = 0usize;
+        for (i, t) in tags.iter().enumerate() {
+            let out = engine.lookup(t).unwrap();
+            assert_eq!(out.addr, Some(i), "accuracy must not depend on bit selection");
+            comparisons += out.comparisons;
+        }
+        results.push(comparisons as f64 / tags.len() as f64);
+    }
+    let (bad_cmp, good_cmp) = (results[0], results[1]);
+    assert!(
+        bad_cmp > 2.0 * good_cmp,
+        "correlated selection must burn more comparisons: bad {bad_cmp} vs good {good_cmp}"
+    );
+}
+
+#[test]
+fn shard_router_scales_capacity() {
+    let cfg = DesignConfig::small_test();
+    let mut router = ShardRouter::new(cfg.clone(), 4);
+    let mut rng = Rng::seed_from_u64(9);
+    // more tags than one macro can hold
+    let tags = TagDistribution::Uniform.sample_distinct(cfg.n, 3 * cfg.m, &mut rng);
+    let mut inserted = 0usize;
+    for t in &tags {
+        if router.insert(t).is_ok() {
+            inserted += 1;
+        }
+    }
+    assert!(inserted > cfg.m, "sharding must exceed single-macro capacity: {inserted}");
+    let mut found = 0usize;
+    for t in &tags {
+        if router.lookup(t).unwrap().1.addr.is_some() {
+            found += 1;
+        }
+    }
+    assert_eq!(found, inserted);
+}
+
+#[test]
+fn server_under_concurrent_mixed_load() {
+    let cfg = DesignConfig::small_test();
+    let server = CamServer::new(
+        cfg.clone(),
+        DecodeBackend::Native,
+        BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(200) },
+    );
+    let h = server.spawn();
+    let mut rng = Rng::seed_from_u64(31);
+    let tags = TagDistribution::Uniform.sample_distinct(cfg.n, 48, &mut rng);
+    for t in &tags {
+        h.insert(t.clone()).unwrap();
+    }
+    let mut joins = Vec::new();
+    for worker in 0..6 {
+        let h = h.clone();
+        let tags = tags.clone();
+        let n = cfg.n;
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::seed_from_u64(1000 + worker);
+            let mut hits = 0usize;
+            for i in 0..200 {
+                if i % 10 == 0 {
+                    let t = cscam::workload::random_tag(n, &mut rng);
+                    let _ = h.lookup(t);
+                } else {
+                    let t = tags[rng.gen_range(tags.len())].clone();
+                    hits += h.lookup(t).unwrap().addr.is_some() as usize;
+                }
+            }
+            hits
+        }));
+    }
+    let total_hits: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+    assert_eq!(total_hits, 6 * 180);
+    let m = h.metrics().unwrap();
+    assert_eq!(m.lookups, 6 * 200);
+    assert!(m.batch_size.mean() >= 1.0);
+}

@@ -1,0 +1,152 @@
+//! End-to-end three-layer integration: the AOT artifacts produced by
+//! `python/compile/aot.py` (L2/L1) must decode *bit-identically* to the
+//! native bit-packed CNN (L3's reference path).
+//!
+//! Requires `make artifacts` to have run; every test self-skips otherwise
+//! (CI runs `make test`, which builds artifacts first).
+
+use cscam::bits::BitVec;
+use cscam::cnn::ClusteredNetwork;
+use cscam::config::DesignConfig;
+use cscam::coordinator::{BatchPolicy, CamServer, DecodeBackend, LookupEngine};
+use cscam::runtime::{artifacts_available, default_artifact_dir, ArtifactStore};
+use cscam::util::Rng;
+use cscam::workload::TagDistribution;
+
+fn store_or_skip() -> Option<ArtifactStore> {
+    if !artifacts_available() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(ArtifactStore::load(&default_artifact_dir()).expect("artifacts load"))
+}
+
+/// Build a trained network matching the artifact geometry plus the entry
+/// list used to train it.
+fn trained_network(store: &ArtifactStore, seed: u64) -> (ClusteredNetwork, Vec<Vec<u16>>) {
+    let cfg = &store.manifest().config;
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut net = ClusteredNetwork::new(cfg.c, cfg.l, cfg.m, cfg.zeta);
+    let mut entries = Vec::with_capacity(cfg.m);
+    for addr in 0..cfg.m {
+        let idx: Vec<u16> = (0..cfg.c).map(|_| rng.gen_range(cfg.l) as u16).collect();
+        net.train(&idx, addr);
+        entries.push(idx);
+    }
+    (net, entries)
+}
+
+#[test]
+fn artifact_decode_matches_native_bit_for_bit() {
+    let Some(mut store) = store_or_skip() else { return };
+    let (net, entries) = trained_network(&store, 42);
+    store.set_weights(net.rows()).expect("upload weights");
+
+    let cfg = store.manifest().config.clone();
+    let mut rng = Rng::seed_from_u64(7);
+    // mix of stored and random reduced tags, across every compiled batch size
+    for &batch in &store.batch_sizes() {
+        let queries: Vec<Vec<u16>> = (0..batch)
+            .map(|i| {
+                if i % 2 == 0 {
+                    entries[rng.gen_range(entries.len())].clone()
+                } else {
+                    (0..cfg.c).map(|_| rng.gen_range(cfg.l) as u16).collect()
+                }
+            })
+            .collect();
+        let out = store.decode(&queries).expect("pjrt decode");
+        assert_eq!(out.enables.len(), batch);
+        for (i, q) in queries.iter().enumerate() {
+            let native = net.decode(q);
+            assert_eq!(out.lambda[i] as usize, native.lambda, "λ mismatch, batch {batch} q {i}");
+            assert_eq!(out.enables[i], native.enables, "enable mismatch, batch {batch} q {i}");
+        }
+    }
+}
+
+#[test]
+fn artifact_decode_pads_partial_batches() {
+    let Some(mut store) = store_or_skip() else { return };
+    let (net, entries) = trained_network(&store, 1);
+    store.set_weights(net.rows()).expect("upload weights");
+    // 3 queries → padded to the smallest compiled batch ≥ 3
+    let queries: Vec<Vec<u16>> = entries[..3].to_vec();
+    let out = store.decode(&queries).expect("decode");
+    assert_eq!(out.enables.len(), 3);
+    assert_eq!(out.lambda.len(), 3);
+    for (i, q) in queries.iter().enumerate() {
+        assert_eq!(out.lambda[i] as usize, net.decode(q).lambda);
+    }
+}
+
+#[test]
+fn artifact_train_matches_native_training() {
+    let Some(mut store) = store_or_skip() else { return };
+    let cfg = store.manifest().config.clone();
+    let mut rng = Rng::seed_from_u64(9);
+    let idx: Vec<Vec<u16>> = (0..cfg.m)
+        .map(|_| (0..cfg.c).map(|_| rng.gen_range(cfg.l) as u16).collect())
+        .collect();
+    let addr: Vec<u32> = (0..cfg.m as u32).collect();
+
+    let rows = store.train(&idx, &addr).expect("pjrt train");
+
+    let mut net = ClusteredNetwork::new(cfg.c, cfg.l, cfg.m, cfg.zeta);
+    for (a, i) in idx.iter().enumerate() {
+        net.train(i, a);
+    }
+    assert_eq!(rows.len(), net.rows().len());
+    for (r, (got, want)) in rows.iter().zip(net.rows()).enumerate() {
+        assert_eq!(got, want, "weight row {r} mismatch");
+    }
+}
+
+#[test]
+fn served_lookups_agree_between_backends() {
+    let Some(store) = store_or_skip() else { return };
+    let mcfg = store.manifest().config.clone();
+    let cfg = DesignConfig {
+        m: mcfg.m,
+        n: 128,
+        zeta: mcfg.zeta,
+        c: mcfg.c,
+        l: mcfg.l,
+        ..DesignConfig::reference()
+    };
+
+    // identical engines + tag sets on both backends
+    let mut rng = Rng::seed_from_u64(21);
+    let tags = TagDistribution::Uniform.sample_distinct(cfg.n, 256, &mut rng);
+
+    let mut native_engine = LookupEngine::new(cfg.clone());
+    let mut pjrt_engine = LookupEngine::new(cfg.clone());
+    for t in &tags {
+        native_engine.insert(t).unwrap();
+        pjrt_engine.insert(t).unwrap();
+    }
+    let native = CamServer::with_engine(native_engine, DecodeBackend::Native, BatchPolicy::default())
+        .spawn();
+    let pjrt = CamServer::with_engine(
+        pjrt_engine,
+        DecodeBackend::Pjrt(Box::new(store)),
+        BatchPolicy::default(),
+    )
+    .spawn();
+
+    let mut miss_rng = Rng::seed_from_u64(5);
+    for i in 0..64 {
+        let tag: BitVec = if i % 3 == 0 {
+            cscam::workload::random_tag(cfg.n, &mut miss_rng)
+        } else {
+            tags[i * 3 % tags.len()].clone()
+        };
+        let a = native.lookup(tag.clone()).unwrap();
+        let b = pjrt.lookup(tag).unwrap();
+        assert_eq!(a.addr, b.addr, "query {i}");
+        assert_eq!(a.lambda, b.lambda, "query {i}");
+        assert_eq!(a.enabled_blocks, b.enabled_blocks, "query {i}");
+    }
+    let pm = pjrt.metrics().unwrap();
+    assert_eq!(pm.lookups, 64);
+}

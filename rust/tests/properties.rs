@@ -1,0 +1,207 @@
+//! Property-based tests over randomized inputs (in-tree driver: hundreds of
+//! seeded random cases per property — the offline stand-in for proptest).
+//!
+//! Invariants under test are the paper's correctness arguments:
+//!  P1  the CNN never misses: every stored tag's sub-block is enabled;
+//!  P2  enables are the exact ζ-group OR of the activation map;
+//!  P3  λ equals the number of entries sharing the query's reduced tag
+//!      (single-trained-address networks);
+//!  P4  the proposed search returns exactly the same matches as the
+//!      conventional full search (classification saves power, not answers);
+//!  P5  energy accounting is additive and monotone in enabled rows;
+//!  P6  insert → delete → retrain returns the engine to a clean state.
+
+use cscam::bits::BitVec;
+use cscam::cam::CamArray;
+use cscam::cnn::{ClusteredNetwork, Selection};
+use cscam::config::DesignConfig;
+use cscam::coordinator::LookupEngine;
+use cscam::energy::{energy_from_activity, CalibrationConstants, SearchActivity};
+use cscam::util::Rng;
+use cscam::workload::TagDistribution;
+
+/// Run `body` for `cases` random geometries.
+fn for_random_geometries(cases: usize, seed: u64, mut body: impl FnMut(&mut Rng, usize, usize, usize, usize)) {
+    let mut rng = Rng::seed_from_u64(seed);
+    for _ in 0..cases {
+        let c = 1 + rng.gen_range(4); // 1..=4
+        let l = 1usize << (1 + rng.gen_range(4)); // 2..=16
+        let zeta = 1usize << rng.gen_range(4); // 1..=8
+        let m = zeta * (4 + rng.gen_range(32)); // multiple of zeta
+        let mut r2 = rng.fork();
+        body(&mut r2, c, l, m, zeta);
+    }
+}
+
+#[test]
+fn p1_no_false_negatives_across_geometries() {
+    for_random_geometries(150, 101, |rng, c, l, m, zeta| {
+        let mut net = ClusteredNetwork::new(c, l, m, zeta);
+        let entries = 1 + rng.gen_range(m);
+        let mut tags = Vec::new();
+        for addr in 0..entries {
+            let idx: Vec<u16> = (0..c).map(|_| rng.gen_range(l) as u16).collect();
+            net.train(&idx, addr);
+            tags.push(idx);
+        }
+        for (addr, idx) in tags.iter().enumerate() {
+            let a = net.decode(idx);
+            assert!(a.act.get(addr), "c={c} l={l} m={m} ζ={zeta} addr={addr}");
+            assert!(a.enables.get(addr / zeta));
+        }
+    });
+}
+
+#[test]
+fn p2_enables_are_exact_group_or() {
+    for_random_geometries(150, 202, |rng, c, l, m, zeta| {
+        let mut net = ClusteredNetwork::new(c, l, m, zeta);
+        for addr in 0..m / 2 {
+            let idx: Vec<u16> = (0..c).map(|_| rng.gen_range(l) as u16).collect();
+            net.train(&idx, addr);
+        }
+        let q: Vec<u16> = (0..c).map(|_| rng.gen_range(l) as u16).collect();
+        let a = net.decode(&q);
+        for b in 0..m / zeta {
+            let group_any = (b * zeta..(b + 1) * zeta).any(|i| a.act.get(i));
+            assert_eq!(a.enables.get(b), group_any, "block {b}");
+        }
+        assert_eq!(a.lambda, a.act.count_ones());
+    });
+}
+
+#[test]
+fn p3_lambda_counts_reduced_tag_collisions() {
+    for_random_geometries(100, 303, |rng, c, l, m, zeta| {
+        let mut net = ClusteredNetwork::new(c, l, m, zeta);
+        let mut stored: Vec<Vec<u16>> = Vec::new();
+        for addr in 0..m {
+            let idx: Vec<u16> = (0..c).map(|_| rng.gen_range(l) as u16).collect();
+            net.train(&idx, addr);
+            stored.push(idx);
+        }
+        let probe = &stored[rng.gen_range(stored.len())];
+        let expected = stored.iter().filter(|s| s == &probe).count();
+        assert_eq!(net.decode(probe).lambda, expected);
+    });
+}
+
+#[test]
+fn p4_proposed_and_conventional_return_identical_matches() {
+    let mut rng = Rng::seed_from_u64(404);
+    for _ in 0..60 {
+        let cfg = DesignConfig::small_test();
+        let mut engine = LookupEngine::new(cfg.clone());
+        let mut cam = CamArray::new(cfg.m, cfg.n, cfg.zeta);
+        let count = 1 + rng.gen_range(cfg.m);
+        let tags = TagDistribution::Uniform.sample_distinct(cfg.n, count, &mut rng);
+        for (a, t) in tags.iter().enumerate() {
+            engine.insert(t).unwrap();
+            cam.write(a, t.clone());
+        }
+        // stored hits and random probes
+        for probe in tags.iter().take(8).cloned().chain((0..8).map(|_| {
+            cscam::workload::random_tag(cfg.n, &mut rng)
+        })) {
+            let prop = engine.lookup(&probe).unwrap();
+            let conv = cam.search_all(&probe);
+            assert_eq!(prop.all_matches, conv.matches, "classified search changed the answer");
+        }
+    }
+}
+
+#[test]
+fn p5_energy_monotone_and_additive() {
+    let cfg = DesignConfig::reference();
+    let calib = CalibrationConstants::reference_130nm();
+    let mut rng = Rng::seed_from_u64(505);
+    for _ in 0..200 {
+        let rows_a = rng.gen_range(cfg.m);
+        let rows_b = rng.gen_range(cfg.m - rows_a.min(cfg.m - 1));
+        let act = |rows: usize| SearchActivity {
+            enabled_rows: rows,
+            enabled_blocks: rows / cfg.zeta,
+            tag_bits: cfg.n,
+            total_blocks: cfg.beta(),
+            ..Default::default()
+        };
+        let e_a = energy_from_activity(&cfg, &calib, &act(rows_a), 1).total_fj();
+        let e_b = energy_from_activity(&cfg, &calib, &act(rows_b), 1).total_fj();
+        let e_ab = energy_from_activity(&cfg, &calib, &act(rows_a + rows_b), 2).total_fj();
+        assert!((e_a + e_b - e_ab).abs() < 1e-6, "additivity");
+        if rows_a > rows_b {
+            assert!(e_a > e_b, "monotonicity");
+        }
+    }
+}
+
+#[test]
+fn p6_insert_delete_retrain_reaches_clean_state() {
+    let mut rng = Rng::seed_from_u64(606);
+    for _ in 0..40 {
+        let cfg = DesignConfig::small_test();
+        let mut engine = LookupEngine::new(cfg.clone());
+        engine.retrain_threshold = 0.0;
+        let count = 1 + rng.gen_range(cfg.m / 2);
+        let tags = TagDistribution::Uniform.sample_distinct(cfg.n, count, &mut rng);
+        let mut addrs = Vec::new();
+        for t in &tags {
+            addrs.push(engine.insert(t).unwrap());
+        }
+        for &a in &addrs {
+            engine.delete(a).unwrap();
+        }
+        engine.retrain();
+        assert_eq!(engine.occupancy(), 0);
+        for t in &tags {
+            let out = engine.lookup(t).unwrap();
+            assert_eq!(out.addr, None);
+            assert_eq!(out.lambda, 0, "stale weights must be gone");
+            assert_eq!(out.comparisons, 0, "clean engine burns nothing");
+        }
+    }
+}
+
+#[test]
+fn p7_bit_selection_policies_never_affect_correctness() {
+    // §II-B: bit selection changes power, never the final answer.
+    let mut rng = Rng::seed_from_u64(707);
+    let cfg = DesignConfig::small_test();
+    for sel in [
+        Selection::contiguous(cfg.c, cfg.k()),
+        Selection::strided(cfg.n, cfg.c, cfg.k()),
+    ] {
+        let mut engine = LookupEngine::with_selection(cfg.clone(), sel);
+        let tags = TagDistribution::Correlated { fixed_bits: 16, mirror_span: 8 }
+            .sample_distinct(cfg.n, 48, &mut rng);
+        for t in &tags {
+            engine.insert(t).unwrap();
+        }
+        for (i, t) in tags.iter().enumerate() {
+            assert_eq!(engine.lookup(t).unwrap().addr, Some(i));
+        }
+    }
+}
+
+#[test]
+fn p8_bitvec_word_ops_match_naive_bit_loop() {
+    let mut rng = Rng::seed_from_u64(808);
+    for _ in 0..200 {
+        let n = 1 + rng.gen_range(300);
+        let a_bits: Vec<bool> = (0..n).map(|_| rng.gen_bool(0.5)).collect();
+        let b_bits: Vec<bool> = (0..n).map(|_| rng.gen_bool(0.5)).collect();
+        let a = BitVec::from_bools(&a_bits);
+        let b = BitVec::from_bools(&b_bits);
+        let mut and = a.clone();
+        and.and_assign(&b);
+        let mut or = a.clone();
+        or.or_assign(&b);
+        for i in 0..n {
+            assert_eq!(and.get(i), a_bits[i] && b_bits[i]);
+            assert_eq!(or.get(i), a_bits[i] || b_bits[i]);
+        }
+        let ham = a_bits.iter().zip(&b_bits).filter(|(x, y)| x != y).count();
+        assert_eq!(a.hamming(&b), ham);
+        assert_eq!(a.count_ones(), a_bits.iter().filter(|&&x| x).count());
+    }
+}
