@@ -1,0 +1,17 @@
+# Convenience targets for the cscam workspace.
+
+.PHONY: build test artifacts
+
+# Tier-1 gate.
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# Lower the JAX decode/train graphs to HLO text artifacts for the PJRT
+# backend (build-time Python; the Rust request path never runs Python).
+# Consumed by `cargo run --features pjrt -- serve --pjrt` and the
+# pjrt_roundtrip tests.
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../artifacts

@@ -1,4 +1,4 @@
-//! Ablation benches for the design choices DESIGN.md calls out:
+//! Ablation benches for the crate's headline design choices:
 //!
 //!  A1  ζ sweep at the reference point — comparisons / energy / wiring
 //!      trade-off (§III-B criteria 1 & 2);
@@ -77,7 +77,10 @@ fn main() {
     let rules = AclTrace { n: cfg.n, prefixes: 6, prefix_len: 48 }.generate(cfg.m, &mut rng);
     println!("{:<30} {:>10} {:>12} {:>16}", "policy", "λ̄", "blocks̄", "E [fJ/bit/srch]");
     let policies: Vec<(&str, Selection)> = vec![
-        ("high-bits (prefix, worst)", Selection::explicit((cfg.n - cfg.q()..cfg.n).collect(), cfg.k())),
+        (
+            "high-bits (prefix, worst)",
+            Selection::explicit((cfg.n - cfg.q()..cfg.n).collect(), cfg.k()),
+        ),
         ("contiguous (low bits)", Selection::contiguous(cfg.c, cfg.k())),
         ("strided", Selection::strided(cfg.n, cfg.c, cfg.k())),
         ("entropy-greedy", Selection::entropy_greedy(&rules, cfg.n, cfg.c, cfg.k())),
@@ -87,7 +90,8 @@ fn main() {
         for r in &rules {
             engine.insert(r).unwrap();
         }
-        let (mut lam, mut blk, mut en) = (OnlineStats::new(), OnlineStats::new(), OnlineStats::new());
+        let (mut lam, mut blk, mut en) =
+            (OnlineStats::new(), OnlineStats::new(), OnlineStats::new());
         for r in &rules {
             let out = engine.lookup(r).unwrap();
             lam.push(out.lambda as f64);
@@ -113,7 +117,8 @@ fn main() {
         "rewrites/slot", "λ̄", "blocks̄", "blocks̄ (retrained)"
     );
     {
-        let small = DesignConfig { m: 256, n: 64, zeta: 8, c: 3, l: 8, ..DesignConfig::reference() };
+        let small =
+            DesignConfig { m: 256, n: 64, zeta: 8, c: 3, l: 8, ..DesignConfig::reference() };
         for mult in [0usize, 1, 2, 4, 8] {
             let r = cscam::cnn::capacity::simulate_churn(&small, mult * small.m, 17);
             println!(
@@ -128,7 +133,10 @@ fn main() {
     }
 
     println!("\n# A7 — wave-pipelining feasibility across array sizes (§IV)");
-    println!("{:>6} {:>12} {:>12} {:>12} {:>8}", "M", "Dmax [ns]", "Tclk [ns]", "clk2 [ns]", "waves");
+    println!(
+        "{:>6} {:>12} {:>12} {:>12} {:>8}",
+        "M", "Dmax [ns]", "Tclk [ns]", "clk2 [ns]", "waves"
+    );
     for m in [256usize, 512, 1024, 2048] {
         let c = DesignConfig { m, ..DesignConfig::reference() };
         let w = cscam::timing::wave::analyze(&c, &delays);
@@ -139,7 +147,10 @@ fn main() {
     }
 
     println!("\n# A8 — silicon area (µm², 0.13 µm) and where the β budget goes");
-    println!("{:>5} {:>12} {:>14} {:>14} {:>10}", "ζ", "total [µm²]", "enable wiring", "CNN SRAM", "overhead");
+    println!(
+        "{:>5} {:>12} {:>14} {:>14} {:>10}",
+        "ζ", "total [µm²]", "enable wiring", "CNN SRAM", "overhead"
+    );
     let ka = cscam::transistor::area::AreaConstants::reference_130nm();
     for zeta in [1usize, 2, 4, 8, 16, 64] {
         let c = DesignConfig { zeta, ..DesignConfig::reference() };

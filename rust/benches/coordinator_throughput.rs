@@ -1,6 +1,6 @@
 //! Coordinator throughput: lookups/s through the threaded serve loop under
 //! varying client concurrency and batch policies — the L3 claim is that the
-//! coordinator never bottlenecks the modelled device (DESIGN.md §Perf).
+//! coordinator never bottlenecks the modelled device (see rust/README.md).
 //!
 //! Run: `cargo bench --bench coordinator_throughput`
 
@@ -8,7 +8,6 @@ use std::time::{Duration, Instant};
 
 use cscam::config::DesignConfig;
 use cscam::coordinator::{BatchPolicy, CamServer, DecodeBackend, LookupEngine};
-use cscam::runtime::{artifacts_available, default_artifact_dir, ArtifactStore};
 use cscam::util::Rng;
 use cscam::workload::{QueryMix, TagDistribution};
 
@@ -121,21 +120,33 @@ fn main() {
     run_bulk("native/bulk=256", DecodeBackend::Native, 500_000, 256);
     run_bulk("native/bulk=4096", DecodeBackend::Native, 500_000, 4096);
 
-    if artifacts_available() {
-        println!();
-        for threads in [4usize, 16] {
-            let store = ArtifactStore::load(&default_artifact_dir()).expect("artifacts");
-            run_serve(
-                &format!("pjrt/threads={threads}/max_batch=64"),
-                DecodeBackend::Pjrt(Box::new(store)),
-                threads,
-                20_000,
-                fast,
-            );
-        }
-        let store = ArtifactStore::load(&default_artifact_dir()).expect("artifacts");
-        run_bulk("pjrt/bulk=64", DecodeBackend::Pjrt(Box::new(store)), 50_000, 64);
-    } else {
+    pjrt_rows(fast);
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_rows(fast: BatchPolicy) {
+    use cscam::runtime::{artifacts_available, default_artifact_dir, ArtifactStore};
+
+    if !artifacts_available() {
         println!("(skipping pjrt rows: run `make artifacts`)");
+        return;
     }
+    println!();
+    for threads in [4usize, 16] {
+        let store = ArtifactStore::load(&default_artifact_dir()).expect("artifacts");
+        run_serve(
+            &format!("pjrt/threads={threads}/max_batch=64"),
+            DecodeBackend::pjrt(store),
+            threads,
+            20_000,
+            fast,
+        );
+    }
+    let store = ArtifactStore::load(&default_artifact_dir()).expect("artifacts");
+    run_bulk("pjrt/bulk=64", DecodeBackend::pjrt(store), 50_000, 64);
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_rows(_fast: BatchPolicy) {
+    println!("(skipping pjrt rows: built without the `pjrt` feature)");
 }

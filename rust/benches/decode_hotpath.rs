@@ -1,11 +1,11 @@
-//! Micro-benchmarks of the L3 hot path (EXPERIMENTS.md §Perf):
+//! Micro-benchmarks of the L3 hot path (see rust/README.md):
 //! the native CNN decode (`decode_into`), tag-bit selection, the ζ-group
-//! OR, the full engine lookup, and — when artifacts are present — the
-//! batched PJRT decode per-query cost.
+//! OR, the full engine lookup, and — with the `pjrt` feature and artifacts
+//! present — the batched PJRT decode per-query cost.
 //!
-//! Perf target (DESIGN.md §Perf): native decode ≥ 10 M lookups/s
-//! single-thread at the reference geometry, so the coordinator is never
-//! the bottleneck against the modelled 1.4 GHz device.
+//! Perf target: native decode ≥ 10 M lookups/s single-thread at the
+//! reference geometry, so the coordinator is never the bottleneck against
+//! the modelled 1.4 GHz device.
 //!
 //! Run: `cargo bench --bench decode_hotpath`
 
@@ -13,7 +13,6 @@ use cscam::bits::BitVec;
 use cscam::cnn::{ClusteredNetwork, Selection};
 use cscam::config::DesignConfig;
 use cscam::coordinator::LookupEngine;
-use cscam::runtime::{artifacts_available, default_artifact_dir, ArtifactStore};
 use cscam::util::bench::{black_box, BenchTimer};
 use cscam::util::Rng;
 use cscam::workload::TagDistribution;
@@ -65,7 +64,8 @@ fn main() {
     // 3. tag-bit selection (strided), hot-path variant
     let sel = Selection::strided(cfg.n, cfg.c, cfg.k());
     let mut rng = Rng::seed_from_u64(3);
-    let tags: Vec<BitVec> = (0..256).map(|_| cscam::workload::random_tag(cfg.n, &mut rng)).collect();
+    let tags: Vec<BitVec> =
+        (0..256).map(|_| cscam::workload::random_tag(cfg.n, &mut rng)).collect();
     let mut buf = Vec::new();
     let mut i = 0usize;
     timer.run("selection_apply_into/N=128,q=9", || {
@@ -92,30 +92,43 @@ fn main() {
         black_box(engine.lookup(&miss).unwrap().comparisons)
     });
 
-    // 5. PJRT batched decode (per-query amortized), if artifacts exist
-    if artifacts_available() {
-        let mut store = ArtifactStore::load(&default_artifact_dir()).expect("artifacts");
-        let mcfg = store.manifest().config.clone();
-        let acfg = DesignConfig {
-            m: mcfg.m,
-            zeta: mcfg.zeta,
-            c: mcfg.c,
-            l: mcfg.l,
-            ..DesignConfig::reference()
-        };
-        let (net, idxs) = trained(&acfg, 5);
-        store.set_weights(net.rows()).expect("weights");
-        for &batch in &store.batch_sizes() {
-            let queries: Vec<Vec<u16>> = (0..batch).map(|i| idxs[i % idxs.len()].clone()).collect();
-            let r = timer.run(&format!("pjrt_decode/batch={batch}"), || {
-                store.decode(&queries).unwrap().lambda.len()
-            });
-            println!(
-                "   → {:.2} µs/query amortized at batch {batch}",
-                r.mean_ns / 1000.0 / batch as f64
-            );
-        }
-    } else {
+    // 5. PJRT batched decode (per-query amortized), if built with the
+    //    `pjrt` feature and artifacts exist
+    pjrt_decode_benches(&timer);
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_decode_benches(timer: &BenchTimer) {
+    use cscam::runtime::{artifacts_available, default_artifact_dir, ArtifactStore};
+
+    if !artifacts_available() {
         println!("(skipping pjrt_decode benches: run `make artifacts`)");
+        return;
     }
+    let mut store = ArtifactStore::load(&default_artifact_dir()).expect("artifacts");
+    let mcfg = store.manifest().config.clone();
+    let acfg = DesignConfig {
+        m: mcfg.m,
+        zeta: mcfg.zeta,
+        c: mcfg.c,
+        l: mcfg.l,
+        ..DesignConfig::reference()
+    };
+    let (net, idxs) = trained(&acfg, 5);
+    store.set_weights(net.rows()).expect("weights");
+    for &batch in &store.batch_sizes() {
+        let queries: Vec<Vec<u16>> = (0..batch).map(|i| idxs[i % idxs.len()].clone()).collect();
+        let r = timer.run(&format!("pjrt_decode/batch={batch}"), || {
+            store.decode(&queries).unwrap().lambda.len()
+        });
+        println!(
+            "   → {:.2} µs/query amortized at batch {batch}",
+            r.mean_ns / 1000.0 / batch as f64
+        );
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_decode_benches(_timer: &BenchTimer) {
+    println!("(skipping pjrt_decode benches: built without the `pjrt` feature)");
 }

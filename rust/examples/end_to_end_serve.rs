@@ -1,4 +1,4 @@
-//! END-TO-END VALIDATION DRIVER (EXPERIMENTS.md §E2E).
+//! END-TO-END VALIDATION DRIVER (requires `--features pjrt`).
 //!
 //! Proves all three layers compose on a real workload:
 //!
@@ -11,9 +11,9 @@
 //! The driver loads the artifacts, trains the reference 512-entry design
 //! through the PJRT train graph, serves a 20 000-lookup hit/miss mix
 //! through both backends (native and PJRT decode), verifies they agree
-//! exactly, and reports latency/throughput/energy for EXPERIMENTS.md.
+//! exactly, and reports latency/throughput/energy.
 //!
-//! Run: `make artifacts && cargo run --release --example end_to_end_serve`
+//! Run: `make artifacts && cargo run --release --features pjrt --example end_to_end_serve`
 
 use std::time::Duration;
 
@@ -51,12 +51,7 @@ fn main() -> anyhow::Result<()> {
 
     let policy = BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(200) };
     let native = CamServer::with_engine(engine_native, DecodeBackend::Native, policy).spawn();
-    let pjrt = CamServer::with_engine(
-        engine_pjrt,
-        DecodeBackend::Pjrt(Box::new(store)),
-        policy,
-    )
-    .spawn();
+    let pjrt = CamServer::with_engine(engine_pjrt, DecodeBackend::pjrt(store), policy).spawn();
 
     // The workload: 20 000 lookups, 90 % hits, from 8 client threads.
     let lookups = 20_000;

@@ -72,16 +72,24 @@ impl BitVec {
     }
 
     /// Read bit `i`.
+    ///
+    /// Panics if `i >= len()`, in release builds too: indices in
+    /// `len..words*64` land inside the word slice, so a `debug_assert!`
+    /// alone would let them silently slip through in release.
     #[inline]
     pub fn get(&self, i: usize) -> bool {
-        debug_assert!(i < self.len);
+        assert!(i < self.len, "bit index {i} out of bounds for BitVec of len {}", self.len);
         (self.words[i / 64] >> (i % 64)) & 1 == 1
     }
 
     /// Write bit `i`.
+    ///
+    /// Panics if `i >= len()` (see [`Self::get`]): a stray write into the
+    /// tail slack of the last word would corrupt `count_ones`/`iter_ones`
+    /// without any index ever failing the word-slice bounds check.
     #[inline]
     pub fn set(&mut self, i: usize, value: bool) {
-        debug_assert!(i < self.len);
+        assert!(i < self.len, "bit index {i} out of bounds for BitVec of len {}", self.len);
         let (w, b) = (i / 64, i % 64);
         if value {
             self.words[w] |= 1 << b;
@@ -207,6 +215,37 @@ mod tests {
             v.set(i, true);
         }
         assert_eq!(v.iter_ones().collect::<Vec<_>>(), idx);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn set_in_tail_slack_panics_in_release_too() {
+        // len=70 → the word slice holds 128 bits; indices 70..127 must still
+        // panic or they would corrupt count_ones/iter_ones undetected.
+        let mut v = BitVec::zeros(70);
+        v.set(100, true);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn get_in_tail_slack_panics_in_release_too() {
+        let v = BitVec::zeros(70);
+        v.get(100);
+    }
+
+    #[test]
+    fn tail_invariant_preserved_under_legal_ops() {
+        // count_ones over the tail slack stays exact after heavy set/unset.
+        let mut v = BitVec::zeros(70);
+        for i in 0..70 {
+            v.set(i, true);
+        }
+        assert_eq!(v.count_ones(), 70);
+        assert_eq!(v.iter_ones().count(), 70);
+        for i in (0..70).step_by(2) {
+            v.set(i, false);
+        }
+        assert_eq!(v.count_ones(), 35);
     }
 
     #[test]

@@ -106,9 +106,11 @@ impl CamArray {
         assert_eq!(enables.len(), self.beta(), "enable mask width mismatch");
 
         let mut matches = Vec::new();
-        let mut activity = SearchActivity::default();
-        activity.total_blocks = self.beta();
-        activity.tag_bits = self.n;
+        let mut activity = SearchActivity {
+            total_blocks: self.beta(),
+            tag_bits: self.n,
+            ..SearchActivity::default()
+        };
 
         for block in enables.iter_ones() {
             activity.enabled_blocks += 1;

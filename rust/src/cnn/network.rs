@@ -149,7 +149,7 @@ impl ClusteredNetwork {
 /// Fold an M-bit activation map into M/ζ enable bits for power-of-two ζ,
 /// word-at-a-time, accumulating λ on the way.
 ///
-/// Perf notes (EXPERIMENTS.md §Perf): activation maps are sparse (λ ≈ 2 of
+/// Perf notes: activation maps are sparse (λ ≈ 2 of
 /// M bits at the reference point), so all-zero words short-circuit; for the
 /// reference ζ = 8 the per-group bit pick is a single multiply-gather of
 /// the byte LSBs instead of a 8-iteration shift loop.
@@ -177,7 +177,7 @@ fn group_or_pow2(act: &[u64], m: usize, zeta: usize, enables: &mut [u64], lambda
             // positions 8i; ·0x0102040810204080 places bit i of the result
             // at position 56+i with provably no carry collisions.
             let gathered =
-                ((w & 0x0101_0101_0101_0101).wrapping_mul(0x0102_0408_1020_4080) >> 56) as u64;
+                (w & 0x0101_0101_0101_0101).wrapping_mul(0x0102_0408_1020_4080) >> 56;
             enables[out_bit / 64] |= gathered << (out_bit % 64);
             out_bit += 8;
             continue;

@@ -6,9 +6,9 @@
 //! batch fills or when the oldest request has waited `max_wait` — the
 //! classic size-or-deadline policy of serving systems.
 //!
-//! The batcher is a *pure state machine* (no tasks, no clocks of its own):
+//! The batcher is a *pure state machine* (no threads, no clocks of its own):
 //! the server drives it with `push`/`due`/`flush`, which makes the policy
-//! unit-testable without tokio.
+//! unit-testable without spinning up the serve thread.
 
 use std::time::{Duration, Instant};
 
@@ -106,7 +106,8 @@ mod tests {
 
     #[test]
     fn deadline_trigger_counts_from_oldest() {
-        let mut b = Batcher::new(BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(5) });
+        let mut b =
+            Batcher::new(BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(5) });
         let now = t0();
         b.push('a', now);
         b.push('b', now + Duration::from_millis(4));

@@ -16,6 +16,9 @@ pub enum EngineError {
     BadAddress(usize),
     /// Tag width does not match the configured N.
     TagWidth { got: usize, want: usize },
+    /// The serving thread is gone (its channel disconnected) — reported by
+    /// [`crate::coordinator::ServerHandle`] when the engine cannot answer.
+    Shutdown,
 }
 
 impl std::fmt::Display for EngineError {
@@ -26,6 +29,7 @@ impl std::fmt::Display for EngineError {
             EngineError::TagWidth { got, want } => {
                 write!(f, "tag width {got}, expected {want}")
             }
+            EngineError::Shutdown => write!(f, "server has shut down"),
         }
     }
 }

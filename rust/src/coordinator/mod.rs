@@ -1,7 +1,7 @@
 //! L3 — the serving coordinator.
 //!
 //! The paper's device is a lookup engine; the coordinator wraps it the way
-//! a TLB/router integration would: an async request loop with a dynamic
+//! a TLB/router integration would: a threaded request loop with a dynamic
 //! batcher in front of the decode stage, shard routing across multiple CAM
 //! macros, an insert/delete path that keeps the CNN consistent with the
 //! array, and per-request energy/latency accounting.
@@ -9,7 +9,8 @@
 //! * [`engine`] — one CAM macro + its CNN classifier (the Fig. 1 system).
 //! * [`batcher`] — size/deadline dynamic batching for the decode stage
 //!   (feeds the PJRT artifact whose batch sizes are fixed at AOT time).
-//! * [`server`] — tokio serve loop: mpsc in, oneshot out, graceful drain.
+//! * [`server`] — threaded serve loop: mpsc in, per-request response
+//!   channels out, graceful drain.
 //! * [`router`] — hash-sharding across engines (multi-macro scale-out).
 //! * [`metrics`] — counters + latency/energy aggregation.
 

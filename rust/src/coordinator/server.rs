@@ -6,9 +6,9 @@
 //! engine thread.  Lookups are queued into the [`Batcher`]; inserts /
 //! deletes / metrics are *barriers* (they flush the pending batch first, so
 //! a lookup never observes a half-applied mutation).  The decode stage runs
-//! either natively (bit-packed CNN) or through the PJRT artifact
-//! ([`crate::runtime::ArtifactStore`]) — the three-layer configuration with
-//! Python strictly at build time.
+//! either natively (bit-packed CNN) or — with the `pjrt` cargo feature —
+//! through the PJRT artifact ([`crate::runtime::ArtifactStore`]), the
+//! three-layer configuration with Python strictly at build time.
 
 use std::sync::mpsc;
 use std::time::Instant;
@@ -18,16 +18,15 @@ use crate::config::DesignConfig;
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::engine::{EngineError, LookupEngine, LookupOutcome};
 use crate::coordinator::metrics::Metrics;
+use crate::runtime::DecodeOutput;
+#[cfg(feature = "pjrt")]
 use crate::runtime::ArtifactStore;
 
-/// Which implementation runs the CNN decode stage.
-pub enum DecodeBackend {
-    /// Bit-packed native decode (reference hot path).
-    Native,
-    /// AOT-compiled PJRT artifact (the three-layer stack).
-    Pjrt(Box<ArtifactStore>),
-}
-
+/// Owner of the PJRT artifact store for the trip onto the engine thread.
+///
+/// The unsafety is scoped to this newtype on purpose: blessing the whole
+/// [`DecodeBackend`] enum would silently extend to any variant added later.
+//
 // SAFETY: the xla crate's PJRT handles are `!Send` only because
 // `PjRtClient` wraps its FFI handle in an `Rc`.  `ArtifactStore` creates
 // the client itself and owns every object cloned from it (executables,
@@ -35,12 +34,34 @@ pub enum DecodeBackend {
 // server moves the whole store onto its single engine thread at spawn and
 // never aliases it afterwards — every clone crosses threads together,
 // exactly once, which is the condition `Rc` needs.
-unsafe impl Send for DecodeBackend {}
+#[cfg(feature = "pjrt")]
+pub struct SendArtifactStore(pub Box<ArtifactStore>);
+
+#[cfg(feature = "pjrt")]
+unsafe impl Send for SendArtifactStore {}
+
+/// Which implementation runs the CNN decode stage.
+pub enum DecodeBackend {
+    /// Bit-packed native decode (reference hot path).
+    Native,
+    /// AOT-compiled PJRT artifact (the three-layer stack).
+    #[cfg(feature = "pjrt")]
+    Pjrt(SendArtifactStore),
+}
+
+#[cfg(feature = "pjrt")]
+impl DecodeBackend {
+    /// Wrap an artifact store for the engine thread.
+    pub fn pjrt(store: ArtifactStore) -> Self {
+        DecodeBackend::Pjrt(SendArtifactStore(Box::new(store)))
+    }
+}
 
 impl std::fmt::Debug for DecodeBackend {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             DecodeBackend::Native => write!(f, "Native"),
+            #[cfg(feature = "pjrt")]
             DecodeBackend::Pjrt(_) => write!(f, "Pjrt"),
         }
     }
@@ -62,7 +83,9 @@ enum Request {
 /// Cloneable client handle to a running [`CamServer`].
 ///
 /// All methods block the calling thread until the engine thread responds;
-/// issue requests from multiple threads to exercise batching.
+/// issue requests from multiple threads to exercise batching.  A send or
+/// receive failure means the engine thread is gone, reported as
+/// [`EngineError::Shutdown`].
 #[derive(Clone)]
 pub struct ServerHandle {
     tx: mpsc::Sender<Request>,
@@ -74,13 +97,13 @@ impl ServerHandle {
         let (resp, rx) = mpsc::sync_channel(1);
         self.tx
             .send(Request::Lookup { tag, enqueued: Instant::now(), resp })
-            .map_err(|_| EngineError::Full)?;
-        rx.recv().map_err(|_| EngineError::Full)?
+            .map_err(|_| EngineError::Shutdown)?;
+        rx.recv().map_err(|_| EngineError::Shutdown)?
     }
 
     /// Bulk lookup: ship many tags in one request — one channel round-trip
-    /// amortized over the whole slice (EXPERIMENTS.md §Perf iteration 3).
-    /// The batch is decoded in `max_batch`-sized chunks, preserving order.
+    /// amortized over the whole slice.  The batch is decoded in
+    /// `max_batch`-sized chunks, preserving order.
     pub fn lookup_many(&self, tags: Vec<BitVec>) -> Vec<Result<LookupOutcome, EngineError>> {
         if tags.is_empty() {
             return Vec::new();
@@ -88,23 +111,23 @@ impl ServerHandle {
         let n = tags.len();
         let (resp, rx) = mpsc::sync_channel(1);
         if self.tx.send(Request::BulkLookup { tags, enqueued: Instant::now(), resp }).is_err() {
-            return (0..n).map(|_| Err(EngineError::Full)).collect();
+            return (0..n).map(|_| Err(EngineError::Shutdown)).collect();
         }
-        rx.recv().unwrap_or_else(|_| (0..n).map(|_| Err(EngineError::Full)).collect())
+        rx.recv().unwrap_or_else(|_| (0..n).map(|_| Err(EngineError::Shutdown)).collect())
     }
 
     /// Insert a tag; returns once the CNN + CAM are updated.
     pub fn insert(&self, tag: BitVec) -> Result<usize, EngineError> {
         let (resp, rx) = mpsc::sync_channel(1);
-        self.tx.send(Request::Insert { tag, resp }).map_err(|_| EngineError::Full)?;
-        rx.recv().map_err(|_| EngineError::Full)?
+        self.tx.send(Request::Insert { tag, resp }).map_err(|_| EngineError::Shutdown)?;
+        rx.recv().map_err(|_| EngineError::Shutdown)?
     }
 
     /// Delete by address.
     pub fn delete(&self, addr: usize) -> Result<(), EngineError> {
         let (resp, rx) = mpsc::sync_channel(1);
-        self.tx.send(Request::Delete { addr, resp }).map_err(|_| EngineError::Full)?;
-        rx.recv().map_err(|_| EngineError::Full)?
+        self.tx.send(Request::Delete { addr, resp }).map_err(|_| EngineError::Shutdown)?;
+        rx.recv().map_err(|_| EngineError::Shutdown)?
     }
 
     /// Snapshot of the server metrics.
@@ -129,6 +152,9 @@ pub struct CamServer {
     backend: DecodeBackend,
     policy: BatchPolicy,
     metrics: Metrics,
+    /// Set on any mutation; the PJRT path re-uploads weights before the next
+    /// batched decode.  (Only read by the `pjrt` decode path.)
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     weights_dirty: bool,
 }
 
@@ -182,12 +208,11 @@ impl CamServer {
                     if let Some(batch) = batcher.push((tag, enqueued, resp), Instant::now()) {
                         self.run_batch(batch);
                     }
-                    // Greedy drain (EXPERIMENTS.md §Perf iteration 2):
-                    // batch everything already queued, then serve
-                    // immediately instead of sleeping out max_wait — the
-                    // classic "batch what's there" adaptive policy.  The
-                    // deadline path above remains as the bound for
-                    // requests that arrive while a batch is running.
+                    // Greedy drain: batch everything already queued, then
+                    // serve immediately instead of sleeping out max_wait —
+                    // the classic "batch what's there" adaptive policy.  The
+                    // deadline path above remains as the bound for requests
+                    // that arrive while a batch is running.
                     loop {
                         match rx.try_recv() {
                             Ok(Request::Lookup { tag, enqueued, resp }) => {
@@ -265,6 +290,35 @@ impl CamServer {
         }
     }
 
+    /// Run the batched decode stage through the PJRT artifact; `None` falls
+    /// back to the native per-query decode inside the engine.
+    #[cfg(feature = "pjrt")]
+    fn decode_stage<'a>(&mut self, tags: impl Iterator<Item = &'a BitVec>) -> Option<DecodeOutput> {
+        match &mut self.backend {
+            DecodeBackend::Native => None,
+            DecodeBackend::Pjrt(store) => {
+                if self.weights_dirty && store.0.set_weights(self.engine.weight_rows()).is_ok() {
+                    self.weights_dirty = false;
+                }
+                if self.weights_dirty {
+                    None // weight upload failed: fall back to native decode
+                } else {
+                    let idx: Vec<Vec<u16>> =
+                        tags.map(|t| self.engine.cluster_indices(t)).collect();
+                    store.0.decode(&idx).ok()
+                }
+            }
+        }
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn decode_stage<'a>(
+        &mut self,
+        _tags: impl Iterator<Item = &'a BitVec>,
+    ) -> Option<DecodeOutput> {
+        None
+    }
+
     /// Serve a pre-assembled batch of tags in order, chunked to the batch
     /// policy (and thus to the compiled PJRT batch sizes).
     fn run_bulk(
@@ -275,21 +329,7 @@ impl CamServer {
         let mut out = Vec::with_capacity(tags.len());
         for chunk in tags.chunks(self.policy.max_batch.max(1)) {
             self.metrics.record_batch(chunk.len());
-            let decoded: Option<crate::runtime::DecodeOutput> = match &mut self.backend {
-                DecodeBackend::Native => None,
-                DecodeBackend::Pjrt(store) => {
-                    if self.weights_dirty && store.set_weights(self.engine.weight_rows()).is_ok() {
-                        self.weights_dirty = false;
-                    }
-                    if self.weights_dirty {
-                        None
-                    } else {
-                        let idx: Vec<Vec<u16>> =
-                            chunk.iter().map(|t| self.engine.cluster_indices(t)).collect();
-                        store.decode(&idx).ok()
-                    }
-                }
-            };
+            let decoded = self.decode_stage(chunk.iter());
             for (i, tag) in chunk.iter().enumerate() {
                 let r = match &decoded {
                     Some(d) => {
@@ -314,21 +354,7 @@ impl CamServer {
         self.metrics.record_batch(batch.len());
 
         // PJRT path: one artifact call covers the whole batch's decode stage.
-        let decoded: Option<crate::runtime::DecodeOutput> = match &mut self.backend {
-            DecodeBackend::Native => None,
-            DecodeBackend::Pjrt(store) => {
-                if self.weights_dirty && store.set_weights(self.engine.weight_rows()).is_ok() {
-                    self.weights_dirty = false;
-                }
-                if self.weights_dirty {
-                    None // weight upload failed: fall back to native decode
-                } else {
-                    let idx: Vec<Vec<u16>> =
-                        batch.iter().map(|(t, _, _)| self.engine.cluster_indices(t)).collect();
-                    store.decode(&idx).ok()
-                }
-            }
-        };
+        let decoded = self.decode_stage(batch.iter().map(|(t, _, _)| t));
 
         for (i, (tag, enqueued, resp)) in batch.into_iter().enumerate() {
             let out = match &decoded {
@@ -451,5 +477,24 @@ mod tests {
         drop(h2);
         // nothing to assert directly; the thread exiting keeps the process
         // from hanging at test end (would deadlock `cargo test` otherwise)
+    }
+
+    #[test]
+    fn dropped_server_yields_shutdown_not_full() {
+        // A handle whose engine thread is gone must report Shutdown — Full
+        // means "no free CAM slot" and would mislead capacity-aware callers.
+        let (tx, rx) = mpsc::channel();
+        drop(rx);
+        let h = ServerHandle { tx };
+        assert_eq!(h.lookup(BitVec::zeros(32)).unwrap_err(), EngineError::Shutdown);
+        assert_eq!(h.insert(BitVec::zeros(32)).unwrap_err(), EngineError::Shutdown);
+        assert_eq!(h.delete(0).unwrap_err(), EngineError::Shutdown);
+        let bulk = h.lookup_many(vec![BitVec::zeros(32); 3]);
+        assert_eq!(bulk.len(), 3);
+        for r in bulk {
+            assert_eq!(r.unwrap_err(), EngineError::Shutdown);
+        }
+        assert!(h.metrics().is_none());
+        h.drain(); // must not hang or panic
     }
 }

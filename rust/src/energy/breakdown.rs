@@ -3,7 +3,7 @@
 
 
 /// Switching activity of one CAM search — what the functional simulator
-//  ([`crate::cam::CamArray::search`]) actually observed.
+/// ([`crate::cam::CamArray::search`]) actually observed.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct SearchActivity {
     /// Total sub-blocks in the array (β).

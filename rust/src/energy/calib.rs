@@ -1,6 +1,6 @@
 //! Calibrated energy primitives at the reference node (0.13 µm, 1.2 V).
 //!
-//! # Fitting procedure (documented substitution, DESIGN.md §6)
+//! # Fitting procedure (documented substitution)
 //!
 //! Per-cell search energy in a CAM decomposes into three physically distinct
 //! components (Pagiamtzis & Sheikholeslami's survey [7]):

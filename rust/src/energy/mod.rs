@@ -1,4 +1,4 @@
-//! Dynamic-energy model — the SPECTRE substitute (DESIGN.md §2, §6).
+//! Dynamic-energy model — the SPECTRE substitute.
 //!
 //! All energies are *switched-capacitance* dynamic energies, `E = α·C·V²`,
 //! expressed directly in femtojoules at the reference node (0.13 µm, 1.2 V)

@@ -10,7 +10,7 @@
 //! sub-blocks, eliminating most of the parallel match-line comparisons that
 //! dominate CAM search energy.
 //!
-//! ## Layout (three-layer architecture, see DESIGN.md)
+//! ## Layout (three-layer architecture, see rust/README.md)
 //!
 //! - [`cnn`] — the clustered-sparse-network classifier (bit-packed native
 //!   implementation: training, global decode, tag-bit selection).
@@ -18,7 +18,8 @@
 //!   (Fig. 5): XOR/NAND/NOR cells, match-lines, compare-enables.
 //! - [`energy`], [`timing`], [`transistor`] — the SPECTRE-substitute circuit
 //!   simulator: switched-capacitance energy, logical-effort delay, and
-//!   structural transistor counting (calibration documented in DESIGN.md §6).
+//!   structural transistor counting (calibration documented in
+//!   [`energy::calib`]).
 //! - [`tech`] — CMOS technology nodes and the scaling method of Huang &
 //!   Hwang [6] used for the paper's 90 nm projection.
 //! - [`baselines`] — conventional NAND/NOR references, the PB-CAM
@@ -30,7 +31,8 @@
 //!   design-space exploration.
 //! - [`runtime`] — PJRT bridge: loads the AOT-lowered HLO text artifacts
 //!   produced by `python/compile/aot.py` and executes them on the request
-//!   path (Python is build-time only).
+//!   path (Python is build-time only).  The execution half sits behind the
+//!   `pjrt` cargo feature; the default build is pure Rust.
 //! - [`coordinator`] — the L3 serving system: request router, dynamic
 //!   batcher, lookup engine, insert/delete paths, metrics.
 

@@ -38,6 +38,7 @@ COMMANDS:
   sweep   reproduce Table I     --m 512 --n 128
   serve   run the coordinator   --lookups N --hit-ratio R --pjrt --max-batch B
                                 --threads T --seed S
+          (--pjrt needs a binary built with `--features pjrt`)
   info    print the design point and all model predictions
 ";
 
@@ -180,7 +181,16 @@ fn sweep_cmd(args: &Args) -> Result<()> {
     println!("# Table I design-space exploration: M={m}, N={n}");
     println!(
         "{:<4} {:<4} {:<5} {:<4} {:<5} {:>15} {:>10} {:>9} {:>8} {:>9}",
-        "c", "l", "zeta", "q", "beta", "E[fJ/bit/srch]", "cycle[ns]", "overhead", "E[cmp]", "feasible"
+        "c",
+        "l",
+        "zeta",
+        "q",
+        "beta",
+        "E[fJ/bit/srch]",
+        "cycle[ns]",
+        "overhead",
+        "E[cmp]",
+        "feasible"
     );
     for p in run_sweep(m, n, &constraints) {
         println!(
@@ -210,6 +220,25 @@ fn sweep_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Build the PJRT decode backend from the on-disk artifacts.
+#[cfg(feature = "pjrt")]
+fn pjrt_backend(cfg: &DesignConfig) -> Result<DecodeBackend> {
+    let dir = cscam::runtime::default_artifact_dir();
+    let store = cscam::runtime::ArtifactStore::load(&dir)?;
+    anyhow::ensure!(
+        store.manifest().config.m == cfg.m,
+        "artifact geometry (M={}) != config (M={}); re-run `make artifacts`",
+        store.manifest().config.m,
+        cfg.m
+    );
+    Ok(DecodeBackend::pjrt(store))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_backend(_cfg: &DesignConfig) -> Result<DecodeBackend> {
+    bail!("this binary was built without the `pjrt` feature; rebuild with `--features pjrt`")
+}
+
 fn serve(cfg: &DesignConfig, args: &Args) -> Result<()> {
     let lookups: usize = args.get_parse("lookups", 10_000)?;
     let hit_ratio: f64 = args.get_parse("hit-ratio", 0.9)?;
@@ -218,19 +247,7 @@ fn serve(cfg: &DesignConfig, args: &Args) -> Result<()> {
     let threads: usize = args.get_parse("threads", 8)?;
     let seed: u64 = args.get_parse("seed", 7)?;
 
-    let backend = if pjrt {
-        let dir = cscam::runtime::default_artifact_dir();
-        let store = cscam::runtime::ArtifactStore::load(&dir)?;
-        anyhow::ensure!(
-            store.manifest().config.m == cfg.m,
-            "artifact geometry (M={}) != config (M={}); re-run `make artifacts`",
-            store.manifest().config.m,
-            cfg.m
-        );
-        DecodeBackend::Pjrt(Box::new(store))
-    } else {
-        DecodeBackend::Native
-    };
+    let backend = if pjrt { pjrt_backend(cfg)? } else { DecodeBackend::Native };
     let policy = BatchPolicy { max_batch, ..Default::default() };
     let h = CamServer::new(cfg.clone(), backend, policy).spawn();
 
@@ -263,7 +280,10 @@ fn serve(cfg: &DesignConfig, args: &Args) -> Result<()> {
     let wall = t0.elapsed();
 
     let m = h.metrics().expect("metrics");
-    println!("# serve — backend={}, {threads} client threads", if pjrt { "pjrt" } else { "native" });
+    println!(
+        "# serve — backend={}, {threads} client threads",
+        if pjrt { "pjrt" } else { "native" }
+    );
     println!("{}", m.summary(cfg.m, cfg.n));
     println!(
         "hits: {hits}/{lookups}; throughput: {:.0} lookups/s (wall {:.3} s), mean batch {:.1}",
@@ -296,6 +316,9 @@ fn info(cfg: &DesignConfig) -> Result<()> {
     println!("cycle = {:.3} ns, latency = {:.3} ns", d.cycle_ns, d.latency_ns);
     let ovh = overhead_vs_nand(cfg, &TransistorAssumptions::default());
     println!("transistor overhead vs Ref. NAND: +{:.2} %", 100.0 * ovh);
-    println!("closed-form comparisons check: {:.3}", expected_comparisons(cfg.m, cfg.q(), cfg.zeta));
+    println!(
+        "closed-form comparisons check: {:.3}",
+        expected_comparisons(cfg.m, cfg.q(), cfg.zeta)
+    );
     Ok(())
 }

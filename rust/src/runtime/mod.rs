@@ -10,18 +10,30 @@
 //!
 //! HLO *text* is the interchange format — the crate's xla_extension 0.5.1
 //! rejects jax ≥ 0.5 serialized protos (64-bit ids); the text parser
-//! reassigns ids (see /opt/xla-example/README.md).
+//! reassigns ids.
+//!
+//! The whole PJRT stack sits behind the `pjrt` cargo feature (see
+//! `rust/README.md`): the default build is pure Rust and only carries the
+//! manifest parser, the [`DecodeOutput`] type the coordinator consumes, and
+//! the artifact-directory helpers.  [`ArtifactStore`] and everything that
+//! touches the `xla` crate compiles only with `--features pjrt`.
 
 pub mod manifest;
 
 pub use manifest::{ArtifactInfo, Manifest};
 
-use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
+#[cfg(feature = "pjrt")]
+use std::collections::BTreeMap;
+#[cfg(feature = "pjrt")]
+use std::path::Path;
+
+#[cfg(feature = "pjrt")]
 use anyhow::anyhow;
 
 use crate::bits::BitVec;
+#[cfg(feature = "pjrt")]
 use crate::Result;
 
 /// Outputs of one batched decode through the PJRT artifact.
@@ -35,6 +47,7 @@ pub struct DecodeOutput {
 
 /// Compiled artifact store: one executable per decode batch size, plus the
 /// train / add-entry graphs, plus the resident weight buffer.
+#[cfg(feature = "pjrt")]
 pub struct ArtifactStore {
     client: xla::PjRtClient,
     manifest: Manifest,
@@ -44,6 +57,7 @@ pub struct ArtifactStore {
     weights: Option<xla::PjRtBuffer>,
 }
 
+#[cfg(feature = "pjrt")]
 impl std::fmt::Debug for ArtifactStore {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("ArtifactStore")
@@ -55,6 +69,7 @@ impl std::fmt::Debug for ArtifactStore {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl ArtifactStore {
     /// Load and compile every artifact listed in `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Self> {
@@ -67,7 +82,8 @@ impl ArtifactStore {
             let path = dir.join(format!("{name}.hlo.txt"));
             match info.kind.as_str() {
                 "decode" => {
-                    let batch = info.batch.ok_or_else(|| anyhow!("decode artifact without batch"))?;
+                    let batch =
+                        info.batch.ok_or_else(|| anyhow!("decode artifact without batch"))?;
                     decode.insert(batch, compile_hlo(&client, &path)?);
                 }
                 "train" => train = Some(compile_hlo(&client, &path)?),
@@ -171,7 +187,10 @@ impl ArtifactStore {
     pub fn train(&mut self, idx: &[Vec<u16>], addr: &[u32]) -> Result<Vec<BitVec>> {
         let cfg = self.manifest.config.clone();
         let exe = self.train.as_ref().ok_or_else(|| anyhow!("no train artifact"))?;
-        anyhow::ensure!(idx.len() == cfg.m && addr.len() == cfg.m, "train expects exactly M entries");
+        anyhow::ensure!(
+            idx.len() == cfg.m && addr.len() == cfg.m,
+            "train expects exactly M entries"
+        );
 
         let mut idx_host = vec![0i32; cfg.m * cfg.c];
         for (i, q) in idx.iter().enumerate() {
@@ -209,6 +228,7 @@ impl ArtifactStore {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn compile_hlo(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
     let proto = xla::HloModuleProto::from_text_file(path)
         .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;

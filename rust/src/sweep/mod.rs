@@ -179,7 +179,8 @@ mod tests {
         // With an unconstrained wiring budget the finer-grained ζ=4 point
         // (fewer comparisons) wins on energy — evidence the constraint set,
         // not the model, drives the Table I choice.
-        let relaxed = SweepConstraints { max_blocks: 1024, max_overhead: 1.0, ..Default::default() };
+        let relaxed =
+            SweepConstraints { max_blocks: 1024, max_overhead: 1.0, ..Default::default() };
         let best = select_design(512, 128, &relaxed).unwrap();
         assert!(best.cfg.zeta < 8 || best.cfg.q() > 9, "winner {:?}", best.cfg);
     }

@@ -1,4 +1,4 @@
-//! Delay model — logical-effort-flavoured, in FO4 units (DESIGN.md §2).
+//! Delay model — logical-effort-flavoured, in FO4 units.
 //!
 //! Every path delay is expressed as a number of fanout-of-4 inverter delays
 //! at the target node, then multiplied by the node's `fo4_ps`.  Structural

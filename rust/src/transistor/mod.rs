@@ -3,9 +3,9 @@
 //! Counts are *structural* — cells × transistors-per-cell plus explicit
 //! peripheral circuits — with documented assumptions; nothing here is fitted
 //! to the paper's 3.4 %.  The absolute overhead we predict depends on
-//! peripheral sizing the paper does not publish (see EXPERIMENTS.md), but
-//! the *shape* — a small single-digit-percent overhead that shrinks as the
-//! data payload grows — is structural and holds.
+//! peripheral sizing the paper does not publish, but the *shape* — a small
+//! single-digit-percent overhead that shrinks as the data payload grows —
+//! is structural and holds.
 
 
 pub mod area;
@@ -120,8 +120,7 @@ mod tests {
     fn reference_overhead_is_small_single_digit_percent() {
         // Paper: +3.4 %.  Structurally (XOR-9T vs NAND-10T cells offsetting
         // most of the CNN SRAM) we land in the low single digits; the exact
-        // figure depends on unpublished peripheral sizing — see
-        // EXPERIMENTS.md for the paper-vs-model discussion.
+        // figure depends on unpublished peripheral sizing.
         let cfg = DesignConfig::reference();
         let ovh = overhead_vs_nand(&cfg, &TransistorAssumptions::default());
         assert!((0.0..0.10).contains(&ovh), "overhead {ovh}");
@@ -145,8 +144,14 @@ mod tests {
     #[test]
     fn overhead_shrinks_with_wider_data() {
         let cfg = DesignConfig::reference();
-        let narrow = overhead_vs_nand(&cfg, &TransistorAssumptions { data_width: 128, ..Default::default() });
-        let wide = overhead_vs_nand(&cfg, &TransistorAssumptions { data_width: 512, ..Default::default() });
+        let narrow = overhead_vs_nand(
+            &cfg,
+            &TransistorAssumptions { data_width: 128, ..Default::default() },
+        );
+        let wide = overhead_vs_nand(
+            &cfg,
+            &TransistorAssumptions { data_width: 512, ..Default::default() },
+        );
         assert!(wide < narrow);
     }
 

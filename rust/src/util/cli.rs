@@ -17,7 +17,7 @@ impl Args {
     /// `bool_flags` lists the flags that take no value.
     pub fn parse<I: IntoIterator<Item = String>>(raw: I, bool_flags: &[&str]) -> Result<Args> {
         let mut out = Args::default();
-        let mut it = raw.into_iter().peekable();
+        let mut it = raw.into_iter();
         while let Some(a) = it.next() {
             if let Some(name) = a.strip_prefix("--") {
                 if let Some((k, v)) = name.split_once('=') {

@@ -2,7 +2,7 @@
 //!
 //! Every simulation in this crate (Fig. 3 Monte Carlo, workload generation,
 //! property tests) is seeded explicitly, so results are bit-reproducible
-//! across runs and machines — a requirement for EXPERIMENTS.md.  The
+//! across runs and machines — a requirement for recorded experiments.  The
 //! generator is Blackman & Vigna's xoshiro256++ (public domain), which
 //! passes BigCrush; SplitMix64 expands the u64 seed into the 256-bit state,
 //! as the authors recommend.

@@ -1,4 +1,4 @@
-//! Calibration contract (DESIGN.md §6): the two *conventional* designs are
+//! Calibration contract (see `cscam::energy::calib`): the two *conventional* designs are
 //! the fitted anchors; everything else — the proposed design, the headline
 //! ratios, the 90 nm projection, the Table I selection — must come out of
 //! the model as *predictions* within the reproduction bands.
@@ -73,7 +73,7 @@ fn prediction_proposed_delay_and_headline_ratio() {
 #[test]
 fn prediction_transistor_overhead() {
     // Paper: +3.4 %.  Structural model lands in the small-single-digit band
-    // (see EXPERIMENTS.md for the peripheral-sizing caveat).
+    // (the peripheral-sizing caveat is documented in `transistor`).
     let ovh = overhead_vs_nand(&cfg(), &TransistorAssumptions::default());
     assert!((0.01..0.06).contains(&ovh), "overhead {ovh}");
 }

@@ -1,0 +1,74 @@
+//! Native-only serving path: the whole insert → lookup → delete → metrics
+//! lifecycle through [`CamServer`] with [`DecodeBackend::Native`].
+//!
+//! This file deliberately uses nothing behind the `pjrt` feature, so it
+//! exercises the default / `--no-default-features` build — the pure-Rust
+//! configuration the tier-1 gate ships.
+
+use std::time::Duration;
+
+use cscam::config::DesignConfig;
+use cscam::coordinator::{BatchPolicy, CamServer, DecodeBackend, EngineError};
+use cscam::util::Rng;
+use cscam::workload::TagDistribution;
+
+#[test]
+fn native_server_full_lifecycle() {
+    let cfg = DesignConfig::small_test();
+    let server = CamServer::new(
+        cfg.clone(),
+        DecodeBackend::Native,
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) },
+    );
+    let h = server.spawn();
+
+    // Insert a table's worth of tags; addresses are allocated in order.
+    let mut rng = Rng::seed_from_u64(99);
+    let tags = TagDistribution::Uniform.sample_distinct(cfg.n, 32, &mut rng);
+    for (i, t) in tags.iter().enumerate() {
+        assert_eq!(h.insert(t.clone()).unwrap(), i);
+    }
+
+    // Every stored tag resolves to its address, with the paper's physics
+    // attached to the outcome.
+    for (i, t) in tags.iter().enumerate() {
+        let out = h.lookup(t.clone()).unwrap();
+        assert_eq!(out.addr, Some(i));
+        assert!(out.lambda >= 1);
+        assert!(out.enabled_blocks >= 1);
+        assert!(out.energy.total_fj() > 0.0);
+    }
+
+    // Bulk lookups agree with singles and keep order.
+    let bulk = h.lookup_many(tags.clone());
+    for (i, r) in bulk.iter().enumerate() {
+        assert_eq!(r.as_ref().unwrap().addr, Some(i));
+    }
+
+    // Delete a slot: subsequent lookups of its tag miss, others still hit.
+    h.delete(5).unwrap();
+    assert_eq!(h.lookup(tags[5].clone()).unwrap().addr, None);
+    assert_eq!(h.lookup(tags[6].clone()).unwrap().addr, Some(6));
+    assert_eq!(h.delete(cfg.m), Err(EngineError::BadAddress(cfg.m)));
+
+    // Metrics observed the whole lifecycle.
+    h.drain();
+    let m = h.metrics().unwrap();
+    assert_eq!(m.inserts, 32);
+    assert_eq!(m.deletes, 1);
+    assert_eq!(m.lookups, 32 + 32 + 2);
+    assert_eq!(m.misses, 1);
+    assert_eq!(m.hits, m.lookups - 1);
+    assert!(m.batches >= 1);
+    assert!(m.energy_fj.mean() > 0.0);
+}
+
+#[test]
+fn native_server_rejects_malformed_requests() {
+    let cfg = DesignConfig::small_test();
+    let h = CamServer::new(cfg.clone(), DecodeBackend::Native, BatchPolicy::default()).spawn();
+    let wrong_width = cscam::bits::BitVec::zeros(cfg.n + 8);
+    assert!(matches!(h.insert(wrong_width.clone()), Err(EngineError::TagWidth { .. })));
+    assert!(matches!(h.lookup(wrong_width), Err(EngineError::TagWidth { .. })));
+    assert_eq!(h.delete(cfg.m + 1), Err(EngineError::BadAddress(cfg.m + 1)));
+}

@@ -2,8 +2,11 @@
 //! `python/compile/aot.py` (L2/L1) must decode *bit-identically* to the
 //! native bit-packed CNN (L3's reference path).
 //!
-//! Requires `make artifacts` to have run; every test self-skips otherwise
-//! (CI runs `make test`, which builds artifacts first).
+//! Requires the `pjrt` cargo feature (this whole file compiles away without
+//! it) and `make artifacts` to have run; every test self-skips when the
+//! artifacts are missing.
+
+#![cfg(feature = "pjrt")]
 
 use cscam::bits::BitVec;
 use cscam::cnn::ClusteredNetwork;
@@ -125,14 +128,12 @@ fn served_lookups_agree_between_backends() {
         native_engine.insert(t).unwrap();
         pjrt_engine.insert(t).unwrap();
     }
-    let native = CamServer::with_engine(native_engine, DecodeBackend::Native, BatchPolicy::default())
-        .spawn();
-    let pjrt = CamServer::with_engine(
-        pjrt_engine,
-        DecodeBackend::Pjrt(Box::new(store)),
-        BatchPolicy::default(),
-    )
-    .spawn();
+    let native =
+        CamServer::with_engine(native_engine, DecodeBackend::Native, BatchPolicy::default())
+            .spawn();
+    let pjrt =
+        CamServer::with_engine(pjrt_engine, DecodeBackend::pjrt(store), BatchPolicy::default())
+            .spawn();
 
     let mut miss_rng = Rng::seed_from_u64(5);
     for i in 0..64 {

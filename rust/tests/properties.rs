@@ -21,7 +21,11 @@ use cscam::util::Rng;
 use cscam::workload::TagDistribution;
 
 /// Run `body` for `cases` random geometries.
-fn for_random_geometries(cases: usize, seed: u64, mut body: impl FnMut(&mut Rng, usize, usize, usize, usize)) {
+fn for_random_geometries(
+    cases: usize,
+    seed: u64,
+    mut body: impl FnMut(&mut Rng, usize, usize, usize, usize),
+) {
     let mut rng = Rng::seed_from_u64(seed);
     for _ in 0..cases {
         let c = 1 + rng.gen_range(4); // 1..=4

@@ -1,0 +1,152 @@
+//! Offline stand-in for the `xla` crate (the xla-rs bindings over the
+//! XLA/PJRT C++ toolchain).
+//!
+//! The `cscam` crate's `pjrt` feature compiles `cscam::runtime` against this
+//! API surface so the PJRT code path stays type-checked on machines without
+//! the XLA toolchain installed.  Every constructor returns an error at
+//! runtime — [`PjRtClient::cpu`] is the only entry point, so no value of any
+//! of these types can ever be observed.  To execute real artifacts, point the
+//! `xla` path dependency in `rust/Cargo.toml` at the real bindings (same
+//! module paths and method names) instead of this stub.
+//!
+//! The handle types deliberately contain an `Rc` so they are `!Send`, exactly
+//! like the real FFI handles — code that compiles against the stub makes the
+//! same thread-safety promises it will need against the real crate.
+
+use std::fmt;
+use std::path::Path;
+use std::rc::Rc;
+
+/// Error type mirroring the real bindings' error enum (Display only is used).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const UNAVAILABLE: &str = "xla stub: this build links the in-tree type-level stub, not the real \
+     XLA/PJRT toolchain; point the `xla` path dependency at the real bindings to execute artifacts";
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(UNAVAILABLE.to_string()))
+}
+
+/// Element types that can cross the host/device boundary.
+pub trait ArrayElement: Copy {}
+
+impl ArrayElement for f32 {}
+impl ArrayElement for f64 {}
+impl ArrayElement for i32 {}
+impl ArrayElement for i64 {}
+impl ArrayElement for u8 {}
+
+/// PJRT client handle (`!Send`, like the real FFI wrapper).
+pub struct PjRtClient {
+    _handle: Rc<()>,
+}
+
+impl PjRtClient {
+    /// CPU client — always fails in the stub.
+    pub fn cpu() -> Result<Self> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+
+    pub fn buffer_from_host_buffer<T: ArrayElement>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable()
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable {
+    _handle: Rc<()>,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// A resident device buffer.
+pub struct PjRtBuffer {
+    _handle: Rc<()>,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// A host-side literal value.
+pub struct Literal {
+    _handle: Rc<()>,
+}
+
+impl Literal {
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal)> {
+        unavailable()
+    }
+
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse HLO text — always fails in the stub.
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<Self> {
+        unavailable()
+    }
+}
+
+/// An XLA computation built from an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation { _private: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_reports_stub() {
+        let err = PjRtClient::cpu().err().expect("stub must not construct");
+        assert!(err.to_string().contains("xla stub"));
+    }
+}
