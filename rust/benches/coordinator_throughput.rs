@@ -1,13 +1,24 @@
 //! Coordinator throughput: lookups/s through the threaded serve loop under
-//! varying client concurrency and batch policies — the L3 claim is that the
-//! coordinator never bottlenecks the modelled device (see rust/README.md).
+//! varying client concurrency, batch policies and shard counts — the L3/L4
+//! claim is that the serving layers never bottleneck the modelled device
+//! (see rust/README.md).
 //!
 //! Run: `cargo bench --bench coordinator_throughput`
+//!
+//! Flags (after `--`):
+//! * `--quick`          headline rows only, fewer lookups (CI smoke);
+//! * `--shards 1,4`     shard counts for the headline rows (default 1,4);
+//! * `--json PATH`      write the headline rows as a `BENCH_*.json`
+//!   trajectory snapshot (throughput, p50/p99 latency, mean λ) so future
+//!   PRs can diff serving performance against this baseline.
 
 use std::time::{Duration, Instant};
 
 use cscam::config::DesignConfig;
 use cscam::coordinator::{BatchPolicy, CamServer, DecodeBackend, LookupEngine};
+use cscam::shard::{ShardRouter, ShardedCamServer};
+use cscam::util::bench::{write_bench_json, BenchRecord};
+use cscam::util::cli::Args;
 use cscam::util::Rng;
 use cscam::workload::{QueryMix, TagDistribution};
 
@@ -93,34 +104,149 @@ fn run_bulk(name: &str, backend: DecodeBackend, lookups: usize, chunk: usize) {
     );
 }
 
-fn main() {
-    println!("# coordinator throughput (reference design, 90 % hit mix)");
-    let fast = BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(100) };
-    for threads in [1usize, 2, 4, 8, 16] {
-        run_serve(
-            &format!("native/threads={threads}/max_batch=64"),
-            DecodeBackend::Native,
-            threads,
-            200_000,
-            fast,
-        );
+/// The headline trajectory row: a tag-hash fleet of `shards` banks at the
+/// SAME total capacity (reference M = 512 split across the banks), uniform
+/// 90 % hit mix, 8 client threads shipping bulk chunks.  1 bank vs 4 banks
+/// is the scale-out claim: same stored content, `S×` engine threads.
+fn run_sharded(shards: usize, lookups: usize) -> BenchRecord {
+    let threads = 8usize;
+    let chunk = 256usize;
+    let cfg = DesignConfig { shards, ..DesignConfig::reference() };
+    let router = ShardRouter::tag_hash(shards);
+    let bank_cfg = cfg.per_bank();
+
+    // ~70 % fill with headroom: hash placement is binomial across banks
+    let mut rng = Rng::seed_from_u64(1);
+    let candidates =
+        TagDistribution::Uniform.sample_distinct(cfg.n, cfg.m * 7 / 10, &mut rng);
+    let mut banks: Vec<LookupEngine> =
+        (0..shards).map(|_| LookupEngine::new(bank_cfg.clone())).collect();
+    let mut stored = Vec::new();
+    for t in &candidates {
+        let b = router.place(t).expect("hash mode");
+        if banks[b].insert(t).is_ok() {
+            stored.push(t.clone());
+        }
     }
-    println!();
-    for max_batch in [1usize, 8, 64, 256] {
-        run_serve(
-            &format!("native/threads=8/max_batch={max_batch}"),
-            DecodeBackend::Native,
-            8,
-            200_000,
-            BatchPolicy { max_batch, max_wait: Duration::from_micros(100) },
-        );
+    let policy = BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(100) };
+    let h = ShardedCamServer::with_banks(banks, router, policy).spawn();
+
+    let mix = QueryMix { hit_ratio: 0.9, zipf_s: 0.0 };
+    let mut per_thread: Vec<Vec<Vec<cscam::bits::BitVec>>> = vec![Vec::new(); threads];
+    let mut current: Vec<Vec<cscam::bits::BitVec>> = vec![Vec::new(); threads];
+    for i in 0..lookups {
+        let t = i % threads;
+        current[t].push(mix.sample(&stored, cfg.n, &mut rng).0);
+        if current[t].len() == chunk {
+            per_thread[t].push(std::mem::take(&mut current[t]));
+        }
+    }
+    for (t, rest) in current.into_iter().enumerate() {
+        if !rest.is_empty() {
+            per_thread[t].push(rest);
+        }
     }
 
-    println!();
-    run_bulk("native/bulk=256", DecodeBackend::Native, 500_000, 256);
-    run_bulk("native/bulk=4096", DecodeBackend::Native, 500_000, 4096);
+    let t0 = Instant::now();
+    let joins: Vec<_> = per_thread
+        .into_iter()
+        .map(|chunks| {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                let mut hits = 0usize;
+                for c in chunks {
+                    for r in h.lookup_many(c) {
+                        hits += r.unwrap().addr.is_some() as usize;
+                    }
+                }
+                hits
+            })
+        })
+        .collect();
+    let mut hits = 0usize;
+    for j in joins {
+        hits += j.join().unwrap();
+    }
+    let wall = t0.elapsed();
 
-    pjrt_rows(fast);
+    let fm = h.fleet_metrics().unwrap();
+    let throughput = lookups as f64 / wall.as_secs_f64();
+    println!(
+        "{:<44} {:>10.0} lookups/s  (λ̄ {:.3}, p50 {:>7} ns, p99 {:>8} ns, hits {})",
+        format!("sharded/banks={shards}/uniform/bulk{chunk}x{threads}t"),
+        throughput,
+        fm.aggregate.lambda.mean(),
+        fm.aggregate.host_latency_ns.quantile(0.5),
+        fm.aggregate.host_latency_ns.quantile(0.99),
+        hits,
+    );
+
+    let mut rec = BenchRecord::new(format!("sharded/banks={shards}/uniform/bulk{chunk}x{threads}t"));
+    rec.push("shards", shards as f64);
+    rec.push("lookups", lookups as f64);
+    rec.push("throughput_lps", throughput);
+    rec.push("p50_ns", fm.aggregate.host_latency_ns.quantile(0.5) as f64);
+    rec.push("p99_ns", fm.aggregate.host_latency_ns.quantile(0.99) as f64);
+    rec.push("mean_lambda", fm.aggregate.lambda.mean());
+    rec.push("mean_batch", fm.aggregate.batch_size.mean());
+    rec.push("hit_ratio", fm.aggregate.hit_ratio());
+    rec
+}
+
+fn main() -> anyhow::Result<()> {
+    // `cargo bench ... -- FLAGS` forwards FLAGS here (harness = false)
+    let args = Args::parse(std::env::args().skip(1), &["quick", "bench"])?;
+    args.check_known(&["quick", "bench", "shards", "json"])?;
+    let quick = args.flag("quick");
+    let shard_counts: Vec<usize> = args.get_list("shards", vec![1, 4])?;
+    let lookups = if quick { 60_000 } else { 400_000 };
+
+    println!(
+        "# coordinator throughput (reference design, 90 % hit mix{})",
+        if quick { ", --quick" } else { "" }
+    );
+    let mut records = Vec::new();
+    for &s in &shard_counts {
+        // clean CLI error instead of a deep CamArray assert on bad geometry
+        DesignConfig { shards: s, ..DesignConfig::reference() }.validate()?;
+        records.push(run_sharded(s, lookups));
+    }
+
+    if !quick {
+        println!();
+        let fast = BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(100) };
+        for threads in [1usize, 2, 4, 8, 16] {
+            run_serve(
+                &format!("native/threads={threads}/max_batch=64"),
+                DecodeBackend::Native,
+                threads,
+                200_000,
+                fast,
+            );
+        }
+        println!();
+        for max_batch in [1usize, 8, 64, 256] {
+            run_serve(
+                &format!("native/threads=8/max_batch={max_batch}"),
+                DecodeBackend::Native,
+                8,
+                200_000,
+                BatchPolicy { max_batch, max_wait: Duration::from_micros(100) },
+            );
+        }
+
+        println!();
+        run_bulk("native/bulk=256", DecodeBackend::Native, 500_000, 256);
+        run_bulk("native/bulk=4096", DecodeBackend::Native, 500_000, 4096);
+
+        pjrt_rows(fast);
+    }
+
+    if let Some(path) = args.get("json") {
+        write_bench_json(std::path::Path::new(path), "coordinator", &records)?;
+        println!("\nwrote {} trajectory rows to {path}", records.len());
+    }
+    Ok(())
 }
 
 #[cfg(feature = "pjrt")]

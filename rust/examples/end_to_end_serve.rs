@@ -14,16 +14,28 @@
 //! exactly, and reports latency/throughput/energy.
 //!
 //! Run: `make artifacts && cargo run --release --features pjrt --example end_to_end_serve`
+//!
+//! Flags: `--shards S` (default 1) adds a sharded-fleet section — the same
+//! workload through `S` native-decode banks behind the scatter-gather
+//! router — and `--placement hash|prefix|broadcast` picks the routing mode
+//! (the PJRT backend itself stays single-bank: the artifacts are
+//! AOT-compiled for one geometry).
 
 use std::time::Duration;
 
 use cscam::config::DesignConfig;
 use cscam::coordinator::{BatchPolicy, CamServer, DecodeBackend, LookupEngine};
 use cscam::runtime::{artifacts_available, default_artifact_dir, ArtifactStore};
+use cscam::shard::{PlacementMode, ShardedCamServer};
+use cscam::util::cli::Args;
 use cscam::util::Rng;
 use cscam::workload::{QueryMix, TagDistribution};
 
 fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &[])?;
+    args.check_known(&["shards", "placement"])?;
+    let shards: usize = args.get_parse("shards", 1)?;
+    let placement = args.get("placement").unwrap_or("hash").to_string();
     if !artifacts_available() {
         anyhow::bail!("no artifacts found — run `make artifacts` first");
     }
@@ -107,6 +119,57 @@ fn main() -> anyhow::Result<()> {
             m.energy_per_bit(cfg.m, cfg.n),
             m.lambda.mean(),
             m.enabled_blocks.mean()
+        );
+    }
+
+    // Optional scale-out section: the same workload through a sharded
+    // fleet of native-decode banks.
+    if shards > 1 {
+        let mut fleet_cfg = cfg.clone();
+        fleet_cfg.shards = shards;
+        fleet_cfg.validate()?;
+        let mode = match placement.as_str() {
+            "hash" => PlacementMode::TagHash,
+            "prefix" => PlacementMode::learned(shards, &stored, cfg.n),
+            "broadcast" => PlacementMode::Broadcast,
+            other => anyhow::bail!("unknown --placement '{other}' (hash|prefix|broadcast)"),
+        };
+        let fleet = ShardedCamServer::new(&fleet_cfg, mode, policy).spawn();
+        let mut fleet_stored = 0usize;
+        for t in &stored {
+            if fleet.insert(t.clone()).is_ok() {
+                fleet_stored += 1;
+            }
+        }
+        let t0 = std::time::Instant::now();
+        let mut joins = Vec::new();
+        for qs in per_thread.clone() {
+            let h = fleet.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut hits = 0usize;
+                for t in qs {
+                    hits += h.lookup(t).expect("lookup").addr.is_some() as usize;
+                }
+                hits
+            }));
+        }
+        let hits: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+        let wall = t0.elapsed();
+        let fm = fleet.fleet_metrics().expect("metrics");
+        println!(
+            "\n## sharded fleet — {shards} banks × {} entries, native decode, placement={placement}",
+            fleet_cfg.per_bank().m
+        );
+        println!("  stored {fleet_stored}/{} (banks fill binomially under hash)", stored.len());
+        println!("  {}", fm.summary(fleet_cfg.per_bank().m, fleet_cfg.n));
+        println!(
+            "  hits {}/{} | throughput {:.0} lookups/s | wall {:.3} s | hottest bank {} ({:.1} %)",
+            hits,
+            lookups,
+            lookups as f64 / wall.as_secs_f64(),
+            wall.as_secs_f64(),
+            fm.hottest_bank(),
+            100.0 * fm.hot_fraction()
         );
     }
 

@@ -13,7 +13,8 @@
 
 use cscam::cnn::Selection;
 use cscam::config::DesignConfig;
-use cscam::coordinator::{LookupEngine, ShardRouter};
+use cscam::coordinator::LookupEngine;
+use cscam::shard::{PlacementMode, ShardedCam};
 use cscam::stats::OnlineStats;
 use cscam::util::Rng;
 use cscam::workload::AclTrace;
@@ -66,29 +67,35 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // Scale-out: a 2048-rule table across four sharded macros.
+    // Scale-out: a 2048-rule table across four sharded macros.  ACL tags
+    // have a nearly-constant prefix region, so use the learned-prefix
+    // placement (entropy-driven bit selection) instead of hashing blind.
     println!("\n# shard scale-out: 2048 rules over 4 × {}-entry macros", cfg.m);
-    let mut router = ShardRouter::new(cfg.clone(), 4);
     let big_rules = AclTrace { n: cfg.n, prefixes: 16, prefix_len: 44 }.generate(1800, &mut rng);
+    let fleet_cfg = DesignConfig { m: 4 * cfg.m, shards: 4, ..cfg.clone() };
+    let mut cam = ShardedCam::new(&fleet_cfg, PlacementMode::learned(4, &big_rules, cfg.n));
     let mut stored = 0usize;
     for r in &big_rules {
-        if router.insert(r).is_ok() {
+        if cam.insert(r).is_ok() {
             stored += 1;
         }
     }
     let mut found = 0usize;
     let mut energy = OnlineStats::new();
+    let mut banks_touched = OnlineStats::new();
     for r in &big_rules {
-        let (_, out) = router.lookup(r)?;
+        let out = cam.lookup(r)?;
         found += out.addr.is_some() as usize;
         energy.push(out.energy.total_fj());
+        banks_touched.push(out.banks_searched as f64);
     }
     println!(
-        "stored {}/{}, found {}, mean lookup energy {:.1} fJ",
+        "stored {}/{}, found {}, mean lookup energy {:.1} fJ, banks touched/lookup {:.1}",
         stored,
         big_rules.len(),
         found,
-        energy.mean()
+        energy.mean(),
+        banks_touched.mean()
     );
     println!("(one shard active per lookup: scale-out adds capacity at constant search energy)");
     Ok(())

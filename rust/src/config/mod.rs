@@ -52,6 +52,11 @@ pub struct DesignConfig {
     pub ml_kind: MatchlineKind,
     /// Technology node name (resolved via [`tech::node_by_name`]).
     pub node: String,
+    /// Shard geometry: how many independent banks the serving layer
+    /// instantiates.  `m` stays the TOTAL capacity across the fleet; each
+    /// bank is its own full CNN+CAM instance holding `m / shards` entries
+    /// (see [`crate::shard`]).  `1` is the paper's single-macro device.
+    pub shards: usize,
 }
 
 impl DesignConfig {
@@ -66,6 +71,7 @@ impl DesignConfig {
             l: 8,
             ml_kind: MatchlineKind::Nor,
             node: "0.13um".to_string(),
+            shards: 1,
         }
     }
 
@@ -79,7 +85,15 @@ impl DesignConfig {
             l: 4,
             ml_kind: MatchlineKind::Nor,
             node: "0.13um".to_string(),
+            shards: 1,
         }
+    }
+
+    /// The design point of ONE bank of a sharded fleet: identical geometry
+    /// with the total capacity divided across the banks.  With `shards == 1`
+    /// this is a plain clone.
+    pub fn per_bank(&self) -> DesignConfig {
+        DesignConfig { m: self.m / self.shards.max(1), shards: 1, ..self.clone() }
     }
 
     /// Reduced-length tag width: q = c·log2(l) (§II-A).
@@ -146,6 +160,14 @@ impl DesignConfig {
             "unknown technology node '{}'",
             self.node
         );
+        ensure!(self.shards >= 1, "shards must be >= 1");
+        ensure!(self.m % self.shards == 0, "shards={} must divide M={}", self.shards, self.m);
+        ensure!(
+            (self.m / self.shards) % self.zeta == 0,
+            "ζ={} must divide the per-bank capacity M/shards={}",
+            self.zeta,
+            self.m / self.shards
+        );
         Ok(())
     }
 
@@ -186,6 +208,7 @@ impl DesignConfig {
                     }
                 }
                 "node" => cfg.node = v.to_string(),
+                "shards" => cfg.shards = v.parse().with_context(ctx)?,
                 _ => bail!("line {}: unknown key '{k}'", lineno + 1),
             }
         }
@@ -196,14 +219,15 @@ impl DesignConfig {
     /// Serialize to the `key = value` format accepted by [`Self::from_kv`].
     pub fn to_kv(&self) -> String {
         format!(
-            "# cscam design point (Table I names)\nm = {}\nn = {}\nzeta = {}\nc = {}\nl = {}\nml_kind = \"{}\"\nnode = \"{}\"\n",
+            "# cscam design point (Table I names)\nm = {}\nn = {}\nzeta = {}\nc = {}\nl = {}\nml_kind = \"{}\"\nnode = \"{}\"\nshards = {}\n",
             self.m,
             self.n,
             self.zeta,
             self.c,
             self.l,
             self.ml_kind.name(),
-            self.node
+            self.node,
+            self.shards
         )
     }
 }
@@ -274,6 +298,33 @@ mod tests {
         assert!(DesignConfig::from_kv("m 512").is_err());
         // structurally invalid after parse
         assert!(DesignConfig::from_kv("zeta = 7").is_err());
+    }
+
+    #[test]
+    fn shard_geometry_validates_and_splits() {
+        let cfg = DesignConfig { shards: 4, ..DesignConfig::reference() };
+        cfg.validate().unwrap();
+        let bank = cfg.per_bank();
+        assert_eq!(bank.m, 128);
+        assert_eq!(bank.shards, 1);
+        assert_eq!(bank.n, cfg.n);
+        bank.validate().unwrap();
+        // shards must divide M
+        let cfg = DesignConfig { shards: 3, ..DesignConfig::reference() };
+        assert!(cfg.validate().is_err());
+        // ζ must divide the per-bank capacity, not just M
+        let cfg = DesignConfig { m: 16, zeta: 8, shards: 4, ..DesignConfig::small_test() };
+        assert!(cfg.validate().is_err());
+        let cfg = DesignConfig { shards: 0, ..DesignConfig::reference() };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn kv_parses_shards() {
+        let cfg = DesignConfig::from_kv("shards = 4").unwrap();
+        assert_eq!(cfg.shards, 4);
+        assert_eq!(cfg.per_bank().m, 128);
+        assert!(DesignConfig::from_kv("shards = 3").is_err(), "3 does not divide 512");
     }
 
     #[test]

@@ -10,7 +10,10 @@ use crate::timing::{proposed_delay, DelayConstants, DelayReport};
 /// Engine errors.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum EngineError {
-    /// The CAM is full — no free slot for an insert.
+    /// The CAM is full — no free slot for an insert.  Also returned by the
+    /// non-blocking [`crate::coordinator::ServerHandle::try_lookup`] when
+    /// the server's admission queue is at capacity (per-bank load shedding
+    /// in the sharded fleet).
     Full,
     /// Address out of range.
     BadAddress(usize),
@@ -256,6 +259,15 @@ impl LookupEngine {
     /// Cluster indices for a tag (what the PJRT decode path ships).
     pub fn cluster_indices(&self, tag: &BitVec) -> Vec<u16> {
         self.selection.apply(tag)
+    }
+
+    /// Raw functional search with every sub-block enabled and no CNN stage:
+    /// the pure content of the array.  This is the anchor the sharded
+    /// scatter-gather path ([`crate::shard::ShardedCam`]) is checked
+    /// against bit-for-bit.  Panics on a tag-width mismatch (the callers
+    /// validate widths at the API boundary).
+    pub fn search_unclassified(&self, tag: &BitVec) -> crate::cam::SearchResult {
+        self.cam.search_all(tag)
     }
 
     /// Baseline: conventional full-array search (all blocks enabled), with

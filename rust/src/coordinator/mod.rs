@@ -1,27 +1,33 @@
-//! L3 — the serving coordinator.
+//! L3 — the serving coordinator for ONE bank.
 //!
 //! The paper's device is a lookup engine; the coordinator wraps it the way
 //! a TLB/router integration would: a threaded request loop with a dynamic
-//! batcher in front of the decode stage, shard routing across multiple CAM
-//! macros, an insert/delete path that keeps the CNN consistent with the
-//! array, and per-request energy/latency accounting.
+//! batcher in front of the decode stage, an insert/delete path that keeps
+//! the CNN consistent with the array, and per-request energy/latency
+//! accounting.  Everything here is per-bank by construction — one
+//! [`LookupEngine`], one [`Batcher`], one [`Metrics`] per engine thread —
+//! which is exactly what lets [`crate::shard`] stack `S` of these behind a
+//! scatter-gather router and aggregate the per-bank snapshots into a fleet
+//! view.
 //!
 //! * [`engine`] — one CAM macro + its CNN classifier (the Fig. 1 system).
 //! * [`batcher`] — size/deadline dynamic batching for the decode stage
 //!   (feeds the PJRT artifact whose batch sizes are fixed at AOT time).
 //! * [`server`] — threaded serve loop: mpsc in, per-request response
-//!   channels out, graceful drain.
-//! * [`router`] — hash-sharding across engines (multi-macro scale-out).
+//!   channels out, non-blocking admission, graceful drain.
 //! * [`metrics`] — counters + latency/energy aggregation.
+//!
+//! Multi-bank scale-out (placement, scatter-gather, fleet metrics) lives
+//! one layer up in [`crate::shard`].
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
-pub mod router;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use engine::{EngineError, LookupEngine, LookupOutcome};
 pub use metrics::Metrics;
-pub use router::ShardRouter;
-pub use server::{CamServer, DecodeBackend, ServerHandle};
+pub use server::{
+    CamServer, DecodeBackend, PendingBulk, PendingLookup, ServerHandle, DEFAULT_QUEUE_CAPACITY,
+};

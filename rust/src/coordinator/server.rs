@@ -10,7 +10,9 @@
 //! through the PJRT artifact ([`crate::runtime::ArtifactStore`]), the
 //! three-layer configuration with Python strictly at build time.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::bits::BitVec;
@@ -80,40 +82,118 @@ enum Request {
     Drain { resp: mpsc::SyncSender<()> },
 }
 
+/// A lookup that has been enqueued but not yet answered — the scatter half
+/// of a scatter-gather: fire one per bank, then [`PendingLookup::wait`] for
+/// each (see [`crate::shard::ShardedServerHandle`]).
+pub struct PendingLookup {
+    rx: mpsc::Receiver<Result<LookupOutcome, EngineError>>,
+}
+
+impl PendingLookup {
+    /// Block until the engine thread answers.
+    pub fn wait(self) -> Result<LookupOutcome, EngineError> {
+        self.rx.recv().map_err(|_| EngineError::Shutdown)?
+    }
+}
+
+/// An enqueued bulk lookup (scatter half; see [`PendingLookup`]).
+pub struct PendingBulk {
+    rx: Option<mpsc::Receiver<Vec<Result<LookupOutcome, EngineError>>>>,
+    n: usize,
+}
+
+impl PendingBulk {
+    /// Block until the engine thread answers; one result per input tag, in
+    /// order.  A dead engine yields [`EngineError::Shutdown`] per tag.
+    pub fn wait(self) -> Vec<Result<LookupOutcome, EngineError>> {
+        match self.rx {
+            None => Vec::new(),
+            Some(rx) => rx
+                .recv()
+                .unwrap_or_else(|_| (0..self.n).map(|_| Err(EngineError::Shutdown)).collect()),
+        }
+    }
+}
+
 /// Cloneable client handle to a running [`CamServer`].
 ///
-/// All methods block the calling thread until the engine thread responds;
-/// issue requests from multiple threads to exercise batching.  A send or
-/// receive failure means the engine thread is gone, reported as
+/// All methods block the calling thread until the engine thread responds
+/// (except `*_deferred`, which split enqueue from wait, and
+/// [`Self::try_lookup`], which sheds instead of queueing when the server is
+/// saturated); issue requests from multiple threads to exercise batching.
+/// A send or receive failure means the engine thread is gone, reported as
 /// [`EngineError::Shutdown`].
 #[derive(Clone)]
 pub struct ServerHandle {
     tx: mpsc::Sender<Request>,
+    /// Lookup tags enqueued but not yet dequeued by the engine thread
+    /// (bulk requests count per tag).
+    depth: Arc<AtomicUsize>,
+    /// Admission cap for [`Self::try_lookup`].
+    cap: usize,
 }
 
 impl ServerHandle {
+    /// Count a lookup-class request into the admission queue and send it.
+    /// `weight` is the number of tags the request carries, so bulk lookups
+    /// count per tag, not per message.
+    fn enqueue_lookup(&self, req: Request, weight: usize) -> Result<(), EngineError> {
+        self.depth.fetch_add(weight, Ordering::Relaxed);
+        self.tx.send(req).map_err(|_| {
+            self.depth.fetch_sub(weight, Ordering::Relaxed);
+            EngineError::Shutdown
+        })
+    }
+
+    /// True when the admission queue is at capacity ([`Self::try_lookup`]
+    /// would shed).
+    pub fn is_saturated(&self) -> bool {
+        self.depth.load(Ordering::Relaxed) >= self.cap
+    }
+
     /// Lookup (dynamically batched with concurrent callers).
     pub fn lookup(&self, tag: BitVec) -> Result<LookupOutcome, EngineError> {
+        self.lookup_deferred(tag)?.wait()
+    }
+
+    /// Non-blocking admission: like [`Self::lookup`], but returns
+    /// [`EngineError::Full`] without queueing when the server already has
+    /// `queue_capacity` tags pending (bulk requests count per tag) — the
+    /// per-bank load-shedding hook for the sharded router.
+    pub fn try_lookup(&self, tag: BitVec) -> Result<LookupOutcome, EngineError> {
+        if self.is_saturated() {
+            return Err(EngineError::Full);
+        }
+        self.lookup(tag)
+    }
+
+    /// Enqueue a lookup without waiting for the answer (scatter half).
+    pub fn lookup_deferred(&self, tag: BitVec) -> Result<PendingLookup, EngineError> {
         let (resp, rx) = mpsc::sync_channel(1);
-        self.tx
-            .send(Request::Lookup { tag, enqueued: Instant::now(), resp })
-            .map_err(|_| EngineError::Shutdown)?;
-        rx.recv().map_err(|_| EngineError::Shutdown)?
+        self.enqueue_lookup(Request::Lookup { tag, enqueued: Instant::now(), resp }, 1)?;
+        Ok(PendingLookup { rx })
     }
 
     /// Bulk lookup: ship many tags in one request — one channel round-trip
     /// amortized over the whole slice.  The batch is decoded in
     /// `max_batch`-sized chunks, preserving order.
     pub fn lookup_many(&self, tags: Vec<BitVec>) -> Vec<Result<LookupOutcome, EngineError>> {
-        if tags.is_empty() {
-            return Vec::new();
-        }
         let n = tags.len();
-        let (resp, rx) = mpsc::sync_channel(1);
-        if self.tx.send(Request::BulkLookup { tags, enqueued: Instant::now(), resp }).is_err() {
-            return (0..n).map(|_| Err(EngineError::Shutdown)).collect();
+        match self.lookup_many_deferred(tags) {
+            Ok(pending) => pending.wait(),
+            Err(e) => (0..n).map(|_| Err(e.clone())).collect(),
         }
-        rx.recv().unwrap_or_else(|_| (0..n).map(|_| Err(EngineError::Shutdown)).collect())
+    }
+
+    /// Enqueue a bulk lookup without waiting (scatter half).
+    pub fn lookup_many_deferred(&self, tags: Vec<BitVec>) -> Result<PendingBulk, EngineError> {
+        let n = tags.len();
+        if n == 0 {
+            return Ok(PendingBulk { rx: None, n: 0 });
+        }
+        let (resp, rx) = mpsc::sync_channel(1);
+        self.enqueue_lookup(Request::BulkLookup { tags, enqueued: Instant::now(), resp }, n)?;
+        Ok(PendingBulk { rx: Some(rx), n })
     }
 
     /// Insert a tag; returns once the CNN + CAM are updated.
@@ -146,12 +226,20 @@ impl ServerHandle {
     }
 }
 
+/// Default admission cap for [`ServerHandle::try_lookup`] — deep enough
+/// that only a genuinely backed-up engine sheds.
+pub const DEFAULT_QUEUE_CAPACITY: usize = 4096;
+
 /// The serve-thread owner.
 pub struct CamServer {
     engine: LookupEngine,
     backend: DecodeBackend,
     policy: BatchPolicy,
     metrics: Metrics,
+    /// Lookup tags enqueued but not yet dequeued (shared with handles).
+    queue_depth: Arc<AtomicUsize>,
+    /// Admission cap handed to [`ServerHandle::try_lookup`].
+    queue_cap: usize,
     /// Set on any mutation; the PJRT path re-uploads weights before the next
     /// batched decode.  (Only read by the `pjrt` decode path.)
     #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
@@ -166,18 +254,49 @@ impl CamServer {
 
     /// Build around an existing (pre-populated) engine.
     pub fn with_engine(engine: LookupEngine, backend: DecodeBackend, policy: BatchPolicy) -> Self {
-        CamServer { engine, backend, policy, metrics: Metrics::new(), weights_dirty: true }
+        CamServer {
+            engine,
+            backend,
+            policy,
+            metrics: Metrics::new(),
+            queue_depth: Arc::new(AtomicUsize::new(0)),
+            queue_cap: DEFAULT_QUEUE_CAPACITY,
+            weights_dirty: true,
+        }
+    }
+
+    /// Cap the admission queue: [`ServerHandle::try_lookup`] sheds with
+    /// [`EngineError::Full`] once this many lookups are pending.
+    pub fn with_queue_capacity(mut self, cap: usize) -> Self {
+        self.queue_cap = cap;
+        self
     }
 
     /// Spawn the serve loop on a dedicated thread.  The thread exits when
     /// every [`ServerHandle`] clone has been dropped.
     pub fn spawn(self) -> ServerHandle {
         let (tx, rx) = mpsc::channel();
+        let depth = Arc::clone(&self.queue_depth);
+        let cap = self.queue_cap;
         std::thread::Builder::new()
             .name("cscam-server".into())
             .spawn(move || self.run(rx))
             .expect("spawn server thread");
-        ServerHandle { tx }
+        ServerHandle { tx, depth, cap }
+    }
+
+    /// Account a request leaving the channel queue (admission bookkeeping —
+    /// mirrors the per-tag weights of `ServerHandle::enqueue_lookup`).
+    fn note_dequeue(&self, req: &Request) {
+        match req {
+            Request::Lookup { .. } => {
+                self.queue_depth.fetch_sub(1, Ordering::Relaxed);
+            }
+            Request::BulkLookup { tags, .. } => {
+                self.queue_depth.fetch_sub(tags.len(), Ordering::Relaxed);
+            }
+            _ => {}
+        }
     }
 
     fn run(mut self, rx: mpsc::Receiver<Request>) {
@@ -203,6 +322,9 @@ impl CamServer {
                 }
                 None => rx.recv().ok(),
             };
+            if let Some(r) = &req {
+                self.note_dequeue(r);
+            }
             match req {
                 Some(Request::Lookup { tag, enqueued, resp }) => {
                     if let Some(batch) = batcher.push((tag, enqueued, resp), Instant::now()) {
@@ -215,18 +337,23 @@ impl CamServer {
                     // that arrive while a batch is running.
                     loop {
                         match rx.try_recv() {
-                            Ok(Request::Lookup { tag, enqueued, resp }) => {
-                                if let Some(batch) =
-                                    batcher.push((tag, enqueued, resp), Instant::now())
-                                {
-                                    self.run_batch(batch);
+                            Ok(drained) => {
+                                self.note_dequeue(&drained);
+                                match drained {
+                                    Request::Lookup { tag, enqueued, resp } => {
+                                        if let Some(batch) =
+                                            batcher.push((tag, enqueued, resp), Instant::now())
+                                        {
+                                            self.run_batch(batch);
+                                        }
+                                    }
+                                    other => {
+                                        let batch = batcher.flush();
+                                        self.run_batch(batch);
+                                        self.handle_barrier(other);
+                                        break;
+                                    }
                                 }
-                            }
-                            Ok(other) => {
-                                let batch = batcher.flush();
-                                self.run_batch(batch);
-                                self.handle_barrier(other);
-                                break;
                             }
                             Err(mpsc::TryRecvError::Empty) => {
                                 let batch = batcher.flush();
@@ -485,8 +612,14 @@ mod tests {
         // means "no free CAM slot" and would mislead capacity-aware callers.
         let (tx, rx) = mpsc::channel();
         drop(rx);
-        let h = ServerHandle { tx };
+        let h = ServerHandle {
+            tx,
+            depth: Arc::new(AtomicUsize::new(0)),
+            cap: DEFAULT_QUEUE_CAPACITY,
+        };
         assert_eq!(h.lookup(BitVec::zeros(32)).unwrap_err(), EngineError::Shutdown);
+        assert_eq!(h.try_lookup(BitVec::zeros(32)).unwrap_err(), EngineError::Shutdown);
+        assert_eq!(h.depth.load(Ordering::Relaxed), 0, "failed sends must not leak depth");
         assert_eq!(h.insert(BitVec::zeros(32)).unwrap_err(), EngineError::Shutdown);
         assert_eq!(h.delete(0).unwrap_err(), EngineError::Shutdown);
         let bulk = h.lookup_many(vec![BitVec::zeros(32); 3]);
@@ -496,5 +629,82 @@ mod tests {
         }
         assert!(h.metrics().is_none());
         h.drain(); // must not hang or panic
+    }
+
+    #[test]
+    fn try_lookup_sheds_at_capacity_while_lookup_blocks_through() {
+        let server = CamServer::new(DesignConfig::small_test(), DecodeBackend::Native, policy())
+            .with_queue_capacity(0);
+        let h = server.spawn();
+        let mut rng = Rng::seed_from_u64(21);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 4, &mut rng);
+        for t in &tags {
+            h.insert(t.clone()).unwrap();
+        }
+        // cap 0: the non-blocking path sheds every request with Full...
+        assert_eq!(h.try_lookup(tags[0].clone()).unwrap_err(), EngineError::Full);
+        // ...while the blocking path still serves (shedding is opt-in).
+        assert_eq!(h.lookup(tags[0].clone()).unwrap().addr, Some(0));
+        let m = h.metrics().unwrap();
+        assert_eq!(m.lookups, 1, "shed requests never reach the engine");
+    }
+
+    #[test]
+    fn try_lookup_admits_below_capacity() {
+        let server = CamServer::new(DesignConfig::small_test(), DecodeBackend::Native, policy());
+        let h = server.spawn();
+        let mut rng = Rng::seed_from_u64(22);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 4, &mut rng);
+        for t in &tags {
+            h.insert(t.clone()).unwrap();
+        }
+        assert!(!h.is_saturated());
+        for (i, t) in tags.iter().enumerate() {
+            assert_eq!(h.try_lookup(t.clone()).unwrap().addr, Some(i));
+        }
+        // the queue drains as the engine answers: depth returns to zero
+        h.drain();
+        assert_eq!(h.depth.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn deferred_lookups_scatter_then_gather() {
+        let server = CamServer::new(DesignConfig::small_test(), DecodeBackend::Native, policy());
+        let h = server.spawn();
+        let mut rng = Rng::seed_from_u64(23);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 8, &mut rng);
+        for t in &tags {
+            h.insert(t.clone()).unwrap();
+        }
+        let pending: Vec<_> =
+            tags.iter().map(|t| h.lookup_deferred(t.clone()).unwrap()).collect();
+        for (i, p) in pending.into_iter().enumerate() {
+            assert_eq!(p.wait().unwrap().addr, Some(i));
+        }
+        let bulk = h.lookup_many_deferred(tags.clone()).unwrap().wait();
+        for (i, r) in bulk.into_iter().enumerate() {
+            assert_eq!(r.unwrap().addr, Some(i));
+        }
+        assert!(h.lookup_many_deferred(Vec::new()).unwrap().wait().is_empty());
+    }
+
+    #[test]
+    fn bulk_admission_counts_per_tag() {
+        // A bulk message of N tags must weigh N against the admission cap,
+        // not 1 — otherwise chunked clients never shed.
+        let server = CamServer::new(DesignConfig::small_test(), DecodeBackend::Native, policy());
+        let h = server.spawn();
+        let mut rng = Rng::seed_from_u64(24);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 6, &mut rng);
+        for t in &tags {
+            h.insert(t.clone()).unwrap();
+        }
+        let pending = h.lookup_many_deferred(tags.clone()).unwrap();
+        // enqueue counted 6; it may already be partially dequeued, never more
+        assert!(h.depth.load(Ordering::Relaxed) <= 6);
+        let results = pending.wait();
+        assert_eq!(results.len(), 6);
+        h.drain();
+        assert_eq!(h.depth.load(Ordering::Relaxed), 0, "per-tag weights must balance");
     }
 }

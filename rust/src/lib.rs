@@ -33,8 +33,11 @@
 //!   produced by `python/compile/aot.py` and executes them on the request
 //!   path (Python is build-time only).  The execution half sits behind the
 //!   `pjrt` cargo feature; the default build is pure Rust.
-//! - [`coordinator`] — the L3 serving system: request router, dynamic
+//! - [`coordinator`] — the L3 serving system for one bank: dynamic
 //!   batcher, lookup engine, insert/delete paths, metrics.
+//! - [`shard`] — the L4 scale-out layer: `S` independent CNN+CAM banks
+//!   behind a scatter-gather router (tag-hash / learned-prefix / broadcast
+//!   placement), with fleet-level metrics aggregation.
 
 pub mod baselines;
 pub mod bits;
@@ -44,6 +47,7 @@ pub mod config;
 pub mod coordinator;
 pub mod energy;
 pub mod runtime;
+pub mod shard;
 pub mod stats;
 pub mod sweep;
 pub mod tech;

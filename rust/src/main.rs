@@ -39,6 +39,10 @@ COMMANDS:
   serve   run the coordinator   --lookups N --hit-ratio R --pjrt --max-batch B
                                 --threads T --seed S
           (--pjrt needs a binary built with `--features pjrt`)
+          sharded fleet:        --shards S --placement hash|prefix|broadcast
+                                --hot-fraction F --hot-shard B
+          (S > 1 spawns one engine thread per bank; --hot-fraction > 0
+           hammers one bank through the hot-shard stream)
   info    print the design point and all model predictions
 ";
 
@@ -246,9 +250,20 @@ fn serve(cfg: &DesignConfig, args: &Args) -> Result<()> {
     let max_batch: usize = args.get_parse("max-batch", 64)?;
     let threads: usize = args.get_parse("threads", 8)?;
     let seed: u64 = args.get_parse("seed", 7)?;
+    let shards: usize = args.get_parse("shards", cfg.shards)?;
+
+    let policy = BatchPolicy { max_batch, ..Default::default() };
+    if shards > 1 {
+        if pjrt {
+            bail!(
+                "--pjrt serves a single bank (the artifacts are AOT-compiled \
+                 for one geometry); drop --shards or --pjrt"
+            );
+        }
+        return serve_sharded(cfg, args, shards, policy);
+    }
 
     let backend = if pjrt { pjrt_backend(cfg)? } else { DecodeBackend::Native };
-    let policy = BatchPolicy { max_batch, ..Default::default() };
     let h = CamServer::new(cfg.clone(), backend, policy).spawn();
 
     let mut rng = Rng::seed_from_u64(seed);
@@ -290,6 +305,109 @@ fn serve(cfg: &DesignConfig, args: &Args) -> Result<()> {
         lookups as f64 / wall.as_secs_f64(),
         wall.as_secs_f64(),
         m.batch_size.mean()
+    );
+    Ok(())
+}
+
+/// The sharded serve path: one engine thread per bank behind the
+/// scatter-gather router, with an optional hot-shard stream.
+fn serve_sharded(
+    cfg: &DesignConfig,
+    args: &Args,
+    shards: usize,
+    policy: BatchPolicy,
+) -> Result<()> {
+    use cscam::shard::{PlacementMode, ShardedCamServer};
+    use cscam::workload::HotShardMix;
+
+    let lookups: usize = args.get_parse("lookups", 10_000)?;
+    let hit_ratio: f64 = args.get_parse("hit-ratio", 0.9)?;
+    let threads: usize = args.get_parse("threads", 8)?;
+    let seed: u64 = args.get_parse("seed", 7)?;
+    let hot_fraction: f64 = args.get_parse("hot-fraction", 0.0)?;
+    let placement = args.get("placement").unwrap_or("hash");
+
+    let mut fleet_cfg = cfg.clone();
+    fleet_cfg.shards = shards;
+    fleet_cfg.validate()?;
+
+    // ~70 % fill: hash placement is binomial across banks, leave headroom
+    let mut rng = Rng::seed_from_u64(seed);
+    let candidates =
+        TagDistribution::Uniform.sample_distinct(fleet_cfg.n, fleet_cfg.m * 7 / 10, &mut rng);
+    let mode = match placement {
+        "hash" => PlacementMode::TagHash,
+        "prefix" => PlacementMode::learned(shards, &candidates, fleet_cfg.n),
+        "broadcast" => PlacementMode::Broadcast,
+        other => bail!("unknown --placement '{other}' (hash|prefix|broadcast)"),
+    };
+    let h = ShardedCamServer::new(&fleet_cfg, mode, policy).spawn();
+    let mut stored = Vec::new();
+    for t in &candidates {
+        if h.insert(t.clone()).is_ok() {
+            stored.push(t.clone());
+        }
+    }
+
+    // pre-draw queries: plain mix, or the hot-shard stream
+    if hot_fraction > 0.0 && placement == "broadcast" {
+        bail!(
+            "--hot-fraction is meaningless with --placement broadcast \
+             (every lookup touches every bank); use hash or prefix placement"
+        );
+    }
+    let by_bank = h.router().partition(&stored);
+    let hot_bank: usize = args.get_parse(
+        "hot-shard",
+        (0..by_bank.len()).max_by_key(|&b| by_bank[b].len()).unwrap_or(0),
+    )?;
+    if hot_bank >= shards {
+        bail!("--hot-shard {hot_bank} out of range: the fleet has {shards} banks");
+    }
+    let mix = QueryMix { hit_ratio, zipf_s: 0.0 };
+    let hot = HotShardMix { hot_bank, hot_fraction, hit_ratio };
+    let mut queries: Vec<Vec<cscam::bits::BitVec>> = vec![Vec::new(); threads];
+    for i in 0..lookups {
+        let tag = if hot_fraction > 0.0 {
+            hot.sample(&by_bank, fleet_cfg.n, &mut rng).0
+        } else {
+            mix.sample(&stored, fleet_cfg.n, &mut rng).0
+        };
+        queries[i % threads].push(tag);
+    }
+
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for qs in queries {
+        let h = h.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut hits = 0usize;
+            for t in qs {
+                hits += h.lookup(t).expect("lookup").addr.is_some() as usize;
+            }
+            hits
+        }));
+    }
+    let hits: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+    let wall = t0.elapsed();
+
+    let fm = h.fleet_metrics().expect("metrics");
+    println!(
+        "# serve — sharded fleet: {shards} banks × {} entries, placement={placement}, \
+         {threads} client threads",
+        fleet_cfg.per_bank().m
+    );
+    if hot_fraction > 0.0 {
+        println!("# hot-shard stream: bank {hot_bank} draws {:.0} % of hits", 100.0 * hot_fraction);
+    }
+    println!("{}", fm.summary(fleet_cfg.per_bank().m, fleet_cfg.n));
+    println!(
+        "hits: {hits}/{lookups}; throughput: {:.0} lookups/s (wall {:.3} s); hottest bank {} \
+         ({:.1} % of lookups)",
+        lookups as f64 / wall.as_secs_f64(),
+        wall.as_secs_f64(),
+        fm.hottest_bank(),
+        100.0 * fm.hot_fraction()
     );
     Ok(())
 }

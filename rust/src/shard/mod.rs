@@ -1,0 +1,32 @@
+//! L4 — horizontal scale-out: many independent CNN+CAM banks behind one
+//! scatter-gather routing front-end.
+//!
+//! The paper's device already decomposes one array into `β = M/ζ`
+//! compare-enabled sub-blocks; this layer applies the same move one level
+//! up.  A fleet of `S` banks — each a complete Fig. 1 system with its own
+//! clustered network, CAM array, dynamic batcher and engine thread —
+//! serves a tag space partitioned by a [`ShardRouter`]:
+//!
+//! * **owner placement** ([`PlacementMode::TagHash`] /
+//!   [`PlacementMode::LearnedPrefix`]): a lookup touches exactly one bank,
+//!   so search energy stays that of a single `M/S`-entry device while
+//!   capacity and throughput scale with `S`;
+//! * **broadcast** ([`PlacementMode::Broadcast`]): lookups scatter to
+//!   every bank and the answers are gathered — matches are globalized,
+//!   [`crate::energy::SearchActivity`] counters and energy sum, timing
+//!   takes the slowest bank.
+//!
+//! * [`placement`] — placement modes and the stable tag-hash.
+//! * [`sharded`] — [`ShardedCam`], the synchronous multi-bank core, with
+//!   the merge rules and the monolith-equivalence search.
+//! * [`server`] — [`ShardedCamServer`] / [`ShardedServerHandle`], the
+//!   threaded fleet with per-bank engine threads, load shedding and
+//!   [`FleetMetrics`] aggregation.
+
+pub mod placement;
+pub mod server;
+pub mod sharded;
+
+pub use placement::{PlacementMode, ShardRouter};
+pub use server::{FleetMetrics, ShardedCamServer, ShardedServerHandle};
+pub use sharded::{ShardedCam, ShardedOutcome};

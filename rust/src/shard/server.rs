@@ -1,0 +1,389 @@
+//! The threaded fleet: one [`CamServer`] engine thread per bank behind a
+//! scatter-gather [`ShardedServerHandle`].
+//!
+//! Each bank keeps the full single-bank serving stack — its own
+//! [`crate::coordinator::Batcher`], [`crate::coordinator::LookupEngine`]
+//! and [`Metrics`] on a dedicated engine thread — so banks batch and burn
+//! energy independently.  The handle routes by [`ShardRouter`]: owner
+//! dispatch in hash/prefix modes, scatter-then-gather (deferred sends, one
+//! wait per bank) in broadcast mode, and per-bank load shedding through
+//! [`crate::coordinator::ServerHandle::try_lookup`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::bits::BitVec;
+use crate::config::DesignConfig;
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::engine::{EngineError, LookupEngine};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::server::{CamServer, DecodeBackend, ServerHandle};
+use crate::shard::placement::{PlacementMode, ShardRouter};
+use crate::shard::sharded::{
+    globalize_outcome, merge_fold, merge_outcomes, spill_insert, split_global, ShardedOutcome,
+};
+
+/// Per-bank metrics snapshots plus the merged fleet view.
+#[derive(Debug, Clone)]
+pub struct FleetMetrics {
+    /// One snapshot per bank, in bank order.
+    pub per_bank: Vec<Metrics>,
+    /// Every bank merged ([`Metrics::merge`]).
+    pub aggregate: Metrics,
+}
+
+impl FleetMetrics {
+    /// The bank that served the most lookups (the hot shard).
+    pub fn hottest_bank(&self) -> usize {
+        self.per_bank
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, m)| m.lookups)
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// Fraction of all lookups served by the hottest bank (1/S when the
+    /// fleet is balanced, →1.0 under a hot-shard workload).
+    pub fn hot_fraction(&self) -> f64 {
+        if self.aggregate.lookups == 0 {
+            return 0.0;
+        }
+        self.per_bank[self.hottest_bank()].lookups as f64 / self.aggregate.lookups as f64
+    }
+
+    /// Multi-line fleet summary (`bank_m`/`n` are the per-bank geometry).
+    pub fn summary(&self, bank_m: usize, n: usize) -> String {
+        let mut s = format!(
+            "fleet of {} banks: {}",
+            self.per_bank.len(),
+            self.aggregate.summary(bank_m, n)
+        );
+        for (i, m) in self.per_bank.iter().enumerate() {
+            s.push_str(&format!(
+                "\n  bank {i}: lookups={} hits={} inserts={} λ̄={:.3}",
+                m.lookups,
+                m.hits,
+                m.inserts,
+                m.lambda.mean()
+            ));
+        }
+        s
+    }
+}
+
+/// Builder for the threaded fleet.
+pub struct ShardedCamServer {
+    servers: Vec<CamServer>,
+    router: ShardRouter,
+    bank_m: usize,
+}
+
+impl ShardedCamServer {
+    /// `cfg.shards` fresh banks (native decode) of `cfg.m / cfg.shards`
+    /// entries each, sharing one batch policy.
+    pub fn new(cfg: &DesignConfig, mode: PlacementMode, policy: BatchPolicy) -> Self {
+        cfg.validate().expect("invalid design config");
+        let router = ShardRouter::new(cfg.shards, mode);
+        let bank_cfg = cfg.per_bank();
+        let servers = (0..cfg.shards)
+            .map(|_| CamServer::new(bank_cfg.clone(), DecodeBackend::Native, policy))
+            .collect();
+        ShardedCamServer { servers, router, bank_m: bank_cfg.m }
+    }
+
+    /// Wrap existing (pre-populated) banks of identical geometry.
+    pub fn with_banks(banks: Vec<LookupEngine>, router: ShardRouter, policy: BatchPolicy) -> Self {
+        assert!(!banks.is_empty(), "need at least one bank");
+        assert_eq!(banks.len(), router.shards(), "router/bank count mismatch");
+        let bank_m = banks[0].config().m;
+        assert!(
+            banks.iter().all(|b| b.config().m == bank_m),
+            "banks must share one geometry"
+        );
+        let servers = banks
+            .into_iter()
+            .map(|e| CamServer::with_engine(e, DecodeBackend::Native, policy))
+            .collect();
+        ShardedCamServer { servers, router, bank_m }
+    }
+
+    /// Cap every bank's admission queue (per-bank shedding for
+    /// [`ShardedServerHandle::try_lookup`]).
+    pub fn with_queue_capacity(mut self, cap: usize) -> Self {
+        self.servers =
+            self.servers.into_iter().map(|s| s.with_queue_capacity(cap)).collect();
+        self
+    }
+
+    /// Spawn one engine thread per bank.
+    pub fn spawn(self) -> ShardedServerHandle {
+        ShardedServerHandle {
+            banks: self.servers.into_iter().map(|s| s.spawn()).collect(),
+            router: Arc::new(self.router),
+            bank_m: self.bank_m,
+            rr: Arc::new(AtomicUsize::new(0)),
+        }
+    }
+}
+
+/// Cloneable client handle to a running fleet — the multi-bank analogue of
+/// [`ServerHandle`], with flat global addressing and fleet-level metrics.
+#[derive(Clone)]
+pub struct ShardedServerHandle {
+    banks: Vec<ServerHandle>,
+    router: Arc<ShardRouter>,
+    bank_m: usize,
+    /// Round-robin cursor for ownerless (broadcast) inserts.
+    rr: Arc<AtomicUsize>,
+}
+
+impl ShardedServerHandle {
+    pub fn shard_count(&self) -> usize {
+        self.banks.len()
+    }
+
+    /// Entries per bank (M_bank).
+    pub fn bank_m(&self) -> usize {
+        self.bank_m
+    }
+
+    pub fn router(&self) -> &ShardRouter {
+        &self.router
+    }
+
+    /// Direct handle to one bank (drains, per-bank probes).
+    pub fn bank(&self, i: usize) -> &ServerHandle {
+        &self.banks[i]
+    }
+
+    fn global(&self, bank: usize, local: usize) -> usize {
+        bank * self.bank_m + local
+    }
+
+    /// Insert into the owning bank (round-robin with fallback scan in
+    /// broadcast mode); returns the flat global address.
+    pub fn insert(&self, tag: BitVec) -> Result<usize, EngineError> {
+        match self.router.place(&tag) {
+            Some(b) => Ok(self.global(b, self.banks[b].insert(tag)?)),
+            None => {
+                let s = self.banks.len();
+                let start = self.rr.fetch_add(1, Ordering::Relaxed) % s;
+                let (b, a) = spill_insert(s, start, |b| self.banks[b].insert(tag.clone()))?;
+                Ok(self.global(b, a))
+            }
+        }
+    }
+
+    /// Delete by flat global address.
+    pub fn delete(&self, global: usize) -> Result<(), EngineError> {
+        let (b, local) = split_global(global, self.bank_m, self.banks.len())?;
+        self.banks[b].delete(local)
+    }
+
+    /// The scatter-gather lookup: owner dispatch in hash/prefix modes; in
+    /// broadcast mode the request is scattered to every bank first (they
+    /// decode in parallel) and the answers are gathered and merged.
+    pub fn lookup(&self, tag: BitVec) -> Result<ShardedOutcome, EngineError> {
+        match self.router.place(&tag) {
+            Some(b) => Ok(globalize_outcome(self.banks[b].lookup(tag)?, b, self.bank_m)),
+            None => {
+                let pending: Result<Vec<_>, _> =
+                    self.banks.iter().map(|h| h.lookup_deferred(tag.clone())).collect();
+                let mut merged: Option<ShardedOutcome> = None;
+                for (b, p) in pending?.into_iter().enumerate() {
+                    let g = globalize_outcome(p.wait()?, b, self.bank_m);
+                    merged = Some(merge_fold(merged, g));
+                }
+                Ok(merged.expect("at least one bank"))
+            }
+        }
+    }
+
+    /// Non-blocking admission: sheds with [`EngineError::Full`] when the
+    /// owning bank is saturated (broadcast: when any bank is), without
+    /// queueing anything.
+    pub fn try_lookup(&self, tag: BitVec) -> Result<ShardedOutcome, EngineError> {
+        match self.router.place(&tag) {
+            Some(b) => Ok(globalize_outcome(self.banks[b].try_lookup(tag)?, b, self.bank_m)),
+            None => {
+                if self.banks.iter().any(|h| h.is_saturated()) {
+                    return Err(EngineError::Full);
+                }
+                self.lookup(tag)
+            }
+        }
+    }
+
+    /// Bulk scatter-gather preserving input order: one bulk message per
+    /// owning bank (broadcast mode ships the whole slice to every bank and
+    /// merges element-wise), so channel round-trips amortize over the
+    /// slice and the banks' engine threads run concurrently.
+    pub fn lookup_many(&self, tags: Vec<BitVec>) -> Vec<Result<ShardedOutcome, EngineError>> {
+        let n = tags.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut out: Vec<Option<Result<ShardedOutcome, EngineError>>> = vec![None; n];
+        if self.router.is_broadcast() {
+            let pendings: Vec<_> =
+                self.banks.iter().map(|h| h.lookup_many_deferred(tags.clone())).collect();
+            for (b, p) in pendings.into_iter().enumerate() {
+                let results = match p {
+                    Ok(p) => p.wait(),
+                    Err(e) => (0..n).map(|_| Err(e.clone())).collect(),
+                };
+                for (i, r) in results.into_iter().enumerate() {
+                    let g = r.map(|o| globalize_outcome(o, b, self.bank_m));
+                    out[i] = Some(match out[i].take() {
+                        None => g,
+                        Some(Ok(acc)) => g.map(|o| merge_outcomes(acc, o)),
+                        Some(err) => err,
+                    });
+                }
+            }
+        } else {
+            let s = self.banks.len();
+            let mut per_bank: Vec<Vec<BitVec>> = vec![Vec::new(); s];
+            let mut pos: Vec<Vec<usize>> = vec![Vec::new(); s];
+            for (i, t) in tags.into_iter().enumerate() {
+                let b = self.router.place(&t).expect("owner placement");
+                pos[b].push(i);
+                per_bank[b].push(t);
+            }
+            let pendings: Vec<_> = per_bank
+                .into_iter()
+                .enumerate()
+                .map(|(b, ts)| self.banks[b].lookup_many_deferred(ts))
+                .collect();
+            for (b, p) in pendings.into_iter().enumerate() {
+                let results = match p {
+                    Ok(p) => p.wait(),
+                    Err(e) => (0..pos[b].len()).map(|_| Err(e.clone())).collect(),
+                };
+                for (&i, r) in pos[b].iter().zip(results) {
+                    out[i] = Some(r.map(|o| globalize_outcome(o, b, self.bank_m)));
+                }
+            }
+        }
+        out.into_iter().map(|r| r.expect("every slot filled")).collect()
+    }
+
+    /// Snapshot every bank and merge into the fleet view; `None` if any
+    /// engine thread is gone.
+    pub fn fleet_metrics(&self) -> Option<FleetMetrics> {
+        let mut per_bank = Vec::with_capacity(self.banks.len());
+        for h in &self.banks {
+            per_bank.push(*h.metrics()?);
+        }
+        let mut aggregate = Metrics::new();
+        for m in &per_bank {
+            aggregate.merge(m);
+        }
+        Some(FleetMetrics { per_bank, aggregate })
+    }
+
+    /// Flush every bank's pending work.
+    pub fn drain(&self) {
+        for h in &self.banks {
+            h.drain();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use crate::workload::TagDistribution;
+    use std::time::Duration;
+
+    fn fleet_cfg(shards: usize) -> DesignConfig {
+        DesignConfig { m: 256, n: 32, zeta: 4, c: 3, l: 4, shards, ..DesignConfig::reference() }
+    }
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(100) }
+    }
+
+    #[test]
+    fn fleet_roundtrip_and_metrics_aggregate() {
+        let h = ShardedCamServer::new(&fleet_cfg(4), PlacementMode::TagHash, policy()).spawn();
+        let mut rng = Rng::seed_from_u64(31);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 120, &mut rng);
+        let mut addrs = Vec::new();
+        for t in &tags {
+            addrs.push(h.insert(t.clone()).unwrap());
+        }
+        for (t, &g) in tags.iter().zip(&addrs) {
+            assert_eq!(h.lookup(t.clone()).unwrap().addr, Some(g));
+        }
+        let fm = h.fleet_metrics().unwrap();
+        assert_eq!(fm.per_bank.len(), 4);
+        assert_eq!(fm.aggregate.lookups, 120);
+        assert_eq!(fm.aggregate.hits, 120);
+        assert_eq!(fm.aggregate.inserts, 120);
+        let per_bank_sum: u64 = fm.per_bank.iter().map(|m| m.lookups).sum();
+        assert_eq!(per_bank_sum, 120, "fleet view is the sum of the banks");
+        assert!(fm.summary(64, 32).contains("fleet of 4 banks"));
+    }
+
+    #[test]
+    fn broadcast_fleet_merges_all_banks() {
+        let h = ShardedCamServer::new(&fleet_cfg(4), PlacementMode::Broadcast, policy()).spawn();
+        let mut rng = Rng::seed_from_u64(32);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 40, &mut rng);
+        let mut addrs = Vec::new();
+        for t in &tags {
+            addrs.push(h.insert(t.clone()).unwrap());
+        }
+        for (t, &g) in tags.iter().zip(&addrs) {
+            let out = h.lookup(t.clone()).unwrap();
+            assert_eq!(out.addr, Some(g));
+            assert_eq!(out.banks_searched, 4);
+        }
+        // every bank saw every lookup
+        let fm = h.fleet_metrics().unwrap();
+        for m in &fm.per_bank {
+            assert_eq!(m.lookups, 40);
+        }
+    }
+
+    #[test]
+    fn bulk_matches_singles_in_both_modes() {
+        for mode in [PlacementMode::TagHash, PlacementMode::Broadcast] {
+            let h = ShardedCamServer::new(&fleet_cfg(4), mode, policy()).spawn();
+            let mut rng = Rng::seed_from_u64(33);
+            let tags = TagDistribution::Uniform.sample_distinct(32, 60, &mut rng);
+            for t in &tags {
+                h.insert(t.clone()).unwrap();
+            }
+            let singles: Vec<_> =
+                tags.iter().map(|t| h.lookup(t.clone()).unwrap().addr).collect();
+            let bulk = h.lookup_many(tags.clone());
+            assert_eq!(bulk.len(), 60);
+            for (i, r) in bulk.into_iter().enumerate() {
+                assert_eq!(r.unwrap().addr, singles[i], "order must be preserved");
+            }
+            assert!(h.lookup_many(Vec::new()).is_empty());
+        }
+    }
+
+    #[test]
+    fn try_lookup_sheds_per_bank() {
+        let h = ShardedCamServer::new(&fleet_cfg(4), PlacementMode::TagHash, policy())
+            .with_queue_capacity(0)
+            .spawn();
+        let mut rng = Rng::seed_from_u64(34);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 8, &mut rng);
+        for t in &tags {
+            h.insert(t.clone()).unwrap();
+        }
+        // cap 0: every bank sheds the non-blocking path...
+        for t in &tags {
+            assert_eq!(h.try_lookup(t.clone()).unwrap_err(), EngineError::Full);
+        }
+        // ...while blocking lookups still get through.
+        assert!(h.lookup(tags[0].clone()).unwrap().addr.is_some());
+    }
+}

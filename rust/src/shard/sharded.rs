@@ -1,0 +1,382 @@
+//! The multi-bank CAM: `S` full CNN+CAM instances behind one router.
+//!
+//! [`ShardedCam`] is the synchronous core — a [`LookupEngine`] per bank
+//! plus the placement/merge logic, directly testable against a single
+//! [`crate::cam::CamArray`] of the same total M.  The threaded serving
+//! layer ([`crate::shard::server`]) stacks one engine thread per bank on
+//! top of the same merge rules.
+//!
+//! Addressing is flat: entry `a` of bank `b` is global address
+//! `b · M_bank + a`, so a fleet of `S × M_bank` banks is address-compatible
+//! with one `M = S · M_bank` array.
+
+use crate::bits::BitVec;
+use crate::cam::SearchResult;
+use crate::config::DesignConfig;
+use crate::coordinator::engine::{EngineError, LookupEngine, LookupOutcome};
+use crate::energy::{EnergyBreakdown, SearchActivity};
+use crate::shard::placement::{PlacementMode, ShardRouter};
+use crate::timing::DelayReport;
+
+/// Merged outcome of one sharded lookup.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardedOutcome {
+    /// Matching flat global address (lowest on multi-match), if any.
+    pub addr: Option<usize>,
+    /// All matching flat global addresses, ascending.
+    pub all_matches: Vec<usize>,
+    /// Banks that actually searched (1 in owner modes, S in broadcast).
+    pub banks_searched: usize,
+    /// Σ λ across the searched banks.
+    pub lambda: usize,
+    /// Σ compare-enabled sub-blocks across the searched banks.
+    pub enabled_blocks: usize,
+    /// Σ full-row comparisons across the searched banks.
+    pub comparisons: usize,
+    /// Σ per-search energy across the searched banks (every searched bank
+    /// burns its own decode + compare energy).
+    pub energy: EnergyBreakdown,
+    /// Worst-bank delay: parallel banks finish when the slowest does.
+    pub delay: DelayReport,
+}
+
+/// Lift a single bank's outcome into fleet addressing.
+pub(crate) fn globalize_outcome(out: LookupOutcome, bank: usize, bank_m: usize) -> ShardedOutcome {
+    let off = bank * bank_m;
+    ShardedOutcome {
+        addr: out.addr.map(|a| a + off),
+        all_matches: out.all_matches.iter().map(|a| a + off).collect(),
+        banks_searched: 1,
+        lambda: out.lambda,
+        enabled_blocks: out.enabled_blocks,
+        comparisons: out.comparisons,
+        energy: out.energy,
+        delay: out.delay,
+    }
+}
+
+/// One step of the broadcast gather fold (shared by the synchronous core
+/// and the threaded fleet so their merge rules cannot drift).
+pub(crate) fn merge_fold(acc: Option<ShardedOutcome>, g: ShardedOutcome) -> ShardedOutcome {
+    match acc {
+        None => g,
+        Some(a) => merge_outcomes(a, g),
+    }
+}
+
+/// Ownerless-insert scan shared by the synchronous core and the threaded
+/// fleet: try each bank round-robin from `start`, spilling past full banks
+/// so [`EngineError::Full`] only propagates when the whole fleet is full.
+/// Returns `(bank, local address)`.
+pub(crate) fn spill_insert(
+    shards: usize,
+    start: usize,
+    mut insert_into: impl FnMut(usize) -> Result<usize, EngineError>,
+) -> Result<(usize, usize), EngineError> {
+    for off in 0..shards {
+        let b = (start + off) % shards;
+        match insert_into(b) {
+            Ok(a) => return Ok((b, a)),
+            Err(EngineError::Full) => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Err(EngineError::Full)
+}
+
+/// Bounds-checked flat-address split shared by both delete paths.
+pub(crate) fn split_global(
+    global: usize,
+    bank_m: usize,
+    shards: usize,
+) -> Result<(usize, usize), EngineError> {
+    if global >= bank_m * shards {
+        return Err(EngineError::BadAddress(global));
+    }
+    Ok((global / bank_m, global % bank_m))
+}
+
+/// Gather half of the broadcast path: fold a second bank's (already
+/// globalized) outcome into an accumulator — activity sums, timing takes
+/// the slowest bank.
+pub(crate) fn merge_outcomes(mut acc: ShardedOutcome, other: ShardedOutcome) -> ShardedOutcome {
+    acc.all_matches.extend(other.all_matches);
+    acc.all_matches.sort_unstable();
+    acc.addr = acc.all_matches.first().copied();
+    acc.banks_searched += other.banks_searched;
+    acc.lambda += other.lambda;
+    acc.enabled_blocks += other.enabled_blocks;
+    acc.comparisons += other.comparisons;
+    acc.energy.add(&other.energy);
+    acc.delay = DelayReport {
+        cycle_ns: acc.delay.cycle_ns.max(other.delay.cycle_ns),
+        latency_ns: acc.delay.latency_ns.max(other.delay.latency_ns),
+    };
+    acc
+}
+
+/// `S` independent banks (each a full [`LookupEngine`]: its own clustered
+/// network, CAM array and energy model) behind a [`ShardRouter`].
+#[derive(Debug)]
+pub struct ShardedCam {
+    banks: Vec<LookupEngine>,
+    router: ShardRouter,
+    bank_m: usize,
+    /// Round-robin cursor for ownerless (broadcast) inserts.
+    rr: usize,
+}
+
+impl ShardedCam {
+    /// Build a fleet for a design point: `cfg.shards` banks of
+    /// `cfg.m / cfg.shards` entries each.
+    pub fn new(cfg: &DesignConfig, mode: PlacementMode) -> Self {
+        cfg.validate().expect("invalid design config");
+        let router = ShardRouter::new(cfg.shards, mode);
+        let bank_cfg = cfg.per_bank();
+        let banks = (0..cfg.shards).map(|_| LookupEngine::new(bank_cfg.clone())).collect();
+        ShardedCam { banks, router, bank_m: bank_cfg.m, rr: 0 }
+    }
+
+    /// Build around existing (pre-populated) banks of identical geometry.
+    pub fn with_banks(banks: Vec<LookupEngine>, router: ShardRouter) -> Self {
+        assert!(!banks.is_empty(), "need at least one bank");
+        assert_eq!(banks.len(), router.shards(), "router/bank count mismatch");
+        let bank_m = banks[0].config().m;
+        assert!(
+            banks.iter().all(|b| b.config().m == bank_m),
+            "banks must share one geometry"
+        );
+        ShardedCam { banks, router, bank_m, rr: 0 }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.banks.len()
+    }
+
+    /// Entries per bank (M_bank).
+    pub fn bank_m(&self) -> usize {
+        self.bank_m
+    }
+
+    pub fn router(&self) -> &ShardRouter {
+        &self.router
+    }
+
+    pub fn total_capacity(&self) -> usize {
+        self.bank_m * self.banks.len()
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.banks.iter().map(|b| b.occupancy()).sum()
+    }
+
+    pub fn banks(&self) -> &[LookupEngine] {
+        &self.banks
+    }
+
+    pub fn bank_mut(&mut self, i: usize) -> &mut LookupEngine {
+        &mut self.banks[i]
+    }
+
+    /// Flat global address of entry `local` in bank `bank`.
+    pub fn global_addr(&self, bank: usize, local: usize) -> usize {
+        bank * self.bank_m + local
+    }
+
+    /// `(bank, local)` of a flat global address.
+    pub fn split_addr(&self, global: usize) -> (usize, usize) {
+        (global / self.bank_m, global % self.bank_m)
+    }
+
+    /// Insert into the owning bank (or round-robin with fallback scan in
+    /// broadcast mode, so [`EngineError::Full`] means the whole fleet is
+    /// full); returns the flat global address.
+    pub fn insert(&mut self, tag: &BitVec) -> Result<usize, EngineError> {
+        match self.router.place(tag) {
+            Some(b) => {
+                let a = self.banks[b].insert(tag)?;
+                Ok(self.global_addr(b, a))
+            }
+            None => {
+                let s = self.banks.len();
+                let start = self.rr;
+                self.rr = (self.rr + 1) % s;
+                let banks = &mut self.banks;
+                let (b, a) = spill_insert(s, start, |b| banks[b].insert(tag))?;
+                Ok(self.global_addr(b, a))
+            }
+        }
+    }
+
+    /// Delete by flat global address.
+    pub fn delete(&mut self, global: usize) -> Result<(), EngineError> {
+        let (b, local) = split_global(global, self.bank_m, self.banks.len())?;
+        self.banks[b].delete(local)
+    }
+
+    /// Delete by tag (routed lookup + erase); `Ok(false)` if absent.
+    pub fn delete_tag(&mut self, tag: &BitVec) -> Result<bool, EngineError> {
+        match self.lookup(tag)?.addr {
+            Some(g) => {
+                self.delete(g)?;
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+
+    /// The sharded lookup: dispatch to the owning bank in hash/prefix
+    /// modes, or scatter to every bank and gather-merge in broadcast mode.
+    pub fn lookup(&mut self, tag: &BitVec) -> Result<ShardedOutcome, EngineError> {
+        match self.router.place(tag) {
+            Some(b) => {
+                let out = self.banks[b].lookup(tag)?;
+                Ok(globalize_outcome(out, b, self.bank_m))
+            }
+            None => {
+                let bank_m = self.bank_m;
+                let mut merged: Option<ShardedOutcome> = None;
+                for (b, bank) in self.banks.iter_mut().enumerate() {
+                    let out = bank.lookup(tag)?;
+                    merged = Some(merge_fold(merged, globalize_outcome(out, b, bank_m)));
+                }
+                Ok(merged.expect("at least one bank"))
+            }
+        }
+    }
+
+    /// Raw scatter-gather search with every sub-block of every bank enabled
+    /// and no CNN stage: matches are globalized and the per-bank
+    /// [`SearchActivity`] counters are summed.  Bit-for-bit identical to
+    /// [`crate::cam::CamArray::search_all`] on one array of the same total
+    /// M holding the same entries at the same flat addresses — the
+    /// equivalence anchor of the property tests.
+    pub fn search_unclassified(&self, tag: &BitVec) -> SearchResult {
+        let mut matches = Vec::new();
+        let mut activity = SearchActivity::default();
+        let mut total_blocks = 0usize;
+        for (b, bank) in self.banks.iter().enumerate() {
+            let r = bank.search_unclassified(tag);
+            total_blocks += r.activity.total_blocks;
+            activity.accumulate(&r.activity);
+            matches.extend(r.matches.into_iter().map(|a| self.global_addr(b, a)));
+        }
+        // accumulate() keeps the last bank's geometry; the fleet view is
+        // the sum of the banks' sub-blocks.
+        activity.total_blocks = total_blocks;
+        matches.sort_unstable();
+        SearchResult { matches, activity }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use crate::workload::TagDistribution;
+
+    fn fleet_cfg(shards: usize) -> DesignConfig {
+        DesignConfig { m: 256, n: 32, zeta: 4, c: 3, l: 4, shards, ..DesignConfig::reference() }
+    }
+
+    #[test]
+    fn capacity_and_addressing() {
+        let cam = ShardedCam::new(&fleet_cfg(4), PlacementMode::TagHash);
+        assert_eq!(cam.shard_count(), 4);
+        assert_eq!(cam.bank_m(), 64);
+        assert_eq!(cam.total_capacity(), 256);
+        assert_eq!(cam.global_addr(2, 5), 133);
+        assert_eq!(cam.split_addr(133), (2, 5));
+    }
+
+    #[test]
+    fn hash_mode_roundtrip_with_global_addresses() {
+        let mut cam = ShardedCam::new(&fleet_cfg(4), PlacementMode::TagHash);
+        let mut rng = Rng::seed_from_u64(5);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 150, &mut rng);
+        let mut addrs = Vec::new();
+        for t in &tags {
+            addrs.push(cam.insert(t).unwrap());
+        }
+        assert_eq!(cam.occupancy(), 150);
+        for (t, &g) in tags.iter().zip(&addrs) {
+            let out = cam.lookup(t).unwrap();
+            assert_eq!(out.addr, Some(g));
+            assert_eq!(out.banks_searched, 1, "owner dispatch touches one bank");
+            let (b, _) = cam.split_addr(g);
+            assert_eq!(cam.router().place(t), Some(b));
+        }
+    }
+
+    #[test]
+    fn broadcast_mode_roundtrip_searches_every_bank() {
+        let mut cam = ShardedCam::new(&fleet_cfg(4), PlacementMode::Broadcast);
+        let mut rng = Rng::seed_from_u64(6);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 100, &mut rng);
+        for t in &tags {
+            cam.insert(t).unwrap();
+        }
+        // round-robin inserts spread exactly
+        for b in cam.banks() {
+            assert_eq!(b.occupancy(), 25);
+        }
+        for t in &tags {
+            let out = cam.lookup(t).unwrap();
+            assert!(out.addr.is_some(), "tag lost");
+            assert_eq!(out.banks_searched, 4, "broadcast touches the fleet");
+        }
+    }
+
+    #[test]
+    fn broadcast_insert_spills_to_free_banks_and_fleet_full_is_full() {
+        let mut cam = ShardedCam::new(&fleet_cfg(2), PlacementMode::Broadcast);
+        let mut rng = Rng::seed_from_u64(7);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 257, &mut rng);
+        for t in tags.iter().take(256) {
+            cam.insert(t).unwrap();
+        }
+        assert_eq!(cam.occupancy(), 256);
+        assert_eq!(cam.insert(&tags[256]), Err(EngineError::Full));
+    }
+
+    #[test]
+    fn delete_by_tag_and_by_address() {
+        let mut cam = ShardedCam::new(&fleet_cfg(4), PlacementMode::TagHash);
+        let mut rng = Rng::seed_from_u64(8);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 20, &mut rng);
+        let mut addrs = Vec::new();
+        for t in &tags {
+            addrs.push(cam.insert(t).unwrap());
+        }
+        assert!(cam.delete_tag(&tags[3]).unwrap());
+        assert_eq!(cam.lookup(&tags[3]).unwrap().addr, None);
+        assert!(!cam.delete_tag(&tags[3]).unwrap(), "double delete is a no-op");
+        cam.delete(addrs[7]).unwrap();
+        assert_eq!(cam.lookup(&tags[7]).unwrap().addr, None);
+        assert_eq!(cam.occupancy(), 18);
+        assert!(matches!(cam.delete(10_000), Err(EngineError::BadAddress(_))));
+    }
+
+    #[test]
+    fn merge_sums_activity_and_takes_worst_delay() {
+        let mk = |addr: Option<usize>, lambda: usize, cycle: f64| ShardedOutcome {
+            addr,
+            all_matches: addr.into_iter().collect(),
+            banks_searched: 1,
+            lambda,
+            enabled_blocks: lambda,
+            comparisons: 4 * lambda,
+            energy: EnergyBreakdown { matchline_fj: 10.0, ..Default::default() },
+            delay: DelayReport { cycle_ns: cycle, latency_ns: 2.0 * cycle },
+        };
+        let m = merge_outcomes(mk(None, 2, 0.7), mk(Some(9), 3, 0.9));
+        assert_eq!(m.addr, Some(9));
+        assert_eq!(m.banks_searched, 2);
+        assert_eq!(m.lambda, 5);
+        assert_eq!(m.enabled_blocks, 5);
+        assert_eq!(m.comparisons, 20);
+        assert!((m.energy.total_fj() - 20.0).abs() < 1e-12);
+        assert!((m.delay.cycle_ns - 0.9).abs() < 1e-12);
+        assert!((m.delay.latency_ns - 1.8).abs() < 1e-12);
+    }
+}

@@ -110,6 +110,70 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// One named row of a `BENCH_*.json` trajectory snapshot: a bench scenario
+/// plus its measured metrics, in insertion order.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    pub name: String,
+    pub metrics: Vec<(String, f64)>,
+}
+
+impl BenchRecord {
+    pub fn new(name: impl Into<String>) -> Self {
+        BenchRecord { name: name.into(), metrics: Vec::new() }
+    }
+
+    /// Append one metric (kept in insertion order for stable diffs).
+    pub fn push(&mut self, key: &str, value: f64) {
+        self.metrics.push((key.to_string(), value));
+    }
+}
+
+/// Serialize bench records to the `BENCH_*.json` trajectory format
+/// (schema 1).  Future PRs diff these snapshots for perf regressions, so
+/// the output is deterministic: stable key order, one row per line.
+/// Non-finite values serialize as `null`.
+pub fn bench_records_json(bench: &str, records: &[BenchRecord]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!(
+        "  \"schema\": 1,\n  \"bench\": \"{}\",\n  \"rows\": [\n",
+        json_escape(bench)
+    ));
+    for (i, r) in records.iter().enumerate() {
+        s.push_str(&format!("    {{\"name\": \"{}\"", json_escape(&r.name)));
+        for (k, v) in &r.metrics {
+            let v = if v.is_finite() { format!("{v}") } else { "null".to_string() };
+            s.push_str(&format!(", \"{}\": {}", json_escape(k), v));
+        }
+        s.push_str(if i + 1 == records.len() { "}\n" } else { "},\n" });
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Write a `BENCH_*.json` snapshot (see [`bench_records_json`]).
+pub fn write_bench_json(
+    path: &std::path::Path,
+    bench: &str,
+    records: &[BenchRecord],
+) -> std::io::Result<()> {
+    std::fs::write(path, bench_records_json(bench, records))
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -138,5 +202,40 @@ mod tests {
         let t = BenchTimer::new(Duration::from_millis(2), Duration::from_millis(2), 2);
         let r = t.run("my-bench", || 42u32);
         assert!(r.report().contains("my-bench"));
+    }
+
+    #[test]
+    fn bench_json_roundtrips_through_the_parser() {
+        use crate::util::json::JsonValue;
+
+        let mut a = BenchRecord::new("sharded/banks=1");
+        a.push("shards", 1.0);
+        a.push("throughput_lps", 123456.75);
+        let mut b = BenchRecord::new("sharded/banks=4 \"quoted\"");
+        b.push("p99_ns", 9000.0);
+        b.push("weird", f64::NAN);
+        let text = bench_records_json("coordinator", &[a, b]);
+        let v = JsonValue::parse(&text).expect("self-emitted JSON must parse");
+        assert_eq!(v.req("schema").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(v.req("bench").unwrap().as_str().unwrap(), "coordinator");
+        let rows = v.req("rows").unwrap().as_array().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].req("name").unwrap().as_str().unwrap(), "sharded/banks=1");
+        assert_eq!(
+            rows[0].req("throughput_lps").unwrap(),
+            &JsonValue::Number(123456.75)
+        );
+        assert_eq!(
+            rows[1].req("name").unwrap().as_str().unwrap(),
+            "sharded/banks=4 \"quoted\""
+        );
+        assert_eq!(rows[1].req("weird").unwrap(), &JsonValue::Null, "NaN maps to null");
+    }
+
+    #[test]
+    fn bench_json_handles_empty_rows() {
+        let text = bench_records_json("coordinator", &[]);
+        let v = crate::util::json::JsonValue::parse(&text).unwrap();
+        assert!(v.req("rows").unwrap().as_array().unwrap().is_empty());
     }
 }

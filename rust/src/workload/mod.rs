@@ -139,6 +139,66 @@ fn zipf_index(n: usize, s: f64, rng: &mut Rng) -> usize {
     n - 1
 }
 
+/// Hot-shard query stream: hammers one bank of a sharded fleet — the
+/// rebalance-relevant scenario where one bank saturates while the rest of
+/// the fleet idles.  Hits draw from per-bank stored-tag pools (see
+/// [`crate::shard::ShardRouter::partition`]): with probability
+/// `hot_fraction` from the hot bank's pool, otherwise uniformly from the
+/// remaining banks' pools; misses are fresh random tags (which route
+/// roughly uniformly under hash placement).
+#[derive(Debug, Clone)]
+pub struct HotShardMix {
+    /// Index of the bank to hammer.
+    pub hot_bank: usize,
+    /// Probability a hit targets the hot bank's stored tags.
+    pub hot_fraction: f64,
+    /// Probability a query hits a stored tag at all.
+    pub hit_ratio: f64,
+}
+
+impl HotShardMix {
+    /// Draw one query.  `by_bank[i]` holds the tags stored in bank `i`;
+    /// returns the query and the bank it targets (`None` for a miss).
+    pub fn sample(
+        &self,
+        by_bank: &[Vec<BitVec>],
+        n: usize,
+        rng: &mut Rng,
+    ) -> (BitVec, Option<usize>) {
+        assert!(self.hot_bank < by_bank.len(), "hot bank out of range");
+        if !rng.gen_bool(self.hit_ratio.clamp(0.0, 1.0)) {
+            return (random_tag(n, rng), None);
+        }
+        let hot = &by_bank[self.hot_bank];
+        let cold_total: usize = by_bank
+            .iter()
+            .enumerate()
+            .filter(|(b, _)| *b != self.hot_bank)
+            .map(|(_, pool)| pool.len())
+            .sum();
+        let use_hot = !hot.is_empty()
+            && (cold_total == 0 || rng.gen_bool(self.hot_fraction.clamp(0.0, 1.0)));
+        if use_hot {
+            (hot[rng.gen_range(hot.len())].clone(), Some(self.hot_bank))
+        } else if cold_total > 0 {
+            let mut i = rng.gen_range(cold_total);
+            for (b, pool) in by_bank.iter().enumerate() {
+                if b == self.hot_bank {
+                    continue;
+                }
+                if i < pool.len() {
+                    return (pool[i].clone(), Some(b));
+                }
+                i -= pool.len();
+            }
+            unreachable!("cold index in range");
+        } else {
+            // nothing stored anywhere: degrade to a miss
+            (random_tag(n, rng), None)
+        }
+    }
+}
+
 /// Synthetic TLB trace: virtual page numbers with a hot working set,
 /// sequential strides (page walks), and occasional random jumps.
 #[derive(Debug, Clone)]
@@ -278,6 +338,81 @@ mod tests {
         }
         // top-10 of 100 entries should draw well over 10 % of queries
         assert!(head > 600, "head = {head}");
+    }
+
+    #[test]
+    fn zipf_hot_entry_hit_rates_match_the_closed_form() {
+        // The Zipf path is what the hot-shard workload stands on: check the
+        // per-entry skew actually materializes, not just "head > tail".
+        // With s = 1 over 100 entries, P(i) = 1/((i+1)·H_100), H_100 ≈ 5.187:
+        // P(0) ≈ 0.1928, top-10 mass = H_10/H_100 ≈ 0.565, tail 50+ ≈ 0.133.
+        let mut rng = Rng::seed_from_u64(40);
+        let stored = TagDistribution::Uniform.sample_distinct(64, 100, &mut rng);
+        let mix = QueryMix { hit_ratio: 1.0, zipf_s: 1.0 };
+        let trials = 20_000usize;
+        let mut counts = vec![0usize; 100];
+        for _ in 0..trials {
+            let (_, hit) = mix.sample(&stored, 64, &mut rng);
+            counts[hit.expect("hit_ratio = 1")] += 1;
+        }
+        let frac = |c: usize| c as f64 / trials as f64;
+        assert!(
+            (0.17..0.22).contains(&frac(counts[0])),
+            "entry 0 drew {}",
+            frac(counts[0])
+        );
+        let head10: usize = counts[..10].iter().sum();
+        assert!((0.52..0.61).contains(&frac(head10)), "top-10 mass {}", frac(head10));
+        let tail: usize = counts[50..].iter().sum();
+        assert!(frac(tail) < 0.18, "tail mass {}", frac(tail));
+        // monotone-in-expectation head: entry 0 clearly above entries 4 and 20
+        assert!(counts[0] > counts[4] && counts[4] > counts[20]);
+        // and the skew is the Zipf path's doing: s = 0 is flat
+        let flat = QueryMix { hit_ratio: 1.0, zipf_s: 0.0 };
+        let mut flat0 = 0usize;
+        for _ in 0..trials {
+            let (_, hit) = flat.sample(&stored, 64, &mut rng);
+            flat0 += (hit.unwrap() == 0) as usize;
+        }
+        assert!((0.005..0.02).contains(&frac(flat0)), "uniform entry 0 drew {}", frac(flat0));
+    }
+
+    #[test]
+    fn hot_shard_mix_hammers_one_bank() {
+        let mut rng = Rng::seed_from_u64(41);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 200, &mut rng);
+        let router = crate::shard::ShardRouter::tag_hash(4);
+        let by_bank = router.partition(&tags);
+        let hot = 2usize;
+        let mix = HotShardMix { hot_bank: hot, hot_fraction: 0.9, hit_ratio: 1.0 };
+        let mut per_bank = [0usize; 4];
+        for _ in 0..2_000 {
+            let (q, bank) = mix.sample(&by_bank, 32, &mut rng);
+            let b = bank.expect("hit_ratio = 1");
+            assert_eq!(router.place(&q), Some(b), "pool must agree with placement");
+            per_bank[b] += 1;
+        }
+        assert!(per_bank[hot] > 1_700, "hot bank drew {}", per_bank[hot]);
+        for (b, &c) in per_bank.iter().enumerate() {
+            if b != hot {
+                assert!(c < 150, "cold bank {b} drew {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn hot_shard_mix_degrades_gracefully_when_pools_are_empty() {
+        let mut rng = Rng::seed_from_u64(42);
+        let empty: Vec<Vec<BitVec>> = vec![Vec::new(); 4];
+        let mix = HotShardMix { hot_bank: 0, hot_fraction: 0.9, hit_ratio: 1.0 };
+        let (q, bank) = mix.sample(&empty, 32, &mut rng);
+        assert_eq!(bank, None, "no stored tags ⇒ forced miss");
+        assert_eq!(q.len(), 32);
+        // only the hot pool populated: everything lands there
+        let mut by_bank = empty;
+        by_bank[0] = TagDistribution::Uniform.sample_distinct(32, 5, &mut rng);
+        let (_, bank) = mix.sample(&by_bank, 32, &mut rng);
+        assert_eq!(bank, Some(0));
     }
 
     #[test]

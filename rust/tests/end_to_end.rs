@@ -6,7 +6,8 @@ use std::time::Duration;
 
 use cscam::cnn::Selection;
 use cscam::config::DesignConfig;
-use cscam::coordinator::{BatchPolicy, CamServer, DecodeBackend, LookupEngine, ShardRouter};
+use cscam::coordinator::{BatchPolicy, CamServer, DecodeBackend, LookupEngine};
+use cscam::shard::{PlacementMode, ShardedCam};
 use cscam::util::Rng;
 use cscam::workload::{AclTrace, QueryMix, TagDistribution, TlbTrace};
 
@@ -123,22 +124,26 @@ fn correlated_tags_cost_energy_not_accuracy() {
 }
 
 #[test]
-fn shard_router_scales_capacity() {
-    let cfg = DesignConfig::small_test();
-    let mut router = ShardRouter::new(cfg.clone(), 4);
+fn sharded_fleet_scales_capacity() {
+    // Four small_test banks behind a tag-hash router: the fleet stores what
+    // one macro cannot (total capacity = 4 × 64), and every stored tag stays
+    // findable through the routed lookup.
+    let cfg = DesignConfig { m: 4 * 64, shards: 4, ..DesignConfig::small_test() };
+    let mut cam = ShardedCam::new(&cfg, PlacementMode::TagHash);
     let mut rng = Rng::seed_from_u64(9);
-    // more tags than one macro can hold
-    let tags = TagDistribution::Uniform.sample_distinct(cfg.n, 3 * cfg.m, &mut rng);
+    // more tags than one macro can hold (some banks may fill first: count)
+    let tags = TagDistribution::Uniform.sample_distinct(cfg.n, 3 * 64, &mut rng);
     let mut inserted = 0usize;
     for t in &tags {
-        if router.insert(t).is_ok() {
+        if cam.insert(t).is_ok() {
             inserted += 1;
         }
     }
-    assert!(inserted > cfg.m, "sharding must exceed single-macro capacity: {inserted}");
+    assert!(inserted > 64, "sharding must exceed single-macro capacity: {inserted}");
+    assert_eq!(cam.occupancy(), inserted);
     let mut found = 0usize;
     for t in &tags {
-        if router.lookup(t).unwrap().1.addr.is_some() {
+        if cam.lookup(t).unwrap().addr.is_some() {
             found += 1;
         }
     }

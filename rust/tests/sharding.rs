@@ -1,0 +1,148 @@
+//! Sharded-fleet properties: the scatter-gather path must be functionally
+//! indistinguishable from one monolithic CAM of the same total M, and the
+//! serving layer must surface hot-shard skew in its fleet metrics.
+
+use std::collections::HashMap;
+
+use cscam::bits::BitVec;
+use cscam::cam::CamArray;
+use cscam::config::DesignConfig;
+use cscam::coordinator::BatchPolicy;
+use cscam::shard::{PlacementMode, ShardedCam, ShardedCamServer};
+use cscam::util::Rng;
+use cscam::workload::{HotShardMix, QueryMix, TagDistribution};
+
+fn fleet_cfg() -> DesignConfig {
+    // 4 banks × 64 entries = one 256-entry monolith
+    DesignConfig { m: 256, n: 32, zeta: 4, c: 3, l: 4, shards: 4, ..DesignConfig::reference() }
+}
+
+/// The property: insert a population through the sharded router, mirror
+/// each entry into a single `CamArray` of the same total M at the sharded
+/// flat address, then fire 10 000 mixed (hit/miss) lookups and require
+/// bit-for-bit agreement — identical match sets AND identical summed
+/// `SearchActivity` on the raw path, identical answers on the classified
+/// path.
+fn sharded_matches_monolith(
+    dist: TagDistribution,
+    seed: u64,
+    mode_for: impl Fn(&[BitVec]) -> PlacementMode,
+) {
+    let cfg = fleet_cfg();
+    let mut rng = Rng::seed_from_u64(seed);
+    let tags = dist.sample_distinct(cfg.n, 160, &mut rng);
+
+    let mut sharded = ShardedCam::new(&cfg, mode_for(&tags));
+    let mut mono = CamArray::new(cfg.m, cfg.n, cfg.zeta);
+    let mut addr_of: HashMap<BitVec, usize> = HashMap::new();
+    let mut stored = Vec::new();
+    for t in &tags {
+        let g = sharded.insert(t).expect("bank overflow: pick a friendlier seed");
+        mono.write(g, t.clone());
+        addr_of.insert(t.clone(), g);
+        stored.push(t.clone());
+    }
+    assert_eq!(sharded.occupancy(), mono.occupancy());
+
+    let mix = QueryMix { hit_ratio: 0.7, zipf_s: 0.0 };
+    let mut hits = 0usize;
+    for _ in 0..10_000 {
+        let (q, _) = mix.sample(&stored, cfg.n, &mut rng);
+        // raw scatter-gather ≡ monolithic full search, bit for bit
+        let sh = sharded.search_unclassified(&q);
+        let mo = mono.search_all(&q);
+        assert_eq!(sh.matches, mo.matches, "match sets diverged");
+        assert_eq!(sh.activity, mo.activity, "summed activity diverged");
+        // classified (CNN-gated) lookup agrees on the answer
+        let out = sharded.lookup(&q).unwrap();
+        assert_eq!(out.addr, mo.matches.first().copied());
+        assert_eq!(out.all_matches, mo.matches);
+        if let Some(g) = out.addr {
+            assert_eq!(addr_of.get(&q), Some(&g), "hit resolved to the wrong entry");
+            hits += 1;
+        }
+    }
+    assert!((6_500..7_500).contains(&hits), "hit mix off: {hits}");
+}
+
+#[test]
+fn sharded_equals_monolith_uniform_tag_hash() {
+    sharded_matches_monolith(TagDistribution::Uniform, 101, |_| PlacementMode::TagHash);
+}
+
+#[test]
+fn sharded_equals_monolith_uniform_broadcast() {
+    sharded_matches_monolith(TagDistribution::Uniform, 102, |_| PlacementMode::Broadcast);
+}
+
+#[test]
+fn sharded_equals_monolith_correlated_tag_hash() {
+    sharded_matches_monolith(
+        TagDistribution::Correlated { fixed_bits: 8, mirror_span: 8 },
+        103,
+        |_| PlacementMode::TagHash,
+    );
+}
+
+#[test]
+fn sharded_equals_monolith_correlated_learned_prefix() {
+    sharded_matches_monolith(
+        TagDistribution::Correlated { fixed_bits: 8, mirror_span: 8 },
+        104,
+        |sample| PlacementMode::learned(4, sample, 32),
+    );
+}
+
+#[test]
+fn deletes_preserve_the_equivalence() {
+    let cfg = fleet_cfg();
+    let mut rng = Rng::seed_from_u64(105);
+    let tags = TagDistribution::Uniform.sample_distinct(cfg.n, 120, &mut rng);
+    let mut sharded = ShardedCam::new(&cfg, PlacementMode::TagHash);
+    let mut mono = CamArray::new(cfg.m, cfg.n, cfg.zeta);
+    let mut addrs = Vec::new();
+    for t in &tags {
+        let g = sharded.insert(t).unwrap();
+        mono.write(g, t.clone());
+        addrs.push(g);
+    }
+    for i in (0..tags.len()).step_by(3) {
+        sharded.delete(addrs[i]).unwrap();
+        mono.erase(addrs[i]);
+    }
+    for t in &tags {
+        let sh = sharded.search_unclassified(t);
+        let mo = mono.search_all(t);
+        assert_eq!(sh.matches, mo.matches);
+        assert_eq!(sh.activity, mo.activity);
+        assert_eq!(sharded.lookup(t).unwrap().addr, mo.matches.first().copied());
+    }
+}
+
+#[test]
+fn hot_shard_workload_shows_up_in_fleet_metrics() {
+    // The rebalance-relevant scenario: a Zipf-backed hot-shard stream
+    // saturates one bank while the fleet view stays balanced-looking only
+    // in aggregate.
+    let cfg = fleet_cfg();
+    let h = ShardedCamServer::new(&cfg, PlacementMode::TagHash, BatchPolicy::default()).spawn();
+    let mut rng = Rng::seed_from_u64(106);
+    let tags = TagDistribution::Uniform.sample_distinct(cfg.n, 160, &mut rng);
+    let mut stored = Vec::new();
+    for t in &tags {
+        if h.insert(t.clone()).is_ok() {
+            stored.push(t.clone());
+        }
+    }
+    let by_bank = h.router().partition(&stored);
+    let hot = (0..4).max_by_key(|&b| by_bank[b].len()).unwrap();
+    let mix = HotShardMix { hot_bank: hot, hot_fraction: 0.9, hit_ratio: 1.0 };
+    for _ in 0..2_000 {
+        let (q, _) = mix.sample(&by_bank, cfg.n, &mut rng);
+        assert!(h.lookup(q).unwrap().addr.is_some());
+    }
+    let fm = h.fleet_metrics().unwrap();
+    assert_eq!(fm.aggregate.lookups, 2_000);
+    assert_eq!(fm.hottest_bank(), hot);
+    assert!(fm.hot_fraction() > 0.8, "hot bank fraction {}", fm.hot_fraction());
+}
