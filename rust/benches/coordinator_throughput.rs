@@ -8,9 +8,10 @@
 //! Flags (after `--`):
 //! * `--quick`          headline rows only, fewer lookups (CI smoke);
 //! * `--shards 1,4`     shard counts for the headline rows (default 1,4);
-//! * `--json PATH`      write the headline rows as a `BENCH_*.json`
-//!   trajectory snapshot (throughput, p50/p99 latency, mean λ) so future
-//!   PRs can diff serving performance against this baseline.
+//! * `--json PATH`      append the headline rows (tagged `coordinator`) to
+//!   a `BENCH_*.json` trajectory snapshot (throughput, p50/p99 latency,
+//!   mean λ) so future PRs can diff serving performance against this
+//!   baseline; the `net_throughput` bench shares the same file.
 
 use std::time::{Duration, Instant};
 
@@ -244,7 +245,7 @@ fn main() -> anyhow::Result<()> {
 
     if let Some(path) = args.get("json") {
         write_bench_json(std::path::Path::new(path), "coordinator", &records)?;
-        println!("\nwrote {} trajectory rows to {path}", records.len());
+        println!("\nappended {} 'coordinator' trajectory rows to {path}", records.len());
     }
     Ok(())
 }

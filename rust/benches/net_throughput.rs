@@ -1,0 +1,75 @@
+//! Network serving throughput: wire-protocol lookups/s through the TCP
+//! front-end on loopback — the headline row for the L5 claim that the
+//! network layer rides on the sharded fleet's scale-out instead of
+//! bottlenecking it (compare against the in-process rows of
+//! `coordinator_throughput`).
+//!
+//! Run: `cargo bench --bench net_throughput`
+//!
+//! Flags (after `--`):
+//! * `--quick`        fewer lookups (CI smoke);
+//! * `--shards 1,4`   shard counts for the headline rows (default 1,4);
+//! * `--json PATH`    append the rows (tagged `net`) to a `BENCH_*.json`
+//!   trajectory snapshot — the same file the coordinator bench writes to.
+
+use cscam::config::DesignConfig;
+use cscam::coordinator::BatchPolicy;
+use cscam::net::{CamTcpServer, LoadGen, NetConfig};
+use cscam::shard::{PlacementMode, ShardedCamServer};
+use cscam::util::bench::{write_bench_json, BenchRecord};
+use cscam::util::cli::Args;
+
+fn run_net(shards: usize, lookups: usize) -> anyhow::Result<BenchRecord> {
+    let cfg = DesignConfig { shards, ..DesignConfig::reference() };
+    cfg.validate()?;
+    let fleet = ShardedCamServer::new(&cfg, PlacementMode::TagHash, BatchPolicy::default()).spawn();
+    let server = CamTcpServer::bind(fleet, "127.0.0.1:0", NetConfig::default())?;
+    let addr = server.local_addr()?.to_string();
+    let handle = server.spawn()?;
+
+    let driver = LoadGen {
+        addr,
+        threads: 8,
+        lookups,
+        chunk: 256,
+        hit_ratio: 0.9,
+        population: cfg.m * 7 / 10,
+        seed: 1,
+    };
+    let report = driver.run().map_err(|e| anyhow::anyhow!("loadgen: {e}"))?;
+    println!(
+        "{:<44} {:>10.0} lookups/s  (frame p50 {:>8} ns, p99 {:>9} ns, hit {:.1} %)",
+        format!("net/shards={shards}/8t/bulk256"),
+        report.throughput_lps,
+        report.p50_ns,
+        report.p99_ns,
+        100.0 * report.hit_ratio()
+    );
+
+    handle.shutdown();
+    handle.join();
+    Ok(report.to_record())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["quick"])?;
+    args.check_known(&["quick", "shards", "json"])?;
+    let quick = args.flag("quick");
+    let shard_counts: Vec<usize> = args.get_list("shards", vec![1, 4])?;
+    let lookups = if quick { 40_000 } else { 300_000 };
+
+    println!(
+        "# net throughput over loopback TCP (reference design, 90 % hit mix{})",
+        if quick { ", --quick" } else { "" }
+    );
+    let mut records = Vec::new();
+    for &s in &shard_counts {
+        records.push(run_net(s, lookups)?);
+    }
+
+    if let Some(path) = args.get("json") {
+        write_bench_json(std::path::Path::new(path), "net", &records)?;
+        println!("\nappended {} 'net' rows to {path}", records.len());
+    }
+    Ok(())
+}

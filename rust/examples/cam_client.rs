@@ -1,0 +1,107 @@
+//! `cam_client` — walk the wire protocol end to end.
+//!
+//! With `--connect ADDR` it drives an already-running `cscam serve
+//! --listen` server; without it, it spins up its own 4-bank fleet on a
+//! loopback ephemeral port so the demo is self-contained:
+//!
+//! ```sh
+//! cargo run --release --example cam_client
+//! cargo run --release --example cam_client -- --connect 127.0.0.1:4242
+//! ```
+
+use cscam::config::DesignConfig;
+use cscam::coordinator::BatchPolicy;
+use cscam::net::{CamClient, CamTcpServer, NetConfig};
+use cscam::shard::{PlacementMode, ShardedCamServer};
+use cscam::util::cli::Args;
+use cscam::util::Rng;
+use cscam::workload::TagDistribution;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &[])?;
+    args.check_known(&["connect"])?;
+
+    // No --connect: host a small fleet ourselves on an ephemeral port.
+    let (addr, local_server) = match args.get("connect") {
+        Some(a) => (a.to_string(), None),
+        None => {
+            let cfg = DesignConfig {
+                m: 256,
+                n: 32,
+                zeta: 4,
+                c: 3,
+                l: 4,
+                shards: 4,
+                ..DesignConfig::reference()
+            };
+            let fleet = ShardedCamServer::new(&cfg, PlacementMode::TagHash, BatchPolicy::default())
+                .spawn();
+            let server = CamTcpServer::bind(fleet, "127.0.0.1:0", NetConfig::default())?;
+            let addr = server.local_addr()?.to_string();
+            println!("(no --connect given: hosting a 4-bank fleet on {addr})");
+            (addr, Some(server.spawn()?))
+        }
+    };
+
+    let mut client = CamClient::connect(addr.clone())
+        .map_err(|e| anyhow::anyhow!("connect to {addr}: {e}"))?;
+    let hello = *client.server_info().expect("hello after connect");
+    println!(
+        "connected: protocol v{}, {} banks x {} entries, N = {} tag bits",
+        hello.version, hello.shards, hello.bank_m, hello.tag_bits
+    );
+
+    // Insert a handful of tags and read their global addresses back.
+    let mut rng = Rng::seed_from_u64(2013);
+    let tags = TagDistribution::Uniform.sample_distinct(hello.tag_bits as usize, 16, &mut rng);
+    let mut addrs = Vec::new();
+    for t in &tags {
+        addrs.push(client.insert(t).map_err(|e| anyhow::anyhow!("insert: {e}"))?);
+    }
+    println!("\ninserted {} tags; global addresses {:?}…", tags.len(), &addrs[..4]);
+
+    // One lookup: the paper's physics arrive over the wire.
+    let out = client.lookup(&tags[3]).map_err(|e| anyhow::anyhow!("lookup: {e}"))?;
+    println!("\nlookup tags[3]:");
+    println!("  matched address   : {:?} (expected {})", out.addr, addrs[3]);
+    println!(
+        "  λ / blocks / cmp  : {} / {} / {}",
+        out.lambda, out.enabled_blocks, out.comparisons
+    );
+    println!("  banks searched    : {}", out.banks_searched);
+    println!("  energy            : {:.1} fJ", out.energy.total_fj());
+    println!("  cycle / latency   : {:.3} / {:.3} ns", out.delay.cycle_ns, out.delay.latency_ns);
+
+    // Pipelined bulk: all frames go out before the first response is read.
+    let bulk = client
+        .lookup_bulk(&tags, 4)
+        .map_err(|e| anyhow::anyhow!("lookup_bulk: {e}"))?;
+    let hits = bulk.iter().filter(|r| matches!(r, Ok(o) if o.addr.is_some())).count();
+    println!("\nbulk lookup of {} tags in frames of 4: {hits} hits", tags.len());
+
+    // Delete, then show the miss.
+    client.delete(addrs[3]).map_err(|e| anyhow::anyhow!("delete: {e}"))?;
+    let gone = client.lookup(&tags[3]).map_err(|e| anyhow::anyhow!("lookup: {e}"))?;
+    println!("after delete: lookup tags[3] → {:?}", gone.addr);
+
+    // Fleet statistics over the wire.
+    let stats = client.stats().map_err(|e| anyhow::anyhow!("stats: {e}"))?;
+    println!(
+        "\nfleet stats: {} lookups, {} hits, λ̄ {:.3}, Ē {:.1} fJ, hottest bank {} ({:.0} %)",
+        stats.lookups,
+        stats.hits,
+        stats.mean_lambda,
+        stats.mean_energy_fj,
+        stats.hottest_bank,
+        100.0 * stats.hot_fraction
+    );
+    println!("per-bank lookups: {:?}", stats.per_bank_lookups);
+
+    // Clean shutdown (drains the banks) when we own the server.
+    if let Some(server) = local_server {
+        client.shutdown().map_err(|e| anyhow::anyhow!("shutdown: {e}"))?;
+        server.join();
+        println!("\nlocal server drained and stopped");
+    }
+    Ok(())
+}

@@ -18,7 +18,10 @@
 //! * [`metrics`] — counters + latency/energy aggregation.
 //!
 //! Multi-bank scale-out (placement, scatter-gather, fleet metrics) lives
-//! one layer up in [`crate::shard`].
+//! one layer up in [`crate::shard`]; the network front-end that exposes a
+//! fleet over TCP — including the wire mapping of [`EngineError`] and the
+//! `Full` shed-on-overload contract of [`ServerHandle::try_lookup`] —
+//! lives two layers up in [`crate::net`].
 
 pub mod batcher;
 pub mod engine;

@@ -38,6 +38,9 @@
 //! - [`shard`] — the L4 scale-out layer: `S` independent CNN+CAM banks
 //!   behind a scatter-gather router (tag-hash / learned-prefix / broadcast
 //!   placement), with fleet-level metrics aggregation.
+//! - [`net`] — the L5 network layer: a versioned length-prefixed wire
+//!   protocol plus a `std::net` TCP server, client and load generator
+//!   that put the sharded fleet on the network.
 
 pub mod baselines;
 pub mod bits;
@@ -46,6 +49,7 @@ pub mod cnn;
 pub mod config;
 pub mod coordinator;
 pub mod energy;
+pub mod net;
 pub mod runtime;
 pub mod shard;
 pub mod stats;

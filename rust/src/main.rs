@@ -5,7 +5,10 @@
 //! * `table2` — energy/delay comparison table (Table II + headline ratios);
 //! * `sweep`  — the 15-point design-space exploration behind Table I;
 //! * `serve`  — run the lookup engine on a synthetic workload through the
-//!   threaded coordinator (native or PJRT decode backend);
+//!   threaded coordinator (native or PJRT decode backend), or — with
+//!   `--listen` — expose the sharded fleet over TCP (`cscam::net`);
+//! * `loadgen` — drive a listening server over the wire protocol and
+//!   report throughput/p50/p99 into the bench JSON trajectory;
 //! * `info`   — print the resolved design point and model predictions.
 //!
 //! Global option: `--config <file>` loads a `key = value` design point
@@ -43,12 +46,22 @@ COMMANDS:
                                 --hot-fraction F --hot-shard B
           (S > 1 spawns one engine thread per bank; --hot-fraction > 0
            hammers one bank through the hot-shard stream)
+          network serving:      --listen ADDR (e.g. 127.0.0.1:4242, port 0
+           picks an ephemeral port) --max-conns N --port-file PATH
+          (starts empty; clients insert over the wire; blocks until a
+           wire Shutdown request arrives)
+  loadgen drive a listening server over the wire protocol
+                                --connect ADDR --lookups N --threads T
+                                --chunk C --hit-ratio R --population P
+                                --seed S --json PATH --shutdown
+          (--json appends a 'net'-tagged row to the bench trajectory;
+           --shutdown stops the server after the run)
   info    print the design point and all model predictions
 ";
 
 fn main() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(raw, &["pjrt", "help"])?;
+    let args = Args::parse(raw, &["pjrt", "help", "shutdown"])?;
     if args.flag("help") || args.positional().is_empty() {
         print!("{USAGE}");
         return Ok(());
@@ -62,6 +75,7 @@ fn main() -> Result<()> {
         "table2" => table2(&cfg, &args),
         "sweep" => sweep_cmd(&args),
         "serve" => serve(&cfg, &args),
+        "loadgen" => loadgen(&args),
         "info" => info(&cfg),
         other => bail!("unknown command '{other}'\n{USAGE}"),
     }
@@ -244,6 +258,9 @@ fn pjrt_backend(_cfg: &DesignConfig) -> Result<DecodeBackend> {
 }
 
 fn serve(cfg: &DesignConfig, args: &Args) -> Result<()> {
+    if args.get("listen").is_some() {
+        return serve_listen(cfg, args);
+    }
     let lookups: usize = args.get_parse("lookups", 10_000)?;
     let hit_ratio: f64 = args.get_parse("hit-ratio", 0.9)?;
     let pjrt = args.flag("pjrt");
@@ -409,6 +426,104 @@ fn serve_sharded(
         fm.hottest_bank(),
         100.0 * fm.hot_fraction()
     );
+    Ok(())
+}
+
+/// `serve --listen`: expose an (initially empty) sharded fleet over TCP.
+/// Blocks until a wire `Shutdown` request drains the banks and stops the
+/// accept loop.
+fn serve_listen(cfg: &DesignConfig, args: &Args) -> Result<()> {
+    use cscam::net::{CamTcpServer, NetConfig};
+    use cscam::shard::{PlacementMode, ShardedCamServer};
+
+    let listen = args.get("listen").expect("checked by caller");
+    let shards: usize = args.get_parse("shards", cfg.shards)?;
+    let max_batch: usize = args.get_parse("max-batch", 64)?;
+    let max_conns: usize = args.get_parse("max-conns", 64)?;
+    let seed: u64 = args.get_parse("seed", 7)?;
+    let placement = args.get("placement").unwrap_or("hash");
+
+    let mut fleet_cfg = cfg.clone();
+    fleet_cfg.shards = shards;
+    fleet_cfg.validate()?;
+
+    let mode = match placement {
+        "hash" => PlacementMode::TagHash,
+        "broadcast" => PlacementMode::Broadcast,
+        "prefix" => {
+            // the selection only decides ownership, so any deterministic
+            // sample works; --seed keeps server and tooling reproducible
+            let mut rng = Rng::seed_from_u64(seed);
+            let sample = TagDistribution::Uniform.sample_distinct(
+                fleet_cfg.n,
+                (fleet_cfg.m / 2).max(16),
+                &mut rng,
+            );
+            PlacementMode::learned(shards, &sample, fleet_cfg.n)
+        }
+        other => bail!("unknown --placement '{other}' (hash|prefix|broadcast)"),
+    };
+
+    let policy = BatchPolicy { max_batch, ..Default::default() };
+    let fleet = ShardedCamServer::new(&fleet_cfg, mode, policy).spawn();
+    let server = CamTcpServer::bind(
+        fleet.clone(),
+        listen,
+        NetConfig { max_connections: max_conns, ..Default::default() },
+    )?;
+    let addr = server.local_addr()?;
+    let handle = server.spawn()?;
+    println!(
+        "# cscam serving {} banks x {} entries (N={}, placement={placement}) on {addr}",
+        shards,
+        fleet_cfg.per_bank().m,
+        fleet_cfg.n
+    );
+    if let Some(path) = args.get("port-file") {
+        std::fs::write(path, addr.to_string())?;
+        println!("# wrote address to {path}");
+    }
+    handle.join();
+
+    if let Some(fm) = fleet.fleet_metrics() {
+        println!("# shut down after draining:");
+        println!("{}", fm.summary(fleet_cfg.per_bank().m, fleet_cfg.n));
+    }
+    Ok(())
+}
+
+/// `loadgen`: drive a listening server over the wire and report into the
+/// bench trajectory.
+fn loadgen(args: &Args) -> Result<()> {
+    use cscam::net::{CamClient, LoadGen};
+    use cscam::util::bench::write_bench_json;
+
+    let Some(addr) = args.get("connect") else {
+        bail!("loadgen needs --connect ADDR (see `cscam serve --listen`)");
+    };
+    let driver = LoadGen {
+        addr: addr.to_string(),
+        threads: args.get_parse("threads", 4)?,
+        lookups: args.get_parse("lookups", 20_000)?,
+        chunk: args.get_parse("chunk", 64)?,
+        hit_ratio: args.get_parse("hit-ratio", 0.9)?,
+        population: args.get_parse("population", 256)?,
+        seed: args.get_parse("seed", 7)?,
+    };
+    let report = driver.run().map_err(|e| anyhow::anyhow!("loadgen failed: {e}"))?;
+    println!("# loadgen against {addr}");
+    println!("{}", report.summary());
+
+    if let Some(path) = args.get("json") {
+        write_bench_json(std::path::Path::new(path), "net", &[report.to_record()])?;
+        println!("appended 1 'net' row to {path}");
+    }
+    if args.flag("shutdown") {
+        let mut c = CamClient::connect(addr.to_string())
+            .map_err(|e| anyhow::anyhow!("shutdown connect failed: {e}"))?;
+        c.shutdown().map_err(|e| anyhow::anyhow!("shutdown failed: {e}"))?;
+        println!("server asked to shut down (banks drained)");
+    }
     Ok(())
 }
 

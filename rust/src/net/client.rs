@@ -1,0 +1,337 @@
+//! Blocking TCP client for the CAM wire protocol.
+//!
+//! [`CamClient`] keeps one connection, performs the magic/version
+//! handshake on connect, and exposes the fleet operations 1:1 — the
+//! returned [`ShardedOutcome`] carries the matched global address, λ and
+//! the energy/delay physics bit-identical to an in-process
+//! [`crate::shard::ShardedServerHandle::lookup`].
+//!
+//! [`CamClient::lookup_bulk`] is *pipelined*: the tag slice is split into
+//! chunks, every chunk frame is written before the first response is read
+//! (one flush for the burst), and responses are matched back up by request
+//! id — the wire analogue of the in-process deferred scatter.
+//!
+//! Idempotent calls (`lookup`, `lookup_bulk`, `stats`, `drain`)
+//! transparently **reconnect and retry once** when the transport drops;
+//! mutations (`insert`, `delete`) and `shutdown` never auto-retry, because
+//! replaying them could double-apply.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use crate::bits::BitVec;
+use crate::coordinator::engine::EngineError;
+use crate::net::proto::{
+    self, read_server_hello, write_client_hello, Request, Response, ServerHello, StatsReport,
+    WireError, VERSION,
+};
+use crate::shard::ShardedOutcome;
+
+/// Connect-phase bound.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Per-call transport bound: no server response should take this long (a
+/// full 4096-tag bulk frame is microseconds of engine work), so hitting it
+/// means the peer is gone or wedged — the call fails with an I/O error and
+/// the connection is poisoned rather than blocking the caller forever.
+const IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// A request-writing callback: receives the connection's writer and the
+/// request id chosen for this call.  Lets the hot paths serialize straight
+/// from borrowed tags ([`proto::write_tag_request`]) while the cold paths
+/// go through an owned [`Request`].
+type WriteReq<'a> = &'a dyn Fn(&mut BufWriter<TcpStream>, u64) -> std::io::Result<()>;
+
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    hello: ServerHello,
+}
+
+impl Conn {
+    fn open(addr: &str) -> Result<Conn, WireError> {
+        let target = addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| WireError::Protocol(format!("'{addr}' resolves to no address")))?;
+        let stream = TcpStream::connect_timeout(&target, CONNECT_TIMEOUT)?;
+        let _ = stream.set_nodelay(true);
+        stream.set_read_timeout(Some(IO_TIMEOUT))?;
+        stream.set_write_timeout(Some(IO_TIMEOUT))?;
+        let read_half = stream.try_clone()?;
+        let mut conn = Conn {
+            reader: BufReader::new(read_half),
+            writer: BufWriter::new(stream),
+            hello: ServerHello { version: 0, busy: false, shards: 0, bank_m: 0, tag_bits: 0 },
+        };
+        write_client_hello(&mut conn.writer)?;
+        conn.writer.flush()?;
+        conn.hello = read_server_hello(&mut conn.reader)?;
+        if conn.hello.busy {
+            return Err(WireError::Busy);
+        }
+        if conn.hello.version != VERSION {
+            return Err(WireError::Protocol(format!(
+                "server speaks version {}, this client speaks {}",
+                conn.hello.version, VERSION
+            )));
+        }
+        Ok(conn)
+    }
+}
+
+/// A blocking wire-protocol client with reconnect.
+pub struct CamClient {
+    addr: String,
+    conn: Option<Conn>,
+    next_id: u64,
+}
+
+impl CamClient {
+    /// Connect and handshake.
+    pub fn connect(addr: impl Into<String>) -> Result<CamClient, WireError> {
+        let addr = addr.into();
+        let conn = Conn::open(&addr)?;
+        Ok(CamClient { addr, conn: Some(conn), next_id: 1 })
+    }
+
+    /// What the server announced at handshake (fleet geometry); `None`
+    /// while disconnected.
+    pub fn server_info(&self) -> Option<&ServerHello> {
+        self.conn.as_ref().map(|c| &c.hello)
+    }
+
+    /// Drop the current connection (if any) and open a fresh one.
+    pub fn reconnect(&mut self) -> Result<(), WireError> {
+        self.conn = None;
+        self.conn = Some(Conn::open(&self.addr)?);
+        Ok(())
+    }
+
+    fn conn(&mut self) -> Result<&mut Conn, WireError> {
+        if self.conn.is_none() {
+            self.conn = Some(Conn::open(&self.addr)?);
+        }
+        Ok(self.conn.as_mut().expect("just connected"))
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// One request/response exchange.  Transport failures poison the
+    /// connection (the next call reconnects).
+    fn call_once(&mut self, req: &Request) -> Result<Response, WireError> {
+        self.call_with(&|w, id| proto::write_request(w, id, req))
+    }
+
+    /// Like [`Self::call_once`], but reconnect-and-retry once on a
+    /// transport error — only safe for idempotent requests.
+    fn call_idempotent(&mut self, req: &Request) -> Result<Response, WireError> {
+        self.call_idempotent_with(&|w, id| proto::write_request(w, id, req))
+    }
+
+    fn call_with(&mut self, write: WriteReq<'_>) -> Result<Response, WireError> {
+        let id = self.fresh_id();
+        let result = self.exchange(id, write);
+        if matches!(result, Err(WireError::Io(_)) | Err(WireError::Protocol(_))) {
+            self.conn = None;
+        }
+        result
+    }
+
+    fn call_idempotent_with(&mut self, write: WriteReq<'_>) -> Result<Response, WireError> {
+        match self.call_with(write) {
+            Err(WireError::Io(_)) => {
+                self.reconnect()?;
+                self.call_with(write)
+            }
+            other => other,
+        }
+    }
+
+    fn exchange(&mut self, id: u64, write: WriteReq<'_>) -> Result<Response, WireError> {
+        let conn = self.conn()?;
+        write(&mut conn.writer, id)?;
+        conn.writer.flush()?;
+        let (rid, resp) = proto::read_response(&mut conn.reader)?;
+        if rid != id {
+            return Err(WireError::Protocol(format!(
+                "response id {rid} does not match request id {id}"
+            )));
+        }
+        Ok(resp)
+    }
+
+    /// Insert a tag; returns its flat global address.  Not auto-retried.
+    pub fn insert(&mut self, tag: &BitVec) -> Result<u64, WireError> {
+        match self.call_with(&|w, id| proto::write_tag_request(w, id, proto::OP_INSERT, tag))? {
+            Response::Inserted { addr } => Ok(addr),
+            other => unexpected(other),
+        }
+    }
+
+    /// Delete by flat global address.  Not auto-retried.
+    pub fn delete(&mut self, addr: u64) -> Result<(), WireError> {
+        match self.call_once(&Request::Delete { addr })? {
+            Response::Deleted => Ok(()),
+            other => unexpected(other),
+        }
+    }
+
+    /// One lookup; sheds with [`EngineError::Full`] (as
+    /// [`WireError::Engine`]) when the owning bank is saturated.
+    pub fn lookup(&mut self, tag: &BitVec) -> Result<ShardedOutcome, WireError> {
+        let resp = self
+            .call_idempotent_with(&|w, id| proto::write_tag_request(w, id, proto::OP_LOOKUP, tag))?;
+        match resp {
+            Response::Lookup(o) => Ok(*o),
+            other => unexpected(other),
+        }
+    }
+
+    /// Pipelined bulk lookup: `tags` is cut into `chunk`-sized frames
+    /// (clamped to [`proto::MAX_BULK_TAGS`]) and streamed through a
+    /// bounded window — several frames are in flight before the first
+    /// response is read, but never so many that both sides could wedge on
+    /// full socket buffers.  Per-tag results come back in input order.
+    pub fn lookup_bulk(
+        &mut self,
+        tags: &[BitVec],
+        chunk: usize,
+    ) -> Result<Vec<Result<ShardedOutcome, EngineError>>, WireError> {
+        if tags.is_empty() {
+            return Ok(Vec::new());
+        }
+        let chunk = chunk.clamp(1, proto::MAX_BULK_TAGS);
+        match self.bulk_once(tags, chunk) {
+            Err(WireError::Io(_)) => {
+                // lookups are idempotent: replay the whole burst once
+                self.reconnect()?;
+                self.bulk_once(tags, chunk)
+            }
+            other => other,
+        }
+    }
+
+    fn bulk_once(
+        &mut self,
+        tags: &[BitVec],
+        chunk: usize,
+    ) -> Result<Vec<Result<ShardedOutcome, EngineError>>, WireError> {
+        let chunks: Vec<&[BitVec]> = tags.chunks(chunk).collect();
+        let ids: Vec<u64> = chunks.iter().map(|_| self.fresh_id()).collect();
+        let result = self.bulk_exchange(&ids, &chunks, tags.len());
+        if matches!(result, Err(WireError::Io(_)) | Err(WireError::Protocol(_))) {
+            self.conn = None;
+        }
+        result
+    }
+
+    fn bulk_exchange(
+        &mut self,
+        ids: &[u64],
+        chunks: &[&[BitVec]],
+        total: usize,
+    ) -> Result<Vec<Result<ShardedOutcome, EngineError>>, WireError> {
+        let conn = self.conn()?;
+        // Bounded pipelining: keep a window of frames in flight (≈1024
+        // tags' worth) instead of writing the whole burst up front — the
+        // server answers strictly in order with blocking writes, so an
+        // unbounded scatter could fill both directions' socket buffers
+        // with neither side reading, deadlocking the connection.  Reading
+        // response i before sending frame i+W keeps the response stream
+        // draining while frames still overlap.
+        let chunk = chunks[0].len().max(1);
+        let window = (1024 / chunk).clamp(1, 64).min(chunks.len());
+        for i in 0..window {
+            proto::write_lookup_bulk_request(&mut conn.writer, ids[i], chunks[i])?;
+        }
+        conn.writer.flush()?;
+        // gather: the server answers one connection in order
+        let mut out = Vec::with_capacity(total);
+        for (i, (&id, c)) in ids.iter().zip(chunks).enumerate() {
+            let (rid, resp) = proto::read_response(&mut conn.reader)?;
+            if rid != id {
+                return Err(WireError::Protocol(format!(
+                    "pipelined response id {rid}, expected {id}"
+                )));
+            }
+            match resp {
+                Response::LookupBulk(items) => {
+                    if items.len() != c.len() {
+                        return Err(WireError::Protocol(format!(
+                            "bulk chunk answered {} of {} tags",
+                            items.len(),
+                            c.len()
+                        )));
+                    }
+                    out.extend(items);
+                }
+                // whole-chunk shed: every tag of the chunk gets the error
+                Response::Error { code, aux } => match proto::engine_error_from_code(code, aux) {
+                    Some(e) => out.extend(c.iter().map(|_| Err(e.clone()))),
+                    None => {
+                        return Err(WireError::Protocol(format!(
+                            "bulk chunk failed with protocol code {code}"
+                        )))
+                    }
+                },
+                other => {
+                    return Err(WireError::Protocol(format!(
+                        "unexpected bulk response {other:?}"
+                    )))
+                }
+            }
+            // slide the window: one response in, the next frame out
+            let next = i + window;
+            if next < chunks.len() {
+                proto::write_lookup_bulk_request(&mut conn.writer, ids[next], chunks[next])?;
+                conn.writer.flush()?;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Fleet statistics snapshot.
+    pub fn stats(&mut self) -> Result<StatsReport, WireError> {
+        match self.call_idempotent(&Request::Stats)? {
+            Response::Stats(s) => Ok(*s),
+            other => unexpected(other),
+        }
+    }
+
+    /// Flush all pending work on every bank.
+    pub fn drain(&mut self) -> Result<(), WireError> {
+        match self.call_idempotent(&Request::Drain)? {
+            Response::Drained => Ok(()),
+            other => unexpected(other),
+        }
+    }
+
+    /// Ask the server to drain and stop; the ack means all accepted work
+    /// is done.  The connection is unusable afterwards.
+    pub fn shutdown(&mut self) -> Result<(), WireError> {
+        let r = match self.call_once(&Request::Shutdown)? {
+            Response::ShutdownAck => Ok(()),
+            other => unexpected(other),
+        };
+        self.conn = None;
+        r
+    }
+}
+
+/// Map a mismatched response onto the right error: typed engine errors
+/// pass through, anything else is a protocol violation.
+fn unexpected<T>(resp: Response) -> Result<T, WireError> {
+    match resp {
+        Response::Error { code, aux } => match proto::engine_error_from_code(code, aux) {
+            Some(e) => Err(WireError::Engine(e)),
+            None => Err(WireError::Protocol(format!("server error code {code} (aux {aux})"))),
+        },
+        other => Err(WireError::Protocol(format!("unexpected response {other:?}"))),
+    }
+}

@@ -1,0 +1,239 @@
+//! Multi-threaded wire-protocol load generator.
+//!
+//! Reuses the [`crate::workload`] streams: a setup client inserts a
+//! uniform tag population, then `threads` clients (one connection each)
+//! fire [`QueryMix`]-drawn lookups in pipelined bulk frames and record the
+//! round-trip of every frame.  The report carries throughput and p50/p99
+//! frame latency plus the paper's metrics (mean λ, mean energy) read off
+//! the wire outcomes, and converts to a [`BenchRecord`] so the run lands
+//! in the same `BENCH_*.json` trajectory schema as the in-process bench
+//! ([`crate::util::bench::write_bench_json`] with the `net` tag).
+
+use std::time::Instant;
+
+use crate::bits::BitVec;
+use crate::net::client::CamClient;
+use crate::net::proto::WireError;
+use crate::util::bench::BenchRecord;
+use crate::util::Rng;
+use crate::workload::{QueryMix, TagDistribution};
+
+/// Load-generator parameters.
+#[derive(Debug, Clone)]
+pub struct LoadGen {
+    /// Server address, e.g. `127.0.0.1:4242`.
+    pub addr: String,
+    /// Client threads (one TCP connection each).
+    pub threads: usize,
+    /// Total lookups across all threads.
+    pub lookups: usize,
+    /// Tags per pipelined bulk frame.
+    pub chunk: usize,
+    /// Fraction of queries drawn from the stored population.
+    pub hit_ratio: f64,
+    /// Tags inserted before the run (capped by fleet capacity).
+    pub population: usize,
+    pub seed: u64,
+}
+
+impl Default for LoadGen {
+    fn default() -> Self {
+        LoadGen {
+            addr: String::new(),
+            threads: 4,
+            lookups: 20_000,
+            chunk: 64,
+            hit_ratio: 0.9,
+            population: 256,
+            seed: 7,
+        }
+    }
+}
+
+/// What one load-generator run measured.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// Lookups that produced a wire result (hit or miss).
+    pub lookups: usize,
+    pub hits: usize,
+    /// Lookups answered with a typed engine error (sheds) — still counted
+    /// toward throughput, not toward the hit ratio.
+    pub errors: usize,
+    pub wall_s: f64,
+    pub throughput_lps: f64,
+    /// Frame round-trip quantiles in nanoseconds (a frame carries up to
+    /// `chunk` lookups).
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+    pub mean_lambda: f64,
+    pub mean_energy_fj: f64,
+    pub threads: usize,
+    pub chunk: usize,
+    /// Shard count the server announced at handshake.
+    pub shards: u32,
+}
+
+impl LoadReport {
+    /// Hit ratio over answered lookups.
+    pub fn hit_ratio(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups as f64
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} lookups in {:.3} s — {:.0} lookups/s, hits {:.1} %, λ̄ {:.3}, \
+             Ē {:.1} fJ, frame p50 {} ns p99 {} ns ({} threads × bulk {}, {} errors)",
+            self.lookups,
+            self.wall_s,
+            self.throughput_lps,
+            100.0 * self.hit_ratio(),
+            self.mean_lambda,
+            self.mean_energy_fj,
+            self.p50_ns,
+            self.p99_ns,
+            self.threads,
+            self.chunk,
+            self.errors
+        )
+    }
+
+    /// The trajectory row for `write_bench_json(path, "net", …)`.
+    pub fn to_record(&self) -> BenchRecord {
+        let mut rec = BenchRecord::new(format!(
+            "net/shards={}/threads={}/bulk{}",
+            self.shards, self.threads, self.chunk
+        ));
+        rec.push("shards", self.shards as f64);
+        rec.push("threads", self.threads as f64);
+        rec.push("chunk", self.chunk as f64);
+        rec.push("lookups", self.lookups as f64);
+        rec.push("throughput_lps", self.throughput_lps);
+        rec.push("p50_ns", self.p50_ns as f64);
+        rec.push("p99_ns", self.p99_ns as f64);
+        rec.push("hit_ratio", self.hit_ratio());
+        rec.push("mean_lambda", self.mean_lambda);
+        rec.push("mean_energy_fj", self.mean_energy_fj);
+        rec.push("errors", self.errors as f64);
+        rec
+    }
+}
+
+/// Per-thread tallies merged into the report.
+#[derive(Default)]
+struct Tally {
+    lookups: usize,
+    hits: usize,
+    errors: usize,
+    lambda_sum: u64,
+    energy_sum_fj: f64,
+    latencies_ns: Vec<u64>,
+}
+
+impl LoadGen {
+    /// Populate the fleet (through the wire) and run the generator.
+    pub fn run(&self) -> Result<LoadReport, WireError> {
+        let mut setup = CamClient::connect(self.addr.clone())?;
+        let hello = *setup.server_info().expect("connected client has a hello");
+        let n = hello.tag_bits as usize;
+        let capacity = (hello.shards as usize) * (hello.bank_m as usize);
+
+        // Store a uniform population, leaving hash-placement headroom.
+        let mut rng = Rng::seed_from_u64(self.seed);
+        let want = self.population.min(capacity * 7 / 10).max(1);
+        let candidates = TagDistribution::Uniform.sample_distinct(n, want, &mut rng);
+        let mut stored = Vec::new();
+        for t in &candidates {
+            match setup.insert(t) {
+                Ok(_) => stored.push(t.clone()),
+                Err(WireError::Engine(_)) => {} // bank full: keep going
+                Err(e) => return Err(e),
+            }
+        }
+        // Pre-draw every thread's query stream so the timed region is pure
+        // wire traffic.
+        let threads = self.threads.max(1);
+        let mix = QueryMix { hit_ratio: self.hit_ratio, zipf_s: 0.0 };
+        let mut streams: Vec<Vec<BitVec>> = vec![Vec::new(); threads];
+        for i in 0..self.lookups {
+            streams[i % threads].push(mix.sample(&stored, n, &mut rng).0);
+        }
+
+        let t0 = Instant::now();
+        let mut joins = Vec::new();
+        for stream in streams {
+            let addr = self.addr.clone();
+            let chunk = self.chunk.max(1);
+            joins.push(std::thread::spawn(move || -> Result<Tally, WireError> {
+                let mut client = CamClient::connect(addr)?;
+                let mut t = Tally::default();
+                for frame in stream.chunks(chunk) {
+                    let f0 = Instant::now();
+                    let results = client.lookup_bulk(frame, chunk)?;
+                    t.latencies_ns.push(f0.elapsed().as_nanos() as u64);
+                    for r in results {
+                        match r {
+                            Ok(o) => {
+                                t.lookups += 1;
+                                t.hits += o.addr.is_some() as usize;
+                                t.lambda_sum += o.lambda as u64;
+                                t.energy_sum_fj += o.energy.total_fj();
+                            }
+                            Err(_) => t.errors += 1,
+                        }
+                    }
+                }
+                Ok(t)
+            }));
+        }
+        let mut total = Tally::default();
+        for j in joins {
+            let t = j.join().map_err(|_| {
+                WireError::Protocol("load-generator thread panicked".into())
+            })??;
+            total.lookups += t.lookups;
+            total.hits += t.hits;
+            total.errors += t.errors;
+            total.lambda_sum += t.lambda_sum;
+            total.energy_sum_fj += t.energy_sum_fj;
+            total.latencies_ns.extend(t.latencies_ns);
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+
+        total.latencies_ns.sort_unstable();
+        let quantile = |q: f64| -> u64 {
+            if total.latencies_ns.is_empty() {
+                return 0;
+            }
+            let idx = (q * (total.latencies_ns.len() - 1) as f64).round() as usize;
+            total.latencies_ns[idx]
+        };
+        let served = total.lookups + total.errors;
+        Ok(LoadReport {
+            lookups: total.lookups,
+            hits: total.hits,
+            errors: total.errors,
+            wall_s,
+            throughput_lps: if wall_s > 0.0 { served as f64 / wall_s } else { 0.0 },
+            p50_ns: quantile(0.5),
+            p99_ns: quantile(0.99),
+            mean_lambda: if total.lookups > 0 {
+                total.lambda_sum as f64 / total.lookups as f64
+            } else {
+                0.0
+            },
+            mean_energy_fj: if total.lookups > 0 {
+                total.energy_sum_fj / total.lookups as f64
+            } else {
+                0.0
+            },
+            threads,
+            chunk: self.chunk.max(1),
+            shards: hello.shards,
+        })
+    }
+}

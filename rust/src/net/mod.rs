@@ -1,0 +1,36 @@
+//! L5 — the network serving layer: a wire protocol + TCP front-end that
+//! puts the sharded CAM fleet ([`crate::shard`]) on the network.
+//!
+//! Everything is `std::net` + the crate's own primitives — no new
+//! dependencies.  The stack, bottom to top:
+//!
+//! * [`proto`] — versioned, length-prefixed binary frames with FNV-1a
+//!   checksums ([`crate::util::hash`], the same definition that places
+//!   tags on banks), request ids for pipelining, and responses that carry
+//!   the full [`crate::shard::ShardedOutcome`] — matched global address,
+//!   λ, energy breakdown, delay — bit-identical to an in-process lookup.
+//!   Engine failures (including [`crate::coordinator::EngineError::Full`]
+//!   shed-on-overload) map to typed error codes.
+//! * [`server`] — [`CamTcpServer`]: thread-per-connection serving over a
+//!   [`crate::shard::ShardedServerHandle`], with a connection cap,
+//!   buffered per-connection I/O and a clean shutdown that drains every
+//!   bank.
+//! * [`client`] — [`CamClient`]: blocking client with handshake,
+//!   reconnect, and pipelined `lookup_bulk`.
+//! * [`loadgen`] — [`LoadGen`]: multi-threaded QPS/latency runner over
+//!   [`crate::workload`] streams, reporting into the
+//!   [`crate::util::bench`] trajectory schema.
+//!
+//! Entry points: `cscam serve --listen <addr>` starts a server,
+//! `cscam loadgen --connect <addr>` drives it, and the `cam_client`
+//! example walks the client API.
+
+pub mod client;
+pub mod loadgen;
+pub mod proto;
+pub mod server;
+
+pub use client::CamClient;
+pub use loadgen::{LoadGen, LoadReport};
+pub use proto::{Request, Response, ServerHello, StatsReport, WireError, VERSION};
+pub use server::{CamTcpServer, NetConfig, NetServerHandle};

@@ -1,0 +1,962 @@
+//! The versioned, length-prefixed binary wire format.
+//!
+//! Every message is one *frame*:
+//!
+//! ```text
+//! [len: u32][checksum: u64][request id: u64][op: u8][payload: len-17 bytes]
+//! ```
+//!
+//! all little-endian; `len` counts everything after itself and `checksum`
+//! is FNV-1a ([`crate::util::hash`] — the same definition that routes tags
+//! to banks) over the id, op and payload bytes.  Request ids are chosen by
+//! the client and echoed verbatim in the response, which is what makes
+//! pipelining work: a client may have several frames in flight and match
+//! the answers back up by id (the server answers a single connection in
+//! order).  Writers should bound how far they run ahead — socket buffers
+//! are finite in both directions; see the window in
+//! [`crate::net::CamClient::lookup_bulk`].
+//!
+//! A connection starts with a handshake: the client sends magic + version
+//! ([`write_client_hello`]), the server answers with magic + version +
+//! flags + fleet geometry ([`ServerHello`]), and both sides hang up on a
+//! mismatch rather than guess at an incompatible stream.
+//!
+//! Responses carry the full [`ShardedOutcome`] — matched global address,
+//! λ, the [`crate::energy::EnergyBreakdown`] and the delay report — with
+//! every `f64` shipped as its IEEE-754 bit pattern, so a wire client sees
+//! the paper's metrics *bit-identical* to an in-process caller (the
+//! `net_roundtrip` integration tests assert exactly that).  Engine
+//! failures map to typed error codes ([`engine_error_code`]), including
+//! [`EngineError::Full`] for shed-on-overload.
+
+use crate::bits::BitVec;
+use crate::coordinator::engine::EngineError;
+use crate::energy::EnergyBreakdown;
+use crate::shard::ShardedOutcome;
+use crate::timing::DelayReport;
+use crate::util::hash::Fnv1a;
+
+use std::io::{self, Read, Write};
+
+/// Protocol magic (first bytes of both hellos).
+pub const MAGIC: [u8; 4] = *b"CSCM";
+
+/// Protocol version this build speaks.
+pub const VERSION: u16 = 1;
+
+/// Upper bound on one frame (64 MiB) — rejects garbage lengths before any
+/// allocation.
+pub const MAX_FRAME_LEN: u32 = 1 << 26;
+
+/// Tags wider than this are rejected at decode time (a million bits is far
+/// past any design point; real N is 32–128).
+pub const MAX_TAG_BITS: u32 = 1 << 20;
+
+/// Most tags one `LookupBulk` frame may carry.  Responses are much larger
+/// than requests (an outcome is ~15× a tag), so without this cap a
+/// request that fits [`MAX_FRAME_LEN`] comfortably could demand a response
+/// frame the peer is obliged to reject — the work would be done, then
+/// thrown away as a protocol violation.  4096 outcomes stay well under a
+/// megabyte.  [`crate::net::CamClient::lookup_bulk`] clamps its chunk size
+/// to this.
+pub const MAX_BULK_TAGS: usize = 4096;
+
+// Request opcodes (responses echo the same op; errors use OP_ERROR).
+pub const OP_INSERT: u8 = 1;
+pub const OP_DELETE: u8 = 2;
+pub const OP_LOOKUP: u8 = 3;
+pub const OP_LOOKUP_BULK: u8 = 4;
+pub const OP_STATS: u8 = 5;
+pub const OP_DRAIN: u8 = 6;
+pub const OP_SHUTDOWN: u8 = 7;
+pub const OP_ERROR: u8 = 0xEE;
+
+// Typed error codes.
+pub const ERR_FULL: u16 = 1;
+pub const ERR_BAD_ADDRESS: u16 = 2;
+pub const ERR_TAG_WIDTH: u16 = 3;
+pub const ERR_SHUTDOWN: u16 = 4;
+/// Malformed frame / payload (no [`EngineError`] equivalent).
+pub const ERR_PROTOCOL: u16 = 100;
+/// Opcode the server does not know.
+pub const ERR_UNKNOWN_OP: u16 = 101;
+
+/// Everything that can go wrong on the wire.
+#[derive(Debug)]
+pub enum WireError {
+    /// Transport failure (includes peer disconnect).
+    Io(io::Error),
+    /// Bytes that violate the protocol contract (bad magic, bad checksum,
+    /// truncated payload, unknown opcode…).
+    Protocol(String),
+    /// The server answered with a typed engine error.
+    Engine(EngineError),
+    /// The server is at its connection cap (hello `busy` flag).
+    Busy,
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "wire i/o error: {e}"),
+            WireError::Protocol(m) => write!(f, "wire protocol violation: {m}"),
+            WireError::Engine(e) => write!(f, "engine error over the wire: {e}"),
+            WireError::Busy => write!(f, "server at connection capacity"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<io::Error> for WireError {
+    fn from(e: io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+/// Map an engine error onto its wire code plus auxiliary word
+/// (`BadAddress` carries the address; `TagWidth` packs got/want).
+pub fn engine_error_code(e: &EngineError) -> (u16, u64) {
+    match e {
+        EngineError::Full => (ERR_FULL, 0),
+        EngineError::BadAddress(a) => (ERR_BAD_ADDRESS, *a as u64),
+        EngineError::TagWidth { got, want } => {
+            (ERR_TAG_WIDTH, ((*got as u64) << 32) | (*want as u64 & 0xFFFF_FFFF))
+        }
+        EngineError::Shutdown => (ERR_SHUTDOWN, 0),
+    }
+}
+
+/// Inverse of [`engine_error_code`]; `None` for protocol-level codes.
+pub fn engine_error_from_code(code: u16, aux: u64) -> Option<EngineError> {
+    match code {
+        ERR_FULL => Some(EngineError::Full),
+        ERR_BAD_ADDRESS => Some(EngineError::BadAddress(aux as usize)),
+        ERR_TAG_WIDTH => Some(EngineError::TagWidth {
+            got: (aux >> 32) as usize,
+            want: (aux & 0xFFFF_FFFF) as usize,
+        }),
+        ERR_SHUTDOWN => Some(EngineError::Shutdown),
+        _ => None,
+    }
+}
+
+/// A client-side request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Insert { tag: BitVec },
+    Delete { addr: u64 },
+    Lookup { tag: BitVec },
+    LookupBulk { tags: Vec<BitVec> },
+    Stats,
+    Drain,
+    Shutdown,
+}
+
+/// Fleet statistics snapshot shipped for [`Request::Stats`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatsReport {
+    pub shards: u32,
+    pub bank_m: u32,
+    pub tag_bits: u32,
+    pub lookups: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    pub deletes: u64,
+    pub mean_lambda: f64,
+    pub mean_energy_fj: f64,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+    pub hottest_bank: u32,
+    pub hot_fraction: f64,
+    pub per_bank_lookups: Vec<u64>,
+}
+
+/// A server-side response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Inserted { addr: u64 },
+    Deleted,
+    Lookup(Box<ShardedOutcome>),
+    /// One result per input tag, in order; per-item errors stay typed.
+    LookupBulk(Vec<Result<ShardedOutcome, EngineError>>),
+    Stats(Box<StatsReport>),
+    Drained,
+    ShutdownAck,
+    /// Whole-request failure (see the `ERR_*` codes).
+    Error { code: u16, aux: u64 },
+}
+
+// ---------------------------------------------------------------- hellos
+
+/// Client hello: magic, version, two reserved zero bytes.
+pub fn write_client_hello(w: &mut impl Write) -> io::Result<()> {
+    w.write_all(&MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&[0u8; 2])
+}
+
+/// Parse a client hello from its 8 raw bytes; returns the peer's version.
+pub fn parse_client_hello(buf: &[u8; 8]) -> Result<u16, WireError> {
+    if buf[..4] != MAGIC {
+        return Err(WireError::Protocol("bad magic in client hello".into()));
+    }
+    Ok(u16::from_le_bytes([buf[4], buf[5]]))
+}
+
+/// What the server announces after a valid client hello.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServerHello {
+    pub version: u16,
+    /// Set when the server is at its connection cap and will close the
+    /// connection right after this hello.
+    pub busy: bool,
+    pub shards: u32,
+    /// Entries per bank (total capacity = `shards * bank_m`).
+    pub bank_m: u32,
+    /// Tag width N the fleet expects.
+    pub tag_bits: u32,
+}
+
+pub fn write_server_hello(w: &mut impl Write, h: &ServerHello) -> io::Result<()> {
+    w.write_all(&MAGIC)?;
+    w.write_all(&h.version.to_le_bytes())?;
+    w.write_all(&(h.busy as u16).to_le_bytes())?;
+    w.write_all(&h.shards.to_le_bytes())?;
+    w.write_all(&h.bank_m.to_le_bytes())?;
+    w.write_all(&h.tag_bits.to_le_bytes())
+}
+
+/// Read and validate a server hello (20 bytes).
+pub fn read_server_hello(r: &mut impl Read) -> Result<ServerHello, WireError> {
+    let mut buf = [0u8; 20];
+    r.read_exact(&mut buf)?;
+    if buf[..4] != MAGIC {
+        return Err(WireError::Protocol("bad magic in server hello".into()));
+    }
+    let u16_at = |i: usize| u16::from_le_bytes([buf[i], buf[i + 1]]);
+    let u32_at = |i: usize| u32::from_le_bytes([buf[i], buf[i + 1], buf[i + 2], buf[i + 3]]);
+    Ok(ServerHello {
+        version: u16_at(4),
+        busy: u16_at(6) & 1 == 1,
+        shards: u32_at(8),
+        bank_m: u32_at(12),
+        tag_bits: u32_at(16),
+    })
+}
+
+// ------------------------------------------------------ payload encoding
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    // IEEE-754 bit pattern: the decode side reproduces the value exactly.
+    buf.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn put_tag(buf: &mut Vec<u8>, tag: &BitVec) {
+    put_u32(buf, tag.len() as u32);
+    for &w in tag.words() {
+        put_u64(buf, w);
+    }
+}
+
+fn put_outcome(buf: &mut Vec<u8>, o: &ShardedOutcome) {
+    match o.addr {
+        Some(a) => {
+            buf.push(1);
+            put_u64(buf, a as u64);
+        }
+        None => {
+            buf.push(0);
+            put_u64(buf, 0);
+        }
+    }
+    put_u32(buf, o.all_matches.len() as u32);
+    for &a in &o.all_matches {
+        put_u64(buf, a as u64);
+    }
+    put_u32(buf, o.banks_searched as u32);
+    put_u64(buf, o.lambda as u64);
+    put_u64(buf, o.enabled_blocks as u64);
+    put_u64(buf, o.comparisons as u64);
+    let e = &o.energy;
+    for v in [
+        e.searchline_fj,
+        e.matchline_fj,
+        e.global_wire_fj,
+        e.sram_read_fj,
+        e.decoder_fj,
+        e.pii_logic_fj,
+        e.enable_driver_fj,
+        e.enable_gate_fj,
+    ] {
+        put_f64(buf, v);
+    }
+    put_f64(buf, o.delay.cycle_ns);
+    put_f64(buf, o.delay.latency_ns);
+}
+
+/// Bounds-checked payload reader.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    /// Bytes left — the bound for any count-prefixed allocation: a count
+    /// that claims more elements than the remaining bytes could possibly
+    /// encode is rejected *before* `Vec::with_capacity` reserves for it.
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.pos + n > self.buf.len() {
+            return Err(WireError::Protocol(format!(
+                "truncated payload: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn take_u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn take_u16(&mut self) -> Result<u16, WireError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn take_u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn take_u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn take_f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.take_u64()?))
+    }
+
+    fn take_tag(&mut self) -> Result<BitVec, WireError> {
+        let nbits = self.take_u32()?;
+        if nbits == 0 || nbits > MAX_TAG_BITS {
+            return Err(WireError::Protocol(format!("tag width {nbits} out of range")));
+        }
+        let n = nbits as usize;
+        let mut tag = BitVec::zeros(n);
+        for w in tag.words_mut() {
+            *w = self.take_u64()?;
+        }
+        // Defensive: clear tail slack a hostile peer may have set (it would
+        // corrupt count_ones/iter_ones invariants downstream).
+        let rem = n % 64;
+        if rem != 0 {
+            if let Some(last) = tag.words_mut().last_mut() {
+                *last &= (1u64 << rem) - 1;
+            }
+        }
+        Ok(tag)
+    }
+
+    fn take_outcome(&mut self) -> Result<ShardedOutcome, WireError> {
+        let has_addr = self.take_u8()? == 1;
+        let addr_raw = self.take_u64()?;
+        let n_matches = self.take_u32()? as usize;
+        if n_matches > self.remaining() / 8 {
+            return Err(WireError::Protocol(format!(
+                "{n_matches} matches cannot fit the {} remaining payload bytes",
+                self.remaining()
+            )));
+        }
+        let mut all_matches = Vec::with_capacity(n_matches);
+        for _ in 0..n_matches {
+            all_matches.push(self.take_u64()? as usize);
+        }
+        let banks_searched = self.take_u32()? as usize;
+        let lambda = self.take_u64()? as usize;
+        let enabled_blocks = self.take_u64()? as usize;
+        let comparisons = self.take_u64()? as usize;
+        let energy = EnergyBreakdown {
+            searchline_fj: self.take_f64()?,
+            matchline_fj: self.take_f64()?,
+            global_wire_fj: self.take_f64()?,
+            sram_read_fj: self.take_f64()?,
+            decoder_fj: self.take_f64()?,
+            pii_logic_fj: self.take_f64()?,
+            enable_driver_fj: self.take_f64()?,
+            enable_gate_fj: self.take_f64()?,
+        };
+        let delay = DelayReport { cycle_ns: self.take_f64()?, latency_ns: self.take_f64()? };
+        Ok(ShardedOutcome {
+            addr: has_addr.then_some(addr_raw as usize),
+            all_matches,
+            banks_searched,
+            lambda,
+            enabled_blocks,
+            comparisons,
+            energy,
+            delay,
+        })
+    }
+
+    fn finish(&self) -> Result<(), WireError> {
+        if self.pos != self.buf.len() {
+            return Err(WireError::Protocol(format!(
+                "{} trailing payload bytes",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl Request {
+    pub fn op(&self) -> u8 {
+        match self {
+            Request::Insert { .. } => OP_INSERT,
+            Request::Delete { .. } => OP_DELETE,
+            Request::Lookup { .. } => OP_LOOKUP,
+            Request::LookupBulk { .. } => OP_LOOKUP_BULK,
+            Request::Stats => OP_STATS,
+            Request::Drain => OP_DRAIN,
+            Request::Shutdown => OP_SHUTDOWN,
+        }
+    }
+
+    pub fn encode_payload(&self, buf: &mut Vec<u8>) {
+        match self {
+            Request::Insert { tag } | Request::Lookup { tag } => put_tag(buf, tag),
+            Request::Delete { addr } => put_u64(buf, *addr),
+            Request::LookupBulk { tags } => {
+                put_u32(buf, tags.len() as u32);
+                for t in tags {
+                    put_tag(buf, t);
+                }
+            }
+            Request::Stats | Request::Drain | Request::Shutdown => {}
+        }
+    }
+
+    pub fn decode(op: u8, payload: &[u8]) -> Result<Request, WireError> {
+        let mut c = Cursor::new(payload);
+        let req = match op {
+            OP_INSERT => Request::Insert { tag: c.take_tag()? },
+            OP_DELETE => Request::Delete { addr: c.take_u64()? },
+            OP_LOOKUP => Request::Lookup { tag: c.take_tag()? },
+            OP_LOOKUP_BULK => {
+                let n = c.take_u32()? as usize;
+                if n > MAX_BULK_TAGS {
+                    return Err(WireError::Protocol(format!(
+                        "bulk count {n} exceeds the per-frame cap of {MAX_BULK_TAGS}"
+                    )));
+                }
+                // the smallest tag encoding is 12 bytes (u32 width + 1 word)
+                if n > c.remaining() / 12 {
+                    return Err(WireError::Protocol(format!(
+                        "bulk count {n} cannot fit the {} remaining payload bytes",
+                        c.remaining()
+                    )));
+                }
+                let mut tags = Vec::with_capacity(n);
+                for _ in 0..n {
+                    tags.push(c.take_tag()?);
+                }
+                Request::LookupBulk { tags }
+            }
+            OP_STATS => Request::Stats,
+            OP_DRAIN => Request::Drain,
+            OP_SHUTDOWN => Request::Shutdown,
+            other => return Err(WireError::Protocol(format!("unknown request op {other}"))),
+        };
+        c.finish()?;
+        Ok(req)
+    }
+}
+
+impl Response {
+    pub fn op(&self) -> u8 {
+        match self {
+            Response::Inserted { .. } => OP_INSERT,
+            Response::Deleted => OP_DELETE,
+            Response::Lookup(_) => OP_LOOKUP,
+            Response::LookupBulk(_) => OP_LOOKUP_BULK,
+            Response::Stats(_) => OP_STATS,
+            Response::Drained => OP_DRAIN,
+            Response::ShutdownAck => OP_SHUTDOWN,
+            Response::Error { .. } => OP_ERROR,
+        }
+    }
+
+    pub fn encode_payload(&self, buf: &mut Vec<u8>) {
+        match self {
+            Response::Inserted { addr } => put_u64(buf, *addr),
+            Response::Deleted | Response::Drained | Response::ShutdownAck => {}
+            Response::Lookup(o) => put_outcome(buf, o),
+            Response::LookupBulk(items) => {
+                put_u32(buf, items.len() as u32);
+                for item in items {
+                    match item {
+                        Ok(o) => {
+                            buf.push(1);
+                            put_outcome(buf, o);
+                        }
+                        Err(e) => {
+                            buf.push(0);
+                            let (code, aux) = engine_error_code(e);
+                            put_u16(buf, code);
+                            put_u64(buf, aux);
+                        }
+                    }
+                }
+            }
+            Response::Stats(s) => {
+                put_u32(buf, s.shards);
+                put_u32(buf, s.bank_m);
+                put_u32(buf, s.tag_bits);
+                for v in [s.lookups, s.hits, s.misses, s.inserts, s.deletes] {
+                    put_u64(buf, v);
+                }
+                put_f64(buf, s.mean_lambda);
+                put_f64(buf, s.mean_energy_fj);
+                put_u64(buf, s.p50_ns);
+                put_u64(buf, s.p99_ns);
+                put_u32(buf, s.hottest_bank);
+                put_f64(buf, s.hot_fraction);
+                put_u32(buf, s.per_bank_lookups.len() as u32);
+                for &v in &s.per_bank_lookups {
+                    put_u64(buf, v);
+                }
+            }
+            Response::Error { code, aux } => {
+                put_u16(buf, *code);
+                put_u64(buf, *aux);
+            }
+        }
+    }
+
+    pub fn decode(op: u8, payload: &[u8]) -> Result<Response, WireError> {
+        let mut c = Cursor::new(payload);
+        let resp = match op {
+            OP_INSERT => Response::Inserted { addr: c.take_u64()? },
+            OP_DELETE => Response::Deleted,
+            OP_LOOKUP => Response::Lookup(Box::new(c.take_outcome()?)),
+            OP_LOOKUP_BULK => {
+                let n = c.take_u32()? as usize;
+                // the smallest item encoding is 11 bytes (error: flag+code+aux)
+                if n > c.remaining() / 11 {
+                    return Err(WireError::Protocol(format!(
+                        "bulk result count {n} cannot fit the {} remaining payload bytes",
+                        c.remaining()
+                    )));
+                }
+                let mut items = Vec::with_capacity(n);
+                for _ in 0..n {
+                    if c.take_u8()? == 1 {
+                        items.push(Ok(c.take_outcome()?));
+                    } else {
+                        let code = c.take_u16()?;
+                        let aux = c.take_u64()?;
+                        let e = engine_error_from_code(code, aux).ok_or_else(|| {
+                            WireError::Protocol(format!(
+                                "non-engine error code {code} in bulk item"
+                            ))
+                        })?;
+                        items.push(Err(e));
+                    }
+                }
+                Response::LookupBulk(items)
+            }
+            OP_STATS => {
+                let shards = c.take_u32()?;
+                let bank_m = c.take_u32()?;
+                let tag_bits = c.take_u32()?;
+                let lookups = c.take_u64()?;
+                let hits = c.take_u64()?;
+                let misses = c.take_u64()?;
+                let inserts = c.take_u64()?;
+                let deletes = c.take_u64()?;
+                let mean_lambda = c.take_f64()?;
+                let mean_energy_fj = c.take_f64()?;
+                let p50_ns = c.take_u64()?;
+                let p99_ns = c.take_u64()?;
+                let hottest_bank = c.take_u32()?;
+                let hot_fraction = c.take_f64()?;
+                let nb = c.take_u32()? as usize;
+                if nb > c.remaining() / 8 {
+                    return Err(WireError::Protocol(format!(
+                        "{nb} banks cannot fit the {} remaining payload bytes",
+                        c.remaining()
+                    )));
+                }
+                let mut per_bank_lookups = Vec::with_capacity(nb);
+                for _ in 0..nb {
+                    per_bank_lookups.push(c.take_u64()?);
+                }
+                Response::Stats(Box::new(StatsReport {
+                    shards,
+                    bank_m,
+                    tag_bits,
+                    lookups,
+                    hits,
+                    misses,
+                    inserts,
+                    deletes,
+                    mean_lambda,
+                    mean_energy_fj,
+                    p50_ns,
+                    p99_ns,
+                    hottest_bank,
+                    hot_fraction,
+                    per_bank_lookups,
+                }))
+            }
+            OP_DRAIN => Response::Drained,
+            OP_SHUTDOWN => Response::ShutdownAck,
+            OP_ERROR => Response::Error { code: c.take_u16()?, aux: c.take_u64()? },
+            other => return Err(WireError::Protocol(format!("unknown response op {other}"))),
+        };
+        c.finish()?;
+        Ok(resp)
+    }
+}
+
+/// Build an error response from an engine error.
+pub fn error_response(e: &EngineError) -> Response {
+    let (code, aux) = engine_error_code(e);
+    Response::Error { code, aux }
+}
+
+// --------------------------------------------------------------- framing
+
+/// Write one frame (no flush — callers batch frames, then flush once,
+/// which is what makes pipelined bulk lookups one syscall burst).  A
+/// payload past [`MAX_FRAME_LEN`] errors here, on the sender — the peer
+/// would reject it unread anyway.
+pub fn write_frame(w: &mut impl Write, id: u64, op: u8, payload: &[u8]) -> io::Result<()> {
+    if payload.len() as u64 + 17 > MAX_FRAME_LEN as u64 {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("frame payload of {} bytes exceeds MAX_FRAME_LEN", payload.len()),
+        ));
+    }
+    let len = (8 + 8 + 1 + payload.len()) as u32;
+    let mut h = Fnv1a::new();
+    h.update(&id.to_le_bytes());
+    h.update(&[op]);
+    h.update(payload);
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(&h.finish().to_le_bytes())?;
+    w.write_all(&id.to_le_bytes())?;
+    w.write_all(&[op])?;
+    w.write_all(payload)
+}
+
+/// Validate a frame length prefix.
+pub fn check_frame_len(len: u32) -> Result<usize, WireError> {
+    if len < 17 || len > MAX_FRAME_LEN {
+        return Err(WireError::Protocol(format!("frame length {len} out of range")));
+    }
+    Ok(len as usize)
+}
+
+/// Decode the body of a frame (everything after the length prefix):
+/// verifies the checksum and returns `(id, op, payload)`.
+pub fn decode_frame_body(body: &[u8]) -> Result<(u64, u8, &[u8]), WireError> {
+    if body.len() < 17 {
+        return Err(WireError::Protocol("frame body shorter than its header".into()));
+    }
+    let want = u64::from_le_bytes(<[u8; 8]>::try_from(&body[0..8]).unwrap());
+    let got = crate::util::hash::fnv1a_bytes(&body[8..]);
+    if want != got {
+        return Err(WireError::Protocol(format!(
+            "frame checksum mismatch: header {want:#018x}, computed {got:#018x}"
+        )));
+    }
+    let id = u64::from_le_bytes(<[u8; 8]>::try_from(&body[8..16]).unwrap());
+    Ok((id, body[16], &body[17..]))
+}
+
+/// Blocking read of one whole frame → `(id, op, payload)`.
+pub fn read_frame(r: &mut impl Read) -> Result<(u64, u8, Vec<u8>), WireError> {
+    let mut lenb = [0u8; 4];
+    r.read_exact(&mut lenb)?;
+    let len = check_frame_len(u32::from_le_bytes(lenb))?;
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    let (id, op, payload) = decode_frame_body(&body)?;
+    Ok((id, op, payload.to_vec()))
+}
+
+/// Write a request frame.
+pub fn write_request(w: &mut impl Write, id: u64, req: &Request) -> io::Result<()> {
+    let mut payload = Vec::new();
+    req.encode_payload(&mut payload);
+    write_frame(w, id, req.op(), &payload)
+}
+
+/// Write a single-tag request (`OP_INSERT` or `OP_LOOKUP`) straight from a
+/// borrowed tag — the hot-path sibling of [`write_request`] that skips
+/// cloning the tag into a [`Request`].
+pub fn write_tag_request(w: &mut impl Write, id: u64, op: u8, tag: &BitVec) -> io::Result<()> {
+    debug_assert!(op == OP_INSERT || op == OP_LOOKUP, "op {op} does not carry one tag");
+    let mut payload = Vec::new();
+    put_tag(&mut payload, tag);
+    write_frame(w, id, op, &payload)
+}
+
+/// Write a `LookupBulk` request straight from a borrowed slice — the
+/// pipelined client sends thousands of these per run, so the tags must
+/// not be cloned just to be serialized and dropped.
+pub fn write_lookup_bulk_request(w: &mut impl Write, id: u64, tags: &[BitVec]) -> io::Result<()> {
+    let mut payload = Vec::new();
+    put_u32(&mut payload, tags.len() as u32);
+    for t in tags {
+        put_tag(&mut payload, t);
+    }
+    write_frame(w, id, OP_LOOKUP_BULK, &payload)
+}
+
+/// Blocking read of one request frame.
+pub fn read_request(r: &mut impl Read) -> Result<(u64, Request), WireError> {
+    let (id, op, payload) = read_frame(r)?;
+    Ok((id, Request::decode(op, &payload)?))
+}
+
+/// Write a response frame.
+pub fn write_response(w: &mut impl Write, id: u64, resp: &Response) -> io::Result<()> {
+    let mut payload = Vec::new();
+    resp.encode_payload(&mut payload);
+    write_frame(w, id, resp.op(), &payload)
+}
+
+/// Blocking read of one response frame.
+pub fn read_response(r: &mut impl Read) -> Result<(u64, Response), WireError> {
+    let (id, op, payload) = read_frame(r)?;
+    Ok((id, Response::decode(op, &payload)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::TagDistribution;
+    use crate::util::Rng;
+
+    fn sample_outcome(hit: bool) -> ShardedOutcome {
+        ShardedOutcome {
+            addr: hit.then_some(133),
+            all_matches: if hit { vec![133, 450] } else { vec![] },
+            banks_searched: 4,
+            lambda: 3,
+            enabled_blocks: 2,
+            comparisons: 16,
+            energy: EnergyBreakdown {
+                searchline_fj: 1.25,
+                matchline_fj: 2.5,
+                global_wire_fj: 0.1,
+                sram_read_fj: 0.2,
+                decoder_fj: 0.3,
+                pii_logic_fj: 0.4,
+                enable_driver_fj: 0.5,
+                enable_gate_fj: 0.6,
+            },
+            delay: DelayReport { cycle_ns: 0.733, latency_ns: 1.466 },
+        }
+    }
+
+    fn roundtrip_request(req: Request) {
+        let mut wire = Vec::new();
+        write_request(&mut wire, 42, &req).unwrap();
+        let (id, back) = read_request(&mut wire.as_slice()).unwrap();
+        assert_eq!(id, 42);
+        assert_eq!(back, req);
+    }
+
+    fn roundtrip_response(resp: Response) {
+        let mut wire = Vec::new();
+        write_response(&mut wire, 7, &resp).unwrap();
+        let (id, back) = read_response(&mut wire.as_slice()).unwrap();
+        assert_eq!(id, 7);
+        assert_eq!(back, resp);
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        let mut rng = Rng::seed_from_u64(1);
+        let tags = TagDistribution::Uniform.sample_distinct(100, 3, &mut rng);
+        roundtrip_request(Request::Insert { tag: tags[0].clone() });
+        roundtrip_request(Request::Delete { addr: 987 });
+        roundtrip_request(Request::Lookup { tag: tags[1].clone() });
+        roundtrip_request(Request::LookupBulk { tags: tags.clone() });
+        roundtrip_request(Request::LookupBulk { tags: Vec::new() });
+        roundtrip_request(Request::Stats);
+        roundtrip_request(Request::Drain);
+        roundtrip_request(Request::Shutdown);
+    }
+
+    #[test]
+    fn responses_roundtrip_bit_identical() {
+        roundtrip_response(Response::Inserted { addr: 511 });
+        roundtrip_response(Response::Deleted);
+        roundtrip_response(Response::Lookup(Box::new(sample_outcome(true))));
+        roundtrip_response(Response::Lookup(Box::new(sample_outcome(false))));
+        roundtrip_response(Response::LookupBulk(vec![
+            Ok(sample_outcome(true)),
+            Err(EngineError::Full),
+            Ok(sample_outcome(false)),
+            Err(EngineError::TagWidth { got: 16, want: 32 }),
+        ]));
+        roundtrip_response(Response::Stats(Box::new(StatsReport {
+            shards: 4,
+            bank_m: 128,
+            tag_bits: 32,
+            lookups: 1000,
+            hits: 900,
+            misses: 100,
+            inserts: 64,
+            deletes: 3,
+            mean_lambda: 1.998,
+            mean_energy_fj: 7887.5,
+            p50_ns: 1200,
+            p99_ns: 56000,
+            hottest_bank: 2,
+            hot_fraction: 0.31,
+            per_bank_lookups: vec![250, 240, 310, 200],
+        })));
+        roundtrip_response(Response::Drained);
+        roundtrip_response(Response::ShutdownAck);
+        roundtrip_response(Response::Error { code: ERR_FULL, aux: 0 });
+    }
+
+    #[test]
+    fn borrowed_writers_match_the_owned_encoding() {
+        let mut rng = Rng::seed_from_u64(2);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 3, &mut rng);
+        let mut owned = Vec::new();
+        write_request(&mut owned, 9, &Request::Lookup { tag: tags[0].clone() }).unwrap();
+        let mut borrowed = Vec::new();
+        write_tag_request(&mut borrowed, 9, OP_LOOKUP, &tags[0]).unwrap();
+        assert_eq!(owned, borrowed);
+        let mut owned = Vec::new();
+        write_request(&mut owned, 10, &Request::LookupBulk { tags: tags.clone() }).unwrap();
+        let mut borrowed = Vec::new();
+        write_lookup_bulk_request(&mut borrowed, 10, &tags).unwrap();
+        assert_eq!(owned, borrowed);
+    }
+
+    #[test]
+    fn engine_error_codes_roundtrip() {
+        for e in [
+            EngineError::Full,
+            EngineError::BadAddress(12345),
+            EngineError::TagWidth { got: 64, want: 128 },
+            EngineError::Shutdown,
+        ] {
+            let (code, aux) = engine_error_code(&e);
+            assert_eq!(engine_error_from_code(code, aux), Some(e));
+        }
+        assert_eq!(engine_error_from_code(ERR_PROTOCOL, 0), None);
+    }
+
+    #[test]
+    fn corrupt_checksum_is_a_protocol_error() {
+        let mut wire = Vec::new();
+        write_request(&mut wire, 1, &Request::Stats).unwrap();
+        *wire.last_mut().unwrap() ^= 0xFF; // flip a payload... op byte here
+        match read_request(&mut wire.as_slice()) {
+            Err(WireError::Protocol(m)) => assert!(m.contains("checksum"), "{m}"),
+            other => panic!("expected checksum failure, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_and_runt_frames_are_rejected() {
+        assert!(check_frame_len(16).is_err());
+        assert!(check_frame_len(MAX_FRAME_LEN + 1).is_err());
+        assert!(check_frame_len(17).is_ok());
+        // a length prefix of garbage magnitude never allocates
+        let wire = (u32::MAX).to_le_bytes().to_vec();
+        assert!(matches!(read_frame(&mut wire.as_slice()), Err(WireError::Protocol(_))));
+    }
+
+    #[test]
+    fn count_prefixes_are_bounded_by_payload_size() {
+        // a 4-byte payload claiming 13M bulk tags must be rejected before
+        // Vec::with_capacity can reserve for it
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 13_000_000);
+        let mut wire = Vec::new();
+        write_frame(&mut wire, 3, OP_LOOKUP_BULK, &payload).unwrap();
+        assert!(matches!(read_request(&mut wire.as_slice()), Err(WireError::Protocol(_))));
+        let mut wire = Vec::new();
+        write_frame(&mut wire, 3, OP_LOOKUP_BULK, &payload).unwrap();
+        assert!(matches!(read_response(&mut wire.as_slice()), Err(WireError::Protocol(_))));
+    }
+
+    #[test]
+    fn trailing_payload_bytes_are_rejected() {
+        let mut payload = Vec::new();
+        Request::Stats.encode_payload(&mut payload);
+        payload.push(0xAB);
+        let mut wire = Vec::new();
+        write_frame(&mut wire, 9, OP_STATS, &payload).unwrap();
+        assert!(matches!(read_request(&mut wire.as_slice()), Err(WireError::Protocol(_))));
+    }
+
+    #[test]
+    fn hostile_tag_tail_bits_are_masked() {
+        // 70-bit tag: bits 70..127 of the word image are slack; a peer that
+        // sets them must not corrupt BitVec invariants.
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 70);
+        put_u64(&mut payload, u64::MAX);
+        put_u64(&mut payload, u64::MAX);
+        let tag = Cursor::new(&payload).take_tag().unwrap();
+        assert_eq!(tag.len(), 70);
+        assert_eq!(tag.count_ones(), 70, "tail slack must be cleared");
+    }
+
+    #[test]
+    fn hellos_roundtrip_and_reject_bad_magic() {
+        let mut wire = Vec::new();
+        write_client_hello(&mut wire).unwrap();
+        assert_eq!(wire.len(), 8);
+        let version = parse_client_hello(&<[u8; 8]>::try_from(&wire[..]).unwrap()).unwrap();
+        assert_eq!(version, VERSION);
+        let mut bad = <[u8; 8]>::try_from(&wire[..]).unwrap();
+        bad[0] = b'X';
+        assert!(matches!(parse_client_hello(&bad), Err(WireError::Protocol(_))));
+
+        let hello =
+            ServerHello { version: VERSION, busy: false, shards: 4, bank_m: 64, tag_bits: 32 };
+        let mut wire = Vec::new();
+        write_server_hello(&mut wire, &hello).unwrap();
+        assert_eq!(read_server_hello(&mut wire.as_slice()).unwrap(), hello);
+        wire[2] = b'Z';
+        assert!(matches!(read_server_hello(&mut wire.as_slice()), Err(WireError::Protocol(_))));
+    }
+}

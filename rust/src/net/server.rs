@@ -1,0 +1,473 @@
+//! The TCP serving front-end: a thread-per-connection server that puts a
+//! [`ShardedServerHandle`] fleet on the network.
+//!
+//! Shape: one nonblocking accept loop (so shutdown can interrupt it) that
+//! spawns a handler thread per connection, each holding its own clone of
+//! the fleet handle — the engine threads behind the handle already batch
+//! and shed per bank, so the network layer stays a thin framed adapter:
+//!
+//! ```text
+//!   client ──TCP──▶ conn thread ──handle──▶ bank engine threads
+//!                   (BufReader/BufWriter,    (Batcher, LookupEngine,
+//!                    frame decode, typed      Metrics — crate::shard)
+//!                    error mapping)
+//! ```
+//!
+//! * a **connection cap**: past [`NetConfig::max_connections`] live
+//!   connections, the server answers the handshake with the `busy` flag
+//!   and closes (clients see [`crate::net::proto::WireError::Busy`]);
+//! * **shed-on-overload**: lookups go through the fleet's non-blocking
+//!   admission ([`ShardedServerHandle::try_lookup`]); a saturated bank
+//!   surfaces as the typed `ERR_FULL` wire error instead of queue bloat;
+//! * **clean shutdown**: a `Shutdown` request (or a local
+//!   [`NetServerHandle::shutdown`]) stops the accept loop, waits briefly
+//!   for live connections, then drains every bank before the serve thread
+//!   exits.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::engine::EngineError;
+use crate::net::proto::{
+    self, parse_client_hello, write_server_hello, Request, Response, ServerHello, StatsReport,
+    ERR_PROTOCOL, VERSION,
+};
+use crate::shard::ShardedServerHandle;
+
+/// Tunables of the TCP front-end.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Live-connection cap; the accept loop answers `busy` past it.
+    pub max_connections: usize,
+    /// Poll granularity of the per-connection idle read (how fast a
+    /// connection notices a shutdown).
+    pub read_timeout: Duration,
+    /// Poll granularity of the nonblocking accept loop.
+    pub accept_poll: Duration,
+    /// How long shutdown waits for live connections before draining anyway.
+    pub shutdown_grace: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            max_connections: 64,
+            read_timeout: Duration::from_millis(50),
+            accept_poll: Duration::from_millis(5),
+            shutdown_grace: Duration::from_secs(5),
+        }
+    }
+}
+
+/// A bound-but-not-yet-serving TCP front-end over a running fleet.
+pub struct CamTcpServer {
+    fleet: ShardedServerHandle,
+    listener: TcpListener,
+    cfg: NetConfig,
+}
+
+impl CamTcpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) over a
+    /// running fleet.
+    pub fn bind(
+        fleet: ShardedServerHandle,
+        addr: impl ToSocketAddrs,
+        cfg: NetConfig,
+    ) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        Ok(CamTcpServer { fleet, listener, cfg })
+    }
+
+    /// The bound address (read the ephemeral port from here).
+    pub fn local_addr(&self) -> std::io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Spawn the accept loop on its own thread.
+    pub fn spawn(self) -> std::io::Result<NetServerHandle> {
+        let addr = self.listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let fleet = self.fleet.clone();
+        let thread = {
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new()
+                .name("cscam-net-accept".into())
+                .spawn(move || accept_loop(self.listener, self.fleet, self.cfg, stop))?
+        };
+        Ok(NetServerHandle { addr, stop, thread: Some(thread), fleet })
+    }
+}
+
+/// Handle to a serving TCP front-end.
+pub struct NetServerHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+    fleet: ShardedServerHandle,
+}
+
+impl NetServerHandle {
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The fleet behind the server (local metrics / drains keep working).
+    pub fn fleet(&self) -> &ShardedServerHandle {
+        &self.fleet
+    }
+
+    /// Ask the accept loop to stop (idempotent; also triggered by a wire
+    /// `Shutdown` request).  Banks are drained before the thread exits.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Release);
+    }
+
+    /// True once shutdown has been requested (not necessarily completed).
+    pub fn is_stopping(&self) -> bool {
+        self.stop.load(Ordering::Acquire)
+    }
+
+    /// Block until the serve thread has exited (call [`Self::shutdown`]
+    /// first, or send a wire `Shutdown`).
+    pub fn join(mut self) {
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    fleet: ShardedServerHandle,
+    cfg: NetConfig,
+    stop: Arc<AtomicBool>,
+) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    let live = Arc::new(AtomicUsize::new(0));
+    let rejectors = Arc::new(AtomicUsize::new(0));
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nodelay(true);
+                // the accepted socket must not inherit the listener's
+                // nonblocking mode (platform-dependent)
+                let _ = stream.set_nonblocking(false);
+                if live.load(Ordering::Acquire) >= cfg.max_connections {
+                    // Rejection waits up to 500 ms for the peer's hello —
+                    // never on the accept thread (over-cap connectors would
+                    // stall every legitimate accept behind them) and never
+                    // on more than a few threads at once (a connect flood
+                    // must not mint a thread per rejection; past the cap
+                    // the stream just drops, which the peer sees as EOF).
+                    if rejectors.load(Ordering::Acquire) < MAX_BUSY_REJECTORS {
+                        let slot = LiveSlot::claim(&rejectors);
+                        let hello = server_hello(&fleet, true);
+                        let _ = std::thread::Builder::new()
+                            .name("cscam-net-busy".into())
+                            .spawn(move || {
+                                let _slot = slot;
+                                reject_busy(stream, hello);
+                            });
+                    }
+                    continue;
+                }
+                // Slot guard: the slot frees even if serve_conn panics —
+                // a leaked increment would wedge the server at `busy`.
+                let slot = LiveSlot::claim(&live);
+                let fleet = fleet.clone();
+                let cfg = cfg.clone();
+                let stop = Arc::clone(&stop);
+                // spawn failure drops the unexecuted closure (and with it
+                // the slot guard), so the count stays balanced either way
+                let _ = std::thread::Builder::new()
+                    .name("cscam-net-conn".into())
+                    .spawn(move || {
+                        let _slot = slot;
+                        serve_conn(stream, &fleet, &cfg, &stop);
+                    });
+            }
+            // WouldBlock = no pending connection; other accept errors are
+            // transient on a healthy listener — either way, poll again
+            Err(_) => std::thread::sleep(cfg.accept_poll),
+        }
+    }
+    // Clean shutdown: no new connections; give the live ones a grace
+    // window, then flush whatever the banks still hold.
+    let deadline = Instant::now() + cfg.shutdown_grace;
+    while live.load(Ordering::Acquire) > 0 && Instant::now() < deadline {
+        std::thread::sleep(cfg.accept_poll);
+    }
+    fleet.drain();
+}
+
+/// Concurrent polite-rejection bound: each busy hello may pin a thread for
+/// up to 500 ms, so a connect flood gets at most this many courtesy
+/// replies at a time — the rest are dropped outright.
+const MAX_BUSY_REJECTORS: usize = 8;
+
+/// RAII slot in a connection counter (live conns, busy rejectors):
+/// claimed on the accept thread, released on drop — including a panicking
+/// thread's unwind, so a crash can never wedge the server at `busy`.
+struct LiveSlot(Arc<AtomicUsize>);
+
+impl LiveSlot {
+    fn claim(live: &Arc<AtomicUsize>) -> LiveSlot {
+        live.fetch_add(1, Ordering::AcqRel);
+        LiveSlot(Arc::clone(live))
+    }
+}
+
+impl Drop for LiveSlot {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+fn server_hello(fleet: &ShardedServerHandle, busy: bool) -> ServerHello {
+    ServerHello {
+        version: VERSION,
+        busy,
+        shards: fleet.shard_count() as u32,
+        bank_m: fleet.bank_m() as u32,
+        tag_bits: fleet.tag_bits() as u32,
+    }
+}
+
+fn reject_busy(mut stream: TcpStream, hello: ServerHello) {
+    // best-effort: read the client hello so the peer's write cannot race
+    // the close, then answer busy
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+    let mut peer_hello = [0u8; 8];
+    let _ = stream.read_exact(&mut peer_hello);
+    let _ = write_server_hello(&mut stream, &hello);
+    let _ = stream.flush();
+}
+
+/// How long a peer may stall without delivering a byte mid-buffer before
+/// the connection is dropped.  Wall-clock, not retry-counted: the budget
+/// must not scale with the socket's read timeout (the handshake uses a
+/// 2 s timeout, the frame loop 50 ms — a retry *count* would let a
+/// trickling handshake pin a connection slot for many minutes).
+const STALL_BUDGET: Duration = Duration::from_secs(10);
+
+/// Read exactly `buf.len()` bytes.  `Ok(false)` = idle timeout with zero
+/// bytes consumed (only when `idle_ok`); a timeout *mid-buffer* keeps
+/// waiting (a frame in flight is never abandoned half-read) until the
+/// peer has delivered nothing for [`STALL_BUDGET`] — progress resets the
+/// clock, so slow-but-alive peers survive and stalled ones cannot pin the
+/// thread or its connection slot.
+fn read_full(r: &mut impl Read, buf: &mut [u8], idle_ok: bool) -> std::io::Result<bool> {
+    use std::io::ErrorKind;
+    let mut filled = 0usize;
+    let mut stall_deadline: Option<Instant> = None;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Err(std::io::Error::new(ErrorKind::UnexpectedEof, "peer closed"));
+            }
+            Ok(n) => {
+                filled += n;
+                stall_deadline = None;
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if idle_ok && filled == 0 {
+                    return Ok(false);
+                }
+                let now = Instant::now();
+                let deadline = *stall_deadline.get_or_insert(now + STALL_BUDGET);
+                if now >= deadline {
+                    return Err(std::io::Error::new(
+                        ErrorKind::TimedOut,
+                        "peer stalled mid-frame",
+                    ));
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// One frame off a connection, tolerating idle timeouts between frames.
+enum ConnRead {
+    Idle,
+    Closed,
+    Frame(u64, Request),
+    Corrupt(String),
+}
+
+fn read_conn_frame(r: &mut impl Read) -> ConnRead {
+    let mut lenb = [0u8; 4];
+    match read_full(r, &mut lenb, true) {
+        Ok(false) => return ConnRead::Idle,
+        Ok(true) => {}
+        Err(_) => return ConnRead::Closed,
+    }
+    let len = match proto::check_frame_len(u32::from_le_bytes(lenb)) {
+        Ok(l) => l,
+        Err(e) => return ConnRead::Corrupt(e.to_string()),
+    };
+    let mut body = vec![0u8; len];
+    if !matches!(read_full(r, &mut body, false), Ok(true)) {
+        return ConnRead::Closed;
+    }
+    match proto::decode_frame_body(&body) {
+        Ok((id, op, payload)) => match Request::decode(op, payload) {
+            Ok(req) => ConnRead::Frame(id, req),
+            Err(e) => ConnRead::Corrupt(e.to_string()),
+        },
+        Err(e) => ConnRead::Corrupt(e.to_string()),
+    }
+}
+
+fn serve_conn(
+    stream: TcpStream,
+    fleet: &ShardedServerHandle,
+    cfg: &NetConfig,
+    stop: &Arc<AtomicBool>,
+) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(stream);
+
+    // Handshake: one 2 s window for the 8-byte client hello; wrong magic
+    // or version ends the connection before any state is touched.
+    let _ = reader.get_ref().set_read_timeout(Some(Duration::from_secs(2)));
+    let mut hello = [0u8; 8];
+    if !matches!(read_full(&mut reader, &mut hello, true), Ok(true)) {
+        return;
+    }
+    let peer_version = match parse_client_hello(&hello) {
+        Ok(v) => v,
+        Err(_) => return,
+    };
+    if write_server_hello(&mut writer, &server_hello(fleet, false)).is_err()
+        || writer.flush().is_err()
+    {
+        return;
+    }
+    if peer_version != VERSION {
+        return; // the client sees our version in the hello and gives up too
+    }
+
+    let _ = reader.get_ref().set_read_timeout(Some(cfg.read_timeout));
+    loop {
+        if stop.load(Ordering::Acquire) {
+            return;
+        }
+        match read_conn_frame(&mut reader) {
+            ConnRead::Idle => continue,
+            ConnRead::Closed => return,
+            ConnRead::Corrupt(msg) => {
+                // a desynced stream cannot be trusted for framing anymore:
+                // answer once (id 0), then hang up
+                eprintln!("cscam-net: dropping connection: {msg}");
+                let resp = Response::Error { code: ERR_PROTOCOL, aux: 0 };
+                let _ = proto::write_response(&mut writer, 0, &resp);
+                let _ = writer.flush();
+                return;
+            }
+            ConnRead::Frame(id, req) => {
+                let is_shutdown = matches!(req, Request::Shutdown);
+                let resp = handle_request(fleet, req);
+                if proto::write_response(&mut writer, id, &resp).is_err()
+                    || writer.flush().is_err()
+                {
+                    return;
+                }
+                if is_shutdown {
+                    stop.store(true, Ordering::Release);
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Reject tags of the wrong width before they reach the router: the
+/// engines answer a mismatch with a typed `TagWidth` error, but the
+/// learned-prefix router reads fixed bit positions and would panic on a
+/// too-narrow tag — a client mistake must never take down a conn thread.
+fn check_width(fleet: &ShardedServerHandle, tag: &crate::bits::BitVec) -> Option<EngineError> {
+    let want = fleet.tag_bits();
+    (tag.len() != want).then(|| EngineError::TagWidth { got: tag.len(), want })
+}
+
+fn handle_request(fleet: &ShardedServerHandle, req: Request) -> Response {
+    match req {
+        Request::Insert { tag } => {
+            if let Some(e) = check_width(fleet, &tag) {
+                return proto::error_response(&e);
+            }
+            match fleet.insert(tag) {
+                Ok(a) => Response::Inserted { addr: a as u64 },
+                Err(e) => proto::error_response(&e),
+            }
+        }
+        Request::Delete { addr } => match fleet.delete(addr as usize) {
+            Ok(()) => Response::Deleted,
+            Err(e) => proto::error_response(&e),
+        },
+        Request::Lookup { tag } => {
+            if let Some(e) = check_width(fleet, &tag) {
+                return proto::error_response(&e);
+            }
+            match fleet.try_lookup(tag) {
+                Ok(o) => Response::Lookup(Box::new(o)),
+                Err(e) => proto::error_response(&e),
+            }
+        }
+        Request::LookupBulk { tags } => {
+            if let Some(e) = tags.iter().find_map(|t| check_width(fleet, t)) {
+                return proto::error_response(&e);
+            }
+            // shed-on-overload lives in the fleet layer: the whole frame
+            // sheds only if a bank it would actually touch is saturated
+            match fleet.try_lookup_many(tags) {
+                Ok(items) => Response::LookupBulk(items),
+                Err(e) => proto::error_response(&e),
+            }
+        }
+        Request::Stats => match stats_report(fleet) {
+            Some(s) => Response::Stats(Box::new(s)),
+            None => proto::error_response(&EngineError::Shutdown),
+        },
+        Request::Drain => {
+            fleet.drain();
+            Response::Drained
+        }
+        Request::Shutdown => {
+            // drain now so the ack means "all accepted work is done"; the
+            // caller flips the stop flag after writing the ack
+            fleet.drain();
+            Response::ShutdownAck
+        }
+    }
+}
+
+fn stats_report(fleet: &ShardedServerHandle) -> Option<StatsReport> {
+    let fm = fleet.fleet_metrics()?;
+    Some(StatsReport {
+        shards: fleet.shard_count() as u32,
+        bank_m: fleet.bank_m() as u32,
+        tag_bits: fleet.tag_bits() as u32,
+        lookups: fm.aggregate.lookups,
+        hits: fm.aggregate.hits,
+        misses: fm.aggregate.misses,
+        inserts: fm.aggregate.inserts,
+        deletes: fm.aggregate.deletes,
+        mean_lambda: fm.aggregate.lambda.mean(),
+        mean_energy_fj: fm.aggregate.energy_fj.mean(),
+        p50_ns: fm.aggregate.host_latency_ns.quantile(0.5),
+        p99_ns: fm.aggregate.host_latency_ns.quantile(0.99),
+        hottest_bank: fm.hottest_bank() as u32,
+        hot_fraction: fm.hot_fraction(),
+        per_bank_lookups: fm.per_bank.iter().map(|m| m.lookups).collect(),
+    })
+}

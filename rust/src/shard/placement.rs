@@ -108,18 +108,10 @@ impl ShardRouter {
     }
 }
 
-/// Stable FNV-1a over the packed words (byte order pinned to little-endian
-/// so the placement never depends on the host).
-pub fn fnv1a(tag: &BitVec) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &w in tag.words() {
-        for b in w.to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x1000_0000_01b3);
-        }
-    }
-    h
-}
+// The hash itself lives in `util::hash` (the wire protocol checksums
+// frames with the same definition); re-exported here because placement is
+// where its stability contract bites hardest.
+pub use crate::util::hash::fnv1a;
 
 #[cfg(test)]
 mod tests {
@@ -176,6 +168,26 @@ mod tests {
         for (b, pool) in parts.iter().enumerate() {
             assert!((60..=145).contains(&pool.len()), "bank {b}: {}", pool.len());
         }
+    }
+
+    #[test]
+    fn single_shard_router_is_a_passthrough() {
+        // S = 1: every owner mode must resolve to bank 0 for every tag (a
+        // degenerate fleet is just the monolith), and broadcast stays
+        // ownerless — its scatter path then touches the one bank.
+        let mut rng = Rng::seed_from_u64(9);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 40, &mut rng);
+        let hash = ShardRouter::tag_hash(1);
+        let learned = ShardRouter::learned(1, &tags, 32);
+        for t in &tags {
+            assert_eq!(hash.place(t), Some(0));
+            assert_eq!(learned.place(t), Some(0));
+        }
+        assert_eq!(hash.partition(&tags)[0].len(), 40);
+        let bcast = ShardRouter::broadcast(1);
+        assert_eq!(bcast.place(&tags[0]), None, "broadcast never names an owner");
+        assert_eq!(bcast.partition(&tags).len(), 1);
+        assert_eq!(bcast.partition(&tags)[0].len(), 40);
     }
 
     #[test]

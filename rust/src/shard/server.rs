@@ -77,6 +77,7 @@ pub struct ShardedCamServer {
     servers: Vec<CamServer>,
     router: ShardRouter,
     bank_m: usize,
+    bank_n: usize,
 }
 
 impl ShardedCamServer {
@@ -89,7 +90,7 @@ impl ShardedCamServer {
         let servers = (0..cfg.shards)
             .map(|_| CamServer::new(bank_cfg.clone(), DecodeBackend::Native, policy))
             .collect();
-        ShardedCamServer { servers, router, bank_m: bank_cfg.m }
+        ShardedCamServer { servers, router, bank_m: bank_cfg.m, bank_n: bank_cfg.n }
     }
 
     /// Wrap existing (pre-populated) banks of identical geometry.
@@ -97,15 +98,16 @@ impl ShardedCamServer {
         assert!(!banks.is_empty(), "need at least one bank");
         assert_eq!(banks.len(), router.shards(), "router/bank count mismatch");
         let bank_m = banks[0].config().m;
+        let bank_n = banks[0].config().n;
         assert!(
-            banks.iter().all(|b| b.config().m == bank_m),
+            banks.iter().all(|b| b.config().m == bank_m && b.config().n == bank_n),
             "banks must share one geometry"
         );
         let servers = banks
             .into_iter()
             .map(|e| CamServer::with_engine(e, DecodeBackend::Native, policy))
             .collect();
-        ShardedCamServer { servers, router, bank_m }
+        ShardedCamServer { servers, router, bank_m, bank_n }
     }
 
     /// Cap every bank's admission queue (per-bank shedding for
@@ -122,6 +124,7 @@ impl ShardedCamServer {
             banks: self.servers.into_iter().map(|s| s.spawn()).collect(),
             router: Arc::new(self.router),
             bank_m: self.bank_m,
+            bank_n: self.bank_n,
             rr: Arc::new(AtomicUsize::new(0)),
         }
     }
@@ -134,6 +137,7 @@ pub struct ShardedServerHandle {
     banks: Vec<ServerHandle>,
     router: Arc<ShardRouter>,
     bank_m: usize,
+    bank_n: usize,
     /// Round-robin cursor for ownerless (broadcast) inserts.
     rr: Arc<AtomicUsize>,
 }
@@ -146,6 +150,12 @@ impl ShardedServerHandle {
     /// Entries per bank (M_bank).
     pub fn bank_m(&self) -> usize {
         self.bank_m
+    }
+
+    /// Tag width N the fleet expects (the network hello announces it so a
+    /// remote client can size its tags without a config file).
+    pub fn tag_bits(&self) -> usize {
+        self.bank_n
     }
 
     pub fn router(&self) -> &ShardRouter {
@@ -269,6 +279,28 @@ impl ShardedServerHandle {
         out.into_iter().map(|r| r.expect("every slot filled")).collect()
     }
 
+    /// Non-blocking bulk admission: sheds the whole slice with
+    /// [`EngineError::Full`] — without queueing anything — when any bank
+    /// the slice would touch is saturated (the owning banks in owner
+    /// modes, every bank in broadcast); otherwise exactly
+    /// [`Self::lookup_many`].  One saturated bank must not shed traffic
+    /// owned entirely by idle banks.
+    pub fn try_lookup_many(
+        &self,
+        tags: Vec<BitVec>,
+    ) -> Result<Vec<Result<ShardedOutcome, EngineError>>, EngineError> {
+        let saturated = if self.router.is_broadcast() {
+            self.banks.iter().any(|h| h.is_saturated())
+        } else {
+            tags.iter()
+                .any(|t| self.router.place(t).is_some_and(|b| self.banks[b].is_saturated()))
+        };
+        if saturated {
+            return Err(EngineError::Full);
+        }
+        Ok(self.lookup_many(tags))
+    }
+
     /// Snapshot every bank and merge into the fleet view; `None` if any
     /// engine thread is gone.
     pub fn fleet_metrics(&self) -> Option<FleetMetrics> {
@@ -383,7 +415,27 @@ mod tests {
         for t in &tags {
             assert_eq!(h.try_lookup(t.clone()).unwrap_err(), EngineError::Full);
         }
+        // ...bulk admission sheds the whole slice the same way...
+        assert_eq!(h.try_lookup_many(tags.clone()).unwrap_err(), EngineError::Full);
         // ...while blocking lookups still get through.
         assert!(h.lookup(tags[0].clone()).unwrap().addr.is_some());
+    }
+
+    #[test]
+    fn try_lookup_many_admits_below_capacity() {
+        for mode in [PlacementMode::TagHash, PlacementMode::Broadcast] {
+            let h = ShardedCamServer::new(&fleet_cfg(4), mode, policy()).spawn();
+            let mut rng = Rng::seed_from_u64(35);
+            let tags = TagDistribution::Uniform.sample_distinct(32, 24, &mut rng);
+            for t in &tags {
+                h.insert(t.clone()).unwrap();
+            }
+            let singles: Vec<_> =
+                tags.iter().map(|t| h.lookup(t.clone()).unwrap().addr).collect();
+            let bulk = h.try_lookup_many(tags.clone()).expect("unsaturated fleet admits");
+            for (i, r) in bulk.into_iter().enumerate() {
+                assert_eq!(r.unwrap().addr, singles[i]);
+            }
+        }
     }
 }

@@ -142,8 +142,9 @@ impl ShardedCam {
         assert!(!banks.is_empty(), "need at least one bank");
         assert_eq!(banks.len(), router.shards(), "router/bank count mismatch");
         let bank_m = banks[0].config().m;
+        let bank_n = banks[0].config().n;
         assert!(
-            banks.iter().all(|b| b.config().m == bank_m),
+            banks.iter().all(|b| b.config().m == bank_m && b.config().n == bank_n),
             "banks must share one geometry"
         );
         ShardedCam { banks, router, bank_m, rr: 0 }
@@ -355,6 +356,96 @@ mod tests {
         assert_eq!(cam.lookup(&tags[7]).unwrap().addr, None);
         assert_eq!(cam.occupancy(), 18);
         assert!(matches!(cam.delete(10_000), Err(EngineError::BadAddress(_))));
+    }
+
+    #[test]
+    fn single_bank_fleet_is_the_engine() {
+        // S = 1 passthrough: the router is a no-op and every lookup outcome
+        // (address, matches, λ, energy, delay) is bit-identical to driving
+        // the one LookupEngine directly.
+        let cfg = fleet_cfg(1);
+        let mut fleet = ShardedCam::new(&cfg, PlacementMode::TagHash);
+        let mut engine = LookupEngine::new(cfg.per_bank());
+        let mut rng = Rng::seed_from_u64(9);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 50, &mut rng);
+        for t in &tags {
+            let g = fleet.insert(t).unwrap();
+            assert_eq!(g, engine.insert(t).unwrap(), "global address == local address");
+        }
+        let mut probes = tags.clone();
+        probes.extend(TagDistribution::Uniform.sample_distinct(32, 50, &mut rng));
+        for t in &probes {
+            let f = fleet.lookup(t).unwrap();
+            let e = engine.lookup(t).unwrap();
+            assert_eq!(f.banks_searched, 1);
+            assert_eq!(f.addr, e.addr);
+            assert_eq!(f.all_matches, e.all_matches);
+            assert_eq!(f.lambda, e.lambda);
+            assert_eq!(f.enabled_blocks, e.enabled_blocks);
+            assert_eq!(f.comparisons, e.comparisons);
+            assert_eq!(f.energy, e.energy);
+            assert_eq!(f.delay, e.delay);
+        }
+    }
+
+    #[test]
+    fn learned_prefix_roundtrips_on_three_banks() {
+        // Non-power-of-two shard count: the oversampled learned index is
+        // folded with `% 3`, and insert→lookup must still resolve exactly.
+        let cfg = DesignConfig {
+            m: 192,
+            n: 32,
+            zeta: 4,
+            c: 3,
+            l: 4,
+            shards: 3,
+            ..DesignConfig::reference()
+        };
+        let mut rng = Rng::seed_from_u64(11);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 120, &mut rng);
+        let mut cam = ShardedCam::new(&cfg, PlacementMode::learned(3, &tags, 32));
+        let mut addrs = Vec::new();
+        for t in &tags {
+            addrs.push(cam.insert(t).unwrap());
+        }
+        for (t, &g) in tags.iter().zip(&addrs) {
+            let out = cam.lookup(t).unwrap();
+            assert_eq!(out.addr, Some(g));
+            assert_eq!(out.banks_searched, 1, "learned placement owns exactly one bank");
+        }
+        // no bank monopolizes a uniform population
+        for b in cam.banks() {
+            assert!(b.occupancy() >= 20, "bank holds {} of 120", b.occupancy());
+        }
+    }
+
+    #[test]
+    fn broadcast_delete_then_lookup_misses() {
+        // Broadcast mode stores ownerless: a delete must still erase the
+        // entry wherever round-robin put it, and the scatter-gather lookup
+        // must then miss while every other entry keeps hitting.
+        let mut cam = ShardedCam::new(&fleet_cfg(4), PlacementMode::Broadcast);
+        let mut rng = Rng::seed_from_u64(10);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 40, &mut rng);
+        let mut addrs = Vec::new();
+        for t in &tags {
+            addrs.push(cam.insert(t).unwrap());
+        }
+        // delete one by flat address, one by tag (routed erase)
+        cam.delete(addrs[5]).unwrap();
+        assert!(cam.delete_tag(&tags[11]).unwrap());
+        for (i, t) in tags.iter().enumerate() {
+            let out = cam.lookup(t).unwrap();
+            assert_eq!(out.banks_searched, 4, "broadcast always scatters");
+            if i == 5 || i == 11 {
+                assert_eq!(out.addr, None, "deleted tag {i} still matches");
+            } else {
+                assert_eq!(out.addr, Some(addrs[i]));
+            }
+        }
+        // a deleted slot is reusable: the spilled re-insert hits again
+        let g = cam.insert(&tags[5]).unwrap();
+        assert_eq!(cam.lookup(&tags[5]).unwrap().addr, Some(g));
     }
 
     #[test]

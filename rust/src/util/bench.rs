@@ -129,10 +129,10 @@ impl BenchRecord {
     }
 }
 
-/// Serialize bench records to the `BENCH_*.json` trajectory format
-/// (schema 1).  Future PRs diff these snapshots for perf regressions, so
-/// the output is deterministic: stable key order, one row per line.
-/// Non-finite values serialize as `null`.
+/// Serialize one run's records to the legacy single-bench trajectory format
+/// (schema 1).  Kept for the reader's compatibility tests; the on-disk
+/// snapshots are written in the merged schema-2 format by
+/// [`write_bench_json`].
 pub fn bench_records_json(bench: &str, records: &[BenchRecord]) -> String {
     let mut s = String::new();
     s.push_str("{\n");
@@ -152,13 +152,133 @@ pub fn bench_records_json(bench: &str, records: &[BenchRecord]) -> String {
     s
 }
 
-/// Write a `BENCH_*.json` snapshot (see [`bench_records_json`]).
+/// One row of a merged `BENCH_*.json` trajectory: which bench produced it,
+/// the run ordinal within that bench, and the measured record.
+#[derive(Debug, Clone)]
+pub struct TaggedRecord {
+    pub bench: String,
+    /// 1-based ordinal of the run that produced this row, per bench tag —
+    /// rows accumulate across runs instead of overwriting, so the file is a
+    /// real performance trajectory.
+    pub run: u64,
+    pub rec: BenchRecord,
+}
+
+/// Serialize merged trajectory rows (schema 2: per-row `bench`/`run` tags).
+/// Deterministic — metric keys are emitted *alphabetized*, one row per
+/// line — so appending a run never rewrites earlier rows (the reader
+/// alphabetizes on parse; if fresh rows kept insertion order, every append
+/// would churn the whole file's diff).  Non-finite values serialize as
+/// `null`.
+pub fn bench_rows_json(rows: &[TaggedRecord]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n  \"schema\": 2,\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"bench\": \"{}\", \"run\": {}",
+            json_escape(&r.rec.name),
+            json_escape(&r.bench),
+            r.run
+        ));
+        let mut metrics: Vec<&(String, f64)> = r.rec.metrics.iter().collect();
+        metrics.sort_by(|a, b| a.0.cmp(&b.0));
+        for (k, v) in metrics {
+            let v = if v.is_finite() { format!("{v}") } else { "null".to_string() };
+            s.push_str(&format!(", \"{}\": {}", json_escape(k), v));
+        }
+        s.push_str(if i + 1 == rows.len() { "}\n" } else { "},\n" });
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Parse a trajectory snapshot back into tagged rows.  Tolerant of both
+/// formats: schema-2 rows carry their own `bench`/`run`; schema-1 rows
+/// inherit the document's top-level `bench` and run 1.  Unparseable text
+/// yields no rows ([`write_bench_json`] refuses to overwrite such a file).
+/// Non-numeric row fields other than the tags are ignored; `null` metrics
+/// round-trip as NaN (re-serialized as `null`).
+pub fn read_bench_rows(text: &str) -> Vec<TaggedRecord> {
+    use crate::util::json::JsonValue;
+    let Ok(doc) = JsonValue::parse(text) else {
+        return Vec::new();
+    };
+    let default_bench = doc
+        .get("bench")
+        .and_then(|b| b.as_str().ok())
+        .unwrap_or("bench")
+        .to_string();
+    let Some(Ok(rows)) = doc.get("rows").map(|r| r.as_array()) else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    for row in rows {
+        let Ok(obj) = row.as_object() else { continue };
+        let mut rec = BenchRecord::new(
+            row.get("name").and_then(|n| n.as_str().ok()).unwrap_or(""),
+        );
+        // BTreeMap iteration: metric keys come back alphabetized, which
+        // stays deterministic even though insertion order is lost.
+        for (k, v) in obj {
+            if k == "name" || k == "bench" || k == "run" {
+                continue;
+            }
+            match v {
+                JsonValue::Number(x) => rec.push(k, *x),
+                JsonValue::Null => rec.push(k, f64::NAN),
+                _ => {}
+            }
+        }
+        out.push(TaggedRecord {
+            bench: row
+                .get("bench")
+                .and_then(|b| b.as_str().ok())
+                .unwrap_or(&default_bench)
+                .to_string(),
+            run: row.get("run").and_then(|r| r.as_usize().ok()).unwrap_or(1) as u64,
+            rec,
+        });
+    }
+    out
+}
+
+/// Append this run's records to a `BENCH_*.json` trajectory snapshot.
+///
+/// Existing rows (schema 1 or 2) are preserved; the new records are tagged
+/// with `bench` and the next run ordinal for that bench, so repeated runs
+/// accumulate a trajectory instead of overwriting each other, and several
+/// benches (e.g. `coordinator` and `net`) can share one file.  A missing
+/// file starts a fresh trajectory; an existing file that does not parse as
+/// JSON is an **error** — silently replacing it would destroy the
+/// accumulated history this function exists to protect.
 pub fn write_bench_json(
     path: &std::path::Path,
     bench: &str,
     records: &[BenchRecord],
 ) -> std::io::Result<()> {
-    std::fs::write(path, bench_records_json(bench, records))
+    let mut rows = match std::fs::read_to_string(path) {
+        Ok(text) => {
+            if crate::util::json::JsonValue::parse(&text).is_err() {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!(
+                        "{} exists but is not valid JSON; refusing to overwrite a \
+                         possibly-torn trajectory snapshot",
+                        path.display()
+                    ),
+                ));
+            }
+            read_bench_rows(&text)
+        }
+        Err(_) => Vec::new(),
+    };
+    let run = rows.iter().filter(|r| r.bench == bench).map(|r| r.run).max().unwrap_or(0) + 1;
+    rows.extend(records.iter().map(|rec| TaggedRecord {
+        bench: bench.to_string(),
+        run,
+        rec: rec.clone(),
+    }));
+    std::fs::write(path, bench_rows_json(&rows))
 }
 
 fn json_escape(s: &str) -> String {
@@ -237,5 +357,116 @@ mod tests {
         let text = bench_records_json("coordinator", &[]);
         let v = crate::util::json::JsonValue::parse(&text).unwrap();
         assert!(v.req("rows").unwrap().as_array().unwrap().is_empty());
+    }
+
+    fn rec(name: &str, key: &str, v: f64) -> BenchRecord {
+        let mut r = BenchRecord::new(name);
+        r.push(key, v);
+        r
+    }
+
+    #[test]
+    fn write_bench_json_appends_across_runs_and_benches() {
+        let path = std::env::temp_dir().join("cscam_bench_merge_test.json");
+        let _ = std::fs::remove_file(&path);
+        // run 1 of 'coordinator'
+        write_bench_json(&path, "coordinator", &[rec("banks=1", "throughput_lps", 100.0)])
+            .unwrap();
+        // run 1 of 'net' joins the same file
+        write_bench_json(&path, "net", &[rec("net/threads=4", "p99_ns", 9000.0)]).unwrap();
+        // run 2 of 'coordinator' appends, not overwrites
+        write_bench_json(&path, "coordinator", &[rec("banks=1", "throughput_lps", 120.0)])
+            .unwrap();
+
+        let rows = read_bench_rows(&std::fs::read_to_string(&path).unwrap());
+        assert_eq!(rows.len(), 3, "trajectory accumulates");
+        let coord: Vec<_> = rows.iter().filter(|r| r.bench == "coordinator").collect();
+        assert_eq!(coord.len(), 2);
+        assert_eq!(coord[0].run, 1);
+        assert_eq!(coord[1].run, 2);
+        assert_eq!(coord[1].rec.metrics[0], ("throughput_lps".to_string(), 120.0));
+        let net: Vec<_> = rows.iter().filter(|r| r.bench == "net").collect();
+        assert_eq!(net.len(), 1);
+        assert_eq!(net[0].run, 1, "run ordinals count per bench");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn appends_do_not_rewrite_earlier_rows() {
+        // The trajectory's value is its git diff: appending a run must
+        // leave every earlier row byte-identical (keys are alphabetized on
+        // both write and re-write, so parse→append→emit cannot churn).
+        let path = std::env::temp_dir().join("cscam_bench_stability_test.json");
+        let _ = std::fs::remove_file(&path);
+        let mut r1 = BenchRecord::new("row1");
+        r1.push("zeta", 1.0);
+        r1.push("alpha", 2.0); // deliberately non-alphabetical push order
+        write_bench_json(&path, "net", &[r1]).unwrap();
+        let first = std::fs::read_to_string(&path).unwrap();
+        let row1_line = first
+            .lines()
+            .find(|l| l.contains("row1"))
+            .unwrap()
+            .trim_end_matches(',')
+            .to_string();
+        assert!(row1_line.contains("\"alpha\": 2, \"zeta\": 1"), "{row1_line}");
+        write_bench_json(&path, "net", &[rec("row2", "x", 3.0)]).unwrap();
+        let second = std::fs::read_to_string(&path).unwrap();
+        assert!(
+            second.contains(&row1_line),
+            "appending run 2 rewrote run 1's row:\n{second}"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn read_bench_rows_upgrades_the_legacy_schema() {
+        // A schema-1 snapshot (top-level bench, no per-row tags) reads back
+        // as run-1 rows of that bench — the committed bootstrap upgrades in
+        // place on the first merged write.
+        let legacy = bench_records_json("coordinator", &[rec("banks=4", "shards", 4.0)]);
+        let rows = read_bench_rows(&legacy);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].bench, "coordinator");
+        assert_eq!(rows[0].run, 1);
+        assert_eq!(rows[0].rec.name, "banks=4");
+        assert_eq!(rows[0].rec.metrics, vec![("shards".to_string(), 4.0)]);
+    }
+
+    #[test]
+    fn read_bench_rows_tolerates_garbage_and_empty_docs() {
+        assert!(read_bench_rows("not json at all").is_empty());
+        assert!(read_bench_rows("{\"schema\": 2}").is_empty());
+        assert!(read_bench_rows("{\"schema\": 2, \"rows\": []}").is_empty());
+    }
+
+    #[test]
+    fn writer_refuses_to_clobber_an_unparseable_snapshot() {
+        // A torn/corrupt file must surface as an error — silently replacing
+        // it would destroy the accumulated trajectory.
+        let path = std::env::temp_dir().join("cscam_bench_torn_test.json");
+        std::fs::write(&path, "{\"schema\": 2, \"rows\": [trunca").unwrap();
+        let err = write_bench_json(&path, "net", &[rec("r", "x", 1.0)]).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert_eq!(
+            std::fs::read_to_string(&path).unwrap(),
+            "{\"schema\": 2, \"rows\": [trunca",
+            "the torn file must be left untouched"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn merged_rows_reserialize_deterministically() {
+        let rows = vec![
+            TaggedRecord { bench: "net".into(), run: 1, rec: rec("a", "x", 1.5) },
+            TaggedRecord { bench: "net".into(), run: 2, rec: rec("b", "y", f64::NAN) },
+        ];
+        let text = bench_rows_json(&rows);
+        let back = read_bench_rows(&text);
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].rec.metrics, vec![("x".to_string(), 1.5)]);
+        assert!(back[1].rec.metrics[0].1.is_nan(), "null round-trips as NaN");
+        assert_eq!(text, bench_rows_json(&back), "emit → parse → emit is a fixed point");
     }
 }

@@ -1,0 +1,105 @@
+//! The crate's one FNV-1a implementation.
+//!
+//! Two subsystems need a stable, dependency-free 64-bit hash with a pinned
+//! byte order: shard placement ([`crate::shard::ShardRouter`] routes a tag
+//! to its owning bank by hashing the packed words) and the wire protocol
+//! ([`crate::net::proto`] checksums every frame).  Both MUST agree across
+//! hosts and across versions — a drifting hash silently re-homes every
+//! stored tag — so the definition lives here exactly once.
+
+use crate::bits::BitVec;
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x1000_0000_01b3;
+
+/// Streaming FNV-1a hasher (for checksumming a frame as it is assembled).
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv1a(u64);
+
+impl Fnv1a {
+    pub fn new() -> Self {
+        Fnv1a(FNV_OFFSET)
+    }
+
+    /// Fold more bytes into the running hash.
+    #[inline]
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    /// The hash of everything updated so far.
+    #[inline]
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// FNV-1a of a byte slice.
+pub fn fnv1a_bytes(bytes: &[u8]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.update(bytes);
+    h.finish()
+}
+
+/// Stable FNV-1a over a tag's packed words (byte order pinned to
+/// little-endian so placement never depends on the host).
+pub fn fnv1a(tag: &BitVec) -> u64 {
+    let mut h = Fnv1a::new();
+    for &w in tag.words() {
+        h.update(&w.to_le_bytes());
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Published FNV-1a 64-bit test vectors.
+        assert_eq!(fnv1a_bytes(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a_bytes(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a_bytes(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn streaming_equals_one_shot() {
+        let mut h = Fnv1a::new();
+        h.update(b"foo");
+        h.update(b"bar");
+        assert_eq!(h.finish(), fnv1a_bytes(b"foobar"));
+    }
+
+    #[test]
+    fn tag_hash_is_the_le_byte_hash_of_its_words() {
+        let t = BitVec::from_u128(0xDEAD_BEEF_0123_4567_89AB_CDEF_0F1E_2D3C, 100);
+        let mut bytes = Vec::new();
+        for &w in t.words() {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        assert_eq!(fnv1a(&t), fnv1a_bytes(&bytes));
+    }
+
+    #[test]
+    fn tag_hashes_differ_across_lengths_of_same_value() {
+        // Length is part of the words() extent, so a zero-extended copy of
+        // the same value hashes differently — placements must not collide
+        // tags of different widths.
+        let a = BitVec::from_u128(7, 64);
+        let b = BitVec::from_u128(7, 128);
+        assert_ne!(fnv1a(&a), fnv1a(&b));
+    }
+}

@@ -4,9 +4,11 @@
 
 pub mod bench;
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod rng;
 
 pub use bench::BenchTimer;
+pub use hash::Fnv1a;
 pub use json::JsonValue;
 pub use rng::Rng;

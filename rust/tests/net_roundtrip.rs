@@ -1,0 +1,353 @@
+//! Loopback integration tests for the network serving layer: wire-protocol
+//! results must be *bit-identical* to in-process `ShardedCamServer`
+//! lookups — same matched global address, same λ, same energy breakdown,
+//! same delay — across all three placement modes and both tag
+//! distributions, with `EngineError::Full` shedding surfaced as a typed
+//! wire error and the load generator emitting a measured bench-JSON row.
+
+use cscam::bits::BitVec;
+use cscam::config::DesignConfig;
+use cscam::coordinator::{BatchPolicy, EngineError};
+use cscam::net::{CamClient, CamTcpServer, LoadGen, NetConfig, NetServerHandle, WireError};
+use cscam::shard::{PlacementMode, ShardedCamServer, ShardedServerHandle};
+use cscam::util::Rng;
+use cscam::workload::{QueryMix, TagDistribution};
+use std::time::Duration;
+
+fn fleet_cfg() -> DesignConfig {
+    // 4 banks × 64 entries = one 256-entry fleet
+    DesignConfig { m: 256, n: 32, zeta: 4, c: 3, l: 4, shards: 4, ..DesignConfig::reference() }
+}
+
+fn policy() -> BatchPolicy {
+    BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(100) }
+}
+
+fn start(
+    mode: PlacementMode,
+    queue_cap: Option<usize>,
+    net: NetConfig,
+) -> (NetServerHandle, ShardedServerHandle, String) {
+    let mut builder = ShardedCamServer::new(&fleet_cfg(), mode, policy());
+    if let Some(cap) = queue_cap {
+        builder = builder.with_queue_capacity(cap);
+    }
+    let fleet = builder.spawn();
+    let server = CamTcpServer::bind(fleet.clone(), "127.0.0.1:0", net).expect("bind loopback");
+    let addr = server.local_addr().expect("local addr").to_string();
+    let handle = server.spawn().expect("spawn server");
+    (handle, fleet, addr)
+}
+
+/// The property: insert a population over the wire, then require every
+/// wire lookup — single and pipelined bulk — to equal the in-process
+/// `ShardedServerHandle` answer on the same fleet, field for field.
+fn wire_matches_inprocess(
+    dist: TagDistribution,
+    seed: u64,
+    mode_for: impl Fn(&[BitVec]) -> PlacementMode,
+) {
+    let mut rng = Rng::seed_from_u64(seed);
+    let tags = dist.sample_distinct(32, 120, &mut rng);
+    let (server, fleet, addr) = start(mode_for(&tags), None, NetConfig::default());
+    let mut client = CamClient::connect(addr).expect("connect");
+    let hello = *client.server_info().expect("hello");
+    assert_eq!(hello.shards, 4);
+    assert_eq!(hello.bank_m, 64);
+    assert_eq!(hello.tag_bits, 32);
+
+    let mut stored = Vec::new();
+    for t in &tags {
+        match client.insert(t) {
+            Ok(g) => {
+                // the wire address is live immediately: in-process sees it
+                assert_eq!(fleet.lookup(t.clone()).unwrap().addr, Some(g as usize));
+                stored.push(t.clone());
+            }
+            Err(WireError::Engine(EngineError::Full)) => {} // skewed bank filled up
+            Err(e) => panic!("insert failed: {e}"),
+        }
+    }
+    assert!(stored.len() >= 90, "only {} of 120 inserts landed", stored.len());
+
+    let mix = QueryMix { hit_ratio: 0.7, zipf_s: 0.0 };
+    let queries: Vec<BitVec> = (0..300).map(|_| mix.sample(&stored, 32, &mut rng).0).collect();
+    let mut hits = 0usize;
+    for q in &queries {
+        let wire = client.lookup(q).expect("wire lookup");
+        let local = fleet.lookup(q.clone()).expect("in-process lookup");
+        assert_eq!(wire, local, "wire outcome must be bit-identical to in-process");
+        hits += wire.addr.is_some() as usize;
+    }
+    assert!((150..260).contains(&hits), "hit mix off: {hits}");
+
+    // pipelined bulk (frames of 32) preserves order and stays identical
+    let bulk = client.lookup_bulk(&queries, 32).expect("bulk");
+    let local_bulk = fleet.lookup_many(queries.clone());
+    assert_eq!(bulk.len(), local_bulk.len());
+    for (i, (w, l)) in bulk.iter().zip(&local_bulk).enumerate() {
+        assert_eq!(
+            w.as_ref().expect("wire bulk item"),
+            l.as_ref().expect("local bulk item"),
+            "bulk item {i} diverged"
+        );
+    }
+
+    client.shutdown().expect("shutdown");
+    server.join();
+}
+
+#[test]
+fn wire_equals_inprocess_uniform_hash() {
+    wire_matches_inprocess(TagDistribution::Uniform, 201, |_| PlacementMode::TagHash);
+}
+
+#[test]
+fn wire_equals_inprocess_uniform_broadcast() {
+    wire_matches_inprocess(TagDistribution::Uniform, 202, |_| PlacementMode::Broadcast);
+}
+
+#[test]
+fn wire_equals_inprocess_uniform_learned() {
+    wire_matches_inprocess(TagDistribution::Uniform, 203, |s| PlacementMode::learned(4, s, 32));
+}
+
+#[test]
+fn wire_equals_inprocess_correlated_hash() {
+    wire_matches_inprocess(
+        TagDistribution::Correlated { fixed_bits: 8, mirror_span: 8 },
+        204,
+        |_| PlacementMode::TagHash,
+    );
+}
+
+#[test]
+fn wire_equals_inprocess_correlated_broadcast() {
+    wire_matches_inprocess(
+        TagDistribution::Correlated { fixed_bits: 8, mirror_span: 8 },
+        205,
+        |_| PlacementMode::Broadcast,
+    );
+}
+
+#[test]
+fn wire_equals_inprocess_correlated_learned() {
+    wire_matches_inprocess(
+        TagDistribution::Correlated { fixed_bits: 8, mirror_span: 8 },
+        206,
+        |s| PlacementMode::learned(4, s, 32),
+    );
+}
+
+#[test]
+fn full_shed_surfaces_as_typed_wire_error() {
+    // queue capacity 0: every lookup sheds at admission, and the shed must
+    // arrive as EngineError::Full through the typed error frame — not as a
+    // transport failure or a silent miss.
+    let (server, _fleet, addr) = start(PlacementMode::TagHash, Some(0), NetConfig::default());
+    let mut client = CamClient::connect(addr).expect("connect");
+    let mut rng = Rng::seed_from_u64(207);
+    let tags = TagDistribution::Uniform.sample_distinct(32, 8, &mut rng);
+    for t in &tags {
+        client.insert(t).expect("inserts are barriers, not shed");
+    }
+    match client.lookup(&tags[0]) {
+        Err(WireError::Engine(EngineError::Full)) => {}
+        other => panic!("expected Full shed, got {other:?}"),
+    }
+    // a whole bulk frame sheds too, expanded per item
+    let bulk = client.lookup_bulk(&tags, 4).expect("bulk transport still fine");
+    assert_eq!(bulk.len(), 8);
+    for r in bulk {
+        assert_eq!(r.unwrap_err(), EngineError::Full);
+    }
+    client.shutdown().expect("shutdown");
+    server.join();
+}
+
+#[test]
+fn engine_errors_cross_the_wire_typed() {
+    let (server, _fleet, addr) = start(PlacementMode::TagHash, None, NetConfig::default());
+    let mut client = CamClient::connect(addr).expect("connect");
+    // bad address
+    match client.delete(999_999) {
+        Err(WireError::Engine(EngineError::BadAddress(a))) => assert_eq!(a, 999_999),
+        other => panic!("expected BadAddress, got {other:?}"),
+    }
+    // tag width mismatch (fleet expects N = 32)
+    let narrow = BitVec::zeros(16);
+    match client.lookup(&narrow) {
+        Err(WireError::Engine(EngineError::TagWidth { got: 16, want: 32 })) => {}
+        other => panic!("expected TagWidth, got {other:?}"),
+    }
+    match client.insert(&narrow) {
+        Err(WireError::Engine(EngineError::TagWidth { .. })) => {}
+        other => panic!("expected TagWidth, got {other:?}"),
+    }
+    client.shutdown().expect("shutdown");
+    server.join();
+}
+
+#[test]
+fn narrow_tag_under_learned_placement_is_a_typed_error_not_a_crash() {
+    // The learned-prefix router reads fixed bit positions, so a too-narrow
+    // tag would panic it; the server must reject the width before routing
+    // and keep the connection serving.
+    let mut rng = Rng::seed_from_u64(212);
+    let sample = TagDistribution::Uniform.sample_distinct(32, 64, &mut rng);
+    let (server, _fleet, addr) =
+        start(PlacementMode::learned(4, &sample, 32), None, NetConfig::default());
+    let mut client = CamClient::connect(addr).expect("connect");
+    let narrow = BitVec::zeros(8);
+    for _ in 0..2 {
+        match client.lookup(&narrow) {
+            Err(WireError::Engine(EngineError::TagWidth { got: 8, want: 32 })) => {}
+            other => panic!("expected TagWidth, got {other:?}"),
+        }
+    }
+    match client.insert(&narrow) {
+        Err(WireError::Engine(EngineError::TagWidth { .. })) => {}
+        other => panic!("expected TagWidth, got {other:?}"),
+    }
+    // a bulk frame holding any bad-width tag is rejected whole, and the
+    // client expands the frame-level error per item
+    let bulk =
+        client.lookup_bulk(&[narrow.clone(), sample[0].clone()], 8).expect("transport ok");
+    assert_eq!(bulk.len(), 2);
+    for r in bulk {
+        assert!(matches!(r, Err(EngineError::TagWidth { .. })), "got {r:?}");
+    }
+    // the same connection still serves well-formed traffic
+    let g = client.insert(&sample[0]).expect("insert after rejects");
+    assert_eq!(client.lookup(&sample[0]).expect("lookup").addr, Some(g as usize));
+    client.shutdown().expect("shutdown");
+    server.join();
+}
+
+#[test]
+fn handshake_rejects_garbage_and_keeps_serving() {
+    use std::io::{Read, Write};
+    let (server, _fleet, addr) = start(PlacementMode::TagHash, None, NetConfig::default());
+    // raw garbage instead of a client hello: the server hangs up…
+    let mut raw = std::net::TcpStream::connect(&addr).expect("raw connect");
+    raw.write_all(b"NOTCSCAM").expect("write garbage");
+    let mut buf = [0u8; 64];
+    let n = raw.read(&mut buf).unwrap_or(0);
+    assert_eq!(n, 0, "server must close on a bad magic, not answer");
+    drop(raw);
+    // …and a well-behaved client still gets served afterwards
+    let mut client = CamClient::connect(addr).expect("connect after garbage");
+    let mut rng = Rng::seed_from_u64(208);
+    let t = TagDistribution::Uniform.sample(32, &mut rng);
+    let g = client.insert(&t).expect("insert");
+    assert_eq!(client.lookup(&t).expect("lookup").addr, Some(g as usize));
+    client.shutdown().expect("shutdown");
+    server.join();
+}
+
+#[test]
+fn connection_cap_answers_busy() {
+    let net = NetConfig { max_connections: 1, ..NetConfig::default() };
+    let (server, _fleet, addr) = start(PlacementMode::TagHash, None, net);
+    let client1 = CamClient::connect(addr.clone()).expect("first connection");
+    // second connection: the hello carries the busy flag
+    match CamClient::connect(addr.clone()) {
+        Err(WireError::Busy) => {}
+        other => panic!("expected Busy, got {:?}", other.map(|_| "connected")),
+    }
+    // freeing the slot lets a new client in (the conn thread notices the
+    // disconnect within its idle poll)
+    drop(client1);
+    let mut ok = false;
+    for _ in 0..100 {
+        std::thread::sleep(Duration::from_millis(20));
+        if let Ok(mut c) = CamClient::connect(addr.clone()) {
+            c.shutdown().expect("shutdown");
+            ok = true;
+            break;
+        }
+    }
+    assert!(ok, "slot never freed after the first client disconnected");
+    server.join();
+}
+
+#[test]
+fn shutdown_drains_and_stops_accepting() {
+    let (server, fleet, addr) = start(PlacementMode::TagHash, None, NetConfig::default());
+    let mut client = CamClient::connect(addr.clone()).expect("connect");
+    let mut rng = Rng::seed_from_u64(209);
+    let tags = TagDistribution::Uniform.sample_distinct(32, 20, &mut rng);
+    for t in &tags {
+        client.insert(t).expect("insert");
+    }
+    for t in &tags {
+        assert!(client.lookup(t).expect("lookup").addr.is_some());
+    }
+    client.shutdown().expect("shutdown ack");
+    server.join();
+    // the fleet behind the server is drained but alive: metrics survive
+    let fm = fleet.fleet_metrics().expect("engines still up");
+    assert_eq!(fm.aggregate.inserts, 20);
+    assert!(fm.aggregate.lookups >= 20);
+    // and the port is closed
+    assert!(
+        std::net::TcpStream::connect(&addr).is_err(),
+        "accept loop must be gone after shutdown"
+    );
+}
+
+#[test]
+fn client_reconnects_on_demand() {
+    let (server, _fleet, addr) = start(PlacementMode::TagHash, None, NetConfig::default());
+    let mut client = CamClient::connect(addr).expect("connect");
+    let mut rng = Rng::seed_from_u64(210);
+    let t = TagDistribution::Uniform.sample(32, &mut rng);
+    let g = client.insert(&t).expect("insert");
+    client.reconnect().expect("reconnect");
+    assert_eq!(client.lookup(&t).expect("lookup on fresh conn").addr, Some(g as usize));
+    client.shutdown().expect("shutdown");
+    server.join();
+}
+
+#[test]
+fn loadgen_emits_a_measured_bench_row() {
+    use cscam::util::bench::{read_bench_rows, write_bench_json};
+
+    let (server, _fleet, addr) = start(PlacementMode::TagHash, None, NetConfig::default());
+    let driver = LoadGen {
+        addr: addr.clone(),
+        threads: 2,
+        lookups: 2_000,
+        chunk: 64,
+        hit_ratio: 0.9,
+        population: 120,
+        seed: 211,
+    };
+    let report = driver.run().expect("loadgen run");
+    assert_eq!(report.lookups, 2_000);
+    assert!(report.hit_ratio() > 0.5, "hit ratio {}", report.hit_ratio());
+    assert!(report.throughput_lps > 0.0);
+    assert!(report.mean_energy_fj > 0.0, "wire outcomes must carry the energy model");
+
+    // the row lands in the merged bench-JSON trajectory under the net tag
+    let path = std::env::temp_dir().join("cscam_net_roundtrip_bench.json");
+    let _ = std::fs::remove_file(&path);
+    write_bench_json(&path, "net", &[report.to_record()]).expect("write row");
+    let rows = read_bench_rows(&std::fs::read_to_string(&path).expect("read back"));
+    assert_eq!(rows.len(), 1);
+    assert_eq!(rows[0].bench, "net");
+    assert!(rows[0].rec.name.starts_with("net/shards=4"));
+    let tp = rows[0]
+        .rec
+        .metrics
+        .iter()
+        .find(|(k, _)| k == "throughput_lps")
+        .expect("throughput metric")
+        .1;
+    assert!(tp > 0.0, "measured throughput must be positive");
+    let _ = std::fs::remove_file(&path);
+
+    let mut c = CamClient::connect(addr).expect("connect");
+    c.shutdown().expect("shutdown");
+    server.join();
+}
