@@ -149,6 +149,44 @@ impl BitVec {
         })
     }
 
+    /// Serialize to bytes: the packed words in ascending order, each as 8
+    /// little-endian bytes — `ceil(len/64) * 8` bytes total, independent of
+    /// host endianness.  The inverse is [`Self::from_bytes`]; the snapshot
+    /// and WAL encodings ([`crate::store`]) depend on this layout being
+    /// exact and stable.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.words.len() * 8);
+        for &w in &self.words {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+
+    /// Deserialize from the [`Self::to_bytes`] layout, validating strictly:
+    /// the byte count must be exactly `ceil(len/64) * 8`, and any set bit in
+    /// the tail slack past `len` is rejected rather than masked — slack
+    /// garbage in a stored image means the producer (or the medium) is
+    /// corrupt, and masking it would let a damaged file decode "cleanly".
+    pub fn from_bytes(bytes: &[u8], len: usize) -> Result<Self, FromBytesError> {
+        let expected = len.div_ceil(64) * 8;
+        if bytes.len() != expected {
+            return Err(FromBytesError::LengthMismatch { expected, got: bytes.len() });
+        }
+        let mut v = BitVec::zeros(len);
+        for (w, chunk) in v.words.iter_mut().zip(bytes.chunks_exact(8)) {
+            *w = u64::from_le_bytes(chunk.try_into().expect("chunks_exact yields 8 bytes"));
+        }
+        let rem = len % 64;
+        if rem != 0 {
+            if let Some(&last) = v.words.last() {
+                if last & !((1u64 << rem) - 1) != 0 {
+                    return Err(FromBytesError::TailBitsSet { len });
+                }
+            }
+        }
+        Ok(v)
+    }
+
     /// Raw word access (hot-path decode loops).
     #[inline]
     pub fn words(&self) -> &[u64] {
@@ -161,6 +199,30 @@ impl BitVec {
         &mut self.words
     }
 }
+
+/// Why [`BitVec::from_bytes`] refused the input.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FromBytesError {
+    /// The byte slice is not exactly `ceil(len/64) * 8` bytes.
+    LengthMismatch { expected: usize, got: usize },
+    /// A bit past `len` is set in the last word (tail-slack garbage).
+    TailBitsSet { len: usize },
+}
+
+impl std::fmt::Display for FromBytesError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FromBytesError::LengthMismatch { expected, got } => {
+                write!(f, "expected {expected} bytes, got {got}")
+            }
+            FromBytesError::TailBitsSet { len } => {
+                write!(f, "set bits past the {len}-bit length")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FromBytesError {}
 
 #[cfg(test)]
 mod tests {
@@ -246,6 +308,72 @@ mod tests {
             v.set(i, false);
         }
         assert_eq!(v.count_ones(), 35);
+    }
+
+    #[test]
+    fn byte_roundtrip_at_word_boundaries() {
+        // the lengths the snapshot codec cares about: empty, single-bit,
+        // one-under/at/over a word boundary, and two full words
+        for len in [0usize, 1, 63, 64, 65, 127, 128] {
+            let mut v = BitVec::zeros(len);
+            for i in (0..len).step_by(7) {
+                v.set(i, true);
+            }
+            if len > 0 {
+                v.set(len - 1, true); // exercise the highest legal bit
+            }
+            let bytes = v.to_bytes();
+            assert_eq!(bytes.len(), len.div_ceil(64) * 8, "len={len}");
+            assert_eq!(BitVec::from_bytes(&bytes, len).unwrap(), v, "len={len}");
+        }
+    }
+
+    #[test]
+    fn from_bytes_rejects_wrong_byte_count() {
+        for len in [0usize, 1, 63, 64, 65, 127, 128] {
+            let good = BitVec::zeros(len).to_bytes();
+            let mut long = good.clone();
+            long.push(0);
+            if len > 0 {
+                let mut short = good.clone();
+                short.pop();
+                assert!(
+                    matches!(
+                        BitVec::from_bytes(&short, len),
+                        Err(FromBytesError::LengthMismatch { .. })
+                    ),
+                    "len={len} short"
+                );
+            }
+            assert!(
+                matches!(
+                    BitVec::from_bytes(&long, len),
+                    Err(FromBytesError::LengthMismatch { .. })
+                ),
+                "len={len} long"
+            );
+        }
+    }
+
+    #[test]
+    fn from_bytes_rejects_tail_slack_garbage() {
+        // for every non-word-multiple length, a set bit just past `len`
+        // must be rejected, not silently masked
+        for len in [1usize, 63, 65, 127] {
+            let mut bytes = BitVec::zeros(len).to_bytes();
+            let slack_bit = len % 64; // first illegal bit within the last word
+            let last_word_byte = (len / 64) * 8 + slack_bit / 8;
+            bytes[last_word_byte] |= 1 << (slack_bit % 8);
+            assert!(
+                matches!(BitVec::from_bytes(&bytes, len), Err(FromBytesError::TailBitsSet { .. })),
+                "len={len}"
+            );
+        }
+        // word-multiple lengths have no slack: every bit pattern is legal
+        for len in [64usize, 128] {
+            let bytes = vec![0xFFu8; len / 8];
+            assert_eq!(BitVec::from_bytes(&bytes, len).unwrap().count_ones(), len);
+        }
     }
 
     #[test]

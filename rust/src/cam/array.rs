@@ -36,6 +36,44 @@ impl CamArray {
         }
     }
 
+    /// Rebuild from persisted rows + valid bits (the snapshot restore
+    /// path).  Returns an error instead of panicking — the inputs may come
+    /// from a corrupt file, and the store layer turns the message into a
+    /// typed `StoreError::Corrupt`.
+    pub fn from_parts(
+        n: usize,
+        zeta: usize,
+        tags: Vec<BitVec>,
+        valid: BitVec,
+    ) -> Result<Self, String> {
+        let m = tags.len();
+        if m == 0 || n == 0 {
+            return Err("M and N must be positive".into());
+        }
+        if zeta == 0 || m % zeta != 0 {
+            return Err(format!("ζ={zeta} must divide M={m}"));
+        }
+        if valid.len() != m {
+            return Err(format!("valid bits length {} != M={m}", valid.len()));
+        }
+        if let Some((a, t)) = tags.iter().enumerate().find(|(_, t)| t.len() != n) {
+            return Err(format!("tag at address {a} is {} bits, expected N={n}", t.len()));
+        }
+        Ok(CamArray { n, zeta, tags, valid })
+    }
+
+    /// All stored rows, including residual contents of invalidated slots
+    /// (the snapshot encoder dumps them verbatim; invalid rows never
+    /// influence a search result).
+    pub fn tags(&self) -> &[BitVec] {
+        &self.tags
+    }
+
+    /// The valid bits, one per entry.
+    pub fn valid_bits(&self) -> &BitVec {
+        &self.valid
+    }
+
     /// Number of entries (M).
     pub fn m(&self) -> usize {
         self.tags.len()

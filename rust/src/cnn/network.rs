@@ -42,6 +42,31 @@ impl ClusteredNetwork {
         Self::new(cfg.c, cfg.l, cfg.m, cfg.zeta)
     }
 
+    /// Rebuild from persisted weight rows (the snapshot restore path).
+    /// Returns an error instead of panicking — the rows may come from a
+    /// corrupt file.
+    pub fn from_rows(
+        c: usize,
+        l: usize,
+        m: usize,
+        zeta: usize,
+        rows: Vec<BitVec>,
+    ) -> Result<Self, String> {
+        if c == 0 || !l.is_power_of_two() {
+            return Err(format!("bad cluster geometry: c={c}, l={l}"));
+        }
+        if m == 0 || zeta == 0 || m % zeta != 0 {
+            return Err(format!("ζ={zeta} must divide M={m}"));
+        }
+        if rows.len() != c * l {
+            return Err(format!("{} weight rows, expected c·l={}", rows.len(), c * l));
+        }
+        if let Some((i, r)) = rows.iter().enumerate().find(|(_, r)| r.len() != m) {
+            return Err(format!("weight row {i} is {} bits, expected M={m}", r.len()));
+        }
+        Ok(ClusteredNetwork { c, l, m, zeta, rows })
+    }
+
     pub fn c(&self) -> usize {
         self.c
     }

@@ -22,6 +22,12 @@ pub enum EngineError {
     /// The serving thread is gone (its channel disconnected) — reported by
     /// [`crate::coordinator::ServerHandle`] when the engine cannot answer.
     Shutdown,
+    /// The durability layer failed to log the mutation (disk full, I/O
+    /// error).  A failed insert is rolled back out of the in-memory engine
+    /// (so it cannot resurface via a later snapshot and a retry cannot
+    /// duplicate it); a failed delete may have applied in memory, but
+    /// deletes are idempotent so a retry converges.
+    Persist(String),
 }
 
 impl std::fmt::Display for EngineError {
@@ -33,6 +39,7 @@ impl std::fmt::Display for EngineError {
                 write!(f, "tag width {got}, expected {want}")
             }
             EngineError::Shutdown => write!(f, "server has shut down"),
+            EngineError::Persist(m) => write!(f, "durability layer failed: {m}"),
         }
     }
 }
@@ -75,6 +82,13 @@ pub struct LookupEngine {
     /// Deletes since the last retrain leave stale weights (superposition);
     /// they only cost energy, never correctness.
     stale_deletes: usize,
+    /// Insert cursor: every slot below this index is occupied, so the
+    /// lowest-free-slot scan of [`Self::insert`] starts here instead of at
+    /// zero.  The hint is conservative (it may lag behind the true
+    /// frontier after a WAL replay), which never changes which address an
+    /// insert picks — only how far it scans.  Persisted by the snapshot
+    /// codec ([`crate::store::snapshot`]).
+    first_free: usize,
     /// Retrain when stale deletes exceed this fraction of M (0 disables).
     pub retrain_threshold: f64,
     // scratch buffers (hot path, allocation-free)
@@ -104,11 +118,94 @@ impl LookupEngine {
             delay,
             live: vec![None; m],
             stale_deletes: 0,
+            first_free: 0,
             retrain_threshold: 0.25,
             act: BitVec::zeros(m),
             enables: BitVec::zeros(beta),
             idx: Vec::new(),
         }
+    }
+
+    /// Rebuild an engine from persisted state — the restore half of the
+    /// snapshot codec ([`crate::store::snapshot::BankImage`]).  All inputs
+    /// are validated (they may come from a corrupt file); on success the
+    /// engine is field-for-field identical to the one the image was taken
+    /// from: same matches, λ, energy and delay for every tag.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        cfg: DesignConfig,
+        selection: Selection,
+        net: ClusteredNetwork,
+        cam: CamArray,
+        stale_deletes: usize,
+        retrain_threshold: f64,
+        insert_cursor: usize,
+    ) -> Result<Self, String> {
+        cfg.validate().map_err(|e| format!("invalid design config: {e}"))?;
+        if selection.q() != cfg.q() || selection.c() != cfg.c || selection.k() != cfg.k() {
+            return Err(format!(
+                "selection geometry (q={}, c={}, k={}) does not match the config (q={}, c={}, k={})",
+                selection.q(),
+                selection.c(),
+                selection.k(),
+                cfg.q(),
+                cfg.c,
+                cfg.k()
+            ));
+        }
+        if let Some(&p) = selection.positions().iter().find(|&&p| p >= cfg.n) {
+            return Err(format!("selection position {p} out of range for N={}", cfg.n));
+        }
+        if net.c() != cfg.c || net.l() != cfg.l || net.m() != cfg.m || net.zeta() != cfg.zeta {
+            return Err(format!(
+                "network geometry ({}x{} rows of {} bits, ζ={}) does not match the config",
+                net.c(),
+                net.l(),
+                net.m(),
+                net.zeta()
+            ));
+        }
+        if cam.m() != cfg.m || cam.n() != cfg.n || cam.zeta() != cfg.zeta {
+            return Err(format!(
+                "CAM geometry ({}x{}, ζ={}) does not match the config",
+                cam.m(),
+                cam.n(),
+                cam.zeta()
+            ));
+        }
+        if insert_cursor > cfg.m {
+            return Err(format!("insert cursor {insert_cursor} past M={}", cfg.m));
+        }
+        if let Some(free) = (0..insert_cursor).find(|&a| cam.read(a).is_none()) {
+            return Err(format!(
+                "insert cursor {insert_cursor} claims slot {free} is occupied, but it is free"
+            ));
+        }
+        if !retrain_threshold.is_finite() || retrain_threshold < 0.0 {
+            return Err(format!("retrain threshold {retrain_threshold} out of range"));
+        }
+        // `live` is derived state: valid slot ⇔ live association, and the
+        // cluster indices are a pure function of the stored tag.
+        let live: Vec<Option<Vec<u16>>> =
+            (0..cfg.m).map(|a| cam.read(a).map(|t| selection.apply(t))).collect();
+        let energy = EnergyModel::new(cfg.clone());
+        let delay = proposed_delay(&cfg, &DelayConstants::reference());
+        let (m, beta) = (cfg.m, cfg.beta());
+        Ok(LookupEngine {
+            cfg,
+            selection,
+            net,
+            cam,
+            energy,
+            delay,
+            live,
+            stale_deletes,
+            first_free: insert_cursor,
+            retrain_threshold,
+            act: BitVec::zeros(m),
+            enables: BitVec::zeros(beta),
+            idx: Vec::new(),
+        })
     }
 
     /// Build with the default strided bit selection (§II-B: spread the q
@@ -135,12 +232,36 @@ impl LookupEngine {
         self.cam.occupancy()
     }
 
-    /// Insert a tag into the lowest free slot; returns the address.
+    /// The CAM array (snapshot encoding reads tags + valid bits off it).
+    pub fn cam(&self) -> &CamArray {
+        &self.cam
+    }
+
+    /// The clustered network (snapshot encoding reads the weight rows).
+    pub fn network(&self) -> &ClusteredNetwork {
+        &self.net
+    }
+
+    /// Deletes since the last retrain (persisted so a recovered engine
+    /// triggers its next retrain at exactly the same point).
+    pub fn stale_delete_count(&self) -> usize {
+        self.stale_deletes
+    }
+
+    /// The lowest-free-slot scan hint (see [`Self::insert`]).
+    pub fn insert_cursor(&self) -> usize {
+        self.first_free
+    }
+
+    /// Insert a tag into the lowest free slot; returns the address.  The
+    /// scan starts at the insert cursor (every lower slot is occupied), so
+    /// sequential fills are O(1) per insert instead of O(M).
     pub fn insert(&mut self, tag: &BitVec) -> Result<usize, EngineError> {
-        let addr = (0..self.cfg.m)
+        let addr = (self.first_free..self.cfg.m)
             .find(|&a| self.live[a].is_none() && self.cam.read(a).is_none())
             .ok_or(EngineError::Full)?;
         self.insert_at(addr, tag)?;
+        self.first_free = addr + 1;
         Ok(addr)
     }
 
@@ -174,6 +295,7 @@ impl LookupEngine {
         }
         if self.live[addr].take().is_some() {
             self.cam.erase(addr);
+            self.first_free = self.first_free.min(addr);
             self.stale_deletes += 1;
             self.maybe_retrain();
         }
@@ -414,6 +536,73 @@ mod tests {
         let mut rng = Rng::seed_from_u64(123);
         let t = crate::workload::random_tag(e.config().n, &mut rng);
         assert_eq!(e.insert(&t), Err(EngineError::Full));
+    }
+
+    #[test]
+    fn insert_cursor_still_picks_lowest_free_slot() {
+        let mut e = small_engine();
+        fill(&mut e, 10, 9);
+        assert_eq!(e.insert_cursor(), 10);
+        e.delete(7).unwrap();
+        e.delete(3).unwrap();
+        assert_eq!(e.insert_cursor(), 3, "delete lowers the hint to the freed slot");
+        let mut rng = Rng::seed_from_u64(55);
+        let t1 = crate::workload::random_tag(e.config().n, &mut rng);
+        let t2 = crate::workload::random_tag(e.config().n, &mut rng);
+        assert_eq!(e.insert(&t1).unwrap(), 3, "lowest free slot first");
+        assert_eq!(e.insert(&t2).unwrap(), 7);
+    }
+
+    #[test]
+    fn from_parts_rebuilds_a_bit_identical_engine() {
+        let mut e = small_engine();
+        e.retrain_threshold = 0.0;
+        let tags = fill(&mut e, 20, 10);
+        e.delete(5).unwrap();
+        let mut rebuilt = LookupEngine::from_parts(
+            e.config().clone(),
+            e.selection().clone(),
+            e.network().clone(),
+            e.cam().clone(),
+            e.stale_delete_count(),
+            e.retrain_threshold,
+            e.insert_cursor(),
+        )
+        .unwrap();
+        assert_eq!(rebuilt.occupancy(), e.occupancy());
+        assert_eq!(rebuilt.insert_cursor(), e.insert_cursor());
+        for t in &tags {
+            assert_eq!(e.lookup(t).unwrap(), rebuilt.lookup(t).unwrap());
+        }
+    }
+
+    #[test]
+    fn from_parts_rejects_inconsistent_state() {
+        let e = small_engine();
+        let cfg = e.config().clone();
+        // a cursor claiming occupancy over free slots must be rejected
+        assert!(LookupEngine::from_parts(
+            cfg.clone(),
+            e.selection().clone(),
+            e.network().clone(),
+            e.cam().clone(),
+            0,
+            0.25,
+            5,
+        )
+        .is_err());
+        // mismatched CAM geometry
+        let wrong_cam = CamArray::new(cfg.m * 2, cfg.n, cfg.zeta);
+        assert!(LookupEngine::from_parts(
+            cfg.clone(),
+            e.selection().clone(),
+            e.network().clone(),
+            wrong_cam,
+            0,
+            0.25,
+            0,
+        )
+        .is_err());
     }
 
     #[test]

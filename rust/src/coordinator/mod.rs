@@ -32,5 +32,6 @@ pub use batcher::{BatchPolicy, Batcher};
 pub use engine::{EngineError, LookupEngine, LookupOutcome};
 pub use metrics::Metrics;
 pub use server::{
-    CamServer, DecodeBackend, PendingBulk, PendingLookup, ServerHandle, DEFAULT_QUEUE_CAPACITY,
+    CamServer, DecodeBackend, PendingBulk, PendingLookup, PendingPersist, PersistError,
+    ServerHandle, DEFAULT_QUEUE_CAPACITY,
 };

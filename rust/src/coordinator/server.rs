@@ -21,6 +21,7 @@ use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::engine::{EngineError, LookupEngine, LookupOutcome};
 use crate::coordinator::metrics::Metrics;
 use crate::runtime::DecodeOutput;
+use crate::store::{BankStore, StoreError};
 #[cfg(feature = "pjrt")]
 use crate::runtime::ArtifactStore;
 
@@ -80,6 +81,46 @@ enum Request {
     Delete { addr: usize, resp: mpsc::SyncSender<Result<(), EngineError>> },
     Metrics { resp: mpsc::SyncSender<Box<Metrics>> },
     Drain { resp: mpsc::SyncSender<()> },
+    /// Durability barrier: fsync the WAL (`snapshot: false`) or snapshot +
+    /// truncate it (`snapshot: true`).  `Ok(false)` means the bank serves
+    /// without a store attached (nothing to persist).
+    Persist { snapshot: bool, resp: mpsc::SyncSender<Result<bool, StoreError>> },
+}
+
+/// Why a persistence request ([`ServerHandle::flush_store`] /
+/// [`ServerHandle::snapshot_store`]) failed.
+#[derive(Debug)]
+pub enum PersistError {
+    /// The engine thread is gone.
+    Shutdown,
+    /// The durability layer itself failed.
+    Store(StoreError),
+}
+
+impl std::fmt::Display for PersistError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PersistError::Shutdown => write!(f, "server has shut down"),
+            PersistError::Store(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for PersistError {}
+
+/// An enqueued persist barrier that has not been awaited yet — the scatter
+/// half of a fleet-wide flush/snapshot: fire one per bank so the banks
+/// fsync or snapshot *concurrently*, then wait (a sequential barrier per
+/// bank would serialize S full-bank snapshots behind one connection).
+pub struct PendingPersist {
+    rx: mpsc::Receiver<Result<bool, StoreError>>,
+}
+
+impl PendingPersist {
+    /// Block until the bank's engine thread finishes the persist barrier.
+    pub fn wait(self) -> Result<bool, PersistError> {
+        self.rx.recv().map_err(|_| PersistError::Shutdown)?.map_err(PersistError::Store)
+    }
 }
 
 /// A lookup that has been enqueued but not yet answered — the scatter half
@@ -224,6 +265,34 @@ impl ServerHandle {
             let _ = rx.recv();
         }
     }
+
+    /// Fsync the bank's WAL.  `Ok(true)` once everything acknowledged so
+    /// far is on disk; `Ok(false)` when the bank serves without a store.
+    /// Runs as a barrier, so it orders after every prior mutation.
+    pub fn flush_store(&self) -> Result<bool, PersistError> {
+        self.persist(false)
+    }
+
+    /// Force a compaction: snapshot the bank and truncate its WAL.
+    /// `Ok(false)` when the bank serves without a store.
+    pub fn snapshot_store(&self) -> Result<bool, PersistError> {
+        self.persist(true)
+    }
+
+    /// Enqueue a persist barrier without waiting (scatter half; see
+    /// [`PendingPersist`]).  `snapshot: false` fsyncs the WAL,
+    /// `snapshot: true` compacts.
+    pub fn persist_deferred(&self, snapshot: bool) -> Result<PendingPersist, PersistError> {
+        let (resp, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request::Persist { snapshot, resp })
+            .map_err(|_| PersistError::Shutdown)?;
+        Ok(PendingPersist { rx })
+    }
+
+    fn persist(&self, snapshot: bool) -> Result<bool, PersistError> {
+        self.persist_deferred(snapshot)?.wait()
+    }
 }
 
 /// Default admission cap for [`ServerHandle::try_lookup`] — deep enough
@@ -244,6 +313,9 @@ pub struct CamServer {
     /// batched decode.  (Only read by the `pjrt` decode path.)
     #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     weights_dirty: bool,
+    /// Optional durability: mutations are logged here inside the same
+    /// barrier that applies them, before the acknowledgement is sent.
+    store: Option<BankStore>,
 }
 
 impl CamServer {
@@ -262,7 +334,18 @@ impl CamServer {
             queue_depth: Arc::new(AtomicUsize::new(0)),
             queue_cap: DEFAULT_QUEUE_CAPACITY,
             weights_dirty: true,
+            store: None,
         }
+    }
+
+    /// Attach a durability store: every acknowledged insert/delete is
+    /// logged to its WAL first, compaction runs automatically past the
+    /// store's threshold, and the WAL is flushed when the serve loop
+    /// exits.  The store must have been recovered against the same engine
+    /// this server wraps (see [`crate::store::BankStore::open`]).
+    pub fn with_store(mut self, store: BankStore) -> Self {
+        self.store = Some(store);
+        self
     }
 
     /// Cap the admission queue: [`ServerHandle::try_lookup`] sheds with
@@ -300,6 +383,18 @@ impl CamServer {
     }
 
     fn run(mut self, rx: mpsc::Receiver<Request>) {
+        self.serve_loop(&rx);
+        // All handles are gone: whatever was acknowledged is already
+        // written through to the OS, but honor the fsync contract one last
+        // time so a clean exit leaves nothing pending a power cycle.
+        if let Some(store) = self.store.as_mut() {
+            if let Err(e) = store.flush() {
+                eprintln!("cscam-server: WAL flush on exit failed: {e}");
+            }
+        }
+    }
+
+    fn serve_loop(&mut self, rx: &mpsc::Receiver<Request>) {
         let mut batcher: Batcher<(BitVec, Instant, LookupResp)> = Batcher::new(self.policy);
         loop {
             let req = match batcher.deadline() {
@@ -385,22 +480,56 @@ impl CamServer {
     }
 
     /// Handle a non-lookup request (the pending batch is already flushed).
+    /// Mutations follow the one persist policy of
+    /// [`crate::store::log_applied_insert`] /
+    /// [`crate::store::log_applied_delete`] — shared with [`DurableBank`]
+    /// so the threaded and synchronous paths cannot drift.
+    ///
+    /// [`DurableBank`]: crate::store::DurableBank
     fn handle_barrier(&mut self, req: Request) {
         match req {
             Request::Insert { tag, resp } => {
-                let r = self.engine.insert(&tag);
-                if r.is_ok() {
-                    self.metrics.inserts += 1;
-                    self.weights_dirty = true;
-                }
+                let r = match self.engine.insert(&tag) {
+                    Ok(addr) => {
+                        // the engine mutated whether or not the log keeps
+                        // up (a failed append rolls it back, which is a
+                        // further mutation)
+                        self.weights_dirty = true;
+                        match self.store.as_mut() {
+                            None => Ok(addr),
+                            Some(store) => {
+                                crate::store::log_applied_insert(
+                                    store,
+                                    &mut self.engine,
+                                    addr,
+                                    &tag,
+                                )
+                                .map(|()| addr)
+                            }
+                        }
+                        .map(|addr| {
+                            self.metrics.inserts += 1;
+                            addr
+                        })
+                    }
+                    Err(e) => Err(e),
+                };
                 let _ = resp.send(r);
             }
             Request::Delete { addr, resp } => {
-                let r = self.engine.delete(addr);
-                if r.is_ok() {
-                    self.metrics.deletes += 1;
-                    self.weights_dirty = true;
-                }
+                let r = match self.engine.delete(addr) {
+                    Ok(()) => {
+                        self.weights_dirty = true;
+                        match self.store.as_mut() {
+                            None => Ok(()),
+                            Some(store) => {
+                                crate::store::log_applied_delete(store, &self.engine, addr)
+                            }
+                        }
+                        .map(|()| self.metrics.deletes += 1)
+                    }
+                    Err(e) => Err(e),
+                };
                 let _ = resp.send(r);
             }
             Request::BulkLookup { tags, enqueued, resp } => {
@@ -412,6 +541,20 @@ impl CamServer {
             }
             Request::Drain { resp } => {
                 let _ = resp.send(());
+            }
+            Request::Persist { snapshot, resp } => {
+                let r = match self.store.as_mut() {
+                    None => Ok(false),
+                    Some(store) => {
+                        let res =
+                            if snapshot { store.compact(&self.engine) } else { store.flush() };
+                        res.map(|()| true)
+                    }
+                };
+                if let Err(e) = &r {
+                    eprintln!("cscam-server: persist barrier failed: {e}");
+                }
+                let _ = resp.send(r);
             }
             Request::Lookup { .. } => unreachable!("lookups are batched, not barriers"),
         }
@@ -593,6 +736,58 @@ mod tests {
             assert_eq!(r.as_ref().unwrap().addr, singles[i], "order must be preserved");
         }
         assert!(h.lookup_many(Vec::new()).is_empty());
+    }
+
+    #[test]
+    fn persist_without_a_store_is_a_no_op_ack() {
+        let server = CamServer::new(DesignConfig::small_test(), DecodeBackend::Native, policy());
+        let h = server.spawn();
+        assert!(!h.flush_store().unwrap(), "no store: flush acks false");
+        assert!(!h.snapshot_store().unwrap(), "no store: snapshot acks false");
+    }
+
+    #[test]
+    fn persist_with_a_store_logs_before_the_ack() {
+        let dir = std::env::temp_dir()
+            .join(format!("cscam-coord-{}", std::process::id()))
+            .join("persist");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = DesignConfig::small_test();
+        let opts = crate::store::StoreOptions::default();
+        let (bank, _) = crate::store::DurableBank::open(&dir, cfg.clone(), opts).unwrap();
+        let (engine, store) = bank.into_parts();
+        let h = CamServer::with_engine(engine, DecodeBackend::Native, policy())
+            .with_store(store)
+            .spawn();
+        let mut rng = Rng::seed_from_u64(31);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 6, &mut rng);
+        for t in &tags {
+            h.insert(t.clone()).unwrap();
+        }
+        h.delete(1).unwrap();
+        assert!(h.flush_store().unwrap());
+        // acked mutations are already on disk: a reopen replays all of them
+        let (bank, report) =
+            crate::store::DurableBank::open(&dir, cfg, crate::store::StoreOptions::default())
+                .unwrap();
+        assert_eq!(report.wal_records, 7);
+        assert_eq!(bank.occupancy(), 5);
+        // a forced snapshot truncates the log
+        assert!(h.snapshot_store().unwrap());
+        drop(bank);
+    }
+
+    #[test]
+    fn dropped_server_reports_persist_shutdown() {
+        let (tx, rx) = mpsc::channel();
+        drop(rx);
+        let h = ServerHandle {
+            tx,
+            depth: Arc::new(AtomicUsize::new(0)),
+            cap: DEFAULT_QUEUE_CAPACITY,
+        };
+        assert!(matches!(h.flush_store(), Err(PersistError::Shutdown)));
+        assert!(matches!(h.snapshot_store(), Err(PersistError::Shutdown)));
     }
 
     #[test]

@@ -41,6 +41,9 @@
 //! - [`net`] — the L5 network layer: a versioned length-prefixed wire
 //!   protocol plus a `std::net` TCP server, client and load generator
 //!   that put the sharded fleet on the network.
+//! - [`store`] — the L6 durability layer: per-bank snapshot + write-ahead
+//!   log with crash recovery, compaction and a fleet manifest, so a
+//!   restarted fleet comes back bit-identical (`serve --data-dir`).
 
 pub mod baselines;
 pub mod bits;
@@ -53,6 +56,7 @@ pub mod net;
 pub mod runtime;
 pub mod shard;
 pub mod stats;
+pub mod store;
 pub mod sweep;
 pub mod tech;
 pub mod timing;

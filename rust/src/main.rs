@@ -50,6 +50,10 @@ COMMANDS:
            picks an ephemeral port) --max-conns N --port-file PATH
           (starts empty; clients insert over the wire; blocks until a
            wire Shutdown request arrives)
+          durability:           --data-dir PATH (per-bank snapshot + WAL;
+           a restart recovers every acknowledged write bit-identically)
+           --fsync never|always|N (N = fsync every N appends; default never)
+           --compact-bytes N (snapshot + truncate past N WAL bytes)
   loadgen drive a listening server over the wire protocol
                                 --connect ADDR --lookups N --threads T
                                 --chunk C --hit-ratio R --population P
@@ -435,6 +439,7 @@ fn serve_sharded(
 fn serve_listen(cfg: &DesignConfig, args: &Args) -> Result<()> {
     use cscam::net::{CamTcpServer, NetConfig};
     use cscam::shard::{PlacementMode, ShardedCamServer};
+    use cscam::store::{FsyncPolicy, StoreOptions};
 
     let listen = args.get("listen").expect("checked by caller");
     let shards: usize = args.get_parse("shards", cfg.shards)?;
@@ -442,6 +447,16 @@ fn serve_listen(cfg: &DesignConfig, args: &Args) -> Result<()> {
     let max_conns: usize = args.get_parse("max-conns", 64)?;
     let seed: u64 = args.get_parse("seed", 7)?;
     let placement = args.get("placement").unwrap_or("hash");
+    let data_dir = args.get("data-dir");
+    let fsync = match args.get("fsync").unwrap_or("never") {
+        "never" => FsyncPolicy::Never,
+        "always" => FsyncPolicy::Always,
+        n => FsyncPolicy::EveryN(
+            n.parse().map_err(|_| anyhow::anyhow!("--fsync takes never|always|N, got '{n}'"))?,
+        ),
+    };
+    let store_opts =
+        StoreOptions { fsync, compact_bytes: args.get_parse("compact-bytes", 4 << 20)? };
 
     let mut fleet_cfg = cfg.clone();
     fleet_cfg.shards = shards;
@@ -465,7 +480,17 @@ fn serve_listen(cfg: &DesignConfig, args: &Args) -> Result<()> {
     };
 
     let policy = BatchPolicy { max_batch, ..Default::default() };
-    let fleet = ShardedCamServer::new(&fleet_cfg, mode, policy).spawn();
+    let fleet = match data_dir {
+        Some(dir) => {
+            let dir = std::path::Path::new(dir);
+            let (server, recovery) =
+                ShardedCamServer::open_durable(&fleet_cfg, mode, policy, dir, store_opts)
+                    .map_err(|e| anyhow::anyhow!("opening --data-dir {}: {e}", dir.display()))?;
+            println!("# data-dir {}: {}", dir.display(), recovery.summary());
+            server.spawn()
+        }
+        None => ShardedCamServer::new(&fleet_cfg, mode, policy).spawn(),
+    };
     let server = CamTcpServer::bind(
         fleet.clone(),
         listen,

@@ -312,6 +312,26 @@ impl CamClient {
         }
     }
 
+    /// Force a fleet-wide compaction: every bank snapshots its state and
+    /// truncates its WAL.  Idempotent (compacting twice is a no-op), so
+    /// transport failures auto-retry.  Acks (without snapshotting) on a
+    /// fleet serving without `--data-dir`.
+    pub fn snapshot(&mut self) -> Result<(), WireError> {
+        match self.call_idempotent(&Request::Snapshot)? {
+            Response::Snapshotted => Ok(()),
+            other => unexpected(other),
+        }
+    }
+
+    /// Fsync every bank's WAL: after the ack, every acknowledged mutation
+    /// is on disk.  Idempotent, auto-retried.
+    pub fn flush(&mut self) -> Result<(), WireError> {
+        match self.call_idempotent(&Request::Flush)? {
+            Response::Flushed => Ok(()),
+            other => unexpected(other),
+        }
+    }
+
     /// Ask the server to drain and stop; the ack means all accepted work
     /// is done.  The connection is unusable afterwards.
     pub fn shutdown(&mut self) -> Result<(), WireError> {

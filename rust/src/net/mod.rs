@@ -10,11 +10,13 @@
 //!   the full [`crate::shard::ShardedOutcome`] — matched global address,
 //!   λ, energy breakdown, delay — bit-identical to an in-process lookup.
 //!   Engine failures (including [`crate::coordinator::EngineError::Full`]
-//!   shed-on-overload) map to typed error codes.
+//!   shed-on-overload) map to typed error codes, and the v2 durability
+//!   ops `Snapshot`/`Flush` let an operator compact or fsync the fleet's
+//!   stores ([`crate::store`]) over the wire.
 //! * [`server`] — [`CamTcpServer`]: thread-per-connection serving over a
 //!   [`crate::shard::ShardedServerHandle`], with a connection cap,
 //!   buffered per-connection I/O and a clean shutdown that drains every
-//!   bank.
+//!   bank and flushes every WAL.
 //! * [`client`] — [`CamClient`]: blocking client with handshake,
 //!   reconnect, and pipelined `lookup_bulk`.
 //! * [`loadgen`] — [`LoadGen`]: multi-threaded QPS/latency runner over

@@ -34,6 +34,7 @@ use crate::coordinator::engine::EngineError;
 use crate::energy::EnergyBreakdown;
 use crate::shard::ShardedOutcome;
 use crate::timing::DelayReport;
+use crate::util::codec::{put_bitvec, put_f64, put_u16, put_u32, put_u64, CodecError, Cursor};
 use crate::util::hash::Fnv1a;
 
 use std::io::{self, Read, Write};
@@ -42,7 +43,12 @@ use std::io::{self, Read, Write};
 pub const MAGIC: [u8; 4] = *b"CSCM";
 
 /// Protocol version this build speaks.
-pub const VERSION: u16 = 1;
+///
+/// History: v1 — initial op set (Insert…Shutdown); v2 — added the
+/// durability ops `Snapshot`/`Flush` and the `ERR_PERSIST` error code.
+/// Both sides hang up on a version mismatch (strict equality), so a mixed
+/// deployment must upgrade in lock-step.
+pub const VERSION: u16 = 2;
 
 /// Upper bound on one frame (64 MiB) — rejects garbage lengths before any
 /// allocation.
@@ -69,6 +75,11 @@ pub const OP_LOOKUP_BULK: u8 = 4;
 pub const OP_STATS: u8 = 5;
 pub const OP_DRAIN: u8 = 6;
 pub const OP_SHUTDOWN: u8 = 7;
+/// Force a compaction: every bank snapshots its state and truncates its
+/// WAL (v2; no-op ack on a fleet serving without `--data-dir`).
+pub const OP_SNAPSHOT: u8 = 8;
+/// Fsync every bank's WAL (v2; no-op ack without `--data-dir`).
+pub const OP_FLUSH: u8 = 9;
 pub const OP_ERROR: u8 = 0xEE;
 
 // Typed error codes.
@@ -76,6 +87,10 @@ pub const ERR_FULL: u16 = 1;
 pub const ERR_BAD_ADDRESS: u16 = 2;
 pub const ERR_TAG_WIDTH: u16 = 3;
 pub const ERR_SHUTDOWN: u16 = 4;
+/// The durability layer failed to log or snapshot (disk full, I/O error).
+/// The detailed [`crate::store::StoreError`] stays in the server log; the
+/// wire carries only the code.
+pub const ERR_PERSIST: u16 = 5;
 /// Malformed frame / payload (no [`EngineError`] equivalent).
 pub const ERR_PROTOCOL: u16 = 100;
 /// Opcode the server does not know.
@@ -114,6 +129,12 @@ impl From<io::Error> for WireError {
     }
 }
 
+impl From<CodecError> for WireError {
+    fn from(e: CodecError) -> Self {
+        WireError::Protocol(e.0)
+    }
+}
+
 /// Map an engine error onto its wire code plus auxiliary word
 /// (`BadAddress` carries the address; `TagWidth` packs got/want).
 pub fn engine_error_code(e: &EngineError) -> (u16, u64) {
@@ -124,10 +145,13 @@ pub fn engine_error_code(e: &EngineError) -> (u16, u64) {
             (ERR_TAG_WIDTH, ((*got as u64) << 32) | (*want as u64 & 0xFFFF_FFFF))
         }
         EngineError::Shutdown => (ERR_SHUTDOWN, 0),
+        EngineError::Persist(_) => (ERR_PERSIST, 0),
     }
 }
 
 /// Inverse of [`engine_error_code`]; `None` for protocol-level codes.
+/// `ERR_PERSIST` decodes to a [`EngineError::Persist`] with a generic
+/// message — the detailed store error never crosses the wire.
 pub fn engine_error_from_code(code: u16, aux: u64) -> Option<EngineError> {
     match code {
         ERR_FULL => Some(EngineError::Full),
@@ -137,6 +161,7 @@ pub fn engine_error_from_code(code: u16, aux: u64) -> Option<EngineError> {
             want: (aux & 0xFFFF_FFFF) as usize,
         }),
         ERR_SHUTDOWN => Some(EngineError::Shutdown),
+        ERR_PERSIST => Some(EngineError::Persist("remote persistence failure".into())),
         _ => None,
     }
 }
@@ -151,6 +176,10 @@ pub enum Request {
     Stats,
     Drain,
     Shutdown,
+    /// Force every bank to snapshot + truncate its WAL (v2).
+    Snapshot,
+    /// Fsync every bank's WAL (v2).
+    Flush,
 }
 
 /// Fleet statistics snapshot shipped for [`Request::Stats`].
@@ -184,6 +213,12 @@ pub enum Response {
     Stats(Box<StatsReport>),
     Drained,
     ShutdownAck,
+    /// Every bank snapshotted and truncated its WAL (v2).  Also the ack on
+    /// a fleet serving without persistence (nothing to compact).
+    Snapshotted,
+    /// Every bank's WAL is synced to disk (v2; no-op ack without
+    /// persistence).
+    Flushed,
     /// Whole-request failure (see the `ERR_*` codes).
     Error { code: u16, aux: u64 },
 }
@@ -247,29 +282,18 @@ pub fn read_server_hello(r: &mut impl Read) -> Result<ServerHello, WireError> {
 }
 
 // ------------------------------------------------------ payload encoding
-
-fn put_u16(buf: &mut Vec<u8>, v: u16) {
-    buf.extend_from_slice(&v.to_le_bytes());
-}
-
-fn put_u32(buf: &mut Vec<u8>, v: u32) {
-    buf.extend_from_slice(&v.to_le_bytes());
-}
-
-fn put_u64(buf: &mut Vec<u8>, v: u64) {
-    buf.extend_from_slice(&v.to_le_bytes());
-}
-
-fn put_f64(buf: &mut Vec<u8>, v: f64) {
-    // IEEE-754 bit pattern: the decode side reproduces the value exactly.
-    buf.extend_from_slice(&v.to_bits().to_le_bytes());
-}
+//
+// The primitive writers/readers (`put_*`, `Cursor`) are the shared codec
+// of `util::codec` — the same helpers serialize the on-disk snapshot and
+// WAL formats (`crate::store`), so the byte conventions cannot drift
+// between the wire and the disk.  Only the domain encodings (tags with
+// the defensive tail mask, outcomes, stats) live here.
 
 fn put_tag(buf: &mut Vec<u8>, tag: &BitVec) {
-    put_u32(buf, tag.len() as u32);
-    for &w in tag.words() {
-        put_u64(buf, w);
-    }
+    // byte-identical to the store codec's bit-vector encoding — one
+    // definition of the layout; only the decoders differ on purpose
+    // (take_tag masks tail slack, take_bitvec rejects it)
+    put_bitvec(buf, tag);
 }
 
 fn put_outcome(buf: &mut Vec<u8>, o: &ShardedOutcome) {
@@ -308,131 +332,71 @@ fn put_outcome(buf: &mut Vec<u8>, o: &ShardedOutcome) {
     put_f64(buf, o.delay.latency_ns);
 }
 
-/// Bounds-checked payload reader.
-struct Cursor<'a> {
-    buf: &'a [u8],
-    pos: usize,
+/// Read one tag: `u32` width + the packed words.  Unlike the store codec's
+/// strict [`crate::util::codec::Cursor::take_bitvec`], tail slack a hostile
+/// peer may have set is *masked* rather than rejected — a live connection
+/// should survive a sloppy-but-unambiguous peer, whereas a stored image
+/// with slack garbage is evidence of corruption.
+fn take_tag(c: &mut Cursor<'_>) -> Result<BitVec, WireError> {
+    let nbits = c.take_u32()?;
+    if nbits == 0 || nbits > MAX_TAG_BITS {
+        return Err(WireError::Protocol(format!("tag width {nbits} out of range")));
+    }
+    let n = nbits as usize;
+    let mut tag = BitVec::zeros(n);
+    for w in tag.words_mut() {
+        *w = c.take_u64()?;
+    }
+    // Defensive: clear tail slack a hostile peer may have set (it would
+    // corrupt count_ones/iter_ones invariants downstream).
+    let rem = n % 64;
+    if rem != 0 {
+        if let Some(last) = tag.words_mut().last_mut() {
+            *last &= (1u64 << rem) - 1;
+        }
+    }
+    Ok(tag)
 }
 
-impl<'a> Cursor<'a> {
-    fn new(buf: &'a [u8]) -> Self {
-        Cursor { buf, pos: 0 }
+fn take_outcome(c: &mut Cursor<'_>) -> Result<ShardedOutcome, WireError> {
+    let has_addr = c.take_u8()? == 1;
+    let addr_raw = c.take_u64()?;
+    let n_matches = c.take_u32()? as usize;
+    if n_matches > c.remaining() / 8 {
+        return Err(WireError::Protocol(format!(
+            "{n_matches} matches cannot fit the {} remaining payload bytes",
+            c.remaining()
+        )));
     }
-
-    /// Bytes left — the bound for any count-prefixed allocation: a count
-    /// that claims more elements than the remaining bytes could possibly
-    /// encode is rejected *before* `Vec::with_capacity` reserves for it.
-    fn remaining(&self) -> usize {
-        self.buf.len() - self.pos
+    let mut all_matches = Vec::with_capacity(n_matches);
+    for _ in 0..n_matches {
+        all_matches.push(c.take_u64()? as usize);
     }
-
-    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
-        if self.pos + n > self.buf.len() {
-            return Err(WireError::Protocol(format!(
-                "truncated payload: need {n} bytes at offset {}, have {}",
-                self.pos,
-                self.buf.len() - self.pos
-            )));
-        }
-        let s = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
-        Ok(s)
-    }
-
-    fn take_u8(&mut self) -> Result<u8, WireError> {
-        Ok(self.take(1)?[0])
-    }
-
-    fn take_u16(&mut self) -> Result<u16, WireError> {
-        let b = self.take(2)?;
-        Ok(u16::from_le_bytes([b[0], b[1]]))
-    }
-
-    fn take_u32(&mut self) -> Result<u32, WireError> {
-        let b = self.take(4)?;
-        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-    }
-
-    fn take_u64(&mut self) -> Result<u64, WireError> {
-        let b = self.take(8)?;
-        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
-    }
-
-    fn take_f64(&mut self) -> Result<f64, WireError> {
-        Ok(f64::from_bits(self.take_u64()?))
-    }
-
-    fn take_tag(&mut self) -> Result<BitVec, WireError> {
-        let nbits = self.take_u32()?;
-        if nbits == 0 || nbits > MAX_TAG_BITS {
-            return Err(WireError::Protocol(format!("tag width {nbits} out of range")));
-        }
-        let n = nbits as usize;
-        let mut tag = BitVec::zeros(n);
-        for w in tag.words_mut() {
-            *w = self.take_u64()?;
-        }
-        // Defensive: clear tail slack a hostile peer may have set (it would
-        // corrupt count_ones/iter_ones invariants downstream).
-        let rem = n % 64;
-        if rem != 0 {
-            if let Some(last) = tag.words_mut().last_mut() {
-                *last &= (1u64 << rem) - 1;
-            }
-        }
-        Ok(tag)
-    }
-
-    fn take_outcome(&mut self) -> Result<ShardedOutcome, WireError> {
-        let has_addr = self.take_u8()? == 1;
-        let addr_raw = self.take_u64()?;
-        let n_matches = self.take_u32()? as usize;
-        if n_matches > self.remaining() / 8 {
-            return Err(WireError::Protocol(format!(
-                "{n_matches} matches cannot fit the {} remaining payload bytes",
-                self.remaining()
-            )));
-        }
-        let mut all_matches = Vec::with_capacity(n_matches);
-        for _ in 0..n_matches {
-            all_matches.push(self.take_u64()? as usize);
-        }
-        let banks_searched = self.take_u32()? as usize;
-        let lambda = self.take_u64()? as usize;
-        let enabled_blocks = self.take_u64()? as usize;
-        let comparisons = self.take_u64()? as usize;
-        let energy = EnergyBreakdown {
-            searchline_fj: self.take_f64()?,
-            matchline_fj: self.take_f64()?,
-            global_wire_fj: self.take_f64()?,
-            sram_read_fj: self.take_f64()?,
-            decoder_fj: self.take_f64()?,
-            pii_logic_fj: self.take_f64()?,
-            enable_driver_fj: self.take_f64()?,
-            enable_gate_fj: self.take_f64()?,
-        };
-        let delay = DelayReport { cycle_ns: self.take_f64()?, latency_ns: self.take_f64()? };
-        Ok(ShardedOutcome {
-            addr: has_addr.then_some(addr_raw as usize),
-            all_matches,
-            banks_searched,
-            lambda,
-            enabled_blocks,
-            comparisons,
-            energy,
-            delay,
-        })
-    }
-
-    fn finish(&self) -> Result<(), WireError> {
-        if self.pos != self.buf.len() {
-            return Err(WireError::Protocol(format!(
-                "{} trailing payload bytes",
-                self.buf.len() - self.pos
-            )));
-        }
-        Ok(())
-    }
+    let banks_searched = c.take_u32()? as usize;
+    let lambda = c.take_u64()? as usize;
+    let enabled_blocks = c.take_u64()? as usize;
+    let comparisons = c.take_u64()? as usize;
+    let energy = EnergyBreakdown {
+        searchline_fj: c.take_f64()?,
+        matchline_fj: c.take_f64()?,
+        global_wire_fj: c.take_f64()?,
+        sram_read_fj: c.take_f64()?,
+        decoder_fj: c.take_f64()?,
+        pii_logic_fj: c.take_f64()?,
+        enable_driver_fj: c.take_f64()?,
+        enable_gate_fj: c.take_f64()?,
+    };
+    let delay = DelayReport { cycle_ns: c.take_f64()?, latency_ns: c.take_f64()? };
+    Ok(ShardedOutcome {
+        addr: has_addr.then_some(addr_raw as usize),
+        all_matches,
+        banks_searched,
+        lambda,
+        enabled_blocks,
+        comparisons,
+        energy,
+        delay,
+    })
 }
 
 impl Request {
@@ -445,6 +409,8 @@ impl Request {
             Request::Stats => OP_STATS,
             Request::Drain => OP_DRAIN,
             Request::Shutdown => OP_SHUTDOWN,
+            Request::Snapshot => OP_SNAPSHOT,
+            Request::Flush => OP_FLUSH,
         }
     }
 
@@ -458,16 +424,20 @@ impl Request {
                     put_tag(buf, t);
                 }
             }
-            Request::Stats | Request::Drain | Request::Shutdown => {}
+            Request::Stats
+            | Request::Drain
+            | Request::Shutdown
+            | Request::Snapshot
+            | Request::Flush => {}
         }
     }
 
     pub fn decode(op: u8, payload: &[u8]) -> Result<Request, WireError> {
         let mut c = Cursor::new(payload);
         let req = match op {
-            OP_INSERT => Request::Insert { tag: c.take_tag()? },
+            OP_INSERT => Request::Insert { tag: take_tag(&mut c)? },
             OP_DELETE => Request::Delete { addr: c.take_u64()? },
-            OP_LOOKUP => Request::Lookup { tag: c.take_tag()? },
+            OP_LOOKUP => Request::Lookup { tag: take_tag(&mut c)? },
             OP_LOOKUP_BULK => {
                 let n = c.take_u32()? as usize;
                 if n > MAX_BULK_TAGS {
@@ -484,13 +454,15 @@ impl Request {
                 }
                 let mut tags = Vec::with_capacity(n);
                 for _ in 0..n {
-                    tags.push(c.take_tag()?);
+                    tags.push(take_tag(&mut c)?);
                 }
                 Request::LookupBulk { tags }
             }
             OP_STATS => Request::Stats,
             OP_DRAIN => Request::Drain,
             OP_SHUTDOWN => Request::Shutdown,
+            OP_SNAPSHOT => Request::Snapshot,
+            OP_FLUSH => Request::Flush,
             other => return Err(WireError::Protocol(format!("unknown request op {other}"))),
         };
         c.finish()?;
@@ -508,6 +480,8 @@ impl Response {
             Response::Stats(_) => OP_STATS,
             Response::Drained => OP_DRAIN,
             Response::ShutdownAck => OP_SHUTDOWN,
+            Response::Snapshotted => OP_SNAPSHOT,
+            Response::Flushed => OP_FLUSH,
             Response::Error { .. } => OP_ERROR,
         }
     }
@@ -515,7 +489,11 @@ impl Response {
     pub fn encode_payload(&self, buf: &mut Vec<u8>) {
         match self {
             Response::Inserted { addr } => put_u64(buf, *addr),
-            Response::Deleted | Response::Drained | Response::ShutdownAck => {}
+            Response::Deleted
+            | Response::Drained
+            | Response::ShutdownAck
+            | Response::Snapshotted
+            | Response::Flushed => {}
             Response::Lookup(o) => put_outcome(buf, o),
             Response::LookupBulk(items) => {
                 put_u32(buf, items.len() as u32);
@@ -564,7 +542,7 @@ impl Response {
         let resp = match op {
             OP_INSERT => Response::Inserted { addr: c.take_u64()? },
             OP_DELETE => Response::Deleted,
-            OP_LOOKUP => Response::Lookup(Box::new(c.take_outcome()?)),
+            OP_LOOKUP => Response::Lookup(Box::new(take_outcome(&mut c)?)),
             OP_LOOKUP_BULK => {
                 let n = c.take_u32()? as usize;
                 // the smallest item encoding is 11 bytes (error: flag+code+aux)
@@ -577,7 +555,7 @@ impl Response {
                 let mut items = Vec::with_capacity(n);
                 for _ in 0..n {
                     if c.take_u8()? == 1 {
-                        items.push(Ok(c.take_outcome()?));
+                        items.push(Ok(take_outcome(&mut c)?));
                     } else {
                         let code = c.take_u16()?;
                         let aux = c.take_u64()?;
@@ -637,6 +615,8 @@ impl Response {
             }
             OP_DRAIN => Response::Drained,
             OP_SHUTDOWN => Response::ShutdownAck,
+            OP_SNAPSHOT => Response::Snapshotted,
+            OP_FLUSH => Response::Flushed,
             OP_ERROR => Response::Error { code: c.take_u16()?, aux: c.take_u64()? },
             other => return Err(WireError::Protocol(format!("unknown response op {other}"))),
         };
@@ -816,6 +796,8 @@ mod tests {
         roundtrip_request(Request::Stats);
         roundtrip_request(Request::Drain);
         roundtrip_request(Request::Shutdown);
+        roundtrip_request(Request::Snapshot);
+        roundtrip_request(Request::Flush);
     }
 
     #[test]
@@ -849,6 +831,8 @@ mod tests {
         })));
         roundtrip_response(Response::Drained);
         roundtrip_response(Response::ShutdownAck);
+        roundtrip_response(Response::Snapshotted);
+        roundtrip_response(Response::Flushed);
         roundtrip_response(Response::Error { code: ERR_FULL, aux: 0 });
     }
 
@@ -880,6 +864,11 @@ mod tests {
             assert_eq!(engine_error_from_code(code, aux), Some(e));
         }
         assert_eq!(engine_error_from_code(ERR_PROTOCOL, 0), None);
+        // Persist carries a local-only message: the code roundtrips to the
+        // variant, the text stays on the server
+        let (code, aux) = engine_error_code(&EngineError::Persist("disk full".into()));
+        assert_eq!(code, ERR_PERSIST);
+        assert!(matches!(engine_error_from_code(code, aux), Some(EngineError::Persist(_))));
     }
 
     #[test]
@@ -935,7 +924,7 @@ mod tests {
         put_u32(&mut payload, 70);
         put_u64(&mut payload, u64::MAX);
         put_u64(&mut payload, u64::MAX);
-        let tag = Cursor::new(&payload).take_tag().unwrap();
+        let tag = take_tag(&mut Cursor::new(&payload)).unwrap();
         assert_eq!(tag.len(), 70);
         assert_eq!(tag.count_ones(), 70, "tail slack must be cleared");
     }

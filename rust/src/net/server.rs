@@ -31,6 +31,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::engine::EngineError;
+use crate::coordinator::server::PersistError;
 use crate::net::proto::{
     self, parse_client_hello, write_server_hello, Request, Response, ServerHello, StatsReport,
     ERR_PROTOCOL, VERSION,
@@ -197,12 +198,15 @@ fn accept_loop(
         }
     }
     // Clean shutdown: no new connections; give the live ones a grace
-    // window, then flush whatever the banks still hold.
+    // window, then run the canonical drain-then-flush sequence (no
+    // acknowledged-but-unlogged writes).
     let deadline = Instant::now() + cfg.shutdown_grace;
     while live.load(Ordering::Acquire) > 0 && Instant::now() < deadline {
         std::thread::sleep(cfg.accept_poll);
     }
-    fleet.drain();
+    if let Err(e) = fleet.shutdown() {
+        eprintln!("cscam-net: fleet shutdown flush failed: {e}");
+    }
 }
 
 /// Concurrent polite-rejection bound: each busy hello may pin a thread for
@@ -376,12 +380,13 @@ fn serve_conn(
             ConnRead::Frame(id, req) => {
                 let is_shutdown = matches!(req, Request::Shutdown);
                 let resp = handle_request(fleet, req);
+                let acked = matches!(resp, Response::ShutdownAck);
                 if proto::write_response(&mut writer, id, &resp).is_err()
                     || writer.flush().is_err()
                 {
                     return;
                 }
-                if is_shutdown {
+                if is_shutdown && acked {
                     stop.store(true, Ordering::Release);
                     return;
                 }
@@ -443,10 +448,37 @@ fn handle_request(fleet: &ShardedServerHandle, req: Request) -> Response {
             Response::Drained
         }
         Request::Shutdown => {
-            // drain now so the ack means "all accepted work is done"; the
-            // caller flips the stop flag after writing the ack
-            fleet.drain();
-            Response::ShutdownAck
+            // the canonical drain-then-flush so the ack means "all accepted
+            // work is done and durable"; the caller flips the stop flag
+            // after writing the ack.  A failed flush must NOT ack — the
+            // client would believe acked writes are on disk when they are
+            // not — so it answers ERR_PERSIST and the server keeps serving
+            // (the operator can retry or investigate).
+            match fleet.shutdown() {
+                Ok(_) => Response::ShutdownAck,
+                Err(e) => persist_error_response("shutdown flush", e),
+            }
+        }
+        Request::Snapshot => match fleet.snapshot_stores() {
+            Ok(_) => Response::Snapshotted,
+            Err(e) => persist_error_response("snapshot", e),
+        },
+        Request::Flush => match fleet.flush_stores() {
+            Ok(_) => Response::Flushed,
+            Err(e) => persist_error_response("flush", e),
+        },
+    }
+}
+
+/// Map a persistence failure onto the wire: a dead engine thread is the
+/// usual `Shutdown`, a store failure is `ERR_PERSIST` (details stay in the
+/// server log — the operator owns the disk, not the client).
+fn persist_error_response(what: &str, e: PersistError) -> Response {
+    match e {
+        PersistError::Shutdown => proto::error_response(&EngineError::Shutdown),
+        PersistError::Store(e) => {
+            eprintln!("cscam-net: {what} failed: {e}");
+            Response::Error { code: proto::ERR_PERSIST, aux: 0 }
         }
     }
 }

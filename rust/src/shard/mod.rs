@@ -28,5 +28,5 @@ pub mod server;
 pub mod sharded;
 
 pub use placement::{PlacementMode, ShardRouter};
-pub use server::{FleetMetrics, ShardedCamServer, ShardedServerHandle};
+pub use server::{FleetMetrics, FleetRecovery, ShardedCamServer, ShardedServerHandle};
 pub use sharded::{ShardedCam, ShardedOutcome};

@@ -9,6 +9,7 @@
 //! wait per bank) in broadcast mode, and per-bank load shedding through
 //! [`crate::coordinator::ServerHandle::try_lookup`].
 
+use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
@@ -17,10 +18,13 @@ use crate::config::DesignConfig;
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::engine::{EngineError, LookupEngine};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::server::{CamServer, DecodeBackend, ServerHandle};
+use crate::coordinator::server::{CamServer, DecodeBackend, PersistError, ServerHandle};
 use crate::shard::placement::{PlacementMode, ShardRouter};
 use crate::shard::sharded::{
     globalize_outcome, merge_fold, merge_outcomes, spill_insert, split_global, ShardedOutcome,
+};
+use crate::store::{
+    BankStore, FleetManifest, PlacementSpec, RecoveryReport, StoreError, StoreOptions,
 };
 
 /// Per-bank metrics snapshots plus the merged fleet view.
@@ -72,6 +76,47 @@ impl FleetMetrics {
     }
 }
 
+/// What [`ShardedCamServer::open_durable`] recovered.
+#[derive(Debug, Clone)]
+pub struct FleetRecovery {
+    /// The fleet manifest already existed (a restart) rather than being
+    /// created by this open (first boot).
+    pub manifest_loaded: bool,
+    /// One recovery report per bank, in bank order.
+    pub banks: Vec<RecoveryReport>,
+}
+
+impl FleetRecovery {
+    /// WAL records replayed across all banks.
+    pub fn total_records(&self) -> usize {
+        self.banks.iter().map(|b| b.wal_records).sum()
+    }
+
+    /// Live entries recovered across all banks.
+    pub fn total_occupancy(&self) -> usize {
+        self.banks.iter().map(|b| b.occupancy).sum()
+    }
+
+    /// Banks whose WAL had a torn tail truncated.
+    pub fn truncated_banks(&self) -> usize {
+        self.banks.iter().filter(|b| b.truncated_bytes > 0).count()
+    }
+
+    /// One-line human summary for the serve log.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} the fleet manifest; recovered {} entries across {} banks \
+             ({} WAL records, {} snapshot(s), {} torn tail(s) truncated)",
+            if self.manifest_loaded { "validated against" } else { "created" },
+            self.total_occupancy(),
+            self.banks.len(),
+            self.total_records(),
+            self.banks.iter().filter(|b| b.snapshot_loaded).count(),
+            self.truncated_banks()
+        )
+    }
+}
+
 /// Builder for the threaded fleet.
 pub struct ShardedCamServer {
     servers: Vec<CamServer>,
@@ -116,6 +161,65 @@ impl ShardedCamServer {
         self.servers =
             self.servers.into_iter().map(|s| s.with_queue_capacity(cap)).collect();
         self
+    }
+
+    /// Open a *durable* fleet under `dir`: one [`crate::store::DurableBank`]
+    /// recovery per bank (`dir/bank-<i>/` holds its snapshot + WAL), with a
+    /// `fleet.kv` manifest recording shard count, geometry and placement so
+    /// a restart refuses an incompatible layout instead of silently
+    /// re-homing stored tags.
+    ///
+    /// On a restart of a learned-prefix fleet the manifest's recorded bit
+    /// positions *replace* the freshly supplied selection — placement is an
+    /// address-space contract and must not drift with the sample that
+    /// happened to train it.  Returns the recovery report per bank.
+    pub fn open_durable(
+        cfg: &DesignConfig,
+        mode: PlacementMode,
+        policy: BatchPolicy,
+        dir: &Path,
+        opts: StoreOptions,
+    ) -> Result<(Self, FleetRecovery), StoreError> {
+        cfg.validate()
+            .map_err(|e| StoreError::Incompatible(format!("invalid design config: {e}")))?;
+        std::fs::create_dir_all(dir)?;
+        let manifest_path_exists = dir.join(crate::store::MANIFEST_FILE).exists();
+        let (manifest, manifest_loaded) = if manifest_path_exists {
+            let manifest = FleetManifest::load(dir)?;
+            manifest.check_compatible(cfg, &mode)?;
+            (manifest, true)
+        } else {
+            let manifest =
+                FleetManifest { cfg: cfg.clone(), placement: PlacementSpec::from_mode(&mode) };
+            manifest.store(dir)?;
+            (manifest, false)
+        };
+        let effective_mode = manifest.placement.to_mode(cfg.n)?;
+        let router = ShardRouter::new(cfg.shards, effective_mode);
+
+        let bank_cfg = cfg.per_bank();
+        let mut servers = Vec::with_capacity(cfg.shards);
+        let mut banks = Vec::with_capacity(cfg.shards);
+        for i in 0..cfg.shards {
+            let factory_cfg = bank_cfg.clone();
+            let (store, engine, report) = BankStore::open(
+                &dir.join(format!("bank-{i}")),
+                opts,
+                &bank_cfg,
+                move || LookupEngine::new(factory_cfg),
+            )?;
+            banks.push(report);
+            servers.push(
+                CamServer::with_engine(engine, DecodeBackend::Native, policy).with_store(store),
+            );
+        }
+        let fleet = ShardedCamServer {
+            servers,
+            router,
+            bank_m: bank_cfg.m,
+            bank_n: bank_cfg.n,
+        };
+        Ok((fleet, FleetRecovery { manifest_loaded, banks }))
     }
 
     /// Spawn one engine thread per bank.
@@ -321,6 +425,45 @@ impl ShardedServerHandle {
             h.drain();
         }
     }
+
+    /// Scatter one persist barrier to every bank, then gather: the banks
+    /// fsync/snapshot concurrently, so the fleet-wide cost is roughly one
+    /// bank's latency instead of S of them in series.
+    fn persist_all(&self, snapshot: bool) -> Result<bool, PersistError> {
+        let pending: Result<Vec<_>, _> =
+            self.banks.iter().map(|h| h.persist_deferred(snapshot)).collect();
+        let mut any = false;
+        for p in pending? {
+            any |= p.wait()?;
+        }
+        Ok(any)
+    }
+
+    /// Fsync every bank's WAL.  `Ok(true)` once every acknowledged write
+    /// in the fleet is on disk; `Ok(false)` when no bank has a store
+    /// (the fleet serves without `--data-dir`).  Each bank's flush is a
+    /// barrier on its engine thread, so it orders after every mutation
+    /// that bank acknowledged; the banks run their barriers in parallel.
+    pub fn flush_stores(&self) -> Result<bool, PersistError> {
+        self.persist_all(false)
+    }
+
+    /// Force a fleet-wide compaction: every bank snapshots and truncates
+    /// its WAL, concurrently.  `Ok(false)` when no bank has a store.
+    pub fn snapshot_stores(&self) -> Result<bool, PersistError> {
+        self.persist_all(true)
+    }
+
+    /// Orderly stop: drain every bank's pending work, then flush every
+    /// bank's WAL — strictly in that order, so no acknowledged write can
+    /// be left unlogged when the caller proceeds to drop the handles (the
+    /// engine threads exit once every clone is gone and flush once more on
+    /// their own way out).  After this returns, reopening the fleet's data
+    /// directory recovers every acknowledged mutation.
+    pub fn shutdown(&self) -> Result<bool, PersistError> {
+        self.drain();
+        self.flush_stores()
+    }
 }
 
 #[cfg(test)]
@@ -419,6 +562,99 @@ mod tests {
         assert_eq!(h.try_lookup_many(tags.clone()).unwrap_err(), EngineError::Full);
         // ...while blocking lookups still get through.
         assert!(h.lookup(tags[0].clone()).unwrap().addr.is_some());
+    }
+
+    #[test]
+    fn shutdown_flushes_every_banks_wal_before_handles_drop() {
+        // The drain-order contract: after shutdown() returns, every
+        // acknowledged write must be recoverable from disk — even though
+        // the engine threads are still alive behind the live handles (no
+        // acknowledged-but-unlogged writes survive the drain + flush
+        // barrier sequence).
+        let dir = std::env::temp_dir()
+            .join(format!("cscam-shard-{}", std::process::id()))
+            .join("drain-order");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = fleet_cfg(4);
+        let (fleet, rec) = ShardedCamServer::open_durable(
+            &cfg,
+            PlacementMode::TagHash,
+            policy(),
+            &dir,
+            StoreOptions::default(),
+        )
+        .unwrap();
+        assert!(!rec.manifest_loaded, "first boot creates the manifest");
+        let h = fleet.spawn();
+        let mut rng = Rng::seed_from_u64(36);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 48, &mut rng);
+        let mut addrs = Vec::new();
+        for t in &tags {
+            addrs.push(h.insert(t.clone()).unwrap());
+        }
+        h.delete(addrs[0]).unwrap();
+        assert!(h.shutdown().unwrap(), "a durable fleet reports flushed stores");
+
+        // reopen FROM DISK while the original handles are still alive:
+        // the recovered fleet must hold exactly the acknowledged state
+        let (reopened, rec) = ShardedCamServer::open_durable(
+            &cfg,
+            PlacementMode::TagHash,
+            policy(),
+            &dir,
+            StoreOptions::default(),
+        )
+        .unwrap();
+        assert!(rec.manifest_loaded, "restart validates the manifest");
+        assert_eq!(rec.total_records(), 49, "48 inserts + 1 delete all logged");
+        assert_eq!(rec.total_occupancy(), 47);
+        let h2 = reopened.spawn();
+        for (t, &g) in tags.iter().zip(&addrs).skip(1) {
+            assert_eq!(h2.lookup(t.clone()).unwrap().addr, Some(g));
+        }
+        assert_eq!(h2.lookup(tags[0].clone()).unwrap().addr, None, "delete recovered too");
+        drop(h);
+    }
+
+    #[test]
+    fn durable_fleet_refuses_incompatible_reopen() {
+        let dir = std::env::temp_dir()
+            .join(format!("cscam-shard-{}", std::process::id()))
+            .join("incompatible");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = fleet_cfg(4);
+        let (fleet, _) = ShardedCamServer::open_durable(
+            &cfg,
+            PlacementMode::TagHash,
+            policy(),
+            &dir,
+            StoreOptions::default(),
+        )
+        .unwrap();
+        drop(fleet);
+        // different shard count
+        let other = fleet_cfg(2);
+        assert!(matches!(
+            ShardedCamServer::open_durable(
+                &other,
+                PlacementMode::TagHash,
+                policy(),
+                &dir,
+                StoreOptions::default(),
+            ),
+            Err(StoreError::Incompatible(_))
+        ));
+        // different placement kind
+        assert!(matches!(
+            ShardedCamServer::open_durable(
+                &cfg,
+                PlacementMode::Broadcast,
+                policy(),
+                &dir,
+                StoreOptions::default(),
+            ),
+            Err(StoreError::Incompatible(_))
+        ));
     }
 
     #[test]

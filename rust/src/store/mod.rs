@@ -1,0 +1,820 @@
+//! L6 — durable CAM state: snapshot + write-ahead log per bank, a fleet
+//! manifest on top.
+//!
+//! Everything below this layer is volatile: a bank's tags, trained CNN
+//! weight rows and free-slot state live in one engine thread's memory and
+//! evaporate on process exit.  This module makes the fleet restartable:
+//!
+//! * [`wal`] — a per-bank append-only log of Insert/Delete records in
+//!   length-prefixed, FNV-1a-checksummed frames, with torn-tail truncation
+//!   on replay and a configurable [`FsyncPolicy`];
+//! * [`snapshot`] — the full bank image (CAM rows + valid bits, CNN weight
+//!   rows including stale superposed weights, design geometry, tag-bit
+//!   selection, insert cursor) in a versioned, checksummed file written
+//!   atomically (tmp + rename);
+//! * [`BankStore`] — the persistence half attached to one bank: records
+//!   mutations into the WAL and compacts (snapshot, then truncate the log)
+//!   once the log passes [`StoreOptions::compact_bytes`];
+//! * [`DurableBank`] — engine + store in one synchronous handle, the
+//!   simplest embedding and the unit the recovery tests hammer;
+//! * [`FleetManifest`] — the fleet directory's `fleet.kv`: records the
+//!   shard count, geometry and placement so a restart refuses an
+//!   incompatible layout instead of silently re-homing every stored tag
+//!   (for learned-prefix placement the manifest carries the exact bit
+//!   positions — re-learning them from a fresh sample would move
+//!   ownership and orphan the recovered banks).
+//!
+//! **Recovery contract**: `recover()` (= reopening) rebuilds engine state
+//! bit-identical to the pre-crash engine — the same matches, λ, energy and
+//! delay for every tag, because replay re-executes `insert_at`/`delete` in
+//! logged order against a bit-exact snapshot base.  A torn final WAL frame
+//! is truncated, not fatal.  Corrupt snapshots, logs and manifests surface
+//! as typed [`StoreError`]s; no decode path panics on hostile bytes (the
+//! `codec_fuzz` battery enforces this).
+
+pub mod snapshot;
+pub mod wal;
+
+pub use snapshot::BankImage;
+pub use wal::{FsyncPolicy, Wal, WalRecord, WalRecovery};
+
+use std::path::{Path, PathBuf};
+
+use crate::bits::BitVec;
+use crate::cnn::Selection;
+use crate::config::DesignConfig;
+use crate::coordinator::engine::{EngineError, LookupEngine, LookupOutcome};
+use crate::shard::PlacementMode;
+use crate::util::codec::CodecError;
+
+/// Everything that can go wrong in the durability layer.
+#[derive(Debug)]
+pub enum StoreError {
+    /// Filesystem failure (create, write, sync, rename…).
+    Io(std::io::Error),
+    /// Bytes that violate an on-disk format contract (bad magic, bad
+    /// checksum, truncated payload, impossible geometry…).
+    Corrupt(String),
+    /// Well-formed state this build cannot or must not use: an unknown
+    /// format version, or a snapshot/manifest whose geometry or placement
+    /// contradicts what the caller asked to open.
+    Incompatible(String),
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Io(e) => write!(f, "store i/o error: {e}"),
+            StoreError::Corrupt(m) => write!(f, "corrupt store state: {m}"),
+            StoreError::Incompatible(m) => write!(f, "incompatible store state: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+impl From<std::io::Error> for StoreError {
+    fn from(e: std::io::Error) -> Self {
+        StoreError::Io(e)
+    }
+}
+
+impl From<CodecError> for StoreError {
+    fn from(e: CodecError) -> Self {
+        StoreError::Corrupt(e.0)
+    }
+}
+
+/// Durability tunables shared by every bank of a fleet.
+#[derive(Debug, Clone, Copy)]
+pub struct StoreOptions {
+    /// When WAL appends reach the disk (they always reach the OS).
+    pub fsync: FsyncPolicy,
+    /// Compaction threshold: snapshot + truncate once the WAL exceeds
+    /// this many bytes (0 disables automatic compaction).
+    pub compact_bytes: u64,
+}
+
+impl Default for StoreOptions {
+    fn default() -> Self {
+        StoreOptions { fsync: FsyncPolicy::Never, compact_bytes: 4 << 20 }
+    }
+}
+
+/// Atomic, durable file write shared by the snapshot and manifest
+/// writers: tmp file, fsync, rename over the target, best-effort
+/// directory sync.  A crash leaves the old content or the new — never an
+/// empty or torn file.
+pub(crate) fn atomic_write(path: &Path, bytes: &[u8]) -> Result<(), StoreError> {
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        std::io::Write::write_all(&mut f, bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// Snapshot file name inside a bank directory.
+pub const SNAPSHOT_FILE: &str = "snapshot.bin";
+
+/// WAL file name inside a bank directory.
+pub const WAL_FILE: &str = "wal.log";
+
+/// Fleet manifest file name inside a fleet data directory.
+pub const MANIFEST_FILE: &str = "fleet.kv";
+
+/// What a bank recovery found on disk.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RecoveryReport {
+    /// A snapshot file existed and seeded the engine.
+    pub snapshot_loaded: bool,
+    /// Complete WAL records replayed on top of the base state.
+    pub wal_records: usize,
+    /// Records discarded because the log's generation predates the
+    /// snapshot's — a crash landed between the snapshot rename and the WAL
+    /// reset, so the snapshot already contains them (replaying would
+    /// double-apply every insert and break bit-identical recovery).
+    pub discarded_records: usize,
+    /// Bytes discarded from a torn/corrupt WAL tail (0 on a clean open).
+    pub truncated_bytes: u64,
+    /// Live entries after recovery.
+    pub occupancy: usize,
+}
+
+/// Replay one logged mutation.  A record the engine rejects means the log
+/// belongs to a different geometry — refuse loudly rather than recover a
+/// wrong bank.
+fn replay(engine: &mut LookupEngine, rec: WalRecord) -> Result<(), StoreError> {
+    match rec {
+        WalRecord::Insert { addr, tag } => {
+            engine.insert_at(addr as usize, &tag).map_err(|e| {
+                StoreError::Incompatible(format!("WAL insert at address {addr} rejected: {e}"))
+            })
+        }
+        WalRecord::Delete { addr } => engine.delete(addr as usize).map_err(|e| {
+            StoreError::Incompatible(format!("WAL delete at address {addr} rejected: {e}"))
+        }),
+    }
+}
+
+/// The persistence half of one bank: the WAL handle, the snapshot path and
+/// the compaction policy.  [`crate::coordinator::CamServer`] carries one of
+/// these on its engine thread (mutations are logged in the same barrier
+/// that applies them, *before* the acknowledgement is sent);
+/// [`DurableBank`] pairs one with an engine for synchronous use.
+pub struct BankStore {
+    dir: PathBuf,
+    wal: Wal,
+    opts: StoreOptions,
+}
+
+impl BankStore {
+    /// Open a bank directory (creating it if absent), recover the engine
+    /// (snapshot base + WAL replay, torn tail truncated), and return the
+    /// store positioned for logging.  `make_engine` builds the initial
+    /// engine when no snapshot exists; it must match `cfg` — a snapshot
+    /// with different geometry is refused as [`StoreError::Incompatible`].
+    pub fn open(
+        dir: &Path,
+        opts: StoreOptions,
+        cfg: &DesignConfig,
+        make_engine: impl FnOnce() -> LookupEngine,
+    ) -> Result<(BankStore, LookupEngine, RecoveryReport), StoreError> {
+        std::fs::create_dir_all(dir)?;
+        let snap_path = dir.join(SNAPSHOT_FILE);
+        let (mut engine, snapshot_loaded, snap_gen) = if snap_path.exists() {
+            let image = BankImage::read_from(&snap_path)?;
+            if image.cfg != *cfg {
+                return Err(StoreError::Incompatible(format!(
+                    "snapshot geometry (M={}, N={}, ζ={}, c={}, l={}) does not match the \
+                     requested design point (M={}, N={}, ζ={}, c={}, l={})",
+                    image.cfg.m,
+                    image.cfg.n,
+                    image.cfg.zeta,
+                    image.cfg.c,
+                    image.cfg.l,
+                    cfg.m,
+                    cfg.n,
+                    cfg.zeta,
+                    cfg.c,
+                    cfg.l
+                )));
+            }
+            let gen = image.wal_generation;
+            (image.into_engine()?, true, gen)
+        } else {
+            let engine = make_engine();
+            assert_eq!(engine.config(), cfg, "factory engine must match the requested config");
+            (engine, false, 0)
+        };
+        let (mut wal, records, wrec) = Wal::open(&dir.join(WAL_FILE), opts.fsync)?;
+        let mut wal_records = 0usize;
+        let mut discarded_records = 0usize;
+        match wal.generation().cmp(&snap_gen) {
+            std::cmp::Ordering::Equal => {
+                wal_records = records.len();
+                for rec in records {
+                    replay(&mut engine, rec)?;
+                }
+            }
+            std::cmp::Ordering::Less => {
+                // crash between the snapshot rename and the WAL reset:
+                // every record in this log is already inside the snapshot;
+                // replaying would double-apply it.  Finish the interrupted
+                // compaction instead.
+                discarded_records = records.len();
+                wal.reset(snap_gen)?;
+            }
+            std::cmp::Ordering::Greater => {
+                return Err(StoreError::Incompatible(format!(
+                    "WAL generation {} is newer than the snapshot's {snap_gen} — the \
+                     snapshot is missing or was rolled back, so the log cannot be \
+                     replayed against a base it never extended",
+                    wal.generation()
+                )));
+            }
+        }
+        let report = RecoveryReport {
+            snapshot_loaded,
+            wal_records,
+            discarded_records,
+            truncated_bytes: wrec.truncated_bytes,
+            occupancy: engine.occupancy(),
+        };
+        Ok((BankStore { dir: dir.to_path_buf(), wal, opts }, engine, report))
+    }
+
+    /// Log an applied insert (called before the mutation is acknowledged).
+    /// Serializes straight from the borrowed tag — no clone on the write
+    /// hot path.
+    pub fn record_insert(&mut self, addr: usize, tag: &BitVec) -> Result<(), StoreError> {
+        self.wal.append_insert(addr as u64, tag)
+    }
+
+    /// Log an applied delete (called before the mutation is acknowledged).
+    pub fn record_delete(&mut self, addr: usize) -> Result<(), StoreError> {
+        self.wal.append(&WalRecord::Delete { addr: addr as u64 })
+    }
+
+    /// Snapshot `engine` and reset the WAL — the log's records are now
+    /// redundant with the image.  The generation makes the two-step
+    /// sequence crash-safe: the snapshot lands first, stamped `g+1`, then
+    /// the log resets to `g+1`; a crash between the two leaves a log whose
+    /// generation is older than the snapshot's, which [`Self::open`]
+    /// discards instead of double-replaying (replay is *not* idempotent —
+    /// `insert_at` over a live slot inflates the stale-delete counter and
+    /// can fire a spurious retrain).
+    pub fn compact(&mut self, engine: &LookupEngine) -> Result<(), StoreError> {
+        let next = self.wal.generation() + 1;
+        let mut image = BankImage::from_engine(engine);
+        image.wal_generation = next;
+        image.write_to(&self.dir.join(SNAPSHOT_FILE))?;
+        if let Err(e) = self.wal.reset(next) {
+            // The snapshot is already in place: any append accepted onto
+            // the still-old-generation log from here on would be discarded
+            // at recovery despite its acknowledgement.  Refuse them all
+            // until a retried compaction resets the log successfully.
+            self.wal.poison();
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    /// Compact if the WAL has outgrown [`StoreOptions::compact_bytes`].
+    /// Returns whether a compaction ran.
+    pub fn maybe_compact(&mut self, engine: &LookupEngine) -> Result<bool, StoreError> {
+        if self.opts.compact_bytes > 0 && self.wal.len_bytes() > self.opts.compact_bytes {
+            self.compact(engine)?;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// Fsync the WAL regardless of policy.
+    pub fn flush(&mut self) -> Result<(), StoreError> {
+        self.wal.sync()
+    }
+
+    /// Current WAL length in bytes (compaction trigger, test probe).
+    pub fn wal_len_bytes(&self) -> u64 {
+        self.wal.len_bytes()
+    }
+
+    /// The bank directory this store logs into.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+/// One engine plus its persistence, behind a synchronous API: the simplest
+/// durable embedding (tests, single-threaded tools).  The threaded serving
+/// stack wires the same [`BankStore`] through
+/// [`crate::coordinator::CamServer`] instead.
+pub struct DurableBank {
+    engine: LookupEngine,
+    store: BankStore,
+}
+
+impl DurableBank {
+    /// Open (or create) a durable bank at `dir` for design point `cfg`.
+    /// Reopening a populated directory IS the crash-recovery path: state
+    /// comes back bit-identical to the engine that wrote it.
+    pub fn open(
+        dir: &Path,
+        cfg: DesignConfig,
+        opts: StoreOptions,
+    ) -> Result<(DurableBank, RecoveryReport), StoreError> {
+        cfg.validate().map_err(|e| StoreError::Incompatible(format!("invalid config: {e}")))?;
+        let factory_cfg = cfg.clone();
+        let (store, engine, report) =
+            BankStore::open(dir, opts, &cfg, move || LookupEngine::new(factory_cfg))?;
+        Ok((DurableBank { engine, store }, report))
+    }
+
+    /// Insert: applied to the engine, then logged; the address is returned
+    /// only after the record reached the OS (per the WAL's write-through
+    /// contract) — an acknowledged insert survives a kill.  Failure policy
+    /// is [`log_applied_insert`].
+    pub fn insert(&mut self, tag: &BitVec) -> Result<usize, EngineError> {
+        let addr = self.engine.insert(tag)?;
+        log_applied_insert(&mut self.store, &mut self.engine, addr, tag)?;
+        Ok(addr)
+    }
+
+    /// Delete by address, logged like [`Self::insert`].  Failure policy is
+    /// [`log_applied_delete`].
+    pub fn delete(&mut self, addr: usize) -> Result<(), EngineError> {
+        self.engine.delete(addr)?;
+        log_applied_delete(&mut self.store, &self.engine, addr)
+    }
+
+    /// Lookup (reads are never logged).
+    pub fn lookup(&mut self, tag: &BitVec) -> Result<LookupOutcome, EngineError> {
+        self.engine.lookup(tag)
+    }
+
+    /// Force a snapshot + WAL truncation now.
+    pub fn compact(&mut self) -> Result<(), StoreError> {
+        self.store.compact(&self.engine)
+    }
+
+    /// Fsync the WAL.
+    pub fn flush(&mut self) -> Result<(), StoreError> {
+        self.store.flush()
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.engine.occupancy()
+    }
+
+    pub fn engine(&self) -> &LookupEngine {
+        &self.engine
+    }
+
+    /// Split into parts (the threaded fleet hands the engine to a
+    /// [`crate::coordinator::CamServer`] and keeps the store beside it).
+    pub fn into_parts(self) -> (LookupEngine, BankStore) {
+        (self.engine, self.store)
+    }
+}
+
+fn persist_err(e: StoreError) -> EngineError {
+    EngineError::Persist(e.to_string())
+}
+
+/// The one persist policy for an insert the engine has already applied —
+/// shared by [`DurableBank::insert`] and the threaded
+/// [`crate::coordinator::CamServer`] barrier so the synchronous and
+/// threaded paths cannot drift:
+///
+/// * a failed log append **rolls the entry back out** of the engine (it
+///   must not resurface via a later snapshot, and a client retry must not
+///   duplicate it) and surfaces as [`EngineError::Persist`];
+/// * a failed *compaction* after a successful append only warns — the
+///   record is durable, and failing the acknowledgement would push
+///   clients into retrying an already-persisted write (a compaction that
+///   leaves the log unsafe poisons it, so later appends fail loudly).
+pub fn log_applied_insert(
+    store: &mut BankStore,
+    engine: &mut LookupEngine,
+    addr: usize,
+    tag: &BitVec,
+) -> Result<(), EngineError> {
+    if let Err(e) = store.record_insert(addr, tag) {
+        eprintln!("cscam-store: durability failure, rolling the insert back: {e}");
+        let _ = engine.delete(addr);
+        return Err(persist_err(e));
+    }
+    if let Err(e) = store.maybe_compact(engine) {
+        eprintln!("cscam-store: compaction failure (insert already logged): {e}");
+    }
+    Ok(())
+}
+
+/// The delete half of the policy in [`log_applied_insert`]: no rollback —
+/// deletes are idempotent, so a retry converges, and a delete that reaches
+/// a later snapshot anyway matches what the client asked for.
+pub fn log_applied_delete(
+    store: &mut BankStore,
+    engine: &LookupEngine,
+    addr: usize,
+) -> Result<(), EngineError> {
+    store.record_delete(addr).map_err(|e| {
+        eprintln!("cscam-store: durability failure: {e}");
+        persist_err(e)
+    })?;
+    if let Err(e) = store.maybe_compact(engine) {
+        eprintln!("cscam-store: compaction failure (delete already logged): {e}");
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------- manifest
+
+/// Manifest format version (strict equality, like the snapshot/WAL).
+pub const MANIFEST_FORMAT: u32 = 1;
+
+/// The fleet directory's identity card: shard count, geometry and
+/// placement.  A restart validates compatibility against it — shard
+/// placement is an address-space contract, and silently changing it would
+/// re-home every stored tag away from its recovered bank.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetManifest {
+    /// Fleet-level design point (`m` = total capacity, `shards` = S).
+    pub cfg: DesignConfig,
+    /// Placement, with learned-prefix bit positions pinned exactly.
+    pub placement: PlacementSpec,
+}
+
+/// Serializable placement identity.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlacementSpec {
+    Hash,
+    Broadcast,
+    /// Learned-prefix placement: the exact selection that routes tags.
+    Prefix { k: usize, positions: Vec<usize> },
+}
+
+impl PlacementSpec {
+    /// Capture a live placement mode.
+    pub fn from_mode(mode: &PlacementMode) -> PlacementSpec {
+        match mode {
+            PlacementMode::TagHash => PlacementSpec::Hash,
+            PlacementMode::Broadcast => PlacementSpec::Broadcast,
+            PlacementMode::LearnedPrefix(sel) => {
+                PlacementSpec::Prefix { k: sel.k(), positions: sel.positions().to_vec() }
+            }
+        }
+    }
+
+    /// The mode name used in the manifest and in `--placement` flags.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            PlacementSpec::Hash => "hash",
+            PlacementSpec::Broadcast => "broadcast",
+            PlacementSpec::Prefix { .. } => "prefix",
+        }
+    }
+
+    /// Rebuild the routing mode; `n` bounds the prefix positions.
+    pub fn to_mode(&self, n: usize) -> Result<PlacementMode, StoreError> {
+        match self {
+            PlacementSpec::Hash => Ok(PlacementMode::TagHash),
+            PlacementSpec::Broadcast => Ok(PlacementMode::Broadcast),
+            PlacementSpec::Prefix { k, positions } => {
+                if *k == 0 || positions.is_empty() || positions.len() % k != 0 {
+                    return Err(StoreError::Corrupt(format!(
+                        "prefix placement with {} positions and k={k}",
+                        positions.len()
+                    )));
+                }
+                if let Some(&p) = positions.iter().find(|&&p| p >= n) {
+                    return Err(StoreError::Corrupt(format!(
+                        "prefix position {p} out of range for N={n}"
+                    )));
+                }
+                Ok(PlacementMode::LearnedPrefix(Selection::explicit(positions.clone(), *k)))
+            }
+        }
+    }
+}
+
+impl FleetManifest {
+    /// Serialize to the repository's `key = value` text format.
+    pub fn to_kv(&self) -> String {
+        let mut s = format!("# cscam fleet manifest\nformat = {MANIFEST_FORMAT}\n");
+        s.push_str(&self.cfg.to_kv());
+        s.push_str(&format!("placement = \"{}\"\n", self.placement.kind_name()));
+        if let PlacementSpec::Prefix { k, positions } = &self.placement {
+            s.push_str(&format!("prefix_k = {k}\n"));
+            let joined: Vec<String> = positions.iter().map(|p| p.to_string()).collect();
+            s.push_str(&format!("prefix_positions = {}\n", joined.join(",")));
+        }
+        s
+    }
+
+    /// Parse the manifest text.  Total: malformed text is a typed error.
+    pub fn from_kv(text: &str) -> Result<FleetManifest, StoreError> {
+        let mut cfg_lines = String::new();
+        let mut format: Option<u32> = None;
+        let mut placement: Option<String> = None;
+        let mut prefix_k: Option<usize> = None;
+        let mut prefix_positions: Option<Vec<usize>> = None;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                return Err(StoreError::Corrupt(format!(
+                    "manifest line {}: expected 'key = value', got '{raw}'",
+                    lineno + 1
+                )));
+            };
+            let (key, value) = (key.trim(), value.trim().trim_matches('"'));
+            let bad = |what: &str| {
+                StoreError::Corrupt(format!("manifest line {}: bad {what}", lineno + 1))
+            };
+            match key {
+                "format" => format = Some(value.parse().map_err(|_| bad("format"))?),
+                "m" | "n" | "zeta" | "c" | "l" | "ml_kind" | "node" | "shards" => {
+                    cfg_lines.push_str(raw);
+                    cfg_lines.push('\n');
+                }
+                "placement" => placement = Some(value.to_string()),
+                "prefix_k" => prefix_k = Some(value.parse().map_err(|_| bad("prefix_k"))?),
+                "prefix_positions" => {
+                    let mut out = Vec::new();
+                    for part in value.split(',').filter(|p| !p.trim().is_empty()) {
+                        out.push(part.trim().parse().map_err(|_| bad("prefix_positions"))?);
+                    }
+                    prefix_positions = Some(out);
+                }
+                other => {
+                    return Err(StoreError::Corrupt(format!(
+                        "manifest line {}: unknown key '{other}'",
+                        lineno + 1
+                    )))
+                }
+            }
+        }
+        match format {
+            Some(MANIFEST_FORMAT) => {}
+            Some(v) => {
+                return Err(StoreError::Incompatible(format!(
+                    "manifest format {v}, this build reads {MANIFEST_FORMAT}"
+                )))
+            }
+            None => return Err(StoreError::Corrupt("manifest is missing 'format'".into())),
+        }
+        let cfg = DesignConfig::from_kv(&cfg_lines)
+            .map_err(|e| StoreError::Corrupt(format!("manifest geometry: {e}")))?;
+        let placement = match placement.as_deref() {
+            Some("hash") => PlacementSpec::Hash,
+            Some("broadcast") => PlacementSpec::Broadcast,
+            Some("prefix") => {
+                let k = prefix_k.ok_or_else(|| {
+                    StoreError::Corrupt("prefix placement without prefix_k".into())
+                })?;
+                let positions = prefix_positions.ok_or_else(|| {
+                    StoreError::Corrupt("prefix placement without prefix_positions".into())
+                })?;
+                PlacementSpec::Prefix { k, positions }
+            }
+            Some(other) => {
+                return Err(StoreError::Corrupt(format!("unknown placement '{other}'")))
+            }
+            None => return Err(StoreError::Corrupt("manifest is missing 'placement'".into())),
+        };
+        // prefix sanity (bounds against this manifest's own N)
+        placement.to_mode(cfg.n)?;
+        Ok(FleetManifest { cfg, placement })
+    }
+
+    /// Load `dir/fleet.kv`.
+    pub fn load(dir: &Path) -> Result<FleetManifest, StoreError> {
+        let text = std::fs::read_to_string(dir.join(MANIFEST_FILE))?;
+        Self::from_kv(&text)
+    }
+
+    /// Atomically and durably write `dir/fleet.kv` ([`atomic_write`]) — a
+    /// crash can leave the old manifest or the new one, never an
+    /// empty/partial file that would refuse every future startup.
+    pub fn store(&self, dir: &Path) -> Result<(), StoreError> {
+        atomic_write(&dir.join(MANIFEST_FILE), self.to_kv().as_bytes())
+    }
+
+    /// Refuse an open whose geometry or placement contradicts this
+    /// manifest.  The placement only has to match in *kind* — for
+    /// learned-prefix fleets the manifest's recorded positions win over a
+    /// freshly learned selection, so routing stays stable across restarts.
+    pub fn check_compatible(
+        &self,
+        cfg: &DesignConfig,
+        requested: &PlacementMode,
+    ) -> Result<(), StoreError> {
+        if self.cfg != *cfg {
+            return Err(StoreError::Incompatible(format!(
+                "fleet manifest records M={} N={} ζ={} c={} l={} shards={}, \
+                 requested M={} N={} ζ={} c={} l={} shards={}",
+                self.cfg.m,
+                self.cfg.n,
+                self.cfg.zeta,
+                self.cfg.c,
+                self.cfg.l,
+                self.cfg.shards,
+                cfg.m,
+                cfg.n,
+                cfg.zeta,
+                cfg.c,
+                cfg.l,
+                cfg.shards
+            )));
+        }
+        let requested_kind = PlacementSpec::from_mode(requested).kind_name();
+        if self.placement.kind_name() != requested_kind {
+            return Err(StoreError::Incompatible(format!(
+                "fleet manifest records '{}' placement, requested '{requested_kind}'",
+                self.placement.kind_name()
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use crate::workload::TagDistribution;
+    use std::path::PathBuf;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("cscam-store-{}", std::process::id()))
+            .join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn durable_bank_survives_reopen_bit_identically() {
+        let dir = tmp_dir("bank-roundtrip");
+        let cfg = DesignConfig::small_test();
+        let mut rng = Rng::seed_from_u64(42);
+        let tags = TagDistribution::Uniform.sample_distinct(cfg.n, 30, &mut rng);
+
+        let mut reference = LookupEngine::new(cfg.clone());
+        {
+            let (mut bank, report) =
+                DurableBank::open(&dir, cfg.clone(), StoreOptions::default()).unwrap();
+            assert_eq!(report, RecoveryReport::default());
+            for t in &tags {
+                assert_eq!(bank.insert(t).unwrap(), reference.insert(t).unwrap());
+            }
+            bank.delete(4).unwrap();
+            reference.delete(4).unwrap();
+            // dropped here without flush or compaction: the crash case
+        }
+        let (mut bank, report) =
+            DurableBank::open(&dir, cfg.clone(), StoreOptions::default()).unwrap();
+        assert!(!report.snapshot_loaded);
+        assert_eq!(report.wal_records, 31);
+        assert_eq!(report.occupancy, 29);
+        for t in &tags {
+            assert_eq!(bank.lookup(t).unwrap(), reference.lookup(t).unwrap());
+        }
+    }
+
+    #[test]
+    fn compaction_snapshots_and_truncates_preserving_state() {
+        let dir = tmp_dir("bank-compact");
+        let cfg = DesignConfig::small_test();
+        let mut rng = Rng::seed_from_u64(43);
+        let tags = TagDistribution::Uniform.sample_distinct(cfg.n, 24, &mut rng);
+
+        let mut reference = LookupEngine::new(cfg.clone());
+        {
+            let (mut bank, _) =
+                DurableBank::open(&dir, cfg.clone(), StoreOptions::default()).unwrap();
+            for t in tags.iter().take(12) {
+                bank.insert(t).unwrap();
+                reference.insert(t).unwrap();
+            }
+            bank.compact().unwrap();
+            assert!(dir.join(SNAPSHOT_FILE).exists());
+            // post-compaction mutations land in the (now empty) WAL
+            for t in tags.iter().skip(12) {
+                bank.insert(t).unwrap();
+                reference.insert(t).unwrap();
+            }
+            bank.delete(2).unwrap();
+            reference.delete(2).unwrap();
+        }
+        let (mut bank, report) =
+            DurableBank::open(&dir, cfg.clone(), StoreOptions::default()).unwrap();
+        assert!(report.snapshot_loaded);
+        assert_eq!(report.wal_records, 13);
+        for t in &tags {
+            assert_eq!(bank.lookup(t).unwrap(), reference.lookup(t).unwrap());
+        }
+    }
+
+    #[test]
+    fn automatic_compaction_fires_past_the_threshold() {
+        let dir = tmp_dir("bank-auto-compact");
+        let cfg = DesignConfig::small_test();
+        let opts = StoreOptions { fsync: FsyncPolicy::Never, compact_bytes: 256 };
+        let mut rng = Rng::seed_from_u64(44);
+        let tags = TagDistribution::Uniform.sample_distinct(cfg.n, 40, &mut rng);
+        let (mut bank, _) = DurableBank::open(&dir, cfg.clone(), opts).unwrap();
+        for t in &tags {
+            bank.insert(t).unwrap();
+        }
+        assert!(dir.join(SNAPSHOT_FILE).exists(), "threshold crossing must compact");
+        assert!(
+            bank.store.wal_len_bytes() <= 256 + wal::WAL_HEADER_LEN + 64,
+            "WAL stays near the threshold after compaction"
+        );
+        drop(bank);
+        let (bank, report) = DurableBank::open(&dir, cfg, opts).unwrap();
+        assert!(report.snapshot_loaded);
+        assert_eq!(bank.occupancy(), 40);
+    }
+
+    #[test]
+    fn geometry_mismatch_is_refused() {
+        let dir = tmp_dir("bank-mismatch");
+        let cfg = DesignConfig::small_test();
+        {
+            let (mut bank, _) = DurableBank::open(&dir, cfg.clone(), StoreOptions::default())
+                .unwrap();
+            let mut rng = Rng::seed_from_u64(45);
+            let tags = TagDistribution::Uniform.sample_distinct(cfg.n, 4, &mut rng);
+            for t in &tags {
+                bank.insert(t).unwrap();
+            }
+            bank.compact().unwrap();
+        }
+        let mut other = cfg.clone();
+        other.m = 128;
+        assert!(matches!(
+            DurableBank::open(&dir, other, StoreOptions::default()),
+            Err(StoreError::Incompatible(_))
+        ));
+    }
+
+    #[test]
+    fn manifest_roundtrips_all_placements() {
+        let cfg = DesignConfig { shards: 4, ..DesignConfig::reference() };
+        for placement in [
+            PlacementSpec::Hash,
+            PlacementSpec::Broadcast,
+            PlacementSpec::Prefix { k: 2, positions: vec![3, 17, 40, 99] },
+        ] {
+            let m = FleetManifest { cfg: cfg.clone(), placement };
+            let back = FleetManifest::from_kv(&m.to_kv()).unwrap();
+            assert_eq!(back, m);
+            back.check_compatible(&cfg, &back.placement.to_mode(cfg.n).unwrap()).unwrap();
+        }
+    }
+
+    #[test]
+    fn manifest_refuses_drifted_fleets() {
+        let cfg = DesignConfig { shards: 4, ..DesignConfig::reference() };
+        let m = FleetManifest { cfg: cfg.clone(), placement: PlacementSpec::Hash };
+        let other = DesignConfig { shards: 8, ..cfg.clone() };
+        assert!(matches!(
+            m.check_compatible(&other, &PlacementMode::TagHash),
+            Err(StoreError::Incompatible(_))
+        ));
+        assert!(matches!(
+            m.check_compatible(&cfg, &PlacementMode::Broadcast),
+            Err(StoreError::Incompatible(_))
+        ));
+    }
+
+    #[test]
+    fn manifest_parser_is_total_on_garbage() {
+        for text in [
+            "",
+            "format = 1",
+            "format = 99\nplacement = \"hash\"\n",
+            "format = 1\nplacement = \"warp\"\nm = 512\n",
+            "format = 1\nplacement = \"prefix\"\n", // missing prefix keys
+            "format = 1\nplacement = \"hash\"\nbogus = 3\n",
+            "format = 1\nplacement = \"hash\"\nm = banana\n",
+            "no equals sign here",
+        ] {
+            assert!(FleetManifest::from_kv(text).is_err(), "accepted: {text:?}");
+        }
+    }
+}

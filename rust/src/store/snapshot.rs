@@ -1,0 +1,405 @@
+//! The snapshot codec: one bank's full engine image in a versioned,
+//! checksummed binary file.
+//!
+//! File layout (all little-endian, built on [`crate::util::codec`]):
+//!
+//! ```text
+//! [magic "CSSS"][version u16][reserved u16 = 0]
+//! [payload_len u64][checksum u64]                    -- FNV-1a of payload
+//! [payload]
+//! ```
+//!
+//! The payload serializes everything [`LookupEngine`] needs to come back
+//! *bit-identical*: the design geometry, the tag-bit selection, the CNN
+//! weight rows (including stale superposed weights — recomputing them from
+//! the live tags would change λ and energy), the CAM rows + valid bits,
+//! the stale-delete counter, the retrain threshold and the insert cursor.
+//! Decoding is total: every malformed input — wrong magic, unknown
+//! version, length or checksum mismatch, geometry that fails
+//! [`DesignConfig::validate`], bit vectors with tail garbage — surfaces as
+//! a typed [`StoreError`], never a panic (the codec fuzz battery flips
+//! every byte of a valid file and asserts exactly this).
+//!
+//! Compatibility rule: strict version equality, like the WAL and unlike
+//! the wire (which is a live conversation and can negotiate); a newer
+//! build that changes the payload layout must bump
+//! [`SNAPSHOT_VERSION`] and readers refuse the mismatch with
+//! [`StoreError::Incompatible`].
+//!
+//! Writes are atomic: the image goes to `<path>.tmp`, is synced, then
+//! renamed over the old snapshot — a crash mid-write leaves the previous
+//! snapshot intact.
+
+use std::path::Path;
+
+use crate::bits::BitVec;
+use crate::cam::{CamArray, MatchlineKind};
+use crate::cnn::{ClusteredNetwork, Selection};
+use crate::config::DesignConfig;
+use crate::coordinator::engine::LookupEngine;
+use crate::store::StoreError;
+use crate::util::codec::{put_bitvec, put_f64, put_u32, put_u64, Cursor};
+use crate::util::hash::fnv1a_bytes;
+
+/// Snapshot file magic.
+pub const SNAPSHOT_MAGIC: [u8; 4] = *b"CSSS";
+
+/// On-disk snapshot format version (strict-equality compatibility).
+pub const SNAPSHOT_VERSION: u16 = 1;
+
+/// Bytes before the payload.
+pub const SNAPSHOT_HEADER_LEN: usize = 24;
+
+/// Sanity bound on every geometry scalar read from disk — far past any
+/// design point, tight enough that corrupt lengths cannot drive giant
+/// loops or allocations.
+const MAX_GEOM: u64 = 1 << 20;
+
+/// A decoded (or to-be-encoded) bank image.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BankImage {
+    pub cfg: DesignConfig,
+    /// Tag-bit selection: positions (cluster-major) and bits per cluster.
+    pub positions: Vec<u32>,
+    pub k: u32,
+    /// CNN weight rows, `c·l` rows of `m` bits (stale weights included).
+    pub rows: Vec<BitVec>,
+    /// CAM rows, `m` tags of `n` bits (invalid slots keep residual bits).
+    pub tags: Vec<BitVec>,
+    /// Valid bits, `m` of them.
+    pub valid: BitVec,
+    pub stale_deletes: u64,
+    pub retrain_threshold: f64,
+    pub insert_cursor: u64,
+    /// The WAL generation this image subsumes: on recovery, a log with an
+    /// *older* generation is discarded (its records are already in here —
+    /// a crash interrupted the compaction between snapshot and log reset).
+    /// Stamped by [`crate::store::BankStore::compact`]; 0 for an image
+    /// that has never been through a compaction cycle.
+    pub wal_generation: u64,
+}
+
+impl BankImage {
+    /// Capture a live engine.
+    pub fn from_engine(e: &LookupEngine) -> BankImage {
+        BankImage {
+            cfg: e.config().clone(),
+            positions: e.selection().positions().iter().map(|&p| p as u32).collect(),
+            k: e.selection().k() as u32,
+            rows: e.network().rows().to_vec(),
+            tags: e.cam().tags().to_vec(),
+            valid: e.cam().valid_bits().clone(),
+            stale_deletes: e.stale_delete_count() as u64,
+            retrain_threshold: e.retrain_threshold,
+            insert_cursor: e.insert_cursor() as u64,
+            wal_generation: 0,
+        }
+    }
+
+    /// Rebuild the engine.  Every structural invariant is re-validated
+    /// (the image may have been decoded from disk).
+    pub fn into_engine(self) -> Result<LookupEngine, StoreError> {
+        let k = self.k as usize;
+        if k == 0 || self.positions.len() % k != 0 {
+            return Err(StoreError::Corrupt(format!(
+                "selection of {} positions does not fill whole {k}-bit clusters",
+                self.positions.len()
+            )));
+        }
+        let positions: Vec<usize> = self.positions.iter().map(|&p| p as usize).collect();
+        let selection = Selection::explicit(positions, k);
+        let net = ClusteredNetwork::from_rows(
+            self.cfg.c,
+            self.cfg.l,
+            self.cfg.m,
+            self.cfg.zeta,
+            self.rows,
+        )
+        .map_err(StoreError::Corrupt)?;
+        let cam = CamArray::from_parts(self.cfg.n, self.cfg.zeta, self.tags, self.valid)
+            .map_err(StoreError::Corrupt)?;
+        LookupEngine::from_parts(
+            self.cfg,
+            selection,
+            net,
+            cam,
+            self.stale_deletes as usize,
+            self.retrain_threshold,
+            self.insert_cursor as usize,
+        )
+        .map_err(StoreError::Corrupt)
+    }
+
+    /// Serialize to complete file bytes (header + checksummed payload).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut p = Vec::new();
+        put_u64(&mut p, self.cfg.m as u64);
+        put_u64(&mut p, self.cfg.n as u64);
+        put_u64(&mut p, self.cfg.zeta as u64);
+        put_u64(&mut p, self.cfg.c as u64);
+        put_u64(&mut p, self.cfg.l as u64);
+        put_u64(&mut p, self.cfg.shards as u64);
+        p.push(match self.cfg.ml_kind {
+            MatchlineKind::Nor => 0,
+            MatchlineKind::Nand => 1,
+        });
+        put_u32(&mut p, self.cfg.node.len() as u32);
+        p.extend_from_slice(self.cfg.node.as_bytes());
+        put_u32(&mut p, self.k);
+        put_u32(&mut p, self.positions.len() as u32);
+        for &pos in &self.positions {
+            put_u32(&mut p, pos);
+        }
+        put_f64(&mut p, self.retrain_threshold);
+        put_u64(&mut p, self.stale_deletes);
+        put_u64(&mut p, self.insert_cursor);
+        put_u64(&mut p, self.wal_generation);
+        put_bitvec(&mut p, &self.valid);
+        for t in &self.tags {
+            put_bitvec(&mut p, t);
+        }
+        for r in &self.rows {
+            put_bitvec(&mut p, r);
+        }
+
+        let mut out = Vec::with_capacity(SNAPSHOT_HEADER_LEN + p.len());
+        out.extend_from_slice(&SNAPSHOT_MAGIC);
+        out.extend_from_slice(&SNAPSHOT_VERSION.to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes());
+        out.extend_from_slice(&(p.len() as u64).to_le_bytes());
+        out.extend_from_slice(&fnv1a_bytes(&p).to_le_bytes());
+        out.extend_from_slice(&p);
+        out
+    }
+
+    /// Decode complete file bytes.  Total — see the module docs.
+    pub fn decode(data: &[u8]) -> Result<BankImage, StoreError> {
+        if data.len() < SNAPSHOT_HEADER_LEN {
+            return Err(StoreError::Corrupt(format!(
+                "snapshot of {} bytes is shorter than its {SNAPSHOT_HEADER_LEN}-byte header",
+                data.len()
+            )));
+        }
+        if data[..4] != SNAPSHOT_MAGIC {
+            return Err(StoreError::Corrupt("bad magic in snapshot header".into()));
+        }
+        let version = u16::from_le_bytes([data[4], data[5]]);
+        if version != SNAPSHOT_VERSION {
+            return Err(StoreError::Incompatible(format!(
+                "snapshot format version {version}, this build reads {SNAPSHOT_VERSION}"
+            )));
+        }
+        if data[6] != 0 || data[7] != 0 {
+            return Err(StoreError::Corrupt("nonzero reserved bytes in snapshot header".into()));
+        }
+        let payload_len = u64::from_le_bytes(<[u8; 8]>::try_from(&data[8..16]).expect("8 bytes"));
+        let payload = &data[SNAPSHOT_HEADER_LEN..];
+        if payload_len != payload.len() as u64 {
+            return Err(StoreError::Corrupt(format!(
+                "snapshot payload length {payload_len} != {} bytes present",
+                payload.len()
+            )));
+        }
+        let want = u64::from_le_bytes(<[u8; 8]>::try_from(&data[16..24]).expect("8 bytes"));
+        let got = fnv1a_bytes(payload);
+        if want != got {
+            return Err(StoreError::Corrupt(format!(
+                "snapshot checksum mismatch: header {want:#018x}, computed {got:#018x}"
+            )));
+        }
+
+        let mut c = Cursor::new(payload);
+        let geom = |what: &str, v: u64| -> Result<usize, StoreError> {
+            if v == 0 || v > MAX_GEOM {
+                return Err(StoreError::Corrupt(format!("{what} = {v} out of range")));
+            }
+            Ok(v as usize)
+        };
+        let m = geom("M", c.take_u64()?)?;
+        let n = geom("N", c.take_u64()?)?;
+        let zeta = geom("ζ", c.take_u64()?)?;
+        let cl_c = geom("c", c.take_u64()?)?;
+        let l = geom("l", c.take_u64()?)?;
+        let shards = geom("shards", c.take_u64()?)?;
+        let ml_kind = match c.take_u8()? {
+            0 => MatchlineKind::Nor,
+            1 => MatchlineKind::Nand,
+            other => {
+                return Err(StoreError::Corrupt(format!("unknown match-line kind {other}")))
+            }
+        };
+        let node_len = c.take_u32()? as usize;
+        if node_len > c.remaining() {
+            return Err(StoreError::Corrupt(format!(
+                "node name of {node_len} bytes exceeds the remaining payload"
+            )));
+        }
+        let node = String::from_utf8(c.take(node_len)?.to_vec())
+            .map_err(|_| StoreError::Corrupt("node name is not UTF-8".into()))?;
+        let cfg = DesignConfig { m, n, zeta, c: cl_c, l, ml_kind, node, shards };
+        cfg.validate().map_err(|e| StoreError::Corrupt(format!("invalid geometry: {e}")))?;
+
+        let k = c.take_u32()?;
+        let npos = c.take_u32()? as usize;
+        if k as usize != cfg.k() || npos != cfg.q() {
+            return Err(StoreError::Corrupt(format!(
+                "selection geometry (k={k}, q={npos}) does not match the config (k={}, q={})",
+                cfg.k(),
+                cfg.q()
+            )));
+        }
+        let mut positions = Vec::with_capacity(npos.min(c.remaining() / 4));
+        for _ in 0..npos {
+            let pos = c.take_u32()?;
+            if pos as usize >= cfg.n {
+                return Err(StoreError::Corrupt(format!(
+                    "selection position {pos} out of range for N={}",
+                    cfg.n
+                )));
+            }
+            positions.push(pos);
+        }
+        let retrain_threshold = c.take_f64()?;
+        let stale_deletes = c.take_u64()?;
+        let insert_cursor = c.take_u64()?;
+        let wal_generation = c.take_u64()?;
+
+        let valid = c.take_bitvec()?;
+        if valid.len() != cfg.m {
+            return Err(StoreError::Corrupt(format!(
+                "valid bits length {} != M={}",
+                valid.len(),
+                cfg.m
+            )));
+        }
+        let mut tags = Vec::new();
+        for a in 0..cfg.m {
+            let t = c.take_bitvec()?;
+            if t.len() != cfg.n {
+                return Err(StoreError::Corrupt(format!(
+                    "tag at address {a} is {} bits, expected N={}",
+                    t.len(),
+                    cfg.n
+                )));
+            }
+            tags.push(t);
+        }
+        let mut rows = Vec::new();
+        for i in 0..cfg.cl() {
+            let r = c.take_bitvec()?;
+            if r.len() != cfg.m {
+                return Err(StoreError::Corrupt(format!(
+                    "weight row {i} is {} bits, expected M={}",
+                    r.len(),
+                    cfg.m
+                )));
+            }
+            rows.push(r);
+        }
+        c.finish()?;
+        Ok(BankImage {
+            cfg,
+            positions,
+            k,
+            rows,
+            tags,
+            valid,
+            stale_deletes,
+            retrain_threshold,
+            insert_cursor,
+            wal_generation,
+        })
+    }
+
+    /// Atomically and durably persist ([`crate::store::atomic_write`]):
+    /// tmp file, fsync, rename over `path`, best-effort directory sync.
+    pub fn write_to(&self, path: &Path) -> Result<(), StoreError> {
+        crate::store::atomic_write(path, &self.encode())
+    }
+
+    /// Load and validate a snapshot file.
+    pub fn read_from(path: &Path) -> Result<BankImage, StoreError> {
+        let data = std::fs::read(path)?;
+        Self::decode(&data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use crate::workload::TagDistribution;
+
+    fn populated_engine() -> LookupEngine {
+        let mut e = LookupEngine::new(DesignConfig::small_test());
+        e.retrain_threshold = 0.0;
+        let mut rng = Rng::seed_from_u64(17);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 40, &mut rng);
+        for t in &tags {
+            e.insert(t).unwrap();
+        }
+        for a in [3usize, 9, 20] {
+            e.delete(a).unwrap();
+        }
+        e
+    }
+
+    #[test]
+    fn image_roundtrips_through_bytes_bit_identically() {
+        let mut original = populated_engine();
+        let image = BankImage::from_engine(&original);
+        let decoded = BankImage::decode(&image.encode()).unwrap();
+        assert_eq!(decoded, image);
+        let mut restored = decoded.into_engine().unwrap();
+        assert_eq!(restored.occupancy(), original.occupancy());
+        assert_eq!(restored.stale_delete_count(), original.stale_delete_count());
+        assert_eq!(restored.insert_cursor(), original.insert_cursor());
+        let mut rng = Rng::seed_from_u64(18);
+        let probes = TagDistribution::Uniform.sample_distinct(32, 32, &mut rng);
+        for t in &probes {
+            assert_eq!(original.lookup(t).unwrap(), restored.lookup(t).unwrap());
+        }
+    }
+
+    #[test]
+    fn file_roundtrip_is_atomic_and_identical() {
+        let dir = std::env::temp_dir().join(format!("cscam-snap-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bank.snap");
+        let engine = populated_engine();
+        let image = BankImage::from_engine(&engine);
+        image.write_to(&path).unwrap();
+        assert!(!path.with_extension("tmp").exists(), "tmp file renamed away");
+        assert_eq!(BankImage::read_from(&path).unwrap(), image);
+    }
+
+    #[test]
+    fn header_tampering_is_a_typed_error() {
+        let image = BankImage::from_engine(&populated_engine());
+        let good = image.encode();
+
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(matches!(BankImage::decode(&bad), Err(StoreError::Corrupt(_))));
+
+        let mut bad = good.clone();
+        bad[4] = 99; // version
+        assert!(matches!(BankImage::decode(&bad), Err(StoreError::Incompatible(_))));
+
+        let mut bad = good.clone();
+        bad[6] = 1; // reserved
+        assert!(matches!(BankImage::decode(&bad), Err(StoreError::Corrupt(_))));
+
+        let mut bad = good.clone();
+        *bad.last_mut().unwrap() ^= 0x01; // payload bit → checksum mismatch
+        assert!(matches!(BankImage::decode(&bad), Err(StoreError::Corrupt(_))));
+
+        let mut bad = good.clone();
+        bad.push(0); // trailing byte → length mismatch
+        assert!(matches!(BankImage::decode(&bad), Err(StoreError::Corrupt(_))));
+
+        assert!(BankImage::decode(&good[..good.len() - 1]).is_err());
+        assert!(BankImage::decode(&good[..10]).is_err());
+        assert!(BankImage::decode(&[]).is_err());
+    }
+}

@@ -1,0 +1,630 @@
+//! The per-bank write-ahead log: an append-only file of Insert/Delete
+//! records in length-prefixed, checksummed frames.
+//!
+//! File layout (all little-endian):
+//!
+//! ```text
+//! [magic "CSWL"][version u16][reserved u16 = 0][generation u64]
+//! [len u32][checksum u64][op u8][payload] ...        -- frames, appended
+//! ```
+//!
+//! The **generation** ties the log to the snapshot that precedes it: a
+//! compaction writes the snapshot stamped with generation `g+1`, then
+//! resets the log to generation `g+1`.  If a crash lands between those
+//! two steps, the reopened store sees a log whose generation is *older*
+//! than the snapshot's and discards it wholesale — its records are
+//! already inside the snapshot, and replaying them against it would
+//! double-apply every insert (inflating the stale-delete counter and
+//! potentially firing a spurious retrain, breaking bit-identical
+//! recovery).  The reconciliation lives in
+//! [`crate::store::BankStore::open`]; the log itself only records and
+//! reports the number.
+//!
+//! `len` counts everything after itself (checksum + op + payload) and the
+//! checksum is FNV-1a ([`crate::util::hash`], the same definition that
+//! checksums wire frames) over the op byte and payload.  Appends are
+//! *write-through*: every frame reaches the OS with a single `write(2)`
+//! before the caller's mutation is acknowledged, so acknowledged records
+//! survive a killed process unconditionally; surviving power loss
+//! additionally needs an [`FsyncPolicy`] that syncs.
+//!
+//! **Torn-tail rule**: on open, frames are replayed in order until the
+//! first invalid one (truncated mid-frame, bad length, bad checksum, or an
+//! undecodable record).  Everything from that point on is discarded and
+//! the file is truncated back to the last good frame — a crash mid-append
+//! costs at most the unacknowledged tail, never the log.  The discarded
+//! byte count is reported in [`WalRecovery`], so callers can distinguish
+//! a clean open from a repaired one.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::Path;
+
+use crate::bits::BitVec;
+use crate::store::StoreError;
+use crate::util::codec::{put_bitvec, put_u64, Cursor};
+use crate::util::hash::{fnv1a_bytes, Fnv1a};
+
+/// WAL file magic.
+pub const WAL_MAGIC: [u8; 4] = *b"CSWL";
+
+/// On-disk WAL format version.  Compatibility rule: strict equality — a
+/// reader refuses (typed [`StoreError::Incompatible`]) rather than guess
+/// at an unknown layout.
+pub const WAL_VERSION: u16 = 1;
+
+/// Header bytes before the first frame (magic + version + reserved +
+/// generation).
+pub const WAL_HEADER_LEN: u64 = 16;
+
+/// Upper bound on one WAL frame (1 MiB) — rejects garbage lengths before
+/// any allocation; real records are a few dozen bytes (one tag plus an
+/// address).
+pub const MAX_WAL_FRAME_LEN: u32 = 1 << 20;
+
+/// Record opcodes.
+pub const WAL_OP_INSERT: u8 = 1;
+pub const WAL_OP_DELETE: u8 = 2;
+
+/// When the log syncs to the disk (not just to the OS).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// Never fsync: acknowledged records survive a killed *process* (the
+    /// OS holds them) but not a power loss.  The default.
+    Never,
+    /// `fdatasync` after every append: full durability, slowest.
+    Always,
+    /// `fdatasync` every N appends: bounded loss window under power
+    /// failure.  `EveryN(1)` behaves like [`FsyncPolicy::Always`].
+    EveryN(usize),
+}
+
+/// One logged mutation.  `Insert` carries the address the engine chose so
+/// replay is [`crate::coordinator::LookupEngine::insert_at`] — replacement
+/// semantics and CNN training order reproduce exactly.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WalRecord {
+    Insert { addr: u64, tag: BitVec },
+    Delete { addr: u64 },
+}
+
+impl WalRecord {
+    pub fn op(&self) -> u8 {
+        match self {
+            WalRecord::Insert { .. } => WAL_OP_INSERT,
+            WalRecord::Delete { .. } => WAL_OP_DELETE,
+        }
+    }
+
+    pub fn encode_payload(&self, buf: &mut Vec<u8>) {
+        match self {
+            WalRecord::Insert { addr, tag } => {
+                put_u64(buf, *addr);
+                put_bitvec(buf, tag);
+            }
+            WalRecord::Delete { addr } => put_u64(buf, *addr),
+        }
+    }
+
+    /// Decode a record payload.  Total: corrupt input yields a typed
+    /// [`StoreError::Corrupt`], never a panic (the codec fuzz battery
+    /// hammers this path).
+    pub fn decode(op: u8, payload: &[u8]) -> Result<WalRecord, StoreError> {
+        let mut c = Cursor::new(payload);
+        let rec = match op {
+            WAL_OP_INSERT => WalRecord::Insert { addr: c.take_u64()?, tag: c.take_bitvec()? },
+            WAL_OP_DELETE => WalRecord::Delete { addr: c.take_u64()? },
+            other => return Err(StoreError::Corrupt(format!("unknown WAL op {other}"))),
+        };
+        c.finish()?;
+        Ok(rec)
+    }
+}
+
+/// Frame an already-encoded payload: `[len][checksum][op][payload]`.
+fn frame_from(op: u8, payload: &[u8]) -> Vec<u8> {
+    let mut h = Fnv1a::new();
+    h.update(&[op]);
+    h.update(payload);
+    let len = (8 + 1 + payload.len()) as u32;
+    let mut out = Vec::with_capacity(4 + len as usize);
+    out.extend_from_slice(&len.to_le_bytes());
+    out.extend_from_slice(&h.finish().to_le_bytes());
+    out.push(op);
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Serialize one frame: `[len][checksum][op][payload]`.
+pub fn encode_frame(rec: &WalRecord) -> Vec<u8> {
+    let mut payload = Vec::new();
+    rec.encode_payload(&mut payload);
+    frame_from(rec.op(), &payload)
+}
+
+/// Borrowed-tag sibling of [`encode_frame`] for the insert hot path: the
+/// serving thread logs every acknowledged insert, and cloning the tag just
+/// to serialize it into a [`WalRecord`] and drop it would cost an
+/// allocation per write.  Byte-identical to the owned encoding (asserted
+/// in the tests, like the wire protocol's borrowed writers).
+pub fn encode_insert_frame(addr: u64, tag: &BitVec) -> Vec<u8> {
+    let mut payload = Vec::new();
+    put_u64(&mut payload, addr);
+    put_bitvec(&mut payload, tag);
+    frame_from(WAL_OP_INSERT, &payload)
+}
+
+/// One parsing step over the raw frame region.
+enum FrameStep {
+    /// A whole valid frame: `consumed` bytes yielding `record`.
+    Complete { consumed: usize, record: WalRecord },
+    /// Clean end of the log.
+    End,
+    /// The torn/corrupt tail starts here (reason kept for the report).
+    Torn(String),
+}
+
+fn parse_frame(buf: &[u8]) -> FrameStep {
+    if buf.is_empty() {
+        return FrameStep::End;
+    }
+    if buf.len() < 4 {
+        return FrameStep::Torn("partial length prefix".into());
+    }
+    let len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]);
+    if len < 9 || len > MAX_WAL_FRAME_LEN {
+        return FrameStep::Torn(format!("frame length {len} out of range"));
+    }
+    let len = len as usize;
+    if buf.len() < 4 + len {
+        return FrameStep::Torn(format!("frame needs {len} bytes, {} present", buf.len() - 4));
+    }
+    let body = &buf[4..4 + len];
+    let want = u64::from_le_bytes(<[u8; 8]>::try_from(&body[0..8]).expect("8 bytes"));
+    let got = fnv1a_bytes(&body[8..]);
+    if want != got {
+        return FrameStep::Torn(format!(
+            "frame checksum mismatch: header {want:#018x}, computed {got:#018x}"
+        ));
+    }
+    match WalRecord::decode(body[8], &body[9..]) {
+        Ok(record) => FrameStep::Complete { consumed: 4 + len, record },
+        Err(e) => FrameStep::Torn(format!("undecodable record: {e}")),
+    }
+}
+
+/// What [`Wal::open`] found (and repaired) on disk.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct WalRecovery {
+    /// Complete records replayed.
+    pub records: usize,
+    /// Bytes discarded from the torn/corrupt tail (0 on a clean open).
+    pub truncated_bytes: u64,
+    /// Why the tail was discarded, when it was.
+    pub torn_reason: Option<String>,
+}
+
+/// The exact 16 header bytes for a given generation.
+fn header_bytes(generation: u64) -> [u8; 16] {
+    let mut h = [0u8; 16];
+    h[..4].copy_from_slice(&WAL_MAGIC);
+    h[4..6].copy_from_slice(&WAL_VERSION.to_le_bytes());
+    h[8..16].copy_from_slice(&generation.to_le_bytes());
+    h
+}
+
+/// An open, append-position WAL file.
+///
+/// The handle is always opened with `O_APPEND`, so every write lands at
+/// the current end of file — in particular, appends issued *after* a
+/// compaction's `set_len` go to the new, shorter end rather than the
+/// stale pre-truncation offset (a plain write-mode cursor would leave a
+/// zero-filled hole there and doom every later record at replay).
+pub struct Wal {
+    file: File,
+    /// Current on-disk length (header + complete frames).
+    len: u64,
+    /// Snapshot lineage this log extends (see the module docs).
+    generation: u64,
+    policy: FsyncPolicy,
+    appends_since_sync: usize,
+    /// Set when a failed append could not be rolled back: the tail may
+    /// hold a partial frame, so further appends would be silently
+    /// unrecoverable and are refused instead.
+    poisoned: bool,
+}
+
+impl Wal {
+    /// Open (creating if absent), validate the header, replay every
+    /// complete frame, and truncate the torn tail if there is one.
+    /// Returns the log positioned for appending plus the replayed records.
+    pub fn open(
+        path: &Path,
+        policy: FsyncPolicy,
+    ) -> Result<(Wal, Vec<WalRecord>, WalRecovery), StoreError> {
+        let data = match std::fs::read(path) {
+            Ok(d) => d,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(StoreError::Io(e)),
+        };
+        let mut recovery = WalRecovery::default();
+
+        if data.len() < WAL_HEADER_LEN as usize {
+            // Absent, empty, or torn mid-create/mid-reset.  A short file
+            // is only repaired when its first bytes match the fixed part
+            // of the header this build writes (magic, version, reserved —
+            // the generation bytes may be any torn value); anything else
+            // is some other file, and rewriting it would destroy data we
+            // do not understand (the same refusal rule as a wrong magic).
+            let fixed = header_bytes(0);
+            let check = data.len().min(8);
+            if !data.is_empty() && data[..check] != fixed[..check] {
+                return Err(StoreError::Corrupt(
+                    "file too short to be a WAL and not a torn header".into(),
+                ));
+            }
+            recovery.truncated_bytes = data.len() as u64;
+            if !data.is_empty() {
+                recovery.torn_reason = Some("torn file header".into());
+            }
+            // A torn reset loses the generation; restarting at 0 is safe
+            // because the snapshot reconciliation in BankStore::open
+            // discards any log older than the snapshot's generation.
+            {
+                let mut f = OpenOptions::new()
+                    .write(true)
+                    .create(true)
+                    .truncate(true)
+                    .open(path)?;
+                f.write_all(&header_bytes(0))?;
+                f.sync_data()?;
+            }
+            let file = OpenOptions::new().read(true).append(true).open(path)?;
+            let wal = Wal {
+                file,
+                len: WAL_HEADER_LEN,
+                generation: 0,
+                policy,
+                appends_since_sync: 0,
+                poisoned: false,
+            };
+            return Ok((wal, Vec::new(), recovery));
+        }
+
+        if data[..4] != WAL_MAGIC {
+            // Wrong magic is NOT a torn tail: this is some other file, and
+            // truncating it would destroy data we do not understand.
+            return Err(StoreError::Corrupt("bad magic in WAL header".into()));
+        }
+        let version = u16::from_le_bytes([data[4], data[5]]);
+        if version != WAL_VERSION {
+            return Err(StoreError::Incompatible(format!(
+                "WAL format version {version}, this build reads {WAL_VERSION}"
+            )));
+        }
+        if data[6] != 0 || data[7] != 0 {
+            return Err(StoreError::Corrupt("nonzero reserved bytes in WAL header".into()));
+        }
+        let generation = u64::from_le_bytes(<[u8; 8]>::try_from(&data[8..16]).expect("8 bytes"));
+
+        let mut records = Vec::new();
+        let mut good = WAL_HEADER_LEN as usize;
+        loop {
+            match parse_frame(&data[good..]) {
+                FrameStep::Complete { consumed, record } => {
+                    records.push(record);
+                    good += consumed;
+                }
+                FrameStep::End => break,
+                FrameStep::Torn(reason) => {
+                    recovery.truncated_bytes = (data.len() - good) as u64;
+                    recovery.torn_reason = Some(reason);
+                    break;
+                }
+            }
+        }
+        recovery.records = records.len();
+        drop(data);
+
+        let file = OpenOptions::new().read(true).append(true).open(path)?;
+        if recovery.truncated_bytes > 0 {
+            file.set_len(good as u64)?;
+            file.sync_data()?;
+        }
+        let wal = Wal {
+            file,
+            len: good as u64,
+            generation,
+            policy,
+            appends_since_sync: 0,
+            poisoned: false,
+        };
+        Ok((wal, records, recovery))
+    }
+
+    /// The generation recorded in the header (see the module docs).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Append one record.  Write-through: the frame reaches the OS before
+    /// this returns; it additionally reaches the disk per the
+    /// [`FsyncPolicy`].
+    ///
+    /// Failure safety: a failed `write` may have landed *part* of the
+    /// frame (e.g. the disk filled mid-write).  That partial frame is cut
+    /// back off with `set_len` so a later successful append cannot land
+    /// beyond an undecodable hole — replay truncates at the first invalid
+    /// frame, so any record past one would be silently lost despite a
+    /// successful acknowledgement.  If even the rollback fails, the log is
+    /// poisoned and every further append is refused until a compaction
+    /// ([`Self::reset`]) re-establishes a clean tail.
+    pub fn append(&mut self, rec: &WalRecord) -> Result<(), StoreError> {
+        self.append_frame(&encode_frame(rec))
+    }
+
+    /// Log an insert without building an owned [`WalRecord`] (see
+    /// [`encode_insert_frame`]); same contract as [`Self::append`].
+    pub fn append_insert(&mut self, addr: u64, tag: &BitVec) -> Result<(), StoreError> {
+        self.append_frame(&encode_insert_frame(addr, tag))
+    }
+
+    fn append_frame(&mut self, frame: &[u8]) -> Result<(), StoreError> {
+        if self.poisoned {
+            return Err(StoreError::Io(std::io::Error::other(
+                "WAL poisoned by an earlier failed append; compact to recover",
+            )));
+        }
+        if let Err(e) = self.file.write_all(frame) {
+            if self.file.set_len(self.len).is_err() {
+                self.poisoned = true;
+            }
+            return Err(StoreError::Io(e));
+        }
+        self.len += frame.len() as u64;
+        match self.policy {
+            FsyncPolicy::Never => {}
+            FsyncPolicy::Always => self.file.sync_data()?,
+            FsyncPolicy::EveryN(n) => {
+                self.appends_since_sync += 1;
+                if self.appends_since_sync >= n.max(1) {
+                    self.file.sync_data()?;
+                    self.appends_since_sync = 0;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Force everything to the disk regardless of policy.
+    pub fn sync(&mut self) -> Result<(), StoreError> {
+        self.file.sync_data()?;
+        self.appends_since_sync = 0;
+        Ok(())
+    }
+
+    /// Refuse every further append until a successful [`Self::reset`].
+    /// Used when the on-disk state has moved ahead of this log's
+    /// generation — a snapshot landed but the subsequent reset failed, so
+    /// any append accepted onto the old-generation log would be discarded
+    /// wholesale at recovery despite its acknowledgement.
+    pub fn poison(&mut self) {
+        self.poisoned = true;
+    }
+
+    /// Drop every frame and stamp a new generation (after a snapshot
+    /// carrying that generation made the frames redundant).  Also heals a
+    /// log poisoned by a failed append — the suspect tail is gone along
+    /// with everything else.  The whole file is rewritten: `set_len(0)`,
+    /// then the header goes through the `O_APPEND` cursor at the new
+    /// (zero) end of file.
+    pub fn reset(&mut self, generation: u64) -> Result<(), StoreError> {
+        self.file.set_len(0)?;
+        self.file.write_all(&header_bytes(generation))?;
+        self.file.sync_data()?;
+        self.len = WAL_HEADER_LEN;
+        self.generation = generation;
+        self.appends_since_sync = 0;
+        self.poisoned = false;
+        Ok(())
+    }
+
+    /// Current file length (header + frames) — the compaction trigger.
+    pub fn len_bytes(&self) -> u64 {
+        self.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("cscam-wal-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    fn sample_records() -> Vec<WalRecord> {
+        vec![
+            WalRecord::Insert { addr: 0, tag: BitVec::from_u128(0xDEAD_BEEF, 32) },
+            WalRecord::Insert { addr: 7, tag: BitVec::from_u128(0x1234, 70) },
+            WalRecord::Delete { addr: 0 },
+            WalRecord::Insert { addr: 0, tag: BitVec::from_u128(0xAB, 32) },
+        ]
+    }
+
+    #[test]
+    fn append_reopen_replays_in_order() {
+        let path = tmp("roundtrip.wal");
+        let recs = sample_records();
+        {
+            let (mut wal, replayed, rec) = Wal::open(&path, FsyncPolicy::Never).unwrap();
+            assert!(replayed.is_empty());
+            assert_eq!(rec.truncated_bytes, 0);
+            for r in &recs {
+                wal.append(r).unwrap();
+            }
+        }
+        let (wal, replayed, rec) = Wal::open(&path, FsyncPolicy::Always).unwrap();
+        assert_eq!(replayed, recs);
+        assert_eq!(rec.records, 4);
+        assert_eq!(rec.truncated_bytes, 0);
+        assert!(wal.len_bytes() > WAL_HEADER_LEN);
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_and_log_stays_usable() {
+        let path = tmp("torn.wal");
+        let recs = sample_records();
+        {
+            let (mut wal, _, _) = Wal::open(&path, FsyncPolicy::EveryN(2)).unwrap();
+            for r in &recs {
+                wal.append(r).unwrap();
+            }
+        }
+        // simulate a crash mid-append: half a frame of the next record
+        let torn = encode_frame(&WalRecord::Delete { addr: 3 });
+        let mut raw = std::fs::read(&path).unwrap();
+        raw.extend_from_slice(&torn[..torn.len() / 2]);
+        std::fs::write(&path, &raw).unwrap();
+
+        let (mut wal, replayed, rec) = Wal::open(&path, FsyncPolicy::Never).unwrap();
+        assert_eq!(replayed, recs, "complete frames all survive");
+        assert_eq!(rec.truncated_bytes as usize, torn.len() / 2);
+        assert!(rec.torn_reason.is_some());
+        // the truncated log accepts new appends and replays them
+        wal.append(&WalRecord::Delete { addr: 7 }).unwrap();
+        drop(wal);
+        let (_, replayed, rec) = Wal::open(&path, FsyncPolicy::Never).unwrap();
+        assert_eq!(replayed.len(), 5);
+        assert_eq!(replayed[4], WalRecord::Delete { addr: 7 });
+        assert_eq!(rec.truncated_bytes, 0);
+    }
+
+    #[test]
+    fn corrupt_frame_starts_the_discarded_tail() {
+        let path = tmp("corrupt.wal");
+        let recs = sample_records();
+        {
+            let (mut wal, _, _) = Wal::open(&path, FsyncPolicy::Never).unwrap();
+            for r in &recs {
+                wal.append(r).unwrap();
+            }
+        }
+        // flip one payload byte of the second frame: it and everything
+        // after it are discarded (the tail rule is by offset, not count)
+        let mut raw = std::fs::read(&path).unwrap();
+        let hdr = WAL_HEADER_LEN as usize;
+        let first = 4 + u32::from_le_bytes(raw[hdr..hdr + 4].try_into().unwrap()) as usize;
+        let second_payload = hdr + first + 4 + 9; // header + frame1 + len + cksum+op
+        raw[second_payload] ^= 0xFF;
+        std::fs::write(&path, &raw).unwrap();
+
+        let (_, replayed, rec) = Wal::open(&path, FsyncPolicy::Never).unwrap();
+        assert_eq!(replayed, recs[..1], "only the frame before the corruption survives");
+        assert!(rec.truncated_bytes > 0);
+        assert!(rec.torn_reason.unwrap().contains("checksum"));
+    }
+
+    #[test]
+    fn reset_clears_the_frame_region_and_stamps_the_generation() {
+        let path = tmp("reset.wal");
+        let (mut wal, _, _) = Wal::open(&path, FsyncPolicy::Never).unwrap();
+        assert_eq!(wal.generation(), 0);
+        for r in &sample_records() {
+            wal.append(r).unwrap();
+        }
+        wal.reset(3).unwrap();
+        assert_eq!(wal.len_bytes(), WAL_HEADER_LEN);
+        assert_eq!(wal.generation(), 3);
+        wal.append(&WalRecord::Delete { addr: 1 }).unwrap();
+        drop(wal);
+        let (wal, replayed, _) = Wal::open(&path, FsyncPolicy::Never).unwrap();
+        assert_eq!(replayed, vec![WalRecord::Delete { addr: 1 }]);
+        assert_eq!(wal.generation(), 3, "generation survives a reopen");
+    }
+
+    #[test]
+    fn foreign_and_future_files_are_refused_not_truncated() {
+        let path = tmp("foreign.wal");
+        std::fs::write(&path, b"not a wal at all").unwrap();
+        assert!(matches!(
+            Wal::open(&path, FsyncPolicy::Never),
+            Err(StoreError::Corrupt(_))
+        ));
+        let mut future = WAL_MAGIC.to_vec();
+        future.extend_from_slice(&99u16.to_le_bytes());
+        future.extend_from_slice(&[0, 0]);
+        future.extend_from_slice(&0u64.to_le_bytes());
+        std::fs::write(&path, &future).unwrap();
+        assert!(matches!(
+            Wal::open(&path, FsyncPolicy::Never),
+            Err(StoreError::Incompatible(_))
+        ));
+        // short files are refused too, unless they are a prefix of OUR
+        // header (a crash mid-create) — never rewrite a file we don't own
+        std::fs::write(&path, b"junk!").unwrap();
+        assert!(matches!(
+            Wal::open(&path, FsyncPolicy::Never),
+            Err(StoreError::Corrupt(_))
+        ));
+        std::fs::write(&path, &header_bytes(0)[..5]).unwrap();
+        let (_, replayed, rec) = Wal::open(&path, FsyncPolicy::Never).unwrap();
+        assert!(replayed.is_empty());
+        assert_eq!(rec.truncated_bytes, 5, "torn create is repaired");
+        // a torn reset (fixed header complete, generation bytes partial)
+        // is repaired to generation 0 — the snapshot reconciliation in
+        // BankStore::open then discards the log if it predates a snapshot
+        std::fs::write(&path, &header_bytes(7)[..12]).unwrap();
+        let (wal, replayed, rec) = Wal::open(&path, FsyncPolicy::Never).unwrap();
+        assert!(replayed.is_empty());
+        assert_eq!(rec.truncated_bytes, 12);
+        assert_eq!(wal.generation(), 0);
+    }
+
+    #[test]
+    fn appends_after_compaction_land_at_the_new_end_on_a_fresh_log() {
+        // Regression: the fresh-created handle must behave exactly like a
+        // reopened one after set_len — every post-compaction append lands
+        // at the truncated end, never at a stale pre-truncation offset.
+        let path = tmp("fresh-compact.wal");
+        let (mut wal, _, _) = Wal::open(&path, FsyncPolicy::Never).unwrap();
+        for r in &sample_records() {
+            wal.append(r).unwrap();
+        }
+        let before = wal.len_bytes();
+        wal.reset(1).unwrap();
+        wal.append(&WalRecord::Delete { addr: 9 }).unwrap();
+        assert!(wal.len_bytes() < before);
+        drop(wal);
+        let raw = std::fs::read(&path).unwrap();
+        let hdr = WAL_HEADER_LEN as usize;
+        assert!(!raw[hdr..].iter().all(|&b| b == 0), "no zero-filled hole after the header");
+        let (_, replayed, rec) = Wal::open(&path, FsyncPolicy::Never).unwrap();
+        assert_eq!(replayed, vec![WalRecord::Delete { addr: 9 }]);
+        assert_eq!(rec.truncated_bytes, 0);
+    }
+
+    #[test]
+    fn borrowed_insert_encoding_matches_the_owned_one() {
+        let tag = BitVec::from_u128(0xFEED_F00D, 70);
+        let owned = encode_frame(&WalRecord::Insert { addr: 42, tag: tag.clone() });
+        assert_eq!(owned, encode_insert_frame(42, &tag));
+    }
+
+    #[test]
+    fn record_decode_is_total_on_garbage() {
+        for op in 0..=3u8 {
+            for len in 0..24usize {
+                let payload: Vec<u8> = (0..len).map(|i| (i as u8).wrapping_mul(37)).collect();
+                // must never panic; Ok only when the bytes happen to form a
+                // complete record
+                let _ = WalRecord::decode(op, &payload);
+            }
+        }
+    }
+}

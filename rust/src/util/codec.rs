@@ -1,0 +1,214 @@
+//! Shared binary codec primitives: little-endian scalar writers and a
+//! bounds-checked payload reader.
+//!
+//! Two subsystems serialize structured records into checksummed binary
+//! frames and MUST agree on the primitive encodings: the wire protocol
+//! ([`crate::net::proto`] frames requests/responses over TCP) and the
+//! durability layer ([`crate::store`] writes snapshots and WAL records to
+//! disk).  Both build on exactly these helpers so the byte-level
+//! conventions — little-endian scalars, `f64` as IEEE-754 bit patterns,
+//! bit vectors as a `u32` length plus packed words — live in one place.
+//!
+//! Decoding is *total*: every reader returns a typed [`CodecError`] on
+//! malformed input, and count-prefixed allocations are bounded by the
+//! bytes actually present (see [`Cursor::remaining`]) so corrupt or
+//! hostile input can never trigger an oversized allocation, let alone a
+//! panic.
+
+use crate::bits::BitVec;
+
+/// A typed decode failure: the input bytes violate the encoding contract.
+///
+/// Wraps a human-readable description; the wire layer lifts it into
+/// `WireError::Protocol`, the store layer into `StoreError::Corrupt`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CodecError(pub String);
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+// ------------------------------------------------------------- writers
+
+pub fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// IEEE-754 bit pattern: the decode side reproduces the value exactly.
+pub fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+/// `u32` bit length + the packed little-endian words
+/// ([`BitVec::to_bytes`]).
+pub fn put_bitvec(buf: &mut Vec<u8>, v: &BitVec) {
+    put_u32(buf, v.len() as u32);
+    buf.extend_from_slice(&v.to_bytes());
+}
+
+// -------------------------------------------------------------- reader
+
+/// Bounds-checked payload reader.
+pub struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    /// Bytes left — the bound for any count-prefixed allocation: a count
+    /// that claims more elements than the remaining bytes could possibly
+    /// encode is rejected *before* `Vec::with_capacity` reserves for it.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        if n > self.buf.len() - self.pos {
+            return Err(CodecError(format!(
+                "truncated payload: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn take_u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn take_u16(&mut self) -> Result<u16, CodecError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn take_u32(&mut self) -> Result<u32, CodecError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn take_u64(&mut self) -> Result<u64, CodecError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn take_f64(&mut self) -> Result<f64, CodecError> {
+        Ok(f64::from_bits(self.take_u64()?))
+    }
+
+    /// Inverse of [`put_bitvec`]: the word count is derived from the bit
+    /// length and bounded by the remaining bytes before anything is read,
+    /// and set bits past the length are rejected (strict tail validation —
+    /// see [`BitVec::from_bytes`]).
+    pub fn take_bitvec(&mut self) -> Result<BitVec, CodecError> {
+        let len = self.take_u32()? as usize;
+        let nbytes = len.div_ceil(64) * 8;
+        if nbytes > self.remaining() {
+            return Err(CodecError(format!(
+                "bit vector of {len} bits needs {nbytes} bytes, have {}",
+                self.remaining()
+            )));
+        }
+        let bytes = self.take(nbytes)?;
+        BitVec::from_bytes(bytes, len).map_err(|e| CodecError(format!("bit vector: {e}")))
+    }
+
+    /// Reject trailing garbage after a complete decode.
+    pub fn finish(&self) -> Result<(), CodecError> {
+        if self.pos != self.buf.len() {
+            return Err(CodecError(format!(
+                "{} trailing payload bytes",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_roundtrip() {
+        let mut buf = Vec::new();
+        put_u16(&mut buf, 0xBEEF);
+        put_u32(&mut buf, 0xDEAD_BEEF);
+        put_u64(&mut buf, u64::MAX - 1);
+        put_f64(&mut buf, -0.125);
+        let mut c = Cursor::new(&buf);
+        assert_eq!(c.take_u16().unwrap(), 0xBEEF);
+        assert_eq!(c.take_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(c.take_u64().unwrap(), u64::MAX - 1);
+        assert_eq!(c.take_f64().unwrap().to_bits(), (-0.125f64).to_bits());
+        c.finish().unwrap();
+    }
+
+    #[test]
+    fn truncated_reads_are_typed_errors() {
+        let mut c = Cursor::new(&[1, 2, 3]);
+        assert!(c.take_u32().is_err());
+        let mut c = Cursor::new(&[]);
+        assert!(c.take_u8().is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let mut buf = Vec::new();
+        put_u16(&mut buf, 7);
+        buf.push(0xAB);
+        let mut c = Cursor::new(&buf);
+        c.take_u16().unwrap();
+        assert!(c.finish().is_err());
+    }
+
+    #[test]
+    fn bitvec_roundtrips_and_bounds_allocation() {
+        for len in [0usize, 1, 63, 64, 65, 127, 128, 200] {
+            let mut v = BitVec::zeros(len);
+            for i in (0..len).step_by(3) {
+                v.set(i, true);
+            }
+            let mut buf = Vec::new();
+            put_bitvec(&mut buf, &v);
+            let mut c = Cursor::new(&buf);
+            assert_eq!(c.take_bitvec().unwrap(), v, "len={len}");
+            c.finish().unwrap();
+        }
+        // a length claiming gigabytes is rejected before any allocation
+        let mut buf = Vec::new();
+        put_u32(&mut buf, u32::MAX);
+        buf.extend_from_slice(&[0u8; 16]);
+        assert!(Cursor::new(&buf).take_bitvec().is_err());
+    }
+
+    #[test]
+    fn bitvec_tail_garbage_is_rejected() {
+        // 70-bit vector: bits 70..127 of the word image are slack and must
+        // decode to an error when set (the store contract is strict; the
+        // wire's tag reader masks instead — see net/proto).
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 70);
+        buf.extend_from_slice(&u64::MAX.to_le_bytes());
+        buf.extend_from_slice(&u64::MAX.to_le_bytes());
+        assert!(Cursor::new(&buf).take_bitvec().is_err());
+    }
+}

@@ -1,0 +1,314 @@
+//! The codec fuzz battery: seeded mutation fuzzing of every binary decode
+//! path — wire frames (`net::proto`), snapshot files and WAL frames
+//! (`store`).
+//!
+//! Pattern of `tests/properties.rs`: an in-tree seeded driver (fixed
+//! seeds, fixed case budgets — deterministic and CI-fast) stands in for an
+//! external fuzzer.  Three mutation classes are applied to known-valid
+//! encodings: single-byte flips, truncations, and extensions with garbage.
+//! The invariant under test is the durability layer's safety contract:
+//!
+//! * **no decode path ever panics** on corrupt input (a panic in a frame
+//!   decoder is a remote crash; in a snapshot loader it bricks recovery);
+//! * **checksummed containers never silently succeed**: any byte flip in
+//!   a wire frame or snapshot file must surface as a typed error;
+//! * **WAL corruption degrades to truncation**: replay after any mutation
+//!   yields a prefix of the original records, and the log stays usable.
+
+use cscam::config::DesignConfig;
+use cscam::coordinator::LookupEngine;
+use cscam::net::proto::{
+    self, read_request, read_response, Request, Response, WireError,
+};
+use cscam::store::{snapshot::BankImage, wal, FsyncPolicy, StoreError, Wal, WalRecord};
+use cscam::util::Rng;
+use cscam::workload::TagDistribution;
+
+/// Flip one random byte (possibly several times).
+fn flip(bytes: &mut [u8], rng: &mut Rng) {
+    let i = rng.gen_range(bytes.len());
+    let mut mask = (rng.gen_u64() & 0xFF) as u8;
+    if mask == 0 {
+        mask = 1;
+    }
+    bytes[i] ^= mask;
+}
+
+fn sample_requests() -> Vec<Request> {
+    let mut rng = Rng::seed_from_u64(9001);
+    let tags = TagDistribution::Uniform.sample_distinct(70, 6, &mut rng);
+    vec![
+        Request::Insert { tag: tags[0].clone() },
+        Request::Delete { addr: 12345 },
+        Request::Lookup { tag: tags[1].clone() },
+        Request::LookupBulk { tags: tags.clone() },
+        Request::Stats,
+        Request::Drain,
+        Request::Shutdown,
+        Request::Snapshot,
+        Request::Flush,
+    ]
+}
+
+fn encode_request(req: &Request, id: u64) -> Vec<u8> {
+    let mut wire = Vec::new();
+    proto::write_request(&mut wire, id, req).unwrap();
+    wire
+}
+
+#[test]
+fn wire_frames_reject_every_single_byte_flip() {
+    let mut rng = Rng::seed_from_u64(1101);
+    for req in sample_requests() {
+        let wire = encode_request(&req, 42);
+        // every byte position, not a sample: the frame is small and the
+        // checksum must leave no blind spot
+        for i in 0..wire.len() {
+            let mut bad = wire.clone();
+            let mut mask = (rng.gen_u64() & 0xFF) as u8;
+            if mask == 0 {
+                mask = 1;
+            }
+            bad[i] ^= mask;
+            match read_request(&mut bad.as_slice()) {
+                Err(WireError::Protocol(_)) | Err(WireError::Io(_)) => {}
+                Ok((id, back)) => {
+                    panic!("flip at byte {i} of {req:?} decoded silently as ({id}, {back:?})")
+                }
+                Err(other) => panic!("flip at byte {i}: unexpected error class {other:?}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn response_frames_reject_every_single_byte_flip() {
+    let mut rng = Rng::seed_from_u64(1102);
+    let responses = vec![
+        Response::Inserted { addr: 511 },
+        Response::Deleted,
+        Response::Drained,
+        Response::ShutdownAck,
+        Response::Snapshotted,
+        Response::Flushed,
+        Response::Error { code: proto::ERR_PERSIST, aux: 0 },
+    ];
+    for resp in responses {
+        let mut wire = Vec::new();
+        proto::write_response(&mut wire, 5, &resp).unwrap();
+        for i in 0..wire.len() {
+            let mut bad = wire.clone();
+            let mut mask = (rng.gen_u64() & 0xFF) as u8;
+            if mask == 0 {
+                mask = 1;
+            }
+            bad[i] ^= mask;
+            assert!(
+                read_response(&mut bad.as_slice()).is_err(),
+                "flip at byte {i} of {resp:?} decoded silently"
+            );
+        }
+    }
+}
+
+#[test]
+fn wire_frames_reject_every_truncation() {
+    for req in sample_requests() {
+        let wire = encode_request(&req, 7);
+        for cut in 0..wire.len() {
+            let mut slice = &wire[..cut];
+            assert!(
+                read_request(&mut slice).is_err(),
+                "{req:?} truncated to {cut} bytes decoded"
+            );
+        }
+    }
+}
+
+#[test]
+fn wire_frame_extension_is_stream_tail_not_corruption() {
+    // trailing bytes after a complete frame belong to the NEXT frame (a
+    // TCP stream): the first frame must decode intact and the reader must
+    // stop exactly at its boundary
+    let req = Request::Delete { addr: 9 };
+    let mut wire = encode_request(&req, 3);
+    let tail = [0xAAu8; 13];
+    wire.extend_from_slice(&tail);
+    let mut slice = wire.as_slice();
+    let (id, back) = read_request(&mut slice).unwrap();
+    assert_eq!(id, 3);
+    assert_eq!(back, req);
+    assert_eq!(slice, &tail, "reader consumed exactly one frame");
+}
+
+#[test]
+fn request_and_response_payload_decoders_never_panic_on_garbage() {
+    // below the checksum: hammer the op/payload decoders directly with
+    // random bytes for every opcode — Ok is allowed (a random payload can
+    // be a valid tag), panicking or hanging is not
+    let mut rng = Rng::seed_from_u64(2202);
+    for op in 0u8..=255 {
+        for _ in 0..8 {
+            let len = rng.gen_range(64);
+            let payload: Vec<u8> = (0..len).map(|_| (rng.gen_u64() & 0xFF) as u8).collect();
+            let _ = Request::decode(op, &payload);
+            let _ = Response::decode(op, &payload);
+        }
+    }
+    // and with structured prefixes that exercise the count-bounded paths
+    for _ in 0..500 {
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&(rng.gen_u32()).to_le_bytes());
+        let len = rng.gen_range(48);
+        payload.extend((0..len).map(|_| (rng.gen_u64() & 0xFF) as u8));
+        let _ = Request::decode(proto::OP_LOOKUP_BULK, &payload);
+        let _ = Response::decode(proto::OP_LOOKUP_BULK, &payload);
+        let _ = Response::decode(proto::OP_LOOKUP, &payload);
+        let _ = Response::decode(proto::OP_STATS, &payload);
+    }
+}
+
+fn sample_image() -> BankImage {
+    let cfg = DesignConfig { m: 32, n: 32, zeta: 4, c: 2, l: 4, ..DesignConfig::small_test() };
+    let mut engine = LookupEngine::new(cfg.clone());
+    engine.retrain_threshold = 0.0;
+    let mut rng = Rng::seed_from_u64(3303);
+    let tags = TagDistribution::Uniform.sample_distinct(cfg.n, 20, &mut rng);
+    for t in &tags {
+        engine.insert(t).unwrap();
+    }
+    engine.delete(5).unwrap();
+    BankImage::from_engine(&engine)
+}
+
+#[test]
+fn snapshot_rejects_every_single_byte_flip() {
+    let good = sample_image().encode();
+    let mut rng = Rng::seed_from_u64(4404);
+    for i in 0..good.len() {
+        let mut bad = good.clone();
+        let mut mask = (rng.gen_u64() & 0xFF) as u8;
+        if mask == 0 {
+            mask = 1;
+        }
+        bad[i] ^= mask;
+        match BankImage::decode(&bad) {
+            Err(StoreError::Corrupt(_)) | Err(StoreError::Incompatible(_)) => {}
+            Ok(_) => panic!("flip at byte {i} of the snapshot decoded silently"),
+            Err(other) => panic!("flip at byte {i}: unexpected error class {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn snapshot_rejects_truncation_and_extension() {
+    let good = sample_image().encode();
+    let mut rng = Rng::seed_from_u64(5505);
+    for _ in 0..200 {
+        let cut = rng.gen_range(good.len());
+        assert!(BankImage::decode(&good[..cut]).is_err(), "truncation to {cut} decoded");
+    }
+    for extra in [1usize, 7, 64] {
+        let mut bad = good.clone();
+        bad.extend((0..extra).map(|_| (rng.gen_u64() & 0xFF) as u8));
+        assert!(BankImage::decode(&bad).is_err(), "extension by {extra} decoded");
+    }
+    // pure garbage of various sizes
+    for len in [0usize, 1, 8, 23, 24, 25, 100] {
+        let junk: Vec<u8> = (0..len).map(|_| (rng.gen_u64() & 0xFF) as u8).collect();
+        assert!(BankImage::decode(&junk).is_err());
+    }
+}
+
+fn wal_records() -> Vec<WalRecord> {
+    let mut rng = Rng::seed_from_u64(6606);
+    let tags = TagDistribution::Uniform.sample_distinct(32, 8, &mut rng);
+    let mut recs = Vec::new();
+    for (i, t) in tags.iter().enumerate() {
+        recs.push(WalRecord::Insert { addr: i as u64, tag: t.clone() });
+    }
+    recs.push(WalRecord::Delete { addr: 2 });
+    recs.push(WalRecord::Insert { addr: 2, tag: tags[0].clone() });
+    recs
+}
+
+fn write_wal_file(path: &std::path::Path, body_mutator: impl FnOnce(&mut Vec<u8>)) {
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(&wal::WAL_MAGIC);
+    bytes.extend_from_slice(&wal::WAL_VERSION.to_le_bytes());
+    bytes.extend_from_slice(&[0, 0]);
+    bytes.extend_from_slice(&0u64.to_le_bytes()); // generation
+    for rec in wal_records() {
+        bytes.extend_from_slice(&wal::encode_frame(&rec));
+    }
+    body_mutator(&mut bytes);
+    std::fs::write(path, &bytes).unwrap();
+}
+
+fn fuzz_dir() -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("cscam-fuzz-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn wal_mutations_degrade_to_prefix_replay_never_panic() {
+    let originals = wal_records();
+    let dir = fuzz_dir();
+    let mut rng = Rng::seed_from_u64(7707);
+    for case in 0..400 {
+        let path = dir.join("fuzz.wal");
+        let kind = rng.gen_range(3);
+        let mut flip_rng = rng.fork();
+        write_wal_file(&path, |bytes| match kind {
+            0 => flip(bytes, &mut flip_rng),
+            1 => {
+                let cut = flip_rng.gen_range(bytes.len());
+                bytes.truncate(cut.max(1));
+            }
+            _ => {
+                let extra = 1 + flip_rng.gen_range(40);
+                bytes.extend((0..extra).map(|_| (flip_rng.gen_u64() & 0xFF) as u8));
+            }
+        });
+        // Open must either repair (truncate the tail) or refuse with a
+        // typed error (header damage) — never panic, never invent records.
+        match Wal::open(&path, FsyncPolicy::Never) {
+            Ok((mut wal, replayed, _recovery)) => {
+                assert!(
+                    replayed.len() <= originals.len()
+                        && replayed == originals[..replayed.len()],
+                    "case {case}: replay is not a prefix of the written log"
+                );
+                // the repaired log must accept appends and replay them
+                wal.append(&WalRecord::Delete { addr: 0 }).unwrap();
+                drop(wal);
+                let (_, again, rec2) = Wal::open(&path, FsyncPolicy::Never).unwrap();
+                assert_eq!(again.last(), Some(&WalRecord::Delete { addr: 0 }));
+                assert_eq!(rec2.truncated_bytes, 0, "case {case}: repair must be stable");
+            }
+            Err(StoreError::Corrupt(_)) | Err(StoreError::Incompatible(_)) => {}
+            Err(StoreError::Io(e)) => panic!("case {case}: unexpected io error {e}"),
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+#[test]
+fn clean_wal_replays_exactly_and_extension_is_a_torn_tail() {
+    let originals = wal_records();
+    let dir = fuzz_dir();
+    let path = dir.join("clean.wal");
+    write_wal_file(&path, |_| {});
+    let (_, replayed, rec) = Wal::open(&path, FsyncPolicy::Never).unwrap();
+    assert_eq!(replayed, originals);
+    assert_eq!(rec.truncated_bytes, 0);
+
+    // garbage appended after the last complete frame is exactly the
+    // torn-tail case: truncated, reported, all real records kept
+    write_wal_file(&path, |bytes| bytes.extend_from_slice(&[0xEE; 11]));
+    let (_, replayed, rec) = Wal::open(&path, FsyncPolicy::Never).unwrap();
+    assert_eq!(replayed, originals);
+    assert_eq!(rec.truncated_bytes, 11);
+    assert!(rec.torn_reason.is_some());
+}

@@ -1,0 +1,378 @@
+//! Crash-recovery integration battery: a reopened store must rebuild
+//! engine state *bit-identical* to the pre-crash fleet — the same matched
+//! addresses, λ, energy breakdown and delay for every tag — across
+//! hash/broadcast/learned placements, with and without snapshots in the
+//! mix, and a torn final WAL frame must be truncated, never fatal.
+//!
+//! The crash is simulated the only way a same-process test honestly can:
+//! the durable handles are dropped mid-stream without drain or flush.
+//! The WAL's write-through contract (every acknowledged record reaches the
+//! OS before the ack) is exactly what makes this equivalent to a SIGKILL
+//! for acknowledged state; the CI `durability-smoke` job performs the real
+//! kill -9 against a serving process.
+
+use cscam::bits::BitVec;
+use cscam::config::DesignConfig;
+use cscam::coordinator::{BatchPolicy, LookupEngine};
+use cscam::net::{CamClient, CamTcpServer, NetConfig};
+use cscam::shard::{PlacementMode, ShardedCamServer, ShardedOutcome};
+use cscam::store::{
+    wal, DurableBank, FsyncPolicy, StoreError, StoreOptions, WalRecord, SNAPSHOT_FILE, WAL_FILE,
+};
+use cscam::util::Rng;
+use cscam::workload::TagDistribution;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn test_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("cscam-durability-{}", std::process::id()))
+        .join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn fleet_cfg() -> DesignConfig {
+    // 4 banks × 64 entries = one 256-entry fleet
+    DesignConfig { m: 256, n: 32, zeta: 4, c: 3, l: 4, shards: 4, ..DesignConfig::reference() }
+}
+
+fn policy() -> BatchPolicy {
+    BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(100) }
+}
+
+/// Drive the same seeded insert/delete history through a durable bank and
+/// a never-crashed reference engine, asserting the addresses agree along
+/// the way.  Returns the tags ever inserted (the lookup probe set).
+fn seeded_history(
+    bank: &mut DurableBank,
+    reference: &mut LookupEngine,
+    cfg: &DesignConfig,
+    seed: u64,
+    ops: usize,
+) -> Vec<BitVec> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let pool = TagDistribution::Uniform.sample_distinct(cfg.n, ops, &mut rng);
+    let mut next = 0usize;
+    let mut live: Vec<usize> = Vec::new();
+    let mut touched = Vec::new();
+    for _ in 0..ops {
+        let do_insert = live.is_empty() || rng.gen_bool(0.7);
+        if do_insert && next < pool.len() {
+            let t = &pool[next];
+            next += 1;
+            match (bank.insert(t), reference.insert(t)) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(a, b, "durable and reference engines diverged on placement");
+                    live.push(a);
+                    touched.push(t.clone());
+                }
+                (Err(e1), Err(e2)) => assert_eq!(e1, e2, "divergent insert errors"),
+                (a, b) => panic!("insert divergence: durable {a:?}, reference {b:?}"),
+            }
+        } else if !live.is_empty() {
+            let victim = live.swap_remove(rng.gen_range(live.len()));
+            bank.delete(victim).unwrap();
+            reference.delete(victim).unwrap();
+        }
+    }
+    touched
+}
+
+/// Field-for-field equality of every outcome: stored tags and misses.
+fn assert_bank_bit_identical(
+    bank: &mut DurableBank,
+    reference: &mut LookupEngine,
+    probes: &[BitVec],
+    n: usize,
+    seed: u64,
+) {
+    for t in probes {
+        assert_eq!(bank.lookup(t).unwrap(), reference.lookup(t).unwrap());
+    }
+    let mut rng = Rng::seed_from_u64(seed);
+    for _ in 0..40 {
+        let t = cscam::workload::random_tag(n, &mut rng);
+        assert_eq!(bank.lookup(&t).unwrap(), reference.lookup(&t).unwrap());
+    }
+}
+
+#[test]
+fn bank_recovery_is_bit_identical_for_seeded_histories() {
+    for seed in [11u64, 12, 13] {
+        let dir = test_dir(&format!("bank-history-{seed}"));
+        let cfg = DesignConfig::small_test();
+        let mut reference = LookupEngine::new(cfg.clone());
+        let probes = {
+            let (mut bank, _) =
+                DurableBank::open(&dir, cfg.clone(), StoreOptions::default()).unwrap();
+            seeded_history(&mut bank, &mut reference, &cfg, seed, 90)
+            // bank dropped here mid-stream: no drain, no flush, no compact
+        };
+        let (mut bank, report) =
+            DurableBank::open(&dir, cfg.clone(), StoreOptions::default()).unwrap();
+        assert!(report.wal_records > 0);
+        assert_eq!(report.occupancy, reference.occupancy());
+        assert_bank_bit_identical(&mut bank, &mut reference, &probes, cfg.n, seed + 100);
+    }
+}
+
+#[test]
+fn bank_recovery_with_compaction_in_the_history_is_bit_identical() {
+    // a tiny compaction threshold forces several snapshot+truncate cycles
+    // mid-history, so recovery exercises snapshot-base + WAL-tail replay
+    for seed in [21u64, 22] {
+        let dir = test_dir(&format!("bank-compact-{seed}"));
+        let cfg = DesignConfig::small_test();
+        let opts = StoreOptions { fsync: FsyncPolicy::EveryN(16), compact_bytes: 512 };
+        let mut reference = LookupEngine::new(cfg.clone());
+        let probes = {
+            let (mut bank, _) = DurableBank::open(&dir, cfg.clone(), opts).unwrap();
+            seeded_history(&mut bank, &mut reference, &cfg, seed, 120)
+        };
+        assert!(dir.join(SNAPSHOT_FILE).exists(), "threshold must have compacted");
+        let (mut bank, report) = DurableBank::open(&dir, cfg.clone(), opts).unwrap();
+        assert!(report.snapshot_loaded);
+        assert_eq!(report.occupancy, reference.occupancy());
+        assert_bank_bit_identical(&mut bank, &mut reference, &probes, cfg.n, seed + 100);
+    }
+}
+
+#[test]
+fn crash_between_snapshot_and_wal_reset_recovers_bit_identically() {
+    // The compaction crash window: the snapshot (generation g+1) has been
+    // renamed into place but the WAL (still generation g) was never reset.
+    // Replaying that log against the snapshot would double-apply every
+    // insert — inflating the stale-delete counter and potentially firing
+    // a spurious retrain — so recovery must DISCARD it instead, and the
+    // result must still be bit-identical to the never-crashed engine.
+    let dir = test_dir("compact-window");
+    let cfg = DesignConfig::small_test();
+    let mut reference = LookupEngine::new(cfg.clone());
+    let mut rng = Rng::seed_from_u64(71);
+    let tags = TagDistribution::Uniform.sample_distinct(cfg.n, 30, &mut rng);
+    let wal_path = dir.join(WAL_FILE);
+    {
+        let (mut bank, _) = DurableBank::open(&dir, cfg.clone(), StoreOptions::default()).unwrap();
+        for t in &tags {
+            assert_eq!(bank.insert(t).unwrap(), reference.insert(t).unwrap());
+        }
+        bank.delete(4).unwrap();
+        reference.delete(4).unwrap();
+        let stale_log = std::fs::read(&wal_path).unwrap();
+        bank.compact().unwrap();
+        drop(bank);
+        // resurrect the pre-compaction log: new snapshot + old WAL is
+        // exactly what a crash between the two steps leaves behind
+        std::fs::write(&wal_path, &stale_log).unwrap();
+    }
+    let (mut bank, report) = DurableBank::open(&dir, cfg.clone(), StoreOptions::default()).unwrap();
+    assert!(report.snapshot_loaded);
+    assert_eq!(report.discarded_records, 31, "stale log is discarded, not replayed");
+    assert_eq!(report.wal_records, 0);
+    assert_eq!(bank.engine().stale_delete_count(), reference.stale_delete_count());
+    assert_bank_bit_identical(&mut bank, &mut reference, &tags, cfg.n, 72);
+    // the finished compaction leaves a usable log: new writes persist
+    let extra = cscam::workload::random_tag(cfg.n, &mut rng);
+    bank.insert(&extra).unwrap();
+    drop(bank);
+    let (bank, report) = DurableBank::open(&dir, cfg, StoreOptions::default()).unwrap();
+    assert_eq!(report.wal_records, 1);
+    assert_eq!(report.discarded_records, 0);
+    assert_eq!(bank.occupancy(), 30);
+}
+
+#[test]
+fn torn_final_wal_frame_is_truncated_not_fatal() {
+    let dir = test_dir("torn-tail");
+    let cfg = DesignConfig::small_test();
+    let mut reference = LookupEngine::new(cfg.clone());
+    let mut rng = Rng::seed_from_u64(31);
+    let tags = TagDistribution::Uniform.sample_distinct(cfg.n, 20, &mut rng);
+    {
+        let (mut bank, _) = DurableBank::open(&dir, cfg.clone(), StoreOptions::default()).unwrap();
+        for t in &tags {
+            assert_eq!(bank.insert(t).unwrap(), reference.insert(t).unwrap());
+        }
+    }
+    // simulate a crash mid-append: half of one more frame at the tail
+    let torn = wal::encode_frame(&WalRecord::Insert {
+        addr: 20,
+        tag: cscam::workload::random_tag(cfg.n, &mut rng),
+    });
+    let wal_path = dir.join(WAL_FILE);
+    let mut raw = std::fs::read(&wal_path).unwrap();
+    raw.extend_from_slice(&torn[..torn.len() / 2]);
+    std::fs::write(&wal_path, &raw).unwrap();
+
+    let (mut bank, report) = DurableBank::open(&dir, cfg.clone(), StoreOptions::default()).unwrap();
+    assert_eq!(report.truncated_bytes as usize, torn.len() / 2);
+    assert_eq!(report.wal_records, 20, "every complete record survives");
+    assert_bank_bit_identical(&mut bank, &mut reference, &tags, cfg.n, 32);
+}
+
+fn placement_for(kind: &str, shards: usize, sample: &[BitVec], n: usize) -> PlacementMode {
+    match kind {
+        "hash" => PlacementMode::TagHash,
+        "broadcast" => PlacementMode::Broadcast,
+        "prefix" => PlacementMode::learned(shards, sample, n),
+        other => panic!("unknown placement {other}"),
+    }
+}
+
+#[test]
+fn fleet_recovery_is_bit_identical_across_placements() {
+    for kind in ["hash", "broadcast", "prefix"] {
+        let dir = test_dir(&format!("fleet-{kind}"));
+        let cfg = fleet_cfg();
+        let mut rng = Rng::seed_from_u64(41);
+        let tags = TagDistribution::Uniform.sample_distinct(cfg.n, 120, &mut rng);
+        let mode = placement_for(kind, cfg.shards, &tags, cfg.n);
+
+        // never-crashed reference fleet and the durable fleet run the same
+        // sequential history; addresses must agree insert by insert
+        let reference = ShardedCamServer::new(&cfg, mode.clone(), policy()).spawn();
+        let (durable, _) =
+            ShardedCamServer::open_durable(&cfg, mode, policy(), &dir, StoreOptions::default())
+                .unwrap();
+        let handle = durable.spawn();
+        let mut stored = Vec::new();
+        for t in &tags {
+            match (handle.insert(t.clone()), reference.insert(t.clone())) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(a, b, "{kind}: placement diverged");
+                    stored.push((t.clone(), a));
+                }
+                (Err(e1), Err(e2)) => assert_eq!(e1, e2, "{kind}: divergent errors"),
+                (a, b) => panic!("{kind}: insert divergence {a:?} vs {b:?}"),
+            }
+        }
+        for (_, g) in stored.iter().take(15) {
+            handle.delete(*g).unwrap();
+            reference.delete(*g).unwrap();
+        }
+        // crash: drop the durable fleet's handles without drain or flush
+        drop(handle);
+
+        // reopen with a freshly made mode of the same kind — for the
+        // learned prefix this sample differs, proving the manifest's
+        // recorded positions win over the new selection
+        let mut rng2 = Rng::seed_from_u64(42);
+        let other_sample = TagDistribution::Uniform.sample_distinct(cfg.n, 60, &mut rng2);
+        let fresh_mode = placement_for(kind, cfg.shards, &other_sample, cfg.n);
+        let (reopened, recovery) = ShardedCamServer::open_durable(
+            &cfg,
+            fresh_mode,
+            policy(),
+            &dir,
+            StoreOptions::default(),
+        )
+        .unwrap();
+        assert!(recovery.manifest_loaded, "{kind}: restart validates the manifest");
+        assert_eq!(recovery.total_occupancy(), stored.len() - 15, "{kind}");
+        let recovered = reopened.spawn();
+
+        for (i, (t, g)) in stored.iter().enumerate() {
+            let want: Option<usize> = (i >= 15).then_some(*g);
+            let a: ShardedOutcome = recovered.lookup(t.clone()).unwrap();
+            let b = reference.lookup(t.clone()).unwrap();
+            assert_eq!(a, b, "{kind}: outcome diverged for tag {i}");
+            assert_eq!(a.addr, want, "{kind}: wrong address for tag {i}");
+        }
+        let mut rng3 = Rng::seed_from_u64(43);
+        for _ in 0..40 {
+            let t = cscam::workload::random_tag(cfg.n, &mut rng3);
+            assert_eq!(
+                recovered.lookup(t.clone()).unwrap(),
+                reference.lookup(t.clone()).unwrap(),
+                "{kind}: miss probe diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn wire_snapshot_flush_and_restart_are_bit_identical_over_tcp() {
+    let dir = test_dir("wire-restart");
+    let cfg = fleet_cfg();
+    let (fleet, _) = ShardedCamServer::open_durable(
+        &cfg,
+        PlacementMode::TagHash,
+        policy(),
+        &dir,
+        StoreOptions::default(),
+    )
+    .unwrap();
+    let handle = fleet.spawn();
+    let server =
+        CamTcpServer::bind(handle.clone(), "127.0.0.1:0", NetConfig::default()).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let net = server.spawn().unwrap();
+
+    let mut rng = Rng::seed_from_u64(51);
+    let tags = TagDistribution::Uniform.sample_distinct(cfg.n, 40, &mut rng);
+    let mut client = CamClient::connect(addr).unwrap();
+    for t in tags.iter().take(30) {
+        client.insert(t).unwrap();
+    }
+    client.flush().unwrap();
+    // wire-forced compaction: the first 30 move into the snapshot
+    client.snapshot().unwrap();
+    for t in tags.iter().skip(30) {
+        client.insert(t).unwrap();
+    }
+    let before: Vec<ShardedOutcome> =
+        tags.iter().map(|t| client.lookup(t).unwrap()).collect();
+    client.shutdown().unwrap();
+    net.join();
+
+    // restart from disk, re-serve, and require wire answers to be
+    // bit-identical to the pre-restart fleet's
+    let (fleet2, recovery) = ShardedCamServer::open_durable(
+        &cfg,
+        PlacementMode::TagHash,
+        policy(),
+        &dir,
+        StoreOptions::default(),
+    )
+    .unwrap();
+    assert!(recovery.banks.iter().any(|b| b.snapshot_loaded), "wire Snapshot compacted");
+    assert_eq!(recovery.total_records(), 10, "only post-snapshot inserts replay");
+    assert_eq!(recovery.total_occupancy(), 40);
+    let handle2 = fleet2.spawn();
+    let server2 =
+        CamTcpServer::bind(handle2.clone(), "127.0.0.1:0", NetConfig::default()).unwrap();
+    let addr2 = server2.local_addr().unwrap().to_string();
+    let net2 = server2.spawn().unwrap();
+    let mut client2 = CamClient::connect(addr2).unwrap();
+    for (t, want) in tags.iter().zip(&before) {
+        assert_eq!(&client2.lookup(t).unwrap(), want, "wire outcome changed across restart");
+    }
+    client2.shutdown().unwrap();
+    net2.join();
+}
+
+#[test]
+fn recovery_refuses_a_corrupt_snapshot_loudly() {
+    let dir = test_dir("corrupt-snapshot");
+    let cfg = DesignConfig::small_test();
+    {
+        let (mut bank, _) = DurableBank::open(&dir, cfg.clone(), StoreOptions::default()).unwrap();
+        let mut rng = Rng::seed_from_u64(61);
+        for t in &TagDistribution::Uniform.sample_distinct(cfg.n, 10, &mut rng) {
+            bank.insert(t).unwrap();
+        }
+        bank.compact().unwrap();
+    }
+    let snap = dir.join(SNAPSHOT_FILE);
+    let mut raw = std::fs::read(&snap).unwrap();
+    let mid = raw.len() / 2;
+    raw[mid] ^= 0x55;
+    std::fs::write(&snap, &raw).unwrap();
+    match DurableBank::open(&dir, cfg, StoreOptions::default()) {
+        Err(StoreError::Corrupt(_)) => {}
+        Err(other) => panic!("wrong error class for a corrupt snapshot: {other:?}"),
+        Ok(_) => panic!("corrupt snapshot must refuse recovery"),
+    }
+}
