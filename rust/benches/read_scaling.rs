@@ -1,0 +1,186 @@
+//! Read-path scaling: bulk-lookup throughput on ONE bank as a function of
+//! the reader-pool size — the tentpole claim of the concurrent read path
+//! is that lookups no longer serialize behind a single engine thread, so
+//! throughput must rise with reader threads on the same stored content.
+//!
+//! Run: `cargo bench --bench read_scaling`
+//!
+//! Flags (after `--`):
+//! * `--quick`            headline rows only, fewer lookups (CI smoke);
+//! * `--readers 1,2,4`    reader-pool sizes for the headline rows
+//!   (`0` = the legacy engine-thread path, as a baseline);
+//! * `--threads 8`        client threads shipping bulk chunks;
+//! * `--json PATH`        append the headline rows (tagged `read_scaling`)
+//!   to the `BENCH_*.json` trajectory shared with the `coordinator` and
+//!   `net` benches.  Row keys: `readers`, `threads`, `lookups`,
+//!   `throughput_lps`, `p50_ns`, `p99_ns`, `mean_lambda`, `hit_ratio`.
+
+use std::time::{Duration, Instant};
+
+use cscam::config::DesignConfig;
+use cscam::coordinator::{BatchPolicy, CamServer, DecodeBackend, DecodeScratch, LookupEngine};
+use cscam::util::bench::{write_bench_json, BenchRecord};
+use cscam::util::cli::Args;
+use cscam::util::Rng;
+use cscam::workload::{QueryMix, TagDistribution};
+
+const CHUNK: usize = 256;
+
+/// A filled reference-design bank plus the probe stream (90 % hit mix),
+/// pre-split per client thread.  Same seed every run: every row measures
+/// the same work.
+fn setup(threads: usize, lookups: usize) -> (LookupEngine, Vec<Vec<Vec<cscam::bits::BitVec>>>) {
+    let cfg = DesignConfig::reference();
+    let mut engine = LookupEngine::new(cfg.clone());
+    let mut rng = Rng::seed_from_u64(1);
+    let stored = TagDistribution::Uniform.sample_distinct(cfg.n, cfg.m, &mut rng);
+    for t in &stored {
+        engine.insert(t).unwrap();
+    }
+    let mix = QueryMix { hit_ratio: 0.9, zipf_s: 0.0 };
+    let mut per_thread: Vec<Vec<Vec<cscam::bits::BitVec>>> = vec![Vec::new(); threads];
+    let mut current: Vec<Vec<cscam::bits::BitVec>> = vec![Vec::new(); threads];
+    for i in 0..lookups {
+        let t = i % threads;
+        current[t].push(mix.sample(&stored, cfg.n, &mut rng).0);
+        if current[t].len() == CHUNK {
+            per_thread[t].push(std::mem::take(&mut current[t]));
+        }
+    }
+    for (t, rest) in current.into_iter().enumerate() {
+        if !rest.is_empty() {
+            per_thread[t].push(rest);
+        }
+    }
+    (engine, per_thread)
+}
+
+/// The headline row: `readers` pool threads on one bank, `threads` client
+/// threads shipping bulk chunks of [`CHUNK`] tags through `lookup_many`
+/// (which fans each chunk out across the pool).
+fn run_pool(readers: usize, threads: usize, lookups: usize) -> BenchRecord {
+    let (engine, per_thread) = setup(threads, lookups);
+    let policy = BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(100) };
+    let h = CamServer::with_engine(engine, DecodeBackend::Native, policy)
+        .with_readers(readers)
+        .spawn();
+
+    let t0 = Instant::now();
+    let joins: Vec<_> = per_thread
+        .into_iter()
+        .map(|chunks| {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                let mut hits = 0usize;
+                for c in chunks {
+                    for r in h.lookup_many(c) {
+                        hits += r.unwrap().addr.is_some() as usize;
+                    }
+                }
+                hits
+            })
+        })
+        .collect();
+    let mut hits = 0usize;
+    for j in joins {
+        hits += j.join().unwrap();
+    }
+    let wall = t0.elapsed();
+    let m = h.metrics().unwrap();
+    let throughput = lookups as f64 / wall.as_secs_f64();
+    println!(
+        "{:<44} {:>10.0} lookups/s  (λ̄ {:.3}, p50 {:>7} ns, p99 {:>8} ns, hits {})",
+        format!("read_scaling/readers={readers}/bulk{CHUNK}x{threads}t"),
+        throughput,
+        m.lambda.mean(),
+        m.host_latency_ns.quantile(0.5),
+        m.host_latency_ns.quantile(0.99),
+        hits,
+    );
+
+    let mut rec =
+        BenchRecord::new(format!("read_scaling/readers={readers}/bulk{CHUNK}x{threads}t"));
+    rec.push("readers", readers as f64);
+    rec.push("threads", threads as f64);
+    rec.push("lookups", lookups as f64);
+    rec.push("throughput_lps", throughput);
+    rec.push("p50_ns", m.host_latency_ns.quantile(0.5) as f64);
+    rec.push("p99_ns", m.host_latency_ns.quantile(0.99) as f64);
+    rec.push("mean_lambda", m.lambda.mean());
+    rec.push("hit_ratio", m.hit_ratio());
+    rec
+}
+
+/// The zero-queue path the TCP connection threads use: `threads` caller
+/// threads, each with its own `DecodeScratch`, searching the published
+/// snapshot directly.  Printed for comparison, not recorded (it has no
+/// `readers` axis).
+fn run_direct(threads: usize, lookups: usize) {
+    let (engine, per_thread) = setup(threads, lookups);
+    let policy = BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(100) };
+    // readers = 0: the direct path needs no pool — measure it without two
+    // idle reader threads on the side
+    let h = CamServer::with_engine(engine, DecodeBackend::Native, policy)
+        .with_readers(0)
+        .spawn();
+
+    let t0 = Instant::now();
+    let joins: Vec<_> = per_thread
+        .into_iter()
+        .map(|chunks| {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                let mut scratch = DecodeScratch::new();
+                let mut hits = 0usize;
+                for c in chunks {
+                    for t in &c {
+                        hits +=
+                            h.lookup_direct(t, &mut scratch).unwrap().addr.is_some() as usize;
+                    }
+                }
+                hits
+            })
+        })
+        .collect();
+    let mut hits = 0usize;
+    for j in joins {
+        hits += j.join().unwrap();
+    }
+    let wall = t0.elapsed();
+    println!(
+        "{:<44} {:>10.0} lookups/s  (hits {})",
+        format!("read_scaling/direct/{threads}t"),
+        lookups as f64 / wall.as_secs_f64(),
+        hits,
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    // `cargo bench ... -- FLAGS` forwards FLAGS here (harness = false)
+    let args = Args::parse(std::env::args().skip(1), &["quick"])?;
+    args.check_known(&["quick", "readers", "threads", "json"])?;
+    let quick = args.flag("quick");
+    let reader_counts: Vec<usize> = args.get_list("readers", vec![1, 2, 4])?;
+    let threads: usize = args.get_parse("threads", 8)?;
+    let lookups = if quick { 80_000 } else { 400_000 };
+
+    println!(
+        "# read scaling (reference design, one bank, 90 % hit mix, \
+         bulk {CHUNK} x {threads} client threads{})",
+        if quick { ", --quick" } else { "" }
+    );
+    let mut records = Vec::new();
+    for &r in &reader_counts {
+        records.push(run_pool(r, threads, lookups));
+    }
+    if !quick {
+        println!();
+        run_direct(threads, lookups);
+    }
+
+    if let Some(path) = args.get("json") {
+        write_bench_json(std::path::Path::new(path), "read_scaling", &records)?;
+        println!("\nappended {} 'read_scaling' trajectory rows to {path}", records.len());
+    }
+    Ok(())
+}

@@ -1,4 +1,23 @@
 //! One CAM macro + its CNN classifier — the Fig. 1 system as an engine.
+//!
+//! The engine is split along the read/write boundary so searches can run
+//! on every core at once:
+//!
+//! * [`SearchState`] — everything a *search* reads (bit selection, CNN
+//!   weight rows, CAM tags + valid bits, energy/delay constants), immutable
+//!   and shared behind an `Arc`.  [`SearchState::lookup`] is a pure
+//!   function of `(state, tag, scratch)` and takes `&self`.
+//! * [`DecodeScratch`] — the per-thread reusable buffers (`idx`, `act`,
+//!   `enables`) the decode stage writes into.  One per reader thread, no
+//!   allocation on the hot path.
+//! * [`LookupEngine`] — the single writer: owns the mutation-side state
+//!   (`live` associations, stale-delete counter, insert cursor) plus the
+//!   current `Arc<SearchState>`.  Mutations copy-on-write the state
+//!   (`Arc::make_mut`) and the serving layer re-publishes the new `Arc`
+//!   through a [`SharedSearch`] slot RCU-style — readers never block the
+//!   writer and never observe a half-applied mutation.
+
+use std::sync::{Arc, RwLock};
 
 use crate::bits::BitVec;
 use crate::cam::CamArray;
@@ -10,11 +29,15 @@ use crate::timing::{proposed_delay, DelayConstants, DelayReport};
 /// Engine errors.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum EngineError {
-    /// The CAM is full — no free slot for an insert.  Also returned by the
-    /// non-blocking [`crate::coordinator::ServerHandle::try_lookup`] when
-    /// the server's admission queue is at capacity (per-bank load shedding
-    /// in the sharded fleet).
+    /// The CAM is full — no free slot for an insert.  This is a *capacity*
+    /// condition; transient overload is [`EngineError::Busy`].
     Full,
+    /// Admission shedding: the server's lookup queue is at capacity, the
+    /// request was not enqueued — returned by
+    /// [`crate::coordinator::ServerHandle::try_lookup`] and the fleet-level
+    /// non-blocking admission.  Retry later; the CAM itself may have free
+    /// slots (that condition is [`EngineError::Full`]).
+    Busy,
     /// Address out of range.
     BadAddress(usize),
     /// Tag width does not match the configured N.
@@ -34,6 +57,7 @@ impl std::fmt::Display for EngineError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             EngineError::Full => write!(f, "CAM is full"),
+            EngineError::Busy => write!(f, "server admission queue at capacity"),
             EngineError::BadAddress(a) => write!(f, "address {a} out of range"),
             EngineError::TagWidth { got, want } => {
                 write!(f, "tag width {got}, expected {want}")
@@ -66,17 +90,239 @@ pub struct LookupOutcome {
     pub delay: DelayReport,
 }
 
-/// The proposed architecture, end to end: tag-bit selection → CNN decode →
-/// sub-block compare-enabled CAM search → priority encode, with energy and
-/// delay accounting per search.
+/// Per-thread reusable decode buffers — the mutable half of a lookup.
+///
+/// A scratch is geometry-agnostic: it resizes itself lazily the first time
+/// a [`SearchState`] of a new geometry uses it, then stays allocation-free.
+/// One per reader thread (or per connection); never shared.
 #[derive(Debug, Clone)]
-pub struct LookupEngine {
+pub struct DecodeScratch {
+    act: BitVec,
+    enables: BitVec,
+    idx: Vec<u16>,
+}
+
+impl Default for DecodeScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DecodeScratch {
+    /// An empty scratch; buffers are sized on first use.
+    pub fn new() -> Self {
+        DecodeScratch { act: BitVec::zeros(0), enables: BitVec::zeros(0), idx: Vec::new() }
+    }
+
+    /// Pre-size for a design point (avoids the first-use allocation).
+    pub fn for_config(cfg: &DesignConfig) -> Self {
+        DecodeScratch {
+            act: BitVec::zeros(cfg.m),
+            enables: BitVec::zeros(cfg.beta()),
+            idx: Vec::with_capacity(cfg.c),
+        }
+    }
+
+    #[inline]
+    fn ensure(&mut self, m: usize, beta: usize) {
+        if self.act.len() != m {
+            self.act = BitVec::zeros(m);
+        }
+        if self.enables.len() != beta {
+            self.enables = BitVec::zeros(beta);
+        }
+    }
+}
+
+/// The immutable search half of an engine: everything a lookup reads.
+///
+/// Shared behind an `Arc` by the serving layers; [`Self::lookup`] takes
+/// `&self` plus a caller-owned [`DecodeScratch`], so any number of threads
+/// can search one published state concurrently, each with its own scratch.
+/// Bit-for-bit identical to driving [`LookupEngine::lookup`] on the same
+/// state — it *is* the same code.
+#[derive(Debug, Clone)]
+pub struct SearchState {
     cfg: DesignConfig,
     selection: Selection,
     net: ClusteredNetwork,
     cam: CamArray,
     energy: EnergyModel,
     delay: DelayReport,
+}
+
+impl SearchState {
+    fn new(cfg: DesignConfig, selection: Selection, net: ClusteredNetwork, cam: CamArray) -> Self {
+        let energy = EnergyModel::new(cfg.clone());
+        let delay = proposed_delay(&cfg, &DelayConstants::reference());
+        SearchState { cfg, selection, net, cam, energy, delay }
+    }
+
+    pub fn config(&self) -> &DesignConfig {
+        &self.cfg
+    }
+
+    pub fn selection(&self) -> &Selection {
+        &self.selection
+    }
+
+    /// The clustered network (weight rows for the PJRT artifact upload).
+    pub fn network(&self) -> &ClusteredNetwork {
+        &self.net
+    }
+
+    /// The CAM array (snapshot encoding reads tags + valid bits off it).
+    pub fn cam(&self) -> &CamArray {
+        &self.cam
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.cam.occupancy()
+    }
+
+    /// The full proposed-architecture lookup — pure: `&self` state, caller
+    /// scratch, no interior mutability.  This is the concurrent hot path.
+    pub fn lookup(
+        &self,
+        tag: &BitVec,
+        scratch: &mut DecodeScratch,
+    ) -> Result<LookupOutcome, EngineError> {
+        if tag.len() != self.cfg.n {
+            return Err(EngineError::TagWidth { got: tag.len(), want: self.cfg.n });
+        }
+        scratch.ensure(self.cfg.m, self.cfg.beta());
+        // Stage 1 (CNN): tag reduction + LD + GD → compare enables.
+        self.selection.apply_into(tag, &mut scratch.idx);
+        let lambda = self.net.decode_into(&scratch.idx, &mut scratch.act, &mut scratch.enables);
+
+        // Stage 2 (CAM): search only the enabled sub-blocks.
+        let result = self.cam.search(tag, &scratch.enables);
+        let energy = self.energy.proposed_measured(&result.activity, 1);
+
+        Ok(LookupOutcome {
+            addr: result.matches.first().copied(),
+            all_matches: result.matches,
+            lambda,
+            enabled_blocks: result.activity.enabled_blocks,
+            comparisons: result.activity.enabled_rows,
+            energy,
+            delay: self.delay,
+        })
+    }
+
+    /// Lookup with an externally computed enable mask (the PJRT decode
+    /// path: the batcher ships cluster indices to the artifact and feeds
+    /// the resulting masks back here for the CAM stage).
+    pub fn lookup_with_enables(
+        &self,
+        tag: &BitVec,
+        enables: &BitVec,
+        lambda: usize,
+    ) -> Result<LookupOutcome, EngineError> {
+        if tag.len() != self.cfg.n {
+            return Err(EngineError::TagWidth { got: tag.len(), want: self.cfg.n });
+        }
+        let result = self.cam.search(tag, enables);
+        let energy = self.energy.proposed_measured(&result.activity, 1);
+        Ok(LookupOutcome {
+            addr: result.matches.first().copied(),
+            all_matches: result.matches,
+            lambda,
+            enabled_blocks: result.activity.enabled_blocks,
+            comparisons: result.activity.enabled_rows,
+            energy,
+            delay: self.delay,
+        })
+    }
+
+    /// Baseline: conventional full-array search (all blocks enabled), with
+    /// the conventional energy model — used by the Table II harness.
+    pub fn lookup_conventional(
+        &self,
+        tag: &BitVec,
+        ml: crate::cam::MatchlineKind,
+    ) -> Result<LookupOutcome, EngineError> {
+        if tag.len() != self.cfg.n {
+            return Err(EngineError::TagWidth { got: tag.len(), want: self.cfg.n });
+        }
+        let result = self.cam.search_all(tag);
+        let energy = self.energy.conventional(ml);
+        let delay = crate::timing::conventional_delay(
+            self.cfg.m,
+            self.cfg.n,
+            ml,
+            &DelayConstants::reference(),
+            self.cfg.tech(),
+        );
+        Ok(LookupOutcome {
+            addr: result.matches.first().copied(),
+            all_matches: result.matches,
+            lambda: self.cfg.m, // no classifier: every row is a candidate
+            enabled_blocks: result.activity.enabled_blocks,
+            comparisons: result.activity.enabled_rows,
+            energy,
+            delay,
+        })
+    }
+
+    /// Raw functional search with every sub-block enabled and no CNN stage:
+    /// the pure content of the array.  This is the anchor the sharded
+    /// scatter-gather path ([`crate::shard::ShardedCam`]) is checked
+    /// against bit-for-bit.  Panics on a tag-width mismatch (the callers
+    /// validate widths at the API boundary).
+    pub fn search_unclassified(&self, tag: &BitVec) -> crate::cam::SearchResult {
+        self.cam.search_all(tag)
+    }
+
+    /// Cluster indices for a tag (what the PJRT decode path ships).
+    pub fn cluster_indices(&self, tag: &BitVec) -> Vec<u16> {
+        self.selection.apply(tag)
+    }
+}
+
+/// The RCU publish slot: single writer, any number of snapshot readers.
+///
+/// The serving layer's writer thread publishes a fresh `Arc<SearchState>`
+/// after every acknowledged mutation (strictly *after* the WAL ack, so a
+/// reader can never observe un-logged state); readers grab the current
+/// `Arc` with one brief read-lock and then search entirely lock-free.  A
+/// snapshot stays valid (and consistent) for as long as the reader holds
+/// the `Arc`, even across concurrent publishes.
+#[derive(Debug, Clone)]
+pub struct SharedSearch {
+    slot: Arc<RwLock<Arc<SearchState>>>,
+}
+
+impl SharedSearch {
+    /// A slot holding `initial` until the first publish.
+    pub fn new(initial: Arc<SearchState>) -> Self {
+        SharedSearch { slot: Arc::new(RwLock::new(initial)) }
+    }
+
+    /// The current published state.  O(1): clones the `Arc`, not the state.
+    pub fn snapshot(&self) -> Arc<SearchState> {
+        self.slot.read().expect("search slot poisoned").clone()
+    }
+
+    /// Publish a new state (single-writer discipline: only the engine
+    /// thread of the owning server calls this).
+    pub fn publish(&self, state: Arc<SearchState>) {
+        *self.slot.write().expect("search slot poisoned") = state;
+    }
+}
+
+/// The proposed architecture, end to end: tag-bit selection → CNN decode →
+/// sub-block compare-enabled CAM search → priority encode, with energy and
+/// delay accounting per search.
+///
+/// This is the *writer* handle: mutations (`insert`/`delete`/`retrain`)
+/// copy-on-write the shared [`SearchState`]; reads go through the state
+/// (the `&mut self` convenience [`Self::lookup`] just reuses an internal
+/// scratch).  Concurrent readers hold `Arc<SearchState>` snapshots from
+/// [`Self::search_state`] and never touch the engine.
+#[derive(Debug, Clone)]
+pub struct LookupEngine {
+    state: Arc<SearchState>,
     /// Associations currently live (addr → cluster indices), for retrains.
     live: Vec<Option<Vec<u16>>>,
     /// Deletes since the last retrain leave stale weights (superposition);
@@ -91,10 +337,8 @@ pub struct LookupEngine {
     first_free: usize,
     /// Retrain when stale deletes exceed this fraction of M (0 disables).
     pub retrain_threshold: f64,
-    // scratch buffers (hot path, allocation-free)
-    act: BitVec,
-    enables: BitVec,
-    idx: Vec<u16>,
+    /// Writer-local scratch for the `&mut self` lookup convenience.
+    scratch: DecodeScratch,
 }
 
 impl LookupEngine {
@@ -106,23 +350,15 @@ impl LookupEngine {
         assert_eq!(selection.c(), cfg.c, "selection clusters must equal c");
         let net = ClusteredNetwork::from_config(&cfg);
         let cam = CamArray::new(cfg.m, cfg.n, cfg.zeta);
-        let energy = EnergyModel::new(cfg.clone());
-        let delay = proposed_delay(&cfg, &DelayConstants::reference());
-        let (m, beta) = (cfg.m, cfg.beta());
+        let m = cfg.m;
+        let scratch = DecodeScratch::for_config(&cfg);
         LookupEngine {
-            cfg,
-            selection,
-            net,
-            cam,
-            energy,
-            delay,
+            state: Arc::new(SearchState::new(cfg, selection, net, cam)),
             live: vec![None; m],
             stale_deletes: 0,
             first_free: 0,
             retrain_threshold: 0.25,
-            act: BitVec::zeros(m),
-            enables: BitVec::zeros(beta),
-            idx: Vec::new(),
+            scratch,
         }
     }
 
@@ -188,23 +424,14 @@ impl LookupEngine {
         // cluster indices are a pure function of the stored tag.
         let live: Vec<Option<Vec<u16>>> =
             (0..cfg.m).map(|a| cam.read(a).map(|t| selection.apply(t))).collect();
-        let energy = EnergyModel::new(cfg.clone());
-        let delay = proposed_delay(&cfg, &DelayConstants::reference());
-        let (m, beta) = (cfg.m, cfg.beta());
+        let scratch = DecodeScratch::for_config(&cfg);
         Ok(LookupEngine {
-            cfg,
-            selection,
-            net,
-            cam,
-            energy,
-            delay,
+            state: Arc::new(SearchState::new(cfg, selection, net, cam)),
             live,
             stale_deletes,
             first_free: insert_cursor,
             retrain_threshold,
-            act: BitVec::zeros(m),
-            enables: BitVec::zeros(beta),
-            idx: Vec::new(),
+            scratch,
         })
     }
 
@@ -215,31 +442,39 @@ impl LookupEngine {
         Self::with_selection(cfg, sel)
     }
 
+    /// The current search state behind its `Arc` — O(1).  The serving
+    /// layer publishes this through a [`SharedSearch`] slot after every
+    /// acknowledged mutation; tests and benches use it to run concurrent
+    /// lookups without a server.
+    pub fn search_state(&self) -> Arc<SearchState> {
+        Arc::clone(&self.state)
+    }
+
     pub fn config(&self) -> &DesignConfig {
-        &self.cfg
+        self.state.config()
     }
 
     pub fn selection(&self) -> &Selection {
-        &self.selection
+        self.state.selection()
     }
 
     /// The CNN's weight rows (to ship to the PJRT decode artifact).
     pub fn weight_rows(&self) -> &[BitVec] {
-        self.net.rows()
+        self.state.network().rows()
     }
 
     pub fn occupancy(&self) -> usize {
-        self.cam.occupancy()
+        self.state.cam().occupancy()
     }
 
     /// The CAM array (snapshot encoding reads tags + valid bits off it).
     pub fn cam(&self) -> &CamArray {
-        &self.cam
+        self.state.cam()
     }
 
     /// The clustered network (snapshot encoding reads the weight rows).
     pub fn network(&self) -> &ClusteredNetwork {
-        &self.net
+        self.state.network()
     }
 
     /// Deletes since the last retrain (persisted so a recovered engine
@@ -257,8 +492,8 @@ impl LookupEngine {
     /// scan starts at the insert cursor (every lower slot is occupied), so
     /// sequential fills are O(1) per insert instead of O(M).
     pub fn insert(&mut self, tag: &BitVec) -> Result<usize, EngineError> {
-        let addr = (self.first_free..self.cfg.m)
-            .find(|&a| self.live[a].is_none() && self.cam.read(a).is_none())
+        let addr = (self.first_free..self.state.cfg.m)
+            .find(|&a| self.live[a].is_none() && self.state.cam.read(a).is_none())
             .ok_or(EngineError::Full)?;
         self.insert_at(addr, tag)?;
         self.first_free = addr + 1;
@@ -267,20 +502,28 @@ impl LookupEngine {
 
     /// Insert a tag at a specific address (TLB-style replacement).
     pub fn insert_at(&mut self, addr: usize, tag: &BitVec) -> Result<(), EngineError> {
-        if tag.len() != self.cfg.n {
-            return Err(EngineError::TagWidth { got: tag.len(), want: self.cfg.n });
+        if tag.len() != self.state.cfg.n {
+            return Err(EngineError::TagWidth { got: tag.len(), want: self.state.cfg.n });
         }
-        if addr >= self.cfg.m {
+        if addr >= self.state.cfg.m {
             return Err(EngineError::BadAddress(addr));
         }
         // Replacing a live entry leaves its old weights stale (superposed).
         if self.live[addr].is_some() {
             self.stale_deletes += 1;
         }
-        let mut idx = Vec::with_capacity(self.cfg.c);
-        self.selection.apply_into(tag, &mut idx);
-        self.net.train(&idx, addr);
-        self.cam.write(addr, tag.clone());
+        let mut idx = Vec::with_capacity(self.state.cfg.c);
+        self.state.selection.apply_into(tag, &mut idx);
+        // Copy-on-write: clones the state only when a published snapshot
+        // (or another engine clone) still shares it.  Behind a serving
+        // publish slot that is exactly once per acknowledged mutation —
+        // the RCU trade: writes pay an O(bank) copy so reads never take a
+        // lock.  Bulk loads that mutate many times between publishes
+        // (recovery replay, pre-population before `spawn`) clone at most
+        // once, because only the first `make_mut` after a publish copies.
+        let st = Arc::make_mut(&mut self.state);
+        st.net.train(&idx, addr);
+        st.cam.write(addr, tag.clone());
         self.live[addr] = Some(idx);
         self.maybe_retrain();
         Ok(())
@@ -290,11 +533,11 @@ impl LookupEngine {
     /// weights stay until the staleness threshold triggers a retrain
     /// (weights are superposed — stale ones cost energy, not correctness).
     pub fn delete(&mut self, addr: usize) -> Result<(), EngineError> {
-        if addr >= self.cfg.m {
+        if addr >= self.state.cfg.m {
             return Err(EngineError::BadAddress(addr));
         }
         if self.live[addr].take().is_some() {
-            self.cam.erase(addr);
+            Arc::make_mut(&mut self.state).cam.erase(addr);
             self.first_free = self.first_free.min(addr);
             self.stale_deletes += 1;
             self.maybe_retrain();
@@ -304,7 +547,7 @@ impl LookupEngine {
 
     fn maybe_retrain(&mut self) {
         if self.retrain_threshold > 0.0
-            && self.stale_deletes as f64 > self.retrain_threshold * self.cfg.m as f64
+            && self.stale_deletes as f64 > self.retrain_threshold * self.state.cfg.m as f64
         {
             self.retrain();
         }
@@ -318,108 +561,55 @@ impl LookupEngine {
             .enumerate()
             .filter_map(|(a, idx)| idx.clone().map(|i| (i, a)))
             .collect();
-        self.net.retrain_from(entries.iter().map(|(i, a)| (i.as_slice(), *a)));
+        Arc::make_mut(&mut self.state)
+            .net
+            .retrain_from(entries.iter().map(|(i, a)| (i.as_slice(), *a)));
         self.stale_deletes = 0;
     }
 
     /// Fraction of trained weights that are stale.
     pub fn stale_fraction(&self) -> f64 {
-        self.stale_deletes as f64 / self.cfg.m as f64
+        self.stale_deletes as f64 / self.state.cfg.m as f64
     }
 
-    /// The full proposed-architecture lookup.
+    /// The full proposed-architecture lookup.  `&mut self` only for the
+    /// writer-local scratch — semantically read-only, and bit-identical to
+    /// [`SearchState::lookup`] on [`Self::search_state`] (the concurrent
+    /// equivalence tests assert exactly that).
     pub fn lookup(&mut self, tag: &BitVec) -> Result<LookupOutcome, EngineError> {
-        if tag.len() != self.cfg.n {
-            return Err(EngineError::TagWidth { got: tag.len(), want: self.cfg.n });
-        }
-        // Stage 1 (CNN): tag reduction + LD + GD → compare enables.
-        let mut idx = std::mem::take(&mut self.idx);
-        self.selection.apply_into(tag, &mut idx);
-        let lambda = self.net.decode_into(&idx, &mut self.act, &mut self.enables);
-        self.idx = idx;
-
-        // Stage 2 (CAM): search only the enabled sub-blocks.
-        let result = self.cam.search(tag, &self.enables);
-        let energy = self.energy.proposed_measured(&result.activity, 1);
-
-        Ok(LookupOutcome {
-            addr: result.matches.first().copied(),
-            all_matches: result.matches,
-            lambda,
-            enabled_blocks: result.activity.enabled_blocks,
-            comparisons: result.activity.enabled_rows,
-            energy,
-            delay: self.delay,
-        })
+        self.state.lookup(tag, &mut self.scratch)
     }
 
     /// Lookup with an externally computed enable mask (the PJRT decode
-    /// path: the batcher ships cluster indices to the artifact and feeds
-    /// the resulting masks back here for the CAM stage).
+    /// path).  Pure read: shared references suffice.
     pub fn lookup_with_enables(
-        &mut self,
+        &self,
         tag: &BitVec,
         enables: &BitVec,
         lambda: usize,
     ) -> Result<LookupOutcome, EngineError> {
-        if tag.len() != self.cfg.n {
-            return Err(EngineError::TagWidth { got: tag.len(), want: self.cfg.n });
-        }
-        let result = self.cam.search(tag, enables);
-        let energy = self.energy.proposed_measured(&result.activity, 1);
-        Ok(LookupOutcome {
-            addr: result.matches.first().copied(),
-            all_matches: result.matches,
-            lambda,
-            enabled_blocks: result.activity.enabled_blocks,
-            comparisons: result.activity.enabled_rows,
-            energy,
-            delay: self.delay,
-        })
+        self.state.lookup_with_enables(tag, enables, lambda)
     }
 
     /// Cluster indices for a tag (what the PJRT decode path ships).
     pub fn cluster_indices(&self, tag: &BitVec) -> Vec<u16> {
-        self.selection.apply(tag)
+        self.state.cluster_indices(tag)
     }
 
-    /// Raw functional search with every sub-block enabled and no CNN stage:
-    /// the pure content of the array.  This is the anchor the sharded
-    /// scatter-gather path ([`crate::shard::ShardedCam`]) is checked
-    /// against bit-for-bit.  Panics on a tag-width mismatch (the callers
-    /// validate widths at the API boundary).
+    /// Raw functional search with every sub-block enabled and no CNN
+    /// stage — see [`SearchState::search_unclassified`].
     pub fn search_unclassified(&self, tag: &BitVec) -> crate::cam::SearchResult {
-        self.cam.search_all(tag)
+        self.state.search_unclassified(tag)
     }
 
-    /// Baseline: conventional full-array search (all blocks enabled), with
-    /// the conventional energy model — used by the Table II harness.
+    /// Baseline: conventional full-array search — used by the Table II
+    /// harness.  Pure read: shared references suffice.
     pub fn lookup_conventional(
-        &mut self,
+        &self,
         tag: &BitVec,
         ml: crate::cam::MatchlineKind,
     ) -> Result<LookupOutcome, EngineError> {
-        if tag.len() != self.cfg.n {
-            return Err(EngineError::TagWidth { got: tag.len(), want: self.cfg.n });
-        }
-        let result = self.cam.search_all(tag);
-        let energy = self.energy.conventional(ml);
-        let delay = crate::timing::conventional_delay(
-            self.cfg.m,
-            self.cfg.n,
-            ml,
-            &DelayConstants::reference(),
-            self.cfg.tech(),
-        );
-        Ok(LookupOutcome {
-            addr: result.matches.first().copied(),
-            all_matches: result.matches,
-            lambda: self.cfg.m, // no classifier: every row is a candidate
-            enabled_blocks: result.activity.enabled_blocks,
-            comparisons: result.activity.enabled_rows,
-            energy,
-            delay,
-        })
+        self.state.lookup_conventional(tag, ml)
     }
 }
 
@@ -611,6 +801,11 @@ mod tests {
         let t = BitVec::zeros(16);
         assert!(matches!(e.lookup(&t), Err(EngineError::TagWidth { .. })));
         assert!(matches!(e.insert(&t), Err(EngineError::TagWidth { .. })));
+        let mut scratch = DecodeScratch::new();
+        assert!(matches!(
+            e.search_state().lookup(&t, &mut scratch),
+            Err(EngineError::TagWidth { .. })
+        ));
     }
 
     #[test]
@@ -622,7 +817,7 @@ mod tests {
             let native = e.lookup(t).unwrap();
             // recompute enables via the network directly (stand-in for the
             // PJRT artifact; the real cross-check lives in rust/tests/)
-            let act = e.net.decode(&idx);
+            let act = e.network().decode(&idx);
             let ext = e.lookup_with_enables(t, &act.enables, act.lambda).unwrap();
             assert_eq!(native.addr, ext.addr);
             assert_eq!(native.lambda, ext.lambda);
@@ -630,9 +825,79 @@ mod tests {
         }
     }
 
+    #[test]
+    fn search_state_lookup_is_bit_identical_to_engine_lookup() {
+        // the tentpole invariant: a snapshot + per-thread scratch answers
+        // exactly what the engine answers, field for field, hits and misses
+        let mut e = small_engine();
+        let tags = fill(&mut e, 40, 14);
+        let state = e.search_state();
+        let mut scratch = DecodeScratch::new();
+        let mut rng = Rng::seed_from_u64(15);
+        let mut probes = tags.clone();
+        probes.extend((0..40).map(|_| crate::workload::random_tag(e.config().n, &mut rng)));
+        for t in &probes {
+            assert_eq!(state.lookup(t, &mut scratch).unwrap(), e.lookup(t).unwrap());
+        }
+    }
+
+    #[test]
+    fn snapshots_are_immune_to_later_mutations() {
+        // RCU semantics: a snapshot taken before a mutation keeps answering
+        // from the old state; a snapshot taken after sees the new one.
+        let mut e = small_engine();
+        let tags = fill(&mut e, 8, 16);
+        let before = e.search_state();
+        e.delete(3).unwrap();
+        let after = e.search_state();
+        let mut scratch = DecodeScratch::new();
+        assert_eq!(before.lookup(&tags[3], &mut scratch).unwrap().addr, Some(3));
+        assert_eq!(after.lookup(&tags[3], &mut scratch).unwrap().addr, None);
+    }
+
+    #[test]
+    fn one_scratch_serves_many_geometries() {
+        let mut small = small_engine();
+        let mut big = LookupEngine::new(DesignConfig::reference());
+        let ts = fill(&mut small, 4, 17);
+        let tb = fill(&mut big, 4, 18);
+        let mut scratch = DecodeScratch::new();
+        assert_eq!(
+            small.search_state().lookup(&ts[0], &mut scratch).unwrap().addr,
+            Some(0)
+        );
+        assert_eq!(big.search_state().lookup(&tb[1], &mut scratch).unwrap().addr, Some(1));
+        assert_eq!(
+            small.search_state().lookup(&ts[2], &mut scratch).unwrap().addr,
+            Some(2)
+        );
+    }
+
+    #[test]
+    fn shared_search_publish_and_snapshot() {
+        let mut e = small_engine();
+        let shared = SharedSearch::new(e.search_state());
+        let tags = fill(&mut e, 4, 19);
+        let mut scratch = DecodeScratch::new();
+        // not yet published: the slot still answers from the empty state
+        assert_eq!(shared.snapshot().lookup(&tags[0], &mut scratch).unwrap().addr, None);
+        shared.publish(e.search_state());
+        assert_eq!(
+            shared.snapshot().lookup(&tags[0], &mut scratch).unwrap().addr,
+            Some(0)
+        );
+    }
+
+    #[test]
+    fn busy_and_full_are_distinct_errors() {
+        assert_ne!(EngineError::Busy, EngineError::Full);
+        assert!(EngineError::Full.to_string().contains("full"));
+        assert!(EngineError::Busy.to_string().contains("queue"));
+    }
+
     impl LookupEngine {
         fn cam_tag_equal(&self, tag: &BitVec, addr: usize) -> bool {
-            self.cam.read(addr).map(|t| t == tag).unwrap_or(false)
+            self.cam().read(addr).map(|t| t == tag).unwrap_or(false)
         }
     }
 }

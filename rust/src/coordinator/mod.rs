@@ -10,18 +10,26 @@
 //! scatter-gather router and aggregate the per-bank snapshots into a fleet
 //! view.
 //!
-//! * [`engine`] — one CAM macro + its CNN classifier (the Fig. 1 system).
+//! * [`engine`] — one CAM macro + its CNN classifier (the Fig. 1 system),
+//!   split read/write: an immutable [`SearchState`] shared behind an `Arc`
+//!   (lookups are `&self` + a per-thread [`DecodeScratch`]) and the
+//!   single-writer [`LookupEngine`] that copy-on-writes it.
 //! * [`batcher`] — size/deadline dynamic batching for the decode stage
 //!   (feeds the PJRT artifact whose batch sizes are fixed at AOT time).
-//! * [`server`] — threaded serve loop: mpsc in, per-request response
-//!   channels out, non-blocking admission, graceful drain.
-//! * [`metrics`] — counters + latency/energy aggregation.
+//! * [`server`] — the serving threads: one writer (mutations, barriers,
+//!   RCU publish through [`SharedSearch`]) plus a sized reader pool that
+//!   serves lookups concurrently from the published snapshot; graceful
+//!   drain, non-blocking admission ([`EngineError::Busy`] on queue-shed,
+//!   [`EngineError::Full`] strictly for "no free CAM slot").
+//! * [`metrics`] — counters + latency/energy aggregation (striped across
+//!   reader threads, merged on snapshot).
 //!
 //! Multi-bank scale-out (placement, scatter-gather, fleet metrics) lives
 //! one layer up in [`crate::shard`]; the network front-end that exposes a
-//! fleet over TCP — including the wire mapping of [`EngineError`] and the
-//! `Full` shed-on-overload contract of [`ServerHandle::try_lookup`] —
-//! lives two layers up in [`crate::net`].
+//! fleet over TCP — wire-typed [`EngineError`]s, with lookups served as
+//! direct snapshot reads on the connection threads (no queue, so the
+//! connection cap, not [`ServerHandle::try_lookup`]'s `Busy` shed, bounds
+//! wire read concurrency) — lives two layers up in [`crate::net`].
 
 pub mod batcher;
 pub mod engine;
@@ -29,9 +37,11 @@ pub mod metrics;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use engine::{EngineError, LookupEngine, LookupOutcome};
+pub use engine::{
+    DecodeScratch, EngineError, LookupEngine, LookupOutcome, SearchState, SharedSearch,
+};
 pub use metrics::Metrics;
 pub use server::{
     CamServer, DecodeBackend, PendingBulk, PendingLookup, PendingPersist, PersistError,
-    ServerHandle, DEFAULT_QUEUE_CAPACITY,
+    ServerHandle, DEFAULT_QUEUE_CAPACITY, DEFAULT_READERS,
 };

@@ -1,24 +1,41 @@
-//! The serve loop: a single-owner engine thread fed by an mpsc channel,
-//! with dynamic batching of the decode stage and per-request response
-//! channels.
+//! The serve loop: a single-owner *writer* thread fed by an mpsc channel,
+//! plus a sized pool of *reader* threads that serve lookups from the
+//! published [`SearchState`] snapshot — reads never round-trip through the
+//! mutation thread.
 //!
-//! Shape: `ServerHandle` (cheap to clone, one per client thread) → mpsc →
-//! engine thread.  Lookups are queued into the [`Batcher`]; inserts /
-//! deletes / metrics are *barriers* (they flush the pending batch first, so
-//! a lookup never observes a half-applied mutation).  The decode stage runs
-//! either natively (bit-packed CNN) or — with the `pjrt` cargo feature —
-//! through the PJRT artifact ([`crate::runtime::ArtifactStore`]), the
-//! three-layer configuration with Python strictly at build time.
+//! Shape: `ServerHandle` (cheap to clone, one per client thread) splits
+//! traffic by kind:
+//!
+//! * **mutations / barriers** (insert, delete, metrics, drain, persist) →
+//!   mpsc → the engine thread, which owns the [`LookupEngine`] writer.
+//!   After applying (and, with a store attached, logging) a mutation it
+//!   re-publishes the engine's `Arc<SearchState>` through the bank's
+//!   [`SharedSearch`] slot — *after* the WAL ack, *before* the client ack,
+//!   so an acknowledged write is always visible to subsequent lookups and
+//!   an unacknowledged one never is.
+//! * **lookups** → the reader pool's work queue; each reader thread holds
+//!   its own [`DecodeScratch`], snapshots the published state per job and
+//!   searches lock-free.  Bulk lookups are split into chunks so one big
+//!   slice fans out across the pool.  With `readers = 0` — or with the
+//!   PJRT decode backend, whose artifact store lives on the engine
+//!   thread — lookups fall back to the classic batched engine-thread path
+//!   ([`Batcher`]).
+//! * **direct reads** ([`ServerHandle::lookup_direct`]) skip even the pool
+//!   queue: the calling thread snapshots and searches itself.  This is
+//!   what the TCP connection threads use.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use crate::bits::BitVec;
 use crate::config::DesignConfig;
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
-use crate::coordinator::engine::{EngineError, LookupEngine, LookupOutcome};
+use crate::coordinator::engine::{
+    DecodeScratch, EngineError, LookupEngine, LookupOutcome, SearchState, SharedSearch,
+};
 use crate::coordinator::metrics::Metrics;
 use crate::runtime::DecodeOutput;
 use crate::store::{BankStore, StoreError};
@@ -50,6 +67,19 @@ pub enum DecodeBackend {
     /// AOT-compiled PJRT artifact (the three-layer stack).
     #[cfg(feature = "pjrt")]
     Pjrt(SendArtifactStore),
+}
+
+impl DecodeBackend {
+    /// Whether lookups may run on shared-state reader threads.  The PJRT
+    /// artifact store is pinned to the engine thread, so its decode stage
+    /// cannot leave it.
+    fn supports_shared_readers(&self) -> bool {
+        match self {
+            DecodeBackend::Native => true,
+            #[cfg(feature = "pjrt")]
+            DecodeBackend::Pjrt(_) => false,
+        }
+    }
 }
 
 #[cfg(feature = "pjrt")]
@@ -86,6 +116,251 @@ enum Request {
     /// without a store attached (nothing to persist).
     Persist { snapshot: bool, resp: mpsc::SyncSender<Result<bool, StoreError>> },
 }
+
+// ----------------------------------------------------------- reader pool
+
+/// A lookup job bound for a reader thread.
+enum ReadJob {
+    Lookup { tag: BitVec, enqueued: Instant, resp: LookupResp },
+    /// One part of a chunked bulk.  Every part of a bulk carries the SAME
+    /// snapshot, taken once at enqueue time — the whole bulk answers from
+    /// one consistent state even when its parts run on different readers
+    /// interleaved with concurrent publishes (the pre-pool engine-thread
+    /// path had this property because mutations were barriers; splitting
+    /// must not silently lose it).
+    Bulk { state: Arc<SearchState>, tags: Vec<BitVec>, enqueued: Instant, resp: BulkResp },
+}
+
+struct QueueInner {
+    jobs: VecDeque<ReadJob>,
+    /// Live [`ReadPoolHandle`] clones; readers exit once this hits zero
+    /// and the queue is empty.
+    senders: usize,
+    /// Jobs ever pushed (monotonic; drain-barrier bookkeeping).
+    enqueued: u64,
+    /// Jobs fully served (monotonic; a drain barrier waits for
+    /// `completed` to reach the `enqueued` it observed).
+    completed: u64,
+}
+
+/// The reader pool's work queue: a plain Mutex+Condvar MPMC queue (std
+/// mpsc receivers cannot be shared across reader threads).
+struct ReadQueue {
+    inner: Mutex<QueueInner>,
+    takeable: Condvar,
+    drained: Condvar,
+}
+
+impl ReadQueue {
+    fn new() -> Self {
+        ReadQueue {
+            inner: Mutex::new(QueueInner {
+                jobs: VecDeque::new(),
+                senders: 1,
+                enqueued: 0,
+                completed: 0,
+            }),
+            takeable: Condvar::new(),
+            drained: Condvar::new(),
+        }
+    }
+
+    fn push(&self, job: ReadJob) {
+        let mut q = self.inner.lock().expect("read queue poisoned");
+        q.jobs.push_back(job);
+        q.enqueued += 1;
+        self.takeable.notify_one();
+    }
+
+    /// Next job, blocking; `None` once every sender is gone and the queue
+    /// ran dry (reader shutdown).  Queued jobs are always finished first.
+    fn pop(&self) -> Option<ReadJob> {
+        let mut q = self.inner.lock().expect("read queue poisoned");
+        loop {
+            if let Some(j) = q.jobs.pop_front() {
+                return Some(j);
+            }
+            if q.senders == 0 {
+                return None;
+            }
+            q = self.takeable.wait(q).expect("read queue poisoned");
+        }
+    }
+
+    fn job_done(&self) {
+        let mut q = self.inner.lock().expect("read queue poisoned");
+        q.completed += 1;
+        self.drained.notify_all();
+    }
+
+    /// Drain *barrier*: block until every job enqueued before this call
+    /// has been served.  Deliberately NOT "wait until idle" — under a
+    /// sustained lookup stream from other handles the queue may never be
+    /// empty, and a barrier (like the engine thread's FIFO `Drain`) must
+    /// still complete in bounded time.
+    fn barrier(&self) {
+        let mut q = self.inner.lock().expect("read queue poisoned");
+        let target = q.enqueued;
+        while q.completed < target {
+            q = self.drained.wait(q).expect("read queue poisoned");
+        }
+    }
+
+    fn add_sender(&self) {
+        self.inner.lock().expect("read queue poisoned").senders += 1;
+    }
+
+    fn remove_sender(&self) {
+        let mut q = self.inner.lock().expect("read queue poisoned");
+        q.senders -= 1;
+        if q.senders == 0 {
+            // wake every parked reader so it can drain and exit
+            self.takeable.notify_all();
+        }
+    }
+}
+
+/// Sender side of the pool queue, with handle-count semantics: each
+/// [`ServerHandle`] clone holds one; when the last drops, the reader
+/// threads finish the queued jobs and exit.
+struct ReadPoolHandle {
+    queue: Arc<ReadQueue>,
+}
+
+impl Clone for ReadPoolHandle {
+    fn clone(&self) -> Self {
+        self.queue.add_sender();
+        ReadPoolHandle { queue: Arc::clone(&self.queue) }
+    }
+}
+
+impl Drop for ReadPoolHandle {
+    fn drop(&mut self) {
+        self.queue.remove_sender();
+    }
+}
+
+/// Marks a dequeued job finished even if serving it panics — a job that
+/// never counts as completed would wedge every later
+/// [`ReadQueue::barrier`].
+struct JobGuard<'a>(&'a ReadQueue);
+
+impl Drop for JobGuard<'_> {
+    fn drop(&mut self) {
+        self.0.job_done();
+    }
+}
+
+/// Striped serving metrics shared by every thread that answers lookups for
+/// one bank (reader pool threads, direct-read callers).  Each thread
+/// hashes to a stripe by its thread id, so recording is uncontended in the
+/// steady state; [`Self::merge_into`] folds the stripes into a snapshot.
+pub(crate) struct BankMetrics {
+    stripes: Vec<Mutex<Metrics>>,
+}
+
+/// Stripe count: comfortably above the typical reader-pool size so
+/// thread-id hashing rarely collides.
+const METRIC_STRIPES: usize = 16;
+
+impl BankMetrics {
+    pub(crate) fn new() -> Self {
+        BankMetrics { stripes: (0..METRIC_STRIPES).map(|_| Mutex::new(Metrics::new())).collect() }
+    }
+
+    fn stripe(&self) -> &Mutex<Metrics> {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        std::thread::current().id().hash(&mut h);
+        &self.stripes[(h.finish() as usize) % self.stripes.len()]
+    }
+
+    /// Record under this thread's stripe lock (held only inside `f`).
+    fn with<R>(&self, f: impl FnOnce(&mut Metrics) -> R) -> R {
+        f(&mut self.stripe().lock().expect("metrics stripe poisoned"))
+    }
+
+    /// Fold every stripe into `target` (non-atomic across stripes, like
+    /// any metrics snapshot under concurrent load).
+    pub(crate) fn merge_into(&self, target: &mut Metrics) {
+        for s in &self.stripes {
+            target.merge(&s.lock().expect("metrics stripe poisoned"));
+        }
+    }
+}
+
+fn spawn_reader_pool(
+    readers: usize,
+    shared: SharedSearch,
+    metrics: Arc<BankMetrics>,
+    depth: Arc<AtomicUsize>,
+    max_batch: usize,
+) -> ReadPoolHandle {
+    let queue = Arc::new(ReadQueue::new());
+    for i in 0..readers {
+        let queue = Arc::clone(&queue);
+        let shared = shared.clone();
+        let metrics = Arc::clone(&metrics);
+        let depth = Arc::clone(&depth);
+        std::thread::Builder::new()
+            .name(format!("cscam-reader-{i}"))
+            .spawn(move || reader_loop(&queue, &shared, &metrics, &depth, max_batch))
+            .expect("spawn reader thread");
+    }
+    ReadPoolHandle { queue }
+}
+
+fn reader_loop(
+    queue: &ReadQueue,
+    shared: &SharedSearch,
+    metrics: &BankMetrics,
+    depth: &AtomicUsize,
+    max_batch: usize,
+) {
+    let mut scratch = DecodeScratch::new();
+    while let Some(job) = queue.pop() {
+        let _guard = JobGuard(queue);
+        match job {
+            ReadJob::Lookup { tag, enqueued, resp } => {
+                depth.fetch_sub(1, Ordering::Relaxed);
+                let state = shared.snapshot();
+                let out = state.lookup(&tag, &mut scratch);
+                metrics.with(|m| {
+                    // a pool single is one decode dispatch of one tag
+                    m.record_batch(1);
+                    if let Ok(o) = &out {
+                        m.record_lookup(o);
+                    }
+                    m.record_latency(enqueued.elapsed().as_nanos() as u64);
+                });
+                let _ = resp.send(out);
+            }
+            ReadJob::Bulk { state, tags, enqueued, resp } => {
+                depth.fetch_sub(tags.len(), Ordering::Relaxed);
+                // `state` was snapshotted once at enqueue time and is
+                // shared by every part of the bulk (whole-bulk consistency)
+                let mut out = Vec::with_capacity(tags.len());
+                for chunk in tags.chunks(max_batch.max(1)) {
+                    for tag in chunk {
+                        out.push(state.lookup(tag, &mut scratch));
+                    }
+                    metrics.with(|m| {
+                        m.record_batch(chunk.len());
+                        for r in &out[out.len() - chunk.len()..] {
+                            if let Ok(o) = r {
+                                m.record_lookup(o);
+                            }
+                        }
+                    });
+                }
+                metrics.with(|m| m.record_latency(enqueued.elapsed().as_nanos() as u64));
+                let _ = resp.send(out);
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- handles
 
 /// Why a persistence request ([`ServerHandle::flush_store`] /
 /// [`ServerHandle::snapshot_store`]) failed.
@@ -131,53 +406,72 @@ pub struct PendingLookup {
 }
 
 impl PendingLookup {
-    /// Block until the engine thread answers.
+    /// Block until a serving thread answers.
     pub fn wait(self) -> Result<LookupOutcome, EngineError> {
         self.rx.recv().map_err(|_| EngineError::Shutdown)?
     }
 }
 
-/// An enqueued bulk lookup (scatter half; see [`PendingLookup`]).
+/// One in-flight part of a chunked bulk: its response channel plus the
+/// number of tags it carries (for per-tag `Shutdown` expansion).
+type BulkPart = (mpsc::Receiver<Vec<Result<LookupOutcome, EngineError>>>, usize);
+
+/// An enqueued bulk lookup (scatter half; see [`PendingLookup`]).  With a
+/// reader pool the slice is split into several chunk jobs so it fans out
+/// across the readers; `wait` re-concatenates the parts in input order.
 pub struct PendingBulk {
-    rx: Option<mpsc::Receiver<Vec<Result<LookupOutcome, EngineError>>>>,
-    n: usize,
+    parts: Vec<BulkPart>,
 }
 
 impl PendingBulk {
-    /// Block until the engine thread answers; one result per input tag, in
-    /// order.  A dead engine yields [`EngineError::Shutdown`] per tag.
+    /// Block until every part is answered; one result per input tag, in
+    /// order.  A dead serving thread yields [`EngineError::Shutdown`] per
+    /// tag of its part.
     pub fn wait(self) -> Vec<Result<LookupOutcome, EngineError>> {
-        match self.rx {
-            None => Vec::new(),
-            Some(rx) => rx
-                .recv()
-                .unwrap_or_else(|_| (0..self.n).map(|_| Err(EngineError::Shutdown)).collect()),
+        let mut out = Vec::new();
+        for (rx, n) in self.parts {
+            match rx.recv() {
+                Ok(v) => out.extend(v),
+                Err(_) => out.extend((0..n).map(|_| Err(EngineError::Shutdown))),
+            }
         }
+        out
     }
 }
 
 /// Cloneable client handle to a running [`CamServer`].
 ///
-/// All methods block the calling thread until the engine thread responds
-/// (except `*_deferred`, which split enqueue from wait, and
+/// All methods block the calling thread until a serving thread responds
+/// (except `*_deferred`, which split enqueue from wait,
 /// [`Self::try_lookup`], which sheds instead of queueing when the server is
-/// saturated); issue requests from multiple threads to exercise batching.
-/// A send or receive failure means the engine thread is gone, reported as
-/// [`EngineError::Shutdown`].
+/// saturated, and [`Self::lookup_direct`], which runs the search on the
+/// calling thread).  A send or receive failure means the serving thread is
+/// gone, reported as [`EngineError::Shutdown`].
 #[derive(Clone)]
 pub struct ServerHandle {
     tx: mpsc::Sender<Request>,
-    /// Lookup tags enqueued but not yet dequeued by the engine thread
+    /// Lookup tags enqueued but not yet dequeued by a serving thread
     /// (bulk requests count per tag).
     depth: Arc<AtomicUsize>,
     /// Admission cap for [`Self::try_lookup`].
     cap: usize,
+    /// The bank's published search state (direct reads, net layer).
+    shared: SharedSearch,
+    /// Reader pool, when the server runs one (`readers > 0`, native
+    /// decode); `None` routes lookups through the engine thread.
+    pool: Option<ReadPoolHandle>,
+    /// Striped lookup metrics shared with the readers.
+    bank_metrics: Arc<BankMetrics>,
+    /// Bulk chunking floor (the server's batch policy).
+    max_batch: usize,
+    /// Pool size (≥ 1; used to split bulks).
+    readers: usize,
 }
 
 impl ServerHandle {
-    /// Count a lookup-class request into the admission queue and send it.
-    /// `weight` is the number of tags the request carries, so bulk lookups
-    /// count per tag, not per message.
+    /// Count a lookup-class request into the admission queue and send it
+    /// to the engine thread.  `weight` is the number of tags the request
+    /// carries, so bulk lookups count per tag, not per message.
     fn enqueue_lookup(&self, req: Request, weight: usize) -> Result<(), EngineError> {
         self.depth.fetch_add(weight, Ordering::Relaxed);
         self.tx.send(req).map_err(|_| {
@@ -192,32 +486,70 @@ impl ServerHandle {
         self.depth.load(Ordering::Relaxed) >= self.cap
     }
 
-    /// Lookup (dynamically batched with concurrent callers).
+    /// Lookup, served by the reader pool (or, with `readers = 0` / PJRT,
+    /// dynamically batched on the engine thread).
     pub fn lookup(&self, tag: BitVec) -> Result<LookupOutcome, EngineError> {
         self.lookup_deferred(tag)?.wait()
     }
 
     /// Non-blocking admission: like [`Self::lookup`], but returns
-    /// [`EngineError::Full`] without queueing when the server already has
+    /// [`EngineError::Busy`] without queueing when the server already has
     /// `queue_capacity` tags pending (bulk requests count per tag) — the
-    /// per-bank load-shedding hook for the sharded router.
+    /// per-bank load-shedding hook for the sharded router.  `Busy` is
+    /// transient overload; [`EngineError::Full`] means the CAM has no free
+    /// slot.
     pub fn try_lookup(&self, tag: BitVec) -> Result<LookupOutcome, EngineError> {
         if self.is_saturated() {
-            return Err(EngineError::Full);
+            return Err(EngineError::Busy);
         }
         self.lookup(tag)
+    }
+
+    /// The bank's current published search state (O(1)).  Combine with a
+    /// caller-owned [`DecodeScratch`] for zero-queue reads.
+    pub fn search_snapshot(&self) -> Arc<SearchState> {
+        self.shared.snapshot()
+    }
+
+    /// Run one lookup *on the calling thread* against the published
+    /// snapshot — no queue, no channel, no other thread involved.  This is
+    /// the TCP connection threads' read path.  Observes every mutation
+    /// acknowledged before the call; records into the bank's metrics.
+    pub fn lookup_direct(
+        &self,
+        tag: &BitVec,
+        scratch: &mut DecodeScratch,
+    ) -> Result<LookupOutcome, EngineError> {
+        let t0 = Instant::now();
+        let out = self.shared.snapshot().lookup(tag, scratch)?;
+        self.bank_metrics.with(|m| {
+            // keep the "every lookup belongs to a dispatch" invariant the
+            // batch stats are read under
+            m.record_batch(1);
+            m.record_lookup(&out);
+            m.record_latency(t0.elapsed().as_nanos() as u64);
+        });
+        Ok(out)
     }
 
     /// Enqueue a lookup without waiting for the answer (scatter half).
     pub fn lookup_deferred(&self, tag: BitVec) -> Result<PendingLookup, EngineError> {
         let (resp, rx) = mpsc::sync_channel(1);
-        self.enqueue_lookup(Request::Lookup { tag, enqueued: Instant::now(), resp }, 1)?;
+        match &self.pool {
+            Some(pool) => {
+                self.depth.fetch_add(1, Ordering::Relaxed);
+                pool.queue.push(ReadJob::Lookup { tag, enqueued: Instant::now(), resp });
+            }
+            None => {
+                self.enqueue_lookup(Request::Lookup { tag, enqueued: Instant::now(), resp }, 1)?;
+            }
+        }
         Ok(PendingLookup { rx })
     }
 
-    /// Bulk lookup: ship many tags in one request — one channel round-trip
-    /// amortized over the whole slice.  The batch is decoded in
-    /// `max_batch`-sized chunks, preserving order.
+    /// Bulk lookup: ship many tags in one request — with a reader pool the
+    /// slice is chunked so it runs on several readers concurrently, while
+    /// results still come back in input order.
     pub fn lookup_many(&self, tags: Vec<BitVec>) -> Vec<Result<LookupOutcome, EngineError>> {
         let n = tags.len();
         match self.lookup_many_deferred(tags) {
@@ -230,14 +562,49 @@ impl ServerHandle {
     pub fn lookup_many_deferred(&self, tags: Vec<BitVec>) -> Result<PendingBulk, EngineError> {
         let n = tags.len();
         if n == 0 {
-            return Ok(PendingBulk { rx: None, n: 0 });
+            return Ok(PendingBulk { parts: Vec::new() });
         }
-        let (resp, rx) = mpsc::sync_channel(1);
-        self.enqueue_lookup(Request::BulkLookup { tags, enqueued: Instant::now(), resp }, n)?;
-        Ok(PendingBulk { rx: Some(rx), n })
+        match &self.pool {
+            Some(pool) => {
+                // split across the pool, but never below the batch-policy
+                // chunk (tiny fragments would pay more queue overhead than
+                // the fan-out wins back)
+                let chunk = n.div_ceil(self.readers.max(1)).max(self.max_batch.max(1));
+                // one snapshot for the WHOLE bulk: parts running on
+                // different readers interleaved with concurrent publishes
+                // must still answer from one consistent state
+                let state = self.shared.snapshot();
+                let mut parts = Vec::with_capacity(n.div_ceil(chunk));
+                let mut tags = tags;
+                while !tags.is_empty() {
+                    let rest = tags.split_off(tags.len().min(chunk));
+                    let part = std::mem::replace(&mut tags, rest);
+                    let (resp, rx) = mpsc::sync_channel(1);
+                    let len = part.len();
+                    self.depth.fetch_add(len, Ordering::Relaxed);
+                    pool.queue.push(ReadJob::Bulk {
+                        state: Arc::clone(&state),
+                        tags: part,
+                        enqueued: Instant::now(),
+                        resp,
+                    });
+                    parts.push((rx, len));
+                }
+                Ok(PendingBulk { parts })
+            }
+            None => {
+                let (resp, rx) = mpsc::sync_channel(1);
+                self.enqueue_lookup(
+                    Request::BulkLookup { tags, enqueued: Instant::now(), resp },
+                    n,
+                )?;
+                Ok(PendingBulk { parts: vec![(rx, n)] })
+            }
+        }
     }
 
-    /// Insert a tag; returns once the CNN + CAM are updated.
+    /// Insert a tag; returns once the CNN + CAM are updated, logged (with
+    /// a store attached) and the new state is published to readers.
     pub fn insert(&self, tag: BitVec) -> Result<usize, EngineError> {
         let (resp, rx) = mpsc::sync_channel(1);
         self.tx.send(Request::Insert { tag, resp }).map_err(|_| EngineError::Shutdown)?;
@@ -251,15 +618,25 @@ impl ServerHandle {
         rx.recv().map_err(|_| EngineError::Shutdown)?
     }
 
-    /// Snapshot of the server metrics.
+    /// Snapshot of the server metrics: the engine thread's view (inserts,
+    /// deletes, engine-side batches) merged with every reader's stripe.
     pub fn metrics(&self) -> Option<Box<Metrics>> {
         let (resp, rx) = mpsc::sync_channel(1);
         self.tx.send(Request::Metrics { resp }).ok()?;
-        rx.recv().ok()
+        let mut m = rx.recv().ok()?;
+        self.bank_metrics.merge_into(&mut m);
+        Some(m)
     }
 
-    /// Flush pending work and wait for it to complete.
+    /// Flush pending work and wait: a barrier over both serving halves —
+    /// every lookup enqueued to the pool before this call is served, and
+    /// the engine thread passes a FIFO `Drain`.  Bounded even under a
+    /// sustained lookup stream from other handles (later arrivals are not
+    /// waited for).
     pub fn drain(&self) {
+        if let Some(pool) = &self.pool {
+            pool.queue.barrier();
+        }
         let (resp, rx) = mpsc::sync_channel(1);
         if self.tx.send(Request::Drain { resp }).is_ok() {
             let _ = rx.recv();
@@ -296,8 +673,13 @@ impl ServerHandle {
 }
 
 /// Default admission cap for [`ServerHandle::try_lookup`] — deep enough
-/// that only a genuinely backed-up engine sheds.
+/// that only a genuinely backed-up server sheds.
 pub const DEFAULT_QUEUE_CAPACITY: usize = 4096;
+
+/// Default reader-pool size: enough to prove concurrent reads everywhere
+/// (tests, fleets) without spawning a thread herd per bank; benches and
+/// servers size it explicitly ([`CamServer::with_readers`]).
+pub const DEFAULT_READERS: usize = 2;
 
 /// The serve-thread owner.
 pub struct CamServer {
@@ -309,6 +691,13 @@ pub struct CamServer {
     queue_depth: Arc<AtomicUsize>,
     /// Admission cap handed to [`ServerHandle::try_lookup`].
     queue_cap: usize,
+    /// Reader-pool size ([`Self::with_readers`]); 0 = engine-thread reads.
+    readers: usize,
+    /// The bank's publish slot (created with the engine, shared with every
+    /// handle and reader).
+    shared: SharedSearch,
+    /// Striped lookup metrics shared with readers and direct-read callers.
+    bank_metrics: Arc<BankMetrics>,
     /// Set on any mutation; the PJRT path re-uploads weights before the next
     /// batched decode.  (Only read by the `pjrt` decode path.)
     #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
@@ -326,6 +715,7 @@ impl CamServer {
 
     /// Build around an existing (pre-populated) engine.
     pub fn with_engine(engine: LookupEngine, backend: DecodeBackend, policy: BatchPolicy) -> Self {
+        let shared = SharedSearch::new(engine.search_state());
         CamServer {
             engine,
             backend,
@@ -333,6 +723,9 @@ impl CamServer {
             metrics: Metrics::new(),
             queue_depth: Arc::new(AtomicUsize::new(0)),
             queue_cap: DEFAULT_QUEUE_CAPACITY,
+            readers: DEFAULT_READERS,
+            shared,
+            bank_metrics: Arc::new(BankMetrics::new()),
             weights_dirty: true,
             store: None,
         }
@@ -349,23 +742,55 @@ impl CamServer {
     }
 
     /// Cap the admission queue: [`ServerHandle::try_lookup`] sheds with
-    /// [`EngineError::Full`] once this many lookups are pending.
+    /// [`EngineError::Busy`] once this many lookups are pending.
     pub fn with_queue_capacity(mut self, cap: usize) -> Self {
         self.queue_cap = cap;
         self
     }
 
-    /// Spawn the serve loop on a dedicated thread.  The thread exits when
-    /// every [`ServerHandle`] clone has been dropped.
+    /// Size the reader pool: `n` threads serving lookups from the
+    /// published snapshot.  `0` routes every lookup through the engine
+    /// thread (the pre-pool behaviour; also forced by the PJRT backend,
+    /// whose artifact store cannot leave that thread).
+    pub fn with_readers(mut self, n: usize) -> Self {
+        self.readers = n;
+        self
+    }
+
+    /// Spawn the serve loop on a dedicated writer thread, plus the reader
+    /// pool.  All threads exit when every [`ServerHandle`] clone has been
+    /// dropped.
     pub fn spawn(self) -> ServerHandle {
         let (tx, rx) = mpsc::channel();
         let depth = Arc::clone(&self.queue_depth);
         let cap = self.queue_cap;
+        let shared = self.shared.clone();
+        let bank_metrics = Arc::clone(&self.bank_metrics);
+        let max_batch = self.policy.max_batch;
+        let readers = if self.backend.supports_shared_readers() { self.readers } else { 0 };
+        let pool = (readers > 0).then(|| {
+            spawn_reader_pool(
+                readers,
+                shared.clone(),
+                Arc::clone(&bank_metrics),
+                Arc::clone(&depth),
+                max_batch,
+            )
+        });
         std::thread::Builder::new()
             .name("cscam-server".into())
             .spawn(move || self.run(rx))
             .expect("spawn server thread");
-        ServerHandle { tx, depth, cap }
+        ServerHandle {
+            tx,
+            depth,
+            cap,
+            shared,
+            pool,
+            bank_metrics,
+            max_batch,
+            readers: readers.max(1),
+        }
     }
 
     /// Account a request leaving the channel queue (admission bookkeeping —
@@ -479,6 +904,15 @@ impl CamServer {
         }
     }
 
+    /// Publish the engine's current state to the bank's [`SharedSearch`]
+    /// slot.  Called after a mutation is applied *and* logged (the store
+    /// ack) but before the client ack — the RCU ordering contract: a
+    /// lookup issued after an acknowledged mutation always observes it, a
+    /// lookup can never observe an un-logged mutation.
+    fn publish(&self) {
+        self.shared.publish(self.engine.search_state());
+    }
+
     /// Handle a non-lookup request (the pending batch is already flushed).
     /// Mutations follow the one persist policy of
     /// [`crate::store::log_applied_insert`] /
@@ -514,6 +948,9 @@ impl CamServer {
                     }
                     Err(e) => Err(e),
                 };
+                // publish after the log verdict (a rolled-back insert
+                // publishes the rollback), before the ack
+                self.publish();
                 let _ = resp.send(r);
             }
             Request::Delete { addr, resp } => {
@@ -530,6 +967,7 @@ impl CamServer {
                     }
                     Err(e) => Err(e),
                 };
+                self.publish();
                 let _ = resp.send(r);
             }
             Request::BulkLookup { tags, enqueued, resp } => {
@@ -653,6 +1091,24 @@ mod tests {
         BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(100) }
     }
 
+    /// A handle whose engine thread is already gone (and no reader pool).
+    fn dead_handle() -> ServerHandle {
+        let (tx, rx) = mpsc::channel();
+        drop(rx);
+        ServerHandle {
+            tx,
+            depth: Arc::new(AtomicUsize::new(0)),
+            cap: DEFAULT_QUEUE_CAPACITY,
+            shared: SharedSearch::new(
+                LookupEngine::new(DesignConfig::small_test()).search_state(),
+            ),
+            pool: None,
+            bank_metrics: Arc::new(BankMetrics::new()),
+            max_batch: 8,
+            readers: 1,
+        }
+    }
+
     #[test]
     fn serve_native_roundtrip() {
         let server = CamServer::new(DesignConfig::small_test(), DecodeBackend::Native, policy());
@@ -673,12 +1129,16 @@ mod tests {
     }
 
     #[test]
-    fn concurrent_lookups_batch_together() {
+    fn concurrent_lookups_batch_together_on_the_engine_thread_path() {
+        // readers = 0 exercises the legacy engine-thread path, where the
+        // dynamic batcher still coalesces concurrent singles (the PJRT
+        // backend depends on this path).
         let server = CamServer::new(
             DesignConfig::small_test(),
             DecodeBackend::Native,
             BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20) },
-        );
+        )
+        .with_readers(0);
         let h = server.spawn();
         let mut rng = Rng::seed_from_u64(2);
         let tags = TagDistribution::Uniform.sample_distinct(32, 32, &mut rng);
@@ -696,6 +1156,62 @@ mod tests {
         assert_eq!(m.lookups, 32);
         assert!(m.batches < 32, "some batching must occur: {} batches", m.batches);
         assert!(m.batch_size.mean() > 1.0);
+    }
+
+    #[test]
+    fn reader_pool_answers_concurrent_lookups_bit_identically() {
+        // the pool path: 4 readers, 16 client threads, every outcome must
+        // equal the reference engine's, field for field
+        let cfg = DesignConfig::small_test();
+        let mut reference = LookupEngine::new(cfg.clone());
+        let server =
+            CamServer::new(cfg, DecodeBackend::Native, policy()).with_readers(4);
+        let h = server.spawn();
+        let mut rng = Rng::seed_from_u64(41);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 30, &mut rng);
+        for t in &tags {
+            let a = h.insert(t.clone()).unwrap();
+            assert_eq!(a, reference.insert(t).unwrap());
+        }
+        let want: Vec<LookupOutcome> =
+            tags.iter().map(|t| reference.lookup(t).unwrap()).collect();
+        let mut joins = Vec::new();
+        for _ in 0..16 {
+            let h = h.clone();
+            let tags = tags.clone();
+            let want = want.clone();
+            joins.push(std::thread::spawn(move || {
+                for (t, w) in tags.iter().zip(&want) {
+                    assert_eq!(&h.lookup(t.clone()).unwrap(), w);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let m = h.metrics().unwrap();
+        assert_eq!(m.lookups, 16 * 30, "every pool lookup is metered");
+        assert_eq!(m.hits, 16 * 30);
+    }
+
+    #[test]
+    fn direct_reads_observe_acked_mutations() {
+        // publish-before-ack: after insert() returns, a direct read on any
+        // thread sees the entry; after delete() returns, it is gone
+        let server =
+            CamServer::new(DesignConfig::small_test(), DecodeBackend::Native, policy());
+        let h = server.spawn();
+        let mut rng = Rng::seed_from_u64(42);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 20, &mut rng);
+        let mut scratch = DecodeScratch::new();
+        for (i, t) in tags.iter().enumerate() {
+            assert_eq!(h.insert(t.clone()).unwrap(), i);
+            assert_eq!(h.lookup_direct(t, &mut scratch).unwrap().addr, Some(i));
+        }
+        h.delete(3).unwrap();
+        assert_eq!(h.lookup_direct(&tags[3], &mut scratch).unwrap().addr, None);
+        let m = h.metrics().unwrap();
+        assert_eq!(m.lookups, 21, "direct reads are metered too");
     }
 
     #[test]
@@ -722,20 +1238,29 @@ mod tests {
 
     #[test]
     fn lookup_many_matches_singles_and_preserves_order() {
-        let server = CamServer::new(DesignConfig::small_test(), DecodeBackend::Native, policy());
-        let h = server.spawn();
-        let mut rng = Rng::seed_from_u64(8);
-        let tags = TagDistribution::Uniform.sample_distinct(32, 30, &mut rng);
-        for t in &tags {
-            h.insert(t.clone()).unwrap();
+        for readers in [0usize, 1, 4] {
+            let server =
+                CamServer::new(DesignConfig::small_test(), DecodeBackend::Native, policy())
+                    .with_readers(readers);
+            let h = server.spawn();
+            let mut rng = Rng::seed_from_u64(8);
+            let tags = TagDistribution::Uniform.sample_distinct(32, 30, &mut rng);
+            for t in &tags {
+                h.insert(t.clone()).unwrap();
+            }
+            let singles: Vec<_> =
+                tags.iter().map(|t| h.lookup(t.clone()).unwrap().addr).collect();
+            let bulk = h.lookup_many(tags.clone());
+            assert_eq!(bulk.len(), 30);
+            for (i, r) in bulk.iter().enumerate() {
+                assert_eq!(
+                    r.as_ref().unwrap().addr,
+                    singles[i],
+                    "readers={readers}: order must be preserved"
+                );
+            }
+            assert!(h.lookup_many(Vec::new()).is_empty());
         }
-        let singles: Vec<_> = tags.iter().map(|t| h.lookup(t.clone()).unwrap().addr).collect();
-        let bulk = h.lookup_many(tags.clone());
-        assert_eq!(bulk.len(), 30);
-        for (i, r) in bulk.iter().enumerate() {
-            assert_eq!(r.as_ref().unwrap().addr, singles[i], "order must be preserved");
-        }
-        assert!(h.lookup_many(Vec::new()).is_empty());
     }
 
     #[test]
@@ -779,13 +1304,7 @@ mod tests {
 
     #[test]
     fn dropped_server_reports_persist_shutdown() {
-        let (tx, rx) = mpsc::channel();
-        drop(rx);
-        let h = ServerHandle {
-            tx,
-            depth: Arc::new(AtomicUsize::new(0)),
-            cap: DEFAULT_QUEUE_CAPACITY,
-        };
+        let h = dead_handle();
         assert!(matches!(h.flush_store(), Err(PersistError::Shutdown)));
         assert!(matches!(h.snapshot_store(), Err(PersistError::Shutdown)));
     }
@@ -797,21 +1316,16 @@ mod tests {
         let h2 = h.clone();
         drop(h);
         drop(h2);
-        // nothing to assert directly; the thread exiting keeps the process
-        // from hanging at test end (would deadlock `cargo test` otherwise)
+        // nothing to assert directly; the engine and reader threads exiting
+        // keeps the process from hanging at test end (would deadlock
+        // `cargo test` otherwise)
     }
 
     #[test]
     fn dropped_server_yields_shutdown_not_full() {
         // A handle whose engine thread is gone must report Shutdown — Full
         // means "no free CAM slot" and would mislead capacity-aware callers.
-        let (tx, rx) = mpsc::channel();
-        drop(rx);
-        let h = ServerHandle {
-            tx,
-            depth: Arc::new(AtomicUsize::new(0)),
-            cap: DEFAULT_QUEUE_CAPACITY,
-        };
+        let h = dead_handle();
         assert_eq!(h.lookup(BitVec::zeros(32)).unwrap_err(), EngineError::Shutdown);
         assert_eq!(h.try_lookup(BitVec::zeros(32)).unwrap_err(), EngineError::Shutdown);
         assert_eq!(h.depth.load(Ordering::Relaxed), 0, "failed sends must not leak depth");
@@ -827,7 +1341,7 @@ mod tests {
     }
 
     #[test]
-    fn try_lookup_sheds_at_capacity_while_lookup_blocks_through() {
+    fn try_lookup_sheds_busy_at_capacity_while_lookup_blocks_through() {
         let server = CamServer::new(DesignConfig::small_test(), DecodeBackend::Native, policy())
             .with_queue_capacity(0);
         let h = server.spawn();
@@ -836,12 +1350,13 @@ mod tests {
         for t in &tags {
             h.insert(t.clone()).unwrap();
         }
-        // cap 0: the non-blocking path sheds every request with Full...
-        assert_eq!(h.try_lookup(tags[0].clone()).unwrap_err(), EngineError::Full);
+        // cap 0: the non-blocking path sheds every request with Busy (a
+        // queue condition — Full stays reserved for "no free CAM slot")...
+        assert_eq!(h.try_lookup(tags[0].clone()).unwrap_err(), EngineError::Busy);
         // ...while the blocking path still serves (shedding is opt-in).
         assert_eq!(h.lookup(tags[0].clone()).unwrap().addr, Some(0));
         let m = h.metrics().unwrap();
-        assert_eq!(m.lookups, 1, "shed requests never reach the engine");
+        assert_eq!(m.lookups, 1, "shed requests never reach a serving thread");
     }
 
     #[test]
@@ -857,7 +1372,7 @@ mod tests {
         for (i, t) in tags.iter().enumerate() {
             assert_eq!(h.try_lookup(t.clone()).unwrap().addr, Some(i));
         }
-        // the queue drains as the engine answers: depth returns to zero
+        // the queue drains as the readers answer: depth returns to zero
         h.drain();
         assert_eq!(h.depth.load(Ordering::Relaxed), 0);
     }
@@ -901,5 +1416,30 @@ mod tests {
         assert_eq!(results.len(), 6);
         h.drain();
         assert_eq!(h.depth.load(Ordering::Relaxed), 0, "per-tag weights must balance");
+    }
+
+    #[test]
+    fn big_bulks_fan_out_across_the_pool() {
+        // 4 readers, one 256-tag bulk with max_batch 8: the slice must be
+        // split (order still preserved) rather than land on one reader
+        let server = CamServer::new(DesignConfig::small_test(), DecodeBackend::Native, policy())
+            .with_readers(4);
+        let h = server.spawn();
+        let mut rng = Rng::seed_from_u64(25);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 60, &mut rng);
+        for t in &tags {
+            h.insert(t.clone()).unwrap();
+        }
+        let mut queries = Vec::new();
+        for _ in 0..4 {
+            queries.extend(tags.iter().cloned());
+        }
+        let out = h.lookup_many(queries.clone());
+        assert_eq!(out.len(), 240);
+        for (i, r) in out.into_iter().enumerate() {
+            assert_eq!(r.unwrap().addr, Some(i % 60), "order across parts");
+        }
+        h.drain();
+        assert_eq!(h.depth.load(Ordering::Relaxed), 0);
     }
 }

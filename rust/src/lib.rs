@@ -33,8 +33,11 @@
 //!   produced by `python/compile/aot.py` and executes them on the request
 //!   path (Python is build-time only).  The execution half sits behind the
 //!   `pjrt` cargo feature; the default build is pure Rust.
-//! - [`coordinator`] — the L3 serving system for one bank: dynamic
-//!   batcher, lookup engine, insert/delete paths, metrics.
+//! - [`coordinator`] — the L3 serving system for one bank: the lookup
+//!   engine split into an immutable shared `SearchState` (concurrent
+//!   `&self` lookups with per-thread scratch) and a single writer that
+//!   RCU-publishes after each acknowledged mutation; a sized reader pool,
+//!   dynamic batcher (PJRT path), insert/delete paths, striped metrics.
 //! - [`shard`] — the L4 scale-out layer: `S` independent CNN+CAM banks
 //!   behind a scatter-gather router (tag-hash / learned-prefix / broadcast
 //!   placement), with fleet-level metrics aggregation.

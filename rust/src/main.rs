@@ -40,8 +40,10 @@ COMMANDS:
   table2  reproduce Table II    --node 90nm (optional projection)
   sweep   reproduce Table I     --m 512 --n 128
   serve   run the coordinator   --lookups N --hit-ratio R --pjrt --max-batch B
-                                --threads T --seed S
-          (--pjrt needs a binary built with `--features pjrt`)
+                                --threads T --seed S --readers R
+          (--readers sizes each bank's lookup reader pool; 0 routes reads
+           through the engine thread; --pjrt forces 0 and needs a binary
+           built with `--features pjrt`)
           sharded fleet:        --shards S --placement hash|prefix|broadcast
                                 --hot-fraction F --hot-shard B
           (S > 1 spawns one engine thread per bank; --hot-fraction > 0
@@ -272,6 +274,7 @@ fn serve(cfg: &DesignConfig, args: &Args) -> Result<()> {
     let threads: usize = args.get_parse("threads", 8)?;
     let seed: u64 = args.get_parse("seed", 7)?;
     let shards: usize = args.get_parse("shards", cfg.shards)?;
+    let readers: usize = args.get_parse("readers", cscam::coordinator::DEFAULT_READERS)?;
 
     let policy = BatchPolicy { max_batch, ..Default::default() };
     if shards > 1 {
@@ -281,11 +284,11 @@ fn serve(cfg: &DesignConfig, args: &Args) -> Result<()> {
                  for one geometry); drop --shards or --pjrt"
             );
         }
-        return serve_sharded(cfg, args, shards, policy);
+        return serve_sharded(cfg, args, shards, policy, readers);
     }
 
     let backend = if pjrt { pjrt_backend(cfg)? } else { DecodeBackend::Native };
-    let h = CamServer::new(cfg.clone(), backend, policy).spawn();
+    let h = CamServer::new(cfg.clone(), backend, policy).with_readers(readers).spawn();
 
     let mut rng = Rng::seed_from_u64(seed);
     let stored = TagDistribution::Uniform.sample_distinct(cfg.n, cfg.m, &mut rng);
@@ -337,6 +340,7 @@ fn serve_sharded(
     args: &Args,
     shards: usize,
     policy: BatchPolicy,
+    readers: usize,
 ) -> Result<()> {
     use cscam::shard::{PlacementMode, ShardedCamServer};
     use cscam::workload::HotShardMix;
@@ -362,7 +366,7 @@ fn serve_sharded(
         "broadcast" => PlacementMode::Broadcast,
         other => bail!("unknown --placement '{other}' (hash|prefix|broadcast)"),
     };
-    let h = ShardedCamServer::new(&fleet_cfg, mode, policy).spawn();
+    let h = ShardedCamServer::new(&fleet_cfg, mode, policy).with_readers(readers).spawn();
     let mut stored = Vec::new();
     for t in &candidates {
         if h.insert(t.clone()).is_ok() {
@@ -445,6 +449,7 @@ fn serve_listen(cfg: &DesignConfig, args: &Args) -> Result<()> {
     let shards: usize = args.get_parse("shards", cfg.shards)?;
     let max_batch: usize = args.get_parse("max-batch", 64)?;
     let max_conns: usize = args.get_parse("max-conns", 64)?;
+    let readers: usize = args.get_parse("readers", cscam::coordinator::DEFAULT_READERS)?;
     let seed: u64 = args.get_parse("seed", 7)?;
     let placement = args.get("placement").unwrap_or("hash");
     let data_dir = args.get("data-dir");
@@ -487,9 +492,9 @@ fn serve_listen(cfg: &DesignConfig, args: &Args) -> Result<()> {
                 ShardedCamServer::open_durable(&fleet_cfg, mode, policy, dir, store_opts)
                     .map_err(|e| anyhow::anyhow!("opening --data-dir {}: {e}", dir.display()))?;
             println!("# data-dir {}: {}", dir.display(), recovery.summary());
-            server.spawn()
+            server.with_readers(readers).spawn()
         }
-        None => ShardedCamServer::new(&fleet_cfg, mode, policy).spawn(),
+        None => ShardedCamServer::new(&fleet_cfg, mode, policy).with_readers(readers).spawn(),
     };
     let server = CamTcpServer::bind(
         fleet.clone(),

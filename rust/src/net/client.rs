@@ -182,8 +182,10 @@ impl CamClient {
         }
     }
 
-    /// One lookup; sheds with [`EngineError::Full`] (as
-    /// [`WireError::Engine`]) when the owning bank is saturated.
+    /// One lookup, served directly on the server's connection thread from
+    /// the owning bank's published snapshot.  A server may answer
+    /// [`EngineError::Busy`] (as [`WireError::Engine`]) under admission
+    /// shedding; [`EngineError::Full`] strictly means "no free CAM slot".
     pub fn lookup(&mut self, tag: &BitVec) -> Result<ShardedOutcome, WireError> {
         let resp = self
             .call_idempotent_with(&|w, id| proto::write_tag_request(w, id, proto::OP_LOOKUP, tag))?;

@@ -9,14 +9,18 @@
 //!   tags on banks), request ids for pipelining, and responses that carry
 //!   the full [`crate::shard::ShardedOutcome`] — matched global address,
 //!   λ, energy breakdown, delay — bit-identical to an in-process lookup.
-//!   Engine failures (including [`crate::coordinator::EngineError::Full`]
-//!   shed-on-overload) map to typed error codes, and the v2 durability
-//!   ops `Snapshot`/`Flush` let an operator compact or fsync the fleet's
+//!   Engine failures map to typed error codes — v3 splits
+//!   [`crate::coordinator::EngineError::Busy`] (queue-shed admission)
+//!   from `Full` (no free CAM slot) — and the v2 durability ops
+//!   `Snapshot`/`Flush` let an operator compact or fsync the fleet's
 //!   stores ([`crate::store`]) over the wire.
 //! * [`server`] — [`CamTcpServer`]: thread-per-connection serving over a
-//!   [`crate::shard::ShardedServerHandle`], with a connection cap,
-//!   buffered per-connection I/O and a clean shutdown that drains every
-//!   bank and flushes every WAL.
+//!   [`crate::shard::ShardedServerHandle`]; lookups execute *on the
+//!   connection thread* against the banks' published search snapshots
+//!   (no channel hop — see `coordinator::SearchState`), mutations route
+//!   to the banks' writer threads; connection cap, buffered
+//!   per-connection I/O and a clean shutdown that drains every bank and
+//!   flushes every WAL.
 //! * [`client`] — [`CamClient`]: blocking client with handshake,
 //!   reconnect, and pipelined `lookup_bulk`.
 //! * [`loadgen`] — [`LoadGen`]: multi-threaded QPS/latency runner over

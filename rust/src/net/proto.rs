@@ -26,8 +26,9 @@
 //! every `f64` shipped as its IEEE-754 bit pattern, so a wire client sees
 //! the paper's metrics *bit-identical* to an in-process caller (the
 //! `net_roundtrip` integration tests assert exactly that).  Engine
-//! failures map to typed error codes ([`engine_error_code`]), including
-//! [`EngineError::Full`] for shed-on-overload.
+//! failures map to typed error codes ([`engine_error_code`]):
+//! [`EngineError::Busy`] (v3) is queue-shed admission,
+//! [`EngineError::Full`] strictly means "no free CAM slot".
 
 use crate::bits::BitVec;
 use crate::coordinator::engine::EngineError;
@@ -45,10 +46,12 @@ pub const MAGIC: [u8; 4] = *b"CSCM";
 /// Protocol version this build speaks.
 ///
 /// History: v1 — initial op set (Insert…Shutdown); v2 — added the
-/// durability ops `Snapshot`/`Flush` and the `ERR_PERSIST` error code.
-/// Both sides hang up on a version mismatch (strict equality), so a mixed
-/// deployment must upgrade in lock-step.
-pub const VERSION: u16 = 2;
+/// durability ops `Snapshot`/`Flush` and the `ERR_PERSIST` error code;
+/// v3 — added `ERR_BUSY` (6), splitting queue-shed admission
+/// ([`EngineError::Busy`]) from `ERR_FULL`, which now strictly means "no
+/// free CAM slot".  Both sides hang up on a version mismatch (strict
+/// equality), so a mixed deployment must upgrade in lock-step.
+pub const VERSION: u16 = 3;
 
 /// Upper bound on one frame (64 MiB) — rejects garbage lengths before any
 /// allocation.
@@ -87,6 +90,9 @@ pub const ERR_FULL: u16 = 1;
 pub const ERR_BAD_ADDRESS: u16 = 2;
 pub const ERR_TAG_WIDTH: u16 = 3;
 pub const ERR_SHUTDOWN: u16 = 4;
+/// Admission queue at capacity — transient overload, retry later (v3).
+/// Distinct from [`ERR_FULL`], which means the CAM has no free slot.
+pub const ERR_BUSY: u16 = 6;
 /// The durability layer failed to log or snapshot (disk full, I/O error).
 /// The detailed [`crate::store::StoreError`] stays in the server log; the
 /// wire carries only the code.
@@ -140,6 +146,7 @@ impl From<CodecError> for WireError {
 pub fn engine_error_code(e: &EngineError) -> (u16, u64) {
     match e {
         EngineError::Full => (ERR_FULL, 0),
+        EngineError::Busy => (ERR_BUSY, 0),
         EngineError::BadAddress(a) => (ERR_BAD_ADDRESS, *a as u64),
         EngineError::TagWidth { got, want } => {
             (ERR_TAG_WIDTH, ((*got as u64) << 32) | (*want as u64 & 0xFFFF_FFFF))
@@ -155,6 +162,7 @@ pub fn engine_error_code(e: &EngineError) -> (u16, u64) {
 pub fn engine_error_from_code(code: u16, aux: u64) -> Option<EngineError> {
     match code {
         ERR_FULL => Some(EngineError::Full),
+        ERR_BUSY => Some(EngineError::Busy),
         ERR_BAD_ADDRESS => Some(EngineError::BadAddress(aux as usize)),
         ERR_TAG_WIDTH => Some(EngineError::TagWidth {
             got: (aux >> 32) as usize,
@@ -856,6 +864,7 @@ mod tests {
     fn engine_error_codes_roundtrip() {
         for e in [
             EngineError::Full,
+            EngineError::Busy,
             EngineError::BadAddress(12345),
             EngineError::TagWidth { got: 64, want: 128 },
             EngineError::Shutdown,
@@ -864,6 +873,11 @@ mod tests {
             assert_eq!(engine_error_from_code(code, aux), Some(e));
         }
         assert_eq!(engine_error_from_code(ERR_PROTOCOL, 0), None);
+        // the two overload-adjacent conditions stay distinct on the wire
+        assert_ne!(
+            engine_error_code(&EngineError::Busy).0,
+            engine_error_code(&EngineError::Full).0
+        );
         // Persist carries a local-only message: the code roundtrips to the
         // variant, the text stays on the server
         let (code, aux) = engine_error_code(&EngineError::Persist("disk full".into()));

@@ -3,22 +3,27 @@
 //!
 //! Shape: one nonblocking accept loop (so shutdown can interrupt it) that
 //! spawns a handler thread per connection, each holding its own clone of
-//! the fleet handle — the engine threads behind the handle already batch
-//! and shed per bank, so the network layer stays a thin framed adapter:
+//! the fleet handle plus its own [`DecodeScratch`].  *Lookups run on the
+//! connection thread itself* — the handler snapshots the owning bank's
+//! published search state and searches directly
+//! ([`ShardedServerHandle::lookup_direct`]), so a read never hops a
+//! channel or waits behind another connection's work; only mutations and
+//! barriers cross into the banks' writer threads:
 //!
 //! ```text
-//!   client ──TCP──▶ conn thread ──handle──▶ bank engine threads
-//!                   (BufReader/BufWriter,    (Batcher, LookupEngine,
-//!                    frame decode, typed      Metrics — crate::shard)
-//!                    error mapping)
+//!   client ──TCP──▶ conn thread ── lookups: SearchState snapshot (in place)
+//!                   (BufReader/    ── mutations/barriers ──▶ bank writer
+//!                    BufWriter,        threads (WAL, RCU publish —
+//!                    frame decode,     crate::coordinator)
+//!                    own scratch)
 //! ```
 //!
 //! * a **connection cap**: past [`NetConfig::max_connections`] live
 //!   connections, the server answers the handshake with the `busy` flag
-//!   and closes (clients see [`crate::net::proto::WireError::Busy`]);
-//! * **shed-on-overload**: lookups go through the fleet's non-blocking
-//!   admission ([`ShardedServerHandle::try_lookup`]); a saturated bank
-//!   surfaces as the typed `ERR_FULL` wire error instead of queue bloat;
+//!   and closes (clients see [`crate::net::proto::WireError::Busy`]) —
+//!   with direct reads this cap *is* the read-concurrency bound, giving
+//!   natural backpressure instead of queue-shed (`ERR_BUSY` remains in
+//!   the protocol for in-process admission surfaced over future paths);
 //! * **clean shutdown**: a `Shutdown` request (or a local
 //!   [`NetServerHandle::shutdown`]) stops the accept loop, waits briefly
 //!   for live connections, then drains every bank before the serve thread
@@ -30,7 +35,7 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::engine::EngineError;
+use crate::coordinator::engine::{DecodeScratch, EngineError};
 use crate::coordinator::server::PersistError;
 use crate::net::proto::{
     self, parse_client_hello, write_server_hello, Request, Response, ServerHello, StatsReport,
@@ -361,6 +366,9 @@ fn serve_conn(
     }
 
     let _ = reader.get_ref().set_read_timeout(Some(cfg.read_timeout));
+    // Per-connection decode scratch: lookups run on this thread, against
+    // the banks' published snapshots, with zero shared mutable state.
+    let mut scratch = DecodeScratch::new();
     loop {
         if stop.load(Ordering::Acquire) {
             return;
@@ -379,7 +387,7 @@ fn serve_conn(
             }
             ConnRead::Frame(id, req) => {
                 let is_shutdown = matches!(req, Request::Shutdown);
-                let resp = handle_request(fleet, req);
+                let resp = handle_request(fleet, req, &mut scratch);
                 let acked = matches!(resp, Response::ShutdownAck);
                 if proto::write_response(&mut writer, id, &resp).is_err()
                     || writer.flush().is_err()
@@ -404,7 +412,11 @@ fn check_width(fleet: &ShardedServerHandle, tag: &crate::bits::BitVec) -> Option
     (tag.len() != want).then(|| EngineError::TagWidth { got: tag.len(), want })
 }
 
-fn handle_request(fleet: &ShardedServerHandle, req: Request) -> Response {
+fn handle_request(
+    fleet: &ShardedServerHandle,
+    req: Request,
+    scratch: &mut DecodeScratch,
+) -> Response {
     match req {
         Request::Insert { tag } => {
             if let Some(e) = check_width(fleet, &tag) {
@@ -420,24 +432,21 @@ fn handle_request(fleet: &ShardedServerHandle, req: Request) -> Response {
             Err(e) => proto::error_response(&e),
         },
         Request::Lookup { tag } => {
-            if let Some(e) = check_width(fleet, &tag) {
-                return proto::error_response(&e);
-            }
-            match fleet.try_lookup(tag) {
+            // direct read: this thread snapshots the owning bank's state
+            // and searches in place — no channel hop, no queue, identical
+            // bits to the in-process path
+            match fleet.lookup_direct(&tag, scratch) {
                 Ok(o) => Response::Lookup(Box::new(o)),
                 Err(e) => proto::error_response(&e),
             }
         }
         Request::LookupBulk { tags } => {
+            // reject the whole frame on any bad width (a half-answered
+            // frame would desync the client's per-item accounting)
             if let Some(e) = tags.iter().find_map(|t| check_width(fleet, t)) {
                 return proto::error_response(&e);
             }
-            // shed-on-overload lives in the fleet layer: the whole frame
-            // sheds only if a bank it would actually touch is saturated
-            match fleet.try_lookup_many(tags) {
-                Ok(items) => Response::LookupBulk(items),
-                Err(e) => proto::error_response(&e),
-            }
+            Response::LookupBulk(fleet.lookup_many_direct(&tags, scratch))
         }
         Request::Stats => match stats_report(fleet) {
             Some(s) => Response::Stats(Box::new(s)),

@@ -4,8 +4,9 @@
 //! The paper's device already decomposes one array into `β = M/ζ`
 //! compare-enabled sub-blocks; this layer applies the same move one level
 //! up.  A fleet of `S` banks — each a complete Fig. 1 system with its own
-//! clustered network, CAM array, dynamic batcher and engine thread —
-//! serves a tag space partitioned by a [`ShardRouter`]:
+//! clustered network, CAM array, dynamic batcher, writer thread and
+//! lookup reader pool — serves a tag space partitioned by a
+//! [`ShardRouter`]:
 //!
 //! * **owner placement** ([`PlacementMode::TagHash`] /
 //!   [`PlacementMode::LearnedPrefix`]): a lookup touches exactly one bank,
@@ -20,8 +21,8 @@
 //! * [`sharded`] — [`ShardedCam`], the synchronous multi-bank core, with
 //!   the merge rules and the monolith-equivalence search.
 //! * [`server`] — [`ShardedCamServer`] / [`ShardedServerHandle`], the
-//!   threaded fleet with per-bank engine threads, load shedding and
-//!   [`FleetMetrics`] aggregation.
+//!   threaded fleet with per-bank writer threads + reader pools, direct
+//!   reads, load shedding and [`FleetMetrics`] aggregation.
 
 pub mod placement;
 pub mod server;

@@ -1,13 +1,20 @@
-//! The threaded fleet: one [`CamServer`] engine thread per bank behind a
-//! scatter-gather [`ShardedServerHandle`].
+//! The threaded fleet: one [`CamServer`] writer thread plus a reader pool
+//! per bank behind a scatter-gather [`ShardedServerHandle`].
 //!
 //! Each bank keeps the full single-bank serving stack — its own
 //! [`crate::coordinator::Batcher`], [`crate::coordinator::LookupEngine`]
-//! and [`Metrics`] on a dedicated engine thread — so banks batch and burn
-//! energy independently.  The handle routes by [`ShardRouter`]: owner
-//! dispatch in hash/prefix modes, scatter-then-gather (deferred sends, one
-//! wait per bank) in broadcast mode, and per-bank load shedding through
-//! [`crate::coordinator::ServerHandle::try_lookup`].
+//! and [`Metrics`] on a dedicated writer thread, plus `readers` threads
+//! serving lookups from the bank's published
+//! [`crate::coordinator::SearchState`] — so banks mutate independently and
+//! lookups run concurrently both *across* banks and *within* one (bulk
+//! slices are chunked over each bank's pool).  The handle routes by
+//! [`ShardRouter`]: owner dispatch in hash/prefix modes,
+//! scatter-then-gather (deferred sends, one wait per bank) in broadcast
+//! mode, per-bank load shedding through
+//! [`crate::coordinator::ServerHandle::try_lookup`]
+//! ([`EngineError::Busy`]), and zero-queue direct reads
+//! ([`ShardedServerHandle::lookup_direct`]) for callers that bring their
+//! own thread, like the TCP connection handlers.
 
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -16,7 +23,7 @@ use std::sync::Arc;
 use crate::bits::BitVec;
 use crate::config::DesignConfig;
 use crate::coordinator::batcher::BatchPolicy;
-use crate::coordinator::engine::{EngineError, LookupEngine};
+use crate::coordinator::engine::{DecodeScratch, EngineError, LookupEngine};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::server::{CamServer, DecodeBackend, PersistError, ServerHandle};
 use crate::shard::placement::{PlacementMode, ShardRouter};
@@ -160,6 +167,14 @@ impl ShardedCamServer {
     pub fn with_queue_capacity(mut self, cap: usize) -> Self {
         self.servers =
             self.servers.into_iter().map(|s| s.with_queue_capacity(cap)).collect();
+        self
+    }
+
+    /// Size every bank's reader pool: `n` threads per bank serving lookups
+    /// concurrently from the bank's published search state (`0` = the
+    /// pre-pool engine-thread path).
+    pub fn with_readers(mut self, n: usize) -> Self {
+        self.servers = self.servers.into_iter().map(|s| s.with_readers(n)).collect();
         self
     }
 
@@ -314,19 +329,64 @@ impl ShardedServerHandle {
         }
     }
 
-    /// Non-blocking admission: sheds with [`EngineError::Full`] when the
+    /// Non-blocking admission: sheds with [`EngineError::Busy`] when the
     /// owning bank is saturated (broadcast: when any bank is), without
-    /// queueing anything.
+    /// queueing anything.  [`EngineError::Full`] stays reserved for "no
+    /// free CAM slot" on the insert path.
     pub fn try_lookup(&self, tag: BitVec) -> Result<ShardedOutcome, EngineError> {
         match self.router.place(&tag) {
             Some(b) => Ok(globalize_outcome(self.banks[b].try_lookup(tag)?, b, self.bank_m)),
             None => {
                 if self.banks.iter().any(|h| h.is_saturated()) {
-                    return Err(EngineError::Full);
+                    return Err(EngineError::Busy);
                 }
                 self.lookup(tag)
             }
         }
+    }
+
+    /// Run one lookup entirely *on the calling thread* against the owning
+    /// bank's published search state (broadcast: against every bank's,
+    /// gather-merged) — no queue, no channel hop, no engine thread.  This
+    /// is the TCP connection threads' read path; results are bit-identical
+    /// to [`Self::lookup`].  The caller owns the scratch (one per thread);
+    /// bank geometry is uniform, so one scratch serves the whole fleet.
+    pub fn lookup_direct(
+        &self,
+        tag: &BitVec,
+        scratch: &mut DecodeScratch,
+    ) -> Result<ShardedOutcome, EngineError> {
+        if tag.len() != self.bank_n {
+            // validate before routing: the learned-prefix router reads
+            // fixed bit positions and would panic on a narrow tag
+            return Err(EngineError::TagWidth { got: tag.len(), want: self.bank_n });
+        }
+        match self.router.place(tag) {
+            Some(b) => {
+                Ok(globalize_outcome(self.banks[b].lookup_direct(tag, scratch)?, b, self.bank_m))
+            }
+            None => {
+                let mut merged: Option<ShardedOutcome> = None;
+                for (b, h) in self.banks.iter().enumerate() {
+                    let g = globalize_outcome(h.lookup_direct(tag, scratch)?, b, self.bank_m);
+                    merged = Some(merge_fold(merged, g));
+                }
+                Ok(merged.expect("at least one bank"))
+            }
+        }
+    }
+
+    /// Bulk [`Self::lookup_direct`]: every tag served on the calling
+    /// thread, in order.  Parallelism across connections, not within one —
+    /// in-process callers who want intra-slice fan-out use
+    /// [`Self::lookup_many`], which spreads chunks over each bank's reader
+    /// pool.
+    pub fn lookup_many_direct(
+        &self,
+        tags: &[BitVec],
+        scratch: &mut DecodeScratch,
+    ) -> Vec<Result<ShardedOutcome, EngineError>> {
+        tags.iter().map(|t| self.lookup_direct(t, scratch)).collect()
     }
 
     /// Bulk scatter-gather preserving input order: one bulk message per
@@ -384,7 +444,7 @@ impl ShardedServerHandle {
     }
 
     /// Non-blocking bulk admission: sheds the whole slice with
-    /// [`EngineError::Full`] — without queueing anything — when any bank
+    /// [`EngineError::Busy`] — without queueing anything — when any bank
     /// the slice would touch is saturated (the owning banks in owner
     /// modes, every bank in broadcast); otherwise exactly
     /// [`Self::lookup_many`].  One saturated bank must not shed traffic
@@ -400,7 +460,7 @@ impl ShardedServerHandle {
                 .any(|t| self.router.place(t).is_some_and(|b| self.banks[b].is_saturated()))
         };
         if saturated {
-            return Err(EngineError::Full);
+            return Err(EngineError::Busy);
         }
         Ok(self.lookup_many(tags))
     }
@@ -545,7 +605,7 @@ mod tests {
     }
 
     #[test]
-    fn try_lookup_sheds_per_bank() {
+    fn try_lookup_sheds_busy_per_bank() {
         let h = ShardedCamServer::new(&fleet_cfg(4), PlacementMode::TagHash, policy())
             .with_queue_capacity(0)
             .spawn();
@@ -554,14 +614,50 @@ mod tests {
         for t in &tags {
             h.insert(t.clone()).unwrap();
         }
-        // cap 0: every bank sheds the non-blocking path...
+        // cap 0: every bank sheds the non-blocking path with Busy (the
+        // queue condition, distinct from Full = no free CAM slot)...
         for t in &tags {
-            assert_eq!(h.try_lookup(t.clone()).unwrap_err(), EngineError::Full);
+            assert_eq!(h.try_lookup(t.clone()).unwrap_err(), EngineError::Busy);
         }
         // ...bulk admission sheds the whole slice the same way...
-        assert_eq!(h.try_lookup_many(tags.clone()).unwrap_err(), EngineError::Full);
-        // ...while blocking lookups still get through.
+        assert_eq!(h.try_lookup_many(tags.clone()).unwrap_err(), EngineError::Busy);
+        // ...while blocking lookups still get through...
         assert!(h.lookup(tags[0].clone()).unwrap().addr.is_some());
+        // ...and so do direct reads: they never queue, so the admission
+        // cap cannot shed them.
+        let mut scratch = DecodeScratch::new();
+        assert!(h.lookup_direct(&tags[0], &mut scratch).unwrap().addr.is_some());
+    }
+
+    #[test]
+    fn direct_reads_match_queued_lookups_in_all_modes() {
+        for mode in [PlacementMode::TagHash, PlacementMode::Broadcast] {
+            let h = ShardedCamServer::new(&fleet_cfg(4), mode, policy()).spawn();
+            let mut rng = Rng::seed_from_u64(37);
+            let tags = TagDistribution::Uniform.sample_distinct(32, 40, &mut rng);
+            for t in &tags {
+                h.insert(t.clone()).unwrap();
+            }
+            let mut probes = tags.clone();
+            probes.extend(TagDistribution::Uniform.sample_distinct(32, 20, &mut rng));
+            let mut scratch = DecodeScratch::new();
+            for t in &probes {
+                let queued = h.lookup(t.clone()).unwrap();
+                let direct = h.lookup_direct(t, &mut scratch).unwrap();
+                assert_eq!(queued, direct, "direct read diverged from the queued path");
+            }
+            let bulk_direct = h.lookup_many_direct(&probes, &mut scratch);
+            let bulk_queued = h.lookup_many(probes.clone());
+            for (d, q) in bulk_direct.iter().zip(&bulk_queued) {
+                assert_eq!(d.as_ref().unwrap(), q.as_ref().unwrap());
+            }
+            // a narrow tag is a typed error, not a router panic
+            let narrow = crate::bits::BitVec::zeros(8);
+            assert!(matches!(
+                h.lookup_direct(&narrow, &mut scratch),
+                Err(EngineError::TagWidth { got: 8, want: 32 })
+            ));
+        }
     }
 
     #[test]

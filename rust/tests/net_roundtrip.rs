@@ -2,8 +2,11 @@
 //! results must be *bit-identical* to in-process `ShardedCamServer`
 //! lookups — same matched global address, same λ, same energy breakdown,
 //! same delay — across all three placement modes and both tag
-//! distributions, with `EngineError::Full` shedding surfaced as a typed
-//! wire error and the load generator emitting a measured bench-JSON row.
+//! distributions.  Wire lookups execute directly on the connection thread
+//! (no queue), so the admission cap cannot shed them; the in-process
+//! non-blocking admission sheds with the typed `EngineError::Busy`, and
+//! `Full` stays reserved for "no free CAM slot".  The load generator must
+//! emit a measured bench-JSON row.
 
 use cscam::bits::BitVec;
 use cscam::config::DesignConfig;
@@ -140,26 +143,32 @@ fn wire_equals_inprocess_correlated_learned() {
 }
 
 #[test]
-fn full_shed_surfaces_as_typed_wire_error() {
-    // queue capacity 0: every lookup sheds at admission, and the shed must
-    // arrive as EngineError::Full through the typed error frame — not as a
-    // transport failure or a silent miss.
-    let (server, _fleet, addr) = start(PlacementMode::TagHash, Some(0), NetConfig::default());
+fn wire_reads_bypass_the_admission_queue_while_inprocess_sheds_busy() {
+    // queue capacity 0: the in-process non-blocking admission sheds every
+    // queued lookup with the typed Busy (NOT Full — that means "no free
+    // CAM slot").  Wire lookups run directly on the connection thread
+    // against the published snapshot, so the zero-capacity queue cannot
+    // touch them: they must keep answering.
+    let (server, fleet, addr) = start(PlacementMode::TagHash, Some(0), NetConfig::default());
     let mut client = CamClient::connect(addr).expect("connect");
     let mut rng = Rng::seed_from_u64(207);
     let tags = TagDistribution::Uniform.sample_distinct(32, 8, &mut rng);
+    let mut addrs = Vec::new();
     for t in &tags {
-        client.insert(t).expect("inserts are barriers, not shed");
+        addrs.push(client.insert(t).expect("inserts are barriers, not shed"));
     }
-    match client.lookup(&tags[0]) {
-        Err(WireError::Engine(EngineError::Full)) => {}
-        other => panic!("expected Full shed, got {other:?}"),
+    // in-process queued admission sheds with Busy...
+    assert_eq!(fleet.try_lookup(tags[0].clone()).unwrap_err(), EngineError::Busy);
+    assert_eq!(fleet.try_lookup_many(tags.clone()).unwrap_err(), EngineError::Busy);
+    // ...and the wire still serves, single and bulk, with correct answers
+    for (t, &g) in tags.iter().zip(&addrs) {
+        let out = client.lookup(t).expect("direct wire read must not shed");
+        assert_eq!(out.addr, Some(g as usize));
     }
-    // a whole bulk frame sheds too, expanded per item
-    let bulk = client.lookup_bulk(&tags, 4).expect("bulk transport still fine");
+    let bulk = client.lookup_bulk(&tags, 4).expect("bulk transport fine");
     assert_eq!(bulk.len(), 8);
-    for r in bulk {
-        assert_eq!(r.unwrap_err(), EngineError::Full);
+    for (r, &g) in bulk.iter().zip(&addrs) {
+        assert_eq!(r.as_ref().unwrap().addr, Some(g as usize));
     }
     client.shutdown().expect("shutdown");
     server.join();

@@ -1,0 +1,317 @@
+//! The concurrent read path's correctness battery.
+//!
+//! Two properties anchor the refactor:
+//!
+//! 1. **Equivalence** — lookups served concurrently (reader pools, direct
+//!    reads, the TCP connection threads) are *bit-identical* — matched
+//!    address, all matches, λ, enabled blocks, comparisons, the full
+//!    energy breakdown and the delay report — to the single-threaded
+//!    reference engine, across hash/broadcast/learned placements.
+//! 2. **Linearizability** — with N reader threads hammering lookups while
+//!    a single writer inserts and deletes, every observed outcome equals
+//!    the outcome of the same probe on *some prefix* of the mutation
+//!    history replayed on a reference engine (the seeded-history pattern
+//!    of `tests/durability.rs`, pointed at concurrency instead of crash
+//!    recovery).  Readers may be stale by in-flight mutations, but can
+//!    never observe a torn or un-acknowledged state.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use cscam::bits::BitVec;
+use cscam::config::DesignConfig;
+use cscam::coordinator::{
+    BatchPolicy, CamServer, DecodeBackend, DecodeScratch, LookupEngine, LookupOutcome,
+};
+use cscam::net::{CamClient, CamTcpServer, NetConfig};
+use cscam::shard::{PlacementMode, ShardedCam, ShardedCamServer};
+use cscam::util::Rng;
+use cscam::workload::TagDistribution;
+
+fn fleet_cfg() -> DesignConfig {
+    // 4 banks × 64 entries = one 256-entry fleet
+    DesignConfig { m: 256, n: 32, zeta: 4, c: 3, l: 4, shards: 4, ..DesignConfig::reference() }
+}
+
+fn policy() -> BatchPolicy {
+    BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(100) }
+}
+
+fn placement_for(kind: &str, shards: usize, sample: &[BitVec], n: usize) -> PlacementMode {
+    match kind {
+        "hash" => PlacementMode::TagHash,
+        "broadcast" => PlacementMode::Broadcast,
+        "prefix" => PlacementMode::learned(shards, sample, n),
+        other => panic!("unknown placement {other}"),
+    }
+}
+
+/// Equivalence across every read path and every placement mode: the
+/// threaded fleet (reader pools), direct reads, and the wire must answer
+/// exactly what the synchronous single-threaded `ShardedCam` answers.
+#[test]
+fn concurrent_reads_are_bit_identical_across_placements_and_the_wire() {
+    for kind in ["hash", "broadcast", "prefix"] {
+        let cfg = fleet_cfg();
+        let mut rng = Rng::seed_from_u64(301);
+        let tags = TagDistribution::Uniform.sample_distinct(cfg.n, 120, &mut rng);
+        let mode = placement_for(kind, cfg.shards, &tags, cfg.n);
+
+        // reference: the synchronous fleet, no threads anywhere
+        let mut reference = ShardedCam::new(&cfg, mode.clone());
+        // the system under test: reader pools per bank + a TCP front-end
+        let fleet =
+            ShardedCamServer::new(&cfg, mode, policy()).with_readers(2).spawn();
+        let server =
+            CamTcpServer::bind(fleet.clone(), "127.0.0.1:0", NetConfig::default()).unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let net = server.spawn().unwrap();
+        let mut client = CamClient::connect(addr).unwrap();
+
+        let mut stored = Vec::new();
+        for t in &tags {
+            match (fleet.insert(t.clone()), reference.insert(t)) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(a, b, "{kind}: placement diverged");
+                    stored.push((t.clone(), a));
+                }
+                (Err(e1), Err(e2)) => assert_eq!(e1, e2, "{kind}: divergent insert errors"),
+                (a, b) => panic!("{kind}: insert divergence {a:?} vs {b:?}"),
+            }
+        }
+        for (_, g) in stored.iter().take(10) {
+            fleet.delete(*g).unwrap();
+            reference.delete(*g).unwrap();
+        }
+
+        let mut probes: Vec<BitVec> = stored.iter().map(|(t, _)| t.clone()).collect();
+        probes.extend(TagDistribution::Uniform.sample_distinct(cfg.n, 40, &mut rng));
+        let expected: Vec<_> = probes.iter().map(|t| reference.lookup(t).unwrap()).collect();
+
+        // (a) reader-pool path, hammered from several client threads
+        let mut joins = Vec::new();
+        for _ in 0..4 {
+            let fleet = fleet.clone();
+            let probes = probes.clone();
+            let expected = expected.clone();
+            joins.push(std::thread::spawn(move || {
+                for (t, want) in probes.iter().zip(&expected) {
+                    assert_eq!(&fleet.lookup(t.clone()).unwrap(), want, "pool path diverged");
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+
+        // (b) bulk via the pool fan-out, order preserved
+        let bulk = fleet.lookup_many(probes.clone());
+        for (r, want) in bulk.iter().zip(&expected) {
+            assert_eq!(r.as_ref().unwrap(), want, "{kind}: bulk pool path diverged");
+        }
+
+        // (c) direct reads (the conn-thread path), own scratch
+        let mut scratch = DecodeScratch::new();
+        for (t, want) in probes.iter().zip(&expected) {
+            assert_eq!(
+                &fleet.lookup_direct(t, &mut scratch).unwrap(),
+                want,
+                "{kind}: direct path diverged"
+            );
+        }
+
+        // (d) over TCP, single and pipelined bulk
+        for (t, want) in probes.iter().zip(&expected) {
+            assert_eq!(&client.lookup(t).unwrap(), want, "{kind}: wire path diverged");
+        }
+        let wire_bulk = client.lookup_bulk(&probes, 32).unwrap();
+        for (r, want) in wire_bulk.iter().zip(&expected) {
+            assert_eq!(r.as_ref().unwrap(), want, "{kind}: wire bulk diverged");
+        }
+
+        client.shutdown().unwrap();
+        net.join();
+    }
+}
+
+/// One step of a seeded mutation history (the durability harness's
+/// insert/delete pattern, recorded as explicit ops so the same history can
+/// be replayed on a reference engine prefix by prefix).
+#[derive(Debug, Clone)]
+enum Op {
+    Insert(BitVec),
+    Delete(usize),
+}
+
+/// Generate a seeded insert/delete history for one bank, mirroring
+/// `tests/durability.rs::seeded_history`: ~70 % inserts from a distinct
+/// pool, deletes pick a random live address.
+fn seeded_ops(cfg: &DesignConfig, seed: u64, count: usize) -> Vec<Op> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let pool = TagDistribution::Uniform.sample_distinct(cfg.n, count, &mut rng);
+    let mut shadow = LookupEngine::new(cfg.clone());
+    let mut live: Vec<usize> = Vec::new();
+    let mut next = 0usize;
+    let mut ops = Vec::new();
+    for _ in 0..count {
+        let do_insert = live.is_empty() || rng.gen_bool(0.7);
+        if do_insert && next < pool.len() {
+            let t = pool[next].clone();
+            next += 1;
+            if let Ok(a) = shadow.insert(&t) {
+                live.push(a);
+                ops.push(Op::Insert(t));
+            }
+        } else if !live.is_empty() {
+            let victim = live.swap_remove(rng.gen_range(live.len()));
+            shadow.delete(victim).unwrap();
+            ops.push(Op::Delete(victim));
+        }
+    }
+    ops
+}
+
+/// Linearizability under a concurrent writer: every outcome a reader
+/// observes — through the pool or through direct reads — must equal the
+/// probe's outcome at SOME prefix of the mutation history (replayed on a
+/// reference engine), field for field.  A torn state, a lost publish or a
+/// read of un-acked state would produce an outcome outside every prefix.
+#[test]
+fn concurrent_readers_observe_only_prefixes_of_the_mutation_history() {
+    let cfg = DesignConfig::small_test();
+    let ops = seeded_ops(&cfg, 71, 80);
+
+    // probe set: tags that get inserted (and some deleted) mid-history,
+    // plus two never-inserted tags (must always miss, at every prefix)
+    let mut probes: Vec<BitVec> = ops
+        .iter()
+        .filter_map(|op| match op {
+            Op::Insert(t) => Some(t.clone()),
+            Op::Delete(_) => None,
+        })
+        .take(8)
+        .collect();
+    let mut rng = Rng::seed_from_u64(72);
+    probes.push(cscam::workload::random_tag(cfg.n, &mut rng));
+    probes.push(cscam::workload::random_tag(cfg.n, &mut rng));
+
+    // allowed[p] = the probe's outcomes after 0, 1, …, H mutations
+    // (deduplicated consecutively), plus the expected insert addresses —
+    // one prefix-by-prefix replay on a reference engine
+    let mut allowed: Vec<Vec<LookupOutcome>> = vec![Vec::new(); probes.len()];
+    let record = |engine: &mut LookupEngine, allowed: &mut Vec<Vec<LookupOutcome>>| {
+        for (p, t) in probes.iter().enumerate() {
+            let out = engine.lookup(t).unwrap();
+            if allowed[p].last() != Some(&out) {
+                allowed[p].push(out);
+            }
+        }
+    };
+    let mut prefix_engine = LookupEngine::new(cfg.clone());
+    record(&mut prefix_engine, &mut allowed);
+    let mut expected_addrs = Vec::new();
+    for op in &ops {
+        match op {
+            Op::Insert(t) => expected_addrs.push(Some(prefix_engine.insert(t).unwrap())),
+            Op::Delete(a) => {
+                prefix_engine.delete(*a).unwrap();
+                expected_addrs.push(None);
+            }
+        }
+        record(&mut prefix_engine, &mut allowed);
+    }
+    let allowed = Arc::new(allowed);
+    let probes = Arc::new(probes);
+
+    // the live system: one writer (this thread, through the handle),
+    // 3 pool readers + 4 hammering client threads (pool and direct mixed)
+    let h = CamServer::new(cfg, DecodeBackend::Native, policy()).with_readers(3).spawn();
+    let done = Arc::new(AtomicBool::new(false));
+    let mut joins = Vec::new();
+    for reader in 0..4 {
+        let h = h.clone();
+        let done = Arc::clone(&done);
+        let allowed = Arc::clone(&allowed);
+        let probes = Arc::clone(&probes);
+        joins.push(std::thread::spawn(move || {
+            let mut scratch = DecodeScratch::new();
+            let mut observed = 0usize;
+            loop {
+                for (p, t) in probes.iter().enumerate() {
+                    let out = if reader % 2 == 0 {
+                        h.lookup(t.clone()).unwrap()
+                    } else {
+                        h.lookup_direct(t, &mut scratch).unwrap()
+                    };
+                    assert!(
+                        allowed[p].contains(&out),
+                        "reader {reader} observed an outcome outside every \
+                         history prefix for probe {p}: {out:?}"
+                    );
+                    observed += 1;
+                }
+                // check after the sweep: every reader completes at least
+                // one full pass, and the post-`done` pass still only sees
+                // the final prefix
+                if done.load(Ordering::Acquire) {
+                    return observed;
+                }
+            }
+        }));
+    }
+
+    for (op, want) in ops.iter().zip(&expected_addrs) {
+        match op {
+            Op::Insert(t) => {
+                let got = h.insert(t.clone()).unwrap();
+                assert_eq!(Some(got), *want, "writer placement diverged from the reference");
+            }
+            Op::Delete(a) => h.delete(*a).unwrap(),
+        }
+    }
+    done.store(true, Ordering::Release);
+    let total: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+    assert!(total >= probes.len(), "readers must have observed at least one sweep");
+
+    // quiescent: every reader now sees exactly the final prefix
+    let final_outcomes = allowed.iter().map(|a| a.last().unwrap().clone());
+    let mut scratch = DecodeScratch::new();
+    for (t, want) in probes.iter().zip(final_outcomes) {
+        assert_eq!(h.lookup_direct(t, &mut scratch).unwrap(), want);
+        assert_eq!(h.lookup(t.clone()).unwrap(), want);
+    }
+}
+
+/// Read-your-writes over the wire while other connections hammer reads:
+/// after an acknowledged insert (or delete), every connection observes it.
+#[test]
+fn acked_mutations_are_visible_to_every_connection() {
+    let cfg = fleet_cfg();
+    let fleet = ShardedCamServer::new(&cfg, PlacementMode::TagHash, policy())
+        .with_readers(2)
+        .spawn();
+    let server =
+        CamTcpServer::bind(fleet.clone(), "127.0.0.1:0", NetConfig::default()).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let net = server.spawn().unwrap();
+
+    let mut writer = CamClient::connect(addr.clone()).unwrap();
+    let mut observer = CamClient::connect(addr).unwrap();
+    let mut rng = Rng::seed_from_u64(303);
+    let tags = TagDistribution::Uniform.sample_distinct(cfg.n, 30, &mut rng);
+    for t in &tags {
+        let g = writer.insert(t).unwrap();
+        // a *different* connection — a different thread, a different
+        // scratch — sees the acked insert immediately
+        assert_eq!(observer.lookup(t).unwrap().addr, Some(g as usize));
+        // and so does the in-process pool path
+        assert_eq!(fleet.lookup(t.clone()).unwrap().addr, Some(g as usize));
+    }
+    let victim = writer.lookup(&tags[0]).unwrap().addr.unwrap();
+    writer.delete(victim as u64).unwrap();
+    assert_eq!(observer.lookup(&tags[0]).unwrap().addr, None, "acked delete visible");
+
+    writer.shutdown().unwrap();
+    net.join();
+}
