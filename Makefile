@@ -1,6 +1,6 @@
 # Convenience targets for the cscam workspace.
 
-.PHONY: build test artifacts
+.PHONY: build test lint artifacts
 
 # Tier-1 gate.
 build:
@@ -8,6 +8,12 @@ build:
 
 test:
 	cargo test -q
+
+# Cross-file invariant analyzer (rust/xtask) plus workspace-wide clippy —
+# the same pair the CI static-analysis job runs.
+lint:
+	cargo xtask lint
+	cargo clippy --workspace --all-targets -- -D warnings
 
 # Lower the JAX decode/train graphs to HLO text artifacts for the PJRT
 # backend (build-time Python; the Rust request path never runs Python).

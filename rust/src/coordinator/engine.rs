@@ -17,7 +17,7 @@
 //!   through a [`SharedSearch`] slot RCU-style — readers never block the
 //!   writer and never observe a half-applied mutation.
 
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 
 use crate::bits::BitVec;
 use crate::cam::CamArray;
@@ -288,26 +288,30 @@ impl SearchState {
 /// `Arc` with one brief read-lock and then search entirely lock-free.  A
 /// snapshot stays valid (and consistent) for as long as the reader holds
 /// the `Arc`, even across concurrent publishes.
+///
+/// This is a domain-typed wrapper around the generic
+/// [`crate::util::sync::PublishSlot`] — the primitive the loom battery
+/// model-checks (`rust/tests/loom_models.rs`).
 #[derive(Debug, Clone)]
 pub struct SharedSearch {
-    slot: Arc<RwLock<Arc<SearchState>>>,
+    slot: Arc<crate::util::sync::PublishSlot<SearchState>>,
 }
 
 impl SharedSearch {
     /// A slot holding `initial` until the first publish.
     pub fn new(initial: Arc<SearchState>) -> Self {
-        SharedSearch { slot: Arc::new(RwLock::new(initial)) }
+        SharedSearch { slot: Arc::new(crate::util::sync::PublishSlot::new(initial)) }
     }
 
     /// The current published state.  O(1): clones the `Arc`, not the state.
     pub fn snapshot(&self) -> Arc<SearchState> {
-        self.slot.read().expect("search slot poisoned").clone()
+        self.slot.snapshot()
     }
 
     /// Publish a new state (single-writer discipline: only the engine
     /// thread of the owning server calls this).
     pub fn publish(&self, state: Arc<SearchState>) {
-        *self.slot.write().expect("search slot poisoned") = state;
+        self.slot.publish(state)
     }
 }
 

@@ -24,10 +24,8 @@
 //!   queue: the calling thread snapshots and searches itself.  This is
 //!   what the TCP connection threads use.
 
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::bits::BitVec;
@@ -39,6 +37,7 @@ use crate::coordinator::engine::{
 use crate::coordinator::metrics::Metrics;
 use crate::runtime::DecodeOutput;
 use crate::store::{BankStore, StoreError};
+use crate::util::sync::{lock_recover, AdmissionGauge, JobGuard, Mutex, WorkQueue};
 #[cfg(feature = "pjrt")]
 use crate::runtime::ArtifactStore;
 
@@ -131,100 +130,17 @@ enum ReadJob {
     Bulk { state: Arc<SearchState>, tags: Vec<BitVec>, enqueued: Instant, resp: BulkResp },
 }
 
-struct QueueInner {
-    jobs: VecDeque<ReadJob>,
-    /// Live [`ReadPoolHandle`] clones; readers exit once this hits zero
-    /// and the queue is empty.
-    senders: usize,
-    /// Jobs ever pushed (monotonic; drain-barrier bookkeeping).
-    enqueued: u64,
-    /// Jobs fully served (monotonic; a drain barrier waits for
-    /// `completed` to reach the `enqueued` it observed).
-    completed: u64,
-}
-
-/// The reader pool's work queue: a plain Mutex+Condvar MPMC queue (std
-/// mpsc receivers cannot be shared across reader threads).
-struct ReadQueue {
-    inner: Mutex<QueueInner>,
-    takeable: Condvar,
-    drained: Condvar,
-}
-
-impl ReadQueue {
-    fn new() -> Self {
-        ReadQueue {
-            inner: Mutex::new(QueueInner {
-                jobs: VecDeque::new(),
-                senders: 1,
-                enqueued: 0,
-                completed: 0,
-            }),
-            takeable: Condvar::new(),
-            drained: Condvar::new(),
-        }
-    }
-
-    fn push(&self, job: ReadJob) {
-        let mut q = self.inner.lock().expect("read queue poisoned");
-        q.jobs.push_back(job);
-        q.enqueued += 1;
-        self.takeable.notify_one();
-    }
-
-    /// Next job, blocking; `None` once every sender is gone and the queue
-    /// ran dry (reader shutdown).  Queued jobs are always finished first.
-    fn pop(&self) -> Option<ReadJob> {
-        let mut q = self.inner.lock().expect("read queue poisoned");
-        loop {
-            if let Some(j) = q.jobs.pop_front() {
-                return Some(j);
-            }
-            if q.senders == 0 {
-                return None;
-            }
-            q = self.takeable.wait(q).expect("read queue poisoned");
-        }
-    }
-
-    fn job_done(&self) {
-        let mut q = self.inner.lock().expect("read queue poisoned");
-        q.completed += 1;
-        self.drained.notify_all();
-    }
-
-    /// Drain *barrier*: block until every job enqueued before this call
-    /// has been served.  Deliberately NOT "wait until idle" — under a
-    /// sustained lookup stream from other handles the queue may never be
-    /// empty, and a barrier (like the engine thread's FIFO `Drain`) must
-    /// still complete in bounded time.
-    fn barrier(&self) {
-        let mut q = self.inner.lock().expect("read queue poisoned");
-        let target = q.enqueued;
-        while q.completed < target {
-            q = self.drained.wait(q).expect("read queue poisoned");
-        }
-    }
-
-    fn add_sender(&self) {
-        self.inner.lock().expect("read queue poisoned").senders += 1;
-    }
-
-    fn remove_sender(&self) {
-        let mut q = self.inner.lock().expect("read queue poisoned");
-        q.senders -= 1;
-        if q.senders == 0 {
-            // wake every parked reader so it can drain and exit
-            self.takeable.notify_all();
-        }
-    }
-}
-
 /// Sender side of the pool queue, with handle-count semantics: each
 /// [`ServerHandle`] clone holds one; when the last drops, the reader
 /// threads finish the queued jobs and exit.
+///
+/// The queue itself is the generic Mutex+Condvar MPMC
+/// [`crate::util::sync::WorkQueue`] (std mpsc receivers cannot be shared
+/// across reader threads; the drain barrier rides on its
+/// enqueued/completed counters) — extracted behind the sync facade so the
+/// loom battery can model-check push/pop/complete/barrier exhaustively.
 struct ReadPoolHandle {
-    queue: Arc<ReadQueue>,
+    queue: Arc<WorkQueue<ReadJob>>,
 }
 
 impl Clone for ReadPoolHandle {
@@ -237,17 +153,6 @@ impl Clone for ReadPoolHandle {
 impl Drop for ReadPoolHandle {
     fn drop(&mut self) {
         self.queue.remove_sender();
-    }
-}
-
-/// Marks a dequeued job finished even if serving it panics — a job that
-/// never counts as completed would wedge every later
-/// [`ReadQueue::barrier`].
-struct JobGuard<'a>(&'a ReadQueue);
-
-impl Drop for JobGuard<'_> {
-    fn drop(&mut self) {
-        self.0.job_done();
     }
 }
 
@@ -276,15 +181,18 @@ impl BankMetrics {
     }
 
     /// Record under this thread's stripe lock (held only inside `f`).
+    /// Poison recovery: a stripe is a bag of monotonic counters, valid at
+    /// every panic point, so a stripe poisoned by a panicking reader keeps
+    /// serving instead of cascading the panic into every later lookup.
     fn with<R>(&self, f: impl FnOnce(&mut Metrics) -> R) -> R {
-        f(&mut self.stripe().lock().expect("metrics stripe poisoned"))
+        f(&mut lock_recover(self.stripe()))
     }
 
     /// Fold every stripe into `target` (non-atomic across stripes, like
     /// any metrics snapshot under concurrent load).
     pub(crate) fn merge_into(&self, target: &mut Metrics) {
         for s in &self.stripes {
-            target.merge(&s.lock().expect("metrics stripe poisoned"));
+            target.merge(&lock_recover(s));
         }
     }
 }
@@ -293,10 +201,10 @@ fn spawn_reader_pool(
     readers: usize,
     shared: SharedSearch,
     metrics: Arc<BankMetrics>,
-    depth: Arc<AtomicUsize>,
+    depth: Arc<AdmissionGauge>,
     max_batch: usize,
 ) -> ReadPoolHandle {
-    let queue = Arc::new(ReadQueue::new());
+    let queue = Arc::new(WorkQueue::new());
     for i in 0..readers {
         let queue = Arc::clone(&queue);
         let shared = shared.clone();
@@ -305,24 +213,26 @@ fn spawn_reader_pool(
         std::thread::Builder::new()
             .name(format!("cscam-reader-{i}"))
             .spawn(move || reader_loop(&queue, &shared, &metrics, &depth, max_batch))
+            // lint:allow(a bank that cannot spawn its reader threads cannot
+            // serve at all; failing spawn() loudly at startup is the contract)
             .expect("spawn reader thread");
     }
     ReadPoolHandle { queue }
 }
 
 fn reader_loop(
-    queue: &ReadQueue,
+    queue: &WorkQueue<ReadJob>,
     shared: &SharedSearch,
     metrics: &BankMetrics,
-    depth: &AtomicUsize,
+    depth: &AdmissionGauge,
     max_batch: usize,
 ) {
     let mut scratch = DecodeScratch::new();
     while let Some(job) = queue.pop() {
-        let _guard = JobGuard(queue);
+        let _guard = JobGuard::new(queue);
         match job {
             ReadJob::Lookup { tag, enqueued, resp } => {
-                depth.fetch_sub(1, Ordering::Relaxed);
+                depth.retire(1);
                 let state = shared.snapshot();
                 let out = state.lookup(&tag, &mut scratch);
                 metrics.with(|m| {
@@ -336,7 +246,7 @@ fn reader_loop(
                 let _ = resp.send(out);
             }
             ReadJob::Bulk { state, tags, enqueued, resp } => {
-                depth.fetch_sub(tags.len(), Ordering::Relaxed);
+                depth.retire(tags.len());
                 // `state` was snapshotted once at enqueue time and is
                 // shared by every part of the bulk (whole-bulk consistency)
                 let mut out = Vec::with_capacity(tags.len());
@@ -452,7 +362,7 @@ pub struct ServerHandle {
     tx: mpsc::Sender<Request>,
     /// Lookup tags enqueued but not yet dequeued by a serving thread
     /// (bulk requests count per tag).
-    depth: Arc<AtomicUsize>,
+    depth: Arc<AdmissionGauge>,
     /// Admission cap for [`Self::try_lookup`].
     cap: usize,
     /// The bank's published search state (direct reads, net layer).
@@ -473,9 +383,9 @@ impl ServerHandle {
     /// to the engine thread.  `weight` is the number of tags the request
     /// carries, so bulk lookups count per tag, not per message.
     fn enqueue_lookup(&self, req: Request, weight: usize) -> Result<(), EngineError> {
-        self.depth.fetch_add(weight, Ordering::Relaxed);
+        self.depth.admit(weight);
         self.tx.send(req).map_err(|_| {
-            self.depth.fetch_sub(weight, Ordering::Relaxed);
+            self.depth.retire(weight);
             EngineError::Shutdown
         })
     }
@@ -483,7 +393,7 @@ impl ServerHandle {
     /// True when the admission queue is at capacity ([`Self::try_lookup`]
     /// would shed).
     pub fn is_saturated(&self) -> bool {
-        self.depth.load(Ordering::Relaxed) >= self.cap
+        self.depth.load() >= self.cap
     }
 
     /// Lookup, served by the reader pool (or, with `readers = 0` / PJRT,
@@ -537,7 +447,7 @@ impl ServerHandle {
         let (resp, rx) = mpsc::sync_channel(1);
         match &self.pool {
             Some(pool) => {
-                self.depth.fetch_add(1, Ordering::Relaxed);
+                self.depth.admit(1);
                 pool.queue.push(ReadJob::Lookup { tag, enqueued: Instant::now(), resp });
             }
             None => {
@@ -581,7 +491,7 @@ impl ServerHandle {
                     let part = std::mem::replace(&mut tags, rest);
                     let (resp, rx) = mpsc::sync_channel(1);
                     let len = part.len();
-                    self.depth.fetch_add(len, Ordering::Relaxed);
+                    self.depth.admit(len);
                     pool.queue.push(ReadJob::Bulk {
                         state: Arc::clone(&state),
                         tags: part,
@@ -688,7 +598,7 @@ pub struct CamServer {
     policy: BatchPolicy,
     metrics: Metrics,
     /// Lookup tags enqueued but not yet dequeued (shared with handles).
-    queue_depth: Arc<AtomicUsize>,
+    queue_depth: Arc<AdmissionGauge>,
     /// Admission cap handed to [`ServerHandle::try_lookup`].
     queue_cap: usize,
     /// Reader-pool size ([`Self::with_readers`]); 0 = engine-thread reads.
@@ -721,7 +631,7 @@ impl CamServer {
             backend,
             policy,
             metrics: Metrics::new(),
-            queue_depth: Arc::new(AtomicUsize::new(0)),
+            queue_depth: Arc::new(AdmissionGauge::new()),
             queue_cap: DEFAULT_QUEUE_CAPACITY,
             readers: DEFAULT_READERS,
             shared,
@@ -780,6 +690,8 @@ impl CamServer {
         std::thread::Builder::new()
             .name("cscam-server".into())
             .spawn(move || self.run(rx))
+            // lint:allow(no engine thread means no bank at all; failing
+            // spawn() loudly at startup is the contract)
             .expect("spawn server thread");
         ServerHandle {
             tx,
@@ -798,10 +710,10 @@ impl CamServer {
     fn note_dequeue(&self, req: &Request) {
         match req {
             Request::Lookup { .. } => {
-                self.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                self.queue_depth.retire(1);
             }
             Request::BulkLookup { tags, .. } => {
-                self.queue_depth.fetch_sub(tags.len(), Ordering::Relaxed);
+                self.queue_depth.retire(tags.len());
             }
             _ => {}
         }
@@ -994,6 +906,9 @@ impl CamServer {
                 }
                 let _ = resp.send(r);
             }
+            // lint:allow(the serve loop routes every Lookup into the batcher
+            // before calling handle_barrier; reaching this arm is a local
+            // logic error, not an input-dependent state)
             Request::Lookup { .. } => unreachable!("lookups are batched, not barriers"),
         }
     }
@@ -1097,7 +1012,7 @@ mod tests {
         drop(rx);
         ServerHandle {
             tx,
-            depth: Arc::new(AtomicUsize::new(0)),
+            depth: Arc::new(AdmissionGauge::new()),
             cap: DEFAULT_QUEUE_CAPACITY,
             shared: SharedSearch::new(
                 LookupEngine::new(DesignConfig::small_test()).search_state(),
@@ -1328,7 +1243,7 @@ mod tests {
         let h = dead_handle();
         assert_eq!(h.lookup(BitVec::zeros(32)).unwrap_err(), EngineError::Shutdown);
         assert_eq!(h.try_lookup(BitVec::zeros(32)).unwrap_err(), EngineError::Shutdown);
-        assert_eq!(h.depth.load(Ordering::Relaxed), 0, "failed sends must not leak depth");
+        assert_eq!(h.depth.load(), 0, "failed sends must not leak depth");
         assert_eq!(h.insert(BitVec::zeros(32)).unwrap_err(), EngineError::Shutdown);
         assert_eq!(h.delete(0).unwrap_err(), EngineError::Shutdown);
         let bulk = h.lookup_many(vec![BitVec::zeros(32); 3]);
@@ -1374,7 +1289,7 @@ mod tests {
         }
         // the queue drains as the readers answer: depth returns to zero
         h.drain();
-        assert_eq!(h.depth.load(Ordering::Relaxed), 0);
+        assert_eq!(h.depth.load(), 0);
     }
 
     #[test]
@@ -1411,11 +1326,11 @@ mod tests {
         }
         let pending = h.lookup_many_deferred(tags.clone()).unwrap();
         // enqueue counted 6; it may already be partially dequeued, never more
-        assert!(h.depth.load(Ordering::Relaxed) <= 6);
+        assert!(h.depth.load() <= 6);
         let results = pending.wait();
         assert_eq!(results.len(), 6);
         h.drain();
-        assert_eq!(h.depth.load(Ordering::Relaxed), 0, "per-tag weights must balance");
+        assert_eq!(h.depth.load(), 0, "per-tag weights must balance");
     }
 
     #[test]
@@ -1440,6 +1355,6 @@ mod tests {
             assert_eq!(r.unwrap().addr, Some(i % 60), "order across parts");
         }
         h.drain();
-        assert_eq!(h.depth.load(Ordering::Relaxed), 0);
+        assert_eq!(h.depth.load(), 0);
     }
 }

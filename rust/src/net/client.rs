@@ -113,6 +113,8 @@ impl CamClient {
         if self.conn.is_none() {
             self.conn = Some(Conn::open(&self.addr)?);
         }
+        // lint:allow(infallible: the branch above just set self.conn to Some
+        // or returned the connect error)
         Ok(self.conn.as_mut().expect("just connected"))
     }
 

@@ -138,6 +138,8 @@ impl LoadGen {
     /// Populate the fleet (through the wire) and run the generator.
     pub fn run(&self) -> Result<LoadReport, WireError> {
         let mut setup = CamClient::connect(self.addr.clone())?;
+        // lint:allow(infallible: connect() just succeeded, so the client
+        // holds the handshake hello; a failed connect returned above)
         let hello = *setup.server_info().expect("connected client has a hello");
         let n = hello.tag_bits as usize;
         let capacity = (hello.shards as usize) * (hello.bank_m as usize);

@@ -678,6 +678,8 @@ pub fn decode_frame_body(body: &[u8]) -> Result<(u64, u8, &[u8]), WireError> {
     if body.len() < 17 {
         return Err(WireError::Protocol("frame body shorter than its header".into()));
     }
+    // lint:allow(infallible: the slice is exactly 8 bytes by construction,
+    // guarded by the length check above)
     let want = u64::from_le_bytes(<[u8; 8]>::try_from(&body[0..8]).unwrap());
     let got = crate::util::hash::fnv1a_bytes(&body[8..]);
     if want != got {
@@ -685,6 +687,7 @@ pub fn decode_frame_body(body: &[u8]) -> Result<(u64, u8, &[u8]), WireError> {
             "frame checksum mismatch: header {want:#018x}, computed {got:#018x}"
         )));
     }
+    // lint:allow(infallible: 8-byte slice by construction, see length check)
     let id = u64::from_le_bytes(<[u8; 8]>::try_from(&body[8..16]).unwrap());
     Ok((id, body[16], &body[17..]))
 }

@@ -136,6 +136,8 @@ impl ShardedCamServer {
     /// `cfg.shards` fresh banks (native decode) of `cfg.m / cfg.shards`
     /// entries each, sharing one batch policy.
     pub fn new(cfg: &DesignConfig, mode: PlacementMode, policy: BatchPolicy) -> Self {
+        // lint:allow(constructor precondition: a geometry that fails
+        // validation cannot be served at all, so refuse loudly at build time)
         cfg.validate().expect("invalid design config");
         let router = ShardRouter::new(cfg.shards, mode);
         let bank_cfg = cfg.per_bank();
@@ -297,6 +299,11 @@ impl ShardedServerHandle {
             Some(b) => Ok(self.global(b, self.banks[b].insert(tag)?)),
             None => {
                 let s = self.banks.len();
+                // lint:allow(relaxed: the round-robin cursor only spreads
+                // ownerless inserts statistically; any interleaving of the
+                // counter is an acceptable start bank, and the spill scan
+                // below corrects for collisions — no other memory depends
+                // on this ordering)
                 let start = self.rr.fetch_add(1, Ordering::Relaxed) % s;
                 let (b, a) = spill_insert(s, start, |b| self.banks[b].insert(tag.clone()))?;
                 Ok(self.global(b, a))
@@ -324,6 +331,8 @@ impl ShardedServerHandle {
                     let g = globalize_outcome(p.wait()?, b, self.bank_m);
                     merged = Some(merge_fold(merged, g));
                 }
+                // lint:allow(infallible: constructors enforce >= 1 bank, so
+                // the gather fold above ran at least once)
                 Ok(merged.expect("at least one bank"))
             }
         }
@@ -371,6 +380,8 @@ impl ShardedServerHandle {
                     let g = globalize_outcome(h.lookup_direct(tag, scratch)?, b, self.bank_m);
                     merged = Some(merge_fold(merged, g));
                 }
+                // lint:allow(infallible: constructors enforce >= 1 bank, so
+                // the gather fold above ran at least once)
                 Ok(merged.expect("at least one bank"))
             }
         }
@@ -421,6 +432,8 @@ impl ShardedServerHandle {
             let mut per_bank: Vec<Vec<BitVec>> = vec![Vec::new(); s];
             let mut pos: Vec<Vec<usize>> = vec![Vec::new(); s];
             for (i, t) in tags.into_iter().enumerate() {
+                // lint:allow(infallible: this branch only runs in owner
+                // placement modes, where place() is total)
                 let b = self.router.place(&t).expect("owner placement");
                 pos[b].push(i);
                 per_bank[b].push(t);
@@ -440,6 +453,8 @@ impl ShardedServerHandle {
                 }
             }
         }
+        // lint:allow(infallible: both branches above visit every input index
+        // exactly once, so no slot can remain None)
         out.into_iter().map(|r| r.expect("every slot filled")).collect()
     }
 

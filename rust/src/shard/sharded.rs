@@ -130,6 +130,8 @@ impl ShardedCam {
     /// Build a fleet for a design point: `cfg.shards` banks of
     /// `cfg.m / cfg.shards` entries each.
     pub fn new(cfg: &DesignConfig, mode: PlacementMode) -> Self {
+        // lint:allow(constructor precondition: a geometry that fails
+        // validation cannot be served at all, so refuse loudly at build time)
         cfg.validate().expect("invalid design config");
         let router = ShardRouter::new(cfg.shards, mode);
         let bank_cfg = cfg.per_bank();
@@ -241,6 +243,8 @@ impl ShardedCam {
                     let out = bank.lookup(tag)?;
                     merged = Some(merge_fold(merged, globalize_outcome(out, b, bank_m)));
                 }
+                // lint:allow(infallible: constructors enforce >= 1 bank, so
+                // the merge fold above ran at least once)
                 Ok(merged.expect("at least one bank"))
             }
         }

@@ -192,6 +192,8 @@ impl BankImage {
         if data[6] != 0 || data[7] != 0 {
             return Err(StoreError::Corrupt("nonzero reserved bytes in snapshot header".into()));
         }
+        // lint:allow(infallible: 8-byte slice by construction, header length
+        // was checked before entering this branch)
         let payload_len = u64::from_le_bytes(<[u8; 8]>::try_from(&data[8..16]).expect("8 bytes"));
         let payload = &data[SNAPSHOT_HEADER_LEN..];
         if payload_len != payload.len() as u64 {
@@ -200,6 +202,8 @@ impl BankImage {
                 payload.len()
             )));
         }
+        // lint:allow(infallible: 8-byte slice by construction, see the header
+        // length check above)
         let want = u64::from_le_bytes(<[u8; 8]>::try_from(&data[16..24]).expect("8 bytes"));
         let got = fnv1a_bytes(payload);
         if want != got {

@@ -180,6 +180,8 @@ fn parse_frame(buf: &[u8]) -> FrameStep {
         return FrameStep::Torn(format!("frame needs {len} bytes, {} present", buf.len() - 4));
     }
     let body = &buf[4..4 + len];
+    // lint:allow(infallible: the slice is exactly 8 bytes by construction,
+    // and len >= 9 was checked above)
     let want = u64::from_le_bytes(<[u8; 8]>::try_from(&body[0..8]).expect("8 bytes"));
     let got = fnv1a_bytes(&body[8..]);
     if want != got {
@@ -305,6 +307,8 @@ impl Wal {
         if data[6] != 0 || data[7] != 0 {
             return Err(StoreError::Corrupt("nonzero reserved bytes in WAL header".into()));
         }
+        // lint:allow(infallible: 8-byte slice by construction, header length
+        // was checked before entering this branch)
         let generation = u64::from_le_bytes(<[u8; 8]>::try_from(&data[8..16]).expect("8 bytes"));
 
         let mut records = Vec::new();

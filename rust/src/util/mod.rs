@@ -8,6 +8,7 @@ pub mod codec;
 pub mod hash;
 pub mod json;
 pub mod rng;
+pub mod sync;
 
 pub use bench::BenchTimer;
 pub use hash::Fnv1a;

@@ -1,0 +1,383 @@
+//! The concurrency kernel shared by the serving layers, extracted behind
+//! one auditable facade: the MPMC work queue the reader pool drains, the
+//! RCU publish slot lookups snapshot from, and the admission gauge that
+//! sheds load — plus the poison-recovery lock helpers every serving path
+//! uses instead of `.unwrap()` on a lock result.
+//!
+//! Two properties of this module are enforced elsewhere in the repo:
+//!
+//! * **loom-swappable primitives** — everything here builds against either
+//!   `std::sync` (default) or `loom::sync` (cargo feature `loom`), so the
+//!   model-checking battery in `rust/tests/loom_models.rs` can exhaustively
+//!   interleave the queue/publish/drain protocols with the *same* code the
+//!   production threads run, not a re-implementation that could drift.
+//! * **no panic on poison** — a reader thread that panics while holding a
+//!   stripe or queue lock must not wedge the whole bank: every lock/wait in
+//!   this module recovers the guard with [`lock_recover`]/[`PoisonError::
+//!   into_inner`].  The invariants the guards protect are documented at
+//!   each recovery site; `cargo xtask lint` bans bare `.unwrap()`/`.expect`
+//!   on lock results in the serving modules that build on this facade.
+
+#[cfg(feature = "loom")]
+pub use loom::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+#[cfg(feature = "loom")]
+pub use loom::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+#[cfg(not(feature = "loom"))]
+pub use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+#[cfg(not(feature = "loom"))]
+pub use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::sync::PoisonError;
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+///
+/// Sound only when every critical section leaves the protected value in a
+/// consistent state at every panic point — which is the standing rule for
+/// this facade: critical sections are a few field updates (queue push/pop,
+/// counter bumps, metric folds) with no mid-section invariant windows, so
+/// the data a poisoned guard hands back is never torn.  Recovering keeps
+/// one panicked reader from turning every later lock on the bank into a
+/// panic cascade.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`lock_recover`] for the read half of an [`RwLock`].
+pub fn read_recover<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`lock_recover`] for the write half of an [`RwLock`].
+pub fn write_recover<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+// --------------------------------------------------------- publish slot
+
+/// RCU-style publish slot: a single writer replaces the published
+/// `Arc<T>`; any number of readers snapshot it and then work lock-free on
+/// their clone.  The lock is held only for the pointer clone/store — never
+/// across a search — so readers cannot block each other and the writer
+/// blocks readers only for the O(1) swap.
+///
+/// This is the slot behind [`crate::coordinator::engine::SharedSearch`];
+/// the loom battery checks that a snapshot never observes a torn or
+/// rolled-back publication.
+pub struct PublishSlot<T> {
+    slot: RwLock<Arc<T>>,
+}
+
+impl<T> std::fmt::Debug for PublishSlot<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PublishSlot").finish_non_exhaustive()
+    }
+}
+
+impl<T> PublishSlot<T> {
+    pub fn new(initial: Arc<T>) -> Self {
+        PublishSlot { slot: RwLock::new(initial) }
+    }
+
+    /// The currently published value (O(1): one read-lock + Arc clone).
+    pub fn snapshot(&self) -> Arc<T> {
+        read_recover(&self.slot).clone()
+    }
+
+    /// Publish `next`, making it the value every subsequent
+    /// [`Self::snapshot`] returns.  In-flight snapshots keep their old
+    /// `Arc` alive until dropped (that is the RCU grace period).
+    pub fn publish(&self, next: Arc<T>) {
+        *write_recover(&self.slot) = next;
+    }
+}
+
+// ------------------------------------------------------ admission gauge
+
+/// Count of lookup tags admitted (enqueued) but not yet picked up by a
+/// serving thread — the load-shedding input for `try_lookup`'s `Busy`
+/// path and the post-drain "queue is empty again" probe the tests read.
+///
+/// Orderings: [`Self::retire`] releases and [`Self::load`] acquires, so a
+/// thread that observes the gauge at zero also observes the effects of
+/// serving every retired job.  The drain barrier itself synchronizes
+/// through the work queue's mutex, so the gauge does not carry the
+/// barrier — the Acquire/Release pair is what makes the gauge's *value*
+/// trustworthy on its own, without reasoning about which lock happened to
+/// be held nearby (this replaced a set of `Ordering::Relaxed` uses whose
+/// soundness rested on exactly that coupling).
+pub struct AdmissionGauge {
+    depth: AtomicUsize,
+}
+
+impl AdmissionGauge {
+    pub fn new() -> Self {
+        AdmissionGauge { depth: AtomicUsize::new(0) }
+    }
+
+    /// Count `n` tags into the queue (enqueue side).
+    pub fn admit(&self, n: usize) {
+        self.depth.fetch_add(n, Ordering::Release);
+    }
+
+    /// Count `n` tags out of the queue (serving side, or enqueue
+    /// rollback when the send fails).  Admissions and retirements must
+    /// balance; the debug assertion catches a weight mismatch (e.g. a
+    /// bulk retired per-message instead of per-tag) in tests.
+    pub fn retire(&self, n: usize) {
+        let prev = self.depth.fetch_sub(n, Ordering::Release);
+        debug_assert!(prev >= n, "admission gauge underflow: retired {n} from {prev}");
+    }
+
+    /// Current depth.
+    pub fn load(&self) -> usize {
+        self.depth.load(Ordering::Acquire)
+    }
+}
+
+impl Default for AdmissionGauge {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ----------------------------------------------------------- work queue
+
+struct WorkQueueInner<T> {
+    jobs: VecDeque<T>,
+    /// Live sender handles; workers exit once this hits zero and the
+    /// queue is empty.
+    senders: usize,
+    /// Jobs ever pushed (monotonic; drain-barrier bookkeeping).
+    enqueued: u64,
+    /// Jobs fully served (monotonic; a drain barrier waits for
+    /// `completed` to reach the `enqueued` it observed).
+    completed: u64,
+}
+
+/// A plain Mutex+Condvar MPMC queue with a completion barrier (std mpsc
+/// receivers cannot be shared across worker threads).  This is the reader
+/// pool's queue, extracted so the loom battery can interleave
+/// push/pop/complete/barrier exhaustively.
+///
+/// Lifecycle: the queue starts with ONE sender registered (the creator);
+/// [`Self::add_sender`]/[`Self::remove_sender`] track clones.  [`Self::pop`]
+/// blocks while senders remain, and returns `None` only once every sender
+/// is gone *and* the queue ran dry — queued jobs are always finished first.
+pub struct WorkQueue<T> {
+    inner: Mutex<WorkQueueInner<T>>,
+    takeable: Condvar,
+    drained: Condvar,
+}
+
+impl<T> WorkQueue<T> {
+    pub fn new() -> Self {
+        WorkQueue {
+            inner: Mutex::new(WorkQueueInner {
+                jobs: VecDeque::new(),
+                senders: 1,
+                enqueued: 0,
+                completed: 0,
+            }),
+            takeable: Condvar::new(),
+            drained: Condvar::new(),
+        }
+    }
+
+    pub fn push(&self, job: T) {
+        let mut q = lock_recover(&self.inner);
+        q.jobs.push_back(job);
+        q.enqueued += 1;
+        self.takeable.notify_one();
+    }
+
+    /// Next job, blocking; `None` once every sender is gone and the queue
+    /// ran dry (worker shutdown).
+    pub fn pop(&self) -> Option<T> {
+        let mut q = lock_recover(&self.inner);
+        loop {
+            if let Some(j) = q.jobs.pop_front() {
+                return Some(j);
+            }
+            if q.senders == 0 {
+                return None;
+            }
+            q = self.takeable.wait(q).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Mark one popped job fully served (wakes barrier waiters).  Prefer
+    /// [`JobGuard`], which calls this even if serving the job panics.
+    pub fn job_done(&self) {
+        let mut q = lock_recover(&self.inner);
+        q.completed += 1;
+        self.drained.notify_all();
+    }
+
+    /// Drain *barrier*: block until every job enqueued before this call
+    /// has been served.  Deliberately NOT "wait until idle" — under a
+    /// sustained stream from other senders the queue may never be empty,
+    /// and a barrier must still complete in bounded time.
+    pub fn barrier(&self) {
+        let mut q = lock_recover(&self.inner);
+        let target = q.enqueued;
+        while q.completed < target {
+            q = self.drained.wait(q).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Register one more sender (a handle clone).
+    pub fn add_sender(&self) {
+        lock_recover(&self.inner).senders += 1;
+    }
+
+    /// Unregister a sender; at zero, every parked worker is woken so it
+    /// can drain the queue and exit.
+    pub fn remove_sender(&self) {
+        let mut q = lock_recover(&self.inner);
+        q.senders -= 1;
+        if q.senders == 0 {
+            self.takeable.notify_all();
+        }
+    }
+}
+
+impl<T> Default for WorkQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Marks a dequeued job finished even if serving it panics — a job that
+/// never counts as completed would wedge every later
+/// [`WorkQueue::barrier`].
+pub struct JobGuard<'a, T>(&'a WorkQueue<T>);
+
+impl<'a, T> JobGuard<'a, T> {
+    pub fn new(queue: &'a WorkQueue<T>) -> Self {
+        JobGuard(queue)
+    }
+}
+
+impl<T> Drop for JobGuard<'_, T> {
+    fn drop(&mut self) {
+        self.0.job_done();
+    }
+}
+
+// Unit tests run against the std primitives (the loom battery is the
+// schedule-exhaustive counterpart in rust/tests/loom_models.rs).
+#[cfg(all(test, not(feature = "loom")))]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_recover_hands_back_a_poisoned_guard() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.lock().is_err(), "the lock must actually be poisoned");
+        assert_eq!(*lock_recover(&m), 7);
+        *lock_recover(&m) += 1;
+        assert_eq!(*lock_recover(&m), 8);
+    }
+
+    #[test]
+    fn rw_recover_hands_back_poisoned_guards() {
+        let l = Arc::new(RwLock::new(1u32));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison the rwlock");
+        })
+        .join();
+        assert_eq!(*read_recover(&l), 1);
+        *write_recover(&l) = 2;
+        assert_eq!(*read_recover(&l), 2);
+    }
+
+    #[test]
+    fn publish_slot_snapshots_the_latest_publication() {
+        let slot = PublishSlot::new(Arc::new(1u32));
+        let before = slot.snapshot();
+        slot.publish(Arc::new(2));
+        assert_eq!(*before, 1, "in-flight snapshots keep the old state alive");
+        assert_eq!(*slot.snapshot(), 2);
+    }
+
+    #[test]
+    fn admission_gauge_balances() {
+        let g = AdmissionGauge::new();
+        assert_eq!(g.load(), 0);
+        g.admit(3);
+        g.admit(1);
+        assert_eq!(g.load(), 4);
+        g.retire(3);
+        g.retire(1);
+        assert_eq!(g.load(), 0);
+    }
+
+    #[test]
+    fn work_queue_serves_fifo_and_shuts_down() {
+        let q = Arc::new(WorkQueue::new());
+        q.push(1u32);
+        q.push(2);
+        assert_eq!(q.pop(), Some(1));
+        q.job_done();
+        assert_eq!(q.pop(), Some(2));
+        q.job_done();
+        q.remove_sender();
+        assert_eq!(q.pop(), None, "no senders + empty queue = shutdown");
+    }
+
+    #[test]
+    fn queued_jobs_are_served_before_shutdown() {
+        let q = Arc::new(WorkQueue::new());
+        q.push(1u32);
+        q.remove_sender();
+        assert_eq!(q.pop(), Some(1), "queued jobs outlive the last sender");
+        q.job_done();
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn barrier_waits_for_prior_jobs_only() {
+        let q = Arc::new(WorkQueue::new());
+        q.push(10u32);
+        q.push(11);
+        let worker = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                while let Some(_job) = q.pop() {
+                    let _guard = JobGuard::new(&q);
+                }
+            })
+        };
+        q.barrier(); // must return once both queued jobs completed
+        q.remove_sender();
+        worker.join().unwrap();
+        q.add_sender(); // barrier on an idle queue returns immediately
+        q.barrier();
+        q.remove_sender();
+    }
+
+    #[test]
+    fn job_guard_completes_on_panic() {
+        let q = Arc::new(WorkQueue::new());
+        q.push(1u32);
+        let q2 = Arc::clone(&q);
+        let _ = std::thread::spawn(move || {
+            let _job = q2.pop();
+            let _guard = JobGuard::new(&q2);
+            panic!("die mid-job");
+        })
+        .join();
+        q.barrier(); // would hang forever if the panicked job never completed
+    }
+}

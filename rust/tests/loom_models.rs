@@ -1,0 +1,185 @@
+//! Loom models of the concurrency kernel behind the serving path.
+//!
+//! `util::sync` is the only module in the tree that owns raw
+//! synchronization: the `PublishSlot` RCU swap that `SharedSearch`
+//! readers snapshot, the MPMC `WorkQueue` the shard servers drain, and
+//! the `AdmissionGauge` the coordinator uses to decide when a drain has
+//! settled.  These models run those primitives under loom, which
+//! exhaustively permutes every thread interleaving the memory model
+//! allows — including the weak-ordering reorderings a real machine only
+//! exhibits under load.
+//!
+//! Compiled only with the `loom` feature, which swaps the facade onto
+//! loom's instrumented primitives:
+//!
+//! ```text
+//! cargo test -p cscam --test loom_models --features loom --release
+//! ```
+//!
+//! Every model stays at two threads plus main; loom's state space is
+//! exponential in both thread count and atomic-op count, and two
+//! threads already cover the pairwise races these primitives exist to
+//! resolve.
+
+#![cfg(feature = "loom")]
+
+use std::sync::Arc;
+
+use cscam::util::sync::{AdmissionGauge, AtomicUsize, JobGuard, Ordering, PublishSlot, WorkQueue};
+use loom::thread;
+
+/// A snapshot never observes a half-published value, and snapshots are
+/// monotonic: once a reader has seen generation g, it never sees an
+/// older one.  The payload pairs are self-describing (`.1 == .0 * 10`),
+/// so any torn or stale-mix read fails the arithmetic check.
+#[test]
+fn publish_slot_snapshots_are_atomic_and_monotonic() {
+    loom::model(|| {
+        let slot = Arc::new(PublishSlot::new(Arc::new((0usize, 0usize))));
+        let writer = {
+            let slot = Arc::clone(&slot);
+            thread::spawn(move || {
+                slot.publish(Arc::new((1, 10)));
+                slot.publish(Arc::new((2, 20)));
+            })
+        };
+        let first = slot.snapshot();
+        let second = slot.snapshot();
+        assert_eq!(first.1, first.0 * 10, "torn snapshot: {:?}", *first);
+        assert_eq!(second.1, second.0 * 10, "torn snapshot: {:?}", *second);
+        assert!(
+            second.0 >= first.0,
+            "snapshot went backwards: {} after {}",
+            second.0,
+            first.0
+        );
+        writer.join().expect("writer panicked");
+    });
+}
+
+/// The satellite fix under test: `AdmissionGauge` retires with Release
+/// and loads with Acquire, so a reader that observes depth zero also
+/// observes every write the retiring worker made before `retire()`.
+/// With the original Relaxed orderings this model fails: loom finds the
+/// interleaving where depth reads zero but the payload store has not
+/// yet become visible.
+#[test]
+fn admission_gauge_zero_publishes_the_workers_writes() {
+    loom::model(|| {
+        let gauge = Arc::new(AdmissionGauge::new());
+        let payload = Arc::new(AtomicUsize::new(0));
+        gauge.admit(1);
+        let worker = {
+            let gauge = Arc::clone(&gauge);
+            let payload = Arc::clone(&payload);
+            thread::spawn(move || {
+                // lint:allow(relaxed: the gauge's Release/Acquire edge is
+                // the ordering under test; the payload itself rides it)
+                payload.store(42, Ordering::Relaxed);
+                gauge.retire(1);
+            })
+        };
+        if gauge.load() == 0 {
+            assert_eq!(
+                payload.load(Ordering::Relaxed),
+                42,
+                "gauge hit zero before the worker's write became visible"
+            );
+        }
+        worker.join().expect("worker panicked");
+    });
+}
+
+/// Two workers racing on the queue serve each job exactly once, and the
+/// sender-count shutdown protocol wakes both of them: neither worker
+/// deadlocks in `pop()` after the last sender detaches, whether the
+/// detach lands before, between, or after the pops.
+#[test]
+fn work_queue_serves_every_job_exactly_once() {
+    loom::model(|| {
+        let queue = Arc::new(WorkQueue::new());
+        let served = Arc::new(AtomicUsize::new(0));
+        queue.push(1u32);
+        queue.push(2u32);
+        let workers: Vec<_> = (0..2)
+            .map(|_| {
+                let queue = Arc::clone(&queue);
+                let served = Arc::clone(&served);
+                thread::spawn(move || {
+                    while let Some(_job) = queue.pop() {
+                        let _done = JobGuard::new(&queue);
+                        served.fetch_add(1, Ordering::AcqRel);
+                    }
+                })
+            })
+            .collect();
+        queue.remove_sender();
+        for worker in workers {
+            worker.join().expect("worker panicked");
+        }
+        assert_eq!(served.load(Ordering::Acquire), 2, "lost or duplicated a job");
+    });
+}
+
+/// A single consumer drains jobs in push order, and jobs already queued
+/// survive the last sender detaching — shutdown means "no more work",
+/// never "drop the backlog".
+#[test]
+fn work_queue_is_fifo_and_keeps_the_backlog_through_shutdown() {
+    loom::model(|| {
+        let queue = Arc::new(WorkQueue::new());
+        queue.push(1u32);
+        queue.push(2u32);
+        let consumer = {
+            let queue = Arc::clone(&queue);
+            thread::spawn(move || {
+                let first = queue.pop();
+                queue.job_done();
+                let second = queue.pop();
+                queue.job_done();
+                let third = queue.pop();
+                (first, second, third)
+            })
+        };
+        queue.remove_sender();
+        let order = consumer.join().expect("consumer panicked");
+        assert_eq!(
+            order,
+            (Some(1), Some(2), None),
+            "queue reordered or dropped the backlog"
+        );
+    });
+}
+
+/// `barrier()` returns only after every job enqueued before the call
+/// has been marked done — and the mutex hand-off inside `job_done()`
+/// makes the worker's side effects visible to the thread that was
+/// waiting, in every interleaving.
+#[test]
+fn barrier_waits_for_prior_jobs_and_sees_their_effects() {
+    loom::model(|| {
+        let queue = Arc::new(WorkQueue::new());
+        let effect = Arc::new(AtomicUsize::new(0));
+        queue.push(7u32);
+        let worker = {
+            let queue = Arc::clone(&queue);
+            let effect = Arc::clone(&effect);
+            thread::spawn(move || {
+                if let Some(_job) = queue.pop() {
+                    let _done = JobGuard::new(&queue);
+                    // lint:allow(relaxed: ordered by the queue's own
+                    // mutex hand-off, which is what the model checks)
+                    effect.store(1, Ordering::Relaxed);
+                }
+            })
+        };
+        queue.barrier();
+        assert_eq!(
+            effect.load(Ordering::Relaxed),
+            1,
+            "barrier returned before the in-flight job finished"
+        );
+        queue.remove_sender();
+        worker.join().expect("worker panicked");
+    });
+}

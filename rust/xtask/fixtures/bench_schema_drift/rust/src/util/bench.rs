@@ -1,0 +1,39 @@
+// Fixture: the writer emits a "run" field the reader never looks at.
+
+pub struct Row {
+    pub name: String,
+    pub bench: String,
+    pub run: u64,
+}
+
+pub fn bench_rows_json(rows: &[Row]) -> String {
+    let mut s = String::from("{\n  \"schema\": 2,\n  \"rows\": [\n");
+    for row in rows {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"bench\": \"{}\", \"run\": {}}},\n",
+            row.name, row.bench, row.run
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+pub fn read_bench_rows(text: &str) -> Vec<Row> {
+    let mut out = Vec::new();
+    if !text.contains("rows") {
+        return out;
+    }
+    for line in text.lines() {
+        let name = grab(line, "name");
+        let bench = grab(line, "bench");
+        if !name.is_empty() {
+            out.push(Row { name, bench, run: 1 });
+        }
+    }
+    out
+}
+
+fn grab(line: &str, key: &str) -> String {
+    let _ = (line, key);
+    String::new()
+}

@@ -1,0 +1,28 @@
+// Fixture: to_kv writes `extra`, from_kv has no arm for it.
+
+pub struct DesignConfig {
+    pub m: usize,
+    pub n: usize,
+    pub extra: usize,
+}
+
+impl DesignConfig {
+    pub fn to_kv(&self) -> String {
+        format!("# fixture config\nm = {}\nn = {}\nextra = {}\n", self.m, self.n, self.extra)
+    }
+
+    pub fn from_kv(text: &str) -> Option<DesignConfig> {
+        let mut cfg = DesignConfig { m: 0, n: 0, extra: 0 };
+        for line in text.lines() {
+            let Some((key, value)) = line.split_once('=') else {
+                continue;
+            };
+            match key.trim() {
+                "m" => cfg.m = value.trim().parse().ok()?,
+                "n" => cfg.n = value.trim().parse().ok()?,
+                _ => {}
+            }
+        }
+        Some(cfg)
+    }
+}

@@ -1,0 +1,5 @@
+// Fixture fuzz battery: Pong is missing.
+
+fn sample_requests() {
+    let _ = Request::Ping;
+}

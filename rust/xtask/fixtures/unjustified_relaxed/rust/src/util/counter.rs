@@ -1,0 +1,12 @@
+// Fixture: one bare Relaxed, one justified.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub fn bump(counter: &AtomicUsize) -> usize {
+    counter.fetch_add(1, Ordering::Relaxed)
+}
+
+pub fn bump_justified(counter: &AtomicUsize) -> usize {
+    // lint:allow(relaxed: advisory counter, nothing orders against it)
+    counter.fetch_add(1, Ordering::Relaxed)
+}

@@ -1,0 +1,6 @@
+// Fixture: Busy never gets a wire error code.
+
+pub enum EngineError {
+    Full,
+    Busy,
+}

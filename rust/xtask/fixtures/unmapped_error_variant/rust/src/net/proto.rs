@@ -1,0 +1,17 @@
+// Fixture error-code map: only Full is wired up.
+
+pub const ERR_FULL: u16 = 1;
+
+pub fn engine_error_code(e: &EngineError) -> (u16, u64) {
+    match e {
+        EngineError::Full => (ERR_FULL, 0),
+        _ => (0, 0),
+    }
+}
+
+pub fn engine_error_from_code(code: u16, _aux: u64) -> Option<EngineError> {
+    match code {
+        ERR_FULL => Some(EngineError::Full),
+        _ => None,
+    }
+}

@@ -1,0 +1,957 @@
+//! Cross-file invariant analyzer (`cargo xtask lint`).
+//!
+//! The cscam tree has several contracts that `rustc` cannot see because
+//! they span files: every wire opcode needs an encoder arm, a decoder
+//! arm, a fuzz-battery anchor and a README row; every [`EngineError`]
+//! variant needs a wire error code in both directions; serving-path code
+//! must not panic without a written justification; every
+//! `Ordering::Relaxed` needs a rationale; and the `key = value`
+//! config/manifest codecs plus the bench-row JSON schema must agree
+//! between writer and reader.  This module re-checks all of them from the
+//! source text on every `cargo xtask lint` (and from the crate's own unit
+//! tests, so `cargo test` fails when the live tree drifts).
+//!
+//! Scanning is lexical, not syntactic: [`blank_noncode`] strips comments
+//! and blanks string/char-literal contents so that brace counting and
+//! token searches cannot be fooled by literals, then each check works on
+//! that view (or on the raw text where literal contents are the point,
+//! as in the kv-key checks).
+//!
+//! The escape hatch is a `// lint:allow(reason)` comment on the offending
+//! line or on the contiguous `//` comment block directly above it.  The
+//! reason is mandatory — `lint:allow` without an open parenthesis does
+//! not match.  `Ordering::Relaxed` sites need the more specific
+//! `lint:allow(relaxed: reason)` form.
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// One broken invariant, pointing at the file (and line, when the rule
+/// is line-anchored) that has to change.
+pub struct Violation {
+    pub file: PathBuf,
+    /// 1-based; 0 for whole-file rules.
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.line == 0 {
+            write!(f, "{}: [{}] {}", self.file.display(), self.rule, self.msg)
+        } else {
+            write!(f, "{}:{}: [{}] {}", self.file.display(), self.line, self.rule, self.msg)
+        }
+    }
+}
+
+/// Run every check against the tree rooted at `root` (the directory
+/// holding `rust/`).  Returns the empty vec when all invariants hold.
+pub fn run(root: &Path) -> Vec<Violation> {
+    let mut out = Vec::new();
+    check_opcodes(root, &mut out);
+    check_error_codes(root, &mut out);
+    check_panic_ban(root, &mut out);
+    check_relaxed(root, &mut out);
+    check_kv_keys(root, &mut out);
+    check_bench_schema(root, &mut out);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Source-text plumbing
+
+/// Read a repo-relative file; a missing input is itself a violation (the
+/// invariant can no longer be checked), and the caller skips the check.
+fn read(root: &Path, rel: &str, out: &mut Vec<Violation>) -> Option<String> {
+    match fs::read_to_string(root.join(rel)) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            out.push(Violation {
+                file: PathBuf::from(rel),
+                line: 0,
+                rule: "missing-file",
+                msg: format!("cannot read lint input: {e}"),
+            });
+            None
+        }
+    }
+}
+
+/// A per-line view of Rust source with comments removed and string /
+/// char-literal contents blanked to spaces (the delimiting quotes
+/// survive).  Line count matches `source.split('\n')`.
+fn blank_noncode(source: &str) -> Vec<String> {
+    enum State {
+        Code,
+        Str,
+        RawStr(usize),
+        Chr,
+        LineComment,
+        BlockComment(usize),
+    }
+    let chars: Vec<char> = source.chars().collect();
+    let mut lines = Vec::new();
+    let mut line = String::new();
+    let mut st = State::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(st, State::LineComment) {
+                st = State::Code;
+            }
+            lines.push(std::mem::take(&mut line));
+            i += 1;
+            continue;
+        }
+        match st {
+            State::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    st = State::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = State::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    st = State::Str;
+                    line.push('"');
+                    i += 1;
+                } else if c == 'r' && matches!(next, Some('"') | Some('#')) {
+                    let mut hashes = 0;
+                    let mut j = i + 1;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'"') {
+                        st = State::RawStr(hashes);
+                        line.push('"');
+                        i = j + 1;
+                    } else {
+                        line.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal ('x', '\n', '"') vs lifetime ('a).
+                    let escaped = next == Some('\\');
+                    let closed = next.is_some() && chars.get(i + 2) == Some(&'\'');
+                    if escaped || closed {
+                        st = State::Chr;
+                        line.push('\'');
+                        i += 1;
+                    } else {
+                        line.push(c);
+                        i += 1;
+                    }
+                } else {
+                    line.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    line.push(' ');
+                    // Keep an escaped newline (line continuation) visible
+                    // to the top-of-loop handler so line counts stay true.
+                    if chars.get(i + 1) == Some(&'\n') {
+                        i += 1;
+                    } else {
+                        i += 2;
+                    }
+                } else if c == '"' {
+                    st = State::Code;
+                    line.push('"');
+                    i += 1;
+                } else {
+                    line.push(' ');
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' && (0..hashes).all(|k| chars.get(i + 1 + k) == Some(&'#')) {
+                    st = State::Code;
+                    line.push('"');
+                    i += 1 + hashes;
+                } else {
+                    line.push(' ');
+                    i += 1;
+                }
+            }
+            State::Chr => {
+                if c == '\\' {
+                    line.push(' ');
+                    i += 2;
+                } else if c == '\'' {
+                    st = State::Code;
+                    line.push('\'');
+                    i += 1;
+                } else {
+                    line.push(' ');
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    st = State::BlockComment(depth + 1);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    st = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    lines.push(line);
+    lines
+}
+
+/// String-literal contents of a raw source span, with `\n` / `\t` /
+/// `\"` / `\\` unescaped.  Used where the literal text IS the contract
+/// (kv keys, JSON schema keys).
+fn string_literals(source: &str) -> Vec<String> {
+    let chars: Vec<char> = source.chars().collect();
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if in_str {
+            if c == '\\' {
+                match chars.get(i + 1) {
+                    Some('n') => cur.push('\n'),
+                    Some('t') => cur.push('\t'),
+                    Some(&e) => cur.push(e),
+                    None => {}
+                }
+                i += 2;
+            } else if c == '"' {
+                out.push(std::mem::take(&mut cur));
+                in_str = false;
+                i += 1;
+            } else {
+                cur.push(c);
+                i += 1;
+            }
+        } else if c == '"' {
+            in_str = true;
+            i += 1;
+        } else if c == '/' && chars.get(i + 1) == Some(&'/') {
+            while i < chars.len() && chars[i] != '\n' {
+                i += 1;
+            }
+        } else if c == '\'' {
+            // Skip char literals so '"' cannot open a phantom string.
+            let escaped = chars.get(i + 1) == Some(&'\\');
+            let closed = chars.get(i + 2) == Some(&'\'');
+            if escaped {
+                i += 4;
+            } else if closed {
+                i += 3;
+            } else {
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn is_ident(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+/// Whether `text` contains `token` at an identifier boundary: the match
+/// may not extend an identifier on either side.  Boundary checks only
+/// apply on sides where the token itself starts/ends with an identifier
+/// character, so `.unwrap()` and `::Insert` work as expected.
+fn has_token(text: &str, token: &str) -> bool {
+    token_pos(text, token).is_some()
+}
+
+fn token_pos(text: &str, token: &str) -> Option<usize> {
+    let bytes = text.as_bytes();
+    let tok = token.as_bytes();
+    let check_pre = is_ident(tok[0]);
+    let check_post = is_ident(tok[tok.len() - 1]);
+    let mut from = 0;
+    while let Some(pos) = text[from..].find(token) {
+        let at = from + pos;
+        let end = at + token.len();
+        let pre_ok = !check_pre || at == 0 || !is_ident(bytes[at - 1]);
+        let post_ok = !check_post || end >= bytes.len() || !is_ident(bytes[end]);
+        if pre_ok && post_ok {
+            return Some(at);
+        }
+        from = at + 1;
+    }
+    None
+}
+
+/// Mark every line that belongs to a `#[cfg(test)]`-gated block (the
+/// attribute line itself, through the matching close brace).  Test code
+/// may panic freely; the serving-path rules skip masked lines.
+fn test_region_mask(blanked: &[String]) -> Vec<bool> {
+    let mut mask = vec![false; blanked.len()];
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    let mut floor: Option<i64> = None;
+    for (idx, line) in blanked.iter().enumerate() {
+        if floor.is_some() {
+            mask[idx] = true;
+        }
+        if floor.is_none() && line.contains("#[cfg(") && has_token(line, "test") {
+            pending = true;
+            mask[idx] = true;
+        }
+        for c in line.chars() {
+            if c == '{' {
+                if pending && floor.is_none() {
+                    floor = Some(depth);
+                    pending = false;
+                    mask[idx] = true;
+                }
+                depth += 1;
+            } else if c == '}' {
+                depth -= 1;
+                if floor.is_some_and(|f| depth <= f) {
+                    floor = None;
+                }
+            }
+        }
+    }
+    mask
+}
+
+/// Whether the raw line at `idx`, or the contiguous `//` comment block
+/// directly above it, carries a `marker` comment.
+fn excused(raw: &[&str], idx: usize, marker: &str) -> bool {
+    if raw[idx].contains(marker) {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let t = raw[j].trim_start();
+        if !t.starts_with("//") {
+            return false;
+        }
+        if t.contains(marker) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Inclusive line span (0-based) of the item whose header contains
+/// `marker`, from the marker line through the close of its brace block.
+fn item_span(blanked: &[String], marker: &str) -> Option<(usize, usize)> {
+    let start = blanked.iter().position(|l| l.contains(marker))?;
+    let mut depth: i64 = 0;
+    let mut opened = false;
+    for (idx, line) in blanked.iter().enumerate().skip(start) {
+        for c in line.chars() {
+            if c == '{' {
+                depth += 1;
+                opened = true;
+            } else if c == '}' {
+                depth -= 1;
+            }
+        }
+        if opened && depth <= 0 {
+            return Some((start, idx));
+        }
+    }
+    None
+}
+
+fn span_text(lines: &[&str], span: (usize, usize)) -> String {
+    lines[span.0..=span.1].join("\n")
+}
+
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(rd) = fs::read_dir(dir) else {
+        return;
+    };
+    let mut entries: Vec<PathBuf> = rd.flatten().map(|e| e.path()).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk_rs(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+fn rel_path(root: &Path, p: &Path) -> PathBuf {
+    p.strip_prefix(root).unwrap_or(p).to_path_buf()
+}
+
+// ---------------------------------------------------------------------------
+// Check 1: opcode coverage (encoder, decoder, fuzz battery, README)
+
+const PROTO: &str = "rust/src/net/proto.rs";
+const CODEC_FUZZ: &str = "rust/tests/codec_fuzz.rs";
+const README: &str = "rust/README.md";
+
+/// `OP_LOOKUP_BULK` → `LookupBulk`.
+fn camel(op_name: &str) -> String {
+    let mut out = String::new();
+    for word in op_name.trim_start_matches("OP_").split('_') {
+        let mut cs = word.chars();
+        if let Some(first) = cs.next() {
+            out.push(first);
+            out.push_str(&cs.as_str().to_ascii_lowercase());
+        }
+    }
+    out
+}
+
+/// Parse `pub const <PREFIX>NAME: ty = literal;` declarations, returning
+/// `(full name, literal text, 1-based line)`.
+fn const_decls(blanked: &[String], prefix: &str) -> Vec<(String, String, usize)> {
+    let mut out = Vec::new();
+    for (idx, line) in blanked.iter().enumerate() {
+        let Some(rest) = line.trim_start().strip_prefix("pub const ") else {
+            continue;
+        };
+        if !rest.starts_with(prefix) {
+            continue;
+        }
+        let Some((name, tail)) = rest.split_once(':') else {
+            continue;
+        };
+        let Some((_, value)) = tail.split_once('=') else {
+            continue;
+        };
+        let literal = value.trim().trim_end_matches(';').trim().to_string();
+        out.push((name.trim().to_string(), literal, idx + 1));
+    }
+    out
+}
+
+fn check_opcodes(root: &Path, out: &mut Vec<Violation>) {
+    let Some(proto) = read(root, PROTO, out) else {
+        return;
+    };
+    let Some(fuzz) = read(root, CODEC_FUZZ, out) else {
+        return;
+    };
+    let Some(readme) = read(root, README, out) else {
+        return;
+    };
+    let proto_blanked = blank_noncode(&proto);
+    let fuzz_blanked = blank_noncode(&fuzz).join("\n");
+
+    let ops = const_decls(&proto_blanked, "OP_");
+    if ops.is_empty() {
+        out.push(Violation {
+            file: PathBuf::from(PROTO),
+            line: 0,
+            rule: "opcode-coverage",
+            msg: "no `pub const OP_*` opcode declarations found".into(),
+        });
+        return;
+    }
+    for (name, literal, line) in &ops {
+        // Encoder arm `... => OP_NAME` vs decoder arm `OP_NAME => ...`:
+        // the token's position relative to `=>` tells them apart.
+        let mut encoder = false;
+        let mut decoder = false;
+        for l in &proto_blanked {
+            let Some(arrow) = l.find("=>") else {
+                continue;
+            };
+            if let Some(at) = token_pos(l, name) {
+                if at > arrow {
+                    encoder = true;
+                } else {
+                    decoder = true;
+                }
+            }
+        }
+        if !encoder {
+            out.push(Violation {
+                file: PathBuf::from(PROTO),
+                line: *line,
+                rule: "opcode-encoder",
+                msg: format!("opcode {name} has no encoder match arm (`... => {name}`)"),
+            });
+        }
+        if !decoder {
+            out.push(Violation {
+                file: PathBuf::from(PROTO),
+                line: *line,
+                rule: "opcode-decoder",
+                msg: format!("opcode {name} has no decoder match arm (`{name} => ...`)"),
+            });
+        }
+        let variant = camel(name);
+        if !has_token(&fuzz_blanked, &format!("::{variant}")) {
+            out.push(Violation {
+                file: PathBuf::from(CODEC_FUZZ),
+                line: 0,
+                rule: "opcode-fuzz",
+                msg: format!("fuzz battery never constructs `::{variant}` (opcode {name})"),
+            });
+        }
+        let row = format!("{literal} {variant}");
+        if !has_token(&readme, &row) {
+            out.push(Violation {
+                file: PathBuf::from(README),
+                line: 0,
+                rule: "opcode-readme",
+                msg: format!("wire-op table is missing the `{row}` row (opcode {name})"),
+            });
+        }
+    }
+
+    // Every wire version up to the current one needs a history entry.
+    let version = const_decls(&proto_blanked, "VERSION")
+        .iter()
+        .find(|(name, _, _)| name == "VERSION")
+        .and_then(|(_, literal, _)| literal.parse::<u32>().ok());
+    match version {
+        Some(v) => {
+            for k in 1..=v {
+                let entry = format!("v{k} — ");
+                if !readme.contains(&entry) {
+                    out.push(Violation {
+                        file: PathBuf::from(README),
+                        line: 0,
+                        rule: "wire-version",
+                        msg: format!("version history is missing the `{entry}...` entry"),
+                    });
+                }
+            }
+        }
+        None => out.push(Violation {
+            file: PathBuf::from(PROTO),
+            line: 0,
+            rule: "wire-version",
+            msg: "no parseable `pub const VERSION` declaration".into(),
+        }),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Check 2: every EngineError variant maps to a wire error code, both ways
+
+const ENGINE: &str = "rust/src/coordinator/engine.rs";
+
+fn check_error_codes(root: &Path, out: &mut Vec<Violation>) {
+    let Some(engine) = read(root, ENGINE, out) else {
+        return;
+    };
+    let Some(proto) = read(root, PROTO, out) else {
+        return;
+    };
+    let engine_blanked = blank_noncode(&engine);
+    let proto_blanked = blank_noncode(&proto);
+
+    let Some(enum_span) = item_span(&engine_blanked, "pub enum EngineError") else {
+        out.push(Violation {
+            file: PathBuf::from(ENGINE),
+            line: 0,
+            rule: "error-code-map",
+            msg: "cannot locate `pub enum EngineError`".into(),
+        });
+        return;
+    };
+    // Variants are the capitalized identifiers opening lines at brace
+    // depth 1 inside the enum body.
+    let mut variants: Vec<(String, usize)> = Vec::new();
+    let mut depth: i64 = 0;
+    for idx in enum_span.0..=enum_span.1 {
+        let line = &engine_blanked[idx];
+        let trimmed = line.trim_start();
+        if depth == 1 && trimmed.starts_with(|c: char| c.is_ascii_uppercase()) {
+            let name: String =
+                trimmed.chars().take_while(|c| c.is_ascii_alphanumeric() || *c == '_').collect();
+            variants.push((name, idx + 1));
+        }
+        for c in line.chars() {
+            if c == '{' {
+                depth += 1;
+            } else if c == '}' {
+                depth -= 1;
+            }
+        }
+    }
+    if variants.is_empty() {
+        out.push(Violation {
+            file: PathBuf::from(ENGINE),
+            line: enum_span.0 + 1,
+            rule: "error-code-map",
+            msg: "found no variants in `pub enum EngineError`".into(),
+        });
+        return;
+    }
+
+    let proto_lines: Vec<&str> = proto_blanked.iter().map(String::as_str).collect();
+    for fn_marker in ["fn engine_error_code(", "fn engine_error_from_code("] {
+        let Some(span) = item_span(&proto_blanked, fn_marker) else {
+            out.push(Violation {
+                file: PathBuf::from(PROTO),
+                line: 0,
+                rule: "error-code-map",
+                msg: format!("cannot locate `{fn_marker}`"),
+            });
+            continue;
+        };
+        let body = span_text(&proto_lines, span);
+        for (variant, line) in &variants {
+            if !has_token(&body, &format!("EngineError::{variant}")) {
+                out.push(Violation {
+                    file: PathBuf::from(ENGINE),
+                    line: *line,
+                    rule: "error-code-map",
+                    msg: format!("EngineError::{variant} is not handled by `{fn_marker}`"),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Check 3: no unexcused panics in serving-path modules
+
+const SERVING_DIRS: [&str; 3] = ["rust/src/net", "rust/src/shard", "rust/src/store"];
+const SERVING_FILES: [&str; 1] = ["rust/src/coordinator/server.rs"];
+
+/// `.unwrap()` / `.expect(` calls and panicking macros; asserts are
+/// deliberately allowed (they state invariants, not error handling).
+const BANNED: [&str; 6] =
+    [".unwrap()", ".expect(", "panic!", "unreachable!", "todo!", "unimplemented!"];
+
+fn check_panic_ban(root: &Path, out: &mut Vec<Violation>) {
+    let mut files = Vec::new();
+    for dir in SERVING_DIRS {
+        walk_rs(&root.join(dir), &mut files);
+    }
+    for file in SERVING_FILES {
+        let p = root.join(file);
+        if p.is_file() {
+            files.push(p);
+        }
+    }
+    if files.is_empty() {
+        out.push(Violation {
+            file: PathBuf::from("rust/src"),
+            line: 0,
+            rule: "panic-ban",
+            msg: "no serving-path sources found to scan".into(),
+        });
+        return;
+    }
+    for path in files {
+        let Ok(source) = fs::read_to_string(&path) else {
+            continue;
+        };
+        let blanked = blank_noncode(&source);
+        let raw: Vec<&str> = source.split('\n').collect();
+        let mask = test_region_mask(&blanked);
+        for (idx, line) in blanked.iter().enumerate() {
+            if mask[idx] {
+                continue;
+            }
+            for banned in BANNED {
+                if has_token(line, banned) && !excused(&raw, idx, "lint:allow(") {
+                    out.push(Violation {
+                        file: rel_path(root, &path),
+                        line: idx + 1,
+                        rule: "panic-ban",
+                        msg: format!(
+                            "`{banned}` in a serving path without a \
+                             `// lint:allow(reason)` justification"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Check 4: every Ordering::Relaxed carries a written rationale
+
+fn check_relaxed(root: &Path, out: &mut Vec<Violation>) {
+    let mut files = Vec::new();
+    walk_rs(&root.join("rust/src"), &mut files);
+    for path in files {
+        let Ok(source) = fs::read_to_string(&path) else {
+            continue;
+        };
+        let blanked = blank_noncode(&source);
+        let raw: Vec<&str> = source.split('\n').collect();
+        let mask = test_region_mask(&blanked);
+        for (idx, line) in blanked.iter().enumerate() {
+            if mask[idx] || !has_token(line, "Relaxed") {
+                continue;
+            }
+            if !excused(&raw, idx, "lint:allow(relaxed") {
+                out.push(Violation {
+                    file: rel_path(root, &path),
+                    line: idx + 1,
+                    rule: "relaxed-ordering",
+                    msg: "`Ordering::Relaxed` without a `// lint:allow(relaxed: reason)` \
+                          rationale — justify it or upgrade the ordering"
+                        .into(),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Check 5: config / manifest `key = value` codecs agree writer vs reader
+
+const CONFIG: &str = "rust/src/config/mod.rs";
+const STORE: &str = "rust/src/store/mod.rs";
+
+/// Keys a kv writer emits: `key = ` line heads inside its string literals.
+fn kv_writer_keys(body_raw: &str) -> BTreeSet<String> {
+    let mut keys = BTreeSet::new();
+    for literal in string_literals(body_raw) {
+        for line in literal.split('\n') {
+            let end = line.find(|c: char| !(c.is_ascii_lowercase() || c == '_'));
+            if let Some(end) = end {
+                if end > 0 && line[end..].starts_with(" = ") {
+                    keys.insert(line[..end].to_string());
+                }
+            }
+        }
+    }
+    keys
+}
+
+/// Keys a kv reader accepts: quoted all-lowercase tokens on match-arm
+/// (`=>`) lines inside its body.
+fn kv_reader_keys(body_raw: &str) -> BTreeSet<String> {
+    let mut keys = BTreeSet::new();
+    for line in body_raw.split('\n') {
+        if !line.contains("=>") {
+            continue;
+        }
+        for (i, piece) in line.split('"').enumerate() {
+            if i % 2 == 1
+                && !piece.is_empty()
+                && piece.chars().all(|c| c.is_ascii_lowercase() || c == '_')
+            {
+                keys.insert(piece.to_string());
+            }
+        }
+    }
+    keys
+}
+
+/// Raw text of the item marked by `marker`, located via the blanked view.
+fn raw_item(source: &str, marker: &str) -> Option<String> {
+    let blanked = blank_noncode(source);
+    let span = item_span(&blanked, marker)?;
+    let raw: Vec<&str> = source.split('\n').collect();
+    Some(span_text(&raw, span))
+}
+
+fn kv_fail(out: &mut Vec<Violation>, file: &str, msg: String) {
+    out.push(Violation { file: PathBuf::from(file), line: 0, rule: "kv-keys", msg });
+}
+
+fn check_kv_keys(root: &Path, out: &mut Vec<Violation>) {
+    let Some(config) = read(root, CONFIG, out) else {
+        return;
+    };
+    let (Some(cfg_writer), Some(cfg_reader)) =
+        (raw_item(&config, "pub fn to_kv("), raw_item(&config, "pub fn from_kv("))
+    else {
+        kv_fail(out, CONFIG, "cannot locate `pub fn to_kv` / `pub fn from_kv`".into());
+        return;
+    };
+    let written = kv_writer_keys(&cfg_writer);
+    let accepted = kv_reader_keys(&cfg_reader);
+    if written.is_empty() {
+        kv_fail(out, CONFIG, "config to_kv emits no recognizable `key = ` lines".into());
+    }
+    for key in written.difference(&accepted) {
+        kv_fail(out, CONFIG, format!("to_kv writes `{key}` but from_kv has no arm for it"));
+    }
+    for key in accepted.difference(&written) {
+        kv_fail(out, CONFIG, format!("from_kv accepts `{key}` but to_kv never writes it"));
+    }
+
+    let Some(store) = read(root, STORE, out) else {
+        return;
+    };
+    let (Some(man_writer), Some(man_reader)) =
+        (raw_item(&store, "pub fn to_kv("), raw_item(&store, "pub fn from_kv("))
+    else {
+        kv_fail(out, STORE, "cannot locate the manifest `to_kv` / `from_kv`".into());
+        return;
+    };
+    let man_written = kv_writer_keys(&man_writer);
+    let man_accepted = kv_reader_keys(&man_reader);
+    for key in man_written.difference(&man_accepted) {
+        kv_fail(out, STORE, format!("manifest to_kv writes `{key}` but from_kv has no arm for it"));
+    }
+    // The manifest embeds the config codec wholesale; its reader must
+    // therefore accept every config key, and its writer must delegate.
+    for key in written.difference(&man_accepted) {
+        kv_fail(out, STORE, format!("manifest from_kv does not accept the config key `{key}`"));
+    }
+    if !man_writer.contains(".to_kv()") {
+        kv_fail(out, STORE, "manifest to_kv no longer delegates to the config `.to_kv()`".into());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Check 6: bench-row JSON schema keys agree writer vs reader
+
+const BENCH: &str = "rust/src/util/bench.rs";
+
+fn check_bench_schema(root: &Path, out: &mut Vec<Violation>) {
+    let Some(bench) = read(root, BENCH, out) else {
+        return;
+    };
+    let mut fail = |msg: String| {
+        out.push(Violation { file: PathBuf::from(BENCH), line: 0, rule: "bench-schema", msg });
+    };
+    let (Some(writer), Some(reader)) =
+        (raw_item(&bench, "pub fn bench_rows_json("), raw_item(&bench, "pub fn read_bench_rows("))
+    else {
+        fail("cannot locate `bench_rows_json` / `read_bench_rows`".into());
+        return;
+    };
+    let writer_literals = string_literals(&writer).join("\n");
+    for key in ["schema", "rows", "name", "bench", "run"] {
+        if !writer_literals.contains(&format!("\"{key}\"")) {
+            fail(format!("bench_rows_json no longer emits the `\"{key}\"` field"));
+        }
+    }
+    let reader_literals = string_literals(&reader);
+    for key in ["rows", "name", "bench", "run"] {
+        if !reader_literals.iter().any(|l| l == key) {
+            fail(format!("read_bench_rows never reads the `\"{key}\"` field"));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture(name: &str) -> Vec<Violation> {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(name);
+        assert!(root.is_dir(), "missing fixture tree {}", root.display());
+        run(&root)
+    }
+
+    fn rules(violations: &[Violation]) -> Vec<&'static str> {
+        violations.iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn live_tree_upholds_every_invariant() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+        let violations = run(&root);
+        let report: Vec<String> = violations.iter().map(|v| v.to_string()).collect();
+        assert!(violations.is_empty(), "live tree violations:\n{}", report.join("\n"));
+    }
+
+    #[test]
+    fn rejects_an_opcode_without_a_decoder_arm() {
+        let v = fixture("missing_decoder");
+        assert!(rules(&v).contains(&"opcode-decoder"), "got: {:?}", rules(&v));
+        assert!(!rules(&v).contains(&"opcode-encoder"), "encoder arms are all present");
+    }
+
+    #[test]
+    fn rejects_an_opcode_missing_from_the_fuzz_battery() {
+        let v = fixture("missing_fuzz_entry");
+        assert!(rules(&v).contains(&"opcode-fuzz"), "got: {:?}", rules(&v));
+    }
+
+    #[test]
+    fn rejects_readme_drift_in_op_table_and_version_history() {
+        let v = fixture("missing_readme_row");
+        assert!(rules(&v).contains(&"opcode-readme"), "got: {:?}", rules(&v));
+        assert!(rules(&v).contains(&"wire-version"), "got: {:?}", rules(&v));
+    }
+
+    #[test]
+    fn rejects_an_engine_error_variant_without_a_wire_code() {
+        let v = fixture("unmapped_error_variant");
+        let hits: Vec<&Violation> = v.iter().filter(|x| x.rule == "error-code-map").collect();
+        // Busy is unmapped in both directions; Full is fine.
+        assert_eq!(hits.len(), 2, "got: {:?}", rules(&v));
+        assert!(hits.iter().all(|x| x.msg.contains("Busy")));
+    }
+
+    #[test]
+    fn rejects_naked_panics_but_honors_allow_comments_and_test_code() {
+        let v = fixture("naked_unwrap");
+        let hits: Vec<&Violation> = v.iter().filter(|x| x.rule == "panic-ban").collect();
+        assert_eq!(hits.len(), 1, "exactly the one naked unwrap: {:?}", rules(&v));
+        assert_eq!(hits[0].line, 4, "points at the unwrap inside read_len");
+    }
+
+    #[test]
+    fn rejects_an_unjustified_relaxed_ordering() {
+        let v = fixture("unjustified_relaxed");
+        let hits: Vec<&Violation> = v.iter().filter(|x| x.rule == "relaxed-ordering").collect();
+        assert_eq!(hits.len(), 1, "exactly the one bare Relaxed: {:?}", rules(&v));
+    }
+
+    #[test]
+    fn rejects_kv_key_drift_between_writer_and_reader() {
+        let v = fixture("kv_key_drift");
+        let hits: Vec<&Violation> = v.iter().filter(|x| x.rule == "kv-keys").collect();
+        assert!(hits.iter().any(|x| x.msg.contains("`extra`")), "got: {:?}", rules(&v));
+    }
+
+    #[test]
+    fn rejects_bench_schema_drift() {
+        let v = fixture("bench_schema_drift");
+        let hits: Vec<&Violation> = v.iter().filter(|x| x.rule == "bench-schema").collect();
+        assert!(hits.iter().any(|x| x.msg.contains("run")), "got: {:?}", rules(&v));
+    }
+
+    #[test]
+    fn lexer_blanks_strings_comments_and_char_literals() {
+        let src = "let a = \"} panic! {\"; // panic! here\nlet b = '}';\nlet c = 1;";
+        let lines = blank_noncode(src);
+        assert_eq!(lines.len(), 3);
+        assert!(!lines[0].contains("panic!"));
+        assert!(!lines[0].contains('}'));
+        assert!(!lines[1].contains('}'));
+        assert_eq!(lines[2], "let c = 1;");
+    }
+
+    #[test]
+    fn token_boundaries_reject_partial_identifier_matches() {
+        assert!(has_token("OP_LOOKUP => x", "OP_LOOKUP"));
+        assert!(!has_token("OP_LOOKUP_BULK => x", "OP_LOOKUP"));
+        assert!(has_token("a.unwrap()", ".unwrap()"));
+        assert!(!has_token("a.unwrap_or(0)", ".unwrap()"));
+        assert!(has_token("fuzz(Request::Insert)", "::Insert"));
+        assert!(!has_token("fuzz(Response::Inserted)", "::Insert"));
+    }
+}

@@ -1,0 +1,61 @@
+//! cscam maintenance tasks, invoked as `cargo xtask <command>`.
+//!
+//! `lint` is the only command today: it runs the cross-file invariant
+//! analyzer over the working tree and exits non-zero if any invariant
+//! is broken.  See [`lint`] for what is checked and for the
+//! `// lint:allow(reason)` escape hatch.
+
+mod lint;
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => run_lint(&args[1..]),
+        _ => {
+            eprintln!("usage: cargo xtask lint [--root <dir>]");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run_lint(args: &[String]) -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--root" => match it.next() {
+                Some(dir) => root = PathBuf::from(dir),
+                None => {
+                    eprintln!("xtask lint: --root needs a directory");
+                    return ExitCode::from(2);
+                }
+            },
+            other => {
+                eprintln!("xtask lint: unknown argument `{other}`");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    if !root.join("rust/src").is_dir() {
+        eprintln!(
+            "xtask lint: `{}` does not look like the repo root (no rust/src); \
+             run from the workspace root or pass --root",
+            root.display()
+        );
+        return ExitCode::from(2);
+    }
+    let violations = lint::run(&root);
+    for v in &violations {
+        eprintln!("{v}");
+    }
+    if violations.is_empty() {
+        eprintln!("xtask lint: all cross-file invariants hold");
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("xtask lint: {} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}
