@@ -34,6 +34,7 @@ fn run_net(shards: usize, lookups: usize) -> anyhow::Result<BenchRecord> {
         chunk: 256,
         hit_ratio: 0.9,
         population: cfg.m * 7 / 10,
+        rate: 0.0,
         seed: 1,
     };
     let report = driver.run().map_err(|e| anyhow::anyhow!("loadgen: {e}"))?;

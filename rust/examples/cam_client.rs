@@ -97,6 +97,26 @@ fn main() -> anyhow::Result<()> {
     );
     println!("per-bank lookups: {:?}", stats.per_bank_lookups);
 
+    // The same metrics as a Prometheus-text exposition, fetched in-band
+    // over the wire (`OP_METRICS`) — what the `serve --metrics-addr` HTTP
+    // sidecar serves on GET /metrics.
+    let exposition = client.metrics().map_err(|e| anyhow::anyhow!("metrics: {e}"))?;
+    let shown: Vec<&str> = exposition
+        .lines()
+        .filter(|l| {
+            !l.starts_with('#')
+                && (l.starts_with("cscam_lookups_total")
+                    || l.starts_with("cscam_hit_ratio")
+                    || l.starts_with("cscam_hot_fraction")
+                    || l.starts_with("cscam_shed_total"))
+        })
+        .collect();
+    println!(
+        "\nprometheus exposition: {} lines; headline series:\n  {}",
+        exposition.lines().count(),
+        shown.join("\n  ")
+    );
+
     // Clean shutdown (drains the banks) when we own the server.
     if let Some(server) = local_server {
         client.shutdown().map_err(|e| anyhow::anyhow!("shutdown: {e}"))?;

@@ -24,6 +24,21 @@ pub struct Metrics {
     pub host_latency_ns: Histogram,
     /// Decode batch sizes seen.
     pub batch_size: OnlineStats,
+    /// Lookups shed at the admission queue (`EngineError::Busy`) —
+    /// transient overload, the client should retry.
+    pub shed_busy: u64,
+    /// Inserts refused for want of a free CAM slot (`EngineError::Full`).
+    pub shed_full: u64,
+    /// WAL appends recorded by this bank's store (0 when volatile).
+    pub wal_appends: u64,
+    /// Total WAL bytes appended.
+    pub wal_appended_bytes: u64,
+    /// WAL fsyncs issued (policy-driven `sync_data` calls).
+    pub wal_fsyncs: u64,
+    /// WAL append (`write(2)`) latency in nanoseconds.
+    pub wal_append_ns: Histogram,
+    /// WAL fsync latency in nanoseconds.
+    pub wal_fsync_ns: Histogram,
 }
 
 impl Default for Metrics {
@@ -45,8 +60,15 @@ impl Metrics {
             energy_fj: OnlineStats::new(),
             lambda: OnlineStats::new(),
             enabled_blocks: OnlineStats::new(),
-            host_latency_ns: Histogram::exponential(1 << 30),
+            host_latency_ns: Histogram::log_linear(1 << 30),
             batch_size: OnlineStats::new(),
+            shed_busy: 0,
+            shed_full: 0,
+            wal_appends: 0,
+            wal_appended_bytes: 0,
+            wal_fsyncs: 0,
+            wal_append_ns: Histogram::log_linear(1 << 30),
+            wal_fsync_ns: Histogram::log_linear(1 << 30),
         }
     }
 
@@ -83,8 +105,22 @@ impl Metrics {
     }
 
     /// fJ/bit/search given the array geometry — Table II's metric.
+    /// 0.0 (not NaN) on an empty metrics object, so summaries and bench
+    /// rows serialized before any lookup stay finite.
     pub fn energy_per_bit(&self, m: usize, n: usize) -> f64 {
-        self.energy_fj.mean() / (m as f64 * n as f64)
+        self.energy_fj.mean_or(0.0) / (m as f64 * n as f64)
+    }
+
+    /// Snapshot a store's cumulative WAL statistics into this metrics
+    /// object (overwrite, not add: the [`crate::store::WalStats`] totals
+    /// are already cumulative for the bank; cross-bank aggregation
+    /// happens in [`Self::merge`]).
+    pub fn absorb_wal(&mut self, w: &crate::store::WalStats) {
+        self.wal_appends = w.appends;
+        self.wal_appended_bytes = w.appended_bytes;
+        self.wal_fsyncs = w.fsyncs;
+        self.wal_append_ns = w.append_ns.clone();
+        self.wal_fsync_ns = w.fsync_ns.clone();
     }
 
     /// Merge a peer's metrics (shard aggregation).
@@ -101,6 +137,13 @@ impl Metrics {
         self.enabled_blocks.merge(&other.enabled_blocks);
         self.batch_size.merge(&other.batch_size);
         self.host_latency_ns.merge(&other.host_latency_ns);
+        self.shed_busy += other.shed_busy;
+        self.shed_full += other.shed_full;
+        self.wal_appends += other.wal_appends;
+        self.wal_appended_bytes += other.wal_appended_bytes;
+        self.wal_fsyncs += other.wal_fsyncs;
+        self.wal_append_ns.merge(&other.wal_append_ns);
+        self.wal_fsync_ns.merge(&other.wal_fsync_ns);
     }
 
     /// One-line human summary.
@@ -111,8 +154,8 @@ impl Metrics {
             self.hits,
             100.0 * self.hit_ratio(),
             self.energy_per_bit(m, n),
-            self.lambda.mean(),
-            self.enabled_blocks.mean(),
+            self.lambda.mean_or(0.0),
+            self.enabled_blocks.mean_or(0.0),
             self.host_latency_ns.quantile(0.5),
             self.host_latency_ns.quantile(0.99),
         )
@@ -160,6 +203,40 @@ mod tests {
         assert_eq!(a.lookups, 2);
         assert_eq!(a.batches, 1);
         assert!((a.energy_fj.mean() - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_metrics_stay_finite() {
+        // regression: OnlineStats::mean() is NaN at n=0, which used to
+        // leak through energy_per_bit and the summary line
+        let m = Metrics::new();
+        assert_eq!(m.energy_per_bit(512, 128), 0.0);
+        assert_eq!(m.hit_ratio(), 0.0);
+        let s = m.summary(512, 128);
+        assert!(!s.contains("NaN"), "empty-metrics summary carries NaN: {s}");
+    }
+
+    #[test]
+    fn merge_adds_shed_and_wal_counters() {
+        let mut a = Metrics::new();
+        a.shed_busy = 2;
+        a.wal_appends = 5;
+        a.wal_append_ns.record(700);
+        let mut b = Metrics::new();
+        b.shed_busy = 1;
+        b.shed_full = 4;
+        b.wal_appends = 3;
+        b.wal_appended_bytes = 96;
+        b.wal_fsyncs = 1;
+        b.wal_fsync_ns.record(90_000);
+        a.merge(&b);
+        assert_eq!(a.shed_busy, 3);
+        assert_eq!(a.shed_full, 4);
+        assert_eq!(a.wal_appends, 8);
+        assert_eq!(a.wal_appended_bytes, 96);
+        assert_eq!(a.wal_fsyncs, 1);
+        assert_eq!(a.wal_append_ns.total(), 1);
+        assert_eq!(a.wal_fsync_ns.total(), 1);
     }
 
     #[test]

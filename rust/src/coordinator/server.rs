@@ -410,6 +410,7 @@ impl ServerHandle {
     /// slot.
     pub fn try_lookup(&self, tag: BitVec) -> Result<LookupOutcome, EngineError> {
         if self.is_saturated() {
+            self.bank_metrics.with(|m| m.shed_busy += 1);
             return Err(EngineError::Busy);
         }
         self.lookup(tag)
@@ -858,7 +859,12 @@ impl CamServer {
                             addr
                         })
                     }
-                    Err(e) => Err(e),
+                    Err(e) => {
+                        if e == EngineError::Full {
+                            self.metrics.shed_full += 1;
+                        }
+                        Err(e)
+                    }
                 };
                 // publish after the log verdict (a rolled-back insert
                 // publishes the rollback), before the ack
@@ -887,7 +893,11 @@ impl CamServer {
                 let _ = resp.send(results);
             }
             Request::Metrics { resp } => {
-                let _ = resp.send(Box::new(self.metrics.clone()));
+                let mut m = self.metrics.clone();
+                if let Some(store) = self.store.as_ref() {
+                    m.absorb_wal(store.wal_stats());
+                }
+                let _ = resp.send(Box::new(m));
             }
             Request::Drain { resp } => {
                 let _ = resp.send(());
@@ -1272,6 +1282,28 @@ mod tests {
         assert_eq!(h.lookup(tags[0].clone()).unwrap().addr, Some(0));
         let m = h.metrics().unwrap();
         assert_eq!(m.lookups, 1, "shed requests never reach a serving thread");
+        assert_eq!(m.shed_busy, 1, "the shed itself is metered");
+        assert_eq!(m.shed_full, 0);
+    }
+
+    #[test]
+    fn full_cam_inserts_count_as_full_sheds() {
+        let cfg = DesignConfig::small_test();
+        let capacity = cfg.m;
+        let server = CamServer::new(cfg, DecodeBackend::Native, policy());
+        let h = server.spawn();
+        let mut rng = Rng::seed_from_u64(26);
+        let tags = TagDistribution::Uniform.sample_distinct(32, capacity + 2, &mut rng);
+        let mut fulls = 0;
+        for t in &tags {
+            if h.insert(t.clone()) == Err(EngineError::Full) {
+                fulls += 1;
+            }
+        }
+        assert_eq!(fulls, 2, "the CAM holds exactly M entries");
+        let m = h.metrics().unwrap();
+        assert_eq!(m.shed_full, 2);
+        assert_eq!(m.shed_busy, 0);
     }
 
     #[test]

@@ -47,6 +47,9 @@
 //! - [`store`] — the L6 durability layer: per-bank snapshot + write-ahead
 //!   log with crash recovery, compaction and a fleet manifest, so a
 //!   restarted fleet comes back bit-identical (`serve --data-dir`).
+//! - [`obs`] — the L7 observability layer: Prometheus-text exposition of
+//!   the serving metrics (wire op `OP_METRICS` and a plain-HTTP
+//!   `GET /metrics` sidecar, `serve --metrics-addr`).
 
 pub mod baselines;
 pub mod bits;
@@ -56,6 +59,7 @@ pub mod config;
 pub mod coordinator;
 pub mod energy;
 pub mod net;
+pub mod obs;
 pub mod runtime;
 pub mod shard;
 pub mod stats;

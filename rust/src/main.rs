@@ -56,11 +56,17 @@ COMMANDS:
            a restart recovers every acknowledged write bit-identically)
            --fsync never|always|N (N = fsync every N appends; default never)
            --compact-bytes N (snapshot + truncate past N WAL bytes)
+          observability:        --metrics-addr ADDR (HTTP sidecar answering
+           GET /metrics with the Prometheus-text exposition; port 0 picks
+           an ephemeral port, printed at startup and appended as a second
+           line to --port-file)
   loadgen drive a listening server over the wire protocol
                                 --connect ADDR --lookups N --threads T
                                 --chunk C --hit-ratio R --population P
-                                --seed S --json PATH --shutdown
+                                --rate Q --seed S --json PATH --shutdown
           (--json appends a 'net'-tagged row to the bench trajectory;
+           --rate Q paces arrivals open-loop at Q lookups/s, measuring
+           latency from each frame's intended start — 0 = closed-loop;
            --shutdown stops the server after the run)
   info    print the design point and all model predictions
 ";
@@ -485,6 +491,7 @@ fn serve_listen(cfg: &DesignConfig, args: &Args) -> Result<()> {
     };
 
     let policy = BatchPolicy { max_batch, ..Default::default() };
+    let mut recovered = None;
     let fleet = match data_dir {
         Some(dir) => {
             let dir = std::path::Path::new(dir);
@@ -492,6 +499,7 @@ fn serve_listen(cfg: &DesignConfig, args: &Args) -> Result<()> {
                 ShardedCamServer::open_durable(&fleet_cfg, mode, policy, dir, store_opts)
                     .map_err(|e| anyhow::anyhow!("opening --data-dir {}: {e}", dir.display()))?;
             println!("# data-dir {}: {}", dir.display(), recovery.summary());
+            recovered = Some(recovery);
             server.with_readers(readers).spawn()
         }
         None => ShardedCamServer::new(&fleet_cfg, mode, policy).with_readers(readers).spawn(),
@@ -509,11 +517,44 @@ fn serve_listen(cfg: &DesignConfig, args: &Args) -> Result<()> {
         fleet_cfg.per_bank().m,
         fleet_cfg.n
     );
+    // Prometheus scrape sidecar: a second listener serving the same
+    // exposition `OP_METRICS` returns in-band (see `cscam::obs`).
+    let metrics_http = match args.get("metrics-addr") {
+        Some(maddr) => {
+            let scrape_fleet = fleet.clone();
+            let bank_m = fleet_cfg.per_bank().m;
+            let tag_bits = fleet_cfg.n;
+            let render: cscam::obs::RenderFn = std::sync::Arc::new(move || {
+                match scrape_fleet.fleet_metrics() {
+                    Some(fm) => cscam::obs::render_prometheus(
+                        &fm,
+                        bank_m,
+                        tag_bits,
+                        recovered.as_ref(),
+                    ),
+                    // fleet already shutting down: an empty exposition
+                    None => String::new(),
+                }
+            });
+            let sidecar = cscam::obs::MetricsHttpServer::spawn(maddr, render)
+                .map_err(|e| anyhow::anyhow!("binding --metrics-addr {maddr}: {e}"))?;
+            println!("# metrics on http://{}/metrics", sidecar.local_addr());
+            Some(sidecar)
+        }
+        None => None,
+    };
     if let Some(path) = args.get("port-file") {
-        std::fs::write(path, addr.to_string())?;
+        match metrics_http.as_ref() {
+            // second line so smoke scripts can find the scrape port too
+            Some(s) => std::fs::write(path, format!("{addr}\n{}", s.local_addr()))?,
+            None => std::fs::write(path, addr.to_string())?,
+        }
         println!("# wrote address to {path}");
     }
     handle.join();
+    if let Some(sidecar) = metrics_http {
+        sidecar.shutdown();
+    }
 
     if let Some(fm) = fleet.fleet_metrics() {
         println!("# shut down after draining:");
@@ -538,6 +579,7 @@ fn loadgen(args: &Args) -> Result<()> {
         chunk: args.get_parse("chunk", 64)?,
         hit_ratio: args.get_parse("hit-ratio", 0.9)?,
         population: args.get_parse("population", 256)?,
+        rate: args.get_parse("rate", 0.0)?,
         seed: args.get_parse("seed", 7)?,
     };
     let report = driver.run().map_err(|e| anyhow::anyhow!("loadgen failed: {e}"))?;

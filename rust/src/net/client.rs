@@ -11,7 +11,7 @@
 //! (one flush for the burst), and responses are matched back up by request
 //! id — the wire analogue of the in-process deferred scatter.
 //!
-//! Idempotent calls (`lookup`, `lookup_bulk`, `stats`, `drain`)
+//! Idempotent calls (`lookup`, `lookup_bulk`, `stats`, `metrics`, `drain`)
 //! transparently **reconnect and retry once** when the transport drops;
 //! mutations (`insert`, `delete`) and `shutdown` never auto-retry, because
 //! replaying them could double-apply.
@@ -304,6 +304,16 @@ impl CamClient {
     pub fn stats(&mut self) -> Result<StatsReport, WireError> {
         match self.call_idempotent(&Request::Stats)? {
             Response::Stats(s) => Ok(*s),
+            other => unexpected(other),
+        }
+    }
+
+    /// Fetch the fleet's Prometheus-text metrics exposition in-band — the
+    /// same document the `--metrics-addr` HTTP sidecar serves on
+    /// `GET /metrics` (see [`crate::obs`]).  Idempotent, auto-retried.
+    pub fn metrics(&mut self) -> Result<String, WireError> {
+        match self.call_idempotent(&Request::Metrics)? {
+            Response::Metrics { text } => Ok(text),
             other => unexpected(other),
         }
     }

@@ -3,20 +3,40 @@
 //! Reuses the [`crate::workload`] streams: a setup client inserts a
 //! uniform tag population, then `threads` clients (one connection each)
 //! fire [`QueryMix`]-drawn lookups in pipelined bulk frames and record the
-//! round-trip of every frame.  The report carries throughput and p50/p99
-//! frame latency plus the paper's metrics (mean λ, mean energy) read off
-//! the wire outcomes, and converts to a [`BenchRecord`] so the run lands
-//! in the same `BENCH_*.json` trajectory schema as the in-process bench
-//! ([`crate::util::bench::write_bench_json`] with the `net` tag).
+//! round-trip of every frame into a log-linear
+//! [`Histogram`](crate::stats::Histogram) (≤ one sub-bucket of quantile
+//! error, no per-frame allocation).  The report carries throughput and
+//! p50/p99 frame latency plus the paper's metrics (mean λ, mean energy)
+//! read off the wire outcomes, and converts to a [`BenchRecord`] so the
+//! run lands in the same `BENCH_*.json` trajectory schema as the
+//! in-process bench ([`crate::util::bench::write_bench_json`] with the
+//! `net` tag).
+//!
+//! Two pacing modes:
+//!
+//! * **Closed-loop** (`rate == 0`, the default): every thread fires its
+//!   next frame the moment the previous one is answered.  Throughput
+//!   measures the *capacity* of the stack, but latency hides queueing —
+//!   a slow response delays the next arrival (coordinated omission).
+//! * **Open-loop** (`rate > 0` lookups/s across all threads): each frame
+//!   has an *intended start* on a fixed arrival schedule; threads sleep
+//!   until that instant and measure latency from the intended start, so a
+//!   stalled server accrues queue delay in the histogram instead of
+//!   silently thinning the arrival stream.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::bits::BitVec;
 use crate::net::client::CamClient;
 use crate::net::proto::WireError;
+use crate::stats::Histogram;
 use crate::util::bench::BenchRecord;
 use crate::util::Rng;
 use crate::workload::{QueryMix, TagDistribution};
+
+/// Upper bound of the latency histogram: ~1.07 s in nanoseconds; frames
+/// slower than this all land in the saturating top bucket.
+const LATENCY_CEILING_NS: u64 = 1 << 30;
 
 /// Load-generator parameters.
 #[derive(Debug, Clone)]
@@ -33,6 +53,9 @@ pub struct LoadGen {
     pub hit_ratio: f64,
     /// Tags inserted before the run (capped by fleet capacity).
     pub population: usize,
+    /// Open-loop arrival rate in lookups/s summed over all threads;
+    /// `0.0` selects closed-loop pacing.
+    pub rate: f64,
     pub seed: u64,
 }
 
@@ -45,6 +68,7 @@ impl Default for LoadGen {
             chunk: 64,
             hit_ratio: 0.9,
             population: 256,
+            rate: 0.0,
             seed: 7,
         }
     }
@@ -61,8 +85,9 @@ pub struct LoadReport {
     pub errors: usize,
     pub wall_s: f64,
     pub throughput_lps: f64,
-    /// Frame round-trip quantiles in nanoseconds (a frame carries up to
-    /// `chunk` lookups).
+    /// Frame latency quantiles in nanoseconds (a frame carries up to
+    /// `chunk` lookups).  Closed-loop: send→answer round-trip.  Open-loop:
+    /// intended-start→answer, so schedule slip counts as latency.
     pub p50_ns: u64,
     pub p99_ns: u64,
     pub mean_lambda: f64,
@@ -71,6 +96,10 @@ pub struct LoadReport {
     pub chunk: usize,
     /// Shard count the server announced at handshake.
     pub shards: u32,
+    /// `true` when frames were paced on a fixed arrival schedule.
+    pub open_loop: bool,
+    /// Offered arrival rate in lookups/s (`0.0` on closed-loop runs).
+    pub rate: f64,
 }
 
 impl LoadReport {
@@ -85,8 +114,13 @@ impl LoadReport {
 
     /// One-line human summary.
     pub fn summary(&self) -> String {
+        let pacing = if self.open_loop {
+            format!("open-loop @ {:.0}/s", self.rate)
+        } else {
+            "closed-loop".into()
+        };
         format!(
-            "{} lookups in {:.3} s — {:.0} lookups/s, hits {:.1} %, λ̄ {:.3}, \
+            "{} lookups in {:.3} s — {:.0} lookups/s {pacing}, hits {:.1} %, λ̄ {:.3}, \
              Ē {:.1} fJ, frame p50 {} ns p99 {} ns ({} threads × bulk {}, {} errors)",
             self.lookups,
             self.wall_s,
@@ -103,10 +137,13 @@ impl LoadReport {
     }
 
     /// The trajectory row for `write_bench_json(path, "net", …)`.
+    /// Open-loop rows get their own name suffix so regression gating never
+    /// compares an offered-rate run against a capacity run.
     pub fn to_record(&self) -> BenchRecord {
+        let pacing = if self.open_loop { "/open" } else { "" };
         let mut rec = BenchRecord::new(format!(
-            "net/shards={}/threads={}/bulk{}",
-            self.shards, self.threads, self.chunk
+            "net/shards={}/threads={}/bulk{}{}",
+            self.shards, self.threads, self.chunk, pacing
         ));
         rec.push("shards", self.shards as f64);
         rec.push("threads", self.threads as f64);
@@ -119,19 +156,33 @@ impl LoadReport {
         rec.push("mean_lambda", self.mean_lambda);
         rec.push("mean_energy_fj", self.mean_energy_fj);
         rec.push("errors", self.errors as f64);
+        rec.push("open_loop", if self.open_loop { 1.0 } else { 0.0 });
+        rec.push("rate", self.rate);
         rec
     }
 }
 
 /// Per-thread tallies merged into the report.
-#[derive(Default)]
 struct Tally {
     lookups: usize,
     hits: usize,
     errors: usize,
     lambda_sum: u64,
     energy_sum_fj: f64,
-    latencies_ns: Vec<u64>,
+    latency_ns: Histogram,
+}
+
+impl Tally {
+    fn new() -> Tally {
+        Tally {
+            lookups: 0,
+            hits: 0,
+            errors: 0,
+            lambda_sum: 0,
+            energy_sum_fj: 0.0,
+            latency_ns: Histogram::log_linear(LATENCY_CEILING_NS),
+        }
+    }
 }
 
 impl LoadGen {
@@ -164,6 +215,14 @@ impl LoadGen {
         for i in 0..self.lookups {
             streams[i % threads].push(mix.sample(&stored, n, &mut rng).0);
         }
+        // Open-loop: the fleet-wide arrival rate splits evenly over the
+        // threads; each lookup advances a thread's schedule by this much.
+        let open_loop = self.rate > 0.0;
+        let ns_per_lookup = if open_loop {
+            (1e9 * threads as f64 / self.rate).round().max(1.0) as u64
+        } else {
+            0
+        };
 
         let t0 = Instant::now();
         let mut joins = Vec::new();
@@ -172,11 +231,28 @@ impl LoadGen {
             let chunk = self.chunk.max(1);
             joins.push(std::thread::spawn(move || -> Result<Tally, WireError> {
                 let mut client = CamClient::connect(addr)?;
-                let mut t = Tally::default();
+                let mut t = Tally::new();
+                // Lookups this thread has already scheduled; the next
+                // frame's intended start is `sent * ns_per_lookup` after t0.
+                let mut sent: u64 = 0;
                 for frame in stream.chunks(chunk) {
-                    let f0 = Instant::now();
+                    let started = if open_loop {
+                        let intended =
+                            Duration::from_nanos(sent.saturating_mul(ns_per_lookup));
+                        let now = t0.elapsed();
+                        if now < intended {
+                            std::thread::sleep(intended - now);
+                        }
+                        sent += frame.len() as u64;
+                        intended
+                    } else {
+                        t0.elapsed()
+                    };
                     let results = client.lookup_bulk(frame, chunk)?;
-                    t.latencies_ns.push(f0.elapsed().as_nanos() as u64);
+                    // Open-loop latency runs from the *intended* start, so
+                    // time a late frame spent queued behind schedule counts.
+                    let lat = t0.elapsed().saturating_sub(started);
+                    t.latency_ns.record(lat.as_nanos() as u64);
                     for r in results {
                         match r {
                             Ok(o) => {
@@ -192,7 +268,7 @@ impl LoadGen {
                 Ok(t)
             }));
         }
-        let mut total = Tally::default();
+        let mut total = Tally::new();
         for j in joins {
             let t = j.join().map_err(|_| {
                 WireError::Protocol("load-generator thread panicked".into())
@@ -202,18 +278,10 @@ impl LoadGen {
             total.errors += t.errors;
             total.lambda_sum += t.lambda_sum;
             total.energy_sum_fj += t.energy_sum_fj;
-            total.latencies_ns.extend(t.latencies_ns);
+            total.latency_ns.merge(&t.latency_ns);
         }
         let wall_s = t0.elapsed().as_secs_f64();
 
-        total.latencies_ns.sort_unstable();
-        let quantile = |q: f64| -> u64 {
-            if total.latencies_ns.is_empty() {
-                return 0;
-            }
-            let idx = (q * (total.latencies_ns.len() - 1) as f64).round() as usize;
-            total.latencies_ns[idx]
-        };
         let served = total.lookups + total.errors;
         Ok(LoadReport {
             lookups: total.lookups,
@@ -221,8 +289,8 @@ impl LoadGen {
             errors: total.errors,
             wall_s,
             throughput_lps: if wall_s > 0.0 { served as f64 / wall_s } else { 0.0 },
-            p50_ns: quantile(0.5),
-            p99_ns: quantile(0.99),
+            p50_ns: total.latency_ns.quantile(0.5),
+            p99_ns: total.latency_ns.quantile(0.99),
             mean_lambda: if total.lookups > 0 {
                 total.lambda_sum as f64 / total.lookups as f64
             } else {
@@ -236,6 +304,8 @@ impl LoadGen {
             threads,
             chunk: self.chunk.max(1),
             shards: hello.shards,
+            open_loop,
+            rate: self.rate,
         })
     }
 }

@@ -13,7 +13,9 @@
 //!   [`crate::coordinator::EngineError::Busy`] (queue-shed admission)
 //!   from `Full` (no free CAM slot) — and the v2 durability ops
 //!   `Snapshot`/`Flush` let an operator compact or fsync the fleet's
-//!   stores ([`crate::store`]) over the wire.
+//!   stores ([`crate::store`]) over the wire.  v4 adds `Metrics`, which
+//!   returns the fleet's Prometheus-text exposition ([`crate::obs`])
+//!   in-band, so a client can scrape without a second listener.
 //! * [`server`] — [`CamTcpServer`]: thread-per-connection serving over a
 //!   [`crate::shard::ShardedServerHandle`]; lookups execute *on the
 //!   connection thread* against the banks' published search snapshots
@@ -24,7 +26,9 @@
 //! * [`client`] — [`CamClient`]: blocking client with handshake,
 //!   reconnect, and pipelined `lookup_bulk`.
 //! * [`loadgen`] — [`LoadGen`]: multi-threaded QPS/latency runner over
-//!   [`crate::workload`] streams, reporting into the
+//!   [`crate::workload`] streams — closed-loop (fire on answer) or
+//!   open-loop (fixed arrival rate, latency measured from each frame's
+//!   intended start so queue delay is never hidden) — reporting into the
 //!   [`crate::util::bench`] trajectory schema.
 //!
 //! Entry points: `cscam serve --listen <addr>` starts a server,

@@ -49,9 +49,11 @@ pub const MAGIC: [u8; 4] = *b"CSCM";
 /// durability ops `Snapshot`/`Flush` and the `ERR_PERSIST` error code;
 /// v3 — added `ERR_BUSY` (6), splitting queue-shed admission
 /// ([`EngineError::Busy`]) from `ERR_FULL`, which now strictly means "no
-/// free CAM slot".  Both sides hang up on a version mismatch (strict
-/// equality), so a mixed deployment must upgrade in lock-step.
-pub const VERSION: u16 = 3;
+/// free CAM slot"; v4 — added `OP_METRICS` (10), returning the
+/// Prometheus-text exposition of the fleet's serving metrics in-band
+/// (see [`crate::obs`]).  Both sides hang up on a version mismatch
+/// (strict equality), so a mixed deployment must upgrade in lock-step.
+pub const VERSION: u16 = 4;
 
 /// Upper bound on one frame (64 MiB) — rejects garbage lengths before any
 /// allocation.
@@ -83,6 +85,8 @@ pub const OP_SHUTDOWN: u8 = 7;
 pub const OP_SNAPSHOT: u8 = 8;
 /// Fsync every bank's WAL (v2; no-op ack without `--data-dir`).
 pub const OP_FLUSH: u8 = 9;
+/// Fetch the Prometheus-text metrics exposition (v4; see [`crate::obs`]).
+pub const OP_METRICS: u8 = 10;
 pub const OP_ERROR: u8 = 0xEE;
 
 // Typed error codes.
@@ -188,6 +192,8 @@ pub enum Request {
     Snapshot,
     /// Fsync every bank's WAL (v2).
     Flush,
+    /// Fetch the Prometheus-text metrics exposition (v4).
+    Metrics,
 }
 
 /// Fleet statistics snapshot shipped for [`Request::Stats`].
@@ -227,6 +233,9 @@ pub enum Response {
     /// Every bank's WAL is synced to disk (v2; no-op ack without
     /// persistence).
     Flushed,
+    /// The Prometheus-text exposition page (v4) — the same text `GET
+    /// /metrics` serves on the HTTP sidecar, shipped in-band as UTF-8.
+    Metrics { text: String },
     /// Whole-request failure (see the `ERR_*` codes).
     Error { code: u16, aux: u64 },
 }
@@ -419,6 +428,7 @@ impl Request {
             Request::Shutdown => OP_SHUTDOWN,
             Request::Snapshot => OP_SNAPSHOT,
             Request::Flush => OP_FLUSH,
+            Request::Metrics => OP_METRICS,
         }
     }
 
@@ -436,7 +446,8 @@ impl Request {
             | Request::Drain
             | Request::Shutdown
             | Request::Snapshot
-            | Request::Flush => {}
+            | Request::Flush
+            | Request::Metrics => {}
         }
     }
 
@@ -471,6 +482,7 @@ impl Request {
             OP_SHUTDOWN => Request::Shutdown,
             OP_SNAPSHOT => Request::Snapshot,
             OP_FLUSH => Request::Flush,
+            OP_METRICS => Request::Metrics,
             other => return Err(WireError::Protocol(format!("unknown request op {other}"))),
         };
         c.finish()?;
@@ -490,6 +502,7 @@ impl Response {
             Response::ShutdownAck => OP_SHUTDOWN,
             Response::Snapshotted => OP_SNAPSHOT,
             Response::Flushed => OP_FLUSH,
+            Response::Metrics { .. } => OP_METRICS,
             Response::Error { .. } => OP_ERROR,
         }
     }
@@ -537,6 +550,10 @@ impl Response {
                 for &v in &s.per_bank_lookups {
                     put_u64(buf, v);
                 }
+            }
+            Response::Metrics { text } => {
+                put_u32(buf, text.len() as u32);
+                buf.extend_from_slice(text.as_bytes());
             }
             Response::Error { code, aux } => {
                 put_u16(buf, *code);
@@ -625,6 +642,16 @@ impl Response {
             OP_SHUTDOWN => Response::ShutdownAck,
             OP_SNAPSHOT => Response::Snapshotted,
             OP_FLUSH => Response::Flushed,
+            OP_METRICS => {
+                let n = c.take_u32()? as usize;
+                // take() itself bounds n by the remaining payload (no
+                // allocation happens before the bytes are proven present)
+                let bytes = c.take(n)?;
+                let text = String::from_utf8(bytes.to_vec()).map_err(|_| {
+                    WireError::Protocol("metrics exposition is not valid UTF-8".into())
+                })?;
+                Response::Metrics { text }
+            }
             OP_ERROR => Response::Error { code: c.take_u16()?, aux: c.take_u64()? },
             other => return Err(WireError::Protocol(format!("unknown response op {other}"))),
         };
@@ -809,6 +836,7 @@ mod tests {
         roundtrip_request(Request::Shutdown);
         roundtrip_request(Request::Snapshot);
         roundtrip_request(Request::Flush);
+        roundtrip_request(Request::Metrics);
     }
 
     #[test]
@@ -844,7 +872,32 @@ mod tests {
         roundtrip_response(Response::ShutdownAck);
         roundtrip_response(Response::Snapshotted);
         roundtrip_response(Response::Flushed);
+        roundtrip_response(Response::Metrics {
+            text: "# TYPE cscam_lookups_total counter\ncscam_lookups_total 7\n".into(),
+        });
+        roundtrip_response(Response::Metrics { text: String::new() });
         roundtrip_response(Response::Error { code: ERR_FULL, aux: 0 });
+    }
+
+    #[test]
+    fn metrics_text_must_be_utf8_and_fit_the_payload() {
+        // a length prefix past the payload is a protocol error, not a panic
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 1_000);
+        payload.extend_from_slice(b"short");
+        let mut wire = Vec::new();
+        write_frame(&mut wire, 5, OP_METRICS, &payload).unwrap();
+        assert!(matches!(read_response(&mut wire.as_slice()), Err(WireError::Protocol(_))));
+        // invalid UTF-8 is refused with a typed error
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 2);
+        payload.extend_from_slice(&[0xFF, 0xFE]);
+        let mut wire = Vec::new();
+        write_frame(&mut wire, 6, OP_METRICS, &payload).unwrap();
+        match read_response(&mut wire.as_slice()) {
+            Err(WireError::Protocol(m)) => assert!(m.contains("UTF-8"), "{m}"),
+            other => panic!("expected UTF-8 rejection, got {other:?}"),
+        }
     }
 
     #[test]

@@ -476,6 +476,20 @@ fn handle_request(
             Ok(_) => Response::Flushed,
             Err(e) => persist_error_response("flush", e),
         },
+        Request::Metrics => match fleet.fleet_metrics() {
+            // the wire op has no recovery report (that context lives with
+            // the process that opened the data dir — the HTTP sidecar
+            // renders it); everything else matches `GET /metrics`
+            Some(fm) => Response::Metrics {
+                text: crate::obs::render_prometheus(
+                    &fm,
+                    fleet.bank_m(),
+                    fleet.tag_bits(),
+                    None,
+                ),
+            },
+            None => proto::error_response(&EngineError::Shutdown),
+        },
     }
 }
 

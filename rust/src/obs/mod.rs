@@ -1,0 +1,491 @@
+//! L7 — observability: Prometheus-text exposition over the serving
+//! metrics, plus a tiny `std::net` HTTP sidecar so curl/Prometheus can
+//! scrape a running fleet without speaking CSCM.
+//!
+//! Two transports share one renderer ([`render_prometheus`]):
+//!
+//! * the wire op `OP_METRICS` (`crate::net::Request::Metrics`, wire v4)
+//!   returns the exposition text in-band on the CSCM port;
+//! * `serve --metrics-addr HOST:PORT` spawns [`MetricsHttpServer`], a
+//!   plain-HTTP listener answering `GET /metrics` with
+//!   `text/plain; version=0.0.4` — the Prometheus text exposition
+//!   content type.
+//!
+//! The exposition is assembled through [`Exposition`], which enforces the
+//! format invariants the golden test checks: every series is preceded by
+//! exactly one `# TYPE` header, series names are unique per metric, and
+//! every value renders finite (the NaN-clamping in
+//! [`crate::coordinator::Metrics`] feeds this).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::shard::{FleetMetrics, FleetRecovery};
+use crate::stats::Histogram;
+
+/// The Prometheus text exposition content type (format version 0.0.4).
+pub const PROMETHEUS_CONTENT_TYPE: &str = "text/plain; version=0.0.4";
+
+/// Quantiles exported for every latency summary series.
+const SUMMARY_QUANTILES: [f64; 4] = [0.5, 0.9, 0.99, 0.999];
+
+/// Builder for one exposition page.  Keeps the format honest: a metric
+/// must be opened with a `# TYPE` header (exactly once) before its series
+/// are emitted, and f64 values are clamped finite.
+struct Exposition {
+    out: String,
+    seen: Vec<String>,
+}
+
+impl Exposition {
+    fn new() -> Self {
+        Exposition { out: String::new(), seen: Vec::new() }
+    }
+
+    /// Open a metric family: `# HELP` + `# TYPE` headers.  Debug-asserts
+    /// that each family is opened once — duplicate `# TYPE` lines are a
+    /// format violation scrapers reject.
+    fn family(&mut self, name: &str, kind: &str, help: &str) {
+        debug_assert!(
+            !self.seen.iter().any(|s| s == name),
+            "metric family {name} opened twice"
+        );
+        self.seen.push(name.to_string());
+        self.out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+    }
+
+    /// One unlabelled series.
+    fn series(&mut self, name: &str, value: f64) {
+        self.labelled(name, &[], value);
+    }
+
+    /// One series with `label="value"` pairs.
+    fn labelled(&mut self, name: &str, labels: &[(&str, String)], value: f64) {
+        let v = if value.is_finite() { value } else { 0.0 };
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, val)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(&format!("{k}=\"{val}\""));
+            }
+            self.out.push('}');
+        }
+        self.out.push_str(&format!(" {v}\n"));
+    }
+
+    /// A latency histogram exported as a Prometheus summary: one series
+    /// per quantile plus the `_count` sample.
+    fn summary_ns(&mut self, name: &str, help: &str, h: &Histogram) {
+        self.family(name, "summary", help);
+        for q in SUMMARY_QUANTILES {
+            self.labelled(name, &[("quantile", format!("{q}"))], h.quantile(q) as f64);
+        }
+        self.labelled(&format!("{name}_count"), &[], h.total() as f64);
+    }
+}
+
+/// Render the fleet's serving metrics as one Prometheus exposition page.
+///
+/// `bank_m`/`bank_n` are the per-bank geometry (for the modelled
+/// fJ/bit/search); `recovery` adds the `cscam_recovery_*` gauges when the
+/// fleet was opened durably (the HTTP sidecar has it, the wire op does
+/// not — a purely in-memory fleet simply omits the family).
+pub fn render_prometheus(
+    fleet: &FleetMetrics,
+    bank_m: usize,
+    bank_n: usize,
+    recovery: Option<&FleetRecovery>,
+) -> String {
+    let mut e = Exposition::new();
+    let a = &fleet.aggregate;
+
+    e.family("cscam_lookups_total", "counter", "Lookups served across the fleet.");
+    e.series("cscam_lookups_total", a.lookups as f64);
+    e.family("cscam_hits_total", "counter", "Lookups that matched a stored tag.");
+    e.series("cscam_hits_total", a.hits as f64);
+    e.family("cscam_misses_total", "counter", "Lookups that matched nothing.");
+    e.series("cscam_misses_total", a.misses as f64);
+    e.family("cscam_inserts_total", "counter", "Acknowledged inserts.");
+    e.series("cscam_inserts_total", a.inserts as f64);
+    e.family("cscam_deletes_total", "counter", "Acknowledged deletes.");
+    e.series("cscam_deletes_total", a.deletes as f64);
+    e.family("cscam_batches_total", "counter", "Decode batches dispatched.");
+    e.series("cscam_batches_total", a.batches as f64);
+
+    e.family("cscam_hit_ratio", "gauge", "hits / lookups (0 when idle).");
+    e.series("cscam_hit_ratio", a.hit_ratio());
+    e.family(
+        "cscam_energy_fj_per_bit_per_search",
+        "gauge",
+        "Modelled search energy, femtojoules per bit per search (Table II metric).",
+    );
+    e.series("cscam_energy_fj_per_bit_per_search", a.energy_per_bit(bank_m, bank_n));
+    e.family("cscam_lambda_mean", "gauge", "Mean ambiguity (candidate clusters) per lookup.");
+    e.series("cscam_lambda_mean", a.lambda.mean_or(0.0));
+    e.family(
+        "cscam_enabled_blocks_mean",
+        "gauge",
+        "Mean compare-enabled CAM sub-blocks per lookup.",
+    );
+    e.series("cscam_enabled_blocks_mean", a.enabled_blocks.mean_or(0.0));
+
+    e.family(
+        "cscam_shed_total",
+        "counter",
+        "Requests refused by admission control, by reason (busy = queue at \
+         capacity, full = no free CAM slot).",
+    );
+    e.labelled("cscam_shed_total", &[("reason", "busy".into())], a.shed_busy as f64);
+    e.labelled("cscam_shed_total", &[("reason", "full".into())], a.shed_full as f64);
+
+    e.family("cscam_bank_lookups_total", "counter", "Lookups served, per bank.");
+    for (i, m) in fleet.per_bank.iter().enumerate() {
+        e.labelled("cscam_bank_lookups_total", &[("bank", format!("{i}"))], m.lookups as f64);
+    }
+    e.family(
+        "cscam_bank_hot_fraction",
+        "gauge",
+        "Fraction of all fleet lookups served by each bank (1/S when balanced).",
+    );
+    for (i, m) in fleet.per_bank.iter().enumerate() {
+        let f = if a.lookups == 0 { 0.0 } else { m.lookups as f64 / a.lookups as f64 };
+        e.labelled("cscam_bank_hot_fraction", &[("bank", format!("{i}"))], f);
+    }
+    e.family(
+        "cscam_hot_fraction",
+        "gauge",
+        "Fraction of fleet lookups served by the hottest bank.",
+    );
+    e.series("cscam_hot_fraction", fleet.hot_fraction());
+
+    e.summary_ns(
+        "cscam_host_latency_ns",
+        "Host-side service latency per request, nanoseconds.",
+        &a.host_latency_ns,
+    );
+
+    e.family("cscam_wal_appends_total", "counter", "WAL frames appended across the fleet.");
+    e.series("cscam_wal_appends_total", a.wal_appends as f64);
+    e.family("cscam_wal_appended_bytes_total", "counter", "WAL bytes appended.");
+    e.series("cscam_wal_appended_bytes_total", a.wal_appended_bytes as f64);
+    e.family("cscam_wal_fsyncs_total", "counter", "WAL fsync (sync_data) calls issued.");
+    e.series("cscam_wal_fsyncs_total", a.wal_fsyncs as f64);
+    e.summary_ns(
+        "cscam_wal_append_ns",
+        "WAL append write(2) latency, nanoseconds.",
+        &a.wal_append_ns,
+    );
+    e.summary_ns(
+        "cscam_wal_fsync_ns",
+        "WAL fsync latency, nanoseconds.",
+        &a.wal_fsync_ns,
+    );
+
+    if let Some(rec) = recovery {
+        e.family(
+            "cscam_recovery_replayed_records",
+            "gauge",
+            "WAL records replayed at the last open, across all banks.",
+        );
+        e.series("cscam_recovery_replayed_records", rec.total_records() as f64);
+        e.family(
+            "cscam_recovery_recovered_entries",
+            "gauge",
+            "Live entries recovered at the last open.",
+        );
+        e.series("cscam_recovery_recovered_entries", rec.total_occupancy() as f64);
+        e.family(
+            "cscam_recovery_truncated_banks",
+            "gauge",
+            "Banks whose WAL had a torn tail truncated at the last open.",
+        );
+        e.series("cscam_recovery_truncated_banks", rec.truncated_banks() as f64);
+        e.family(
+            "cscam_recovery_snapshots_loaded",
+            "gauge",
+            "Banks restored from a snapshot at the last open.",
+        );
+        e.series(
+            "cscam_recovery_snapshots_loaded",
+            rec.banks.iter().filter(|b| b.snapshot_loaded).count() as f64,
+        );
+        e.family(
+            "cscam_recovery_manifest_loaded",
+            "gauge",
+            "1 when the fleet manifest already existed (restart), 0 on first boot.",
+        );
+        e.series("cscam_recovery_manifest_loaded", if rec.manifest_loaded { 1.0 } else { 0.0 });
+    }
+
+    e.out
+}
+
+// ------------------------------------------------------------- sidecar
+
+/// The renderer a [`MetricsHttpServer`] calls per scrape.  A closure so
+/// the listener needs no knowledge of fleets or recovery reports — the
+/// caller captures whatever feeds its page.
+pub type RenderFn = Arc<dyn Fn() -> String + Send + Sync>;
+
+/// Largest request head we will buffer before answering 400 — scrape
+/// requests are one short line plus a few headers.
+const MAX_REQUEST_BYTES: usize = 8192;
+
+/// Accept-loop poll interval while idle (the listener is non-blocking so
+/// shutdown never hangs on `accept`).
+const POLL_INTERVAL: Duration = Duration::from_millis(25);
+
+/// A minimal plain-HTTP metrics listener: `GET /metrics` answers the
+/// rendered exposition, anything else 404.  One request per connection
+/// (`Connection: close`), served inline on the accept thread — scrapes
+/// are rare and tiny, so no pool is warranted.
+pub struct MetricsHttpServer;
+
+/// Handle to a running sidecar; dropping it stops the listener.
+pub struct MetricsHttpHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl MetricsHttpServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0`) and serve scrapes of `render` on
+    /// a background thread until the handle is shut down or dropped.
+    pub fn spawn<A: ToSocketAddrs>(addr: A, render: RenderFn) -> std::io::Result<MetricsHttpHandle> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let join = std::thread::Builder::new()
+            .name("cscam-metrics-http".into())
+            .spawn(move || accept_loop(&listener, &stop2, &render))?;
+        Ok(MetricsHttpHandle { addr, stop, join: Some(join) })
+    }
+}
+
+impl MetricsHttpHandle {
+    /// The bound address (port resolved when the caller asked for `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the accept loop and join the thread.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for MetricsHttpHandle {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn accept_loop(listener: &TcpListener, stop: &AtomicBool, render: &RenderFn) {
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _)) => serve_one(stream, render),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(POLL_INTERVAL);
+            }
+            Err(_) => std::thread::sleep(POLL_INTERVAL),
+        }
+    }
+}
+
+/// Read the request head (bounded), answer, close.  Errors are dropped:
+/// a broken scrape connection must never disturb the serving process.
+fn serve_one(mut stream: TcpStream, render: &RenderFn) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
+    let mut head = Vec::new();
+    let mut buf = [0u8; 1024];
+    let complete = loop {
+        match stream.read(&mut buf) {
+            Ok(0) => break false,
+            Ok(n) => {
+                head.extend_from_slice(&buf[..n]);
+                if head.windows(4).any(|w| w == b"\r\n\r\n") {
+                    break true;
+                }
+                if head.len() > MAX_REQUEST_BYTES {
+                    break false;
+                }
+            }
+            Err(_) => break false,
+        }
+    };
+    if !complete {
+        respond(&mut stream, 400, "Bad Request", "text/plain", "bad request\n");
+        return;
+    }
+    let first_line = head
+        .split(|&b| b == b'\n')
+        .next()
+        .map(|l| String::from_utf8_lossy(l).trim().to_string())
+        .unwrap_or_default();
+    let mut parts = first_line.split_whitespace();
+    match (parts.next(), parts.next()) {
+        (Some("GET"), Some("/metrics")) => {
+            let body = render();
+            respond(&mut stream, 200, "OK", PROMETHEUS_CONTENT_TYPE, &body);
+        }
+        (Some("GET"), Some(_)) => {
+            respond(&mut stream, 404, "Not Found", "text/plain", "only /metrics here\n");
+        }
+        _ => {
+            respond(&mut stream, 405, "Method Not Allowed", "text/plain", "GET only\n");
+        }
+    }
+}
+
+fn respond(stream: &mut TcpStream, code: u16, reason: &str, ctype: &str, body: &str) {
+    let head = format!(
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: {ctype}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    let _ = stream.write_all(head.as_bytes());
+    let _ = stream.write_all(body.as_bytes());
+    let _ = stream.flush();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Metrics;
+
+    fn sample_fleet() -> FleetMetrics {
+        let mut b0 = Metrics::new();
+        b0.lookups = 30;
+        b0.hits = 24;
+        b0.misses = 6;
+        b0.inserts = 10;
+        b0.shed_busy = 2;
+        b0.host_latency_ns.record(1800);
+        b0.wal_appends = 10;
+        b0.wal_appended_bytes = 420;
+        b0.wal_fsyncs = 5;
+        b0.wal_fsync_ns.record(120_000);
+        let mut b1 = Metrics::new();
+        b1.lookups = 10;
+        b1.hits = 10;
+        b1.shed_full = 1;
+        let mut aggregate = Metrics::new();
+        aggregate.merge(&b0);
+        aggregate.merge(&b1);
+        FleetMetrics { per_bank: vec![b0, b1], aggregate }
+    }
+
+    #[test]
+    fn exposition_carries_the_headline_series() {
+        let text = render_prometheus(&sample_fleet(), 64, 32, None);
+        for needle in [
+            "# TYPE cscam_lookups_total counter",
+            "cscam_lookups_total 40",
+            "cscam_hit_ratio 0.85",
+            "cscam_shed_total{reason=\"busy\"} 2",
+            "cscam_shed_total{reason=\"full\"} 1",
+            "cscam_bank_hot_fraction{bank=\"0\"} 0.75",
+            "cscam_bank_lookups_total{bank=\"1\"} 10",
+            "cscam_hot_fraction 0.75",
+            "# TYPE cscam_wal_fsync_ns summary",
+            "cscam_wal_fsync_ns_count 5",
+            "cscam_wal_appended_bytes_total 420",
+            "cscam_host_latency_ns{quantile=\"0.5\"}",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        assert!(!text.contains("cscam_recovery_"), "no recovery block without a report");
+        assert!(!text.contains("NaN"));
+    }
+
+    #[test]
+    fn recovery_block_renders_when_a_report_is_supplied() {
+        use crate::store::RecoveryReport;
+        let rec = FleetRecovery {
+            manifest_loaded: true,
+            banks: vec![
+                RecoveryReport {
+                    snapshot_loaded: true,
+                    wal_records: 7,
+                    discarded_records: 0,
+                    truncated_bytes: 12,
+                    occupancy: 5,
+                },
+                RecoveryReport {
+                    snapshot_loaded: false,
+                    wal_records: 3,
+                    discarded_records: 0,
+                    truncated_bytes: 0,
+                    occupancy: 3,
+                },
+            ],
+        };
+        let text = render_prometheus(&sample_fleet(), 64, 32, Some(&rec));
+        assert!(text.contains("cscam_recovery_replayed_records 10"));
+        assert!(text.contains("cscam_recovery_recovered_entries 8"));
+        assert!(text.contains("cscam_recovery_truncated_banks 1"));
+        assert!(text.contains("cscam_recovery_snapshots_loaded 1"));
+        assert!(text.contains("cscam_recovery_manifest_loaded 1"));
+    }
+
+    #[test]
+    fn empty_fleet_renders_finite_values() {
+        let fleet = FleetMetrics {
+            per_bank: vec![Metrics::new()],
+            aggregate: Metrics::new(),
+        };
+        let text = render_prometheus(&fleet, 64, 32, None);
+        assert!(!text.contains("NaN"), "empty fleet must render finite:\n{text}");
+        assert!(text.contains("cscam_energy_fj_per_bit_per_search 0"));
+    }
+
+    #[test]
+    fn http_sidecar_answers_a_scrape() {
+        let render: RenderFn =
+            Arc::new(|| render_prometheus(&sample_fleet(), 64, 32, None));
+        let h = MetricsHttpServer::spawn("127.0.0.1:0", render).unwrap();
+        let addr = h.local_addr();
+
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        s.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "got:\n{resp}");
+        assert!(resp.contains(PROMETHEUS_CONTENT_TYPE));
+        assert!(resp.contains("cscam_lookups_total 40"));
+
+        // any other path is a 404, not a hang or a panic
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET /other HTTP/1.1\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        s.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 404"));
+
+        // POST is refused with 405
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "POST /metrics HTTP/1.1\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        s.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 405"));
+
+        h.shutdown();
+    }
+}

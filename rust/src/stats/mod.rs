@@ -42,6 +42,16 @@ impl OnlineStats {
         }
     }
 
+    /// The mean, or `default` when no samples have been pushed — for
+    /// summaries and serialized rows where NaN would poison the output.
+    pub fn mean_or(&self, default: f64) -> f64 {
+        if self.n == 0 {
+            default
+        } else {
+            self.mean
+        }
+    }
+
     pub fn variance(&self) -> f64 {
         if self.n < 2 {
             0.0
@@ -115,6 +125,33 @@ impl Histogram {
         }
         Self::new(bounds)
     }
+
+    /// HDR-style log-linear buckets up to `max`: each power-of-2 major
+    /// span is cut into [`Self::LOG_LINEAR_SUB`] equal sub-buckets, so
+    /// the relative quantile error is bounded by one sub-bucket
+    /// (width/lo ≤ 1/16 ≈ 6.25 %) instead of the up-to-2x of
+    /// [`Self::exponential`].  Values ≤ 2·16 get exact unit buckets.
+    /// Same `record`/`quantile`/`merge` contract.
+    pub fn log_linear(max: u64) -> Self {
+        const SUB: u64 = Histogram::LOG_LINEAR_SUB;
+        let mut bounds: Vec<u64> = (1..=(2 * SUB).min(max)).collect();
+        let mut major = 2 * SUB;
+        while major < max {
+            let width = major / SUB;
+            for i in 1..=SUB {
+                let b = major + i * width;
+                bounds.push(b);
+                if b >= max {
+                    break;
+                }
+            }
+            major *= 2;
+        }
+        Self::new(bounds)
+    }
+
+    /// Linear sub-buckets per power-of-2 major span in [`Self::log_linear`].
+    pub const LOG_LINEAR_SUB: u64 = 16;
 
     pub fn record(&mut self, v: u64) {
         let i = self.bounds.partition_point(|&b| b < v);
@@ -224,6 +261,75 @@ mod tests {
     fn histogram_merge_rejects_mismatched_layouts() {
         let mut a = Histogram::new(vec![10]);
         a.merge(&Histogram::new(vec![20]));
+    }
+
+    #[test]
+    fn log_linear_layout_units_then_sixteenths() {
+        let h = Histogram::log_linear(1 << 10);
+        let bounds: Vec<u64> = h.buckets().map(|(b, _)| b).collect();
+        // exact unit buckets through two majors…
+        assert_eq!(&bounds[..32], (1..=32).collect::<Vec<u64>>().as_slice());
+        // …then 16 width-2 sub-buckets spanning (32, 64]
+        let expect: Vec<u64> = (1..=16).map(|i| 32 + 2 * i).collect();
+        assert_eq!(&bounds[32..48], expect.as_slice());
+        // strictly ascending end to end (Histogram::new asserts, but make
+        // the layout contract explicit here)
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn log_linear_quantile_error_within_one_sub_bucket_of_oracle() {
+        // property test: across seeded distributions, the log-linear
+        // quantile never undershoots the sorted-vector oracle and
+        // overshoots by at most one sub-bucket (relative error ≤ 1/16)
+        use crate::util::Rng;
+        let max = 1u64 << 24;
+        for seed in [11u64, 23, 47, 91, 150] {
+            let mut rng = Rng::seed_from_u64(seed);
+            let mut h = Histogram::log_linear(max);
+            let mut vals: Vec<u64> = Vec::new();
+            for i in 0..5000 {
+                let v = match i % 3 {
+                    0 => 1 + rng.gen_u64() % 1000, // low values, unit buckets
+                    1 => 1 + rng.gen_u64() % max,  // uniform across the range
+                    _ => (1u64 << (rng.gen_u64() % 24)) + rng.gen_u64() % 17, // log spread
+                };
+                let v = v.min(max);
+                h.record(v);
+                vals.push(v);
+            }
+            vals.sort_unstable();
+            for q in [0.0, 0.1, 0.25, 0.5, 0.9, 0.99, 0.999, 1.0] {
+                let target = ((q * vals.len() as f64).ceil() as usize).max(1);
+                let oracle = vals[target - 1];
+                let got = h.quantile(q);
+                assert!(got >= oracle, "q={q} seed={seed}: {got} undershoots oracle {oracle}");
+                assert!(
+                    (got - oracle) as f64 <= oracle as f64 / 16.0,
+                    "q={q} seed={seed}: {got} vs oracle {oracle} exceeds one sub-bucket"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn log_linear_merge_matches_union() {
+        use crate::util::Rng;
+        let mut rng = Rng::seed_from_u64(7);
+        let mut whole = Histogram::log_linear(1 << 20);
+        let mut a = Histogram::log_linear(1 << 20);
+        let mut b = Histogram::log_linear(1 << 20);
+        for i in 0..2000 {
+            let v = 1 + rng.gen_u64() % (1 << 20);
+            whole.record(v);
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a, whole);
     }
 
     #[test]

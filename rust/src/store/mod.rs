@@ -36,7 +36,7 @@ pub mod snapshot;
 pub mod wal;
 
 pub use snapshot::BankImage;
-pub use wal::{FsyncPolicy, Wal, WalRecord, WalRecovery};
+pub use wal::{FsyncPolicy, Wal, WalRecord, WalRecovery, WalStats};
 
 use std::path::{Path, PathBuf};
 
@@ -305,6 +305,12 @@ impl BankStore {
     /// Current WAL length in bytes (compaction trigger, test probe).
     pub fn wal_len_bytes(&self) -> u64 {
         self.wal.len_bytes()
+    }
+
+    /// Cumulative WAL append/fsync accounting (see [`WalStats`]) — the
+    /// feed behind the `cscam_wal_*` series of the metrics exposition.
+    pub fn wal_stats(&self) -> &WalStats {
+        self.wal.stats()
     }
 
     /// The bank directory this store logs into.

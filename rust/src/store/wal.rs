@@ -41,6 +41,7 @@ use std::io::Write;
 use std::path::Path;
 
 use crate::bits::BitVec;
+use crate::stats::Histogram;
 use crate::store::StoreError;
 use crate::util::codec::{put_bitvec, put_u64, Cursor};
 use crate::util::hash::{fnv1a_bytes, Fnv1a};
@@ -206,6 +207,43 @@ pub struct WalRecovery {
     pub torn_reason: Option<String>,
 }
 
+/// Cumulative append/fsync accounting for one log — the raw feed behind
+/// the `cscam_wal_*` series of the `/metrics` exposition.  Counters and
+/// latency histograms survive [`Wal::reset`] (they describe the handle's
+/// lifetime, not one generation) and are absorbed into the bank's
+/// [`crate::coordinator::Metrics`] on every metrics snapshot.
+#[derive(Debug, Clone)]
+pub struct WalStats {
+    /// Frames appended (acknowledged `write(2)` calls).
+    pub appends: u64,
+    /// Frame bytes appended.
+    pub appended_bytes: u64,
+    /// `sync_data` calls issued (policy-driven and explicit).
+    pub fsyncs: u64,
+    /// Per-append `write(2)` wall time, nanoseconds.
+    pub append_ns: Histogram,
+    /// Per-fsync wall time, nanoseconds.
+    pub fsync_ns: Histogram,
+}
+
+impl WalStats {
+    pub fn new() -> Self {
+        WalStats {
+            appends: 0,
+            appended_bytes: 0,
+            fsyncs: 0,
+            append_ns: Histogram::log_linear(1 << 30),
+            fsync_ns: Histogram::log_linear(1 << 30),
+        }
+    }
+}
+
+impl Default for WalStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// The exact 16 header bytes for a given generation.
 fn header_bytes(generation: u64) -> [u8; 16] {
     let mut h = [0u8; 16];
@@ -234,6 +272,8 @@ pub struct Wal {
     /// hold a partial frame, so further appends would be silently
     /// unrecoverable and are refused instead.
     poisoned: bool,
+    /// Cumulative append/fsync accounting (see [`WalStats`]).
+    stats: WalStats,
 }
 
 impl Wal {
@@ -289,6 +329,7 @@ impl Wal {
                 policy,
                 appends_since_sync: 0,
                 poisoned: false,
+                stats: WalStats::new(),
             };
             return Ok((wal, Vec::new(), recovery));
         }
@@ -342,6 +383,7 @@ impl Wal {
             policy,
             appends_since_sync: 0,
             poisoned: false,
+            stats: WalStats::new(),
         };
         Ok((wal, records, recovery))
     }
@@ -379,6 +421,7 @@ impl Wal {
                 "WAL poisoned by an earlier failed append; compact to recover",
             )));
         }
+        let t0 = std::time::Instant::now();
         if let Err(e) = self.file.write_all(frame) {
             if self.file.set_len(self.len).is_err() {
                 self.poisoned = true;
@@ -386,13 +429,16 @@ impl Wal {
             return Err(StoreError::Io(e));
         }
         self.len += frame.len() as u64;
+        self.stats.appends += 1;
+        self.stats.appended_bytes += frame.len() as u64;
+        self.stats.append_ns.record(t0.elapsed().as_nanos() as u64);
         match self.policy {
             FsyncPolicy::Never => {}
-            FsyncPolicy::Always => self.file.sync_data()?,
+            FsyncPolicy::Always => self.sync_timed()?,
             FsyncPolicy::EveryN(n) => {
                 self.appends_since_sync += 1;
                 if self.appends_since_sync >= n.max(1) {
-                    self.file.sync_data()?;
+                    self.sync_timed()?;
                     self.appends_since_sync = 0;
                 }
             }
@@ -400,11 +446,26 @@ impl Wal {
         Ok(())
     }
 
+    /// `sync_data` wrapped with the [`WalStats`] fsync counter and latency
+    /// histogram — every policy-driven or explicit sync goes through here.
+    fn sync_timed(&mut self) -> Result<(), StoreError> {
+        let t0 = std::time::Instant::now();
+        self.file.sync_data()?;
+        self.stats.fsyncs += 1;
+        self.stats.fsync_ns.record(t0.elapsed().as_nanos() as u64);
+        Ok(())
+    }
+
     /// Force everything to the disk regardless of policy.
     pub fn sync(&mut self) -> Result<(), StoreError> {
-        self.file.sync_data()?;
+        self.sync_timed()?;
         self.appends_since_sync = 0;
         Ok(())
+    }
+
+    /// Cumulative append/fsync accounting for this handle's lifetime.
+    pub fn stats(&self) -> &WalStats {
+        &self.stats
     }
 
     /// Refuse every further append until a successful [`Self::reset`].
@@ -611,6 +672,30 @@ mod tests {
         let (_, replayed, rec) = Wal::open(&path, FsyncPolicy::Never).unwrap();
         assert_eq!(replayed, vec![WalRecord::Delete { addr: 9 }]);
         assert_eq!(rec.truncated_bytes, 0);
+    }
+
+    #[test]
+    fn stats_count_appends_bytes_and_policy_fsyncs() {
+        let path = tmp("stats.wal");
+        let (mut wal, _, _) = Wal::open(&path, FsyncPolicy::EveryN(2)).unwrap();
+        assert_eq!(wal.stats().appends, 0);
+        let recs = sample_records();
+        let mut bytes = 0u64;
+        for r in &recs {
+            bytes += encode_frame(r).len() as u64;
+            wal.append(r).unwrap();
+        }
+        let s = wal.stats();
+        assert_eq!(s.appends, 4);
+        assert_eq!(s.appended_bytes, bytes);
+        assert_eq!(s.fsyncs, 2, "EveryN(2) syncs on appends 2 and 4");
+        assert_eq!(s.append_ns.total(), 4);
+        assert_eq!(s.fsync_ns.total(), 2);
+        // an explicit sync also counts, and the stats survive a reset
+        wal.sync().unwrap();
+        wal.reset(1).unwrap();
+        assert_eq!(wal.stats().fsyncs, 3);
+        assert_eq!(wal.stats().appends, 4, "reset keeps handle-lifetime stats");
     }
 
     #[test]

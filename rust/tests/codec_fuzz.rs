@@ -47,6 +47,7 @@ fn sample_requests() -> Vec<Request> {
         Request::Shutdown,
         Request::Snapshot,
         Request::Flush,
+        Request::Metrics,
     ]
 }
 
@@ -91,6 +92,7 @@ fn response_frames_reject_every_single_byte_flip() {
         Response::ShutdownAck,
         Response::Snapshotted,
         Response::Flushed,
+        Response::Metrics { text: "# TYPE cscam_lookups_total counter\ncscam_lookups_total 7\n".into() },
         Response::Error { code: proto::ERR_PERSIST, aux: 0 },
     ];
     for resp in responses {
@@ -165,6 +167,7 @@ fn request_and_response_payload_decoders_never_panic_on_garbage() {
         let _ = Response::decode(proto::OP_LOOKUP_BULK, &payload);
         let _ = Response::decode(proto::OP_LOOKUP, &payload);
         let _ = Response::decode(proto::OP_STATS, &payload);
+        let _ = Response::decode(proto::OP_METRICS, &payload);
     }
 }
 

