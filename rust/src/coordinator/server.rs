@@ -36,7 +36,7 @@ use crate::coordinator::engine::{
 };
 use crate::coordinator::metrics::Metrics;
 use crate::runtime::DecodeOutput;
-use crate::store::{BankStore, StoreError};
+use crate::store::{BankImage, BankStore, StoreError, WalRecord};
 use crate::util::sync::{lock_recover, AdmissionGauge, JobGuard, Mutex, WorkQueue};
 #[cfg(feature = "pjrt")]
 use crate::runtime::ArtifactStore;
@@ -114,6 +114,12 @@ enum Request {
     /// truncate it (`snapshot: true`).  `Ok(false)` means the bank serves
     /// without a store attached (nothing to persist).
     Persist { snapshot: bool, resp: mpsc::SyncSender<Result<bool, StoreError>> },
+    /// Replication barrier: apply shipped WAL records in order at their
+    /// recorded addresses, log them locally, publish (see [`crate::repl`]).
+    Apply { records: Vec<WalRecord>, resp: mpsc::SyncSender<Result<u64, StoreError>> },
+    /// Replication barrier: replace the bank's whole state with a
+    /// transferred snapshot image and persist it as the new local base.
+    InstallImage { image: Box<BankImage>, resp: mpsc::SyncSender<Result<(), StoreError>> },
 }
 
 // ----------------------------------------------------------- reader pool
@@ -581,6 +587,33 @@ impl ServerHandle {
     fn persist(&self, snapshot: bool) -> Result<bool, PersistError> {
         self.persist_deferred(snapshot)?.wait()
     }
+
+    /// Apply shipped WAL records at their recorded addresses — the replica
+    /// write path ([`crate::repl`]).  Runs as a barrier on the engine
+    /// thread: records are applied in order, logged to the local store,
+    /// and the new state is published before the ack, exactly like a
+    /// client insert.  Returns how many records were applied; an error
+    /// means the batch stopped mid-way and the caller must not advance
+    /// its replication cursor.
+    pub fn apply_replicated(&self, records: Vec<WalRecord>) -> Result<u64, PersistError> {
+        let (resp, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request::Apply { records, resp })
+            .map_err(|_| PersistError::Shutdown)?;
+        rx.recv().map_err(|_| PersistError::Shutdown)?.map_err(PersistError::Store)
+    }
+
+    /// Replace the bank's whole state with a transferred snapshot image
+    /// (replica bootstrap / re-bootstrap after the primary compacted).
+    /// The image becomes the local on-disk base too, so a replica restart
+    /// recovers from it.  Published before the ack.
+    pub fn install_image(&self, image: BankImage) -> Result<(), PersistError> {
+        let (resp, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request::InstallImage { image: Box::new(image), resp })
+            .map_err(|_| PersistError::Shutdown)?;
+        rx.recv().map_err(|_| PersistError::Shutdown)?.map_err(PersistError::Store)
+    }
 }
 
 /// Default admission cap for [`ServerHandle::try_lookup`] — deep enough
@@ -916,11 +949,96 @@ impl CamServer {
                 }
                 let _ = resp.send(r);
             }
+            Request::Apply { records, resp } => {
+                let r = self.apply_replicated_records(records);
+                if let Err(e) = &r {
+                    eprintln!("cscam-server: replicated apply failed: {e}");
+                }
+                // publish whatever prefix applied — every applied record
+                // is already logged, so visibility follows the WAL ack
+                // exactly as it does for client mutations
+                self.publish();
+                let _ = resp.send(r);
+            }
+            Request::InstallImage { image, resp } => {
+                let r = self.install_transferred_image(*image);
+                if let Err(e) = &r {
+                    eprintln!("cscam-server: snapshot install failed: {e}");
+                }
+                self.publish();
+                let _ = resp.send(r);
+            }
             // lint:allow(the serve loop routes every Lookup into the batcher
             // before calling handle_barrier; reaching this arm is a local
             // logic error, not an input-dependent state)
             Request::Lookup { .. } => unreachable!("lookups are batched, not barriers"),
         }
+    }
+
+    /// Apply shipped WAL records in order ([`ServerHandle::apply_replicated`]):
+    /// each record mutates the engine via the shared
+    /// [`crate::store::apply_record`] definition (identical to recovery
+    /// replay), then is appended to the local WAL so a replica restart can
+    /// recover it.  Stops at the first failure — the unapplied suffix is
+    /// simply re-shipped once the subscriber retries from its old cursor.
+    fn apply_replicated_records(&mut self, records: Vec<WalRecord>) -> Result<u64, StoreError> {
+        let mut applied = 0u64;
+        for rec in &records {
+            crate::store::apply_record(&mut self.engine, rec)?;
+            self.weights_dirty = true;
+            match rec {
+                WalRecord::Insert { addr, tag } => {
+                    self.metrics.inserts += 1;
+                    if let Some(store) = self.store.as_mut() {
+                        store.record_insert(*addr as usize, tag)?;
+                    }
+                }
+                WalRecord::Delete { addr } => {
+                    self.metrics.deletes += 1;
+                    if let Some(store) = self.store.as_mut() {
+                        store.record_delete(*addr as usize)?;
+                    }
+                }
+            }
+            applied += 1;
+        }
+        // local compaction policy is the bank's own affair — the shipped
+        // cursor tracks the PRIMARY's log, not this one
+        if let Some(store) = self.store.as_mut() {
+            if let Err(e) = store.maybe_compact(&self.engine) {
+                eprintln!(
+                    "cscam-server: compaction failure (replicated records already logged): {e}"
+                );
+            }
+        }
+        Ok(applied)
+    }
+
+    /// Swap in a transferred snapshot ([`ServerHandle::install_image`]):
+    /// decode the image into a fresh engine, persist it as the local base
+    /// (snapshot + WAL reset to the image's generation), then replace the
+    /// serving engine.  Geometry must match the bank being replaced.
+    fn install_transferred_image(&mut self, image: BankImage) -> Result<(), StoreError> {
+        if &image.cfg != self.engine.config() {
+            return Err(StoreError::Incompatible(format!(
+                "transferred snapshot geometry (M={}, N={}) does not match this bank \
+                 (M={}, N={})",
+                image.cfg.m,
+                image.cfg.n,
+                self.engine.config().m,
+                self.engine.config().n
+            )));
+        }
+        let generation = image.wal_generation;
+        let fresh = image.into_engine()?;
+        if let Some(store) = self.store.as_mut() {
+            let mut img = BankImage::from_engine(&fresh);
+            img.wal_generation = generation;
+            store.install_image(&img)?;
+        }
+        self.engine = fresh;
+        self.weights_dirty = true;
+        Ok(())
     }
 
     /// Run the batched decode stage through the PJRT artifact; `None` falls
@@ -1263,6 +1381,61 @@ mod tests {
         }
         assert!(h.metrics().is_none());
         h.drain(); // must not hang or panic
+    }
+
+    #[test]
+    fn replicated_apply_and_install_mirror_a_reference_engine() {
+        let cfg = DesignConfig::small_test();
+        let mut reference = LookupEngine::new(cfg.clone());
+        let h = CamServer::new(cfg.clone(), DecodeBackend::Native, policy()).spawn();
+        let mut rng = Rng::seed_from_u64(77);
+        let tags = TagDistribution::Uniform.sample_distinct(32, 12, &mut rng);
+        let mut records = Vec::new();
+        for t in &tags {
+            let addr = reference.insert(t).unwrap();
+            records.push(WalRecord::Insert { addr: addr as u64, tag: t.clone() });
+        }
+        reference.delete(2).unwrap();
+        records.push(WalRecord::Delete { addr: 2 });
+        assert_eq!(h.apply_replicated(records).unwrap(), 13);
+        // publish-before-ack holds for replicated applies: a direct read
+        // issued after the ack sees the state, field-for-field identical
+        // to an engine that executed the same history locally
+        let mut scratch = DecodeScratch::new();
+        for t in &tags {
+            let want = reference.lookup(t).unwrap();
+            assert_eq!(h.lookup_direct(t, &mut scratch).unwrap(), want);
+        }
+        let m = h.metrics().unwrap();
+        assert_eq!(m.inserts, 12, "replicated mutations are metered");
+        assert_eq!(m.deletes, 1);
+
+        // installing a transferred image replaces the whole state
+        let mut donor = LookupEngine::new(cfg);
+        let extra = TagDistribution::Uniform.sample_distinct(32, 5, &mut rng);
+        for t in &extra {
+            donor.insert(t).unwrap();
+        }
+        let want: Vec<_> = extra.iter().map(|t| donor.lookup(t).unwrap()).collect();
+        h.install_image(BankImage::from_engine(&donor)).unwrap();
+        for (t, w) in extra.iter().zip(&want) {
+            assert_eq!(&h.lookup_direct(t, &mut scratch).unwrap(), w);
+        }
+        for t in tags.iter().filter(|t| !extra.contains(t)) {
+            assert_eq!(
+                h.lookup_direct(t, &mut scratch).unwrap().addr,
+                None,
+                "pre-install state must be gone"
+            );
+        }
+        // geometry mismatch is refused, state untouched
+        let other = DesignConfig { m: DesignConfig::small_test().m * 2, ..DesignConfig::small_test() };
+        let wrong = BankImage::from_engine(&LookupEngine::new(other));
+        assert!(matches!(
+            h.install_image(wrong),
+            Err(PersistError::Store(StoreError::Incompatible(_)))
+        ));
+        assert!(h.lookup_direct(&extra[0], &mut scratch).unwrap().addr.is_some());
     }
 
     #[test]

@@ -50,6 +50,10 @@
 //! - [`obs`] — the L7 observability layer: Prometheus-text exposition of
 //!   the serving metrics (wire op `OP_METRICS` and a plain-HTTP
 //!   `GET /metrics` sidecar, `serve --metrics-addr`).
+//! - [`repl`] — the L8 replication layer: log-shipping primary→replica
+//!   streaming over wire v5 (`SubscribeLog`/`LogBatch`/`SnapshotTransfer`),
+//!   read replicas applying through the same WAL/RCU path, and failover
+//!   promotion with epoch fencing (`serve --replicate-from`, `promote`).
 
 pub mod baselines;
 pub mod bits;
@@ -60,6 +64,7 @@ pub mod coordinator;
 pub mod energy;
 pub mod net;
 pub mod obs;
+pub mod repl;
 pub mod runtime;
 pub mod shard;
 pub mod stats;

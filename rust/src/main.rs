@@ -9,6 +9,8 @@
 //!   `--listen` — expose the sharded fleet over TCP (`cscam::net`);
 //! * `loadgen` — drive a listening server over the wire protocol and
 //!   report throughput/p50/p99 into the bench JSON trajectory;
+//! * `promote` — failover: bump a replica directory's fleet epoch so it
+//!   serves as the writable primary and the old lineage is fenced;
 //! * `info`   — print the resolved design point and model predictions.
 //!
 //! Global option: `--config <file>` loads a `key = value` design point
@@ -60,6 +62,19 @@ COMMANDS:
            GET /metrics with the Prometheus-text exposition; port 0 picks
            an ephemeral port, printed at startup and appended as a second
            line to --port-file)
+          replication:          --replicate-from ADDR (serve as a read
+           replica of the primary at ADDR: bootstrap a state transfer
+           into --data-dir, chase the primary's log, forward writes
+           upstream; geometry, placement and epoch are adopted from the
+           primary's manifest, so --shards/--placement are ignored)
+           --replica-id N (subscriber id in the primary's cscam_repl_*
+           series; default: this process id)
+          (a primary with --data-dir answers SubscribeLog automatically)
+  promote bump the fleet epoch  --data-dir PATH
+          (offline failover: run against the chosen replica's directory
+           while no process is serving it; the directory then serves as
+           a writable primary and subscribers still on the old epoch —
+           including the crashed ex-primary — are fenced with ERR_FENCED)
   loadgen drive a listening server over the wire protocol
                                 --connect ADDR --lookups N --threads T
                                 --chunk C --hit-ratio R --population P
@@ -87,6 +102,7 @@ fn main() -> Result<()> {
         "table2" => table2(&cfg, &args),
         "sweep" => sweep_cmd(&args),
         "serve" => serve(&cfg, &args),
+        "promote" => promote_cmd(&args),
         "loadgen" => loadgen(&args),
         "info" => info(&cfg),
         other => bail!("unknown command '{other}'\n{USAGE}"),
@@ -469,6 +485,13 @@ fn serve_listen(cfg: &DesignConfig, args: &Args) -> Result<()> {
     let store_opts =
         StoreOptions { fsync, compact_bytes: args.get_parse("compact-bytes", 4 << 20)? };
 
+    // the replica path diverges early: geometry, placement and epoch are
+    // adopted from the primary's manifest, never from the local flags
+    if let Some(upstream) = args.get("replicate-from") {
+        let policy = BatchPolicy { max_batch, ..Default::default() };
+        return serve_replica(args, upstream, store_opts, policy, max_conns, readers);
+    }
+
     let mut fleet_cfg = cfg.clone();
     fleet_cfg.shards = shards;
     fleet_cfg.validate()?;
@@ -504,11 +527,27 @@ fn serve_listen(cfg: &DesignConfig, args: &Args) -> Result<()> {
         }
         None => ShardedCamServer::new(&fleet_cfg, mode, policy).with_readers(readers).spawn(),
     };
+    // a durable primary answers SubscribeLog: attach the replication
+    // feed over its own data directory (the Arc is shared with the
+    // metrics sidecar so both render the same subscriber progress)
+    let repl_role = match data_dir {
+        Some(dir) => {
+            let feed = cscam::repl::ReplicaFeed::open(std::path::Path::new(dir))
+                .map_err(|e| anyhow::anyhow!("opening replication feed over {dir}: {e}"))?;
+            println!("# replication feed at epoch {} (SubscribeLog served)", feed.epoch());
+            Some(std::sync::Arc::new(cscam::repl::ReplRole::Primary(feed)))
+        }
+        None => None,
+    };
     let server = CamTcpServer::bind(
         fleet.clone(),
         listen,
         NetConfig { max_connections: max_conns, ..Default::default() },
     )?;
+    let server = match &repl_role {
+        Some(role) => server.with_repl(std::sync::Arc::clone(role)),
+        None => server,
+    };
     let addr = server.local_addr()?;
     let handle = server.spawn()?;
     println!(
@@ -524,14 +563,22 @@ fn serve_listen(cfg: &DesignConfig, args: &Args) -> Result<()> {
             let scrape_fleet = fleet.clone();
             let bank_m = fleet_cfg.per_bank().m;
             let tag_bits = fleet_cfg.n;
+            let scrape_role = repl_role.clone();
             let render: cscam::obs::RenderFn = std::sync::Arc::new(move || {
                 match scrape_fleet.fleet_metrics() {
-                    Some(fm) => cscam::obs::render_prometheus(
-                        &fm,
-                        bank_m,
-                        tag_bits,
-                        recovered.as_ref(),
-                    ),
+                    Some(fm) => {
+                        let repl = match scrape_role.as_deref() {
+                            Some(cscam::repl::ReplRole::Primary(feed)) => Some(feed.status()),
+                            _ => None,
+                        };
+                        cscam::obs::render_prometheus(
+                            &fm,
+                            bank_m,
+                            tag_bits,
+                            recovered.as_ref(),
+                            repl.as_ref(),
+                        )
+                    }
                     // fleet already shutting down: an empty exposition
                     None => String::new(),
                 }
@@ -560,6 +607,111 @@ fn serve_listen(cfg: &DesignConfig, args: &Args) -> Result<()> {
         println!("# shut down after draining:");
         println!("{}", fm.summary(fleet_cfg.per_bank().m, fleet_cfg.n));
     }
+    Ok(())
+}
+
+/// `serve --listen --replicate-from`: bootstrap a read replica of the
+/// primary at `upstream` into `--data-dir`, serve wire lookups from the
+/// local fleet (the chaser keeps it converged with the primary's log),
+/// and forward `Insert`/`Delete` upstream.  Geometry, placement and
+/// epoch all come from the primary's manifest.
+fn serve_replica(
+    args: &Args,
+    upstream: &str,
+    store: cscam::store::StoreOptions,
+    policy: BatchPolicy,
+    max_conns: usize,
+    readers: usize,
+) -> Result<()> {
+    use cscam::net::{CamTcpServer, NetConfig};
+    use cscam::repl::{ReplRole, ReplicaOptions, ReplicaServer};
+    use std::sync::Arc;
+
+    let listen = args.get("listen").expect("checked by caller");
+    let Some(dir) = args.get("data-dir") else {
+        bail!("--replicate-from needs --data-dir PATH (the replica's own durable directory)");
+    };
+    let mut opts = ReplicaOptions { store, policy, readers, ..Default::default() };
+    opts.replica_id = args.get_parse("replica-id", opts.replica_id)?;
+
+    let replica = ReplicaServer::start(upstream, std::path::Path::new(dir), opts)
+        .map_err(|e| anyhow::anyhow!("replicating from {upstream}: {e}"))?;
+    println!(
+        "# replica {} of {upstream} at epoch {}; {dir}: {}",
+        args.get("replica-id").unwrap_or("(pid)"),
+        replica.epoch(),
+        replica.recovery().summary()
+    );
+
+    let fleet = replica.fleet();
+    let server = CamTcpServer::bind(
+        fleet.clone(),
+        listen,
+        NetConfig { max_connections: max_conns, ..Default::default() },
+    )?
+    .with_repl(Arc::new(ReplRole::Replica(replica.forwarder())));
+    let addr = server.local_addr()?;
+    let handle = server.spawn()?;
+    println!("# cscam replica serving reads on {addr} (writes forwarded to {upstream})");
+
+    let metrics_http = match args.get("metrics-addr") {
+        Some(maddr) => {
+            let scrape_fleet = fleet.clone();
+            let bank_m = fleet.bank_m();
+            let tag_bits = fleet.tag_bits();
+            let recovery = replica.recovery().clone();
+            let status = replica.status_fn();
+            let render: cscam::obs::RenderFn =
+                Arc::new(move || match scrape_fleet.fleet_metrics() {
+                    Some(fm) => cscam::obs::render_prometheus(
+                        &fm,
+                        bank_m,
+                        tag_bits,
+                        Some(&recovery),
+                        Some(&status()),
+                    ),
+                    // fleet already shutting down: an empty exposition
+                    None => String::new(),
+                });
+            let sidecar = cscam::obs::MetricsHttpServer::spawn(maddr, render)
+                .map_err(|e| anyhow::anyhow!("binding --metrics-addr {maddr}: {e}"))?;
+            println!("# metrics on http://{}/metrics", sidecar.local_addr());
+            Some(sidecar)
+        }
+        None => None,
+    };
+    if let Some(path) = args.get("port-file") {
+        match metrics_http.as_ref() {
+            // second line so smoke scripts can find the scrape port too
+            Some(s) => std::fs::write(path, format!("{addr}\n{}", s.local_addr()))?,
+            None => std::fs::write(path, addr.to_string())?,
+        }
+        println!("# wrote address to {path}");
+    }
+    handle.join();
+    if let Some(sidecar) = metrics_http {
+        sidecar.shutdown();
+    }
+    // a wire Shutdown already drained the local fleet; the chaser being
+    // stopped afterwards may find it closed, which is fine
+    if let Err(e) = replica.shutdown() {
+        eprintln!("# replica shutdown: {e}");
+    }
+    Ok(())
+}
+
+/// `promote`: offline failover.  Bump the manifest epoch of the chosen
+/// replica's data directory so it serves as the writable primary; every
+/// subscriber still on the old epoch — including the crashed ex-primary,
+/// should it rejoin — is refused with `ERR_FENCED`.
+fn promote_cmd(args: &Args) -> Result<()> {
+    let Some(dir) = args.get("data-dir") else {
+        bail!("promote needs --data-dir PATH (the replica directory taking over)");
+    };
+    let epoch = cscam::repl::promote(std::path::Path::new(dir))
+        .map_err(|e| anyhow::anyhow!("promoting {dir}: {e}"))?;
+    println!("promoted {dir}: fleet epoch is now {epoch}");
+    println!("subscribers still on epoch {} (including the ex-primary) will be fenced", epoch - 1);
     Ok(())
 }
 

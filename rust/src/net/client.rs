@@ -81,6 +81,26 @@ impl Conn {
     }
 }
 
+/// Outcome of one [`CamClient::subscribe_log`] poll — the three answers a
+/// replication feed can give a subscriber (see [`crate::repl`]).
+#[derive(Debug)]
+pub enum LogPoll {
+    /// Framed WAL records past the requested offset.  `next_offset` is
+    /// what the subscriber should request next (requesting it *is* the
+    /// ack of everything before it); `remaining` is the records still
+    /// unread behind this batch — the replica's lag.
+    Batch { generation: u64, next_offset: u64, remaining: u64, frames: Vec<u8> },
+    /// A full state transfer: either the bootstrap the subscriber asked
+    /// for, or the requested `(generation, offset)` no longer exists
+    /// (compaction retired that log) and the feed restarts the stream
+    /// from its current snapshot.
+    Snapshot { generation: u64, image: Vec<u8> },
+    /// The subscriber's epoch is stale — the fleet was promoted past it
+    /// and the old lineage is fenced off.  `server_epoch` is the epoch
+    /// the feed is serving.
+    Fenced { server_epoch: u64 },
+}
+
 /// A blocking wire-protocol client with reconnect.
 pub struct CamClient {
     addr: String,
@@ -342,6 +362,48 @@ impl CamClient {
     pub fn flush(&mut self) -> Result<(), WireError> {
         match self.call_idempotent(&Request::Flush)? {
             Response::Flushed => Ok(()),
+            other => unexpected(other),
+        }
+    }
+
+    /// One replication-log poll: ask the feed for the log of `bank` past
+    /// `(generation, offset)`, identifying as `replica` at `epoch`.
+    /// Requesting an offset acknowledges everything before it.  Pass
+    /// [`proto::SUBSCRIBE_BOOTSTRAP`] as the offset to request a full
+    /// state transfer, and [`proto::REPL_MANIFEST_BANK`] as the bank to
+    /// fetch the fleet manifest instead of a bank's log.  Idempotent
+    /// (re-asking for the same suffix re-ships it), auto-retried.
+    pub fn subscribe_log(
+        &mut self,
+        replica: u64,
+        epoch: u64,
+        bank: u32,
+        generation: u64,
+        offset: u64,
+    ) -> Result<LogPoll, WireError> {
+        let req = Request::SubscribeLog { replica, epoch, bank, generation, offset };
+        match self.call_idempotent(&req)? {
+            Response::LogBatch { bank: b, generation, next_offset, remaining, frames } => {
+                if b != bank {
+                    return Err(WireError::Protocol(format!(
+                        "log batch for bank {b}, subscribed to bank {bank}"
+                    )));
+                }
+                Ok(LogPoll::Batch { generation, next_offset, remaining, frames })
+            }
+            Response::SnapshotTransfer { bank: b, generation, image } => {
+                if b != bank {
+                    return Err(WireError::Protocol(format!(
+                        "snapshot transfer for bank {b}, subscribed to bank {bank}"
+                    )));
+                }
+                Ok(LogPoll::Snapshot { generation, image })
+            }
+            // ERR_FENCED is a wire-level verdict, not an engine error —
+            // surface it as data so the replica can stop chasing cleanly
+            Response::Error { code: proto::ERR_FENCED, aux } => {
+                Ok(LogPoll::Fenced { server_epoch: aux })
+            }
             other => unexpected(other),
         }
     }

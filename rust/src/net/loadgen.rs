@@ -162,6 +162,20 @@ impl LoadReport {
     }
 }
 
+/// Intended start of the lookup with global arrival index `idx`, in
+/// nanoseconds after the run's `t0`, on the fleet-wide schedule of
+/// `rate` lookups/s.
+///
+/// Computed from the *global* index, not from a per-thread period: a
+/// rounded per-thread period (`1e9 * threads / rate`) silently drops the
+/// residual arrival rate whenever `rate` does not divide evenly over the
+/// threads, and starts every thread's schedule in phase (arrivals come in
+/// bursts of `threads`).  The global schedule keeps the offered rate
+/// exact and interleaves the threads' slots.
+fn intended_start_ns(idx: u64, rate: f64) -> u64 {
+    (idx as f64 * 1e9 / rate).round() as u64
+}
+
 /// Per-thread tallies merged into the report.
 struct Tally {
     lookups: usize,
@@ -215,30 +229,29 @@ impl LoadGen {
         for i in 0..self.lookups {
             streams[i % threads].push(mix.sample(&stored, n, &mut rng).0);
         }
-        // Open-loop: the fleet-wide arrival rate splits evenly over the
-        // threads; each lookup advances a thread's schedule by this much.
+        // Open-loop: one fleet-wide arrival schedule; the round-robin
+        // stream split means thread `i` owns global arrival indices
+        // `i, i + threads, i + 2·threads, …` (see `intended_start_ns`).
         let open_loop = self.rate > 0.0;
-        let ns_per_lookup = if open_loop {
-            (1e9 * threads as f64 / self.rate).round().max(1.0) as u64
-        } else {
-            0
-        };
+        let rate = self.rate;
 
         let t0 = Instant::now();
         let mut joins = Vec::new();
-        for stream in streams {
+        for (thread_idx, stream) in streams.into_iter().enumerate() {
             let addr = self.addr.clone();
             let chunk = self.chunk.max(1);
+            let threads_u = threads as u64;
             joins.push(std::thread::spawn(move || -> Result<Tally, WireError> {
                 let mut client = CamClient::connect(addr)?;
                 let mut t = Tally::new();
-                // Lookups this thread has already scheduled; the next
-                // frame's intended start is `sent * ns_per_lookup` after t0.
+                // Lookups this thread has already scheduled; its next
+                // frame starts at the global slot of its first lookup.
                 let mut sent: u64 = 0;
                 for frame in stream.chunks(chunk) {
                     let started = if open_loop {
+                        let global = sent * threads_u + thread_idx as u64;
                         let intended =
-                            Duration::from_nanos(sent.saturating_mul(ns_per_lookup));
+                            Duration::from_nanos(intended_start_ns(global, rate));
                         let now = t0.elapsed();
                         if now < intended {
                             std::thread::sleep(intended - now);
@@ -307,5 +320,50 @@ impl LoadGen {
             open_loop,
             rate: self.rate,
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_arrival_schedule_keeps_the_full_offered_rate() {
+        // 700/s does not divide over common thread counts; the rounded
+        // per-thread period this replaced shipped fewer arrivals/s
+        let rate = 700.0;
+        let in_first_second = (0..10_000u64)
+            .take_while(|&i| intended_start_ns(i, rate) < 1_000_000_000)
+            .count();
+        assert_eq!(in_first_second, 700, "no residual QPS may be dropped");
+        // consecutive arrivals sit one inter-arrival gap apart (rounding
+        // moves a boundary by at most a nanosecond)
+        let gap = 1e9 / rate;
+        for i in 0..1_000u64 {
+            let d = intended_start_ns(i + 1, rate) - intended_start_ns(i, rate);
+            assert!((d as f64 - gap).abs() <= 1.0, "gap {d} ns at index {i}");
+        }
+    }
+
+    #[test]
+    fn thread_slot_reconstruction_tiles_the_global_schedule() {
+        // the round-robin stream split (`i % threads`) and the in-thread
+        // reconstruction (`sent * threads + thread_idx`) must agree: every
+        // global index is claimed exactly once
+        let (threads, lookups) = (3usize, 11usize);
+        let mut seen = vec![false; lookups];
+        for thread_idx in 0..threads {
+            let mut sent = 0u64;
+            for i in 0..lookups {
+                if i % threads == thread_idx {
+                    let global = sent * threads as u64 + thread_idx as u64;
+                    assert_eq!(global, i as u64);
+                    assert!(!seen[i]);
+                    seen[i] = true;
+                    sent += 1;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "schedule has holes");
     }
 }

@@ -15,7 +15,12 @@
 //!   `Snapshot`/`Flush` let an operator compact or fsync the fleet's
 //!   stores ([`crate::store`]) over the wire.  v4 adds `Metrics`, which
 //!   returns the fleet's Prometheus-text exposition ([`crate::obs`])
-//!   in-band, so a client can scrape without a second listener.
+//!   in-band, so a client can scrape without a second listener.  v5 adds
+//!   the replication transport — `SubscribeLog` polls a primary's
+//!   per-bank WAL and is answered with `LogBatch` (framed records past
+//!   the acked offset) or `SnapshotTransfer` (bootstrap / post-compaction
+//!   restart), with `ERR_FENCED` refusing subscribers from a pre-promotion
+//!   epoch ([`crate::repl`]).
 //! * [`server`] — [`CamTcpServer`]: thread-per-connection serving over a
 //!   [`crate::shard::ShardedServerHandle`]; lookups execute *on the
 //!   connection thread* against the banks' published search snapshots
@@ -40,7 +45,7 @@ pub mod loadgen;
 pub mod proto;
 pub mod server;
 
-pub use client::CamClient;
+pub use client::{CamClient, LogPoll};
 pub use loadgen::{LoadGen, LoadReport};
 pub use proto::{Request, Response, ServerHello, StatsReport, WireError, VERSION};
 pub use server::{CamTcpServer, NetConfig, NetServerHandle};

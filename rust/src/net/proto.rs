@@ -51,9 +51,13 @@ pub const MAGIC: [u8; 4] = *b"CSCM";
 /// ([`EngineError::Busy`]) from `ERR_FULL`, which now strictly means "no
 /// free CAM slot"; v4 — added `OP_METRICS` (10), returning the
 /// Prometheus-text exposition of the fleet's serving metrics in-band
-/// (see [`crate::obs`]).  Both sides hang up on a version mismatch
-/// (strict equality), so a mixed deployment must upgrade in lock-step.
-pub const VERSION: u16 = 4;
+/// (see [`crate::obs`]); v5 — added the replication ops
+/// `OP_SUBSCRIBE_LOG` (11) / `OP_LOG_BATCH` (12) /
+/// `OP_SNAPSHOT_TRANSFER` (13) and `ERR_FENCED` (7), the log-shipping
+/// transport of [`crate::repl`].  Both sides hang up on a version
+/// mismatch (strict equality), so a mixed deployment must upgrade in
+/// lock-step.
+pub const VERSION: u16 = 5;
 
 /// Upper bound on one frame (64 MiB) — rejects garbage lengths before any
 /// allocation.
@@ -87,7 +91,33 @@ pub const OP_SNAPSHOT: u8 = 8;
 pub const OP_FLUSH: u8 = 9;
 /// Fetch the Prometheus-text metrics exposition (v4; see [`crate::obs`]).
 pub const OP_METRICS: u8 = 10;
+/// Poll the primary's per-bank WAL past a replica's cursor (v5).  One
+/// request yields exactly one response: a [`Response::LogBatch`] of raw
+/// WAL frames, a [`Response::SnapshotTransfer`] when the cursor is
+/// unusable (bootstrap, or compaction advanced the generation), or an
+/// `ERR_FENCED` error when the subscriber's epoch is stale.
+pub const OP_SUBSCRIBE_LOG: u8 = 11;
+/// Response op: a batch of verbatim WAL frames plus the advanced cursor
+/// (v5; only ever sent in answer to [`OP_SUBSCRIBE_LOG`]).
+pub const OP_LOG_BATCH: u8 = 12;
+/// Response op: a full bank snapshot image — or, for the manifest
+/// pseudo-bank [`REPL_MANIFEST_BANK`], the `fleet.kv` manifest text —
+/// for a subscriber that must re-bootstrap (v5).
+pub const OP_SNAPSHOT_TRANSFER: u8 = 13;
 pub const OP_ERROR: u8 = 0xEE;
+
+/// Pseudo bank index in a [`Request::SubscribeLog`] that asks for the
+/// fleet manifest (`fleet.kv` text in a [`Response::SnapshotTransfer`],
+/// its `generation` field carrying the fleet epoch) instead of a real
+/// bank's log — how a replica learns geometry, placement and epoch
+/// before it subscribes to any bank.
+pub const REPL_MANIFEST_BANK: u32 = u32::MAX;
+
+/// Cursor sentinel in a [`Request::SubscribeLog`] that means "I have
+/// nothing — bootstrap me": the primary answers with a snapshot
+/// transfer (or an empty-prefix log batch when the bank has never been
+/// snapshotted).
+pub const SUBSCRIBE_BOOTSTRAP: u64 = u64::MAX;
 
 // Typed error codes.
 pub const ERR_FULL: u16 = 1;
@@ -97,6 +127,12 @@ pub const ERR_SHUTDOWN: u16 = 4;
 /// Admission queue at capacity — transient overload, retry later (v3).
 /// Distinct from [`ERR_FULL`], which means the CAM has no free slot.
 pub const ERR_BUSY: u16 = 6;
+/// The subscriber's replication epoch is older than the fleet's (v5):
+/// a promotion happened behind its back, so its log position may name a
+/// divergent history.  `aux` carries the server's current epoch.  This
+/// is a wire-level verdict with no [`EngineError`] equivalent — a fenced
+/// peer must re-bootstrap or stand down, not retry.
+pub const ERR_FENCED: u16 = 7;
 /// The durability layer failed to log or snapshot (disk full, I/O error).
 /// The detailed [`crate::store::StoreError`] stays in the server log; the
 /// wire carries only the code.
@@ -194,6 +230,14 @@ pub enum Request {
     Flush,
     /// Fetch the Prometheus-text metrics exposition (v4).
     Metrics,
+    /// Poll one bank's WAL past this subscriber's cursor (v5).  `replica`
+    /// names the subscriber (for lag accounting), `epoch` is the fleet
+    /// epoch it believes in (fenced when stale), and
+    /// `generation`/`offset` are its WAL cursor — requesting `offset`
+    /// acknowledges everything before it.  `offset` =
+    /// [`SUBSCRIBE_BOOTSTRAP`] asks for a snapshot; `bank` =
+    /// [`REPL_MANIFEST_BANK`] asks for the fleet manifest.
+    SubscribeLog { replica: u64, epoch: u64, bank: u32, generation: u64, offset: u64 },
 }
 
 /// Fleet statistics snapshot shipped for [`Request::Stats`].
@@ -236,6 +280,17 @@ pub enum Response {
     /// The Prometheus-text exposition page (v4) — the same text `GET
     /// /metrics` serves on the HTTP sidecar, shipped in-band as UTF-8.
     Metrics { text: String },
+    /// A batch of verbatim WAL frames starting at the subscriber's
+    /// requested offset (v5).  `next_offset` is the cursor for the next
+    /// poll; `remaining` counts complete frames already on disk past it
+    /// (the subscriber's lag in records); an empty `frames` with
+    /// `remaining` = 0 means the subscriber is caught up.
+    LogBatch { bank: u32, generation: u64, next_offset: u64, remaining: u64, frames: Vec<u8> },
+    /// A full bank snapshot image stamped with its WAL generation (v5);
+    /// the subscriber installs it and re-subscribes from the fresh
+    /// generation's log start.  For [`REPL_MANIFEST_BANK`] the bytes are
+    /// the `fleet.kv` manifest text and `generation` is the fleet epoch.
+    SnapshotTransfer { bank: u32, generation: u64, image: Vec<u8> },
     /// Whole-request failure (see the `ERR_*` codes).
     Error { code: u16, aux: u64 },
 }
@@ -429,6 +484,7 @@ impl Request {
             Request::Snapshot => OP_SNAPSHOT,
             Request::Flush => OP_FLUSH,
             Request::Metrics => OP_METRICS,
+            Request::SubscribeLog { .. } => OP_SUBSCRIBE_LOG,
         }
     }
 
@@ -448,6 +504,13 @@ impl Request {
             | Request::Snapshot
             | Request::Flush
             | Request::Metrics => {}
+            Request::SubscribeLog { replica, epoch, bank, generation, offset } => {
+                put_u64(buf, *replica);
+                put_u64(buf, *epoch);
+                put_u32(buf, *bank);
+                put_u64(buf, *generation);
+                put_u64(buf, *offset);
+            }
         }
     }
 
@@ -483,6 +546,13 @@ impl Request {
             OP_SNAPSHOT => Request::Snapshot,
             OP_FLUSH => Request::Flush,
             OP_METRICS => Request::Metrics,
+            OP_SUBSCRIBE_LOG => Request::SubscribeLog {
+                replica: c.take_u64()?,
+                epoch: c.take_u64()?,
+                bank: c.take_u32()?,
+                generation: c.take_u64()?,
+                offset: c.take_u64()?,
+            },
             other => return Err(WireError::Protocol(format!("unknown request op {other}"))),
         };
         c.finish()?;
@@ -503,6 +573,8 @@ impl Response {
             Response::Snapshotted => OP_SNAPSHOT,
             Response::Flushed => OP_FLUSH,
             Response::Metrics { .. } => OP_METRICS,
+            Response::LogBatch { .. } => OP_LOG_BATCH,
+            Response::SnapshotTransfer { .. } => OP_SNAPSHOT_TRANSFER,
             Response::Error { .. } => OP_ERROR,
         }
     }
@@ -554,6 +626,20 @@ impl Response {
             Response::Metrics { text } => {
                 put_u32(buf, text.len() as u32);
                 buf.extend_from_slice(text.as_bytes());
+            }
+            Response::LogBatch { bank, generation, next_offset, remaining, frames } => {
+                put_u32(buf, *bank);
+                put_u64(buf, *generation);
+                put_u64(buf, *next_offset);
+                put_u64(buf, *remaining);
+                put_u32(buf, frames.len() as u32);
+                buf.extend_from_slice(frames);
+            }
+            Response::SnapshotTransfer { bank, generation, image } => {
+                put_u32(buf, *bank);
+                put_u64(buf, *generation);
+                put_u32(buf, image.len() as u32);
+                buf.extend_from_slice(image);
             }
             Response::Error { code, aux } => {
                 put_u16(buf, *code);
@@ -651,6 +737,24 @@ impl Response {
                     WireError::Protocol("metrics exposition is not valid UTF-8".into())
                 })?;
                 Response::Metrics { text }
+            }
+            OP_LOG_BATCH => {
+                let bank = c.take_u32()?;
+                let generation = c.take_u64()?;
+                let next_offset = c.take_u64()?;
+                let remaining = c.take_u64()?;
+                let n = c.take_u32()? as usize;
+                // take() bounds n by the remaining payload before any
+                // allocation, as in the Metrics arm
+                let frames = c.take(n)?.to_vec();
+                Response::LogBatch { bank, generation, next_offset, remaining, frames }
+            }
+            OP_SNAPSHOT_TRANSFER => {
+                let bank = c.take_u32()?;
+                let generation = c.take_u64()?;
+                let n = c.take_u32()? as usize;
+                let image = c.take(n)?.to_vec();
+                Response::SnapshotTransfer { bank, generation, image }
             }
             OP_ERROR => Response::Error { code: c.take_u16()?, aux: c.take_u64()? },
             other => return Err(WireError::Protocol(format!("unknown response op {other}"))),
@@ -837,6 +941,20 @@ mod tests {
         roundtrip_request(Request::Snapshot);
         roundtrip_request(Request::Flush);
         roundtrip_request(Request::Metrics);
+        roundtrip_request(Request::SubscribeLog {
+            replica: 0xDEAD_BEEF,
+            epoch: 3,
+            bank: 2,
+            generation: 9,
+            offset: 4096,
+        });
+        roundtrip_request(Request::SubscribeLog {
+            replica: 1,
+            epoch: 0,
+            bank: REPL_MANIFEST_BANK,
+            generation: 0,
+            offset: SUBSCRIBE_BOOTSTRAP,
+        });
     }
 
     #[test]
@@ -876,7 +994,50 @@ mod tests {
             text: "# TYPE cscam_lookups_total counter\ncscam_lookups_total 7\n".into(),
         });
         roundtrip_response(Response::Metrics { text: String::new() });
+        roundtrip_response(Response::LogBatch {
+            bank: 3,
+            generation: 2,
+            next_offset: 1234,
+            remaining: 17,
+            frames: vec![0xAB; 64],
+        });
+        roundtrip_response(Response::LogBatch {
+            bank: 0,
+            generation: 0,
+            next_offset: 16,
+            remaining: 0,
+            frames: Vec::new(),
+        });
+        roundtrip_response(Response::SnapshotTransfer {
+            bank: 1,
+            generation: 5,
+            image: (0u16..512).map(|b| b as u8).collect(),
+        });
         roundtrip_response(Response::Error { code: ERR_FULL, aux: 0 });
+        roundtrip_response(Response::Error { code: ERR_FENCED, aux: 4 });
+    }
+
+    #[test]
+    fn repl_byte_payloads_are_bounded_by_the_frame() {
+        // a LogBatch whose length prefix overruns the payload is a
+        // protocol error before any allocation, like the Metrics arm
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 0);
+        put_u64(&mut payload, 1);
+        put_u64(&mut payload, 16);
+        put_u64(&mut payload, 0);
+        put_u32(&mut payload, 1_000_000);
+        payload.extend_from_slice(b"tiny");
+        let mut wire = Vec::new();
+        write_frame(&mut wire, 11, OP_LOG_BATCH, &payload).unwrap();
+        assert!(matches!(read_response(&mut wire.as_slice()), Err(WireError::Protocol(_))));
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 0);
+        put_u64(&mut payload, 1);
+        put_u32(&mut payload, 1_000_000);
+        let mut wire = Vec::new();
+        write_frame(&mut wire, 12, OP_SNAPSHOT_TRANSFER, &payload).unwrap();
+        assert!(matches!(read_response(&mut wire.as_slice()), Err(WireError::Protocol(_))));
     }
 
     #[test]

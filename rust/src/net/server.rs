@@ -41,6 +41,8 @@ use crate::net::proto::{
     self, parse_client_hello, write_server_hello, Request, Response, ServerHello, StatsReport,
     ERR_PROTOCOL, VERSION,
 };
+use crate::net::proto::WireError;
+use crate::repl::ReplRole;
 use crate::shard::ShardedServerHandle;
 
 /// Tunables of the TCP front-end.
@@ -73,6 +75,7 @@ pub struct CamTcpServer {
     fleet: ShardedServerHandle,
     listener: TcpListener,
     cfg: NetConfig,
+    repl: Option<Arc<ReplRole>>,
 }
 
 impl CamTcpServer {
@@ -84,7 +87,18 @@ impl CamTcpServer {
         cfg: NetConfig,
     ) -> std::io::Result<Self> {
         let listener = TcpListener::bind(addr)?;
-        Ok(CamTcpServer { fleet, listener, cfg })
+        Ok(CamTcpServer { fleet, listener, cfg, repl: None })
+    }
+
+    /// Give the front-end a replication role ([`crate::repl`]): a
+    /// `Primary` answers `SubscribeLog` from its data directory and
+    /// reports subscriber lag in its metrics; a `Replica` forwards
+    /// `Insert`/`Delete` to its primary (reads stay local).  Taken as an
+    /// `Arc` so the caller can share the same role with a metrics
+    /// sidecar's render closure.
+    pub fn with_repl(mut self, role: Arc<ReplRole>) -> Self {
+        self.repl = Some(role);
+        self
     }
 
     /// The bound address (read the ephemeral port from here).
@@ -101,7 +115,7 @@ impl CamTcpServer {
             let stop = Arc::clone(&stop);
             std::thread::Builder::new()
                 .name("cscam-net-accept".into())
-                .spawn(move || accept_loop(self.listener, self.fleet, self.cfg, stop))?
+                .spawn(move || accept_loop(self.listener, self.fleet, self.cfg, self.repl, stop))?
         };
         Ok(NetServerHandle { addr, stop, thread: Some(thread), fleet })
     }
@@ -149,6 +163,7 @@ fn accept_loop(
     listener: TcpListener,
     fleet: ShardedServerHandle,
     cfg: NetConfig,
+    repl: Option<Arc<ReplRole>>,
     stop: Arc<AtomicBool>,
 ) {
     if listener.set_nonblocking(true).is_err() {
@@ -187,6 +202,7 @@ fn accept_loop(
                 let slot = LiveSlot::claim(&live);
                 let fleet = fleet.clone();
                 let cfg = cfg.clone();
+                let repl = repl.clone();
                 let stop = Arc::clone(&stop);
                 // spawn failure drops the unexecuted closure (and with it
                 // the slot guard), so the count stays balanced either way
@@ -194,7 +210,7 @@ fn accept_loop(
                     .name("cscam-net-conn".into())
                     .spawn(move || {
                         let _slot = slot;
-                        serve_conn(stream, &fleet, &cfg, &stop);
+                        serve_conn(stream, &fleet, &cfg, repl.as_deref(), &stop);
                     });
             }
             // WouldBlock = no pending connection; other accept errors are
@@ -339,6 +355,7 @@ fn serve_conn(
     stream: TcpStream,
     fleet: &ShardedServerHandle,
     cfg: &NetConfig,
+    repl: Option<&ReplRole>,
     stop: &Arc<AtomicBool>,
 ) {
     let Ok(read_half) = stream.try_clone() else { return };
@@ -387,7 +404,7 @@ fn serve_conn(
             }
             ConnRead::Frame(id, req) => {
                 let is_shutdown = matches!(req, Request::Shutdown);
-                let resp = handle_request(fleet, req, &mut scratch);
+                let resp = handle_request(fleet, req, &mut scratch, repl);
                 let acked = matches!(resp, Response::ShutdownAck);
                 if proto::write_response(&mut writer, id, &resp).is_err()
                     || writer.flush().is_err()
@@ -416,21 +433,38 @@ fn handle_request(
     fleet: &ShardedServerHandle,
     req: Request,
     scratch: &mut DecodeScratch,
+    repl: Option<&ReplRole>,
 ) -> Response {
     match req {
         Request::Insert { tag } => {
             if let Some(e) = check_width(fleet, &tag) {
                 return proto::error_response(&e);
             }
+            // replica role: the mutation goes to the primary and comes
+            // back through the log — never applied locally out of band
+            if let Some(ReplRole::Replica(fw)) = repl {
+                return match fw.insert(&tag) {
+                    Ok(addr) => Response::Inserted { addr },
+                    Err(e) => forward_error_response("insert", e),
+                };
+            }
             match fleet.insert(tag) {
                 Ok(a) => Response::Inserted { addr: a as u64 },
                 Err(e) => proto::error_response(&e),
             }
         }
-        Request::Delete { addr } => match fleet.delete(addr as usize) {
-            Ok(()) => Response::Deleted,
-            Err(e) => proto::error_response(&e),
-        },
+        Request::Delete { addr } => {
+            if let Some(ReplRole::Replica(fw)) = repl {
+                return match fw.delete(addr) {
+                    Ok(()) => Response::Deleted,
+                    Err(e) => forward_error_response("delete", e),
+                };
+            }
+            match fleet.delete(addr as usize) {
+                Ok(()) => Response::Deleted,
+                Err(e) => proto::error_response(&e),
+            }
+        }
         Request::Lookup { tag } => {
             // direct read: this thread snapshots the owning bank's state
             // and searches in place — no channel hop, no queue, identical
@@ -480,16 +514,48 @@ fn handle_request(
             // the wire op has no recovery report (that context lives with
             // the process that opened the data dir — the HTTP sidecar
             // renders it); everything else matches `GET /metrics`
-            Some(fm) => Response::Metrics {
-                text: crate::obs::render_prometheus(
-                    &fm,
-                    fleet.bank_m(),
-                    fleet.tag_bits(),
-                    None,
-                ),
-            },
+            Some(fm) => {
+                let repl_status = match repl {
+                    Some(ReplRole::Primary(feed)) => Some(feed.status()),
+                    _ => None,
+                };
+                Response::Metrics {
+                    text: crate::obs::render_prometheus(
+                        &fm,
+                        fleet.bank_m(),
+                        fleet.tag_bits(),
+                        None,
+                        repl_status.as_ref(),
+                    ),
+                }
+            }
             None => proto::error_response(&EngineError::Shutdown),
         },
+        Request::SubscribeLog { replica, epoch, bank, generation, offset } => match repl {
+            Some(ReplRole::Primary(feed)) => feed.serve(replica, epoch, bank, generation, offset),
+            // no feed here (in-memory fleet, or a replica — chaining is
+            // not supported): the op is unknown to this server
+            _ => Response::Error {
+                code: proto::ERR_UNKNOWN_OP,
+                aux: u64::from(proto::OP_SUBSCRIBE_LOG),
+            },
+        },
+    }
+}
+
+/// Map a failed forwarded mutation onto the wire: typed engine errors
+/// pass through untouched (the primary's verdict), admission shedding
+/// stays `ERR_BUSY`, and a transport failure — the primary unreachable,
+/// so the write was *not* accepted anywhere — answers `ERR_PERSIST` with
+/// the detail in the server log.
+fn forward_error_response(what: &str, e: WireError) -> Response {
+    match e {
+        WireError::Engine(e) => proto::error_response(&e),
+        WireError::Busy => Response::Error { code: proto::ERR_BUSY, aux: 0 },
+        other => {
+            eprintln!("cscam-net: forwarded {what} failed: {other}");
+            Response::Error { code: proto::ERR_PERSIST, aux: 0 }
+        }
     }
 }
 

@@ -91,17 +91,47 @@ impl Exposition {
     }
 }
 
+/// Replication progress snapshot for the exposition — produced by
+/// [`crate::repl`] (the feed's controller on a primary, the chaser's own
+/// cursors on a replica); obs only renders it, so the dependency points
+/// repl → obs and the renderer stays usable without a replication role.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ReplStatus {
+    /// Fleet epoch this node serves at (promotion increments it; a
+    /// subscriber from an older epoch is fenced).
+    pub epoch: u64,
+    /// Per-subscriber, per-bank progress.  A replica reports one row per
+    /// bank with its own id.
+    pub lags: Vec<ReplLag>,
+}
+
+/// One subscriber's progress on one bank's log.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReplLag {
+    /// Subscriber id (the `replica` field of its `SubscribeLog` polls).
+    pub replica: u64,
+    /// Bank index.
+    pub bank: u32,
+    /// WAL byte offset the subscriber has acknowledged — everything
+    /// before it is applied on the replica.
+    pub acked_offset: u64,
+    /// Complete records appended past the acked offset: the lag.
+    pub lag_records: u64,
+}
+
 /// Render the fleet's serving metrics as one Prometheus exposition page.
 ///
 /// `bank_m`/`bank_n` are the per-bank geometry (for the modelled
 /// fJ/bit/search); `recovery` adds the `cscam_recovery_*` gauges when the
 /// fleet was opened durably (the HTTP sidecar has it, the wire op does
-/// not — a purely in-memory fleet simply omits the family).
+/// not — a purely in-memory fleet simply omits the family); `repl` adds
+/// the `cscam_repl_*` gauges on a node with a replication role.
 pub fn render_prometheus(
     fleet: &FleetMetrics,
     bank_m: usize,
     bank_n: usize,
     recovery: Option<&FleetRecovery>,
+    repl: Option<&ReplStatus>,
 ) -> String {
     let mut e = Exposition::new();
     let a = &fleet.aggregate;
@@ -222,6 +252,41 @@ pub fn render_prometheus(
             "1 when the fleet manifest already existed (restart), 0 on first boot.",
         );
         e.series("cscam_recovery_manifest_loaded", if rec.manifest_loaded { 1.0 } else { 0.0 });
+    }
+
+    if let Some(rs) = repl {
+        e.family(
+            "cscam_repl_epoch",
+            "gauge",
+            "Fleet epoch this node serves at (promotion increments it; \
+             subscribers from older epochs are fenced).",
+        );
+        e.series("cscam_repl_epoch", rs.epoch as f64);
+        e.family(
+            "cscam_repl_acked_offset",
+            "gauge",
+            "WAL byte offset each subscriber has acknowledged, per replica and bank.",
+        );
+        for l in &rs.lags {
+            e.labelled(
+                "cscam_repl_acked_offset",
+                &[("replica", format!("{}", l.replica)), ("bank", format!("{}", l.bank))],
+                l.acked_offset as f64,
+            );
+        }
+        e.family(
+            "cscam_repl_lag_records",
+            "gauge",
+            "Records appended past the acked offset — each subscriber's lag, \
+             per replica and bank.",
+        );
+        for l in &rs.lags {
+            e.labelled(
+                "cscam_repl_lag_records",
+                &[("replica", format!("{}", l.replica)), ("bank", format!("{}", l.bank))],
+                l.lag_records as f64,
+            );
+        }
     }
 
     e.out
@@ -395,7 +460,7 @@ mod tests {
 
     #[test]
     fn exposition_carries_the_headline_series() {
-        let text = render_prometheus(&sample_fleet(), 64, 32, None);
+        let text = render_prometheus(&sample_fleet(), 64, 32, None, None);
         for needle in [
             "# TYPE cscam_lookups_total counter",
             "cscam_lookups_total 40",
@@ -413,7 +478,30 @@ mod tests {
             assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
         }
         assert!(!text.contains("cscam_recovery_"), "no recovery block without a report");
+        assert!(!text.contains("cscam_repl_"), "no replication block without a status");
         assert!(!text.contains("NaN"));
+    }
+
+    #[test]
+    fn repl_block_renders_per_replica_per_bank_series() {
+        let rs = ReplStatus {
+            epoch: 3,
+            lags: vec![
+                ReplLag { replica: 7, bank: 0, acked_offset: 16, lag_records: 0 },
+                ReplLag { replica: 7, bank: 1, acked_offset: 96, lag_records: 4 },
+            ],
+        };
+        let text = render_prometheus(&sample_fleet(), 64, 32, None, Some(&rs));
+        for needle in [
+            "# TYPE cscam_repl_epoch gauge",
+            "cscam_repl_epoch 3",
+            "cscam_repl_acked_offset{replica=\"7\",bank=\"0\"} 16",
+            "cscam_repl_acked_offset{replica=\"7\",bank=\"1\"} 96",
+            "cscam_repl_lag_records{replica=\"7\",bank=\"0\"} 0",
+            "cscam_repl_lag_records{replica=\"7\",bank=\"1\"} 4",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
     }
 
     #[test]
@@ -438,7 +526,7 @@ mod tests {
                 },
             ],
         };
-        let text = render_prometheus(&sample_fleet(), 64, 32, Some(&rec));
+        let text = render_prometheus(&sample_fleet(), 64, 32, Some(&rec), None);
         assert!(text.contains("cscam_recovery_replayed_records 10"));
         assert!(text.contains("cscam_recovery_recovered_entries 8"));
         assert!(text.contains("cscam_recovery_truncated_banks 1"));
@@ -452,7 +540,7 @@ mod tests {
             per_bank: vec![Metrics::new()],
             aggregate: Metrics::new(),
         };
-        let text = render_prometheus(&fleet, 64, 32, None);
+        let text = render_prometheus(&fleet, 64, 32, None, None);
         assert!(!text.contains("NaN"), "empty fleet must render finite:\n{text}");
         assert!(text.contains("cscam_energy_fj_per_bit_per_search 0"));
     }
@@ -460,7 +548,7 @@ mod tests {
     #[test]
     fn http_sidecar_answers_a_scrape() {
         let render: RenderFn =
-            Arc::new(|| render_prometheus(&sample_fleet(), 64, 32, None));
+            Arc::new(|| render_prometheus(&sample_fleet(), 64, 32, None, None));
         let h = MetricsHttpServer::spawn("127.0.0.1:0", render).unwrap();
         let addr = h.local_addr();
 

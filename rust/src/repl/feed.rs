@@ -1,0 +1,414 @@
+//! The primary side of log shipping: [`ReplicaFeed`] answers
+//! `SubscribeLog` polls from the primary's own data directory, and
+//! [`ReplicationController`] tracks every subscriber's progress.
+//!
+//! The feed holds **no queue and no per-subscriber send state** — each
+//! poll is answered by reading the bank's WAL file past the requested
+//! offset ([`crate::store::wal::tail_wal`]).  That is safe against the
+//! live writer thread because appends are write-through and every frame
+//! carries its own length prefix and checksum (a concurrently appended
+//! partial frame just ends the batch), and a concurrent compaction is
+//! seen as a generation change, answered with a fresh
+//! `SnapshotTransfer` instead of a stale log prefix (WAL replay is not
+//! idempotent, so a stale prefix must never be shipped).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::net::proto::{
+    Response, ERR_FENCED, ERR_PERSIST, ERR_PROTOCOL, REPL_MANIFEST_BANK, SUBSCRIBE_BOOTSTRAP,
+};
+use crate::obs::{ReplLag, ReplStatus};
+use crate::store::wal::{self, TailStep, WAL_HEADER_LEN};
+use crate::store::{BankImage, FleetManifest, StoreError, SNAPSHOT_FILE, WAL_FILE};
+
+/// Default per-poll cap on shipped frame bytes (1 MiB — far below the
+/// wire's `MAX_FRAME_LEN`, large enough that a chasing replica converges
+/// in a few round trips).
+pub const DEFAULT_BATCH_BYTES: usize = 1 << 20;
+
+/// Per-subscriber, per-bank progress as seen by the feed.
+#[derive(Debug, Clone, Copy, Default)]
+struct BankProgress {
+    acked_offset: u64,
+    lag_records: u64,
+}
+
+/// Tracks every subscriber's acknowledged offsets and lag.  An offset is
+/// "acked" when the subscriber *requests* it — the poll for offset `o`
+/// proves everything before `o` was applied — so the controller needs no
+/// second acknowledgement channel.  Feeds the `cscam_repl_*` gauges and
+/// the operator's failover choice (promote the replica with the highest
+/// acked offsets).
+pub struct ReplicationController {
+    epoch: u64,
+    progress: Mutex<BTreeMap<(u64, u32), BankProgress>>,
+}
+
+impl ReplicationController {
+    pub fn new(epoch: u64) -> ReplicationController {
+        ReplicationController { epoch, progress: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// The fleet epoch this controller's feed serves at.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    fn observe(&self, replica: u64, bank: u32, acked_offset: u64, lag_records: u64) {
+        let mut map = self.progress.lock().unwrap_or_else(|p| p.into_inner());
+        let entry = map.entry((replica, bank)).or_default();
+        entry.acked_offset = acked_offset;
+        entry.lag_records = lag_records;
+    }
+
+    /// Snapshot of every subscriber's progress for the exposition.
+    pub fn status(&self) -> ReplStatus {
+        let map = self.progress.lock().unwrap_or_else(|p| p.into_inner());
+        ReplStatus {
+            epoch: self.epoch,
+            lags: map
+                .iter()
+                .map(|(&(replica, bank), p)| ReplLag {
+                    replica,
+                    bank,
+                    acked_offset: p.acked_offset,
+                    lag_records: p.lag_records,
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Answers `SubscribeLog` polls from a fleet data directory.
+///
+/// One poll → one response:
+///
+/// * pseudo-bank [`REPL_MANIFEST_BANK`] → `SnapshotTransfer` carrying the
+///   `fleet.kv` manifest text with `generation` = the fleet epoch (this
+///   is how a joining replica learns the epoch, so it is exempt from the
+///   fence check);
+/// * stale subscriber epoch → `ERR_FENCED` with the feed's epoch in
+///   `aux`;
+/// * offset [`SUBSCRIBE_BOOTSTRAP`] → `SnapshotTransfer` of the bank's
+///   snapshot file, or (never-compacted bank) the generation-0 log from
+///   its first frame;
+/// * a live cursor → `LogBatch` of whole frames past it, capped at
+///   [`DEFAULT_BATCH_BYTES`] per poll; a cursor whose generation the log
+///   has moved past is answered like a bootstrap.
+pub struct ReplicaFeed {
+    dir: PathBuf,
+    epoch: u64,
+    manifest_text: String,
+    banks: u32,
+    batch_bytes: usize,
+    controller: ReplicationController,
+}
+
+impl ReplicaFeed {
+    /// Open a feed over the fleet directory at `dir` (the same directory
+    /// the serving fleet holds open; the feed only reads).
+    pub fn open(dir: &Path) -> Result<ReplicaFeed, StoreError> {
+        let manifest = FleetManifest::load(dir)?;
+        Ok(ReplicaFeed {
+            dir: dir.to_path_buf(),
+            epoch: manifest.epoch,
+            manifest_text: manifest.to_kv(),
+            banks: manifest.cfg.shards as u32,
+            batch_bytes: DEFAULT_BATCH_BYTES,
+            controller: ReplicationController::new(manifest.epoch),
+        })
+    }
+
+    /// Override the per-poll frame-byte cap (tests drive multi-batch
+    /// chases with tiny caps).
+    pub fn with_batch_bytes(mut self, batch_bytes: usize) -> ReplicaFeed {
+        self.batch_bytes = batch_bytes.max(1);
+        self
+    }
+
+    /// The fleet epoch this feed serves at.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Subscriber progress for the exposition.
+    pub fn status(&self) -> ReplStatus {
+        self.controller.status()
+    }
+
+    /// Answer one `SubscribeLog` poll.
+    pub fn serve(
+        &self,
+        replica: u64,
+        epoch: u64,
+        bank: u32,
+        generation: u64,
+        offset: u64,
+    ) -> Response {
+        if bank == REPL_MANIFEST_BANK {
+            return Response::SnapshotTransfer {
+                bank: REPL_MANIFEST_BANK,
+                generation: self.epoch,
+                image: self.manifest_text.clone().into_bytes(),
+            };
+        }
+        if epoch != self.epoch {
+            return Response::Error { code: ERR_FENCED, aux: self.epoch };
+        }
+        if bank >= self.banks {
+            return Response::Error { code: ERR_PROTOCOL, aux: u64::from(bank) };
+        }
+        if offset == SUBSCRIBE_BOOTSTRAP {
+            return self.bootstrap(bank);
+        }
+        let path = self.bank_dir(bank).join(WAL_FILE);
+        match wal::tail_wal(&path, generation, offset, self.batch_bytes) {
+            Ok(TailStep::Batch { generation, next_offset, frames, records, remaining }) => {
+                // requesting `offset` acknowledges everything before it;
+                // the subscriber's lag is everything at or past it
+                self.controller.observe(replica, bank, offset, records + remaining);
+                Response::LogBatch { bank, generation, next_offset, remaining, frames }
+            }
+            // the cursor's log is gone (a compaction reset it): restart
+            // the stream from the current snapshot, never a stale prefix
+            Ok(TailStep::Restarted { .. }) => self.bootstrap(bank),
+            Err(e) => {
+                eprintln!("cscam-repl: feed tail of bank {bank} failed: {e}");
+                Response::Error { code: ERR_PERSIST, aux: 0 }
+            }
+        }
+    }
+
+    fn bank_dir(&self, bank: u32) -> PathBuf {
+        self.dir.join(format!("bank-{bank}"))
+    }
+
+    fn bootstrap(&self, bank: u32) -> Response {
+        let dir = self.bank_dir(bank);
+        // Compaction renames the snapshot into place *before* resetting
+        // the WAL, so a log at generation > 0 implies a snapshot exists;
+        // one retry covers the rename racing the exists() check.
+        for _ in 0..2 {
+            let snap = dir.join(SNAPSHOT_FILE);
+            if snap.exists() {
+                return match std::fs::read(&snap)
+                    .map_err(StoreError::Io)
+                    .and_then(|bytes| BankImage::decode(&bytes).map(|img| (img, bytes)))
+                {
+                    Ok((img, bytes)) => Response::SnapshotTransfer {
+                        bank,
+                        generation: img.wal_generation,
+                        image: bytes,
+                    },
+                    Err(e) => {
+                        eprintln!("cscam-repl: feed snapshot of bank {bank} unreadable: {e}");
+                        Response::Error { code: ERR_PERSIST, aux: 0 }
+                    }
+                };
+            }
+            // never-compacted bank: its whole history is the generation-0
+            // log, shipped from the first frame
+            match wal::tail_wal(&dir.join(WAL_FILE), 0, WAL_HEADER_LEN, self.batch_bytes) {
+                Ok(TailStep::Batch { generation, next_offset, frames, records: _, remaining }) => {
+                    return Response::LogBatch { bank, generation, next_offset, remaining, frames }
+                }
+                // the log moved past generation 0 — a snapshot just
+                // landed; re-check for it
+                Ok(TailStep::Restarted { .. }) => continue,
+                Err(e) => {
+                    eprintln!("cscam-repl: feed bootstrap tail of bank {bank} failed: {e}");
+                    return Response::Error { code: ERR_PERSIST, aux: 0 };
+                }
+            }
+        }
+        eprintln!("cscam-repl: bank {bank} kept restarting mid-bootstrap");
+        Response::Error { code: ERR_PERSIST, aux: 0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DesignConfig;
+    use crate::coordinator::BatchPolicy;
+    use crate::shard::{PlacementMode, ShardedCamServer, ShardedServerHandle};
+    use crate::store::StoreOptions;
+    use crate::util::Rng;
+    use crate::workload::TagDistribution;
+    use std::path::PathBuf;
+    use std::time::Duration;
+
+    fn test_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("cscam-repl-feed-{}", std::process::id()))
+            .join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn cfg() -> DesignConfig {
+        DesignConfig { shards: 2, ..DesignConfig::small_test() }
+    }
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(100) }
+    }
+
+    fn open_primary(dir: &Path) -> ShardedServerHandle {
+        let (fleet, _) = ShardedCamServer::open_durable(
+            &cfg(),
+            PlacementMode::TagHash,
+            policy(),
+            dir,
+            StoreOptions::default(),
+        )
+        .unwrap();
+        fleet.spawn()
+    }
+
+    #[test]
+    fn feed_serves_manifest_fences_and_ships_the_log() {
+        let dir = test_dir("serve");
+        let handle = open_primary(&dir);
+        let mut rng = Rng::seed_from_u64(7);
+        let tags = TagDistribution::Uniform.sample_distinct(cfg().n, 12, &mut rng);
+        for t in &tags {
+            handle.insert(t.clone()).unwrap();
+        }
+
+        let feed = ReplicaFeed::open(&dir).unwrap();
+        assert_eq!(feed.epoch(), 0);
+
+        // the manifest pseudo-bank answers regardless of epoch and
+        // carries the fleet epoch as its generation
+        match feed.serve(1, 999, REPL_MANIFEST_BANK, 0, SUBSCRIBE_BOOTSTRAP) {
+            Response::SnapshotTransfer { bank, generation, image } => {
+                assert_eq!(bank, REPL_MANIFEST_BANK);
+                assert_eq!(generation, 0);
+                let m = FleetManifest::from_kv(&String::from_utf8(image).unwrap()).unwrap();
+                assert_eq!(m.cfg, cfg());
+                assert_eq!(m.epoch, 0);
+            }
+            other => panic!("manifest poll answered {other:?}"),
+        }
+
+        // a subscriber from another epoch is fenced, with the feed's
+        // epoch in aux
+        match feed.serve(1, 3, 0, 0, WAL_HEADER_LEN) {
+            Response::Error { code: ERR_FENCED, aux } => assert_eq!(aux, 0),
+            other => panic!("stale epoch answered {other:?}"),
+        }
+
+        // a bank index past the fleet is a protocol error, not a panic
+        assert!(matches!(
+            feed.serve(1, 0, 99, 0, WAL_HEADER_LEN),
+            Response::Error { code: ERR_PROTOCOL, .. }
+        ));
+
+        // bootstrap of a never-compacted bank ships the generation-0 log;
+        // chasing to next_offset drains it and registers the ack
+        let mut total = 0usize;
+        for bank in 0..2u32 {
+            let (generation, next_offset, frames) =
+                match feed.serve(1, 0, bank, 0, SUBSCRIBE_BOOTSTRAP) {
+                    Response::LogBatch { generation, next_offset, remaining, frames, .. } => {
+                        assert_eq!(remaining, 0);
+                        (generation, next_offset, frames)
+                    }
+                    other => panic!("bootstrap answered {other:?}"),
+                };
+            assert_eq!(generation, 0);
+            let records = wal::decode_frames(&frames).unwrap();
+            total += records.len();
+            match feed.serve(1, 0, bank, generation, next_offset) {
+                Response::LogBatch { next_offset: n2, remaining, frames, .. } => {
+                    assert_eq!(n2, next_offset, "caught-up poll must not advance");
+                    assert_eq!(remaining, 0);
+                    assert!(frames.is_empty());
+                }
+                other => panic!("caught-up poll answered {other:?}"),
+            }
+            let status = feed.status();
+            let row = status
+                .lags
+                .iter()
+                .find(|l| l.replica == 1 && l.bank == bank)
+                .expect("poll must register progress");
+            assert_eq!(row.acked_offset, next_offset);
+            assert_eq!(row.lag_records, 0);
+        }
+        assert_eq!(total, tags.len(), "every insert ships exactly once across the banks");
+        handle.shutdown().unwrap();
+    }
+
+    #[test]
+    fn tiny_batch_cap_pages_through_the_log_with_honest_lag() {
+        let dir = test_dir("paging");
+        let handle = open_primary(&dir);
+        let mut rng = Rng::seed_from_u64(8);
+        let tags = TagDistribution::Uniform.sample_distinct(cfg().n, 10, &mut rng);
+        for t in &tags {
+            handle.insert(t.clone()).unwrap();
+        }
+        // cap of one byte: every poll ships exactly one frame (the cap
+        // always admits at least one), the rest counted as lag
+        let feed = ReplicaFeed::open(&dir).unwrap().with_batch_bytes(1);
+        let mut shipped = 0usize;
+        for bank in 0..2u32 {
+            let mut offset = WAL_HEADER_LEN;
+            let mut last_remaining = u64::MAX;
+            loop {
+                match feed.serve(2, 0, bank, 0, offset) {
+                    Response::LogBatch { next_offset, remaining, frames, .. } => {
+                        if frames.is_empty() {
+                            assert_eq!(remaining, 0);
+                            break;
+                        }
+                        let records = wal::decode_frames(&frames).unwrap();
+                        assert_eq!(records.len(), 1, "one frame per capped poll");
+                        assert!(remaining < last_remaining, "lag must shrink every poll");
+                        last_remaining = remaining;
+                        shipped += 1;
+                        offset = next_offset;
+                    }
+                    other => panic!("capped poll answered {other:?}"),
+                }
+            }
+        }
+        assert_eq!(shipped, tags.len(), "paged polls ship the whole history exactly once");
+        handle.shutdown().unwrap();
+    }
+
+    #[test]
+    fn a_stale_cursor_is_answered_with_the_fresh_snapshot_not_a_stale_prefix() {
+        let dir = test_dir("restart");
+        let handle = open_primary(&dir);
+        let mut rng = Rng::seed_from_u64(9);
+        for t in &TagDistribution::Uniform.sample_distinct(cfg().n, 12, &mut rng) {
+            handle.insert(t.clone()).unwrap();
+        }
+        handle.snapshot_stores().unwrap(); // compaction: snapshot + WAL reset, generation 1
+
+        let feed = ReplicaFeed::open(&dir).unwrap();
+        // the old generation-0 cursor no longer exists; the feed must
+        // restart the stream from the generation-1 snapshot
+        match feed.serve(1, 0, 0, 0, WAL_HEADER_LEN) {
+            Response::SnapshotTransfer { bank, generation, image } => {
+                assert_eq!(bank, 0);
+                assert_eq!(generation, 1);
+                let img = BankImage::decode(&image).unwrap();
+                assert_eq!(img.wal_generation, 1);
+            }
+            other => panic!("stale cursor answered {other:?}"),
+        }
+        // bootstrap now also comes from the snapshot
+        assert!(matches!(
+            feed.serve(1, 0, 0, 0, SUBSCRIBE_BOOTSTRAP),
+            Response::SnapshotTransfer { generation: 1, .. }
+        ));
+        handle.shutdown().unwrap();
+    }
+}

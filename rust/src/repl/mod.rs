@@ -1,0 +1,137 @@
+//! L8 — replication: log-shipping primary→replica streaming, read
+//! replicas, and failover promotion with epoch fencing.
+//!
+//! The design rides entirely on two invariants the lower layers already
+//! provide:
+//!
+//! 1. **The per-bank WAL is the replication log.**  Every acknowledged
+//!    mutation is a checksummed frame in `bank-<i>/wal.log` *before* the
+//!    client sees the ack ([`crate::store`]), and replay order equals
+//!    acknowledgement order.  [`ReplicaFeed`] therefore tails the
+//!    primary's own files ([`crate::store::wal::tail_wal`]) — no second
+//!    log, no divergent encoding — and ships the verbatim frame bytes.
+//! 2. **Apply and replay are one code path.**  A replica pushes shipped
+//!    records through the same [`crate::store::apply_record`] the
+//!    recovery replay uses, inside the bank writer's barrier
+//!    ([`crate::coordinator::server::ServerHandle::apply_replicated`]),
+//!    which logs to the replica's own WAL and RCU-publishes a fresh
+//!    `SearchState` — so replica reads go through the exact reader-pool
+//!    machinery of a primary, bit-identical field for field.
+//!
+//! ```text
+//!   primary                                 replica
+//!   ┌───────────────────────┐   SubscribeLog  ┌──────────────────────┐
+//!   │ banks ── WAL files ◀──┼──(poll, v5)─────┼── chaser thread      │
+//!   │           │           │                 │   │ decode_frames    │
+//!   │      ReplicaFeed ─────┼──LogBatch ─────▶│   ▼ apply_replicated │
+//!   │  (tail_wal, snapshots)│  SnapshotTransfer   banks ── WAL ── RCU│
+//!   │ ReplicationController │                 │   reads: reader pools│
+//!   └───────────────────────┘                 │   writes: forwarded ─┼──▶ primary
+//!                                             └──────────────────────┘
+//! ```
+//!
+//! **Ordering and the ack point.**  A `SubscribeLog` requesting offset
+//! `o` *is* the acknowledgement of every byte before `o` — the feed keeps
+//! no send queue and nothing is dropped by a slow replica; it just reads
+//! an earlier suffix of the file.  Because frames enter the WAL before
+//! the client ack, "every acked write" is exactly "every frame below the
+//! tail", and a replica whose cursor reaches the tail has every
+//! acknowledged write.
+//!
+//! **Failover and fencing.**  The `fleet.kv` manifest carries an
+//! **epoch** ([`crate::store::FleetManifest::epoch`]).  [`promote`] bumps
+//! it on the chosen replica's directory (pick the replica with the
+//! highest acked offsets — the [`ReplicationController`] exposes them);
+//! the promoted fleet then serves writes.  Every `SubscribeLog` carries
+//! the subscriber's epoch, and a feed refuses a mismatch with
+//! `ERR_FENCED`, so an old primary that comes back and tries to chase
+//! (or a replica still keyed to the dead lineage) is fenced off instead
+//! of silently forking history.
+
+pub mod feed;
+pub mod replica;
+
+pub use feed::{ReplicaFeed, ReplicationController};
+pub use replica::{ReplicaOptions, ReplicaServer, WriteForwarder};
+
+use std::path::Path;
+
+use crate::coordinator::server::PersistError;
+use crate::net::proto::WireError;
+use crate::store::{FleetManifest, StoreError};
+
+/// The replication role a TCP front-end serves with
+/// ([`crate::net::CamTcpServer::with_repl`]).
+pub enum ReplRole {
+    /// This node owns the data: answer `SubscribeLog` from its data
+    /// directory and track subscriber progress.
+    Primary(ReplicaFeed),
+    /// This node chases a primary: serve reads locally, forward `Insert`
+    /// and `Delete` upstream (the mutation comes back through the log).
+    Replica(WriteForwarder),
+}
+
+/// Errors of the replication layer.
+#[derive(Debug)]
+pub enum ReplError {
+    /// The upstream connection or protocol failed.
+    Wire(WireError),
+    /// The local durability layer failed.
+    Store(StoreError),
+    /// A bank writer barrier failed.
+    Persist(PersistError),
+    /// The feed refused this subscriber's epoch — the fleet was promoted
+    /// past it and this lineage must not be replayed.
+    Fenced { local: u64, server: u64 },
+    /// The feed answered something the protocol does not allow here.
+    Protocol(String),
+}
+
+impl std::fmt::Display for ReplError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReplError::Wire(e) => write!(f, "replication transport: {e}"),
+            ReplError::Store(e) => write!(f, "replication store: {e}"),
+            ReplError::Persist(e) => write!(f, "replication apply: {e}"),
+            ReplError::Fenced { local, server } => write!(
+                f,
+                "fenced: this node is at epoch {local}, the feed serves epoch {server}"
+            ),
+            ReplError::Protocol(msg) => write!(f, "replication protocol: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ReplError {}
+
+impl From<WireError> for ReplError {
+    fn from(e: WireError) -> Self {
+        ReplError::Wire(e)
+    }
+}
+
+impl From<StoreError> for ReplError {
+    fn from(e: StoreError) -> Self {
+        ReplError::Store(e)
+    }
+}
+
+impl From<PersistError> for ReplError {
+    fn from(e: PersistError) -> Self {
+        ReplError::Persist(e)
+    }
+}
+
+/// Promote the fleet at `dir`: bump the manifest epoch by one and store
+/// it durably.  Run *offline* (the serving process stopped) on the
+/// replica chosen to take over — typically the one whose acked offsets
+/// were highest.  Returns the new epoch.  After promotion the directory
+/// serves as a writable primary, and any subscriber still at the old
+/// epoch (including the crashed ex-primary, should it rejoin as a
+/// replica) is refused with `ERR_FENCED`.
+pub fn promote(dir: &Path) -> Result<u64, StoreError> {
+    let mut manifest = FleetManifest::load(dir)?;
+    manifest.epoch += 1;
+    manifest.store(dir)?;
+    Ok(manifest.epoch)
+}

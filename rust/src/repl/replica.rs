@@ -1,0 +1,503 @@
+//! The replica side: bootstrap from a primary, chase its log, serve
+//! reads, forward writes.
+//!
+//! [`ReplicaServer::start`] connects to the primary, fetches the fleet
+//! manifest (adopting its geometry, placement and epoch), opens its own
+//! *durable* local fleet, installs a state transfer for every bank, and
+//! then spawns a chaser thread that polls `SubscribeLog` per bank and
+//! pushes each batch through
+//! [`crate::coordinator::server::ServerHandle::apply_replicated`] — the
+//! same barrier ordering as a primary mutation (engine apply → local WAL
+//! → RCU publish), so replica reads come off published `SearchState`
+//! snapshots exactly like primary reads, and a replica restart recovers
+//! from its *own* disk before chasing the delta.
+//!
+//! A batch that fails to apply (or to decode) never advances the cursor
+//! — but because a failed apply may have landed a prefix, the bank is
+//! re-bootstrapped from a fresh state transfer rather than re-polled
+//! (WAL replay is not idempotent; re-shipping an applied prefix would
+//! double-apply it).  A feed answer of `ERR_FENCED` ends the chase for
+//! good: the fleet was promoted past this lineage.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::bits::BitVec;
+use crate::config::DesignConfig;
+use crate::coordinator::engine::LookupEngine;
+use crate::coordinator::server::PersistError;
+use crate::coordinator::BatchPolicy;
+use crate::net::client::LogPoll;
+use crate::net::proto::{WireError, SUBSCRIBE_BOOTSTRAP};
+use crate::net::CamClient;
+use crate::obs::{ReplLag, ReplStatus};
+use crate::repl::ReplError;
+use crate::shard::{FleetRecovery, ShardedCamServer, ShardedServerHandle};
+use crate::store::wal::{self, WAL_HEADER_LEN};
+use crate::store::{BankImage, FleetManifest, StoreError, StoreOptions};
+
+/// Tunables of a replica.
+#[derive(Debug, Clone)]
+pub struct ReplicaOptions {
+    /// Subscriber id sent with every poll (labels the primary's
+    /// `cscam_repl_*` series).
+    pub replica_id: u64,
+    /// Sleep between caught-up chase passes (and after an unreachable
+    /// upstream, before retrying).
+    pub poll_interval: Duration,
+    /// The replica's own durability options (its WAL/snapshot cadence is
+    /// independent of the primary's).
+    pub store: StoreOptions,
+    /// Batcher policy of the local bank writer threads.
+    pub policy: BatchPolicy,
+    /// Reader-pool size per bank (0 = engine-thread reads).
+    pub readers: usize,
+}
+
+impl Default for ReplicaOptions {
+    fn default() -> Self {
+        ReplicaOptions {
+            replica_id: u64::from(std::process::id()),
+            poll_interval: Duration::from_millis(20),
+            store: StoreOptions::default(),
+            policy: BatchPolicy::default(),
+            readers: 0,
+        }
+    }
+}
+
+/// Per-bank chase cursor: the primary's `(generation, offset)` this
+/// replica has fully applied.  `offset == SUBSCRIBE_BOOTSTRAP` marks a
+/// bank awaiting a (re-)bootstrap.
+type Cursor = (u64, u64);
+
+struct ChaseState {
+    cursors: Vec<Cursor>,
+    lags: Vec<u64>,
+    fenced: Option<u64>,
+    caught_up: bool,
+    applied: u64,
+}
+
+fn with_state<R>(state: &Mutex<ChaseState>, f: impl FnOnce(&mut ChaseState) -> R) -> R {
+    f(&mut state.lock().unwrap_or_else(|p| p.into_inner()))
+}
+
+/// A running read replica: a durable local fleet plus the chaser thread
+/// keeping it converged with the primary's log.
+pub struct ReplicaServer {
+    fleet: ShardedServerHandle,
+    recovery: FleetRecovery,
+    upstream: String,
+    epoch: u64,
+    replica_id: u64,
+    stop: Arc<AtomicBool>,
+    state: Arc<Mutex<ChaseState>>,
+    chaser: Option<JoinHandle<()>>,
+}
+
+impl ReplicaServer {
+    /// Bootstrap from the primary at `upstream` into the local directory
+    /// `dir` and start chasing.  Returns once every bank holds a state
+    /// transfer (reads served after this are a consistent-if-lagging view
+    /// of the primary); the chaser converges the remaining delta in the
+    /// background.
+    pub fn start(
+        upstream: &str,
+        dir: &Path,
+        opts: ReplicaOptions,
+    ) -> Result<ReplicaServer, ReplError> {
+        let mut client = CamClient::connect(upstream)?;
+        let manifest = fetch_manifest(&mut client, opts.replica_id)?;
+        let epoch = manifest.epoch;
+        std::fs::create_dir_all(dir).map_err(StoreError::Io)?;
+        // adopt the primary's manifest locally — geometry, placement and
+        // epoch — so a promoted replica carries the lineage marker
+        manifest.store(dir)?;
+        let mode = manifest.placement.to_mode(manifest.cfg.n)?;
+        let (fleet, recovery) = ShardedCamServer::open_durable(
+            &manifest.cfg,
+            mode,
+            opts.policy,
+            dir,
+            opts.store,
+        )?;
+        let fleet = if opts.readers > 0 { fleet.with_readers(opts.readers) } else { fleet };
+        let handle = fleet.spawn();
+        let per_bank = manifest.cfg.per_bank();
+
+        // bootstrap every bank before anything is served: each gets a
+        // state transfer (or the full generation-0 log), so stale local
+        // state from an earlier run can never leak into the lineage
+        let shards = handle.shard_count();
+        let mut cursors = Vec::with_capacity(shards);
+        for bank in 0..shards {
+            cursors.push(bootstrap_bank(
+                &mut client,
+                &handle,
+                &per_bank,
+                opts.replica_id,
+                epoch,
+                bank as u32,
+            )?);
+        }
+
+        let state = Arc::new(Mutex::new(ChaseState {
+            lags: vec![0; shards],
+            cursors,
+            fenced: None,
+            caught_up: false,
+            applied: 0,
+        }));
+        let stop = Arc::new(AtomicBool::new(false));
+        let chaser = {
+            let handle = handle.clone();
+            let state = Arc::clone(&state);
+            let stop = Arc::clone(&stop);
+            let poll = opts.poll_interval;
+            let replica_id = opts.replica_id;
+            std::thread::Builder::new()
+                .name("cscam-repl-chaser".into())
+                .spawn(move || {
+                    chase(client, handle, per_bank, state, stop, replica_id, epoch, poll)
+                })
+                .map_err(StoreError::Io)?
+        };
+
+        Ok(ReplicaServer {
+            fleet: handle,
+            recovery,
+            upstream: upstream.to_string(),
+            epoch,
+            replica_id: opts.replica_id,
+            stop,
+            state,
+            chaser: Some(chaser),
+        })
+    }
+
+    /// The local fleet handle — bind a [`crate::net::CamTcpServer`] over
+    /// a clone of this to serve wire lookups.
+    pub fn fleet(&self) -> ShardedServerHandle {
+        self.fleet.clone()
+    }
+
+    /// What the local durable open recovered (feeds `cscam_recovery_*`).
+    pub fn recovery(&self) -> &FleetRecovery {
+        &self.recovery
+    }
+
+    /// The fleet epoch adopted at bootstrap.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// A forwarder for this replica's upstream, for the TCP front-end's
+    /// replica role.
+    pub fn forwarder(&self) -> WriteForwarder {
+        WriteForwarder::new(self.upstream.clone())
+    }
+
+    /// `Some(server_epoch)` once the feed fenced this replica off (the
+    /// fleet was promoted past this lineage); the chase has stopped.
+    pub fn fenced(&self) -> Option<u64> {
+        with_state(&self.state, |s| s.fenced)
+    }
+
+    /// Records applied through the chase so far (excludes bootstrap
+    /// state transfers).
+    pub fn applied_records(&self) -> u64 {
+        with_state(&self.state, |s| s.applied)
+    }
+
+    /// This replica's own progress view for the exposition: one row per
+    /// bank under its own replica id.
+    pub fn status(&self) -> ReplStatus {
+        status_of(&self.state, self.epoch, self.replica_id)
+    }
+
+    /// A `'static` snapshotter of [`ReplicaServer::status`] for a metrics
+    /// sidecar's render closure: shares the chase state, so it stays
+    /// valid while the server runs and goes quiet after shutdown.
+    pub fn status_fn(&self) -> impl Fn() -> ReplStatus + Send + Sync + 'static {
+        let state = Arc::clone(&self.state);
+        let (epoch, replica) = (self.epoch, self.replica_id);
+        move || status_of(&state, epoch, replica)
+    }
+
+    /// Block until a full chase pass found every bank caught up (empty
+    /// batch, zero remaining), or `timeout` passes.  Returns whether it
+    /// converged.  A fence ends the wait immediately with `false`.
+    pub fn wait_caught_up(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let (caught_up, fenced) = with_state(&self.state, |s| (s.caught_up, s.fenced));
+            if fenced.is_some() {
+                return false;
+            }
+            if caught_up {
+                return true;
+            }
+            if Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    /// Stop the chase and shut the local fleet down (drain + WAL flush).
+    pub fn shutdown(mut self) -> Result<(), PersistError> {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.chaser.take() {
+            let _ = t.join();
+        }
+        self.fleet.shutdown()
+    }
+}
+
+/// Build the per-bank progress rows out of the chase state.
+fn status_of(state: &Mutex<ChaseState>, epoch: u64, replica: u64) -> ReplStatus {
+    with_state(state, |s| ReplStatus {
+        epoch,
+        lags: s
+            .cursors
+            .iter()
+            .zip(&s.lags)
+            .enumerate()
+            .map(|(bank, (&(_, offset), &lag))| ReplLag {
+                replica,
+                bank: bank as u32,
+                acked_offset: if offset == SUBSCRIBE_BOOTSTRAP { 0 } else { offset },
+                lag_records: lag,
+            })
+            .collect(),
+    })
+}
+
+/// Fetch and parse the primary's manifest via the pseudo-bank poll.
+fn fetch_manifest(client: &mut CamClient, replica_id: u64) -> Result<FleetManifest, ReplError> {
+    match client.subscribe_log(
+        replica_id,
+        0,
+        crate::net::proto::REPL_MANIFEST_BANK,
+        0,
+        SUBSCRIBE_BOOTSTRAP,
+    )? {
+        LogPoll::Snapshot { image, .. } => {
+            let text = String::from_utf8(image)
+                .map_err(|_| ReplError::Protocol("manifest transfer is not UTF-8".into()))?;
+            Ok(FleetManifest::from_kv(&text)?)
+        }
+        other => Err(ReplError::Protocol(format!(
+            "manifest poll answered {other:?}, expected a snapshot transfer"
+        ))),
+    }
+}
+
+/// The empty per-bank state both sides are born with
+/// ([`LookupEngine::new`] is deterministic for a given config), stamped
+/// with the primary log's generation — installing it resets any stale
+/// local state *and* aligns the local WAL generation before a
+/// bootstrap-by-log-replay.
+fn fresh_image(per_bank: &DesignConfig, generation: u64) -> BankImage {
+    let mut img = BankImage::from_engine(&LookupEngine::new(per_bank.clone()));
+    img.wal_generation = generation;
+    img
+}
+
+/// Bootstrap one bank: install a state transfer (or the fresh state plus
+/// the shipped generation-0 log) and return the chase cursor.
+fn bootstrap_bank(
+    client: &mut CamClient,
+    handle: &ShardedServerHandle,
+    per_bank: &DesignConfig,
+    replica_id: u64,
+    epoch: u64,
+    bank: u32,
+) -> Result<Cursor, ReplError> {
+    match client.subscribe_log(replica_id, epoch, bank, 0, SUBSCRIBE_BOOTSTRAP)? {
+        LogPoll::Snapshot { generation, image } => {
+            let img = BankImage::decode(&image)?;
+            handle.bank(bank as usize).install_image(img)?;
+            Ok((generation, WAL_HEADER_LEN))
+        }
+        LogPoll::Batch { generation, next_offset, remaining: _, frames } => {
+            handle.bank(bank as usize).install_image(fresh_image(per_bank, generation))?;
+            let records = wal::decode_frames(&frames)?;
+            handle.bank(bank as usize).apply_replicated(records)?;
+            Ok((generation, next_offset))
+        }
+        LogPoll::Fenced { server_epoch } => {
+            Err(ReplError::Fenced { local: epoch, server: server_epoch })
+        }
+    }
+}
+
+/// The chase loop: one poll per bank per pass, sleeping only when a full
+/// pass found every bank caught up (or the upstream unreachable).
+#[allow(clippy::too_many_arguments)]
+fn chase(
+    mut client: CamClient,
+    handle: ShardedServerHandle,
+    per_bank: DesignConfig,
+    state: Arc<Mutex<ChaseState>>,
+    stop: Arc<AtomicBool>,
+    replica_id: u64,
+    epoch: u64,
+    poll: Duration,
+) {
+    let shards = handle.shard_count();
+    while !stop.load(Ordering::Acquire) {
+        let mut caught_up = true;
+        for bank in 0..shards {
+            if stop.load(Ordering::Acquire) {
+                return;
+            }
+            let (gen, off) = with_state(&state, |s| s.cursors[bank]);
+            let bootstrapping = off == SUBSCRIBE_BOOTSTRAP;
+            match client.subscribe_log(replica_id, epoch, bank as u32, gen, off) {
+                Ok(LogPoll::Batch { generation, next_offset, remaining, frames }) => {
+                    if remaining > 0 {
+                        caught_up = false;
+                    }
+                    if frames.is_empty() && !bootstrapping {
+                        with_state(&state, |s| s.lags[bank] = remaining);
+                        continue;
+                    }
+                    caught_up = false;
+                    if bootstrapping {
+                        // bootstrap answered by log replay: reset to the
+                        // fresh state first (see `fresh_image`)
+                        if let Err(e) =
+                            handle.bank(bank).install_image(fresh_image(&per_bank, generation))
+                        {
+                            eprintln!("cscam-repl: bank {bank} bootstrap reset failed: {e}");
+                            continue; // cursor still says bootstrap; retry
+                        }
+                    }
+                    match wal::decode_frames(&frames) {
+                        Ok(records) => match handle.bank(bank).apply_replicated(records) {
+                            Ok(n) => with_state(&state, |s| {
+                                s.applied += n;
+                                s.cursors[bank] = (generation, next_offset);
+                                s.lags[bank] = remaining;
+                            }),
+                            Err(e) => {
+                                // a failed apply may have landed a prefix;
+                                // re-shipping it would double-apply, so the
+                                // bank restarts from a state transfer
+                                eprintln!(
+                                    "cscam-repl: bank {bank} apply failed ({e}); re-bootstrapping"
+                                );
+                                with_state(&state, |s| {
+                                    s.cursors[bank] = (generation, SUBSCRIBE_BOOTSTRAP)
+                                });
+                            }
+                        },
+                        Err(e) => {
+                            eprintln!(
+                                "cscam-repl: bank {bank} shipped frames corrupt ({e}); \
+                                 re-bootstrapping"
+                            );
+                            with_state(&state, |s| {
+                                s.cursors[bank] = (generation, SUBSCRIBE_BOOTSTRAP)
+                            });
+                        }
+                    }
+                }
+                Ok(LogPoll::Snapshot { generation, image }) => {
+                    // mid-stream restart: the primary compacted past our
+                    // cursor and re-ships its current snapshot
+                    caught_up = false;
+                    match BankImage::decode(&image) {
+                        Ok(img) => match handle.bank(bank).install_image(img) {
+                            Ok(()) => with_state(&state, |s| {
+                                s.cursors[bank] = (generation, WAL_HEADER_LEN);
+                                s.lags[bank] = 0;
+                            }),
+                            Err(e) => {
+                                eprintln!("cscam-repl: bank {bank} snapshot install failed: {e}")
+                            }
+                        },
+                        Err(e) => {
+                            eprintln!("cscam-repl: bank {bank} shipped snapshot corrupt: {e}")
+                        }
+                    }
+                }
+                Ok(LogPoll::Fenced { server_epoch }) => {
+                    eprintln!(
+                        "cscam-repl: fenced at epoch {epoch} (feed serves {server_epoch}); \
+                         chase stopped — this replica keeps serving its last view"
+                    );
+                    with_state(&state, |s| s.fenced = Some(server_epoch));
+                    return;
+                }
+                Err(_) => {
+                    // upstream unreachable — possibly dead, which is what
+                    // failover is for: keep serving reads, retry quietly
+                    caught_up = false;
+                    std::thread::sleep(poll);
+                }
+            }
+        }
+        with_state(&state, |s| s.caught_up = caught_up);
+        if caught_up {
+            std::thread::sleep(poll);
+        }
+    }
+}
+
+/// Forwards mutations from a replica's TCP front-end to its primary over
+/// one lazily (re)connected client.  Mutations are never auto-retried
+/// (replaying an insert could double-apply); a transport failure poisons
+/// the connection so the next write reconnects.
+pub struct WriteForwarder {
+    upstream: String,
+    client: Mutex<Option<CamClient>>,
+}
+
+impl WriteForwarder {
+    pub fn new(upstream: impl Into<String>) -> WriteForwarder {
+        WriteForwarder { upstream: upstream.into(), client: Mutex::new(None) }
+    }
+
+    /// The primary this forwarder writes through.
+    pub fn upstream(&self) -> &str {
+        &self.upstream
+    }
+
+    fn with_client<R>(
+        &self,
+        f: impl FnOnce(&mut CamClient) -> Result<R, WireError>,
+    ) -> Result<R, WireError> {
+        let mut guard = self.client.lock().unwrap_or_else(|p| p.into_inner());
+        if guard.is_none() {
+            *guard = Some(CamClient::connect(self.upstream.clone())?);
+        }
+        let result = match guard.as_mut() {
+            Some(c) => f(c),
+            None => return Err(WireError::Protocol("forwarder lost its connection".into())),
+        };
+        if matches!(
+            result,
+            Err(WireError::Io(_)) | Err(WireError::Protocol(_)) | Err(WireError::Busy)
+        ) {
+            *guard = None;
+        }
+        result
+    }
+
+    /// Forward an insert; the returned address is the primary's (the
+    /// record reaches this replica through the log).
+    pub fn insert(&self, tag: &BitVec) -> Result<u64, WireError> {
+        self.with_client(|c| c.insert(tag))
+    }
+
+    /// Forward a delete by flat global address.
+    pub fn delete(&self, addr: u64) -> Result<(), WireError> {
+        self.with_client(|c| c.delete(addr))
+    }
+}

@@ -206,8 +206,11 @@ impl ShardedCamServer {
             manifest.check_compatible(cfg, &mode)?;
             (manifest, true)
         } else {
-            let manifest =
-                FleetManifest { cfg: cfg.clone(), placement: PlacementSpec::from_mode(&mode) };
+            let manifest = FleetManifest {
+                cfg: cfg.clone(),
+                placement: PlacementSpec::from_mode(&mode),
+                epoch: 0,
+            };
             manifest.store(dir)?;
             (manifest, false)
         };

@@ -148,17 +148,19 @@ pub struct RecoveryReport {
     pub occupancy: usize,
 }
 
-/// Replay one logged mutation.  A record the engine rejects means the log
-/// belongs to a different geometry — refuse loudly rather than recover a
-/// wrong bank.
-fn replay(engine: &mut LookupEngine, rec: WalRecord) -> Result<(), StoreError> {
+/// Apply one logged mutation to an engine — recovery replay and the
+/// replica apply path ([`crate::repl`]) share this one definition, so a
+/// shipped record cannot mean something different on the two sides.  A
+/// record the engine rejects means the log belongs to a different
+/// geometry — refuse loudly rather than recover a wrong bank.
+pub fn apply_record(engine: &mut LookupEngine, rec: &WalRecord) -> Result<(), StoreError> {
     match rec {
         WalRecord::Insert { addr, tag } => {
-            engine.insert_at(addr as usize, &tag).map_err(|e| {
+            engine.insert_at(*addr as usize, tag).map_err(|e| {
                 StoreError::Incompatible(format!("WAL insert at address {addr} rejected: {e}"))
             })
         }
-        WalRecord::Delete { addr } => engine.delete(addr as usize).map_err(|e| {
+        WalRecord::Delete { addr } => engine.delete(*addr as usize).map_err(|e| {
             StoreError::Incompatible(format!("WAL delete at address {addr} rejected: {e}"))
         }),
     }
@@ -221,7 +223,7 @@ impl BankStore {
             std::cmp::Ordering::Equal => {
                 wal_records = records.len();
                 for rec in records {
-                    replay(&mut engine, rec)?;
+                    apply_record(&mut engine, &rec)?;
                 }
             }
             std::cmp::Ordering::Less => {
@@ -302,7 +304,31 @@ impl BankStore {
         self.wal.sync()
     }
 
-    /// Current WAL length in bytes (compaction trigger, test probe).
+    /// Install a transferred [`BankImage`] as this bank's new base state:
+    /// the image is written as the snapshot (atomic tmp + rename), then
+    /// the WAL resets to the image's generation — the replica-bootstrap
+    /// analogue of [`Self::compact`], with the same crash ordering (a
+    /// crash between the two steps leaves an older-generation log that
+    /// [`Self::open`] discards instead of double-replaying).
+    pub fn install_image(&mut self, image: &BankImage) -> Result<(), StoreError> {
+        image.write_to(&self.dir.join(SNAPSHOT_FILE))?;
+        if let Err(e) = self.wal.reset(image.wal_generation) {
+            // the snapshot is already in place; appends onto the
+            // old-generation log would be discarded at recovery
+            self.wal.poison();
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    /// The WAL's current generation (the snapshot lineage it extends) —
+    /// the generation half of a log-shipping cursor ([`wal::tail_wal`]).
+    pub fn wal_generation(&self) -> u64 {
+        self.wal.generation()
+    }
+
+    /// Current WAL length in bytes (compaction trigger, test probe; also
+    /// the offset half of a log-shipping cursor).
     pub fn wal_len_bytes(&self) -> u64 {
         self.wal.len_bytes()
     }
@@ -457,6 +483,14 @@ pub struct FleetManifest {
     pub cfg: DesignConfig,
     /// Placement, with learned-prefix bit positions pinned exactly.
     pub placement: PlacementSpec,
+    /// Failover epoch: 0 for a fleet that has never failed over, bumped by
+    /// promotion (`cscam promote`, [`crate::repl`]).  A primary refuses
+    /// log subscribers from another epoch (wire `ERR_FENCED`), and a
+    /// replica refuses to follow a primary from another epoch — so a
+    /// rejoining *old* primary is fenced instead of silently diverging.
+    /// Deliberately NOT part of [`Self::check_compatible`]: a promoted
+    /// data directory must still open.
+    pub epoch: u64,
 }
 
 /// Serializable placement identity.
@@ -523,6 +557,7 @@ impl FleetManifest {
             let joined: Vec<String> = positions.iter().map(|p| p.to_string()).collect();
             s.push_str(&format!("prefix_positions = {}\n", joined.join(",")));
         }
+        s.push_str(&format!("epoch = {}\n", self.epoch));
         s
     }
 
@@ -533,6 +568,7 @@ impl FleetManifest {
         let mut placement: Option<String> = None;
         let mut prefix_k: Option<usize> = None;
         let mut prefix_positions: Option<Vec<usize>> = None;
+        let mut epoch: Option<u64> = None;
         for (lineno, raw) in text.lines().enumerate() {
             let line = raw.split('#').next().unwrap_or("").trim();
             if line.is_empty() {
@@ -563,6 +599,7 @@ impl FleetManifest {
                     }
                     prefix_positions = Some(out);
                 }
+                "epoch" => epoch = Some(value.parse().map_err(|_| bad("epoch"))?),
                 other => {
                     return Err(StoreError::Corrupt(format!(
                         "manifest line {}: unknown key '{other}'",
@@ -601,7 +638,9 @@ impl FleetManifest {
         };
         // prefix sanity (bounds against this manifest's own N)
         placement.to_mode(cfg.n)?;
-        Ok(FleetManifest { cfg, placement })
+        // `epoch` was introduced with the replication subsystem; a
+        // manifest written before it is a never-promoted epoch-0 fleet
+        Ok(FleetManifest { cfg, placement, epoch: epoch.unwrap_or(0) })
     }
 
     /// Load `dir/fleet.kv`.
@@ -786,7 +825,7 @@ mod tests {
             PlacementSpec::Broadcast,
             PlacementSpec::Prefix { k: 2, positions: vec![3, 17, 40, 99] },
         ] {
-            let m = FleetManifest { cfg: cfg.clone(), placement };
+            let m = FleetManifest { cfg: cfg.clone(), placement, epoch: 0 };
             let back = FleetManifest::from_kv(&m.to_kv()).unwrap();
             assert_eq!(back, m);
             back.check_compatible(&cfg, &back.placement.to_mode(cfg.n).unwrap()).unwrap();
@@ -794,9 +833,37 @@ mod tests {
     }
 
     #[test]
+    fn manifest_epoch_roundtrips_and_defaults_to_zero() {
+        let cfg = DesignConfig { shards: 4, ..DesignConfig::reference() };
+        let m = FleetManifest { cfg: cfg.clone(), placement: PlacementSpec::Hash, epoch: 7 };
+        let back = FleetManifest::from_kv(&m.to_kv()).unwrap();
+        assert_eq!(back.epoch, 7);
+        assert_eq!(back, m);
+        // a promoted (epoch-bumped) directory must still open: the epoch
+        // fences subscriptions, never compatibility
+        back.check_compatible(&cfg, &PlacementMode::TagHash).unwrap();
+        // manifests written before the replication subsystem carry no
+        // epoch key and parse as a never-promoted epoch-0 fleet
+        let legacy = m.to_kv().lines().filter(|l| !l.starts_with("epoch")).fold(
+            String::new(),
+            |mut s, l| {
+                s.push_str(l);
+                s.push('\n');
+                s
+            },
+        );
+        assert_eq!(FleetManifest::from_kv(&legacy).unwrap().epoch, 0);
+        assert!(FleetManifest::from_kv(&legacy.replace("epoch", "")).is_ok());
+        assert!(
+            FleetManifest::from_kv(&format!("{legacy}epoch = banana\n")).is_err(),
+            "a malformed epoch is corrupt, not silently zero"
+        );
+    }
+
+    #[test]
     fn manifest_refuses_drifted_fleets() {
         let cfg = DesignConfig { shards: 4, ..DesignConfig::reference() };
-        let m = FleetManifest { cfg: cfg.clone(), placement: PlacementSpec::Hash };
+        let m = FleetManifest { cfg: cfg.clone(), placement: PlacementSpec::Hash, epoch: 0 };
         let other = DesignConfig { shards: 8, ..cfg.clone() };
         assert!(matches!(
             m.check_compatible(&other, &PlacementMode::TagHash),

@@ -196,6 +196,126 @@ fn parse_frame(buf: &[u8]) -> FrameStep {
     }
 }
 
+/// What one polling step over a (possibly live) WAL file produced — the
+/// read half of log shipping ([`crate::repl`]).  A tailer holds a
+/// `(generation, offset)` cursor; [`tail_wal`] answers with either the
+/// whole frames past that cursor or the news that the log no longer
+/// extends it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TailStep {
+    /// Whole frames from the requested offset: `frames` holds the verbatim
+    /// file bytes (re-checkable with [`decode_frames`] — every frame keeps
+    /// its own length prefix and checksum), `next_offset` is the first byte
+    /// past them (the subscriber's next cursor), and `remaining` counts the
+    /// complete records beyond the byte cap (the subscriber's lag in
+    /// records).  An empty batch with `remaining == 0` means the tailer is
+    /// caught up.
+    Batch { generation: u64, next_offset: u64, frames: Vec<u8>, records: u64, remaining: u64 },
+    /// The log no longer extends the cursor: its generation changed (a
+    /// compaction snapshotted and reset it) or the offset fell outside the
+    /// frame region.  The subscriber must re-bootstrap from the snapshot
+    /// stamped with `generation` instead of replaying a stale prefix —
+    /// WAL replay is not idempotent, so resuming a stale cursor would
+    /// double-apply records the snapshot already contains.
+    Restarted { generation: u64 },
+}
+
+/// Read the whole frames past `(generation, offset)` from the log at
+/// `path`, up to ~`max_bytes` of frame bytes per step (always at least one
+/// complete frame when one is present, so a single frame larger than the
+/// cap still makes progress).
+///
+/// Safe against a *live* writer: appends are write-through and frames are
+/// length-prefixed + checksummed, so a concurrently appended partial frame
+/// simply ends the batch (it will be complete by the next poll); a
+/// concurrent reset is seen as a generation change and reported as
+/// [`TailStep::Restarted`].  A header too short to validate (mid-reset) is
+/// reported as `Restarted { generation: 0 }` — the subscriber re-fetches
+/// the snapshot either way.  Wrong magic or an unknown version is refused
+/// like [`Wal::open`] refuses it: that is a foreign file, not a race.
+pub fn tail_wal(
+    path: &Path,
+    generation: u64,
+    offset: u64,
+    max_bytes: usize,
+) -> Result<TailStep, StoreError> {
+    let data = match std::fs::read(path) {
+        Ok(d) => d,
+        Err(e) => return Err(StoreError::Io(e)),
+    };
+    if data.len() < WAL_HEADER_LEN as usize {
+        // mid-create or mid-reset: transient; re-bootstrap resolves it
+        return Ok(TailStep::Restarted { generation: 0 });
+    }
+    if data[..4] != WAL_MAGIC {
+        return Err(StoreError::Corrupt("bad magic in WAL header".into()));
+    }
+    let version = u16::from_le_bytes([data[4], data[5]]);
+    if version != WAL_VERSION {
+        return Err(StoreError::Incompatible(format!(
+            "WAL format version {version}, this build reads {WAL_VERSION}"
+        )));
+    }
+    if data[6] != 0 || data[7] != 0 {
+        return Err(StoreError::Corrupt("nonzero reserved bytes in WAL header".into()));
+    }
+    let actual = u64::from_le_bytes([
+        data[8], data[9], data[10], data[11], data[12], data[13], data[14], data[15],
+    ]);
+    if actual != generation || offset < WAL_HEADER_LEN || offset > data.len() as u64 {
+        return Ok(TailStep::Restarted { generation: actual });
+    }
+    let start = offset as usize;
+    let mut pos = start;
+    let mut records = 0u64;
+    let mut remaining = 0u64;
+    let mut end = start;
+    loop {
+        match parse_frame(&data[pos..]) {
+            FrameStep::Complete { consumed, .. } => {
+                if pos == end && (records == 0 || pos - start + consumed <= max_bytes) {
+                    records += 1;
+                    end = pos + consumed;
+                } else {
+                    remaining += 1;
+                }
+                pos += consumed;
+            }
+            // a torn tail here is (usually) the writer mid-append: the
+            // batch simply ends at the last complete frame
+            FrameStep::End | FrameStep::Torn(_) => break,
+        }
+    }
+    Ok(TailStep::Batch {
+        generation,
+        next_offset: end as u64,
+        frames: data[start..end].to_vec(),
+        records,
+        remaining,
+    })
+}
+
+/// Strictly decode a region of concatenated frames (a
+/// [`TailStep::Batch`]'s `frames`, after it crossed a wire hop): every
+/// frame must be complete and checksum-clean — a shipped batch has no
+/// legitimate torn tail, so any defect is [`StoreError::Corrupt`].
+pub fn decode_frames(buf: &[u8]) -> Result<Vec<WalRecord>, StoreError> {
+    let mut out = Vec::new();
+    let mut pos = 0usize;
+    loop {
+        match parse_frame(&buf[pos..]) {
+            FrameStep::Complete { consumed, record } => {
+                out.push(record);
+                pos += consumed;
+            }
+            FrameStep::End => return Ok(out),
+            FrameStep::Torn(reason) => {
+                return Err(StoreError::Corrupt(format!("shipped frame region: {reason}")))
+            }
+        }
+    }
+}
+
 /// What [`Wal::open`] found (and repaired) on disk.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct WalRecovery {
@@ -703,6 +823,120 @@ mod tests {
         let tag = BitVec::from_u128(0xFEED_F00D, 70);
         let owned = encode_frame(&WalRecord::Insert { addr: 42, tag: tag.clone() });
         assert_eq!(owned, encode_insert_frame(42, &tag));
+    }
+
+    #[test]
+    fn tail_follows_appends_and_caps_batches() {
+        let path = tmp("tail.wal");
+        let recs = sample_records();
+        let (mut wal, _, _) = Wal::open(&path, FsyncPolicy::Never).unwrap();
+        for r in &recs {
+            wal.append(r).unwrap();
+        }
+        // bootstrap cursor: generation 0, offset = first frame byte
+        let step = tail_wal(&path, 0, WAL_HEADER_LEN, usize::MAX).unwrap();
+        let TailStep::Batch { generation, next_offset, frames, records, remaining } = step else {
+            panic!("caught-up log must answer a batch");
+        };
+        assert_eq!(generation, 0);
+        assert_eq!(records, 4);
+        assert_eq!(remaining, 0);
+        assert_eq!(next_offset, wal.len_bytes());
+        assert_eq!(decode_frames(&frames).unwrap(), recs);
+        // caught up: an empty batch, same cursor
+        let step = tail_wal(&path, 0, next_offset, usize::MAX).unwrap();
+        assert_eq!(
+            step,
+            TailStep::Batch {
+                generation: 0,
+                next_offset,
+                frames: Vec::new(),
+                records: 0,
+                remaining: 0
+            }
+        );
+        // a 1-byte cap still ships one whole frame per step, and counts
+        // the rest as lag
+        let step = tail_wal(&path, 0, WAL_HEADER_LEN, 1).unwrap();
+        let TailStep::Batch { records, remaining, frames, next_offset, .. } = step else {
+            panic!("batch expected");
+        };
+        assert_eq!(records, 1);
+        assert_eq!(remaining, 3);
+        assert_eq!(decode_frames(&frames).unwrap(), recs[..1]);
+        // chase the rest from the advanced cursor
+        let step = tail_wal(&path, 0, next_offset, usize::MAX).unwrap();
+        let TailStep::Batch { records, frames, .. } = step else { panic!("batch expected") };
+        assert_eq!(records, 3);
+        assert_eq!(decode_frames(&frames).unwrap(), recs[1..]);
+    }
+
+    #[test]
+    fn tail_reports_a_restart_instead_of_a_stale_prefix() {
+        let path = tmp("tail-restart.wal");
+        let recs = sample_records();
+        let (mut wal, _, _) = Wal::open(&path, FsyncPolicy::Never).unwrap();
+        for r in &recs {
+            wal.append(r).unwrap();
+        }
+        let mid = tail_wal(&path, 0, WAL_HEADER_LEN, 64).unwrap();
+        let TailStep::Batch { next_offset, .. } = mid else { panic!("batch expected") };
+        // compaction resets the log: the old cursor must NOT replay bytes
+        wal.reset(1).unwrap();
+        wal.append(&WalRecord::Delete { addr: 5 }).unwrap();
+        assert_eq!(
+            tail_wal(&path, 0, next_offset, usize::MAX).unwrap(),
+            TailStep::Restarted { generation: 1 },
+            "stale generation must force a re-bootstrap"
+        );
+        // an out-of-range offset on the right generation is a restart too
+        assert_eq!(
+            tail_wal(&path, 1, wal.len_bytes() + 999, usize::MAX).unwrap(),
+            TailStep::Restarted { generation: 1 }
+        );
+        assert_eq!(
+            tail_wal(&path, 1, 3, usize::MAX).unwrap(),
+            TailStep::Restarted { generation: 1 },
+            "an offset inside the header is never a valid cursor"
+        );
+        // the fresh cursor reads the post-reset records
+        let step = tail_wal(&path, 1, WAL_HEADER_LEN, usize::MAX).unwrap();
+        let TailStep::Batch { records, frames, .. } = step else { panic!("batch expected") };
+        assert_eq!(records, 1);
+        assert_eq!(decode_frames(&frames).unwrap(), vec![WalRecord::Delete { addr: 5 }]);
+    }
+
+    #[test]
+    fn tail_ends_batches_at_a_torn_tail_and_decode_frames_refuses_it() {
+        let path = tmp("tail-torn.wal");
+        let recs = sample_records();
+        let (mut wal, _, _) = Wal::open(&path, FsyncPolicy::Never).unwrap();
+        for r in &recs {
+            wal.append(r).unwrap();
+        }
+        drop(wal);
+        let torn = encode_frame(&WalRecord::Delete { addr: 3 });
+        let mut raw = std::fs::read(&path).unwrap();
+        raw.extend_from_slice(&torn[..torn.len() / 2]);
+        std::fs::write(&path, &raw).unwrap();
+        // a live tailer sees the complete frames and stops at the tear
+        let step = tail_wal(&path, 0, WAL_HEADER_LEN, usize::MAX).unwrap();
+        let TailStep::Batch { records, remaining, frames, .. } = step else {
+            panic!("batch expected")
+        };
+        assert_eq!(records, 4);
+        assert_eq!(remaining, 0);
+        assert_eq!(decode_frames(&frames).unwrap(), recs);
+        // but a *shipped* region with a tear is corrupt, never truncated
+        let mut shipped = frames;
+        shipped.extend_from_slice(&torn[..torn.len() / 2]);
+        assert!(matches!(decode_frames(&shipped), Err(StoreError::Corrupt(_))));
+        // foreign and future files are refused, not reported as restarts
+        std::fs::write(&path, b"not a wal, definitely not").unwrap();
+        assert!(matches!(
+            tail_wal(&path, 0, WAL_HEADER_LEN, usize::MAX),
+            Err(StoreError::Corrupt(_))
+        ));
     }
 
     #[test]

@@ -48,6 +48,7 @@ fn sample_requests() -> Vec<Request> {
         Request::Snapshot,
         Request::Flush,
         Request::Metrics,
+        Request::SubscribeLog { replica: 7, epoch: 2, bank: 1, generation: 3, offset: 16 },
     ]
 }
 
@@ -94,6 +95,15 @@ fn response_frames_reject_every_single_byte_flip() {
         Response::Flushed,
         Response::Metrics { text: "# TYPE cscam_lookups_total counter\ncscam_lookups_total 7\n".into() },
         Response::Error { code: proto::ERR_PERSIST, aux: 0 },
+        Response::Error { code: proto::ERR_FENCED, aux: 3 },
+        Response::LogBatch {
+            bank: 1,
+            generation: 3,
+            next_offset: 4096,
+            remaining: 12,
+            frames: vec![0x5A; 37],
+        },
+        Response::SnapshotTransfer { bank: 0, generation: 4, image: vec![0xC3; 61] },
     ];
     for resp in responses {
         let mut wire = Vec::new();
@@ -168,6 +178,11 @@ fn request_and_response_payload_decoders_never_panic_on_garbage() {
         let _ = Response::decode(proto::OP_LOOKUP, &payload);
         let _ = Response::decode(proto::OP_STATS, &payload);
         let _ = Response::decode(proto::OP_METRICS, &payload);
+        // the v5 replication frames carry length-prefixed byte bodies —
+        // the count-vs-remaining guard is what's under the hammer here
+        let _ = Request::decode(proto::OP_SUBSCRIBE_LOG, &payload);
+        let _ = Response::decode(proto::OP_LOG_BATCH, &payload);
+        let _ = Response::decode(proto::OP_SNAPSHOT_TRANSFER, &payload);
     }
 }
 

@@ -17,7 +17,8 @@ use cscam::coordinator::{BatchPolicy, LookupEngine};
 use cscam::net::{CamClient, CamTcpServer, NetConfig};
 use cscam::shard::{PlacementMode, ShardedCamServer, ShardedOutcome};
 use cscam::store::{
-    wal, DurableBank, FsyncPolicy, StoreError, StoreOptions, WalRecord, SNAPSHOT_FILE, WAL_FILE,
+    apply_record, wal, BankImage, DurableBank, FsyncPolicy, StoreError, StoreOptions, WalRecord,
+    SNAPSHOT_FILE, WAL_FILE,
 };
 use cscam::util::Rng;
 use cscam::workload::TagDistribution;
@@ -181,6 +182,73 @@ fn crash_between_snapshot_and_wal_reset_recovers_bit_identically() {
     assert_eq!(report.wal_records, 1);
     assert_eq!(report.discarded_records, 0);
     assert_eq!(bank.occupancy(), 30);
+}
+
+#[test]
+fn wal_tailing_survives_compaction_by_resubscribing_from_the_new_generation() {
+    // A log subscriber (the replication feed tails exactly like this)
+    // holding a generation-0 cursor must see `Restarted` once compaction
+    // resets the log — WAL replay is not idempotent, so shipping any
+    // stale generation-0 prefix would double-apply records.  The correct
+    // resubscription is snapshot base + the new generation's tail, and
+    // that must rebuild the state bit-identically.
+    let dir = test_dir("tail-compaction");
+    let cfg = DesignConfig::small_test();
+    let mut reference = LookupEngine::new(cfg.clone());
+    let (mut bank, _) = DurableBank::open(&dir, cfg.clone(), StoreOptions::default()).unwrap();
+    let mut rng = Rng::seed_from_u64(81);
+    let tags = TagDistribution::Uniform.sample_distinct(cfg.n, 24, &mut rng);
+    let wal_path = dir.join(WAL_FILE);
+
+    // first half of the history, tailed mid-stream like a subscriber
+    for t in tags.iter().take(12) {
+        assert_eq!(bank.insert(t).unwrap(), reference.insert(t).unwrap());
+    }
+    let cursor = match wal::tail_wal(&wal_path, 0, wal::WAL_HEADER_LEN, 1 << 20).unwrap() {
+        wal::TailStep::Batch { generation, next_offset, frames, remaining, .. } => {
+            assert_eq!(generation, 0);
+            assert_eq!(remaining, 0);
+            assert_eq!(wal::decode_frames(&frames).unwrap().len(), 12);
+            next_offset
+        }
+        other => panic!("mid-history tail answered {other:?}"),
+    };
+
+    // compaction moves the history into a snapshot and resets the log;
+    // the second half lands in the new generation
+    bank.compact().unwrap();
+    for t in tags.iter().skip(12) {
+        assert_eq!(bank.insert(t).unwrap(), reference.insert(t).unwrap());
+    }
+
+    // the stale generation-0 cursor is told the log restarted — it gets
+    // neither an error nor a prefix of the new log under its old offsets
+    match wal::tail_wal(&wal_path, 0, cursor, 1 << 20).unwrap() {
+        wal::TailStep::Restarted { generation } => assert_eq!(generation, 1),
+        other => panic!("stale cursor answered {other:?}"),
+    }
+
+    // resubscribe from the new generation: snapshot base + log tail
+    let image = BankImage::decode(&std::fs::read(dir.join(SNAPSHOT_FILE)).unwrap()).unwrap();
+    assert_eq!(image.wal_generation, 1);
+    let mut resub = image.into_engine().unwrap();
+    match wal::tail_wal(&wal_path, 1, wal::WAL_HEADER_LEN, 1 << 20).unwrap() {
+        wal::TailStep::Batch { generation, frames, remaining, .. } => {
+            assert_eq!(generation, 1);
+            assert_eq!(remaining, 0);
+            for r in &wal::decode_frames(&frames).unwrap() {
+                apply_record(&mut resub, r).unwrap();
+            }
+        }
+        other => panic!("resubscribed tail answered {other:?}"),
+    }
+    for t in &tags {
+        assert_eq!(resub.lookup(t).unwrap(), reference.lookup(t).unwrap());
+    }
+    for _ in 0..40 {
+        let t = cscam::workload::random_tag(cfg.n, &mut rng);
+        assert_eq!(resub.lookup(&t).unwrap(), reference.lookup(&t).unwrap());
+    }
 }
 
 #[test]

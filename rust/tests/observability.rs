@@ -149,8 +149,15 @@ fn scrape(addr: SocketAddr, request: &str) -> (String, String) {
 fn scraped_page_is_valid_exposition_and_matches_the_golden_family_set() {
     let fleet = busy_fleet();
     let scrape_fleet = fleet.clone();
+    // synthetic recovery + replication context so the golden file pins
+    // the *full* family set, optional blocks included
+    let recovery = cscam::shard::FleetRecovery { manifest_loaded: true, banks: vec![] };
+    let repl = cscam::obs::ReplStatus {
+        epoch: 1,
+        lags: vec![cscam::obs::ReplLag { replica: 9, bank: 0, acked_offset: 16, lag_records: 2 }],
+    };
     let render: RenderFn = Arc::new(move || match scrape_fleet.fleet_metrics() {
-        Some(fm) => render_prometheus(&fm, 64, 32, None),
+        Some(fm) => render_prometheus(&fm, 64, 32, Some(&recovery), Some(&repl)),
         None => String::new(),
     });
     let sidecar = MetricsHttpServer::spawn("127.0.0.1:0", render).expect("bind sidecar");
@@ -187,6 +194,10 @@ fn scraped_page_is_valid_exposition_and_matches_the_golden_family_set() {
         .map(|s| s.value)
         .sum();
     assert!((hot_sum - 1.0).abs() < 1e-9, "bank fractions sum to 1, got {hot_sum}");
+    // the replication block renders per-replica, per-bank labelled series
+    assert_eq!(get("cscam_repl_epoch"), Some(1.0));
+    assert_eq!(get(r#"cscam_repl_acked_offset{replica="9",bank="0"}"#), Some(16.0));
+    assert_eq!(get(r#"cscam_repl_lag_records{replica="9",bank="0"}"#), Some(2.0));
 
     sidecar.shutdown();
     fleet.shutdown().expect("fleet shutdown");
@@ -233,7 +244,7 @@ fn recovery_gauges_survive_a_durable_restart_scrape() {
     let handle2 = fleet2.spawn();
     let scrape_fleet = handle2.clone();
     let render: RenderFn = Arc::new(move || match scrape_fleet.fleet_metrics() {
-        Some(fm) => render_prometheus(&fm, 64, 32, Some(&recovery)),
+        Some(fm) => render_prometheus(&fm, 64, 32, Some(&recovery), None),
         None => String::new(),
     });
     let sidecar = MetricsHttpServer::spawn("127.0.0.1:0", render).expect("bind sidecar");

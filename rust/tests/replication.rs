@@ -1,0 +1,395 @@
+//! Replication integration battery: primary→replica log shipping over the
+//! wire protocol, end to end.
+//!
+//! Every test drives a *durable primary* served over TCP with a
+//! [`ReplRole::Primary`] feed attached, mirrors the same history into a
+//! never-crashed in-memory reference fleet, and asserts the replica's
+//! answers are bit-identical field-for-field to that reference — the same
+//! oracle discipline the durability battery uses for crash recovery.
+//!
+//! Covered here:
+//!
+//! * snapshot bootstrap + log chase converging on a live primary, with
+//!   wire lookups served from the replica's own reader pools;
+//! * writes through a replica front-end forwarding to the primary and
+//!   returning to the replica through the log (never applied locally);
+//! * a primary compaction mid-stream retiring the generation a replica is
+//!   tailing, forcing a [`LogPoll::Snapshot`] restart;
+//! * failover: primary dies, replica is promoted offline, serves every
+//!   acked write, fences the stale epoch with [`LogPoll::Fenced`], and the
+//!   ex-primary rejoins the new lineage as a subscriber;
+//! * clean write errors (no false acks) while a replica's upstream is
+//!   down, with reads still serving.
+//!
+//! The graceful-stop here is deliberate: acked writes are WAL
+//! write-through on the primary, so a drained stop and a `kill -9` leave
+//! the same acked prefix on disk.  The actual `kill -9` variant runs in
+//! CI's `replication-smoke` job against real processes.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cscam::bits::BitVec;
+use cscam::config::DesignConfig;
+use cscam::coordinator::BatchPolicy;
+use cscam::net::proto::SUBSCRIBE_BOOTSTRAP;
+use cscam::net::{CamClient, CamTcpServer, LogPoll, NetConfig, NetServerHandle};
+use cscam::repl::{promote, ReplRole, ReplicaFeed, ReplicaOptions, ReplicaServer};
+use cscam::shard::{PlacementMode, ShardedCamServer, ShardedServerHandle};
+use cscam::store::StoreOptions;
+use cscam::util::Rng;
+use cscam::workload::TagDistribution;
+
+fn test_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("cscam-replication-{}", std::process::id()))
+        .join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn fleet_cfg() -> DesignConfig {
+    // 2 banks × 64 entries = one 128-entry fleet
+    DesignConfig { m: 128, n: 32, zeta: 4, c: 3, l: 4, shards: 2, ..DesignConfig::reference() }
+}
+
+fn policy() -> BatchPolicy {
+    BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(100) }
+}
+
+fn replica_opts(id: u64) -> ReplicaOptions {
+    ReplicaOptions {
+        replica_id: id,
+        poll_interval: Duration::from_millis(2),
+        ..ReplicaOptions::default()
+    }
+}
+
+/// Open a durable fleet at `dir`, spawn it, and serve it over TCP with a
+/// primary replication role attached (SubscribeLog answered from `dir`).
+fn start_primary(dir: &Path) -> (NetServerHandle, ShardedServerHandle, String) {
+    let (fleet, _recovery) = ShardedCamServer::open_durable(
+        &fleet_cfg(),
+        PlacementMode::TagHash,
+        policy(),
+        dir,
+        StoreOptions::default(),
+    )
+    .unwrap();
+    let handle = fleet.spawn();
+    let feed = ReplicaFeed::open(dir).unwrap();
+    let server = CamTcpServer::bind(handle.clone(), "127.0.0.1:0", NetConfig::default())
+        .unwrap()
+        .with_repl(Arc::new(ReplRole::Primary(feed)));
+    let addr = server.local_addr().unwrap().to_string();
+    let net = server.spawn().unwrap();
+    (net, handle, addr)
+}
+
+/// Bind a TCP front-end over a replica's local fleet: reads serve from the
+/// replica's own banks, writes forward to its upstream primary.
+fn start_replica_front(replica: &ReplicaServer) -> (NetServerHandle, String) {
+    let server = CamTcpServer::bind(replica.fleet(), "127.0.0.1:0", NetConfig::default())
+        .unwrap()
+        .with_repl(Arc::new(ReplRole::Replica(replica.forwarder())));
+    let addr = server.local_addr().unwrap().to_string();
+    (server.spawn().unwrap(), addr)
+}
+
+/// Poll a fleet until `tag` resolves to `want` (the log is asynchronous;
+/// convergence, not instant visibility, is the contract).
+fn await_addr(
+    fleet: &ShardedServerHandle,
+    tag: &BitVec,
+    want: Option<usize>,
+    timeout: Duration,
+) -> bool {
+    let deadline = Instant::now() + timeout;
+    loop {
+        if fleet.lookup(tag.clone()).unwrap().addr == want {
+            return true;
+        }
+        if Instant::now() >= deadline {
+            return false;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+#[test]
+fn replica_bootstraps_chases_and_serves_bit_identical_wire_reads() {
+    let dir_p = test_dir("serve-primary");
+    let dir_r = test_dir("serve-replica");
+    let (net_p, _handle_p, addr_p) = start_primary(&dir_p);
+    let reference = ShardedCamServer::new(&fleet_cfg(), PlacementMode::TagHash, policy()).spawn();
+
+    // a history exists before the replica is born: bootstrap must carry it
+    let mut rng = Rng::seed_from_u64(901);
+    let tags = TagDistribution::Uniform.sample_distinct(fleet_cfg().n, 40, &mut rng);
+    let mut client = CamClient::connect(addr_p.clone()).unwrap();
+    for t in &tags {
+        let a = client.insert(t).unwrap();
+        let b = reference.insert(t.clone()).unwrap();
+        assert_eq!(a, b as u64, "wire primary and reference placement diverged");
+    }
+
+    let replica = ReplicaServer::start(&addr_p, &dir_r, replica_opts(1)).unwrap();
+    assert_eq!(replica.epoch(), 0, "fresh lineage starts at epoch 0");
+    assert!(replica.wait_caught_up(Duration::from_secs(10)), "replica never converged");
+    assert!(replica.fenced().is_none());
+
+    // wire reads through the replica front-end: every stored tag plus 40
+    // random probes must answer field-for-field like the reference
+    let (net_r, addr_r) = start_replica_front(&replica);
+    let mut rclient = CamClient::connect(addr_r).unwrap();
+    for t in &tags {
+        assert_eq!(rclient.lookup(t).unwrap(), reference.lookup(t.clone()).unwrap());
+    }
+    for _ in 0..40 {
+        let t = cscam::workload::random_tag(fleet_cfg().n, &mut rng);
+        assert_eq!(rclient.lookup(&t).unwrap(), reference.lookup(t).unwrap());
+    }
+
+    // the primary's exposition carries this subscriber's progress rows
+    let text = client.metrics().unwrap();
+    assert!(text.contains("cscam_repl_epoch 0"), "missing epoch gauge:\n{text}");
+    assert!(
+        text.contains(r#"cscam_repl_acked_offset{replica="1",bank="0"}"#),
+        "missing acked-offset row:\n{text}"
+    );
+    assert!(
+        text.contains(r#"cscam_repl_lag_records{replica="1",bank="1"}"#),
+        "missing lag row:\n{text}"
+    );
+
+    // the replica's own status mirrors the same shape, one row per bank
+    let status = replica.status();
+    assert_eq!(status.epoch, 0);
+    assert_eq!(status.lags.len(), 2);
+    assert!(status.lags.iter().all(|l| l.replica == 1));
+
+    net_r.shutdown();
+    net_r.join();
+    // the front-end stop drained the replica's banks; the chaser stop may
+    // find them already gone, which is fine here
+    let _ = replica.shutdown();
+    client.shutdown().unwrap();
+    net_p.join();
+}
+
+#[test]
+fn writes_through_a_replica_forward_to_the_primary_and_return_through_the_log() {
+    let dir_p = test_dir("forward-primary");
+    let dir_r = test_dir("forward-replica");
+    let (net_p, _handle_p, addr_p) = start_primary(&dir_p);
+    let reference = ShardedCamServer::new(&fleet_cfg(), PlacementMode::TagHash, policy()).spawn();
+    let mut rng = Rng::seed_from_u64(904);
+    let tags = TagDistribution::Uniform.sample_distinct(fleet_cfg().n, 8, &mut rng);
+
+    let replica = ReplicaServer::start(&addr_p, &dir_r, replica_opts(5)).unwrap();
+    let (net_rf, addr_rf) = start_replica_front(&replica);
+    let mut rclient = CamClient::connect(addr_rf).unwrap();
+    let mut pclient = CamClient::connect(addr_p.clone()).unwrap();
+
+    // inserts through the replica's front door are acked by the primary
+    // (same placement as the reference) and visible there immediately…
+    let mut addrs = Vec::new();
+    for t in &tags {
+        let a = rclient.insert(t).unwrap();
+        assert_eq!(a, reference.insert(t.clone()).unwrap() as u64, "forwarded placement diverged");
+        assert_eq!(pclient.lookup(t).unwrap().addr, Some(a as usize));
+        addrs.push(a);
+    }
+    // …and return to the replica through the log, never applied locally
+    for (t, a) in tags.iter().zip(&addrs) {
+        assert!(
+            await_addr(&replica.fleet(), t, Some(*a as usize), Duration::from_secs(10)),
+            "forwarded insert never arrived through the log"
+        );
+    }
+    // forwarded deletes take the same round trip
+    rclient.delete(addrs[0]).unwrap();
+    reference.delete(addrs[0] as usize).unwrap();
+    assert!(
+        await_addr(&replica.fleet(), &tags[0], None, Duration::from_secs(10)),
+        "forwarded delete never arrived through the log"
+    );
+    // converged: wire reads through the replica match the reference
+    for t in &tags {
+        assert_eq!(rclient.lookup(t).unwrap(), reference.lookup(t.clone()).unwrap());
+    }
+
+    net_rf.shutdown();
+    net_rf.join();
+    let _ = replica.shutdown();
+    pclient.shutdown().unwrap();
+    net_p.join();
+}
+
+#[test]
+fn mid_stream_compaction_restarts_the_replica_from_a_snapshot_transfer() {
+    let dir_p = test_dir("compact-primary");
+    let dir_r = test_dir("compact-replica");
+    let (net_p, _handle_p, addr_p) = start_primary(&dir_p);
+    let reference = ShardedCamServer::new(&fleet_cfg(), PlacementMode::TagHash, policy()).spawn();
+
+    let mut rng = Rng::seed_from_u64(902);
+    let tags = TagDistribution::Uniform.sample_distinct(fleet_cfg().n, 45, &mut rng);
+    let mut client = CamClient::connect(addr_p.clone()).unwrap();
+    for t in tags.iter().take(20) {
+        assert_eq!(client.insert(t).unwrap(), reference.insert(t.clone()).unwrap() as u64);
+    }
+    let replica = ReplicaServer::start(&addr_p, &dir_r, replica_opts(2)).unwrap();
+    assert!(replica.wait_caught_up(Duration::from_secs(10)), "initial chase never converged");
+
+    // compaction resets every bank's log to generation 1 while the
+    // replica holds generation-0 cursors; writes land before and after,
+    // so the stale cursors are unreachable and only the Snapshot restart
+    // path can make the replica whole again
+    for t in tags.iter().skip(20).take(10) {
+        assert_eq!(client.insert(t).unwrap(), reference.insert(t.clone()).unwrap() as u64);
+    }
+    client.snapshot().unwrap();
+    for t in tags.iter().skip(30) {
+        assert_eq!(client.insert(t).unwrap(), reference.insert(t.clone()).unwrap() as u64);
+    }
+
+    // wait on actual state, not the caught-up flag (which may be stale
+    // from before the burst): the last insert must arrive
+    let last = tags.last().unwrap();
+    let want = reference.lookup(last.clone()).unwrap().addr;
+    assert!(
+        await_addr(&replica.fleet(), last, want, Duration::from_secs(10)),
+        "replica never crossed the generation bump"
+    );
+    assert!(replica.fenced().is_none());
+
+    // bit-identical across the whole history plus random probes
+    for t in &tags {
+        assert_eq!(replica.fleet().lookup(t.clone()).unwrap(), reference.lookup(t.clone()).unwrap());
+    }
+    for _ in 0..40 {
+        let t = cscam::workload::random_tag(fleet_cfg().n, &mut rng);
+        assert_eq!(replica.fleet().lookup(t.clone()).unwrap(), reference.lookup(t).unwrap());
+    }
+
+    replica.shutdown().unwrap();
+    client.shutdown().unwrap();
+    net_p.join();
+}
+
+#[test]
+fn failover_promotes_the_replica_without_losing_acked_writes_and_fences_the_old_epoch() {
+    let dir_p = test_dir("failover-primary");
+    let dir_r = test_dir("failover-replica");
+    let (net_p, _handle_p, addr_p) = start_primary(&dir_p);
+    let reference = ShardedCamServer::new(&fleet_cfg(), PlacementMode::TagHash, policy()).spawn();
+
+    let mut rng = Rng::seed_from_u64(903);
+    let tags = TagDistribution::Uniform.sample_distinct(fleet_cfg().n, 32, &mut rng);
+    let mut client = CamClient::connect(addr_p.clone()).unwrap();
+
+    // 30 acked writes: half before the replica exists, half while it is
+    // chasing; plus a few acked deletes so failover carries those too
+    let mut acked = Vec::new();
+    for t in tags.iter().take(15) {
+        let a = client.insert(t).unwrap();
+        assert_eq!(a, reference.insert(t.clone()).unwrap() as u64);
+        acked.push((t.clone(), a));
+    }
+    let replica = ReplicaServer::start(&addr_p, &dir_r, replica_opts(3)).unwrap();
+    for t in tags.iter().skip(15).take(15) {
+        let a = client.insert(t).unwrap();
+        assert_eq!(a, reference.insert(t.clone()).unwrap() as u64);
+        acked.push((t.clone(), a));
+    }
+    for (_, a) in acked.iter().take(3) {
+        client.delete(*a).unwrap();
+        reference.delete(*a as usize).unwrap();
+    }
+
+    // wait on state, not the flag: last insert present AND first delete
+    // applied means the probed banks converged…
+    let last = acked.last().unwrap();
+    assert!(
+        await_addr(&replica.fleet(), &last.0, Some(last.1 as usize), Duration::from_secs(10))
+            && await_addr(&replica.fleet(), &acked[0].0, None, Duration::from_secs(10)),
+        "replica never converged before the failover"
+    );
+    // …and every bank's reported lag draining to zero means the whole
+    // acked history was read and applied (the cursor only advances past
+    // records that applied)
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while replica.status().lags.iter().any(|l| l.lag_records > 0) {
+        assert!(Instant::now() < deadline, "per-bank lag never drained: {:?}", replica.status());
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    // the primary dies (drained stop — acked writes are WAL write-through,
+    // so the on-disk acked prefix is the same as after a kill -9; CI's
+    // replication-smoke job covers the literal kill)
+    net_p.shutdown();
+    net_p.join();
+
+    // reads keep serving off the orphaned replica; a write with a dead
+    // primary must fail cleanly, never false-ack
+    let (net_rf, addr_rf) = start_replica_front(&replica);
+    let mut rclient = CamClient::connect(addr_rf).unwrap();
+    assert_eq!(rclient.lookup(&acked[5].0).unwrap(), reference.lookup(acked[5].0.clone()).unwrap());
+    let orphan = cscam::workload::random_tag(fleet_cfg().n, &mut rng);
+    assert!(rclient.insert(&orphan).is_err(), "a write with a dead primary must not be acked");
+    net_rf.shutdown();
+    net_rf.join();
+    let _ = replica.shutdown();
+
+    // offline promotion bumps the manifest epoch: 0 → 1
+    assert_eq!(promote(&dir_r).unwrap(), 1);
+
+    // the promoted directory serves as the new writable primary: every
+    // acked write answers exactly like the never-crashed reference
+    let (net_c, _handle_c, addr_c) = start_primary(&dir_r);
+    let mut c = CamClient::connect(addr_c.clone()).unwrap();
+    for (i, (t, a)) in acked.iter().enumerate() {
+        let got = c.lookup(t).unwrap();
+        assert_eq!(got, reference.lookup(t.clone()).unwrap(), "acked write {i} diverged");
+        if i >= 3 {
+            assert_eq!(got.addr, Some(*a as usize), "acked write {i} lost in failover");
+        } else {
+            assert_eq!(got.addr, None, "acked delete {i} lost in failover");
+        }
+    }
+    // and accepts new writes on the new lineage
+    let a31 = c.insert(&tags[31]).unwrap();
+    assert_eq!(a31, reference.insert(tags[31].clone()).unwrap() as u64);
+
+    // a subscriber still on epoch 0 — the crashed ex-primary rejoining in
+    // its old role — is refused with the fence, which names the new epoch
+    match c.subscribe_log(99, 0, 0, 0, SUBSCRIBE_BOOTSTRAP).unwrap() {
+        LogPoll::Fenced { server_epoch } => assert_eq!(server_epoch, 1),
+        other => panic!("stale-epoch subscriber answered {other:?} instead of Fenced"),
+    }
+
+    // the correct rejoin path: subscribe fresh, adopt epoch 1 through the
+    // manifest, and converge on the new lineage — here straight into the
+    // ex-primary's own directory, overwriting its fenced state
+    let rejoin = ReplicaServer::start(&addr_c, &dir_p, replica_opts(4)).unwrap();
+    assert_eq!(rejoin.epoch(), 1, "rejoin must adopt the promoted epoch");
+    assert!(
+        await_addr(&rejoin.fleet(), &tags[31], Some(a31 as usize), Duration::from_secs(10)),
+        "rejoined ex-primary never converged on the new lineage"
+    );
+    assert!(rejoin.fenced().is_none());
+    for (i, (t, _)) in acked.iter().enumerate() {
+        assert_eq!(
+            rejoin.fleet().lookup(t.clone()).unwrap(),
+            reference.lookup(t.clone()).unwrap(),
+            "rejoined replica diverged on acked write {i}"
+        );
+    }
+
+    rejoin.shutdown().unwrap();
+    c.shutdown().unwrap();
+    net_c.join();
+}
