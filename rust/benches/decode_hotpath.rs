@@ -1,21 +1,35 @@
 //! Micro-benchmarks of the L3 hot path (see rust/README.md):
 //! the native CNN decode (`decode_into`), tag-bit selection, the ζ-group
-//! OR, the full engine lookup, and — with the `pjrt` feature and artifacts
-//! present — the batched PJRT decode per-query cost.
+//! OR, the full engine lookup with the bloom pre-filter on and off, and —
+//! with the `pjrt` feature and artifacts present — the batched PJRT decode
+//! per-query cost.
 //!
 //! Perf target: native decode ≥ 10 M lookups/s single-thread at the
 //! reference geometry, so the coordinator is never the bottleneck against
 //! the modelled 1.4 GHz device.
 //!
 //! Run: `cargo bench --bench decode_hotpath`
+//!
+//! Flags (after `--`):
+//! * `--quick`      headline rows only, shorter samples (CI smoke);
+//! * `--json PATH`  append the headline rows (tagged `decode_hotpath`) to
+//!   the `BENCH_*.json` trajectory shared with the other benches.  Row
+//!   keys: `prefilter`, `hit_ratio`, `throughput_lps`, `mean_lambda`.
+//!
+//! The headline pair measures the same single-reader lookup stream twice —
+//! once through `LookupEngine::lookup` (slab kernels + bloom pre-filter)
+//! and once through `lookup_unfiltered` (slab kernels only, the reference
+//! path the bit-identity battery checks against) — so the trajectory
+//! records what the pre-filter buys on a miss-bearing mix.
 
 use cscam::bits::BitVec;
 use cscam::cnn::{ClusteredNetwork, Selection};
 use cscam::config::DesignConfig;
 use cscam::coordinator::LookupEngine;
-use cscam::util::bench::{black_box, BenchTimer};
+use cscam::util::bench::{black_box, write_bench_json, BenchRecord, BenchTimer};
+use cscam::util::cli::Args;
 use cscam::util::Rng;
-use cscam::workload::TagDistribution;
+use cscam::workload::{QueryMix, TagDistribution};
 
 fn trained(cfg: &DesignConfig, seed: u64) -> (ClusteredNetwork, Vec<Vec<u16>>) {
     let mut rng = Rng::seed_from_u64(seed);
@@ -29,72 +43,138 @@ fn trained(cfg: &DesignConfig, seed: u64) -> (ClusteredNetwork, Vec<Vec<u16>>) {
     (net, idxs)
 }
 
-fn main() {
-    let timer = BenchTimer::default();
-    let cfg = DesignConfig::reference();
-
-    // 1. native GD decode, reference geometry (512 entries, c=3)
-    let (net, idxs) = trained(&cfg, 1);
-    let mut act = BitVec::zeros(cfg.m);
-    let mut en = BitVec::zeros(cfg.beta());
-    let mut i = 0usize;
-    let r = timer.run("cnn_decode_into/M=512,c=3,l=8,zeta=8", || {
-        i = (i + 1) % idxs.len();
-        net.decode_into(&idxs[i], &mut act, &mut en)
-    });
-    println!(
-        "   → {:.1} M decodes/s (target ≥ 10 M/s: {})",
-        r.per_second() / 1e6,
-        if r.per_second() >= 10e6 { "PASS" } else { "MISS" }
-    );
-
-    // 2. geometry scaling of the decode
-    for (m, c) in [(1024usize, 3usize), (4096, 3), (512, 6)] {
-        let big = DesignConfig { m, c, zeta: 8, ..DesignConfig::reference() };
-        let (net, idxs) = trained(&big, 2);
-        let mut act = BitVec::zeros(big.m);
-        let mut en = BitVec::zeros(big.beta());
-        let mut i = 0usize;
-        timer.run(&format!("cnn_decode_into/M={m},c={c}"), || {
-            i = (i + 1) % idxs.len();
-            net.decode_into(&idxs[i], &mut act, &mut en)
-        });
-    }
-
-    // 3. tag-bit selection (strided), hot-path variant
-    let sel = Selection::strided(cfg.n, cfg.c, cfg.k());
-    let mut rng = Rng::seed_from_u64(3);
-    let tags: Vec<BitVec> =
-        (0..256).map(|_| cscam::workload::random_tag(cfg.n, &mut rng)).collect();
-    let mut buf = Vec::new();
-    let mut i = 0usize;
-    timer.run("selection_apply_into/N=128,q=9", || {
-        i = (i + 1) % tags.len();
-        sel.apply_into(&tags[i], &mut buf);
-        buf.len()
-    });
-
-    // 4. full engine lookup (selection + decode + CAM search + energy)
+/// A filled reference bank plus a probe stream with the given hit ratio.
+/// Fixed seeds: every run (and both prefilter variants) measures the same
+/// tags in the same order.
+fn filled_engine(cfg: &DesignConfig, hit_ratio: f64) -> (LookupEngine, Vec<BitVec>) {
     let mut engine = LookupEngine::new(cfg.clone());
     let mut rng = Rng::seed_from_u64(4);
     let stored = TagDistribution::Uniform.sample_distinct(cfg.n, cfg.m, &mut rng);
     for t in &stored {
         engine.insert(t).unwrap();
     }
+    let mix = QueryMix { hit_ratio, zipf_s: 0.0 };
+    let probes: Vec<BitVec> =
+        (0..1024).map(|_| mix.sample(&stored, cfg.n, &mut rng).0).collect();
+    (engine, probes)
+}
+
+/// One headline row: the full engine lookup (selection + pre-filter +
+/// decode + CAM search + energy accounting) on a mixed stream, with the
+/// bloom pre-filter consulted (`prefilter = true`) or bypassed.
+fn run_headline(
+    timer: &BenchTimer,
+    cfg: &DesignConfig,
+    hit_ratio: f64,
+    prefilter: bool,
+) -> BenchRecord {
+    let (mut engine, probes) = filled_engine(cfg, hit_ratio);
+    let state = if prefilter { "on" } else { "off" };
+    let name = format!("decode_hotpath/prefilter={state}/hit{:.0}", hit_ratio * 100.0);
+    let mut lambda_sum = 0u64;
+    let mut served = 0u64;
     let mut i = 0usize;
-    let r = timer.run("engine_lookup/reference,hit", || {
-        i = (i + 1) % stored.len();
-        black_box(engine.lookup(&stored[i]).unwrap().comparisons)
+    let r = timer.run(&name, || {
+        i = (i + 1) % probes.len();
+        let out = if prefilter {
+            engine.lookup(&probes[i]).unwrap()
+        } else {
+            engine.lookup_unfiltered(&probes[i]).unwrap()
+        };
+        lambda_sum += out.lambda as u64;
+        served += 1;
+        black_box(out.comparisons)
     });
-    println!("   → {:.2} M lookups/s end-to-end (incl. energy accounting)", r.per_second() / 1e6);
-    let miss = cscam::workload::random_tag(cfg.n, &mut rng);
-    timer.run("engine_lookup/reference,miss", || {
-        black_box(engine.lookup(&miss).unwrap().comparisons)
-    });
+    println!(
+        "   → {:.2} M lookups/s (prefilter {state}, {:.0} % hit mix)",
+        r.per_second() / 1e6,
+        hit_ratio * 100.0
+    );
+    let mut rec = BenchRecord::new(name);
+    rec.push("prefilter", prefilter as u64 as f64);
+    rec.push("hit_ratio", hit_ratio);
+    rec.push("throughput_lps", r.per_second());
+    rec.push("mean_lambda", lambda_sum as f64 / served.max(1) as f64);
+    rec
+}
+
+fn main() -> anyhow::Result<()> {
+    // `cargo bench ... -- FLAGS` forwards FLAGS here (harness = false)
+    let args = Args::parse(std::env::args().skip(1), &["quick"])?;
+    args.check_known(&["quick", "json"])?;
+    let quick = args.flag("quick");
+    let timer = if quick {
+        BenchTimer::new(
+            std::time::Duration::from_millis(60),
+            std::time::Duration::from_millis(60),
+            4,
+        )
+    } else {
+        BenchTimer::default()
+    };
+    let cfg = DesignConfig::reference();
+
+    if !quick {
+        // 1. native GD decode, reference geometry (512 entries, c=3)
+        let (net, idxs) = trained(&cfg, 1);
+        let mut act = BitVec::zeros(cfg.m);
+        let mut en = BitVec::zeros(cfg.beta());
+        let mut i = 0usize;
+        let r = timer.run("cnn_decode_into/M=512,c=3,l=8,zeta=8", || {
+            i = (i + 1) % idxs.len();
+            net.decode_into(&idxs[i], &mut act, &mut en)
+        });
+        println!(
+            "   → {:.1} M decodes/s (target ≥ 10 M/s: {})",
+            r.per_second() / 1e6,
+            if r.per_second() >= 10e6 { "PASS" } else { "MISS" }
+        );
+
+        // 2. geometry scaling of the decode
+        for (m, c) in [(1024usize, 3usize), (4096, 3), (512, 6)] {
+            let big = DesignConfig { m, c, zeta: 8, ..DesignConfig::reference() };
+            let (net, idxs) = trained(&big, 2);
+            let mut act = BitVec::zeros(big.m);
+            let mut en = BitVec::zeros(big.beta());
+            let mut i = 0usize;
+            timer.run(&format!("cnn_decode_into/M={m},c={c}"), || {
+                i = (i + 1) % idxs.len();
+                net.decode_into(&idxs[i], &mut act, &mut en)
+            });
+        }
+
+        // 3. tag-bit selection (strided), hot-path variant
+        let sel = Selection::strided(cfg.n, cfg.c, cfg.k());
+        let mut rng = Rng::seed_from_u64(3);
+        let tags: Vec<BitVec> =
+            (0..256).map(|_| cscam::workload::random_tag(cfg.n, &mut rng)).collect();
+        let mut buf = Vec::new();
+        let mut i = 0usize;
+        timer.run("selection_apply_into/N=128,q=9", || {
+            i = (i + 1) % tags.len();
+            sel.apply_into(&tags[i], &mut buf);
+            buf.len()
+        });
+    }
+
+    // 4. headline pair: full engine lookup, pre-filter on vs off, on the
+    //    same 50 % hit mix (misses are where the filter earns its keep)
+    let mut records = Vec::new();
+    for prefilter in [true, false] {
+        records.push(run_headline(&timer, &cfg, 0.5, prefilter));
+    }
 
     // 5. PJRT batched decode (per-query amortized), if built with the
     //    `pjrt` feature and artifacts exist
-    pjrt_decode_benches(&timer);
+    if !quick {
+        pjrt_decode_benches(&timer);
+    }
+
+    if let Some(path) = args.get("json") {
+        write_bench_json(std::path::Path::new(path), "decode_hotpath", &records)?;
+        println!("\nappended {} 'decode_hotpath' trajectory rows to {path}", records.len());
+    }
+    Ok(())
 }
 
 #[cfg(feature = "pjrt")]
@@ -115,7 +195,7 @@ fn pjrt_decode_benches(timer: &BenchTimer) {
         ..DesignConfig::reference()
     };
     let (net, idxs) = trained(&acfg, 5);
-    store.set_weights(net.rows()).expect("weights");
+    store.set_weights(&net.weight_rows()).expect("weights");
     for &batch in &store.batch_sizes() {
         let queries: Vec<Vec<u16>> = (0..batch).map(|i| idxs[i % idxs.len()].clone()).collect();
         let r = timer.run(&format!("pjrt_decode/batch={batch}"), || {

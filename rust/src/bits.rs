@@ -61,6 +61,35 @@ impl BitVec {
         }
     }
 
+    /// Assert (in debug builds) that no bit past `len` is set in the last
+    /// word.  The word-level decode kernels trust this invariant — a slack
+    /// bit would inflate `count_ones`, corrupt `hamming`, and surface as a
+    /// phantom match — so every mutation path calls this before returning.
+    #[inline]
+    pub fn ensure_tail_clear(&self) {
+        debug_assert!(self.tail_is_clear(), "tail slack bits set in BitVec of len {}", self.len);
+    }
+
+    fn tail_is_clear(&self) -> bool {
+        let rem = self.len % 64;
+        rem == 0
+            || self.words.last().map_or(true, |&last| last & !((1u64 << rem) - 1) == 0)
+    }
+
+    /// Resize to `new_len` bits in place, reusing the allocation.
+    ///
+    /// Growth zero-extends.  Shrinking truncates **and clears** every bit
+    /// past `new_len` — both whole stale high words and the slack of the new
+    /// last word — so a later grow (or a word-level kernel that scans the
+    /// full slice) never observes stale data.
+    pub fn resize(&mut self, new_len: usize) {
+        let new_words = new_len.div_ceil(64);
+        self.words.resize(new_words, 0);
+        self.len = new_len;
+        self.mask_tail();
+        self.ensure_tail_clear();
+    }
+
     /// Number of bits.
     pub fn len(&self) -> usize {
         self.len
@@ -110,21 +139,31 @@ impl BitVec {
     }
 
     /// In-place AND with another vector of the same length.
+    ///
+    /// Panics on a length mismatch in release builds too: `zip` would
+    /// silently stop at the shorter slice, leaving high words of `self`
+    /// un-ANDed — and if `other` were longer with a dirty tail, OR (below)
+    /// could smuggle slack bits in.  The kernels trust tails are clear.
     #[inline]
     pub fn and_assign(&mut self, other: &BitVec) {
-        debug_assert_eq!(self.len, other.len);
+        assert_eq!(self.len, other.len, "and_assign length mismatch");
         for (a, b) in self.words.iter_mut().zip(&other.words) {
             *a &= *b;
         }
+        self.ensure_tail_clear();
     }
 
     /// In-place OR with another vector of the same length.
+    ///
+    /// Panics on a length mismatch in release builds too (see
+    /// [`Self::and_assign`]).
     #[inline]
     pub fn or_assign(&mut self, other: &BitVec) {
-        debug_assert_eq!(self.len, other.len);
+        assert_eq!(self.len, other.len, "or_assign length mismatch");
         for (a, b) in self.words.iter_mut().zip(&other.words) {
             *a |= *b;
         }
+        self.ensure_tail_clear();
     }
 
     /// Hamming distance to another vector of the same length.
@@ -184,6 +223,7 @@ impl BitVec {
                 }
             }
         }
+        v.ensure_tail_clear();
         Ok(v)
     }
 
@@ -223,6 +263,230 @@ impl std::fmt::Display for FromBytesError {
 }
 
 impl std::error::Error for FromBytesError {}
+
+/// Word-level kernels shared by the decode (AND-reduce) and candidate
+/// compare (XOR-popcount) hot paths.
+///
+/// The scalar forms are written over plain `u64` slices so the compiler can
+/// autovectorize them; building with `--features simd` (nightly, enables
+/// `portable_simd`) swaps in explicit 4-lane `std::simd` bodies.  Both
+/// variants are bit-identical by construction — the lanes carry the same
+/// words — and the property battery in `tests/decode_kernel.rs` checks the
+/// composed results against a per-bit reference.
+pub mod kernel {
+    #[cfg(feature = "simd")]
+    use std::simd::u64x4;
+
+    /// `dst[i] &= src[i]` over equal-length slices (the winner-take-all
+    /// AND-reduce step).
+    #[inline]
+    pub fn and_words(dst: &mut [u64], src: &[u64]) {
+        assert_eq!(dst.len(), src.len(), "and_words length mismatch");
+        #[cfg(feature = "simd")]
+        {
+            let mut d = dst.chunks_exact_mut(4);
+            let mut s = src.chunks_exact(4);
+            for (dc, sc) in (&mut d).zip(&mut s) {
+                (u64x4::from_slice(dc) & u64x4::from_slice(sc)).copy_to_slice(dc);
+            }
+            for (a, b) in d.into_remainder().iter_mut().zip(s.remainder()) {
+                *a &= *b;
+            }
+        }
+        #[cfg(not(feature = "simd"))]
+        for (a, b) in dst.iter_mut().zip(src) {
+            *a &= *b;
+        }
+    }
+
+    /// Hamming distance between equal-length word slices: popcount of the
+    /// XOR (the candidate tag compare).  Exact only when both sides keep
+    /// their tail slack clear — which `BitVec`/`BitSlab` guarantee.
+    #[inline]
+    pub fn xor_popcount(a: &[u64], b: &[u64]) -> usize {
+        assert_eq!(a.len(), b.len(), "xor_popcount length mismatch");
+        #[cfg(feature = "simd")]
+        {
+            let mut total = 0usize;
+            let mut ca = a.chunks_exact(4);
+            let mut cb = b.chunks_exact(4);
+            for (xa, xb) in (&mut ca).zip(&mut cb) {
+                let x = u64x4::from_slice(xa) ^ u64x4::from_slice(xb);
+                total += x.to_array().iter().map(|w| w.count_ones() as usize).sum::<usize>();
+            }
+            for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+                total += (x ^ y).count_ones() as usize;
+            }
+            total
+        }
+        #[cfg(not(feature = "simd"))]
+        a.iter().zip(b).map(|(x, y)| (x ^ y).count_ones() as usize).sum()
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn kernels_match_scalar_reference_across_lengths() {
+            // cover the simd remainder path: lengths 0..9 words
+            let mut seed = 0x9E37_79B9_7F4A_7C15u64;
+            let mut next = || {
+                seed ^= seed << 13;
+                seed ^= seed >> 7;
+                seed ^= seed << 17;
+                seed
+            };
+            for words in 0..9usize {
+                let a: Vec<u64> = (0..words).map(|_| next()).collect();
+                let b: Vec<u64> = (0..words).map(|_| next()).collect();
+                let mut dst = a.clone();
+                and_words(&mut dst, &b);
+                let want: Vec<u64> = a.iter().zip(&b).map(|(x, y)| x & y).collect();
+                assert_eq!(dst, want, "words={words}");
+                let pop = xor_popcount(&a, &b);
+                let want: usize =
+                    a.iter().zip(&b).map(|(x, y)| (x ^ y).count_ones() as usize).sum();
+                assert_eq!(pop, want, "words={words}");
+            }
+        }
+    }
+}
+
+/// A dense matrix of equal-length bit rows packed into one contiguous
+/// `Vec<u64>` — the storage behind the CNN weight matrix and the CAM tag
+/// column.
+///
+/// Row `r` occupies words `r * stride .. r * stride + stride` where
+/// `stride == ceil(row_bits / 64)`, each row laid out exactly like a
+/// [`BitVec`] of `row_bits` bits (little-endian words, tail slack clear).
+/// Keeping all rows in one allocation makes a row-major sweep — the
+/// winner-take-all AND-reduce, the candidate tag compare — a linear walk
+/// over memory instead of a pointer chase through `Vec<BitVec>`, which is
+/// the point of the slab kernels.
+///
+/// The per-row tail invariant is identical to `BitVec`'s: bits past
+/// `row_bits` in a row's last word are always zero, so word-level popcounts
+/// over whole rows are exact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitSlab {
+    words: Vec<u64>,
+    rows: usize,
+    row_bits: usize,
+    stride: usize,
+}
+
+impl BitSlab {
+    /// All-zeros slab of `rows` rows of `row_bits` bits each.
+    pub fn zeros(rows: usize, row_bits: usize) -> Self {
+        let stride = row_bits.div_ceil(64);
+        BitSlab { words: vec![0; rows * stride], rows, row_bits, stride }
+    }
+
+    /// Build from materialized rows, validating that every row has
+    /// `row_bits` bits.  Intended for restore paths, not hot loops.
+    pub fn from_rows(rows: &[BitVec], row_bits: usize) -> Self {
+        let mut slab = BitSlab::zeros(rows.len(), row_bits);
+        for (r, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), row_bits, "slab row {r} length mismatch");
+            row.ensure_tail_clear();
+            slab.row_words_mut(r).copy_from_slice(row.words());
+        }
+        slab
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Bits per row.
+    #[inline]
+    pub fn row_bits(&self) -> usize {
+        self.row_bits
+    }
+
+    /// Words per row (`ceil(row_bits / 64)`).
+    #[inline]
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// The packed words of row `r`.
+    #[inline]
+    pub fn row_words(&self, r: usize) -> &[u64] {
+        &self.words[r * self.stride..(r + 1) * self.stride]
+    }
+
+    /// Mutable packed words of row `r`.  Callers must uphold the per-row
+    /// tail invariant; [`Self::debug_assert_row_tail_clear`] checks it.
+    #[inline]
+    pub fn row_words_mut(&mut self, r: usize) -> &mut [u64] {
+        &mut self.words[r * self.stride..(r + 1) * self.stride]
+    }
+
+    /// Read bit `bit` of row `r`.
+    #[inline]
+    pub fn get(&self, r: usize, bit: usize) -> bool {
+        assert!(bit < self.row_bits, "bit {bit} out of bounds for {}-bit rows", self.row_bits);
+        (self.row_words(r)[bit / 64] >> (bit % 64)) & 1 == 1
+    }
+
+    /// Write bit `bit` of row `r`.
+    #[inline]
+    pub fn set(&mut self, r: usize, bit: usize, value: bool) {
+        assert!(bit < self.row_bits, "bit {bit} out of bounds for {}-bit rows", self.row_bits);
+        let stride = self.stride;
+        let w = &mut self.words[r * stride + bit / 64];
+        if value {
+            *w |= 1 << (bit % 64);
+        } else {
+            *w &= !(1 << (bit % 64));
+        }
+    }
+
+    /// Clear every bit of row `r`.
+    pub fn clear_row(&mut self, r: usize) {
+        self.row_words_mut(r).fill(0);
+    }
+
+    /// Clear every bit of every row.
+    pub fn clear(&mut self) {
+        self.words.fill(0);
+    }
+
+    /// Materialize row `r` as an owned [`BitVec`] (restore/snapshot paths,
+    /// not hot loops).
+    pub fn row(&self, r: usize) -> BitVec {
+        let mut v = BitVec::zeros(self.row_bits);
+        v.words_mut().copy_from_slice(self.row_words(r));
+        v.ensure_tail_clear();
+        v
+    }
+
+    /// Materialize every row (snapshot encoding, PJRT weight upload).
+    pub fn to_rows(&self) -> Vec<BitVec> {
+        (0..self.rows).map(|r| self.row(r)).collect()
+    }
+
+    /// Debug-assert row `r` has no slack bits set past `row_bits`.
+    #[inline]
+    pub fn debug_assert_row_tail_clear(&self, r: usize) {
+        debug_assert!(
+            {
+                let rem = self.row_bits % 64;
+                rem == 0
+                    || self
+                        .row_words(r)
+                        .last()
+                        .map_or(true, |&last| last & !((1u64 << rem) - 1) == 0)
+            },
+            "tail slack bits set in slab row {r} ({}-bit rows)",
+            self.row_bits
+        );
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -374,6 +638,119 @@ mod tests {
             let bytes = vec![0xFFu8; len / 8];
             assert_eq!(BitVec::from_bytes(&bytes, len).unwrap().count_ones(), len);
         }
+    }
+
+    #[test]
+    fn word_ops_hold_tail_invariant_at_boundary_lengths() {
+        // 63 (slack within one word), 64 (no slack), 65 (one slack-heavy
+        // second word): the lengths where tail bookkeeping goes wrong first.
+        for len in [63usize, 64, 65] {
+            let a = BitVec::ones(len);
+            let mut b = BitVec::zeros(len);
+            for i in (0..len).step_by(3) {
+                b.set(i, true);
+            }
+
+            let mut and = a.clone();
+            and.and_assign(&b);
+            and.ensure_tail_clear();
+            assert_eq!(and, b, "len={len}");
+
+            let mut or = b.clone();
+            or.or_assign(&a);
+            or.ensure_tail_clear();
+            assert_eq!(or, a, "len={len}");
+            assert_eq!(or.count_ones(), len, "len={len}");
+
+            let bytes = a.to_bytes();
+            let back = BitVec::from_bytes(&bytes, len).unwrap();
+            back.ensure_tail_clear();
+            assert_eq!(back.count_ones(), len, "len={len}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn and_assign_length_mismatch_panics_in_release_too() {
+        let mut a = BitVec::zeros(64);
+        a.and_assign(&BitVec::zeros(65));
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn or_assign_length_mismatch_panics_in_release_too() {
+        let mut a = BitVec::ones(65);
+        a.or_assign(&BitVec::ones(64));
+    }
+
+    #[test]
+    fn resize_shrink_truncates_and_zeroes() {
+        // grow-then-shrink must not leave stale high words or slack bits
+        let mut v = BitVec::ones(200);
+        v.resize(65);
+        assert_eq!(v.len(), 65);
+        assert_eq!(v.words().len(), 2);
+        assert_eq!(v.count_ones(), 65);
+        v.resize(63);
+        assert_eq!(v.words().len(), 1);
+        assert_eq!(v.count_ones(), 63);
+        // re-grow: the reclaimed region must read as zeros
+        v.resize(200);
+        assert_eq!(v.count_ones(), 63);
+        assert!(!v.get(63));
+        assert!(!v.get(199));
+    }
+
+    #[test]
+    fn resize_boundary_lengths_roundtrip_bytes() {
+        for len in [63usize, 64, 65] {
+            let mut v = BitVec::ones(128);
+            v.resize(len);
+            assert_eq!(v.count_ones(), len, "len={len}");
+            let bytes = v.to_bytes();
+            assert_eq!(BitVec::from_bytes(&bytes, len).unwrap(), v, "len={len}");
+        }
+    }
+
+    #[test]
+    fn slab_rows_match_bitvec_layout() {
+        for row_bits in [1usize, 63, 64, 65, 130] {
+            let rows: Vec<BitVec> = (0..5)
+                .map(|r| {
+                    let mut v = BitVec::zeros(row_bits);
+                    for i in (r..row_bits).step_by(5) {
+                        v.set(i, true);
+                    }
+                    v
+                })
+                .collect();
+            let slab = BitSlab::from_rows(&rows, row_bits);
+            assert_eq!(slab.rows(), 5);
+            assert_eq!(slab.stride(), row_bits.div_ceil(64));
+            for (r, row) in rows.iter().enumerate() {
+                assert_eq!(slab.row_words(r), row.words(), "row_bits={row_bits} r={r}");
+                assert_eq!(&slab.row(r), row, "row_bits={row_bits} r={r}");
+                slab.debug_assert_row_tail_clear(r);
+            }
+            assert_eq!(slab.to_rows(), rows, "row_bits={row_bits}");
+        }
+    }
+
+    #[test]
+    fn slab_set_get_clear() {
+        let mut slab = BitSlab::zeros(3, 70);
+        slab.set(1, 69, true);
+        slab.set(1, 0, true);
+        slab.set(2, 64, true);
+        assert!(slab.get(1, 69));
+        assert!(slab.get(2, 64));
+        assert!(!slab.get(0, 69));
+        assert_eq!(slab.row(1).count_ones(), 2);
+        slab.clear_row(1);
+        assert!(slab.row(1).is_zero());
+        assert!(slab.get(2, 64)); // neighbors untouched
+        slab.clear();
+        assert!(slab.row(2).is_zero());
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Functional CAM array with per-search switching-activity accounting.
 
-use crate::bits::BitVec;
+use crate::bits::{kernel, BitSlab, BitVec};
 use crate::energy::SearchActivity;
 
 /// One search's outcome: the matching addresses plus the switching activity
@@ -19,7 +19,10 @@ pub struct SearchResult {
 pub struct CamArray {
     n: usize,
     zeta: usize,
-    tags: Vec<BitVec>,
+    /// `M` rows of `N` bits in one contiguous slab — a whole ζ-row
+    /// sub-block is one cache-friendly word run, which is what the
+    /// word-parallel compare in [`Self::search`] sweeps.
+    tags: BitSlab,
     valid: BitVec,
 }
 
@@ -28,12 +31,7 @@ impl CamArray {
     pub fn new(m: usize, n: usize, zeta: usize) -> Self {
         assert!(m > 0 && n > 0, "M and N must be positive");
         assert!(zeta > 0 && m % zeta == 0, "ζ must divide M");
-        CamArray {
-            n,
-            zeta,
-            tags: vec![BitVec::zeros(n); m],
-            valid: BitVec::zeros(m),
-        }
+        CamArray { n, zeta, tags: BitSlab::zeros(m, n), valid: BitVec::zeros(m) }
     }
 
     /// Rebuild from persisted rows + valid bits (the snapshot restore
@@ -59,13 +57,19 @@ impl CamArray {
         if let Some((a, t)) = tags.iter().enumerate().find(|(_, t)| t.len() != n) {
             return Err(format!("tag at address {a} is {} bits, expected N={n}", t.len()));
         }
-        Ok(CamArray { n, zeta, tags, valid })
+        Ok(CamArray { n, zeta, tags: BitSlab::from_rows(&tags, n), valid })
     }
 
-    /// All stored rows, including residual contents of invalidated slots
-    /// (the snapshot encoder dumps them verbatim; invalid rows never
-    /// influence a search result).
-    pub fn tags(&self) -> &[BitVec] {
+    /// All stored rows materialized, including residual contents of
+    /// invalidated slots (the snapshot encoder dumps them verbatim; invalid
+    /// rows never influence a search result).  Cold path — the hot compare
+    /// reads the slab words directly.
+    pub fn tag_rows(&self) -> Vec<BitVec> {
+        self.tags.to_rows()
+    }
+
+    /// The backing tag slab (row `addr` ↦ the stored tag bits).
+    pub fn slab(&self) -> &BitSlab {
         &self.tags
     }
 
@@ -76,7 +80,7 @@ impl CamArray {
 
     /// Number of entries (M).
     pub fn m(&self) -> usize {
-        self.tags.len()
+        self.tags.rows()
     }
 
     /// Tag width in bits (N).
@@ -103,7 +107,8 @@ impl CamArray {
     pub fn write(&mut self, addr: usize, tag: BitVec) {
         assert_eq!(tag.len(), self.n, "tag width mismatch");
         assert!(addr < self.m(), "address out of range");
-        self.tags[addr] = tag;
+        tag.ensure_tail_clear();
+        self.tags.row_words_mut(addr).copy_from_slice(tag.words());
         self.valid.set(addr, true);
     }
 
@@ -113,10 +118,11 @@ impl CamArray {
         self.valid.set(addr, false);
     }
 
-    /// Read back the stored tag, if valid.
-    pub fn read(&self, addr: usize) -> Option<&BitVec> {
+    /// Read back the stored tag, if valid.  Materializes a fresh `BitVec`
+    /// from the slab row — fine for the write-path callers this serves.
+    pub fn read(&self, addr: usize) -> Option<BitVec> {
         if addr < self.m() && self.valid.get(addr) {
-            Some(&self.tags[addr])
+            Some(self.tags.row(addr))
         } else {
             None
         }
@@ -143,6 +149,7 @@ impl CamArray {
         assert_eq!(tag.len(), self.n, "tag width mismatch");
         assert_eq!(enables.len(), self.beta(), "enable mask width mismatch");
 
+        tag.ensure_tail_clear();
         let mut matches = Vec::new();
         let mut activity = SearchActivity {
             total_blocks: self.beta(),
@@ -150,9 +157,12 @@ impl CamArray {
             ..SearchActivity::default()
         };
 
+        let tag_words = tag.words();
         for block in enables.iter_ones() {
             activity.enabled_blocks += 1;
             let base = block * self.zeta;
+            // One enabled block = ζ consecutive slab rows = one contiguous
+            // word run; the XOR-popcount compare streams straight through it.
             for row in base..base + self.zeta {
                 activity.enabled_rows += 1;
                 if !self.valid.get(row) {
@@ -166,7 +176,7 @@ impl CamArray {
                 }
                 activity.compared_rows += 1;
                 activity.compared_bits += self.n;
-                let dist = self.tags[row].hamming(tag);
+                let dist = kernel::xor_popcount(self.tags.row_words(row), tag_words);
                 if dist == 0 {
                     activity.matched_rows += 1;
                     matches.push(row);

@@ -9,8 +9,10 @@
 //! femtojoules.
 
 pub mod array;
+pub mod prefilter;
 
 pub use array::{CamArray, SearchResult};
+pub use prefilter::BankFilter;
 
 
 /// Match-line circuit family (survey [7]; Table II "ML Arch.").

@@ -1,0 +1,253 @@
+//! Per-bank counting-bloom pre-filter over the stored tag set.
+//!
+//! SMLE-CAM (PAPERS.md, 1406.7662) pre-screens match-lines with a cheap
+//! single-transistor stage so definite-miss rows are never energized.  The
+//! software analog sits one level higher: before the CNN decode even runs,
+//! the bank asks a bloom filter whether the queried tag *could* be stored.
+//! A negative answer is definitive (bloom filters have no false negatives),
+//! so the lookup returns a miss having compared **zero** rows — the modelled
+//! energy/delay accounting is exactly that of a decode that activated no
+//! P_II neuron (λ = 0, no enabled blocks), mirroring a never-energized
+//! match-line.
+//!
+//! The filter is *counting* (u32 cells, not bits) so the single writer can
+//! maintain it incrementally through insert → delete → overwrite histories
+//! without rebuild storms; a plain bit filter would have to be regenerated
+//! on every delete.  Cells are u32 because the worst case — all M tags
+//! hashing both probes into one cell — is still far below overflow.
+//!
+//! Hashing is the crate's pinned [`Fnv1a`](crate::util::hash::Fnv1a) (the
+//! same definition the shard router and wire checksums use), split
+//! Kirsch–Mitzenmacher style: two independent base hashes `h1`, `h2` from
+//! differently-seeded FNV streams yield probe `i` as `h1 + i·h2`.  The
+//! bloom-filter WNN of SNIPPETS.md (zero_g `wnn.rs`) derives its probes
+//! from one hash the same way.  Determinism matters: a rebuilt filter (old
+//! snapshot, no filter section) must equal the serialized one bit for bit.
+
+use crate::bits::BitVec;
+use crate::util::hash::Fnv1a;
+
+/// Probes per key.  Two keeps maintenance cheap and, with 8 cells per
+/// entry, lands the full-occupancy false-positive rate near
+/// `(1 - e^(-2/8))^2 ≈ 4.9 %` — false positives only cost the unfiltered
+/// decode we would have done anyway.
+pub const PROBES: usize = 2;
+
+/// Cells per CAM entry before rounding the table up to a power of two.
+pub const CELLS_PER_ENTRY: usize = 8;
+
+/// Seed byte folded into the first base hash (distinct streams for h1/h2).
+const SEED_H1: u8 = 0xC5;
+/// Seed byte folded into the second base hash.
+const SEED_H2: u8 = 0x5C;
+
+/// Counting bloom filter over a bank's valid tags.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BankFilter {
+    /// Power-of-two cell count; probe indices are masked, not modded.
+    cells: Vec<u32>,
+    /// `cells.len() - 1`, cached for the probe mask.
+    mask: u64,
+    /// Number of tags currently folded in (diagnostics + serialization).
+    keys: u64,
+}
+
+impl BankFilter {
+    /// Empty filter sized for a bank of `m` entries.
+    pub fn new(m: usize) -> Self {
+        let len = (m.max(1) * CELLS_PER_ENTRY).next_power_of_two();
+        BankFilter { cells: vec![0; len], mask: (len - 1) as u64, keys: 0 }
+    }
+
+    /// Rebuild from a full tag iterator (snapshot restore without a filter
+    /// section, retrain-style compaction).  Deterministic: equal tag
+    /// multisets yield equal filters regardless of insertion order.
+    pub fn from_tags<'a>(m: usize, tags: impl IntoIterator<Item = &'a BitVec>) -> Self {
+        let mut f = BankFilter::new(m);
+        for t in tags {
+            f.add(t);
+        }
+        f
+    }
+
+    /// Number of cells in the table.
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// True if no key has been added.
+    pub fn is_empty(&self) -> bool {
+        self.keys == 0
+    }
+
+    /// Number of keys currently folded in.
+    pub fn keys(&self) -> u64 {
+        self.keys
+    }
+
+    /// Raw cell values (snapshot encoding).
+    pub fn cells(&self) -> &[u32] {
+        &self.cells
+    }
+
+    /// Restore from serialized parts.  Returns an error string (the store
+    /// layer wraps it into a typed `Corrupt`) instead of panicking — the
+    /// input may come from a damaged file.
+    pub fn from_parts(cells: Vec<u32>, keys: u64) -> Result<Self, String> {
+        if !cells.len().is_power_of_two() {
+            return Err(format!("filter cell count {} is not a power of two", cells.len()));
+        }
+        let mask = (cells.len() - 1) as u64;
+        Ok(BankFilter { cells, mask, keys })
+    }
+
+    /// The two probe indices for a tag (Kirsch–Mitzenmacher: `h1 + i·h2`).
+    #[inline]
+    fn probes(&self, tag: &BitVec) -> [usize; PROBES] {
+        let mut h1 = Fnv1a::new();
+        h1.update(&[SEED_H1]);
+        let mut h2 = Fnv1a::new();
+        h2.update(&[SEED_H2]);
+        for &w in tag.words() {
+            let b = w.to_le_bytes();
+            h1.update(&b);
+            h2.update(&b);
+        }
+        // Force h2 odd so the stride is coprime with the power-of-two table
+        // and the two probes never collapse onto one cell for every key.
+        let (h1, h2) = (h1.finish(), h2.finish() | 1);
+        let mut out = [0usize; PROBES];
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = (h1.wrapping_add((i as u64).wrapping_mul(h2)) & self.mask) as usize;
+        }
+        out
+    }
+
+    /// Fold a tag in (writer path: insert / overwrite-new-side).
+    pub fn add(&mut self, tag: &BitVec) {
+        for p in self.probes(tag) {
+            self.cells[p] = self.cells[p].saturating_add(1);
+        }
+        self.keys += 1;
+    }
+
+    /// Remove one occurrence of a tag (writer path: delete /
+    /// overwrite-old-side).  Counts saturate at zero rather than panic: the
+    /// writer only removes tags it previously added, and a violated
+    /// assumption must degrade to extra false positives, never to a lookup
+    /// failure.
+    pub fn remove(&mut self, tag: &BitVec) {
+        for p in self.probes(tag) {
+            self.cells[p] = self.cells[p].saturating_sub(1);
+        }
+        self.keys = self.keys.saturating_sub(1);
+    }
+
+    /// `false` means the tag is definitely not stored (no false negatives);
+    /// `true` means "possibly stored — run the real decode".
+    #[inline]
+    pub fn may_contain(&self, tag: &BitVec) -> bool {
+        self.probes(tag).into_iter().all(|p| self.cells[p] > 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tag(v: u128, n: usize) -> BitVec {
+        BitVec::from_u128(v, n)
+    }
+
+    #[test]
+    fn table_is_power_of_two_sized() {
+        for m in [1usize, 7, 64, 100, 1024] {
+            let f = BankFilter::new(m);
+            assert!(f.len().is_power_of_two(), "m={m}");
+            assert!(f.len() >= m * CELLS_PER_ENTRY, "m={m}");
+        }
+    }
+
+    #[test]
+    fn no_false_negatives_through_add_remove_history() {
+        let mut f = BankFilter::new(64);
+        let stored: Vec<BitVec> = (0..64u128).map(|v| tag(v * 7 + 1, 32)).collect();
+        for t in &stored {
+            f.add(t);
+        }
+        for t in &stored {
+            assert!(f.may_contain(t));
+        }
+        // remove half; the survivors must still all pass
+        for t in &stored[..32] {
+            f.remove(t);
+        }
+        for t in &stored[32..] {
+            assert!(f.may_contain(t));
+        }
+        assert_eq!(f.keys(), 32);
+    }
+
+    #[test]
+    fn empty_filter_rejects_everything() {
+        let f = BankFilter::new(64);
+        for v in 0..100u128 {
+            assert!(!f.may_contain(&tag(v, 32)));
+        }
+    }
+
+    #[test]
+    fn removal_to_empty_rejects_again() {
+        let mut f = BankFilter::new(16);
+        let t = tag(0xDEAD, 32);
+        f.add(&t);
+        assert!(f.may_contain(&t));
+        f.remove(&t);
+        assert!(!f.may_contain(&t));
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn rebuild_is_order_independent_and_equals_incremental() {
+        let tags: Vec<BitVec> = (0..40u128).map(|v| tag(v * 13 + 5, 48)).collect();
+        let forward = BankFilter::from_tags(64, tags.iter());
+        let reverse = BankFilter::from_tags(64, tags.iter().rev());
+        assert_eq!(forward, reverse);
+
+        let mut incremental = BankFilter::new(64);
+        for t in &tags {
+            incremental.add(t);
+        }
+        assert_eq!(forward, incremental);
+    }
+
+    #[test]
+    fn false_positive_rate_is_sane_at_full_occupancy() {
+        // 256 stored keys in a filter sized for m=256; probe 10k absent
+        // keys. Expected FP ≈ (1 - e^(-2·256/2048))^2 ≈ 4.9%; assert a
+        // loose ceiling so hash quality regressions get caught.
+        let stored: Vec<BitVec> = (0..256u128).map(|v| tag(v + 1, 64)).collect();
+        let f = BankFilter::from_tags(256, stored.iter());
+        let fps = (0..10_000u128).filter(|v| f.may_contain(&tag(0x1_0000_0000 + v, 64))).count();
+        assert!(fps < 1_000, "false-positive rate {fps}/10000 is implausibly high");
+    }
+
+    #[test]
+    fn parts_roundtrip() {
+        let tags: Vec<BitVec> = (0..20u128).map(|v| tag(v * 3, 32)).collect();
+        let f = BankFilter::from_tags(32, tags.iter());
+        let back = BankFilter::from_parts(f.cells().to_vec(), f.keys()).unwrap();
+        assert_eq!(f, back);
+        assert!(BankFilter::from_parts(vec![0; 3], 0).is_err(), "non-pow2 cell count");
+    }
+
+    #[test]
+    fn saturating_remove_never_underflows() {
+        let mut f = BankFilter::new(8);
+        let t = tag(7, 16);
+        f.remove(&t); // never added: must not panic or wrap
+        assert!(f.is_empty());
+        f.add(&t);
+        assert!(f.may_contain(&t));
+    }
+}

@@ -1,7 +1,7 @@
 //! Bit-packed clustered-sparse-network: training and global decoding.
 
 
-use crate::bits::BitVec;
+use crate::bits::{kernel, BitSlab, BitVec};
 
 /// Result of one decode: the P_II activation map and the derived
 /// compare-enable mask.
@@ -24,9 +24,11 @@ pub struct ClusteredNetwork {
     l: usize,
     m: usize,
     zeta: usize,
-    /// `c·l` rows of `M` bits; row `i·l + j` holds w_{(i,j)(·)} — the SRAM
-    /// layout of Fig. 4.
-    rows: Vec<BitVec>,
+    /// `c·l` rows of `M` bits in one contiguous slab; row `i·l + j` holds
+    /// w_{(i,j)(·)} — the SRAM layout of Fig. 4.  A decode touches `c` rows
+    /// spaced `l` rows apart, and the slab keeps each a single contiguous
+    /// word run.
+    rows: BitSlab,
 }
 
 impl ClusteredNetwork {
@@ -34,7 +36,7 @@ impl ClusteredNetwork {
     pub fn new(c: usize, l: usize, m: usize, zeta: usize) -> Self {
         assert!(c > 0 && l.is_power_of_two(), "bad cluster geometry");
         assert!(zeta > 0 && m % zeta == 0, "ζ must divide M");
-        ClusteredNetwork { c, l, m, zeta, rows: vec![BitVec::zeros(m); c * l] }
+        ClusteredNetwork { c, l, m, zeta, rows: BitSlab::zeros(c * l, m) }
     }
 
     /// Build with geometry from a design config.
@@ -64,7 +66,7 @@ impl ClusteredNetwork {
         if let Some((i, r)) = rows.iter().enumerate().find(|(_, r)| r.len() != m) {
             return Err(format!("weight row {i} is {} bits, expected M={m}", r.len()));
         }
-        Ok(ClusteredNetwork { c, l, m, zeta, rows })
+        Ok(ClusteredNetwork { c, l, m, zeta, rows: BitSlab::from_rows(&rows, m) })
     }
 
     pub fn c(&self) -> usize {
@@ -85,12 +87,20 @@ impl ClusteredNetwork {
 
     /// Number of stored (set) weights — hardware occupancy statistic.
     pub fn weight_count(&self) -> usize {
-        self.rows.iter().map(|r| r.count_ones()).sum()
+        (0..self.rows.rows())
+            .map(|r| self.rows.row_words(r).iter().map(|w| w.count_ones() as usize).sum::<usize>())
+            .sum()
     }
 
-    /// Raw weight rows (the Fig. 4 SRAM contents) — used to ship W to the
-    /// PJRT decode artifact.
-    pub fn rows(&self) -> &[BitVec] {
+    /// Materialized weight rows (the Fig. 4 SRAM contents) — used to ship W
+    /// to the PJRT decode artifact and by the snapshot encoder.  Cold path;
+    /// the hot decode reads the slab words directly.
+    pub fn weight_rows(&self) -> Vec<BitVec> {
+        self.rows.to_rows()
+    }
+
+    /// The backing weight slab (row `i·l + j` ↦ w_{(i,j)(·)}).
+    pub fn slab(&self) -> &BitSlab {
         &self.rows
     }
 
@@ -101,16 +111,14 @@ impl ClusteredNetwork {
         assert!(addr < self.m, "address out of range");
         for (cluster, &j) in idx.iter().enumerate() {
             assert!((j as usize) < self.l, "neuron index out of range");
-            self.rows[cluster * self.l + j as usize].set(addr, true);
+            self.rows.set(cluster * self.l + j as usize, addr, true);
         }
     }
 
     /// Forget everything (weights are superposed, so deleting a single
     /// association requires a rebuild — see the coordinator's retrain path).
     pub fn clear(&mut self) {
-        for r in &mut self.rows {
-            *r = BitVec::zeros(self.m);
-        }
+        self.rows.clear();
     }
 
     /// Rebuild from a full association list.
@@ -139,15 +147,14 @@ impl ClusteredNetwork {
         debug_assert_eq!(enables.len(), self.beta());
 
         // AND the selected row of each cluster (LD fused into row select).
-        let first = &self.rows[idx[0] as usize];
-        act.words_mut().copy_from_slice(first.words());
+        // Each row is one contiguous word run inside the slab, so this is a
+        // pure streaming AND-reduce with no per-row pointer chase.
+        act.words_mut().copy_from_slice(self.rows.row_words(idx[0] as usize));
         for (cluster, &j) in idx.iter().enumerate().skip(1) {
             debug_assert!((j as usize) < self.l);
-            let row = &self.rows[cluster * self.l + j as usize];
-            for (a, w) in act.words_mut().iter_mut().zip(row.words()) {
-                *a &= *w;
-            }
+            kernel::and_words(act.words_mut(), self.rows.row_words(cluster * self.l + j as usize));
         }
+        act.ensure_tail_clear();
 
         // ζ-group OR → enable bits, plus λ popcount, in one pass.
         let mut lambda = 0usize;
@@ -247,8 +254,8 @@ mod tests {
         // '101'=5, '110'=6, fourth entry ⇒ w_(1,5)(4) and w_(2,6)(4) set.
         let mut net = ClusteredNetwork::new(2, 8, 16, 4);
         net.train(&[5, 6], 4);
-        assert!(net.rows()[5].get(4)); // cluster 1, neuron 5
-        assert!(net.rows()[8 + 6].get(4)); // cluster 2, neuron 6
+        assert!(net.slab().get(5, 4)); // cluster 1, neuron 5
+        assert!(net.slab().get(8 + 6, 4)); // cluster 2, neuron 6
         assert_eq!(net.weight_count(), 2);
         assert_eq!(net.decode(&[5, 6]).lambda, 1);
     }

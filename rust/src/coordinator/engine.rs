@@ -20,10 +20,10 @@
 use std::sync::Arc;
 
 use crate::bits::BitVec;
-use crate::cam::CamArray;
+use crate::cam::{BankFilter, CamArray};
 use crate::cnn::{ClusteredNetwork, Selection};
 use crate::config::DesignConfig;
-use crate::energy::{EnergyBreakdown, EnergyModel};
+use crate::energy::{EnergyBreakdown, EnergyModel, SearchActivity};
 use crate::timing::{proposed_delay, DelayConstants, DelayReport};
 
 /// Engine errors.
@@ -100,6 +100,11 @@ pub struct DecodeScratch {
     act: BitVec,
     enables: BitVec,
     idx: Vec<u16>,
+    /// Lookups answered by the bloom pre-filter without running decode,
+    /// accumulated here (the scratch is the only per-thread mutable state a
+    /// lookup touches) and drained into the serving metrics by
+    /// [`Self::take_prefilter_rejects`].
+    prefilter_rejects: u64,
 }
 
 impl Default for DecodeScratch {
@@ -111,7 +116,12 @@ impl Default for DecodeScratch {
 impl DecodeScratch {
     /// An empty scratch; buffers are sized on first use.
     pub fn new() -> Self {
-        DecodeScratch { act: BitVec::zeros(0), enables: BitVec::zeros(0), idx: Vec::new() }
+        DecodeScratch {
+            act: BitVec::zeros(0),
+            enables: BitVec::zeros(0),
+            idx: Vec::new(),
+            prefilter_rejects: 0,
+        }
     }
 
     /// Pre-size for a design point (avoids the first-use allocation).
@@ -120,17 +130,32 @@ impl DecodeScratch {
             act: BitVec::zeros(cfg.m),
             enables: BitVec::zeros(cfg.beta()),
             idx: Vec::with_capacity(cfg.c),
+            prefilter_rejects: 0,
         }
     }
 
+    /// Resize the buffers to a state's geometry, reusing the allocations.
+    ///
+    /// Shrinking **truncates and zeroes** the reclaimed region
+    /// ([`BitVec::resize`]): the word-level winner-take-all reads whole
+    /// word slices, so a bank-split/retrain shrink that merely adjusted the
+    /// length while leaving stale high words would feed garbage into the
+    /// AND-reduce.  The regression test
+    /// `scratch_shrink_leaves_no_stale_words` pins this down.
     #[inline]
     fn ensure(&mut self, m: usize, beta: usize) {
         if self.act.len() != m {
-            self.act = BitVec::zeros(m);
+            self.act.resize(m);
         }
         if self.enables.len() != beta {
-            self.enables = BitVec::zeros(beta);
+            self.enables.resize(beta);
         }
+    }
+
+    /// Drain the pre-filter reject counter (serving layers feed it into
+    /// `cscam_prefilter_rejects_total`).
+    pub fn take_prefilter_rejects(&mut self) -> u64 {
+        std::mem::take(&mut self.prefilter_rejects)
     }
 }
 
@@ -147,15 +172,43 @@ pub struct SearchState {
     selection: Selection,
     net: ClusteredNetwork,
     cam: CamArray,
+    /// Counting-bloom pre-filter over the valid tags: a negative answer
+    /// short-circuits [`Self::lookup`] before decode (the software analog
+    /// of SMLE-CAM's match-line pre-screening).  Maintained by the single
+    /// writer on insert/delete; rebuilt deterministically from the CAM when
+    /// a restore source carries no filter section.
+    filter: BankFilter,
     energy: EnergyModel,
     delay: DelayReport,
 }
 
 impl SearchState {
     fn new(cfg: DesignConfig, selection: Selection, net: ClusteredNetwork, cam: CamArray) -> Self {
+        let filter = Self::rebuild_filter(&cam);
+        Self::with_filter(cfg, selection, net, cam, filter)
+    }
+
+    fn with_filter(
+        cfg: DesignConfig,
+        selection: Selection,
+        net: ClusteredNetwork,
+        cam: CamArray,
+        filter: BankFilter,
+    ) -> Self {
         let energy = EnergyModel::new(cfg.clone());
         let delay = proposed_delay(&cfg, &DelayConstants::reference());
-        SearchState { cfg, selection, net, cam, energy, delay }
+        SearchState { cfg, selection, net, cam, filter, energy, delay }
+    }
+
+    /// The filter a CAM's valid tags deterministically imply — what the
+    /// writer-maintained filter always equals (asserted by the decode-kernel
+    /// battery) and what restore uses when no filter section is present.
+    pub fn rebuild_filter(cam: &CamArray) -> BankFilter {
+        let mut f = BankFilter::new(cam.m());
+        for addr in cam.valid_bits().iter_ones() {
+            f.add(&cam.slab().row(addr));
+        }
+        f
     }
 
     pub fn config(&self) -> &DesignConfig {
@@ -176,13 +229,45 @@ impl SearchState {
         &self.cam
     }
 
+    /// The bloom pre-filter (snapshot encoding serializes its cells).
+    pub fn filter(&self) -> &BankFilter {
+        &self.filter
+    }
+
     pub fn occupancy(&self) -> usize {
         self.cam.occupancy()
     }
 
     /// The full proposed-architecture lookup — pure: `&self` state, caller
     /// scratch, no interior mutability.  This is the concurrent hot path.
+    ///
+    /// The bloom pre-filter runs first: a negative answer is definitive
+    /// (no false negatives), so the lookup returns a miss with zero
+    /// compared rows and zero enabled blocks — the accounting of a decode
+    /// that activated nothing (λ = 0), mirroring a match-line that was
+    /// never energized.  For any tag the filter passes — every stored tag,
+    /// plus the ~5 % false positives — the outcome is bit-identical to
+    /// [`Self::lookup_unfiltered`], because it *is* that code.
     pub fn lookup(
+        &self,
+        tag: &BitVec,
+        scratch: &mut DecodeScratch,
+    ) -> Result<LookupOutcome, EngineError> {
+        if tag.len() != self.cfg.n {
+            return Err(EngineError::TagWidth { got: tag.len(), want: self.cfg.n });
+        }
+        if !self.filter.may_contain(tag) {
+            scratch.prefilter_rejects += 1;
+            return Ok(self.rejected_outcome());
+        }
+        self.lookup_unfiltered(tag, scratch)
+    }
+
+    /// The lookup with the pre-filter bypassed: always runs the CNN decode
+    /// and the enabled-block compare.  This is the reference the
+    /// bit-identity battery checks the filtered path against, and the
+    /// baseline side of the `decode_hotpath` bench.
+    pub fn lookup_unfiltered(
         &self,
         tag: &BitVec,
         scratch: &mut DecodeScratch,
@@ -208,6 +293,27 @@ impl SearchState {
             energy,
             delay: self.delay,
         })
+    }
+
+    /// The outcome of a pre-filter reject: exactly what
+    /// [`Self::lookup_unfiltered`] reports when the decode activates no
+    /// P_II neuron — λ = 0, no enabled blocks, no compared rows, and the
+    /// modelled energy of that all-quiet search.
+    fn rejected_outcome(&self) -> LookupOutcome {
+        let activity = SearchActivity {
+            total_blocks: self.cfg.beta(),
+            tag_bits: self.cfg.n,
+            ..SearchActivity::default()
+        };
+        LookupOutcome {
+            addr: None,
+            all_matches: Vec::new(),
+            lambda: 0,
+            enabled_blocks: 0,
+            comparisons: 0,
+            energy: self.energy.proposed_measured(&activity, 1),
+            delay: self.delay,
+        }
     }
 
     /// Lookup with an externally computed enable mask (the PJRT decode
@@ -371,12 +477,17 @@ impl LookupEngine {
     /// are validated (they may come from a corrupt file); on success the
     /// engine is field-for-field identical to the one the image was taken
     /// from: same matches, λ, energy and delay for every tag.
+    /// `filter` is the serialized pre-filter when the source image carried
+    /// one (snapshot v2+); `None` — a v1 image, or any older producer —
+    /// rebuilds it from the CAM's valid tags, which yields the exact same
+    /// filter the writer would have maintained (rebuild is deterministic).
     #[allow(clippy::too_many_arguments)]
     pub fn from_parts(
         cfg: DesignConfig,
         selection: Selection,
         net: ClusteredNetwork,
         cam: CamArray,
+        filter: Option<BankFilter>,
         stale_deletes: usize,
         retrain_threshold: f64,
         insert_cursor: usize,
@@ -424,13 +535,34 @@ impl LookupEngine {
         if !retrain_threshold.is_finite() || retrain_threshold < 0.0 {
             return Err(format!("retrain threshold {retrain_threshold} out of range"));
         }
+        let filter = match filter {
+            Some(f) => {
+                let expected = BankFilter::new(cfg.m).len();
+                if f.len() != expected {
+                    return Err(format!(
+                        "filter has {} cells, expected {expected} for M={}",
+                        f.len(),
+                        cfg.m
+                    ));
+                }
+                if f.keys() != cam.occupancy() as u64 {
+                    return Err(format!(
+                        "filter covers {} keys but the CAM holds {} valid entries",
+                        f.keys(),
+                        cam.occupancy()
+                    ));
+                }
+                f
+            }
+            None => SearchState::rebuild_filter(&cam),
+        };
         // `live` is derived state: valid slot ⇔ live association, and the
         // cluster indices are a pure function of the stored tag.
         let live: Vec<Option<Vec<u16>>> =
-            (0..cfg.m).map(|a| cam.read(a).map(|t| selection.apply(t))).collect();
+            (0..cfg.m).map(|a| cam.read(a).map(|t| selection.apply(&t))).collect();
         let scratch = DecodeScratch::for_config(&cfg);
         Ok(LookupEngine {
-            state: Arc::new(SearchState::new(cfg, selection, net, cam)),
+            state: Arc::new(SearchState::with_filter(cfg, selection, net, cam, filter)),
             live,
             stale_deletes,
             first_free: insert_cursor,
@@ -462,9 +594,10 @@ impl LookupEngine {
         self.state.selection()
     }
 
-    /// The CNN's weight rows (to ship to the PJRT decode artifact).
-    pub fn weight_rows(&self) -> &[BitVec] {
-        self.state.network().rows()
+    /// The CNN's weight rows, materialized from the slab (to ship to the
+    /// PJRT decode artifact).
+    pub fn weight_rows(&self) -> Vec<BitVec> {
+        self.state.network().weight_rows()
     }
 
     pub fn occupancy(&self) -> usize {
@@ -512,10 +645,14 @@ impl LookupEngine {
         if addr >= self.state.cfg.m {
             return Err(EngineError::BadAddress(addr));
         }
-        // Replacing a live entry leaves its old weights stale (superposed).
-        if self.live[addr].is_some() {
+        // Replacing a live entry leaves its old weights stale (superposed);
+        // its old tag leaves the pre-filter with it (read before overwrite).
+        let replaced = if self.live[addr].is_some() {
             self.stale_deletes += 1;
-        }
+            self.state.cam.read(addr)
+        } else {
+            None
+        };
         let mut idx = Vec::with_capacity(self.state.cfg.c);
         self.state.selection.apply_into(tag, &mut idx);
         // Copy-on-write: clones the state only when a published snapshot
@@ -528,6 +665,10 @@ impl LookupEngine {
         let st = Arc::make_mut(&mut self.state);
         st.net.train(&idx, addr);
         st.cam.write(addr, tag.clone());
+        if let Some(old) = replaced {
+            st.filter.remove(&old);
+        }
+        st.filter.add(tag);
         self.live[addr] = Some(idx);
         self.maybe_retrain();
         Ok(())
@@ -541,7 +682,14 @@ impl LookupEngine {
             return Err(EngineError::BadAddress(addr));
         }
         if self.live[addr].take().is_some() {
-            Arc::make_mut(&mut self.state).cam.erase(addr);
+            // Read the tag before invalidating the row: the filter tracks
+            // tag contents, the valid bit only gates the compare.
+            let old = self.state.cam.read(addr);
+            let st = Arc::make_mut(&mut self.state);
+            st.cam.erase(addr);
+            if let Some(old) = old {
+                st.filter.remove(&old);
+            }
             self.first_free = self.first_free.min(addr);
             self.stale_deletes += 1;
             self.maybe_retrain();
@@ -582,6 +730,20 @@ impl LookupEngine {
     /// equivalence tests assert exactly that).
     pub fn lookup(&mut self, tag: &BitVec) -> Result<LookupOutcome, EngineError> {
         self.state.lookup(tag, &mut self.scratch)
+    }
+
+    /// Lookup with the pre-filter bypassed — see
+    /// [`SearchState::lookup_unfiltered`].  The decode always runs, so
+    /// stale superposed weights still fire the classifier; the bit-identity
+    /// battery and the `decode_hotpath` bench baseline use this path.
+    pub fn lookup_unfiltered(&mut self, tag: &BitVec) -> Result<LookupOutcome, EngineError> {
+        self.state.lookup_unfiltered(tag, &mut self.scratch)
+    }
+
+    /// Drain the writer-scratch pre-filter reject counter (the engine-thread
+    /// serving path feeds it into the bank metrics).
+    pub fn take_prefilter_rejects(&mut self) -> u64 {
+        self.scratch.take_prefilter_rejects()
     }
 
     /// Lookup with an externally computed enable mask (the PJRT decode
@@ -692,13 +854,57 @@ mod tests {
         e.retrain_threshold = 0.0; // manual retrain only
         let tags = fill(&mut e, 8, 4);
         e.delete(3).unwrap();
+        // The deleted tag left the pre-filter with the delete, so the
+        // filtered path answers the miss without decoding at all…
         let out = e.lookup(&tags[3]).unwrap();
+        assert_eq!(out.addr, None);
+        assert_eq!(out.lambda, 0, "pre-filter rejects the deleted tag before decode");
+        assert_eq!(out.comparisons, 0);
+        // …while the unfiltered reference path still pays for the stale
+        // superposed weights until a retrain clears them.
+        let out = e.lookup_unfiltered(&tags[3]).unwrap();
         assert_eq!(out.addr, None);
         assert!(out.lambda >= 1, "stale weights still fire the classifier");
         e.retrain();
-        let out = e.lookup(&tags[3]).unwrap();
+        let out = e.lookup_unfiltered(&tags[3]).unwrap();
         assert_eq!(out.addr, None);
         assert_eq!(out.lambda, 0, "retrain clears stale weights");
+    }
+
+    #[test]
+    fn prefilter_reject_matches_lambda_zero_accounting() {
+        // A rejected lookup must be indistinguishable from an unfiltered
+        // decode that activated nothing: same energy, delay and counters.
+        let mut e = small_engine();
+        e.retrain_threshold = 0.0;
+        let tags = fill(&mut e, 8, 4);
+        e.delete(3).unwrap();
+        e.retrain(); // now the unfiltered path also decodes to λ=0
+        let filtered = e.lookup(&tags[3]).unwrap();
+        let unfiltered = e.lookup_unfiltered(&tags[3]).unwrap();
+        assert_eq!(filtered, unfiltered, "reject == λ=0 decode, field for field");
+    }
+
+    #[test]
+    fn prefilter_never_rejects_stored_tags_and_counts_rejects() {
+        let mut e = small_engine();
+        let tags = fill(&mut e, 32, 21);
+        let state = e.search_state();
+        let mut scratch = DecodeScratch::new();
+        for t in &tags {
+            assert_eq!(state.lookup(t, &mut scratch).unwrap(), e.lookup_unfiltered(t).unwrap());
+        }
+        assert_eq!(scratch.take_prefilter_rejects(), 0, "stored tags never reject");
+        let mut rng = Rng::seed_from_u64(22);
+        let mut rejects = 0u64;
+        for _ in 0..200 {
+            let t = crate::workload::random_tag(e.config().n, &mut rng);
+            let out = state.lookup(&t, &mut scratch).unwrap();
+            assert!(out.addr.is_none() || e.cam_tag_equal(&t, out.addr.unwrap()));
+            rejects += scratch.take_prefilter_rejects();
+        }
+        assert!(rejects > 150, "random 32-bit probes should mostly reject, got {rejects}");
+        assert_eq!(scratch.take_prefilter_rejects(), 0, "take drains the counter");
     }
 
     #[test]
@@ -758,11 +964,13 @@ mod tests {
             e.selection().clone(),
             e.network().clone(),
             e.cam().clone(),
+            Some(e.search_state().filter().clone()),
             e.stale_delete_count(),
             e.retrain_threshold,
             e.insert_cursor(),
         )
         .unwrap();
+        assert_eq!(rebuilt.search_state().filter(), e.search_state().filter());
         assert_eq!(rebuilt.occupancy(), e.occupancy());
         assert_eq!(rebuilt.insert_cursor(), e.insert_cursor());
         for t in &tags {
@@ -780,6 +988,7 @@ mod tests {
             e.selection().clone(),
             e.network().clone(),
             e.cam().clone(),
+            None,
             0,
             0.25,
             5,
@@ -792,9 +1001,25 @@ mod tests {
             e.selection().clone(),
             e.network().clone(),
             wrong_cam,
+            None,
             0,
             0.25,
             0,
+        )
+        .is_err());
+        // a filter whose key count disagrees with the CAM occupancy
+        let stale_filter = crate::cam::BankFilter::new(cfg.m);
+        let mut full = small_engine();
+        fill(&mut full, 4, 33);
+        assert!(LookupEngine::from_parts(
+            cfg,
+            full.selection().clone(),
+            full.network().clone(),
+            full.cam().clone(),
+            Some(stale_filter),
+            0,
+            0.25,
+            4,
         )
         .is_err());
     }
@@ -878,6 +1103,34 @@ mod tests {
     }
 
     #[test]
+    fn scratch_shrink_leaves_no_stale_words() {
+        // Regression: a scratch warmed on a big geometry then reused on a
+        // small one must behave exactly like a fresh scratch — the resize
+        // has to truncate AND zero, or stale high words from the big
+        // bank would sit where the word-level kernels can see them.
+        let mut big = LookupEngine::new(DesignConfig::reference());
+        let mut small = small_engine();
+        let tb = fill(&mut big, 64, 23);
+        let ts = fill(&mut small, 16, 24);
+        let mut reused = DecodeScratch::new();
+        let big_state = big.search_state();
+        for t in &tb {
+            big_state.lookup(t, &mut reused).unwrap();
+        }
+        let small_state = small.search_state();
+        let mut rng = Rng::seed_from_u64(25);
+        let mut probes = ts.clone();
+        probes.extend((0..32).map(|_| crate::workload::random_tag(small.config().n, &mut rng)));
+        for t in &probes {
+            let mut fresh = DecodeScratch::new();
+            assert_eq!(
+                small_state.lookup(t, &mut reused).unwrap(),
+                small_state.lookup(t, &mut fresh).unwrap()
+            );
+        }
+    }
+
+    #[test]
     fn shared_search_publish_and_snapshot() {
         let mut e = small_engine();
         let shared = SharedSearch::new(e.search_state());
@@ -901,7 +1154,7 @@ mod tests {
 
     impl LookupEngine {
         fn cam_tag_equal(&self, tag: &BitVec, addr: usize) -> bool {
-            self.cam().read(addr).map(|t| t == tag).unwrap_or(false)
+            self.cam().read(addr).map(|t| &t == tag).unwrap_or(false)
         }
     }
 }

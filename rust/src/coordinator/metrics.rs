@@ -24,6 +24,11 @@ pub struct Metrics {
     pub host_latency_ns: Histogram,
     /// Decode batch sizes seen.
     pub batch_size: OnlineStats,
+    /// Lookups answered by the bloom pre-filter before decode (definite
+    /// misses — zero enabled blocks, zero compared rows).  Drained from
+    /// [`crate::coordinator::DecodeScratch::take_prefilter_rejects`] by the
+    /// serving layers.
+    pub prefilter_rejects: u64,
     /// Lookups shed at the admission queue (`EngineError::Busy`) —
     /// transient overload, the client should retry.
     pub shed_busy: u64,
@@ -62,6 +67,7 @@ impl Metrics {
             enabled_blocks: OnlineStats::new(),
             host_latency_ns: Histogram::log_linear(1 << 30),
             batch_size: OnlineStats::new(),
+            prefilter_rejects: 0,
             shed_busy: 0,
             shed_full: 0,
             wal_appends: 0,
@@ -137,6 +143,7 @@ impl Metrics {
         self.enabled_blocks.merge(&other.enabled_blocks);
         self.batch_size.merge(&other.batch_size);
         self.host_latency_ns.merge(&other.host_latency_ns);
+        self.prefilter_rejects += other.prefilter_rejects;
         self.shed_busy += other.shed_busy;
         self.shed_full += other.shed_full;
         self.wal_appends += other.wal_appends;
@@ -229,9 +236,12 @@ mod tests {
         b.wal_appended_bytes = 96;
         b.wal_fsyncs = 1;
         b.wal_fsync_ns.record(90_000);
+        b.prefilter_rejects = 7;
+        a.prefilter_rejects = 2;
         a.merge(&b);
         assert_eq!(a.shed_busy, 3);
         assert_eq!(a.shed_full, 4);
+        assert_eq!(a.prefilter_rejects, 9);
         assert_eq!(a.wal_appends, 8);
         assert_eq!(a.wal_appended_bytes, 96);
         assert_eq!(a.wal_fsyncs, 1);

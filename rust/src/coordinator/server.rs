@@ -241,12 +241,14 @@ fn reader_loop(
                 depth.retire(1);
                 let state = shared.snapshot();
                 let out = state.lookup(&tag, &mut scratch);
+                let rejects = scratch.take_prefilter_rejects();
                 metrics.with(|m| {
                     // a pool single is one decode dispatch of one tag
                     m.record_batch(1);
                     if let Ok(o) = &out {
                         m.record_lookup(o);
                     }
+                    m.prefilter_rejects += rejects;
                     m.record_latency(enqueued.elapsed().as_nanos() as u64);
                 });
                 let _ = resp.send(out);
@@ -260,6 +262,7 @@ fn reader_loop(
                     for tag in chunk {
                         out.push(state.lookup(tag, &mut scratch));
                     }
+                    let rejects = scratch.take_prefilter_rejects();
                     metrics.with(|m| {
                         m.record_batch(chunk.len());
                         for r in &out[out.len() - chunk.len()..] {
@@ -267,6 +270,7 @@ fn reader_loop(
                                 m.record_lookup(o);
                             }
                         }
+                        m.prefilter_rejects += rejects;
                     });
                 }
                 metrics.with(|m| m.record_latency(enqueued.elapsed().as_nanos() as u64));
@@ -439,11 +443,13 @@ impl ServerHandle {
     ) -> Result<LookupOutcome, EngineError> {
         let t0 = Instant::now();
         let out = self.shared.snapshot().lookup(tag, scratch)?;
+        let rejects = scratch.take_prefilter_rejects();
         self.bank_metrics.with(|m| {
             // keep the "every lookup belongs to a dispatch" invariant the
             // batch stats are read under
             m.record_batch(1);
             m.record_lookup(&out);
+            m.prefilter_rejects += rejects;
             m.record_latency(t0.elapsed().as_nanos() as u64);
         });
         Ok(out)
@@ -1048,7 +1054,7 @@ impl CamServer {
         match &mut self.backend {
             DecodeBackend::Native => None,
             DecodeBackend::Pjrt(store) => {
-                if self.weights_dirty && store.0.set_weights(self.engine.weight_rows()).is_ok() {
+                if self.weights_dirty && store.0.set_weights(&self.engine.weight_rows()).is_ok() {
                     self.weights_dirty = false;
                 }
                 if self.weights_dirty {
@@ -1093,6 +1099,7 @@ impl CamServer {
                 }
                 out.push(r);
             }
+            self.metrics.prefilter_rejects += self.engine.take_prefilter_rejects();
         }
         self.metrics.record_latency(enqueued.elapsed().as_nanos() as u64);
         out
@@ -1117,6 +1124,7 @@ impl CamServer {
             if let Ok(o) = &out {
                 self.metrics.record_lookup(o);
             }
+            self.metrics.prefilter_rejects += self.engine.take_prefilter_rejects();
             self.metrics.record_latency(enqueued.elapsed().as_nanos() as u64);
             let _ = resp.send(out);
         }

@@ -1,3 +1,4 @@
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 //! # cscam — Low-power CAM based on clustered-sparse-networks
 //!
 //! Full-system reproduction of Jarollahi, Gripon, Onizawa & Gross,

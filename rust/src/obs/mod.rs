@@ -148,6 +148,13 @@ pub fn render_prometheus(
     e.series("cscam_deletes_total", a.deletes as f64);
     e.family("cscam_batches_total", "counter", "Decode batches dispatched.");
     e.series("cscam_batches_total", a.batches as f64);
+    e.family(
+        "cscam_prefilter_rejects_total",
+        "counter",
+        "Lookups answered by the per-bank bloom pre-filter before decode \
+         (definite misses: zero enabled blocks, zero compared rows).",
+    );
+    e.series("cscam_prefilter_rejects_total", a.prefilter_rejects as f64);
 
     e.family("cscam_hit_ratio", "gauge", "hits / lookups (0 when idle).");
     e.series("cscam_hit_ratio", a.hit_ratio());

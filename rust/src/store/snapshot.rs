@@ -20,11 +20,14 @@
 //! a typed [`StoreError`], never a panic (the codec fuzz battery flips
 //! every byte of a valid file and asserts exactly this).
 //!
-//! Compatibility rule: strict version equality, like the WAL and unlike
-//! the wire (which is a live conversation and can negotiate); a newer
-//! build that changes the payload layout must bump
-//! [`SNAPSHOT_VERSION`] and readers refuse the mismatch with
-//! [`StoreError::Incompatible`].
+//! Compatibility rule: readers accept the exact version set
+//! [`SNAPSHOT_ACCEPTED_VERSIONS`] and refuse anything else with
+//! [`StoreError::Incompatible`].  Version 2 appended the bloom pre-filter
+//! section (cell counters + key count); version-1 images decode with no
+//! filter section and the restore path rebuilds the filter from the valid
+//! tags — deterministic, so the rebuilt filter equals the one a v2 image
+//! of the same bank would carry.  Any further layout change must bump
+//! [`SNAPSHOT_VERSION`] again.
 //!
 //! Writes are atomic: the image goes to `<path>.tmp`, is synced, then
 //! renamed over the old snapshot — a crash mid-write leaves the previous
@@ -44,8 +47,16 @@ use crate::util::hash::fnv1a_bytes;
 /// Snapshot file magic.
 pub const SNAPSHOT_MAGIC: [u8; 4] = *b"CSSS";
 
-/// On-disk snapshot format version (strict-equality compatibility).
-pub const SNAPSHOT_VERSION: u16 = 1;
+/// On-disk snapshot format version written by this build.
+pub const SNAPSHOT_VERSION: u16 = 2;
+
+/// Versions this build decodes (see the module docs for the v1→v2 delta).
+pub const SNAPSHOT_ACCEPTED_VERSIONS: [u16; 2] = [1, 2];
+
+/// Sanity bound on the filter cell count read from disk: the largest legal
+/// table for M = [`MAX_GEOM`] entries at 8 cells/entry, rounded to the next
+/// power of two.
+const MAX_FILTER_CELLS: u64 = 1 << 24;
 
 /// Bytes before the payload.
 pub const SNAPSHOT_HEADER_LEN: usize = 24;
@@ -68,6 +79,10 @@ pub struct BankImage {
     pub tags: Vec<BitVec>,
     /// Valid bits, `m` of them.
     pub valid: BitVec,
+    /// The bank's bloom pre-filter (v2+ images).  `None` — decoded from a
+    /// v1 image — makes [`Self::into_engine`] rebuild it from the valid
+    /// tags; the encoder writes an absent filter as a zero cell count.
+    pub filter: Option<crate::cam::BankFilter>,
     pub stale_deletes: u64,
     pub retrain_threshold: f64,
     pub insert_cursor: u64,
@@ -86,9 +101,10 @@ impl BankImage {
             cfg: e.config().clone(),
             positions: e.selection().positions().iter().map(|&p| p as u32).collect(),
             k: e.selection().k() as u32,
-            rows: e.network().rows().to_vec(),
-            tags: e.cam().tags().to_vec(),
+            rows: e.network().weight_rows(),
+            tags: e.cam().tag_rows(),
             valid: e.cam().valid_bits().clone(),
+            filter: Some(e.search_state().filter().clone()),
             stale_deletes: e.stale_delete_count() as u64,
             retrain_threshold: e.retrain_threshold,
             insert_cursor: e.insert_cursor() as u64,
@@ -123,6 +139,7 @@ impl BankImage {
             selection,
             net,
             cam,
+            self.filter,
             self.stale_deletes as usize,
             self.retrain_threshold,
             self.insert_cursor as usize,
@@ -161,6 +178,17 @@ impl BankImage {
         for r in &self.rows {
             put_bitvec(&mut p, r);
         }
+        // v2 filter section: cell count (0 = no filter carried), cells, keys.
+        match &self.filter {
+            Some(f) => {
+                put_u64(&mut p, f.cells().len() as u64);
+                for &cell in f.cells() {
+                    put_u32(&mut p, cell);
+                }
+                put_u64(&mut p, f.keys());
+            }
+            None => put_u64(&mut p, 0),
+        }
 
         let mut out = Vec::with_capacity(SNAPSHOT_HEADER_LEN + p.len());
         out.extend_from_slice(&SNAPSHOT_MAGIC);
@@ -184,9 +212,9 @@ impl BankImage {
             return Err(StoreError::Corrupt("bad magic in snapshot header".into()));
         }
         let version = u16::from_le_bytes([data[4], data[5]]);
-        if version != SNAPSHOT_VERSION {
+        if !SNAPSHOT_ACCEPTED_VERSIONS.contains(&version) {
             return Err(StoreError::Incompatible(format!(
-                "snapshot format version {version}, this build reads {SNAPSHOT_VERSION}"
+                "snapshot format version {version}, this build reads {SNAPSHOT_ACCEPTED_VERSIONS:?}"
             )));
         }
         if data[6] != 0 || data[7] != 0 {
@@ -300,6 +328,26 @@ impl BankImage {
             }
             rows.push(r);
         }
+        let filter = if version >= 2 {
+            let cells_len = c.take_u64()?;
+            if cells_len == 0 {
+                None // the producer carried no filter; restore rebuilds it
+            } else {
+                if cells_len > MAX_FILTER_CELLS {
+                    return Err(StoreError::Corrupt(format!(
+                        "filter cell count {cells_len} out of range"
+                    )));
+                }
+                let mut cells = Vec::with_capacity((cells_len as usize).min(c.remaining() / 4));
+                for _ in 0..cells_len {
+                    cells.push(c.take_u32()?);
+                }
+                let keys = c.take_u64()?;
+                Some(crate::cam::BankFilter::from_parts(cells, keys).map_err(StoreError::Corrupt)?)
+            }
+        } else {
+            None // v1 image: no filter section existed
+        };
         c.finish()?;
         Ok(BankImage {
             cfg,
@@ -308,6 +356,7 @@ impl BankImage {
             rows,
             tags,
             valid,
+            filter,
             stale_deletes,
             retrain_threshold,
             insert_cursor,
@@ -375,6 +424,71 @@ mod tests {
         image.write_to(&path).unwrap();
         assert!(!path.with_extension("tmp").exists(), "tmp file renamed away");
         assert_eq!(BankImage::read_from(&path).unwrap(), image);
+    }
+
+    #[test]
+    fn snapshot_carries_the_filter_and_restores_it_verbatim() {
+        let engine = populated_engine();
+        let image = BankImage::from_engine(&engine);
+        assert!(image.filter.is_some(), "a live capture always carries the filter");
+        let decoded = BankImage::decode(&image.encode()).unwrap();
+        assert_eq!(decoded.filter, image.filter);
+        let restored = decoded.into_engine().unwrap();
+        assert_eq!(restored.search_state().filter(), engine.search_state().filter());
+    }
+
+    /// Re-stamp a v2 image without its filter section as a version-1 file:
+    /// strip the trailing `[cell_count=0 u64]` the None-filter encoder
+    /// writes, set the header version to 1 and recompute length + checksum.
+    fn as_v1_bytes(image: &BankImage) -> Vec<u8> {
+        let mut no_filter = image.clone();
+        no_filter.filter = None;
+        let v2 = no_filter.encode();
+        let payload = &v2[SNAPSHOT_HEADER_LEN..v2.len() - 8];
+        let mut out = Vec::with_capacity(SNAPSHOT_HEADER_LEN + payload.len());
+        out.extend_from_slice(&SNAPSHOT_MAGIC);
+        out.extend_from_slice(&1u16.to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        out.extend_from_slice(&crate::util::hash::fnv1a_bytes(payload).to_le_bytes());
+        out.extend_from_slice(payload);
+        out
+    }
+
+    #[test]
+    fn v1_snapshot_still_loads_and_rebuilds_an_identical_filter() {
+        let mut engine = populated_engine();
+        let image = BankImage::from_engine(&engine);
+        let decoded = BankImage::decode(&as_v1_bytes(&image)).unwrap();
+        assert_eq!(decoded.filter, None, "v1 images carry no filter section");
+        let mut restored = decoded.into_engine().unwrap();
+        assert_eq!(
+            restored.search_state().filter(),
+            engine.search_state().filter(),
+            "rebuild-on-missing yields the exact writer-maintained filter"
+        );
+        let mut rng = Rng::seed_from_u64(29);
+        let probes = TagDistribution::Uniform.sample_distinct(32, 32, &mut rng);
+        for t in &probes {
+            assert_eq!(engine.lookup(t).unwrap(), restored.lookup(t).unwrap());
+        }
+    }
+
+    #[test]
+    fn corrupt_filter_section_is_a_typed_error() {
+        let image = BankImage::from_engine(&populated_engine());
+        let good = image.encode();
+        // the keys counter is the last 8 payload bytes: desync it from the
+        // CAM occupancy and restore must refuse
+        let mut bad = good.clone();
+        let keys_at = bad.len() - 8;
+        bad[keys_at] ^= 0xFF;
+        // fix up the checksum so only the semantic check can catch it
+        let payload = &bad[SNAPSHOT_HEADER_LEN..];
+        let sum = crate::util::hash::fnv1a_bytes(payload).to_le_bytes();
+        bad[16..24].copy_from_slice(&sum);
+        let decoded = BankImage::decode(&bad).unwrap();
+        assert!(matches!(decoded.into_engine(), Err(StoreError::Corrupt(_))));
     }
 
     #[test]

@@ -1,0 +1,337 @@
+//! Bit-identity battery for the slab decode kernels and the bloom
+//! pre-filter.
+//!
+//! The word-parallel hot path (contiguous `BitSlab` weight/tag storage,
+//! `bits::kernel` AND / XOR-popcount sweeps, and the per-bank counting-bloom
+//! pre-filter) must change *nothing observable*: every lookup reports the
+//! same matches, the same λ, the same activity counters and the same
+//! modelled energy/delay as a naive per-bit evaluation of the paper's
+//! equations over the materialized rows.  The battery checks that
+//! equivalence
+//!
+//! * against a from-scratch per-bit reference (no slabs, no kernels, no
+//!   filter) on stored tags, random probes and single-bit near-misses;
+//! * through seeded insert / overwrite / delete / retrain histories, where
+//!   the writer-maintained filter must stay equal to the deterministic
+//!   rebuild from the CAM's valid tags;
+//! * per bank of a sharded fleet under all three placement modes
+//!   (tag-hash, learned-prefix, broadcast);
+//! * across a snapshot → restart cycle, both when the image carries the
+//!   filter section and when it is stripped (the v1 rebuild fallback).
+//!
+//! Pre-filter semantics pinned here: a reject is bit-identical to an
+//! unfiltered lookup whose decode activated nothing — λ = 0, zero enabled
+//! blocks, zero compared rows, the energy of that all-quiet search — and
+//! the filter never rejects a tag the CAM actually holds.
+
+use cscam::bits::BitVec;
+use cscam::config::DesignConfig;
+use cscam::coordinator::{LookupEngine, LookupOutcome, SearchState};
+use cscam::energy::{EnergyModel, SearchActivity};
+use cscam::shard::{PlacementMode, ShardedCam};
+use cscam::store::BankImage;
+use cscam::util::Rng;
+use cscam::workload::{random_tag, TagDistribution};
+
+/// Everything the per-bit reference derives for one probe.
+struct Reference {
+    all_matches: Vec<usize>,
+    lambda: usize,
+    activity: SearchActivity,
+}
+
+/// The proposed lookup computed bit-by-bit from materialized rows: per-bit
+/// AND of the selected weight rows, per-group OR for the enables, per-bit
+/// XOR over enabled blocks — the scalar path the slab kernels replaced.
+fn reference_lookup(e: &LookupEngine, tag: &BitVec) -> Reference {
+    let cfg = e.config().clone();
+    let idx = e.cluster_indices(tag);
+    let weights = e.network().weight_rows();
+    let mut act = vec![false; cfg.m];
+    let mut lambda = 0usize;
+    for entry in 0..cfg.m {
+        let on = idx
+            .iter()
+            .enumerate()
+            .all(|(cluster, &j)| weights[cluster * cfg.l + j as usize].get(entry));
+        act[entry] = on;
+        lambda += on as usize;
+    }
+    let mut enables = vec![false; cfg.beta()];
+    for (entry, &on) in act.iter().enumerate() {
+        if on {
+            enables[entry / cfg.zeta] = true;
+        }
+    }
+
+    let tags = e.cam().tag_rows();
+    let valid = e.cam().valid_bits();
+    let mut activity =
+        SearchActivity { total_blocks: cfg.beta(), tag_bits: cfg.n, ..Default::default() };
+    let mut all_matches = Vec::new();
+    for (block, &en) in enables.iter().enumerate() {
+        if !en {
+            continue;
+        }
+        activity.enabled_blocks += 1;
+        for row in block * cfg.zeta..(block + 1) * cfg.zeta {
+            activity.enabled_rows += 1;
+            if !valid.get(row) {
+                activity.mismatched_rows += 1;
+                activity.mismatch_bits += cfg.n / 2;
+                continue;
+            }
+            activity.compared_rows += 1;
+            activity.compared_bits += cfg.n;
+            let dist = (0..cfg.n).filter(|&b| tags[row].get(b) != tag.get(b)).count();
+            if dist == 0 {
+                activity.matched_rows += 1;
+                all_matches.push(row);
+            } else {
+                activity.mismatched_rows += 1;
+                activity.mismatch_bits += dist;
+            }
+        }
+    }
+    Reference { all_matches, lambda, activity }
+}
+
+/// Assert an engine outcome equals the per-bit reference, field for field
+/// (matches, λ, activity-derived counters, modelled energy).
+fn assert_matches_reference(e: &LookupEngine, out: &LookupOutcome, tag: &BitVec, ctx: &str) {
+    let r = reference_lookup(e, tag);
+    assert_eq!(out.addr, r.all_matches.first().copied(), "{ctx}: addr");
+    assert_eq!(out.all_matches, r.all_matches, "{ctx}: matches");
+    assert_eq!(out.lambda, r.lambda, "{ctx}: lambda");
+    assert_eq!(out.enabled_blocks, r.activity.enabled_blocks, "{ctx}: enabled blocks");
+    assert_eq!(out.comparisons, r.activity.enabled_rows, "{ctx}: comparisons");
+    let energy = EnergyModel::new(e.config().clone()).proposed_measured(&r.activity, 1);
+    assert_eq!(out.energy, energy, "{ctx}: energy");
+}
+
+/// Check the filtered path on one probe: transparent wherever the filter
+/// passes, the canonical λ = 0 reject (and a genuine miss) where it rejects.
+fn assert_filter_consistent(e: &mut LookupEngine, tag: &BitVec, ctx: &str) {
+    let passes = e.search_state().filter().may_contain(tag);
+    let filtered = e.lookup(tag).unwrap();
+    let unfiltered = e.lookup_unfiltered(tag).unwrap();
+    if passes {
+        assert_eq!(filtered, unfiltered, "{ctx}: filter must be transparent when it passes");
+    } else {
+        // no false negatives: a reject means the CAM provably misses
+        let r = reference_lookup(e, tag);
+        assert!(r.all_matches.is_empty(), "{ctx}: filter rejected a stored tag");
+        assert_eq!(filtered.addr, None, "{ctx}: reject addr");
+        assert!(filtered.all_matches.is_empty(), "{ctx}: reject matches");
+        assert_eq!(filtered.lambda, 0, "{ctx}: reject lambda");
+        assert_eq!(filtered.enabled_blocks, 0, "{ctx}: reject blocks");
+        assert_eq!(filtered.comparisons, 0, "{ctx}: reject comparisons");
+        let cfg = e.config();
+        let quiet =
+            SearchActivity { total_blocks: cfg.beta(), tag_bits: cfg.n, ..Default::default() };
+        let energy = EnergyModel::new(cfg.clone()).proposed_measured(&quiet, 1);
+        assert_eq!(filtered.energy, energy, "{ctx}: reject energy");
+        assert_eq!(filtered.delay, unfiltered.delay, "{ctx}: reject delay");
+    }
+}
+
+/// Stored tags plus derived probes: bit-flip near-misses and random tags.
+fn probe_set(stored: &[BitVec], n: usize, rng: &mut Rng) -> Vec<BitVec> {
+    let mut probes = stored.to_vec();
+    for (i, t) in stored.iter().enumerate().take(16) {
+        let mut near = t.clone();
+        let bit = (i * 7) % n;
+        near.set(bit, !near.get(bit));
+        probes.push(near);
+    }
+    probes.extend((0..32).map(|_| random_tag(n, rng)));
+    probes
+}
+
+#[test]
+fn slab_path_matches_the_per_bit_reference() {
+    let cfg = DesignConfig::small_test();
+    let mut e = LookupEngine::new(cfg.clone());
+    let mut rng = Rng::seed_from_u64(11);
+    let stored = TagDistribution::Uniform.sample_distinct(cfg.n, cfg.m / 2, &mut rng);
+    for t in &stored {
+        e.insert(t).unwrap();
+    }
+    for (i, tag) in probe_set(&stored, cfg.n, &mut rng).iter().enumerate() {
+        let out = e.lookup_unfiltered(tag).unwrap();
+        assert_matches_reference(&e, &out, tag, &format!("probe {i}"));
+        assert_filter_consistent(&mut e, tag, &format!("probe {i}"));
+    }
+}
+
+#[test]
+fn stored_tags_are_never_rejected() {
+    let cfg = DesignConfig::small_test();
+    let mut e = LookupEngine::new(cfg.clone());
+    let mut rng = Rng::seed_from_u64(23);
+    let stored = TagDistribution::Uniform.sample_distinct(cfg.n, cfg.m, &mut rng);
+    for t in &stored {
+        e.insert(t).unwrap();
+    }
+    let filter = e.search_state();
+    for (i, t) in stored.iter().enumerate() {
+        assert!(filter.filter().may_contain(t), "stored tag {i} rejected");
+        let out = e.lookup(t).unwrap();
+        assert_eq!(out.addr, Some(i), "stored tag {i} must still hit through the filter");
+        assert_matches_reference(&e, &out, t, &format!("stored {i}"));
+    }
+}
+
+#[test]
+fn seeded_histories_preserve_identity_and_filter_equality() {
+    for seed in [1u64, 7, 42] {
+        let cfg = DesignConfig::small_test();
+        let mut e = LookupEngine::new(cfg.clone());
+        // retrains fire mid-history at the default threshold — that's part
+        // of what the battery must survive
+        let mut rng = Rng::seed_from_u64(seed);
+        let pool = TagDistribution::Uniform.sample_distinct(cfg.n, 2 * cfg.m, &mut rng);
+        let mut live: Vec<usize> = Vec::new();
+        for step in 0..300 {
+            match rng.gen_range(4) {
+                0 | 1 => {
+                    let t = &pool[rng.gen_range(pool.len())];
+                    if let Ok(addr) = e.insert(t) {
+                        live.push(addr);
+                    }
+                }
+                2 if !live.is_empty() => {
+                    let addr = live.swap_remove(rng.gen_range(live.len()));
+                    e.delete(addr).unwrap();
+                }
+                _ => {
+                    // overwrite a random slot (TLB-style replacement)
+                    let addr = rng.gen_range(cfg.m);
+                    let t = &pool[rng.gen_range(pool.len())];
+                    e.insert_at(addr, t).unwrap();
+                    if !live.contains(&addr) {
+                        live.push(addr);
+                    }
+                }
+            }
+            // the writer-maintained filter must equal the deterministic
+            // rebuild at every step of the history
+            if step % 25 == 0 {
+                let st = e.search_state();
+                assert_eq!(
+                    *st.filter(),
+                    SearchState::rebuild_filter(st.cam()),
+                    "seed {seed} step {step}: filter drifted from the rebuild"
+                );
+            }
+        }
+        let st = e.search_state();
+        assert_eq!(*st.filter(), SearchState::rebuild_filter(st.cam()), "seed {seed}: final");
+        let probes: Vec<BitVec> = (0..48)
+            .map(|i| {
+                if i % 2 == 0 {
+                    pool[rng.gen_range(pool.len())].clone()
+                } else {
+                    random_tag(cfg.n, &mut rng)
+                }
+            })
+            .collect();
+        for (i, tag) in probes.iter().enumerate() {
+            let out = e.lookup_unfiltered(tag).unwrap();
+            assert_matches_reference(&e, &out, tag, &format!("seed {seed} probe {i}"));
+            assert_filter_consistent(&mut e, tag, &format!("seed {seed} probe {i}"));
+        }
+    }
+}
+
+#[test]
+fn sharded_placements_stay_bit_identical_per_bank() {
+    let cfg = DesignConfig { m: 256, shards: 4, ..DesignConfig::small_test() };
+    let mut rng = Rng::seed_from_u64(5);
+    let sample = TagDistribution::Uniform.sample_distinct(cfg.n, 128, &mut rng);
+    let modes = [
+        ("hash", PlacementMode::TagHash),
+        ("broadcast", PlacementMode::Broadcast),
+        ("learned", PlacementMode::learned(cfg.shards, &sample, cfg.n)),
+    ];
+    for (name, mode) in modes {
+        let mut fleet = ShardedCam::new(&cfg, mode);
+        let mut rng = Rng::seed_from_u64(9);
+        let stored = TagDistribution::Uniform.sample_distinct(cfg.n, 150, &mut rng);
+        let mut addrs = Vec::new();
+        for t in &stored {
+            addrs.push(fleet.insert(t).unwrap());
+        }
+        for &a in addrs.iter().step_by(3) {
+            fleet.delete(a).unwrap();
+        }
+        let probes = probe_set(&stored, cfg.n, &mut rng);
+        for b in 0..fleet.shard_count() {
+            let bank = fleet.bank_mut(b);
+            let st = bank.search_state();
+            assert_eq!(
+                *st.filter(),
+                SearchState::rebuild_filter(st.cam()),
+                "{name} bank {b}: filter drifted"
+            );
+            for (i, tag) in probes.iter().enumerate() {
+                let out = bank.lookup_unfiltered(tag).unwrap();
+                assert_matches_reference(bank, &out, tag, &format!("{name} bank {b} probe {i}"));
+                assert_filter_consistent(bank, tag, &format!("{name} bank {b} probe {i}"));
+            }
+        }
+        // surviving tags still route to a hit through the filtered path
+        for (i, (t, &a)) in stored.iter().zip(&addrs).enumerate() {
+            if i % 3 == 0 {
+                continue; // deleted above
+            }
+            assert_eq!(fleet.lookup(t).unwrap().addr, Some(a), "{name} tag {i}");
+        }
+    }
+}
+
+#[test]
+fn snapshot_restart_cycle_rebuilds_an_identical_filter() {
+    let cfg = DesignConfig::small_test();
+    let mut e = LookupEngine::new(cfg.clone());
+    let mut rng = Rng::seed_from_u64(77);
+    let stored = TagDistribution::Uniform.sample_distinct(cfg.n, cfg.m - 8, &mut rng);
+    for t in &stored {
+        e.insert(t).unwrap();
+    }
+    for a in (0..stored.len()).step_by(5) {
+        e.delete(a).unwrap();
+    }
+    e.retrain();
+
+    // carried filter: decode → restore must hand back the very same filter
+    let bytes = BankImage::from_engine(&e).encode();
+    let image = BankImage::decode(&bytes).expect("snapshot decodes");
+    assert_eq!(
+        image.filter.as_ref(),
+        Some(e.search_state().filter()),
+        "snapshot must carry the writer's filter verbatim"
+    );
+    let mut restored = image.into_engine().expect("snapshot restores");
+
+    // stripped filter (a v1 producer): restore must rebuild the same one
+    let mut v1 = BankImage::from_engine(&e);
+    v1.filter = None;
+    let mut rebuilt = v1.into_engine().expect("filterless image restores");
+
+    let probes = probe_set(&stored, cfg.n, &mut rng);
+    for (i, tag) in probes.iter().enumerate() {
+        let want_f = e.lookup(tag).unwrap();
+        let want_u = e.lookup_unfiltered(tag).unwrap();
+        for (which, eng) in [("restored", &mut restored), ("rebuilt", &mut rebuilt)] {
+            assert_eq!(eng.lookup(tag).unwrap(), want_f, "{which} probe {i}: filtered");
+            assert_eq!(
+                eng.lookup_unfiltered(tag).unwrap(),
+                want_u,
+                "{which} probe {i}: unfiltered"
+            );
+        }
+    }
+    assert_eq!(restored.search_state().filter(), e.search_state().filter());
+    assert_eq!(rebuilt.search_state().filter(), e.search_state().filter());
+}

@@ -43,7 +43,7 @@ fn trained_network(store: &ArtifactStore, seed: u64) -> (ClusteredNetwork, Vec<V
 fn artifact_decode_matches_native_bit_for_bit() {
     let Some(mut store) = store_or_skip() else { return };
     let (net, entries) = trained_network(&store, 42);
-    store.set_weights(net.rows()).expect("upload weights");
+    store.set_weights(&net.weight_rows()).expect("upload weights");
 
     let cfg = store.manifest().config.clone();
     let mut rng = Rng::seed_from_u64(7);
@@ -72,7 +72,7 @@ fn artifact_decode_matches_native_bit_for_bit() {
 fn artifact_decode_pads_partial_batches() {
     let Some(mut store) = store_or_skip() else { return };
     let (net, entries) = trained_network(&store, 1);
-    store.set_weights(net.rows()).expect("upload weights");
+    store.set_weights(&net.weight_rows()).expect("upload weights");
     // 3 queries → padded to the smallest compiled batch ≥ 3
     let queries: Vec<Vec<u16>> = entries[..3].to_vec();
     let out = store.decode(&queries).expect("decode");
@@ -99,8 +99,9 @@ fn artifact_train_matches_native_training() {
     for (a, i) in idx.iter().enumerate() {
         net.train(i, a);
     }
-    assert_eq!(rows.len(), net.rows().len());
-    for (r, (got, want)) in rows.iter().zip(net.rows()).enumerate() {
+    let want_rows = net.weight_rows();
+    assert_eq!(rows.len(), want_rows.len());
+    for (r, (got, want)) in rows.iter().zip(want_rows.iter()).enumerate() {
         assert_eq!(got, want, "weight row {r} mismatch");
     }
 }

@@ -83,13 +83,17 @@ pub fn parse_rows(text: &str) -> Vec<Row> {
     out
 }
 
-/// Keep only the latest run of every `(bench, name)` scenario.
+/// Keep only the latest run of every `(bench, name)` scenario.  Ties on
+/// the `run` tag resolve to the *last-appended* row: trajectory files are
+/// append-only, so file order is time order, and a re-measured scenario
+/// checked in under the same run number must shadow the stale row rather
+/// than lose to it (which made re-runs silently gate against old data).
 fn latest(rows: Vec<Row>) -> BTreeMap<(String, String), Row> {
     let mut out: BTreeMap<(String, String), Row> = BTreeMap::new();
     for row in rows {
         let key = (row.bench.clone(), row.name.clone());
         match out.get(&key) {
-            Some(prev) if prev.run >= row.run => {}
+            Some(prev) if prev.run > row.run => {}
             _ => {
                 out.insert(key, row);
             }
@@ -261,6 +265,24 @@ mod tests {
         let key = ("net".to_string(), "net/shards=2/threads=8/bulk256".to_string());
         assert_eq!(last[&key].run, 2, "run 2 shadows run 1");
         assert_eq!(last[&key].metrics["throughput_lps"], 200000.0);
+    }
+
+    #[test]
+    fn duplicate_run_tags_resolve_to_the_last_appended_row() {
+        let rows = parse_rows(&fixture("duplicate_runs.json"));
+        assert_eq!(rows.len(), 5, "{rows:?}");
+        let last = latest(rows);
+        // two rows share run 3 → file order breaks the tie
+        let coord = ("coordinator".to_string(), "coordinator/banks=4".to_string());
+        assert_eq!(last[&coord].metrics["throughput_lps"], 520000.0);
+        // three-way tie on run 1 → still the final row
+        let hot = ("decode_hotpath".to_string(), "decode_hotpath/prefilter=on".to_string());
+        assert_eq!(last[&hot].metrics["throughput_lps"], 930000.0);
+        // determinism: gating a file against itself can never fail
+        let text = fixture("duplicate_runs.json");
+        let out = gate(&text, &text, 15.0);
+        assert!(out.passed(), "{:?}", out.failures);
+        assert_eq!(out.compared, 2);
     }
 
     #[test]
