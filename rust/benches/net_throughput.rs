@@ -4,11 +4,20 @@
 //! bottlenecking it (compare against the in-process rows of
 //! `coordinator_throughput`).
 //!
+//! Two scenarios per shard count:
+//! * the 8-thread pipelined row (one connection per thread) that predates
+//!   the reactor — the apples-to-apples row against the old
+//!   thread-per-connection front-end at its connection cap;
+//! * a 256-connection multiplexed ramp at the same offered load, which a
+//!   thread-per-connection design could not hold at all — the row that
+//!   makes the reactor's event-driven claim measurable.
+//!
 //! Run: `cargo bench --bench net_throughput`
 //!
 //! Flags (after `--`):
 //! * `--quick`        fewer lookups (CI smoke);
 //! * `--shards 1,4`   shard counts for the headline rows (default 1,4);
+//! * `--conns N`      connection count for the ramp rows (default 256);
 //! * `--json PATH`    append the rows (tagged `net`) to a `BENCH_*.json`
 //!   trajectory snapshot — the same file the coordinator bench writes to.
 
@@ -19,11 +28,12 @@ use cscam::shard::{PlacementMode, ShardedCamServer};
 use cscam::util::bench::{write_bench_json, BenchRecord};
 use cscam::util::cli::Args;
 
-fn run_net(shards: usize, lookups: usize) -> anyhow::Result<BenchRecord> {
+fn run_net(shards: usize, lookups: usize, conns: usize) -> anyhow::Result<BenchRecord> {
     let cfg = DesignConfig { shards, ..DesignConfig::reference() };
     cfg.validate()?;
     let fleet = ShardedCamServer::new(&cfg, PlacementMode::TagHash, BatchPolicy::default()).spawn();
-    let server = CamTcpServer::bind(fleet, "127.0.0.1:0", NetConfig::default())?;
+    let net = NetConfig { max_connections: conns.max(64), ..NetConfig::default() };
+    let server = CamTcpServer::bind(fleet, "127.0.0.1:0", net)?;
     let addr = server.local_addr()?.to_string();
     let handle = server.spawn()?;
 
@@ -35,12 +45,14 @@ fn run_net(shards: usize, lookups: usize) -> anyhow::Result<BenchRecord> {
         hit_ratio: 0.9,
         population: cfg.m * 7 / 10,
         rate: 0.0,
+        conns,
         seed: 1,
     };
     let report = driver.run().map_err(|e| anyhow::anyhow!("loadgen: {e}"))?;
+    let scenario = if conns > 8 { format!("/conns{conns}") } else { String::new() };
     println!(
         "{:<44} {:>10.0} lookups/s  (frame p50 {:>8} ns, p99 {:>9} ns, hit {:.1} %)",
-        format!("net/shards={shards}/8t/bulk256"),
+        format!("net/shards={shards}/8t/bulk256{scenario}"),
         report.throughput_lps,
         report.p50_ns,
         report.p99_ns,
@@ -54,9 +66,10 @@ fn run_net(shards: usize, lookups: usize) -> anyhow::Result<BenchRecord> {
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1), &["quick"])?;
-    args.check_known(&["quick", "shards", "json"])?;
+    args.check_known(&["quick", "shards", "conns", "json"])?;
     let quick = args.flag("quick");
     let shard_counts: Vec<usize> = args.get_list("shards", vec![1, 4])?;
+    let ramp_conns: usize = args.get_parse("conns", 256)?;
     let lookups = if quick { 40_000 } else { 300_000 };
 
     println!(
@@ -65,7 +78,8 @@ fn main() -> anyhow::Result<()> {
     );
     let mut records = Vec::new();
     for &s in &shard_counts {
-        records.push(run_net(s, lookups)?);
+        records.push(run_net(s, lookups, 0)?);
+        records.push(run_net(s, lookups, ramp_conns)?);
     }
 
     if let Some(path) = args.get("json") {

@@ -111,7 +111,7 @@ fn run_pool(readers: usize, threads: usize, lookups: usize) -> BenchRecord {
     rec
 }
 
-/// The zero-queue path the TCP connection threads use: `threads` caller
+/// The zero-queue path the net reactor's worker pool uses: `threads` caller
 /// threads, each with its own `DecodeScratch`, searching the published
 /// snapshot directly.  Printed for comparison, not recorded (it has no
 /// `readers` axis).

@@ -27,9 +27,10 @@
 //! Multi-bank scale-out (placement, scatter-gather, fleet metrics) lives
 //! one layer up in [`crate::shard`]; the network front-end that exposes a
 //! fleet over TCP — wire-typed [`EngineError`]s, with lookups served as
-//! direct snapshot reads on the connection threads (no queue, so the
-//! connection cap, not [`ServerHandle::try_lookup`]'s `Busy` shed, bounds
-//! wire read concurrency) — lives two layers up in [`crate::net`].
+//! direct snapshot reads on the reactor's worker pool (no admission
+//! queue, so that pool's width, not [`ServerHandle::try_lookup`]'s
+//! `Busy` shed, bounds wire read concurrency) — lives two layers up in
+//! [`crate::net`].
 
 pub mod batcher;
 pub mod engine;

@@ -13,8 +13,10 @@
 //!   [`SharedSearch`] slot — *after* the WAL ack, *before* the client ack,
 //!   so an acknowledged write is always visible to subsequent lookups and
 //!   an unacknowledged one never is.
-//! * **lookups** → the reader pool's work queue; each reader thread holds
-//!   its own [`DecodeScratch`], snapshots the published state per job and
+//! * **lookups** → the reader pool's lock-free
+//!   [`crate::util::sync::BatchChannel`] ring; each reader thread holds
+//!   its own [`DecodeScratch`], pops jobs in batches (one wakeup amortized
+//!   over several under load), snapshots the published state per job and
 //!   searches lock-free.  Bulk lookups are split into chunks so one big
 //!   slice fans out across the pool.  With `readers = 0` — or with the
 //!   PJRT decode backend, whose artifact store lives on the engine
@@ -22,7 +24,7 @@
 //!   ([`Batcher`]).
 //! * **direct reads** ([`ServerHandle::lookup_direct`]) skip even the pool
 //!   queue: the calling thread snapshots and searches itself.  This is
-//!   what the TCP connection threads use.
+//!   what the net reactor's worker threads use.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -37,7 +39,7 @@ use crate::coordinator::engine::{
 use crate::coordinator::metrics::Metrics;
 use crate::runtime::DecodeOutput;
 use crate::store::{BankImage, BankStore, StoreError, WalRecord};
-use crate::util::sync::{lock_recover, AdmissionGauge, JobGuard, Mutex, WorkQueue};
+use crate::util::sync::{lock_recover, AdmissionGauge, BatchChannel, JobGuard, Mutex};
 #[cfg(feature = "pjrt")]
 use crate::runtime::ArtifactStore;
 
@@ -140,13 +142,14 @@ enum ReadJob {
 /// [`ServerHandle`] clone holds one; when the last drops, the reader
 /// threads finish the queued jobs and exit.
 ///
-/// The queue itself is the generic Mutex+Condvar MPMC
-/// [`crate::util::sync::WorkQueue`] (std mpsc receivers cannot be shared
-/// across reader threads; the drain barrier rides on its
-/// enqueued/completed counters) — extracted behind the sync facade so the
-/// loom battery can model-check push/pop/complete/barrier exhaustively.
+/// The queue itself is the bounded lock-free MPMC
+/// [`crate::util::sync::BatchChannel`] (std mpsc receivers cannot be
+/// shared across reader threads; the drain barrier rides on its
+/// enqueued/completed counters, and readers pop in batches) — extracted
+/// behind the sync facade so the loom battery can model-check
+/// push/pop/complete/barrier exhaustively.
 struct ReadPoolHandle {
-    queue: Arc<WorkQueue<ReadJob>>,
+    queue: Arc<BatchChannel<ReadJob>>,
 }
 
 impl Clone for ReadPoolHandle {
@@ -203,6 +206,12 @@ impl BankMetrics {
     }
 }
 
+/// Ring capacity of the reader-pool channel, in *jobs* (a bulk chunk is
+/// one job).  A momentarily full ring makes `push` spin-wait, it never
+/// drops — the admission gauge is what bounds how far ahead of the pool
+/// callers can run.
+const READ_RING_CAPACITY: usize = 1024;
+
 fn spawn_reader_pool(
     readers: usize,
     shared: SharedSearch,
@@ -210,7 +219,7 @@ fn spawn_reader_pool(
     depth: Arc<AdmissionGauge>,
     max_batch: usize,
 ) -> ReadPoolHandle {
-    let queue = Arc::new(WorkQueue::new());
+    let queue = Arc::new(BatchChannel::with_capacity(READ_RING_CAPACITY));
     for i in 0..readers {
         let queue = Arc::clone(&queue);
         let shared = shared.clone();
@@ -226,55 +235,67 @@ fn spawn_reader_pool(
     ReadPoolHandle { queue }
 }
 
+/// Jobs a reader takes per channel round-trip: under load one park/unpark
+/// cycle is amortized over a whole batch; when the queue runs shallow,
+/// `pop_batch` degrades gracefully to singles.
+const READER_POP_BATCH: usize = 16;
+
 fn reader_loop(
-    queue: &WorkQueue<ReadJob>,
+    queue: &BatchChannel<ReadJob>,
     shared: &SharedSearch,
     metrics: &BankMetrics,
     depth: &AdmissionGauge,
     max_batch: usize,
 ) {
     let mut scratch = DecodeScratch::new();
-    while let Some(job) = queue.pop() {
-        let _guard = JobGuard::new(queue);
-        match job {
-            ReadJob::Lookup { tag, enqueued, resp } => {
-                depth.retire(1);
-                let state = shared.snapshot();
-                let out = state.lookup(&tag, &mut scratch);
-                let rejects = scratch.take_prefilter_rejects();
-                metrics.with(|m| {
-                    // a pool single is one decode dispatch of one tag
-                    m.record_batch(1);
-                    if let Ok(o) = &out {
-                        m.record_lookup(o);
-                    }
-                    m.prefilter_rejects += rejects;
-                    m.record_latency(enqueued.elapsed().as_nanos() as u64);
-                });
-                let _ = resp.send(out);
-            }
-            ReadJob::Bulk { state, tags, enqueued, resp } => {
-                depth.retire(tags.len());
-                // `state` was snapshotted once at enqueue time and is
-                // shared by every part of the bulk (whole-bulk consistency)
-                let mut out = Vec::with_capacity(tags.len());
-                for chunk in tags.chunks(max_batch.max(1)) {
-                    for tag in chunk {
-                        out.push(state.lookup(tag, &mut scratch));
-                    }
+    let mut jobs: Vec<ReadJob> = Vec::with_capacity(READER_POP_BATCH);
+    loop {
+        jobs.clear();
+        if queue.pop_batch(READER_POP_BATCH, &mut jobs) == 0 {
+            return; // all senders gone and the backlog is drained
+        }
+        for job in jobs.drain(..) {
+            let _guard = JobGuard::new(queue);
+            match job {
+                ReadJob::Lookup { tag, enqueued, resp } => {
+                    depth.retire(1);
+                    let state = shared.snapshot();
+                    let out = state.lookup(&tag, &mut scratch);
                     let rejects = scratch.take_prefilter_rejects();
                     metrics.with(|m| {
-                        m.record_batch(chunk.len());
-                        for r in &out[out.len() - chunk.len()..] {
-                            if let Ok(o) = r {
-                                m.record_lookup(o);
-                            }
+                        // a pool single is one decode dispatch of one tag
+                        m.record_batch(1);
+                        if let Ok(o) = &out {
+                            m.record_lookup(o);
                         }
                         m.prefilter_rejects += rejects;
+                        m.record_latency(enqueued.elapsed().as_nanos() as u64);
                     });
+                    let _ = resp.send(out);
                 }
-                metrics.with(|m| m.record_latency(enqueued.elapsed().as_nanos() as u64));
-                let _ = resp.send(out);
+                ReadJob::Bulk { state, tags, enqueued, resp } => {
+                    depth.retire(tags.len());
+                    // `state` was snapshotted once at enqueue time and is
+                    // shared by every part of the bulk (whole-bulk consistency)
+                    let mut out = Vec::with_capacity(tags.len());
+                    for chunk in tags.chunks(max_batch.max(1)) {
+                        for tag in chunk {
+                            out.push(state.lookup(tag, &mut scratch));
+                        }
+                        let rejects = scratch.take_prefilter_rejects();
+                        metrics.with(|m| {
+                            m.record_batch(chunk.len());
+                            for r in &out[out.len() - chunk.len()..] {
+                                if let Ok(o) = r {
+                                    m.record_lookup(o);
+                                }
+                            }
+                            m.prefilter_rejects += rejects;
+                        });
+                    }
+                    metrics.with(|m| m.record_latency(enqueued.elapsed().as_nanos() as u64));
+                    let _ = resp.send(out);
+                }
             }
         }
     }
@@ -434,7 +455,7 @@ impl ServerHandle {
 
     /// Run one lookup *on the calling thread* against the published
     /// snapshot — no queue, no channel, no other thread involved.  This is
-    /// the TCP connection threads' read path.  Observes every mutation
+    /// the net worker pool's read path.  Observes every mutation
     /// acknowledged before the call; records into the bank's metrics.
     pub fn lookup_direct(
         &self,

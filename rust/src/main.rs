@@ -78,10 +78,13 @@ COMMANDS:
   loadgen drive a listening server over the wire protocol
                                 --connect ADDR --lookups N --threads T
                                 --chunk C --hit-ratio R --population P
-                                --rate Q --seed S --json PATH --shutdown
+                                --rate Q --conns N --seed S --json PATH
+                                --shutdown
           (--json appends a 'net'-tagged row to the bench trajectory;
            --rate Q paces arrivals open-loop at Q lookups/s, measuring
            latency from each frame's intended start — 0 = closed-loop;
+           --conns N holds N multiplexed connections open, spread over
+           the threads, with the same offered load — the c10k ramp;
            --shutdown stops the server after the run)
   info    print the design point and all model predictions
 ";
@@ -732,6 +735,7 @@ fn loadgen(args: &Args) -> Result<()> {
         hit_ratio: args.get_parse("hit-ratio", 0.9)?,
         population: args.get_parse("population", 256)?,
         rate: args.get_parse("rate", 0.0)?,
+        conns: args.get_parse("conns", 0)?,
         seed: args.get_parse("seed", 7)?,
     };
     let report = driver.run().map_err(|e| anyhow::anyhow!("loadgen failed: {e}"))?;

@@ -6,10 +6,13 @@
 //! the energy/delay physics bit-identical to an in-process
 //! [`crate::shard::ShardedServerHandle::lookup`].
 //!
-//! [`CamClient::lookup_bulk`] is *pipelined*: the tag slice is split into
-//! chunks, every chunk frame is written before the first response is read
-//! (one flush for the burst), and responses are matched back up by request
-//! id — the wire analogue of the in-process deferred scatter.
+//! [`CamClient::lookup_bulk`] is *pipelined and multiplexed*: the tag
+//! slice is split into chunks, a bounded window of chunk frames is kept in
+//! flight, and responses are matched back up by request id — since
+//! protocol v6 a server may answer them in *completion* order rather than
+//! submission order (its hello advertises `multiplex`), and the re-match
+//! makes that reordering invisible: per-tag results always come back in
+//! input order.  The wire analogue of the in-process deferred scatter.
 //!
 //! Idempotent calls (`lookup`, `lookup_bulk`, `stats`, `metrics`, `drain`)
 //! transparently **reconnect and retry once** when the transport drops;
@@ -63,7 +66,14 @@ impl Conn {
         let mut conn = Conn {
             reader: BufReader::new(read_half),
             writer: BufWriter::new(stream),
-            hello: ServerHello { version: 0, busy: false, shards: 0, bank_m: 0, tag_bits: 0 },
+            hello: ServerHello {
+                version: 0,
+                busy: false,
+                multiplex: false,
+                shards: 0,
+                bank_m: 0,
+                tag_bits: 0,
+            },
         };
         write_client_hello(&mut conn.writer)?;
         conn.writer.flush()?;
@@ -120,6 +130,13 @@ impl CamClient {
     /// while disconnected.
     pub fn server_info(&self) -> Option<&ServerHello> {
         self.conn.as_ref().map(|c| &c.hello)
+    }
+
+    /// Did the server advertise out-of-order (multiplexed) responses at
+    /// handshake?  Purely informational — [`Self::lookup_bulk`] re-matches
+    /// responses by request id either way.
+    pub fn multiplexed(&self) -> bool {
+        self.conn.as_ref().is_some_and(|c| c.hello.multiplex)
     }
 
     /// Drop the current connection (if any) and open a fresh one.
@@ -204,8 +221,8 @@ impl CamClient {
         }
     }
 
-    /// One lookup, served directly on the server's connection thread from
-    /// the owning bank's published snapshot.  A server may answer
+    /// One lookup, served on the server's worker pool directly from the
+    /// owning bank's published snapshot.  A server may answer
     /// [`EngineError::Busy`] (as [`WireError::Engine`]) under admission
     /// shedding; [`EngineError::Full`] strictly means "no free CAM slot".
     pub fn lookup(&mut self, tag: &BitVec) -> Result<ShardedOutcome, WireError> {
@@ -263,27 +280,53 @@ impl CamClient {
     ) -> Result<Vec<Result<ShardedOutcome, EngineError>>, WireError> {
         let conn = self.conn()?;
         // Bounded pipelining: keep a window of frames in flight (≈1024
-        // tags' worth) instead of writing the whole burst up front — the
-        // server answers strictly in order with blocking writes, so an
+        // tags' worth) instead of writing the whole burst up front — an
         // unbounded scatter could fill both directions' socket buffers
-        // with neither side reading, deadlocking the connection.  Reading
-        // response i before sending frame i+W keeps the response stream
-        // draining while frames still overlap.
+        // with neither side reading, deadlocking the connection (and a
+        // v6 server's per-connection backpressure would stop reading us
+        // long before that).  Reading one response before sending frame
+        // i+W keeps the response stream draining while frames overlap.
+        //
+        // Since protocol v6 the server executes a connection's requests on
+        // a worker pool and answers in *completion* order, so a response
+        // may belong to any outstanding frame of the window — each is
+        // re-matched to its chunk by request id and the per-tag results
+        // are reassembled in input order before returning.
         let chunk = chunks[0].len().max(1);
         let window = (1024 / chunk).clamp(1, 64).min(chunks.len());
+        let mut slots: Vec<Option<Response>> = (0..chunks.len()).map(|_| None).collect();
+        let mut next_send = window;
         for i in 0..window {
             proto::write_lookup_bulk_request(&mut conn.writer, ids[i], chunks[i])?;
         }
         conn.writer.flush()?;
-        // gather: the server answers one connection in order
-        let mut out = Vec::with_capacity(total);
-        for (i, (&id, c)) in ids.iter().zip(chunks).enumerate() {
+        for _ in 0..chunks.len() {
             let (rid, resp) = proto::read_response(&mut conn.reader)?;
-            if rid != id {
-                return Err(WireError::Protocol(format!(
-                    "pipelined response id {rid}, expected {id}"
-                )));
+            let ci = match ids.iter().position(|&id| id == rid) {
+                Some(ci) if ci < next_send => ci,
+                _ => {
+                    return Err(WireError::Protocol(format!(
+                        "response id {rid} matches no outstanding bulk frame"
+                    )))
+                }
+            };
+            if slots[ci].replace(resp).is_some() {
+                return Err(WireError::Protocol(format!("duplicate response for id {rid}")));
             }
+            // slide the window: one response in, the next frame out
+            if next_send < chunks.len() {
+                let (id, chunk) = (ids[next_send], chunks[next_send]);
+                proto::write_lookup_bulk_request(&mut conn.writer, id, chunk)?;
+                conn.writer.flush()?;
+                next_send += 1;
+            }
+        }
+        // reassemble in input order, whatever order the answers arrived in
+        let mut out = Vec::with_capacity(total);
+        for (slot, c) in slots.into_iter().zip(chunks) {
+            let Some(resp) = slot else {
+                return Err(WireError::Protocol("bulk frame never answered".into()));
+            };
             match resp {
                 Response::LookupBulk(items) => {
                     if items.len() != c.len() {
@@ -309,12 +352,6 @@ impl CamClient {
                         "unexpected bulk response {other:?}"
                     )))
                 }
-            }
-            // slide the window: one response in, the next frame out
-            let next = i + window;
-            if next < chunks.len() {
-                proto::write_lookup_bulk_request(&mut conn.writer, ids[next], chunks[next])?;
-                conn.writer.flush()?;
             }
         }
         Ok(out)

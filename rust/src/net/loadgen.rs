@@ -23,6 +23,15 @@
 //!   until that instant and measure latency from the intended start, so a
 //!   stalled server accrues queue delay in the histogram instead of
 //!   silently thinning the arrival stream.
+//!
+//! And a **connection-ramp mode** (`conns > 0`): instead of one
+//! connection per thread, the generator opens `conns` multiplexed
+//! connections total (each thread owns an equal share and round-robins
+//! its frames across them) while the offered load stays whatever the
+//! pacing mode says.  Most connections are idle-ish at any instant —
+//! exactly the c10k shape the reactor front-end exists for — and the
+//! bench row records `conns` so a 5k-connection run is never gated
+//! against a 64-connection one.
 
 use std::time::{Duration, Instant};
 
@@ -56,6 +65,12 @@ pub struct LoadGen {
     /// Open-loop arrival rate in lookups/s summed over all threads;
     /// `0.0` selects closed-loop pacing.
     pub rate: f64,
+    /// Connection-ramp mode: total multiplexed connections to hold open,
+    /// spread evenly over the threads (each thread round-robins its
+    /// frames across its share).  `0` keeps the legacy shape of one
+    /// connection per thread; values below `threads` are raised to one
+    /// connection per thread.
+    pub conns: usize,
     pub seed: u64,
 }
 
@@ -69,6 +84,7 @@ impl Default for LoadGen {
             hit_ratio: 0.9,
             population: 256,
             rate: 0.0,
+            conns: 0,
             seed: 7,
         }
     }
@@ -94,6 +110,9 @@ pub struct LoadReport {
     pub mean_energy_fj: f64,
     pub threads: usize,
     pub chunk: usize,
+    /// Concurrent connections actually held open for the run (equals
+    /// `threads` outside connection-ramp mode).
+    pub conns: usize,
     /// Shard count the server announced at handshake.
     pub shards: u32,
     /// `true` when frames were paced on a fixed arrival schedule.
@@ -121,7 +140,8 @@ impl LoadReport {
         };
         format!(
             "{} lookups in {:.3} s — {:.0} lookups/s {pacing}, hits {:.1} %, λ̄ {:.3}, \
-             Ē {:.1} fJ, frame p50 {} ns p99 {} ns ({} threads × bulk {}, {} errors)",
+             Ē {:.1} fJ, frame p50 {} ns p99 {} ns ({} threads × bulk {}, {} conns, \
+             {} errors)",
             self.lookups,
             self.wall_s,
             self.throughput_lps,
@@ -132,22 +152,31 @@ impl LoadReport {
             self.p99_ns,
             self.threads,
             self.chunk,
+            self.conns,
             self.errors
         )
     }
 
     /// The trajectory row for `write_bench_json(path, "net", …)`.
     /// Open-loop rows get their own name suffix so regression gating never
-    /// compares an offered-rate run against a capacity run.
+    /// compares an offered-rate run against a capacity run, and
+    /// connection-ramp rows (`conns > threads`) carry the connection
+    /// count in the name for the same reason.
     pub fn to_record(&self) -> BenchRecord {
         let pacing = if self.open_loop { "/open" } else { "" };
+        let ramp = if self.conns > self.threads {
+            format!("/conns{}", self.conns)
+        } else {
+            String::new()
+        };
         let mut rec = BenchRecord::new(format!(
-            "net/shards={}/threads={}/bulk{}{}",
-            self.shards, self.threads, self.chunk, pacing
+            "net/shards={}/threads={}/bulk{}{}{}",
+            self.shards, self.threads, self.chunk, ramp, pacing
         ));
         rec.push("shards", self.shards as f64);
         rec.push("threads", self.threads as f64);
         rec.push("chunk", self.chunk as f64);
+        rec.push("conns", self.conns as f64);
         rec.push("lookups", self.lookups as f64);
         rec.push("throughput_lps", self.throughput_lps);
         rec.push("p50_ns", self.p50_ns as f64);
@@ -234,15 +263,46 @@ impl LoadGen {
         // `i, i + threads, i + 2·threads, …` (see `intended_start_ns`).
         let open_loop = self.rate > 0.0;
         let rate = self.rate;
+        // Connection-ramp mode: `conns` connections total, split evenly
+        // (the first `conns % threads` threads take the remainder).
+        let conns_total = if self.conns == 0 { threads } else { self.conns.max(threads) };
 
-        let t0 = Instant::now();
+        // Every connection is opened before the clock starts: the ramp
+        // measures the reactor *holding* `conns` live connections, not
+        // the client's serial connect cost — and an open-loop schedule
+        // that began during setup would book the connect backlog as
+        // request latency.
+        let barrier = std::sync::Arc::new(std::sync::Barrier::new(threads + 1));
+        let t0_cell = std::sync::Arc::new(std::sync::OnceLock::new());
         let mut joins = Vec::new();
         for (thread_idx, stream) in streams.into_iter().enumerate() {
             let addr = self.addr.clone();
             let chunk = self.chunk.max(1);
             let threads_u = threads as u64;
+            let conns_here =
+                conns_total / threads + usize::from(thread_idx < conns_total % threads);
+            let barrier = std::sync::Arc::clone(&barrier);
+            let t0_cell = std::sync::Arc::clone(&t0_cell);
             joins.push(std::thread::spawn(move || -> Result<Tally, WireError> {
-                let mut client = CamClient::connect(addr)?;
+                let mut clients = Vec::with_capacity(conns_here);
+                let mut connect_err = None;
+                for _ in 0..conns_here {
+                    match CamClient::connect(addr.clone()) {
+                        Ok(c) => clients.push(c),
+                        Err(e) => {
+                            connect_err = Some(e);
+                            break;
+                        }
+                    }
+                }
+                // reach the barrier even on a failed connect: the other
+                // threads (and the caller) are parked on it
+                barrier.wait();
+                let t0 = *t0_cell.get_or_init(Instant::now);
+                if let Some(e) = connect_err {
+                    return Err(e);
+                }
+                let mut next_conn = 0usize;
                 let mut t = Tally::new();
                 // Lookups this thread has already scheduled; its next
                 // frame starts at the global slot of its first lookup.
@@ -261,6 +321,11 @@ impl LoadGen {
                     } else {
                         t0.elapsed()
                     };
+                    // round-robin the share: every connection sees traffic,
+                    // so the ramp measures the reactor holding them all
+                    // live, not one hot connection among idle ones
+                    let client = &mut clients[next_conn];
+                    next_conn = (next_conn + 1) % conns_here.max(1);
                     let results = client.lookup_bulk(frame, chunk)?;
                     // Open-loop latency runs from the *intended* start, so
                     // time a late frame spent queued behind schedule counts.
@@ -281,6 +346,8 @@ impl LoadGen {
                 Ok(t)
             }));
         }
+        barrier.wait();
+        let t0 = *t0_cell.get_or_init(Instant::now);
         let mut total = Tally::new();
         for j in joins {
             let t = j.join().map_err(|_| {
@@ -316,6 +383,7 @@ impl LoadGen {
             },
             threads,
             chunk: self.chunk.max(1),
+            conns: conns_total,
             shards: hello.shards,
             open_loop,
             rate: self.rate,

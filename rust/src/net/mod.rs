@@ -21,15 +21,27 @@
 //!   the acked offset) or `SnapshotTransfer` (bootstrap / post-compaction
 //!   restart), with `ERR_FENCED` refusing subscribers from a pre-promotion
 //!   epoch ([`crate::repl`]).
-//! * [`server`] — [`CamTcpServer`]: thread-per-connection serving over a
-//!   [`crate::shard::ShardedServerHandle`]; lookups execute *on the
-//!   connection thread* against the banks' published search snapshots
-//!   (no channel hop — see `coordinator::SearchState`), mutations route
-//!   to the banks' writer threads; connection cap, buffered
-//!   per-connection I/O and a clean shutdown that drains every bank and
+//!   v6 adds the `multiplex` hello flag: responses on one connection may
+//!   arrive in *completion* order, and clients re-match them by request
+//!   id.
+//! * [`poll`] — a minimal readiness poller (epoll on Linux via raw FFI,
+//!   `poll(2)` elsewhere — no async runtime, no new crates) plus the
+//!   wake-pair doorbell the worker pool rings to get the reactor's
+//!   attention.
+//! * [`server`] — [`CamTcpServer`]: a single reactor thread owns every
+//!   nonblocking connection and reassembles frames from per-connection
+//!   buffers (a stalled or byte-at-a-time peer costs buffer space, not a
+//!   thread); decoded requests cross a bounded lock-free
+//!   [`crate::util::sync::BatchChannel`] to a small worker pool that
+//!   executes them against the banks' published search snapshots
+//!   (mutations route to the banks' writer threads) and completions flow
+//!   back to be written in completion order.  Connection cap with a
+//!   deterministic `busy` hello, per-connection backpressure instead of
+//!   unbounded buffering, and a clean shutdown that drains every bank and
 //!   flushes every WAL.
 //! * [`client`] — [`CamClient`]: blocking client with handshake,
-//!   reconnect, and pipelined `lookup_bulk`.
+//!   reconnect, and windowed multiplexed `lookup_bulk` (responses
+//!   re-matched by request id, so out-of-order completion is invisible).
 //! * [`loadgen`] — [`LoadGen`]: multi-threaded QPS/latency runner over
 //!   [`crate::workload`] streams — closed-loop (fire on answer) or
 //!   open-loop (fixed arrival rate, latency measured from each frame's
@@ -42,6 +54,7 @@
 
 pub mod client;
 pub mod loadgen;
+pub mod poll;
 pub mod proto;
 pub mod server;
 

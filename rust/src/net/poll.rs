@@ -1,0 +1,418 @@
+//! A minimal readiness poller over raw OS interfaces — the reactor's only
+//! window onto the kernel, kept deliberately tiny so the event loop in
+//! [`crate::net::server`] stays an ordinary single-threaded state machine.
+//!
+//! No async runtime and no FFI crate: every Rust binary on a Unix target
+//! already links the platform C library, so the two syscall families this
+//! module needs are declared directly.  Linux gets `epoll` (O(ready)
+//! wakeups, the only shape that scales to tens of thousands of
+//! connections); every other Unix falls back to `poll(2)` over the
+//! registered set (O(registered) per wakeup, correct everywhere POSIX
+//! is).  Both backends speak the same [`Poller`] surface:
+//!
+//! * [`Poller::add`]/[`Poller::modify`]/[`Poller::remove`] register a file
+//!   descriptor with a caller-chosen `u64` token and a read/write interest
+//!   pair (level-triggered: an event repeats while the condition holds,
+//!   so a partial read/write can simply return to the loop);
+//! * [`Poller::wait`] parks until something is ready, filling a reusable
+//!   event buffer.
+//!
+//! [`wake_pair`] builds the reactor's cross-thread doorbell from a
+//! nonblocking `UnixStream` pair: worker threads that complete a response
+//! ring [`WakeHandle::wake`]; the read end lives in the poller like any
+//! connection, so a wakeup is just one more readiness event.  The pair
+//! saturates harmlessly — once the pipe's buffer is full every further
+//! wake is a no-op `WouldBlock`, which is exactly the "a wakeup is
+//! already pending" edge the reactor wants.
+
+use std::io;
+use std::os::unix::io::RawFd;
+use std::time::Duration;
+
+/// Read/write interest for a registered descriptor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interest {
+    pub read: bool,
+    pub write: bool,
+}
+
+impl Interest {
+    pub const READ: Interest = Interest { read: true, write: false };
+    pub const WRITE: Interest = Interest { read: false, write: true };
+    pub const BOTH: Interest = Interest { read: true, write: true };
+}
+
+/// One readiness event out of [`Poller::wait`].
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// The token the descriptor was registered with.
+    pub token: u64,
+    /// Readable — includes hangup/error, so a closing peer always
+    /// surfaces through the read path (where `read() == 0` names it).
+    pub readable: bool,
+    /// Writable — includes error, so a broken pipe surfaces through the
+    /// write path.
+    pub writable: bool,
+    /// The peer hung up or the descriptor is in an error state.
+    pub hangup: bool,
+}
+
+/// Clamp an optional timeout onto the millisecond `int` the syscalls
+/// take: `None` parks forever (-1); sub-millisecond waits round *up* so a
+/// short deadline cannot degenerate into a busy loop.
+fn timeout_ms(timeout: Option<Duration>) -> i32 {
+    match timeout {
+        None => -1,
+        Some(d) => {
+            let ms = d.as_millis();
+            if ms == 0 && !d.is_zero() {
+                1
+            } else {
+                ms.min(i32::MAX as u128) as i32
+            }
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+mod sys {
+    use super::{timeout_ms, Event, Interest};
+    use std::io;
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLLRDHUP: u32 = 0x2000;
+
+    /// Mirror of the kernel's `struct epoll_event`.  x86-64 is the one
+    /// ABI where the kernel declares it packed (no padding between the
+    /// 32-bit event mask and the 64-bit data word).
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    /// Level-triggered epoll instance.
+    pub struct Poller {
+        epfd: RawFd,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            // SAFETY: plain syscall, no pointers.
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Poller { epfd })
+        }
+
+        fn ctl(&self, op: i32, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            let mut mask = EPOLLRDHUP;
+            if interest.read {
+                mask |= EPOLLIN;
+            }
+            if interest.write {
+                mask |= EPOLLOUT;
+            }
+            let mut ev = EpollEvent { events: mask, data: token };
+            let evp = if op == EPOLL_CTL_DEL { std::ptr::null_mut() } else { &mut ev };
+            // SAFETY: `evp` is null (DEL, where the kernel ignores it) or a
+            // live stack value; the kernel copies it before returning.
+            let rc = unsafe { epoll_ctl(self.epfd, op, fd, evp) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn add(&self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, interest)
+        }
+
+        pub fn modify(&self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, interest)
+        }
+
+        pub fn remove(&self, fd: RawFd) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_DEL, fd, 0, Interest { read: false, write: false })
+        }
+
+        pub fn wait(&self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+            const MAX_EVENTS: usize = 1024;
+            let mut buf = [EpollEvent { events: 0, data: 0 }; MAX_EVENTS];
+            // SAFETY: `buf` outlives the call and `maxevents` matches its
+            // length; the kernel writes at most that many entries.
+            let n = unsafe {
+                epoll_wait(self.epfd, buf.as_mut_ptr(), MAX_EVENTS as i32, timeout_ms(timeout))
+            };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for ev in buf.iter().take(n as usize) {
+                // copy the (possibly unaligned) packed fields by value
+                let bits = ev.events;
+                let token = ev.data;
+                out.push(Event {
+                    token,
+                    readable: bits & (EPOLLIN | EPOLLHUP | EPOLLRDHUP | EPOLLERR) != 0,
+                    writable: bits & (EPOLLOUT | EPOLLERR) != 0,
+                    hangup: bits & (EPOLLHUP | EPOLLRDHUP | EPOLLERR) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            // SAFETY: `epfd` is this instance's descriptor; nothing else
+            // closes it.
+            unsafe {
+                close(self.epfd);
+            }
+        }
+    }
+}
+
+#[cfg(all(unix, not(target_os = "linux")))]
+mod sys {
+    use super::{timeout_ms, Event, Interest};
+    use std::io;
+    use std::os::raw::c_ulong;
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    const POLLIN: i16 = 0x001;
+    const POLLOUT: i16 = 0x004;
+    const POLLERR: i16 = 0x008;
+    const POLLHUP: i16 = 0x010;
+    const POLLNVAL: i16 = 0x020;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct PollFd {
+        fd: RawFd,
+        events: i16,
+        revents: i16,
+    }
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: i32) -> i32;
+    }
+
+    /// POSIX `poll(2)` fallback: the registry lives in userspace and the
+    /// whole set is handed to the kernel per wait — O(registered), fine
+    /// for the connection counts a non-Linux dev box sees.
+    pub struct Poller {
+        registered: std::sync::Mutex<Vec<(RawFd, u64, Interest)>>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Ok(Poller { registered: std::sync::Mutex::new(Vec::new()) })
+        }
+
+        fn with_registry<R>(
+            &self,
+            f: impl FnOnce(&mut Vec<(RawFd, u64, Interest)>) -> R,
+        ) -> R {
+            let mut g = self.registered.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            f(&mut g)
+        }
+
+        pub fn add(&self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            self.with_registry(|r| r.push((fd, token, interest)));
+            Ok(())
+        }
+
+        pub fn modify(&self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            self.with_registry(|r| {
+                for e in r.iter_mut() {
+                    if e.0 == fd {
+                        *e = (fd, token, interest);
+                    }
+                }
+            });
+            Ok(())
+        }
+
+        pub fn remove(&self, fd: RawFd) -> io::Result<()> {
+            self.with_registry(|r| r.retain(|e| e.0 != fd));
+            Ok(())
+        }
+
+        pub fn wait(&self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+            let mut fds: Vec<PollFd> = self.with_registry(|r| {
+                r.iter()
+                    .map(|&(fd, _tok, i)| {
+                        let mut mask = 0i16;
+                        if i.read {
+                            mask |= POLLIN;
+                        }
+                        if i.write {
+                            mask |= POLLOUT;
+                        }
+                        PollFd { fd, events: mask, revents: 0 }
+                    })
+                    .collect()
+            });
+            let tokens: Vec<u64> = self.with_registry(|r| r.iter().map(|e| e.1).collect());
+            // SAFETY: `fds` outlives the call and `nfds` matches its length.
+            let n =
+                unsafe { poll(fds.as_mut_ptr(), fds.len() as c_ulong, timeout_ms(timeout)) };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for (pfd, &token) in fds.iter().zip(tokens.iter()) {
+                let r = pfd.revents;
+                if r == 0 {
+                    continue;
+                }
+                out.push(Event {
+                    token,
+                    readable: r & (POLLIN | POLLHUP | POLLERR | POLLNVAL) != 0,
+                    writable: r & (POLLOUT | POLLERR | POLLNVAL) != 0,
+                    hangup: r & (POLLHUP | POLLERR | POLLNVAL) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+pub use sys::Poller;
+
+// ------------------------------------------------------------- wake pair
+
+use std::io::{Read as _, Write as _};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::Arc;
+
+/// The write end of the reactor's doorbell; clone freely across worker
+/// threads.
+#[derive(Clone)]
+pub struct WakeHandle {
+    tx: Arc<UnixStream>,
+}
+
+impl WakeHandle {
+    /// Ring the doorbell.  Never blocks: a full pipe means a wakeup is
+    /// already pending, which is all a level-triggered reactor needs.
+    pub fn wake(&self) {
+        let _ = (&*self.tx).write(&[1u8]);
+    }
+}
+
+/// The read end of the doorbell; lives inside the reactor's poller.
+pub struct WakeReader {
+    rx: UnixStream,
+}
+
+impl WakeReader {
+    /// The descriptor to register (read interest) in the [`Poller`].
+    pub fn fd(&self) -> RawFd {
+        self.rx.as_raw_fd()
+    }
+
+    /// Swallow every pending ring so the level-triggered readiness clears.
+    pub fn drain(&self) {
+        let mut buf = [0u8; 256];
+        while matches!((&self.rx).read(&mut buf), Ok(n) if n > 0) {}
+    }
+}
+
+/// Build the doorbell: a nonblocking socketpair, write end shareable.
+pub fn wake_pair() -> io::Result<(WakeHandle, WakeReader)> {
+    let (tx, rx) = UnixStream::pair()?;
+    tx.set_nonblocking(true)?;
+    rx.set_nonblocking(true)?;
+    Ok((WakeHandle { tx: Arc::new(tx) }, WakeReader { rx }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::{TcpListener, TcpStream};
+
+    #[test]
+    fn wake_pair_rings_and_drains() {
+        let (tx, rx) = wake_pair().unwrap();
+        let poller = Poller::new().unwrap();
+        poller.add(rx.fd(), 42, Interest::READ).unwrap();
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(std::time::Duration::from_millis(10))).unwrap();
+        assert!(events.is_empty(), "no wake yet");
+        tx.wake();
+        tx.wake();
+        poller.wait(&mut events, Some(std::time::Duration::from_secs(5))).unwrap();
+        assert!(events.iter().any(|e| e.token == 42 && e.readable));
+        rx.drain();
+        events.clear();
+        poller.wait(&mut events, Some(std::time::Duration::from_millis(10))).unwrap();
+        assert!(events.is_empty(), "drained doorbell is quiet again");
+    }
+
+    #[test]
+    fn poller_sees_accept_readiness_and_interest_changes() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let poller = Poller::new().unwrap();
+        poller.add(listener.as_raw_fd(), 7, Interest::READ).unwrap();
+
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(std::time::Duration::from_millis(10))).unwrap();
+        assert!(events.is_empty(), "idle listener is not readable");
+
+        let client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        poller.wait(&mut events, Some(std::time::Duration::from_secs(5))).unwrap();
+        assert!(events.iter().any(|e| e.token == 7 && e.readable), "pending accept is readable");
+        let (conn, _) = listener.accept().unwrap();
+        conn.set_nonblocking(true).unwrap();
+
+        // A fresh connection with write interest reports writable at once.
+        poller.add(conn.as_raw_fd(), 8, Interest::BOTH).unwrap();
+        events.clear();
+        poller.wait(&mut events, Some(std::time::Duration::from_secs(5))).unwrap();
+        assert!(events.iter().any(|e| e.token == 8 && e.writable));
+
+        // Dropping write interest silences the writable stream.
+        poller.modify(conn.as_raw_fd(), 8, Interest::READ).unwrap();
+        events.clear();
+        poller.wait(&mut events, Some(std::time::Duration::from_millis(20))).unwrap();
+        assert!(!events.iter().any(|e| e.token == 8 && e.writable));
+
+        // Peer hangup surfaces as readable (read() == 0 names it).
+        drop(client);
+        events.clear();
+        poller.wait(&mut events, Some(std::time::Duration::from_secs(5))).unwrap();
+        assert!(events.iter().any(|e| e.token == 8 && e.readable && e.hangup));
+        poller.remove(conn.as_raw_fd()).unwrap();
+    }
+}

@@ -10,10 +10,12 @@
 //! is FNV-1a ([`crate::util::hash`] — the same definition that routes tags
 //! to banks) over the id, op and payload bytes.  Request ids are chosen by
 //! the client and echoed verbatim in the response, which is what makes
-//! pipelining work: a client may have several frames in flight and match
-//! the answers back up by id (the server answers a single connection in
-//! order).  Writers should bound how far they run ahead — socket buffers
-//! are finite in both directions; see the window in
+//! multiplexing work: a client may have several frames in flight and must
+//! match the answers back up by id — since v6 the server advertises
+//! [`ServerHello::multiplex`] and responses to pipelined frames may
+//! complete in *any* order (a fast lookup overtakes a slow drain on the
+//! same connection).  Writers should bound how far they run ahead —
+//! socket buffers are finite in both directions; see the window in
 //! [`crate::net::CamClient::lookup_bulk`].
 //!
 //! A connection starts with a handshake: the client sends magic + version
@@ -54,10 +56,14 @@ pub const MAGIC: [u8; 4] = *b"CSCM";
 /// (see [`crate::obs`]); v5 — added the replication ops
 /// `OP_SUBSCRIBE_LOG` (11) / `OP_LOG_BATCH` (12) /
 /// `OP_SNAPSHOT_TRANSFER` (13) and `ERR_FENCED` (7), the log-shipping
-/// transport of [`crate::repl`].  Both sides hang up on a version
-/// mismatch (strict equality), so a mixed deployment must upgrade in
-/// lock-step.
-pub const VERSION: u16 = 5;
+/// transport of [`crate::repl`]; v6 — multiplexing: the server hello's
+/// flags word gained the `multiplex` bit (bit 1), announcing that
+/// responses to pipelined frames may arrive in *any* order and clients
+/// must re-match them by request id (the byte layout of every frame is
+/// unchanged — v6 relaxes an ordering promise, it adds no ops).  Both
+/// sides hang up on a version mismatch (strict equality), so a mixed
+/// deployment must upgrade in lock-step.
+pub const VERSION: u16 = 6;
 
 /// Upper bound on one frame (64 MiB) — rejects garbage lengths before any
 /// allocation.
@@ -319,6 +325,11 @@ pub struct ServerHello {
     /// Set when the server is at its connection cap and will close the
     /// connection right after this hello.
     pub busy: bool,
+    /// Set when the server multiplexes requests (v6): responses to
+    /// pipelined frames may arrive in any order and must be re-matched
+    /// by request id.  A client that needs strict ordering must simply
+    /// not pipeline.
+    pub multiplex: bool,
     pub shards: u32,
     /// Entries per bank (total capacity = `shards * bank_m`).
     pub bank_m: u32,
@@ -326,10 +337,22 @@ pub struct ServerHello {
     pub tag_bits: u32,
 }
 
+/// Bit 0 of the server hello's flags word: at the connection cap.
+const HELLO_FLAG_BUSY: u16 = 1 << 0;
+/// Bit 1 of the server hello's flags word: out-of-order multiplexing (v6).
+const HELLO_FLAG_MULTIPLEX: u16 = 1 << 1;
+
 pub fn write_server_hello(w: &mut impl Write, h: &ServerHello) -> io::Result<()> {
+    let mut flags = 0u16;
+    if h.busy {
+        flags |= HELLO_FLAG_BUSY;
+    }
+    if h.multiplex {
+        flags |= HELLO_FLAG_MULTIPLEX;
+    }
     w.write_all(&MAGIC)?;
     w.write_all(&h.version.to_le_bytes())?;
-    w.write_all(&(h.busy as u16).to_le_bytes())?;
+    w.write_all(&flags.to_le_bytes())?;
     w.write_all(&h.shards.to_le_bytes())?;
     w.write_all(&h.bank_m.to_le_bytes())?;
     w.write_all(&h.tag_bits.to_le_bytes())
@@ -346,7 +369,8 @@ pub fn read_server_hello(r: &mut impl Read) -> Result<ServerHello, WireError> {
     let u32_at = |i: usize| u32::from_le_bytes([buf[i], buf[i + 1], buf[i + 2], buf[i + 3]]);
     Ok(ServerHello {
         version: u16_at(4),
-        busy: u16_at(6) & 1 == 1,
+        busy: u16_at(6) & HELLO_FLAG_BUSY != 0,
+        multiplex: u16_at(6) & HELLO_FLAG_MULTIPLEX != 0,
         shards: u32_at(8),
         bank_m: u32_at(12),
         tag_bits: u32_at(16),
@@ -1171,11 +1195,23 @@ mod tests {
         bad[0] = b'X';
         assert!(matches!(parse_client_hello(&bad), Err(WireError::Protocol(_))));
 
-        let hello =
-            ServerHello { version: VERSION, busy: false, shards: 4, bank_m: 64, tag_bits: 32 };
+        let hello = ServerHello {
+            version: VERSION,
+            busy: false,
+            multiplex: true,
+            shards: 4,
+            bank_m: 64,
+            tag_bits: 32,
+        };
         let mut wire = Vec::new();
         write_server_hello(&mut wire, &hello).unwrap();
         assert_eq!(read_server_hello(&mut wire.as_slice()).unwrap(), hello);
+        assert_eq!(wire[6], 0b10, "multiplex is bit 1 of the flags word");
+        let busy = ServerHello { busy: true, multiplex: false, ..hello };
+        let mut wire2 = Vec::new();
+        write_server_hello(&mut wire2, &busy).unwrap();
+        assert_eq!(read_server_hello(&mut wire2.as_slice()).unwrap(), busy);
+        assert_eq!(wire2[6], 0b01, "busy is bit 0 of the flags word");
         wire[2] = b'Z';
         assert!(matches!(read_server_hello(&mut wire.as_slice()), Err(WireError::Protocol(_))));
     }

@@ -1,42 +1,59 @@
-//! The TCP serving front-end: a thread-per-connection server that puts a
-//! [`ShardedServerHandle`] fleet on the network.
+//! The TCP serving front-end: a readiness-driven event loop (reactor)
+//! that puts a [`ShardedServerHandle`] fleet on the network.
 //!
-//! Shape: one nonblocking accept loop (so shutdown can interrupt it) that
-//! spawns a handler thread per connection, each holding its own clone of
-//! the fleet handle plus its own [`DecodeScratch`].  *Lookups run on the
-//! connection thread itself* — the handler snapshots the owning bank's
-//! published search state and searches directly
-//! ([`ShardedServerHandle::lookup_direct`]), so a read never hops a
-//! channel or waits behind another connection's work; only mutations and
-//! barriers cross into the banks' writer threads:
+//! Shape: ONE reactor thread owns the listener and every connection —
+//! all nonblocking, registered in a [`crate::net::poll::Poller`] (epoll
+//! on Linux, `poll(2)` elsewhere).  Connections carry resumable codec
+//! state machines: bytes accumulate in a per-connection read buffer and
+//! frames are decoded only once complete, so a peer that delivers a
+//! frame one byte at a time costs buffer space, not a blocked thread.
+//! Decoded requests cross a bounded lock-free MPMC channel
+//! ([`crate::util::sync::BatchChannel`]) to a small worker pool that
+//! executes them — lookups against the banks' published RCU snapshots
+//! ([`ShardedServerHandle::lookup_direct`]), mutations through the bank
+//! writer threads — and completed responses come back to the reactor via
+//! a completion list plus a doorbell, to be serialized into the
+//! connection's bounded write buffer:
 //!
 //! ```text
-//!   client ──TCP──▶ conn thread ── lookups: SearchState snapshot (in place)
-//!                   (BufReader/    ── mutations/barriers ──▶ bank writer
-//!                    BufWriter,        threads (WAL, RCU publish —
-//!                    frame decode,     crate::coordinator)
-//!                    own scratch)
+//!   clients ──TCP──▶ reactor thread ──BatchChannel──▶ worker pool
+//!            (epoll;  frame reassembly,               (handle_request:
+//!             10k+    per-conn read/write              direct lookups on
+//!             conns)  buffers, backpressure)           RCU snapshots,
+//!                        ▲                             mutations → banks)
+//!                        └──completions + doorbell──────┘
 //! ```
 //!
-//! * a **connection cap**: past [`NetConfig::max_connections`] live
-//!   connections, the server answers the handshake with the `busy` flag
-//!   and closes (clients see [`crate::net::proto::WireError::Busy`]) —
-//!   with direct reads this cap *is* the read-concurrency bound, giving
-//!   natural backpressure instead of queue-shed (`ERR_BUSY` remains in
-//!   the protocol for in-process admission surfaced over future paths);
-//! * **clean shutdown**: a `Shutdown` request (or a local
-//!   [`NetServerHandle::shutdown`]) stops the accept loop, waits briefly
-//!   for live connections, then drains every bank before the serve thread
-//!   exits.
+//! * **Multiplexing (protocol v6):** requests from one connection are
+//!   executed concurrently by the pool and responses are written in
+//!   *completion* order, re-matched by the client via request id — the
+//!   server hello advertises [`crate::net::proto::ServerHello::multiplex`].
+//! * **Backpressure, not unbounded memory:** past
+//!   [`NetConfig::inflight_window`] outstanding requests or
+//!   [`NetConfig::write_soft_cap`] unsent response bytes the reactor
+//!   simply stops reading that connection (level-triggered readiness
+//!   makes resuming free); a peer that never drains its responses is
+//!   disconnected at [`NetConfig::write_hard_cap`].
+//! * **Connection cap:** past [`NetConfig::max_connections`] live
+//!   connections the *reactor itself* answers the handshake with the
+//!   `busy` flag and closes (clients see
+//!   [`crate::net::proto::WireError::Busy`]) — deterministic, with no
+//!   thread spawn that could fail and silently drop the connection.
+//! * **Clean shutdown:** a wire `Shutdown` (or a local
+//!   [`NetServerHandle::shutdown`]) stops accepting, gives in-flight
+//!   requests and unflushed responses a grace window, then drains every
+//!   bank before the serve thread exits.
 
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::engine::{DecodeScratch, EngineError};
 use crate::coordinator::server::PersistError;
+use crate::net::poll::{wake_pair, Interest, Poller, WakeHandle, WakeReader};
 use crate::net::proto::{
     self, parse_client_hello, write_server_hello, Request, Response, ServerHello, StatsReport,
     ERR_PROTOCOL, VERSION,
@@ -44,31 +61,78 @@ use crate::net::proto::{
 use crate::net::proto::WireError;
 use crate::repl::ReplRole;
 use crate::shard::ShardedServerHandle;
+use crate::util::sync::{lock_recover, BatchChannel, JobGuard, Mutex};
 
 /// Tunables of the TCP front-end.
 #[derive(Debug, Clone)]
 pub struct NetConfig {
-    /// Live-connection cap; the accept loop answers `busy` past it.
+    /// Live-connection cap; the reactor answers `busy` past it.
     pub max_connections: usize,
-    /// Poll granularity of the per-connection idle read (how fast a
-    /// connection notices a shutdown).
-    pub read_timeout: Duration,
-    /// Poll granularity of the nonblocking accept loop.
+    /// Reactor tick: poll timeout, which bounds how fast the loop notices
+    /// a local shutdown request or scans for stalled peers.
     pub accept_poll: Duration,
-    /// How long shutdown waits for live connections before draining anyway.
+    /// How long shutdown waits for in-flight requests and unflushed
+    /// responses before closing connections anyway.
     pub shutdown_grace: Duration,
+    /// Request-executing worker threads behind the reactor (0 = one per
+    /// available core, clamped to a small pool).
+    pub workers: usize,
+    /// How long a peer may stall without delivering a byte mid-frame (or
+    /// mid-handshake) before the connection is dropped.  Progress resets
+    /// the clock, so slow-but-alive peers survive and stalled ones cannot
+    /// pin a connection slot.
+    pub stall_budget: Duration,
+    /// Most requests one connection may have in flight before the
+    /// reactor stops reading it (multiplexing window).
+    pub inflight_window: usize,
+    /// Unsent response bytes at which the reactor stops reading the
+    /// connection (backpressure threshold).
+    pub write_soft_cap: usize,
+    /// Unsent response bytes at which a peer that never drains is
+    /// disconnected outright (hard memory bound per connection).
+    pub write_hard_cap: usize,
 }
 
 impl Default for NetConfig {
     fn default() -> Self {
         NetConfig {
             max_connections: 64,
-            read_timeout: Duration::from_millis(50),
             accept_poll: Duration::from_millis(5),
             shutdown_grace: Duration::from_secs(5),
+            workers: 0,
+            stall_budget: Duration::from_secs(10),
+            inflight_window: 256,
+            write_soft_cap: 256 * 1024,
+            write_hard_cap: 64 << 20,
         }
     }
 }
+
+impl NetConfig {
+    fn worker_count(&self) -> usize {
+        if self.workers > 0 {
+            return self.workers;
+        }
+        std::thread::available_parallelism().map_or(4, |n| n.get()).clamp(2, 8)
+    }
+}
+
+/// Handshake window for a connection that has sent nothing at all.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(2);
+/// How long a goodbye (busy hello, version-mismatch hello, protocol-error
+/// answer) may wait for its flush before the socket is closed anyway.
+const GOODBYE_BUDGET: Duration = Duration::from_millis(500);
+/// Over-cap connections currently being answered `busy`.  Past this a
+/// connect flood is dropped outright (the peer sees EOF) — a courtesy
+/// hello costs a slab slot for up to [`GOODBYE_BUDGET`], and the flood
+/// must not grow that set without bound.
+const MAX_BUSY_GOODBYES: usize = 64;
+/// Ring capacity of the request channel between the reactor and the
+/// worker pool; a full ring parks the decoded frame on its connection and
+/// pauses reading it (backpressure), never drops it.
+const JOB_RING_CAPACITY: usize = 4096;
+/// Jobs a worker takes per channel round-trip.
+const WORKER_BATCH: usize = 32;
 
 /// A bound-but-not-yet-serving TCP front-end over a running fleet.
 pub struct CamTcpServer {
@@ -106,18 +170,75 @@ impl CamTcpServer {
         self.listener.local_addr()
     }
 
-    /// Spawn the accept loop on its own thread.
+    /// Spawn the reactor and its worker pool.  Every thread the server
+    /// will ever need is created here — a spawn failure surfaces as an
+    /// error *now*, not as a connection silently dropped later.
     pub fn spawn(self) -> std::io::Result<NetServerHandle> {
         let addr = self.listener.local_addr()?;
+        self.listener.set_nonblocking(true)?;
+        let poller = Poller::new()?;
+        let (wake, wake_rx) = wake_pair()?;
+        poller.add(self.listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ)?;
+        poller.add(wake_rx.fd(), TOKEN_WAKE, Interest::READ)?;
+
         let stop = Arc::new(AtomicBool::new(false));
-        let fleet = self.fleet.clone();
-        let thread = {
-            let stop = Arc::clone(&stop);
-            std::thread::Builder::new()
-                .name("cscam-net-accept".into())
-                .spawn(move || accept_loop(self.listener, self.fleet, self.cfg, self.repl, stop))?
+        let shared = Arc::new(NetShared {
+            jobs: BatchChannel::with_capacity(JOB_RING_CAPACITY),
+            completions: Mutex::new(Vec::new()),
+            wake,
+        });
+
+        let mut worker_handles = Vec::new();
+        let spawn_workers = (|| -> std::io::Result<()> {
+            for i in 0..self.cfg.worker_count() {
+                let shared = Arc::clone(&shared);
+                let fleet = self.fleet.clone();
+                let repl = self.repl.clone();
+                let stop = Arc::clone(&stop);
+                worker_handles.push(
+                    std::thread::Builder::new()
+                        .name(format!("cscam-net-worker-{i}"))
+                        .spawn(move || worker_loop(&shared, &fleet, repl.as_deref(), &stop))?,
+                );
+            }
+            Ok(())
+        })();
+
+        let reactor = Reactor {
+            poller,
+            listener: Some(self.listener),
+            wake_rx,
+            slab: Vec::new(),
+            free: Vec::new(),
+            live: 0,
+            busy_live: 0,
+            any_parked: false,
+            draining: false,
+            last_stall_scan: Instant::now(),
+            hello_serving: server_hello(&self.fleet, false),
+            hello_busy: server_hello(&self.fleet, true),
+            cfg: self.cfg,
+            fleet: self.fleet.clone(),
+            shared: Arc::clone(&shared),
+            stop: Arc::clone(&stop),
         };
-        Ok(NetServerHandle { addr, stop, thread: Some(thread), fleet })
+
+        let spawned = spawn_workers.and_then(|()| {
+            std::thread::Builder::new()
+                .name("cscam-net-reactor".into())
+                .spawn(move || reactor.run(worker_handles))
+        });
+        match spawned {
+            Ok(thread) => {
+                Ok(NetServerHandle { addr, stop, thread: Some(thread), fleet: self.fleet })
+            }
+            Err(e) => {
+                // unwind cleanly: release the channel so any workers that
+                // did start exit instead of parking forever
+                shared.jobs.remove_sender();
+                Err(e)
+            }
+        }
     }
 }
 
@@ -139,7 +260,7 @@ impl NetServerHandle {
         &self.fleet
     }
 
-    /// Ask the accept loop to stop (idempotent; also triggered by a wire
+    /// Ask the reactor to stop (idempotent; also triggered by a wire
     /// `Shutdown` request).  Banks are drained before the thread exits.
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::Release);
@@ -159,271 +280,764 @@ impl NetServerHandle {
     }
 }
 
-fn accept_loop(
-    listener: TcpListener,
-    fleet: ShardedServerHandle,
-    cfg: NetConfig,
-    repl: Option<Arc<ReplRole>>,
-    stop: Arc<AtomicBool>,
+// ------------------------------------------------------------ job plumbing
+
+/// One decoded request on its way to the worker pool.
+struct NetJob {
+    conn: u64,
+    id: u64,
+    req: Request,
+}
+
+/// One executed response on its way back to the reactor.
+struct Completion {
+    conn: u64,
+    id: u64,
+    resp: Response,
+}
+
+/// State shared between the reactor and its workers.
+struct NetShared {
+    jobs: BatchChannel<NetJob>,
+    completions: Mutex<Vec<Completion>>,
+    wake: WakeHandle,
+}
+
+fn worker_loop(
+    shared: &NetShared,
+    fleet: &ShardedServerHandle,
+    repl: Option<&ReplRole>,
+    stop: &AtomicBool,
 ) {
-    if listener.set_nonblocking(true).is_err() {
-        return;
-    }
-    let live = Arc::new(AtomicUsize::new(0));
-    let rejectors = Arc::new(AtomicUsize::new(0));
-    while !stop.load(Ordering::Acquire) {
-        match listener.accept() {
-            Ok((stream, _peer)) => {
-                let _ = stream.set_nodelay(true);
-                // the accepted socket must not inherit the listener's
-                // nonblocking mode (platform-dependent)
-                let _ = stream.set_nonblocking(false);
-                if live.load(Ordering::Acquire) >= cfg.max_connections {
-                    // Rejection waits up to 500 ms for the peer's hello —
-                    // never on the accept thread (over-cap connectors would
-                    // stall every legitimate accept behind them) and never
-                    // on more than a few threads at once (a connect flood
-                    // must not mint a thread per rejection; past the cap
-                    // the stream just drops, which the peer sees as EOF).
-                    if rejectors.load(Ordering::Acquire) < MAX_BUSY_REJECTORS {
-                        let slot = LiveSlot::claim(&rejectors);
-                        let hello = server_hello(&fleet, true);
-                        let _ = std::thread::Builder::new()
-                            .name("cscam-net-busy".into())
-                            .spawn(move || {
-                                let _slot = slot;
-                                reject_busy(stream, hello);
-                            });
-                    }
-                    continue;
-                }
-                // Slot guard: the slot frees even if serve_conn panics —
-                // a leaked increment would wedge the server at `busy`.
-                let slot = LiveSlot::claim(&live);
-                let fleet = fleet.clone();
-                let cfg = cfg.clone();
-                let repl = repl.clone();
-                let stop = Arc::clone(&stop);
-                // spawn failure drops the unexecuted closure (and with it
-                // the slot guard), so the count stays balanced either way
-                let _ = std::thread::Builder::new()
-                    .name("cscam-net-conn".into())
-                    .spawn(move || {
-                        let _slot = slot;
-                        serve_conn(stream, &fleet, &cfg, repl.as_deref(), &stop);
-                    });
+    let mut scratch = DecodeScratch::new();
+    let mut batch: Vec<NetJob> = Vec::with_capacity(WORKER_BATCH);
+    loop {
+        batch.clear();
+        if shared.jobs.pop_batch(WORKER_BATCH, &mut batch) == 0 {
+            return; // channel closed and drained: reactor is gone
+        }
+        for job in batch.drain(..) {
+            let _guard = JobGuard::new(&shared.jobs);
+            let is_shutdown = matches!(job.req, Request::Shutdown);
+            let resp = handle_request(fleet, job.req, &mut scratch, repl);
+            if is_shutdown && matches!(resp, Response::ShutdownAck) {
+                // flag first, then complete: the reactor that wakes for
+                // this ack already sees the stop request
+                stop.store(true, Ordering::Release);
             }
-            // WouldBlock = no pending connection; other accept errors are
-            // transient on a healthy listener — either way, poll again
-            Err(_) => std::thread::sleep(cfg.accept_poll),
+            lock_recover(&shared.completions).push(Completion {
+                conn: job.conn,
+                id: job.id,
+                resp,
+            });
+            shared.wake.wake();
         }
     }
-    // Clean shutdown: no new connections; give the live ones a grace
-    // window, then run the canonical drain-then-flush sequence (no
-    // acknowledged-but-unlogged writes).
-    let deadline = Instant::now() + cfg.shutdown_grace;
-    while live.load(Ordering::Acquire) > 0 && Instant::now() < deadline {
-        std::thread::sleep(cfg.accept_poll);
+}
+
+// ---------------------------------------------------------------- reactor
+
+const TOKEN_LISTENER: u64 = u64::MAX;
+const TOKEN_WAKE: u64 = u64::MAX - 1;
+
+fn token_of(idx: usize, gen: u32) -> u64 {
+    ((gen as u64) << 32) | idx as u64
+}
+
+fn split_token(token: u64) -> (usize, u32) {
+    ((token & 0xFFFF_FFFF) as usize, (token >> 32) as u32)
+}
+
+/// Connection lifecycle.
+enum Phase {
+    /// Waiting for the 8-byte client hello.
+    Handshake { deadline: Instant },
+    /// Over the connection cap: wait for the peer's hello (so our close
+    /// cannot clobber it with a reset), answer `busy`, then goodbye.
+    BusyHello { deadline: Instant },
+    /// Normal frame traffic.
+    Serving,
+    /// Flush what is queued (a hello or a protocol-error answer), discard
+    /// any further input, then close.
+    Goodbye { deadline: Instant },
+}
+
+struct Conn {
+    stream: TcpStream,
+    token: u64,
+    phase: Phase,
+    /// Read accumulator: `rbuf[rpos..]` is unparsed input (a partial
+    /// frame survives here across readiness events — the resumable half
+    /// of the codec state machine).
+    rbuf: Vec<u8>,
+    rpos: usize,
+    /// Write accumulator: `wbuf[wpos..]` is serialized-but-unsent output.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Requests handed to the worker pool and not yet answered.
+    inflight: usize,
+    /// A decoded frame the full job ring refused; retried before any new
+    /// parsing (per-connection order of *submission* is preserved).
+    parked: Option<NetJob>,
+    /// Armed while a partial frame (or handshake) is pending; progress
+    /// re-arms it, expiry closes the connection.
+    stall_deadline: Option<Instant>,
+    /// Interest currently registered with the poller.
+    interest: Interest,
+    /// Counted against the busy-goodbye bound instead of the live cap.
+    busy_reject: bool,
+}
+
+impl Conn {
+    fn pending_out(&self) -> usize {
+        self.wbuf.len() - self.wpos
     }
-    if let Err(e) = fleet.shutdown() {
-        eprintln!("cscam-net: fleet shutdown flush failed: {e}");
+
+    /// Should the reactor read more bytes from this peer right now?
+    fn wants_read(&self, cfg: &NetConfig) -> bool {
+        match self.phase {
+            // goodbye still reads (and discards) so the peer's in-flight
+            // bytes cannot turn our final answer into a TCP reset
+            Phase::Goodbye { .. } => true,
+            _ => {
+                self.parked.is_none()
+                    && self.inflight < cfg.inflight_window
+                    && self.pending_out() < cfg.write_soft_cap
+            }
+        }
     }
 }
 
-/// Concurrent polite-rejection bound: each busy hello may pin a thread for
-/// up to 500 ms, so a connect flood gets at most this many courtesy
-/// replies at a time — the rest are dropped outright.
-const MAX_BUSY_REJECTORS: usize = 8;
+enum Verdict {
+    Alive,
+    Dead,
+}
 
-/// RAII slot in a connection counter (live conns, busy rejectors):
-/// claimed on the accept thread, released on drop — including a panicking
-/// thread's unwind, so a crash can never wedge the server at `busy`.
-struct LiveSlot(Arc<AtomicUsize>);
+struct Slot {
+    gen: u32,
+    conn: Option<Conn>,
+}
 
-impl LiveSlot {
-    fn claim(live: &Arc<AtomicUsize>) -> LiveSlot {
-        live.fetch_add(1, Ordering::AcqRel);
-        LiveSlot(Arc::clone(live))
+struct Reactor {
+    poller: Poller,
+    listener: Option<TcpListener>,
+    wake_rx: WakeReader,
+    slab: Vec<Slot>,
+    free: Vec<usize>,
+    live: usize,
+    busy_live: usize,
+    any_parked: bool,
+    /// Shutdown drain mode: no new frames are parsed, input is discarded.
+    draining: bool,
+    last_stall_scan: Instant,
+    hello_serving: ServerHello,
+    hello_busy: ServerHello,
+    cfg: NetConfig,
+    fleet: ShardedServerHandle,
+    shared: Arc<NetShared>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Reactor {
+    fn run(mut self, workers: Vec<std::thread::JoinHandle<()>>) {
+        let mut events = Vec::new();
+        while !self.stop.load(Ordering::Acquire) {
+            self.process_completions();
+            if self.any_parked {
+                self.retry_parked();
+            }
+            events.clear();
+            if self.poller.wait(&mut events, Some(self.cfg.accept_poll)).is_err() {
+                break; // a dead poller cannot serve; fall through to drain
+            }
+            for ev in &events {
+                self.handle_event(*ev);
+            }
+            self.maybe_scan_stalls();
+        }
+        self.shutdown_sequence(workers);
+    }
+
+    fn handle_event(&mut self, ev: crate::net::poll::Event) {
+        match ev.token {
+            TOKEN_WAKE => {
+                self.wake_rx.drain();
+                self.process_completions();
+            }
+            TOKEN_LISTENER => self.accept_ready(),
+            token => self.conn_event(token, ev),
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            let Some(listener) = self.listener.as_ref() else { return };
+            match listener.accept() {
+                Ok((stream, _peer)) => self.register_conn(stream),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                // transient accept errors on a healthy listener: the next
+                // readiness event retries
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn register_conn(&mut self, stream: TcpStream) {
+        let _ = stream.set_nodelay(true);
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        let busy = self.live >= self.cfg.max_connections;
+        if busy && self.busy_live >= MAX_BUSY_GOODBYES {
+            return; // flood control: drop outright, the peer sees EOF
+        }
+        let idx = match self.free.pop() {
+            Some(i) => i,
+            None => {
+                self.slab.push(Slot { gen: 0, conn: None });
+                self.slab.len() - 1
+            }
+        };
+        let token = token_of(idx, self.slab[idx].gen);
+        let now = Instant::now();
+        let phase = if busy {
+            Phase::BusyHello { deadline: now + GOODBYE_BUDGET }
+        } else {
+            Phase::Handshake { deadline: now + HANDSHAKE_TIMEOUT }
+        };
+        let conn = Conn {
+            stream,
+            token,
+            phase,
+            rbuf: Vec::new(),
+            rpos: 0,
+            wbuf: Vec::new(),
+            wpos: 0,
+            inflight: 0,
+            parked: None,
+            stall_deadline: None,
+            interest: Interest::READ,
+            busy_reject: busy,
+        };
+        if self.poller.add(conn.stream.as_raw_fd(), token, Interest::READ).is_err() {
+            self.free.push(idx);
+            return; // conn drops here; the peer sees EOF
+        }
+        self.slab[idx].conn = Some(conn);
+        if busy {
+            self.busy_live += 1;
+        } else {
+            self.live += 1;
+        }
+    }
+
+    fn conn_event(&mut self, token: u64, ev: crate::net::poll::Event) {
+        let (idx, gen) = split_token(token);
+        let mut dead = false;
+        {
+            let Some(slot) = self.slab.get_mut(idx) else { return };
+            if slot.gen != gen {
+                return; // stale event for a recycled slot
+            }
+            let Some(c) = slot.conn.as_mut() else { return };
+            if ev.writable && flush_wbuf(c).is_err() {
+                dead = true;
+            }
+            if !dead && ev.readable {
+                dead = matches!(
+                    handle_readable(
+                        c,
+                        &self.cfg,
+                        &self.shared,
+                        &mut self.any_parked,
+                        self.draining,
+                        &self.hello_serving,
+                        &self.hello_busy,
+                    ),
+                    Verdict::Dead
+                );
+            } else if !dead && ev.writable {
+                // The flush may have dropped `pending_out` back under the
+                // soft cap.  Frames that were paused *after* being pulled
+                // into `rbuf` get no further readiness events, so resume
+                // the parser here (it never touches the socket).
+                dead = matches!(
+                    drive_conn(
+                        c,
+                        &self.cfg,
+                        &self.shared,
+                        &mut self.any_parked,
+                        self.draining,
+                        &self.hello_serving,
+                        &self.hello_busy,
+                    ),
+                    Verdict::Dead
+                );
+            }
+            if !dead {
+                dead = matches!(settle_conn(&self.poller, c, &self.cfg), Verdict::Dead);
+            }
+        }
+        if dead {
+            self.close_idx(idx);
+        }
+    }
+
+    /// Move every completed response into its connection's write buffer.
+    fn process_completions(&mut self) {
+        let done = std::mem::take(&mut *lock_recover(&self.shared.completions));
+        if done.is_empty() {
+            return;
+        }
+        let mut to_close = Vec::new();
+        for comp in done {
+            let (idx, gen) = split_token(comp.conn);
+            let Some(slot) = self.slab.get_mut(idx) else { continue };
+            if slot.gen != gen {
+                continue; // the connection died before its answer was ready
+            }
+            let Some(c) = slot.conn.as_mut() else { continue };
+            c.inflight = c.inflight.saturating_sub(1);
+            let mut dead = proto::write_response(&mut c.wbuf, comp.id, &comp.resp).is_err();
+            if !dead {
+                // Flush before resuming the parser so the soft-cap check
+                // sees what the kernel could not take, not the transient
+                // spike from the response appended above.
+                dead = flush_wbuf(c).is_err();
+            }
+            if !dead {
+                // The freed window slot (and the flush above) may unblock
+                // frames already sitting in this connection's read buffer;
+                // no further readiness event will arrive for those bytes,
+                // so resume the parser here.
+                dead = matches!(
+                    drive_conn(
+                        c,
+                        &self.cfg,
+                        &self.shared,
+                        &mut self.any_parked,
+                        self.draining,
+                        &self.hello_serving,
+                        &self.hello_busy,
+                    ),
+                    Verdict::Dead
+                );
+            }
+            if !dead {
+                dead = matches!(settle_conn(&self.poller, c, &self.cfg), Verdict::Dead);
+            }
+            if dead {
+                to_close.push(idx);
+            }
+        }
+        for idx in to_close {
+            self.close_idx(idx);
+        }
+    }
+
+    /// Re-offer parked jobs to the ring (space appears as workers drain
+    /// it), then resume parsing the frames queued up behind them.
+    fn retry_parked(&mut self) {
+        self.any_parked = false;
+        let mut to_close = Vec::new();
+        for idx in 0..self.slab.len() {
+            let Some(c) = self.slab[idx].conn.as_mut() else { continue };
+            let Some(job) = c.parked.take() else { continue };
+            match self.shared.jobs.try_push(job) {
+                Ok(()) => {
+                    c.inflight += 1;
+                    let mut dead = matches!(
+                        drive_conn(
+                            c,
+                            &self.cfg,
+                            &self.shared,
+                            &mut self.any_parked,
+                            self.draining,
+                            &self.hello_serving,
+                            &self.hello_busy,
+                        ),
+                        Verdict::Dead
+                    );
+                    if !dead {
+                        dead = matches!(settle_conn(&self.poller, c, &self.cfg), Verdict::Dead);
+                    }
+                    if dead {
+                        to_close.push(idx);
+                    }
+                }
+                Err(job) => {
+                    c.parked = Some(job);
+                    self.any_parked = true;
+                }
+            }
+        }
+        for idx in to_close {
+            self.close_idx(idx);
+        }
+    }
+
+    /// Periodic sweep for peers that stalled mid-frame, handshakes that
+    /// never arrived, and goodbyes whose flush window expired.
+    fn maybe_scan_stalls(&mut self) {
+        let now = Instant::now();
+        if now.duration_since(self.last_stall_scan) < Duration::from_millis(100) {
+            return;
+        }
+        self.last_stall_scan = now;
+        let mut to_close = Vec::new();
+        for (idx, slot) in self.slab.iter().enumerate() {
+            let Some(c) = slot.conn.as_ref() else { continue };
+            let expired = match c.phase {
+                Phase::Handshake { deadline } | Phase::BusyHello { deadline } => {
+                    now >= c.stall_deadline.unwrap_or(deadline)
+                }
+                Phase::Goodbye { deadline } => now >= deadline,
+                Phase::Serving => c.stall_deadline.is_some_and(|d| now >= d),
+            };
+            if expired {
+                to_close.push(idx);
+            }
+        }
+        for idx in to_close {
+            self.close_idx(idx);
+        }
+    }
+
+    fn close_idx(&mut self, idx: usize) {
+        let Some(slot) = self.slab.get_mut(idx) else { return };
+        let Some(c) = slot.conn.take() else { return };
+        let _ = self.poller.remove(c.stream.as_raw_fd());
+        if c.busy_reject {
+            self.busy_live -= 1;
+        } else {
+            self.live -= 1;
+        }
+        slot.gen = slot.gen.wrapping_add(1);
+        self.free.push(idx);
+        // dropping `c` closes the socket
+    }
+
+    fn all_quiet(&self) -> bool {
+        self.slab.iter().all(|s| match &s.conn {
+            None => true,
+            Some(c) => c.inflight == 0 && c.parked.is_none() && c.pending_out() == 0,
+        })
+    }
+
+    /// Clean shutdown: stop accepting immediately, give in-flight work
+    /// and unflushed responses a grace window, then run the canonical
+    /// drain-then-flush sequence (no acknowledged-but-unlogged writes).
+    fn shutdown_sequence(mut self, workers: Vec<std::thread::JoinHandle<()>>) {
+        if let Some(l) = self.listener.take() {
+            let _ = self.poller.remove(l.as_raw_fd());
+            drop(l); // the port refuses new connections from here on
+        }
+        self.draining = true;
+        let deadline = Instant::now() + self.cfg.shutdown_grace;
+        let mut events = Vec::new();
+        loop {
+            self.process_completions();
+            if self.any_parked {
+                self.retry_parked();
+            }
+            if self.all_quiet() || Instant::now() >= deadline {
+                break;
+            }
+            events.clear();
+            if self.poller.wait(&mut events, Some(self.cfg.accept_poll)).is_err() {
+                break;
+            }
+            for ev in &events {
+                self.handle_event(*ev);
+            }
+        }
+        for idx in 0..self.slab.len() {
+            self.close_idx(idx);
+        }
+        // Release the channel: workers finish the backlog, observe
+        // end-of-stream, and exit; their final completions have nowhere
+        // to go, which is fine — every connection is gone.
+        self.shared.jobs.remove_sender();
+        for w in workers {
+            let _ = w.join();
+        }
+        if let Err(e) = self.fleet.shutdown() {
+            eprintln!("cscam-net: fleet shutdown flush failed: {e}");
+        }
     }
 }
 
-impl Drop for LiveSlot {
-    fn drop(&mut self) {
-        self.0.fetch_sub(1, Ordering::AcqRel);
+// -------------------------------------------------- per-connection engine
+
+/// Pull bytes off the socket while the connection wants them, advancing
+/// the codec state machine after every chunk.
+fn handle_readable(
+    c: &mut Conn,
+    cfg: &NetConfig,
+    shared: &NetShared,
+    any_parked: &mut bool,
+    draining: bool,
+    hello_serving: &ServerHello,
+    hello_busy: &ServerHello,
+) -> Verdict {
+    let mut buf = [0u8; 16 * 1024];
+    // Bounded rounds per readiness event: level-triggered polling re-fires
+    // for the remainder, so one firehose connection cannot starve the rest.
+    for _ in 0..8 {
+        if !c.wants_read(cfg) {
+            return Verdict::Alive;
+        }
+        match c.stream.read(&mut buf) {
+            Ok(0) => return Verdict::Dead,
+            Ok(n) => {
+                if matches!(c.phase, Phase::Goodbye { .. }) || draining {
+                    // goodbye/drain: the bytes are dead — swallow them so
+                    // the peer's writes cannot reset our final answer
+                } else {
+                    c.rbuf.extend_from_slice(&buf[..n]);
+                }
+                if let Verdict::Dead =
+                    drive_conn(c, cfg, shared, any_parked, draining, hello_serving, hello_busy)
+                {
+                    return Verdict::Dead;
+                }
+                if n < buf.len() {
+                    return Verdict::Alive;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Verdict::Alive,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return Verdict::Dead,
+        }
     }
+    Verdict::Alive
+}
+
+/// Advance the connection's state machine over whatever `rbuf` holds:
+/// complete the handshake, decode complete frames into jobs, arm/clear
+/// the stall clock.  Never touches the socket.
+fn drive_conn(
+    c: &mut Conn,
+    cfg: &NetConfig,
+    shared: &NetShared,
+    any_parked: &mut bool,
+    draining: bool,
+    hello_serving: &ServerHello,
+    hello_busy: &ServerHello,
+) -> Verdict {
+    let now = Instant::now();
+    loop {
+        match c.phase {
+            Phase::Goodbye { .. } => {
+                c.rbuf.clear();
+                c.rpos = 0;
+                return Verdict::Alive;
+            }
+            Phase::BusyHello { .. } => {
+                if c.rbuf.len() - c.rpos < 8 {
+                    if c.rbuf.len() > c.rpos {
+                        c.stall_deadline = Some(now + cfg.stall_budget);
+                    }
+                    return Verdict::Alive;
+                }
+                c.rpos += 8; // the peer's hello, politely consumed
+                let _ = write_server_hello(&mut c.wbuf, hello_busy);
+                c.phase = Phase::Goodbye { deadline: now + GOODBYE_BUDGET };
+                c.stall_deadline = None;
+            }
+            Phase::Handshake { .. } => {
+                if c.rbuf.len() - c.rpos < 8 {
+                    if c.rbuf.len() > c.rpos {
+                        c.stall_deadline = Some(now + cfg.stall_budget);
+                    }
+                    return Verdict::Alive;
+                }
+                let mut hello = [0u8; 8];
+                hello.copy_from_slice(&c.rbuf[c.rpos..c.rpos + 8]);
+                c.rpos += 8;
+                c.stall_deadline = None;
+                let peer_version = match parse_client_hello(&hello) {
+                    Ok(v) => v,
+                    // wrong magic: not our protocol, end it without a word
+                    Err(_) => return Verdict::Dead,
+                };
+                let _ = write_server_hello(&mut c.wbuf, hello_serving);
+                if peer_version != VERSION {
+                    // the client sees our version in the hello and gives
+                    // up too; flush it, then goodbye
+                    c.phase = Phase::Goodbye { deadline: now + GOODBYE_BUDGET };
+                } else {
+                    c.phase = Phase::Serving;
+                }
+            }
+            Phase::Serving => {
+                if draining {
+                    c.rbuf.clear();
+                    c.rpos = 0;
+                    return Verdict::Alive;
+                }
+                match parse_frames(c, cfg, shared, any_parked) {
+                    Ok(()) => {
+                        compact_rbuf(c);
+                        // a partial frame left behind arms the stall clock
+                        // (unless *we* paused the connection — then the
+                        // peer owes us nothing)
+                        if c.rbuf.len() > c.rpos && c.parked.is_none() && c.wants_read(cfg) {
+                            c.stall_deadline = Some(now + cfg.stall_budget);
+                        } else {
+                            c.stall_deadline = None;
+                        }
+                        return Verdict::Alive;
+                    }
+                    Err(msg) => {
+                        // a desynced stream cannot be trusted for framing
+                        // anymore: answer once (id 0), then hang up
+                        eprintln!("cscam-net: dropping connection: {msg}");
+                        let resp = Response::Error { code: ERR_PROTOCOL, aux: 0 };
+                        let _ = proto::write_response(&mut c.wbuf, 0, &resp);
+                        c.rbuf.clear();
+                        c.rpos = 0;
+                        c.stall_deadline = None;
+                        c.phase = Phase::Goodbye { deadline: now + GOODBYE_BUDGET };
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Decode every complete frame in `rbuf` into a worker job, respecting
+/// the multiplexing window and the write-buffer backpressure thresholds.
+/// `Err` carries the protocol-corruption message.
+fn parse_frames(
+    c: &mut Conn,
+    cfg: &NetConfig,
+    shared: &NetShared,
+    any_parked: &mut bool,
+) -> Result<(), String> {
+    loop {
+        if c.parked.is_some()
+            || c.inflight >= cfg.inflight_window
+            || c.pending_out() >= cfg.write_soft_cap
+        {
+            return Ok(());
+        }
+        let avail = c.rbuf.len() - c.rpos;
+        if avail < 4 {
+            return Ok(());
+        }
+        let len_bytes =
+            [c.rbuf[c.rpos], c.rbuf[c.rpos + 1], c.rbuf[c.rpos + 2], c.rbuf[c.rpos + 3]];
+        let len = match proto::check_frame_len(u32::from_le_bytes(len_bytes)) {
+            Ok(l) => l,
+            Err(e) => return Err(e.to_string()),
+        };
+        if avail < 4 + len {
+            return Ok(()); // resumable: the tail arrives on a later event
+        }
+        let frame_end = c.rpos + 4 + len;
+        let (id, req) = {
+            let body = &c.rbuf[c.rpos + 4..frame_end];
+            match proto::decode_frame_body(body) {
+                Ok((id, op, payload)) => match Request::decode(op, payload) {
+                    Ok(r) => (id, r),
+                    Err(e) => return Err(e.to_string()),
+                },
+                Err(e) => return Err(e.to_string()),
+            }
+        };
+        c.rpos = frame_end;
+        match shared.jobs.try_push(NetJob { conn: c.token, id, req }) {
+            Ok(()) => c.inflight += 1,
+            Err(job) => {
+                // ring full: park the frame and pause this connection
+                // until workers free a slot — backpressure, not loss
+                c.parked = Some(job);
+                *any_parked = true;
+                return Ok(());
+            }
+        }
+    }
+}
+
+fn compact_rbuf(c: &mut Conn) {
+    if c.rpos == c.rbuf.len() {
+        c.rbuf.clear();
+        c.rpos = 0;
+    } else if c.rpos > 16 * 1024 {
+        c.rbuf.drain(..c.rpos);
+        c.rpos = 0;
+    }
+}
+
+/// Write as much of `wbuf` to the socket as it will take right now.
+fn flush_wbuf(c: &mut Conn) -> std::io::Result<()> {
+    while c.wpos < c.wbuf.len() {
+        match c.stream.write(&c.wbuf[c.wpos..]) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "peer took no bytes",
+                ))
+            }
+            Ok(n) => c.wpos += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    if c.wpos == c.wbuf.len() {
+        c.wbuf.clear();
+        c.wpos = 0;
+    } else if c.wpos > 64 * 1024 {
+        c.wbuf.drain(..c.wpos);
+        c.wpos = 0;
+    }
+    Ok(())
+}
+
+/// Post-step bookkeeping shared by every path that may have changed a
+/// connection's buffers: flush, enforce the hard write bound, finish a
+/// goodbye whose answer got out, and re-register poller interest.
+fn settle_conn(poller: &Poller, c: &mut Conn, cfg: &NetConfig) -> Verdict {
+    if flush_wbuf(c).is_err() {
+        return Verdict::Dead;
+    }
+    if c.pending_out() > cfg.write_hard_cap {
+        // the peer asked for far more than it is willing to read; its
+        // responses cannot be buffered without bound
+        eprintln!("cscam-net: dropping connection: write buffer over hard cap");
+        return Verdict::Dead;
+    }
+    if matches!(c.phase, Phase::Goodbye { .. }) && c.pending_out() == 0 {
+        return Verdict::Dead; // goodbye delivered
+    }
+    let want = Interest { read: c.wants_read(cfg), write: c.pending_out() > 0 };
+    if want != c.interest
+        && poller.modify(c.stream.as_raw_fd(), c.token, want).is_ok()
+    {
+        c.interest = want;
+    }
+    Verdict::Alive
 }
 
 fn server_hello(fleet: &ShardedServerHandle, busy: bool) -> ServerHello {
     ServerHello {
         version: VERSION,
         busy,
+        multiplex: true,
         shards: fleet.shard_count() as u32,
         bank_m: fleet.bank_m() as u32,
         tag_bits: fleet.tag_bits() as u32,
     }
 }
 
-fn reject_busy(mut stream: TcpStream, hello: ServerHello) {
-    // best-effort: read the client hello so the peer's write cannot race
-    // the close, then answer busy
-    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
-    let mut peer_hello = [0u8; 8];
-    let _ = stream.read_exact(&mut peer_hello);
-    let _ = write_server_hello(&mut stream, &hello);
-    let _ = stream.flush();
-}
-
-/// How long a peer may stall without delivering a byte mid-buffer before
-/// the connection is dropped.  Wall-clock, not retry-counted: the budget
-/// must not scale with the socket's read timeout (the handshake uses a
-/// 2 s timeout, the frame loop 50 ms — a retry *count* would let a
-/// trickling handshake pin a connection slot for many minutes).
-const STALL_BUDGET: Duration = Duration::from_secs(10);
-
-/// Read exactly `buf.len()` bytes.  `Ok(false)` = idle timeout with zero
-/// bytes consumed (only when `idle_ok`); a timeout *mid-buffer* keeps
-/// waiting (a frame in flight is never abandoned half-read) until the
-/// peer has delivered nothing for [`STALL_BUDGET`] — progress resets the
-/// clock, so slow-but-alive peers survive and stalled ones cannot pin the
-/// thread or its connection slot.
-fn read_full(r: &mut impl Read, buf: &mut [u8], idle_ok: bool) -> std::io::Result<bool> {
-    use std::io::ErrorKind;
-    let mut filled = 0usize;
-    let mut stall_deadline: Option<Instant> = None;
-    while filled < buf.len() {
-        match r.read(&mut buf[filled..]) {
-            Ok(0) => {
-                return Err(std::io::Error::new(ErrorKind::UnexpectedEof, "peer closed"));
-            }
-            Ok(n) => {
-                filled += n;
-                stall_deadline = None;
-            }
-            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
-                if idle_ok && filled == 0 {
-                    return Ok(false);
-                }
-                let now = Instant::now();
-                let deadline = *stall_deadline.get_or_insert(now + STALL_BUDGET);
-                if now >= deadline {
-                    return Err(std::io::Error::new(
-                        ErrorKind::TimedOut,
-                        "peer stalled mid-frame",
-                    ));
-                }
-            }
-            Err(e) if e.kind() == ErrorKind::Interrupted => {}
-            Err(e) => return Err(e),
-        }
-    }
-    Ok(true)
-}
-
-/// One frame off a connection, tolerating idle timeouts between frames.
-enum ConnRead {
-    Idle,
-    Closed,
-    Frame(u64, Request),
-    Corrupt(String),
-}
-
-fn read_conn_frame(r: &mut impl Read) -> ConnRead {
-    let mut lenb = [0u8; 4];
-    match read_full(r, &mut lenb, true) {
-        Ok(false) => return ConnRead::Idle,
-        Ok(true) => {}
-        Err(_) => return ConnRead::Closed,
-    }
-    let len = match proto::check_frame_len(u32::from_le_bytes(lenb)) {
-        Ok(l) => l,
-        Err(e) => return ConnRead::Corrupt(e.to_string()),
-    };
-    let mut body = vec![0u8; len];
-    if !matches!(read_full(r, &mut body, false), Ok(true)) {
-        return ConnRead::Closed;
-    }
-    match proto::decode_frame_body(&body) {
-        Ok((id, op, payload)) => match Request::decode(op, payload) {
-            Ok(req) => ConnRead::Frame(id, req),
-            Err(e) => ConnRead::Corrupt(e.to_string()),
-        },
-        Err(e) => ConnRead::Corrupt(e.to_string()),
-    }
-}
-
-fn serve_conn(
-    stream: TcpStream,
-    fleet: &ShardedServerHandle,
-    cfg: &NetConfig,
-    repl: Option<&ReplRole>,
-    stop: &Arc<AtomicBool>,
-) {
-    let Ok(read_half) = stream.try_clone() else { return };
-    let mut reader = BufReader::new(read_half);
-    let mut writer = BufWriter::new(stream);
-
-    // Handshake: one 2 s window for the 8-byte client hello; wrong magic
-    // or version ends the connection before any state is touched.
-    let _ = reader.get_ref().set_read_timeout(Some(Duration::from_secs(2)));
-    let mut hello = [0u8; 8];
-    if !matches!(read_full(&mut reader, &mut hello, true), Ok(true)) {
-        return;
-    }
-    let peer_version = match parse_client_hello(&hello) {
-        Ok(v) => v,
-        Err(_) => return,
-    };
-    if write_server_hello(&mut writer, &server_hello(fleet, false)).is_err()
-        || writer.flush().is_err()
-    {
-        return;
-    }
-    if peer_version != VERSION {
-        return; // the client sees our version in the hello and gives up too
-    }
-
-    let _ = reader.get_ref().set_read_timeout(Some(cfg.read_timeout));
-    // Per-connection decode scratch: lookups run on this thread, against
-    // the banks' published snapshots, with zero shared mutable state.
-    let mut scratch = DecodeScratch::new();
-    loop {
-        if stop.load(Ordering::Acquire) {
-            return;
-        }
-        match read_conn_frame(&mut reader) {
-            ConnRead::Idle => continue,
-            ConnRead::Closed => return,
-            ConnRead::Corrupt(msg) => {
-                // a desynced stream cannot be trusted for framing anymore:
-                // answer once (id 0), then hang up
-                eprintln!("cscam-net: dropping connection: {msg}");
-                let resp = Response::Error { code: ERR_PROTOCOL, aux: 0 };
-                let _ = proto::write_response(&mut writer, 0, &resp);
-                let _ = writer.flush();
-                return;
-            }
-            ConnRead::Frame(id, req) => {
-                let is_shutdown = matches!(req, Request::Shutdown);
-                let resp = handle_request(fleet, req, &mut scratch, repl);
-                let acked = matches!(resp, Response::ShutdownAck);
-                if proto::write_response(&mut writer, id, &resp).is_err()
-                    || writer.flush().is_err()
-                {
-                    return;
-                }
-                if is_shutdown && acked {
-                    stop.store(true, Ordering::Release);
-                    return;
-                }
-            }
-        }
-    }
-}
+// ------------------------------------------------------- request handling
 
 /// Reject tags of the wrong width before they reach the router: the
 /// engines answer a mismatch with a typed `TagWidth` error, but the
 /// learned-prefix router reads fixed bit positions and would panic on a
-/// too-narrow tag — a client mistake must never take down a conn thread.
+/// too-narrow tag — a client mistake must never take down a worker.
 fn check_width(fleet: &ShardedServerHandle, tag: &crate::bits::BitVec) -> Option<EngineError> {
     let want = fleet.tag_bits();
     (tag.len() != want).then(|| EngineError::TagWidth { got: tag.len(), want })
@@ -466,9 +1080,9 @@ fn handle_request(
             }
         }
         Request::Lookup { tag } => {
-            // direct read: this thread snapshots the owning bank's state
-            // and searches in place — no channel hop, no queue, identical
-            // bits to the in-process path
+            // direct read: this worker snapshots the owning bank's state
+            // and searches in place — no queue admission, identical bits
+            // to the in-process path
             match fleet.lookup_direct(&tag, scratch) {
                 Ok(o) => Response::Lookup(Box::new(o)),
                 Err(e) => proto::error_response(&e),
@@ -492,8 +1106,8 @@ fn handle_request(
         }
         Request::Shutdown => {
             // the canonical drain-then-flush so the ack means "all accepted
-            // work is done and durable"; the caller flips the stop flag
-            // after writing the ack.  A failed flush must NOT ack — the
+            // work is done and durable"; the worker flips the stop flag
+            // after a successful ack.  A failed flush must NOT ack — the
             // client would believe acked writes are on disk when they are
             // not — so it answers ERR_PERSIST and the server keeps serving
             // (the operator can retry or investigate).

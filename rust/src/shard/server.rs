@@ -360,7 +360,7 @@ impl ShardedServerHandle {
     /// Run one lookup entirely *on the calling thread* against the owning
     /// bank's published search state (broadcast: against every bank's,
     /// gather-merged) — no queue, no channel hop, no engine thread.  This
-    /// is the TCP connection threads' read path; results are bit-identical
+    /// is the net worker pool's read path; results are bit-identical
     /// to [`Self::lookup`].  The caller owns the scratch (one per thread);
     /// bank geometry is uniform, so one scratch serves the whole fleet.
     pub fn lookup_direct(

@@ -1,45 +1,51 @@
 //! The concurrency kernel shared by the serving layers, extracted behind
-//! one auditable facade: the MPMC work queue the reader pool drains, the
-//! RCU publish slot lookups snapshot from, and the admission gauge that
-//! sheds load — plus the poison-recovery lock helpers every serving path
-//! uses instead of `.unwrap()` on a lock result.
+//! one auditable facade: the lock-free MPMC batching channel the reader
+//! pools and the network reactor drain, the RCU publish slot lookups
+//! snapshot from, and the admission gauge that sheds load — plus the
+//! poison-recovery lock helpers every serving path uses instead of
+//! `.unwrap()` on a lock result.
 //!
 //! Two properties of this module are enforced elsewhere in the repo:
 //!
 //! * **loom-swappable primitives** — everything here builds against either
 //!   `std::sync` (default) or `loom::sync` (cargo feature `loom`), so the
 //!   model-checking battery in `rust/tests/loom_models.rs` can exhaustively
-//!   interleave the queue/publish/drain protocols with the *same* code the
+//!   interleave the channel/publish/drain protocols with the *same* code the
 //!   production threads run, not a re-implementation that could drift.
 //! * **no panic on poison** — a reader thread that panics while holding a
-//!   stripe or queue lock must not wedge the whole bank: every lock/wait in
+//!   stripe or parking lock must not wedge the whole bank: every lock/wait in
 //!   this module recovers the guard with [`lock_recover`]/[`PoisonError::
 //!   into_inner`].  The invariants the guards protect are documented at
 //!   each recovery site; `cargo xtask lint` bans bare `.unwrap()`/`.expect`
 //!   on lock results in the serving modules that build on this facade.
 
 #[cfg(feature = "loom")]
-pub use loom::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+pub use loom::sync::atomic::{fence, AtomicBool, AtomicUsize, Ordering};
 #[cfg(feature = "loom")]
 pub use loom::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
 #[cfg(not(feature = "loom"))]
-pub use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+pub use std::sync::atomic::{fence, AtomicBool, AtomicUsize, Ordering};
 #[cfg(not(feature = "loom"))]
 pub use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
-use std::collections::VecDeque;
+use std::mem::MaybeUninit;
 use std::sync::Arc;
 use std::sync::PoisonError;
+
+#[cfg(feature = "loom")]
+use loom::thread::yield_now;
+#[cfg(not(feature = "loom"))]
+use std::thread::yield_now;
 
 /// Lock a mutex, recovering the guard if a previous holder panicked.
 ///
 /// Sound only when every critical section leaves the protected value in a
 /// consistent state at every panic point — which is the standing rule for
-/// this facade: critical sections are a few field updates (queue push/pop,
-/// counter bumps, metric folds) with no mid-section invariant windows, so
-/// the data a poisoned guard hands back is never torn.  Recovering keeps
-/// one panicked reader from turning every later lock on the bank into a
-/// panic cascade.
+/// this facade: critical sections are a few field updates (parking-lot
+/// bookkeeping, counter bumps, metric folds) with no mid-section invariant
+/// windows, so the data a poisoned guard hands back is never torn.
+/// Recovering keeps one panicked reader from turning every later lock on
+/// the bank into a panic cascade.
 pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
 }
@@ -102,11 +108,11 @@ impl<T> PublishSlot<T> {
 /// Orderings: [`Self::retire`] releases and [`Self::load`] acquires, so a
 /// thread that observes the gauge at zero also observes the effects of
 /// serving every retired job.  The drain barrier itself synchronizes
-/// through the work queue's mutex, so the gauge does not carry the
-/// barrier — the Acquire/Release pair is what makes the gauge's *value*
-/// trustworthy on its own, without reasoning about which lock happened to
-/// be held nearby (this replaced a set of `Ordering::Relaxed` uses whose
-/// soundness rested on exactly that coupling).
+/// through the channel's completion counter, so the gauge does not carry
+/// the barrier — the Acquire/Release pair is what makes the gauge's
+/// *value* trustworthy on its own, without reasoning about which lock
+/// happened to be held nearby (this replaced a set of `Ordering::Relaxed`
+/// uses whose soundness rested on exactly that coupling).
 pub struct AdmissionGauge {
     depth: AtomicUsize,
 }
@@ -142,120 +148,383 @@ impl Default for AdmissionGauge {
     }
 }
 
-// ----------------------------------------------------------- work queue
+// ------------------------------------------------- MPMC batching channel
 
-struct WorkQueueInner<T> {
-    jobs: VecDeque<T>,
-    /// Live sender handles; workers exit once this hits zero and the
-    /// queue is empty.
-    senders: usize,
-    /// Jobs ever pushed (monotonic; drain-barrier bookkeeping).
-    enqueued: u64,
-    /// Jobs fully served (monotonic; a drain barrier waits for
-    /// `completed` to reach the `enqueued` it observed).
-    completed: u64,
+/// Per-slot cell.  Under loom this is loom's instrumented `UnsafeCell`
+/// (so the model checker tracks the unsynchronized slot writes); the
+/// default build is a zero-cost wrapper over `std::cell::UnsafeCell` with
+/// the same closure-based access surface.
+#[cfg(feature = "loom")]
+use loom::cell::UnsafeCell as SlotCell;
+
+#[cfg(not(feature = "loom"))]
+struct SlotCell<T>(std::cell::UnsafeCell<T>);
+
+#[cfg(not(feature = "loom"))]
+impl<T> SlotCell<T> {
+    fn new(v: T) -> Self {
+        SlotCell(std::cell::UnsafeCell::new(v))
+    }
+    fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+        f(self.0.get())
+    }
 }
 
-/// A plain Mutex+Condvar MPMC queue with a completion barrier (std mpsc
-/// receivers cannot be shared across worker threads).  This is the reader
-/// pool's queue, extracted so the loom battery can interleave
-/// push/pop/complete/barrier exhaustively.
+struct Slot<T> {
+    /// Vyukov sequence number.  `seq == pos` means the slot is free for
+    /// the producer claiming position `pos`; `seq == pos + 1` means the
+    /// value for `pos` is published and a consumer may take it;
+    /// `seq == pos + capacity` means the consumer is done and the slot is
+    /// free for the producer claiming `pos + capacity`.
+    seq: AtomicUsize,
+    val: SlotCell<MaybeUninit<T>>,
+}
+
+/// A bounded lock-free MPMC channel with batched consumption and a
+/// completion barrier — the serving-path replacement for the old
+/// Mutex+Condvar `WorkQueue`.
 ///
-/// Lifecycle: the queue starts with ONE sender registered (the creator);
-/// [`Self::add_sender`]/[`Self::remove_sender`] track clones.  [`Self::pop`]
-/// blocks while senders remain, and returns `None` only once every sender
-/// is gone *and* the queue ran dry — queued jobs are always finished first.
-pub struct WorkQueue<T> {
-    inner: Mutex<WorkQueueInner<T>>,
+/// * **Lock-free hot path.**  [`Self::try_push`] and the consume fast
+///   path are a Vyukov array ring: producers claim a position with a CAS
+///   on `tail`, write the slot, and publish with a release store on the
+///   slot's sequence counter; consumers mirror it on `head`.  No mutex is
+///   touched while the channel is non-empty.
+/// * **Batched pop.**  [`Self::pop_batch`] drains up to `max` jobs in one
+///   call so a reader-pool thread pays the synchronization cost once per
+///   *batch*, not once per job.
+/// * **Hybrid parking.**  Only an *empty* channel parks consumers, on a
+///   Mutex+Condvar eventcount; producers take the lock only when a
+///   consumer advertised it is asleep, so a busy channel never touches
+///   the mutex.  The wakeup protocol (sleeper registration → SeqCst fence
+///   → recheck, against publish → SeqCst fence → sleeper check) is
+///   exhaustively interleaved by the loom battery.
+/// * **`Busy` shedding stays upstream.**  [`Self::try_push`] hands the
+///   job back when the ring is full; the admission layers above
+///   ([`AdmissionGauge`] in the coordinator, reactor backpressure in
+///   `net::server`) decide whether that becomes a typed `Busy` or a
+///   stalled connection.  [`Self::push`] spins only for the transient
+///   overshoot those layers permit.
+///
+/// Lifecycle matches the old queue: the channel starts with ONE sender
+/// registered (the creator); [`Self::add_sender`]/[`Self::remove_sender`]
+/// track clones.  Consumers block while senders remain and observe
+/// end-of-stream only once every sender is gone *and* the ring ran dry —
+/// queued jobs are always finished first.
+pub struct BatchChannel<T> {
+    slots: Box<[Slot<T>]>,
+    mask: usize,
+    /// Next position a producer will claim.
+    tail: AtomicUsize,
+    /// Next position a consumer will claim.
+    head: AtomicUsize,
+    /// Live sender handles; consumers exit once this hits zero and the
+    /// ring is empty.
+    senders: AtomicUsize,
+    /// Jobs ever published (monotonic; drain-barrier bookkeeping).
+    enqueued: AtomicUsize,
+    /// Jobs fully served via [`Self::job_done`] (monotonic; a drain
+    /// barrier waits for `completed` to reach the `enqueued` it observed).
+    completed: AtomicUsize,
+    /// Consumers currently inside the parking protocol.
+    sleepers: AtomicUsize,
+    /// Barrier callers currently parked on `drained`.
+    barrier_waiters: AtomicUsize,
+    /// Parking lot for empty-channel consumers (guards nothing; the
+    /// condvar needs a mutex).
+    park: Mutex<()>,
     takeable: Condvar,
+    /// Parking lot for [`Self::barrier`] waiters.
+    done: Mutex<()>,
     drained: Condvar,
 }
 
-impl<T> WorkQueue<T> {
-    pub fn new() -> Self {
-        WorkQueue {
-            inner: Mutex::new(WorkQueueInner {
-                jobs: VecDeque::new(),
-                senders: 1,
-                enqueued: 0,
-                completed: 0,
-            }),
+// SAFETY: the ring hands each `T` from exactly one producer to exactly
+// one consumer (the Vyukov sequence protocol makes slot claims exclusive
+// and the publish/consume stores are Release/Acquire paired), so sharing
+// the channel across threads only ever moves values between threads —
+// `T: Send` is exactly the bound that makes that sound.
+unsafe impl<T: Send> Send for BatchChannel<T> {}
+// SAFETY: see the `Send` rationale — all shared mutable state is behind
+// atomics or the slot protocol.
+unsafe impl<T: Send> Sync for BatchChannel<T> {}
+
+impl<T> BatchChannel<T> {
+    /// A channel whose ring holds at least `capacity` jobs (rounded up to
+    /// the next power of two, minimum 2).
+    pub fn with_capacity(capacity: usize) -> Self {
+        let cap = capacity.max(2).next_power_of_two();
+        let slots = (0..cap)
+            .map(|i| Slot { seq: AtomicUsize::new(i), val: SlotCell::new(MaybeUninit::uninit()) })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        BatchChannel {
+            slots,
+            mask: cap - 1,
+            tail: AtomicUsize::new(0),
+            head: AtomicUsize::new(0),
+            senders: AtomicUsize::new(1),
+            enqueued: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            sleepers: AtomicUsize::new(0),
+            barrier_waiters: AtomicUsize::new(0),
+            park: Mutex::new(()),
             takeable: Condvar::new(),
+            done: Mutex::new(()),
             drained: Condvar::new(),
         }
     }
 
-    pub fn push(&self, job: T) {
-        let mut q = lock_recover(&self.inner);
-        q.jobs.push_back(job);
-        q.enqueued += 1;
-        self.takeable.notify_one();
+    /// Ring capacity (always a power of two).
+    pub fn capacity(&self) -> usize {
+        self.mask + 1
     }
 
-    /// Next job, blocking; `None` once every sender is gone and the queue
-    /// ran dry (worker shutdown).
-    pub fn pop(&self) -> Option<T> {
-        let mut q = lock_recover(&self.inner);
+    /// Publish one job, or hand it back if the ring is full.  Lock-free;
+    /// this is the reactor's shed/backpressure probe.
+    pub fn try_push(&self, job: T) -> Result<(), T> {
+        // lint:allow(relaxed: the CAS on `tail` only arbitrates which producer
+        // owns a position; publication ordering is carried by the Release
+        // store on the slot's `seq` below, and the Acquire load of `seq`
+        // here orders this producer after the consumer that freed the slot)
+        let mut tail = self.tail.load(Ordering::Relaxed);
         loop {
-            if let Some(j) = q.jobs.pop_front() {
-                return Some(j);
+            let slot = &self.slots[tail & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let dif = seq as isize - tail as isize;
+            if dif == 0 {
+                // lint:allow(relaxed: claim-only CAS, see rationale above —
+                // the slot write is ordered by the seq Release publish)
+                match self.tail.compare_exchange_weak(
+                    tail,
+                    tail.wrapping_add(1),
+                    Ordering::Relaxed, // lint:allow(relaxed: claim-only, see above)
+                    Ordering::Relaxed, // lint:allow(relaxed: failure re-reads tail)
+                ) {
+                    Ok(_) => {
+                        slot.val.with_mut(|p| {
+                            // SAFETY: the successful CAS on `tail` makes this
+                            // producer the exclusive owner of the slot until
+                            // the seq store below publishes it.
+                            unsafe { (*p).write(job) };
+                        });
+                        slot.seq.store(tail.wrapping_add(1), Ordering::Release);
+                        self.enqueued.fetch_add(1, Ordering::Release);
+                        // Eventcount handshake: publish, fence, then check
+                        // for sleepers.  Pairs with the register-fence-
+                        // recheck sequence in `pop_batch`; the two SeqCst
+                        // fences are totally ordered, so either this load
+                        // sees the sleeper (and we wake it under the lock)
+                        // or the sleeper's recheck sees our publish.
+                        fence(Ordering::SeqCst);
+                        // lint:allow(relaxed: ordered by the SeqCst fence
+                        // directly above — see the eventcount comment)
+                        if self.sleepers.load(Ordering::Relaxed) > 0 {
+                            // Empty critical section: taking the parking
+                            // lock orders this notify against a sleeper
+                            // that registered but has not yet waited.
+                            drop(lock_recover(&self.park));
+                            self.takeable.notify_all();
+                        }
+                        return Ok(());
+                    }
+                    Err(t) => tail = t,
+                }
+            } else if dif < 0 {
+                return Err(job); // full: the consumer lap has not freed this slot yet
+            } else {
+                // lint:allow(relaxed: re-read after losing the claim race;
+                // same claim-only rationale as the load above)
+                tail = self.tail.load(Ordering::Relaxed);
             }
-            if q.senders == 0 {
-                return None;
+        }
+    }
+
+    /// Publish one job, spinning while the ring is momentarily full.
+    ///
+    /// Callers bound ring occupancy externally (the coordinator admits at
+    /// most its queue-capacity tags before pushing, and the ring is sized
+    /// to that cap), so a full ring here is a transient overshoot from a
+    /// racing admit — a brief yield loop, not a parking lot, is the right
+    /// tool.
+    pub fn push(&self, job: T) {
+        let mut job = job;
+        loop {
+            match self.try_push(job) {
+                Ok(()) => return,
+                Err(back) => {
+                    job = back;
+                    yield_now();
+                }
             }
-            q = self.takeable.wait(q).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Take one published job if any is ready.  Lock-free.
+    pub fn try_pop(&self) -> Option<T> {
+        // lint:allow(relaxed: claim-only cursor load — the value read is
+        // ordered by the Acquire load of the slot's `seq`, which pairs with
+        // the producer's Release publish)
+        let mut head = self.head.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[head & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let dif = seq as isize - (head.wrapping_add(1)) as isize;
+            if dif == 0 {
+                // lint:allow(relaxed: claim-only CAS on the consumer cursor;
+                // the slot read is ordered by the seq Acquire above and the
+                // free-for-reuse store below is Release)
+                match self.head.compare_exchange_weak(
+                    head,
+                    head.wrapping_add(1),
+                    Ordering::Relaxed, // lint:allow(relaxed: claim-only, see above)
+                    Ordering::Relaxed, // lint:allow(relaxed: failure re-reads head)
+                ) {
+                    Ok(_) => {
+                        let job = slot.val.with_mut(|p| {
+                            // SAFETY: the successful CAS on `head` makes this
+                            // consumer the exclusive owner of the published
+                            // value; the producer wrote it before its seq
+                            // Release, which our seq Acquire observed.
+                            unsafe { (*p).assume_init_read() }
+                        });
+                        slot.seq.store(head.wrapping_add(self.mask + 1), Ordering::Release);
+                        return Some(job);
+                    }
+                    Err(h) => head = h,
+                }
+            } else if dif < 0 {
+                return None; // nothing published at this position yet
+            } else {
+                // lint:allow(relaxed: re-read after losing the claim race;
+                // same claim-only rationale as the load above)
+                head = self.head.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Drain up to `max` ready jobs into `out` without blocking; returns
+    /// how many were taken.
+    pub fn try_pop_batch(&self, max: usize, out: &mut Vec<T>) -> usize {
+        let mut taken = 0;
+        while taken < max {
+            match self.try_pop() {
+                Some(j) => {
+                    out.push(j);
+                    taken += 1;
+                }
+                None => break,
+            }
+        }
+        taken
+    }
+
+    /// Blocking batch take: up to `max` jobs, at least one — unless every
+    /// sender is gone and the ring ran dry, which returns 0 (worker
+    /// shutdown).  The parking protocol is the eventcount described on
+    /// the type.
+    pub fn pop_batch(&self, max: usize, out: &mut Vec<T>) -> usize {
+        loop {
+            let n = self.try_pop_batch(max, out);
+            if n > 0 {
+                return n;
+            }
+            // Slow path: register as a sleeper, then recheck before
+            // actually sleeping.  The guard is held across registration,
+            // recheck and wait, so a producer that saw `sleepers > 0`
+            // cannot complete its locked notify between our recheck and
+            // our wait.
+            let guard = lock_recover(&self.park);
+            self.sleepers.fetch_add(1, Ordering::SeqCst);
+            fence(Ordering::SeqCst);
+            let n = self.try_pop_batch(max, out);
+            if n > 0 || self.senders.load(Ordering::SeqCst) == 0 {
+                self.sleepers.fetch_sub(1, Ordering::SeqCst);
+                return n;
+            }
+            let guard = self.takeable.wait(guard).unwrap_or_else(PoisonError::into_inner);
+            self.sleepers.fetch_sub(1, Ordering::SeqCst);
+            drop(guard);
+        }
+    }
+
+    /// Blocking single take; `None` once every sender is gone and the
+    /// ring ran dry (worker shutdown).
+    pub fn pop(&self) -> Option<T> {
+        let mut one = Vec::with_capacity(1);
+        match self.pop_batch(1, &mut one) {
+            0 => None,
+            _ => one.pop(),
         }
     }
 
     /// Mark one popped job fully served (wakes barrier waiters).  Prefer
     /// [`JobGuard`], which calls this even if serving the job panics.
     pub fn job_done(&self) {
-        let mut q = lock_recover(&self.inner);
-        q.completed += 1;
-        self.drained.notify_all();
+        self.completed.fetch_add(1, Ordering::Release);
+        // Same eventcount handshake as the push/pop pair, against the
+        // barrier's register-fence-recheck.
+        fence(Ordering::SeqCst);
+        // lint:allow(relaxed: ordered by the SeqCst fence directly above)
+        if self.barrier_waiters.load(Ordering::Relaxed) > 0 {
+            drop(lock_recover(&self.done));
+            self.drained.notify_all();
+        }
     }
 
-    /// Drain *barrier*: block until every job enqueued before this call
+    /// Drain *barrier*: block until every job published before this call
     /// has been served.  Deliberately NOT "wait until idle" — under a
-    /// sustained stream from other senders the queue may never be empty,
+    /// sustained stream from other senders the ring may never be empty,
     /// and a barrier must still complete in bounded time.
     pub fn barrier(&self) {
-        let mut q = lock_recover(&self.inner);
-        let target = q.enqueued;
-        while q.completed < target {
-            q = self.drained.wait(q).unwrap_or_else(PoisonError::into_inner);
+        let target = self.enqueued.load(Ordering::Acquire);
+        if self.completed.load(Ordering::Acquire) >= target {
+            return;
         }
+        let mut guard = lock_recover(&self.done);
+        self.barrier_waiters.fetch_add(1, Ordering::SeqCst);
+        fence(Ordering::SeqCst);
+        while self.completed.load(Ordering::Acquire) < target {
+            guard = self.drained.wait(guard).unwrap_or_else(PoisonError::into_inner);
+        }
+        self.barrier_waiters.fetch_sub(1, Ordering::SeqCst);
+        drop(guard);
     }
 
     /// Register one more sender (a handle clone).
     pub fn add_sender(&self) {
-        lock_recover(&self.inner).senders += 1;
+        self.senders.fetch_add(1, Ordering::SeqCst);
     }
 
-    /// Unregister a sender; at zero, every parked worker is woken so it
-    /// can drain the queue and exit.
+    /// Unregister a sender; at zero, every parked consumer is woken so it
+    /// can drain the ring and exit.
     pub fn remove_sender(&self) {
-        let mut q = lock_recover(&self.inner);
-        q.senders -= 1;
-        if q.senders == 0 {
+        if self.senders.fetch_sub(1, Ordering::SeqCst) == 1 {
+            drop(lock_recover(&self.park));
             self.takeable.notify_all();
         }
     }
 }
 
-impl<T> Default for WorkQueue<T> {
-    fn default() -> Self {
-        Self::new()
+impl<T> Drop for BatchChannel<T> {
+    fn drop(&mut self) {
+        // Run destructors for any jobs still in the ring.
+        while self.try_pop().is_some() {}
+    }
+}
+
+impl<T> std::fmt::Debug for BatchChannel<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BatchChannel").field("capacity", &(self.mask + 1)).finish_non_exhaustive()
     }
 }
 
 /// Marks a dequeued job finished even if serving it panics — a job that
 /// never counts as completed would wedge every later
-/// [`WorkQueue::barrier`].
-pub struct JobGuard<'a, T>(&'a WorkQueue<T>);
+/// [`BatchChannel::barrier`].
+pub struct JobGuard<'a, T>(&'a BatchChannel<T>);
 
 impl<'a, T> JobGuard<'a, T> {
-    pub fn new(queue: &'a WorkQueue<T>) -> Self {
+    pub fn new(queue: &'a BatchChannel<T>) -> Self {
         JobGuard(queue)
     }
 }
@@ -324,8 +593,8 @@ mod tests {
     }
 
     #[test]
-    fn work_queue_serves_fifo_and_shuts_down() {
-        let q = Arc::new(WorkQueue::new());
+    fn channel_serves_fifo_and_shuts_down() {
+        let q = Arc::new(BatchChannel::with_capacity(8));
         q.push(1u32);
         q.push(2);
         assert_eq!(q.pop(), Some(1));
@@ -333,12 +602,12 @@ mod tests {
         assert_eq!(q.pop(), Some(2));
         q.job_done();
         q.remove_sender();
-        assert_eq!(q.pop(), None, "no senders + empty queue = shutdown");
+        assert_eq!(q.pop(), None, "no senders + empty ring = shutdown");
     }
 
     #[test]
     fn queued_jobs_are_served_before_shutdown() {
-        let q = Arc::new(WorkQueue::new());
+        let q = Arc::new(BatchChannel::with_capacity(8));
         q.push(1u32);
         q.remove_sender();
         assert_eq!(q.pop(), Some(1), "queued jobs outlive the last sender");
@@ -347,8 +616,110 @@ mod tests {
     }
 
     #[test]
+    fn try_push_hands_the_job_back_when_full() {
+        let q: BatchChannel<u32> = BatchChannel::with_capacity(2);
+        assert_eq!(q.capacity(), 2);
+        assert_eq!(q.try_push(1), Ok(()));
+        assert_eq!(q.try_push(2), Ok(()));
+        assert_eq!(q.try_push(3), Err(3), "a full ring sheds instead of blocking");
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.try_push(3), Ok(()), "consuming frees the slot for reuse");
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn pop_batch_drains_in_one_call() {
+        let q: BatchChannel<u32> = BatchChannel::with_capacity(16);
+        for i in 0..10 {
+            q.push(i);
+        }
+        let mut out = Vec::new();
+        assert_eq!(q.pop_batch(4, &mut out), 4);
+        assert_eq!(out, vec![0, 1, 2, 3]);
+        assert_eq!(q.pop_batch(16, &mut out), 6, "a batch takes at most what is ready");
+        assert_eq!(out, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn mpmc_delivers_every_job_exactly_once() {
+        const PRODUCERS: usize = 4;
+        const CONSUMERS: usize = 4;
+        const PER_PRODUCER: usize = 2_000;
+        let q = Arc::new(BatchChannel::with_capacity(64));
+        let consumers: Vec<_> = (0..CONSUMERS)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    let mut batch = Vec::new();
+                    loop {
+                        batch.clear();
+                        if q.pop_batch(32, &mut batch) == 0 {
+                            break;
+                        }
+                        for &j in &batch {
+                            q.job_done();
+                            got.push(j);
+                        }
+                    }
+                    got
+                })
+            })
+            .collect();
+        let producers: Vec<_> = (0..PRODUCERS)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                q.add_sender();
+                std::thread::spawn(move || {
+                    for i in 0..PER_PRODUCER {
+                        q.push(p * PER_PRODUCER + i);
+                        if i + 1 == PER_PRODUCER {
+                            q.remove_sender();
+                        }
+                    }
+                })
+            })
+            .collect();
+        q.remove_sender(); // the creator's handle
+        for p in producers {
+            p.join().unwrap();
+        }
+        let mut all: Vec<usize> = Vec::new();
+        for c in consumers {
+            all.extend(c.join().unwrap());
+        }
+        all.sort_unstable();
+        assert_eq!(all, (0..PRODUCERS * PER_PRODUCER).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fifo_per_producer_survives_contention() {
+        let q = Arc::new(BatchChannel::with_capacity(8));
+        let producer = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                for i in 0..1_000u32 {
+                    q.push(i);
+                }
+                q.remove_sender();
+            })
+        };
+        let mut last = None;
+        while let Some(v) = q.pop() {
+            q.job_done();
+            if let Some(prev) = last {
+                assert!(v > prev, "single-producer stream reordered: {prev} then {v}");
+            }
+            last = Some(v);
+        }
+        producer.join().unwrap();
+        assert_eq!(last, Some(999));
+    }
+
+    #[test]
     fn barrier_waits_for_prior_jobs_only() {
-        let q = Arc::new(WorkQueue::new());
+        let q = Arc::new(BatchChannel::with_capacity(8));
         q.push(10u32);
         q.push(11);
         let worker = {
@@ -362,14 +733,14 @@ mod tests {
         q.barrier(); // must return once both queued jobs completed
         q.remove_sender();
         worker.join().unwrap();
-        q.add_sender(); // barrier on an idle queue returns immediately
+        q.add_sender(); // barrier on an idle channel returns immediately
         q.barrier();
         q.remove_sender();
     }
 
     #[test]
     fn job_guard_completes_on_panic() {
-        let q = Arc::new(WorkQueue::new());
+        let q = Arc::new(BatchChannel::with_capacity(8));
         q.push(1u32);
         let q2 = Arc::clone(&q);
         let _ = std::thread::spawn(move || {
@@ -379,5 +750,21 @@ mod tests {
         })
         .join();
         q.barrier(); // would hang forever if the panicked job never completed
+    }
+
+    #[test]
+    fn drop_runs_destructors_for_undelivered_jobs() {
+        let flag = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        struct Probe(Arc<std::sync::atomic::AtomicUsize>);
+        impl Drop for Probe {
+            fn drop(&mut self) {
+                self.0.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            }
+        }
+        let q = BatchChannel::with_capacity(4);
+        q.push(Probe(Arc::clone(&flag)));
+        q.push(Probe(Arc::clone(&flag)));
+        drop(q);
+        assert_eq!(flag.load(std::sync::atomic::Ordering::SeqCst), 2);
     }
 }

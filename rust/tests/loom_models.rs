@@ -2,12 +2,17 @@
 //!
 //! `util::sync` is the only module in the tree that owns raw
 //! synchronization: the `PublishSlot` RCU swap that `SharedSearch`
-//! readers snapshot, the MPMC `WorkQueue` the shard servers drain, and
-//! the `AdmissionGauge` the coordinator uses to decide when a drain has
-//! settled.  These models run those primitives under loom, which
-//! exhaustively permutes every thread interleaving the memory model
-//! allows — including the weak-ordering reorderings a real machine only
-//! exhibits under load.
+//! readers snapshot, the lock-free MPMC `BatchChannel` the reader pools
+//! and the net reactor's worker pool drain, and the `AdmissionGauge` the
+//! coordinator uses to decide when a drain has settled.  These models run
+//! those primitives under loom, which exhaustively permutes every thread
+//! interleaving the memory model allows — including the weak-ordering
+//! reorderings a real machine only exhibits under load.
+//!
+//! For the channel that means the properties the serving path leans on:
+//! exactly-once delivery under racing consumers, FIFO per producer,
+//! shutdown draining the backlog instead of dropping it, and the
+//! completion barrier observing the worker's side effects.
 //!
 //! Compiled only with the `loom` feature, which swaps the facade onto
 //! loom's instrumented primitives:
@@ -25,7 +30,9 @@
 
 use std::sync::Arc;
 
-use cscam::util::sync::{AdmissionGauge, AtomicUsize, JobGuard, Ordering, PublishSlot, WorkQueue};
+use cscam::util::sync::{
+    AdmissionGauge, AtomicUsize, BatchChannel, JobGuard, Ordering, PublishSlot,
+};
 use loom::thread;
 
 /// A snapshot never observes a half-published value, and snapshots are
@@ -57,12 +64,11 @@ fn publish_slot_snapshots_are_atomic_and_monotonic() {
     });
 }
 
-/// The satellite fix under test: `AdmissionGauge` retires with Release
-/// and loads with Acquire, so a reader that observes depth zero also
-/// observes every write the retiring worker made before `retire()`.
-/// With the original Relaxed orderings this model fails: loom finds the
-/// interleaving where depth reads zero but the payload store has not
-/// yet become visible.
+/// `AdmissionGauge` retires with Release and loads with Acquire, so a
+/// reader that observes depth zero also observes every write the
+/// retiring worker made before `retire()`.  With Relaxed orderings this
+/// model fails: loom finds the interleaving where depth reads zero but
+/// the payload store has not yet become visible.
 #[test]
 fn admission_gauge_zero_publishes_the_workers_writes() {
     loom::model(|| {
@@ -90,30 +96,38 @@ fn admission_gauge_zero_publishes_the_workers_writes() {
     });
 }
 
-/// Two workers racing on the queue serve each job exactly once, and the
-/// sender-count shutdown protocol wakes both of them: neither worker
-/// deadlocks in `pop()` after the last sender detaches, whether the
-/// detach lands before, between, or after the pops.
+/// Two workers racing on the ring with batched pops serve each job
+/// exactly once, and the sender-count shutdown protocol wakes both of
+/// them: neither worker deadlocks in `pop_batch()` after the last sender
+/// detaches, whether the detach lands before, between, or after the
+/// pops.  This is the reactor's worker-pool loop in miniature.
 #[test]
-fn work_queue_serves_every_job_exactly_once() {
+fn batch_channel_serves_every_job_exactly_once() {
     loom::model(|| {
-        let queue = Arc::new(WorkQueue::new());
+        let chan = Arc::new(BatchChannel::with_capacity(4));
         let served = Arc::new(AtomicUsize::new(0));
-        queue.push(1u32);
-        queue.push(2u32);
+        chan.push(1u32);
+        chan.push(2u32);
         let workers: Vec<_> = (0..2)
             .map(|_| {
-                let queue = Arc::clone(&queue);
+                let chan = Arc::clone(&chan);
                 let served = Arc::clone(&served);
                 thread::spawn(move || {
-                    while let Some(_job) = queue.pop() {
-                        let _done = JobGuard::new(&queue);
-                        served.fetch_add(1, Ordering::AcqRel);
+                    let mut batch = Vec::new();
+                    loop {
+                        batch.clear();
+                        if chan.pop_batch(2, &mut batch) == 0 {
+                            return;
+                        }
+                        for _job in batch.drain(..) {
+                            let _done = JobGuard::new(&chan);
+                            served.fetch_add(1, Ordering::AcqRel);
+                        }
                     }
                 })
             })
             .collect();
-        queue.remove_sender();
+        chan.remove_sender();
         for worker in workers {
             worker.join().expect("worker panicked");
         }
@@ -121,65 +135,107 @@ fn work_queue_serves_every_job_exactly_once() {
     });
 }
 
+/// Values pushed by one producer are consumed in that producer's push
+/// order even while a second producer interleaves with it — the property
+/// that keeps one connection's requests ordered into the worker pool
+/// while many connections share the ring.  Also proves shutdown-drain:
+/// the consumer sees every value before end-of-stream.
+#[test]
+fn batch_channel_is_fifo_per_producer_under_contention() {
+    loom::model(|| {
+        let chan = Arc::new(BatchChannel::with_capacity(4));
+        let producers: Vec<_> = (0..2u32)
+            .map(|p| {
+                chan.add_sender();
+                let chan = Arc::clone(&chan);
+                thread::spawn(move || {
+                    let base = (p + 1) * 10;
+                    chan.push(base + 1);
+                    chan.push(base + 2);
+                    chan.remove_sender();
+                })
+            })
+            .collect();
+        chan.remove_sender(); // the creator's handle; producers hold the rest
+        let mut last = [0u32; 2];
+        let mut total = 0;
+        while let Some(v) = chan.pop() {
+            chan.job_done();
+            let p = (v / 10) as usize - 1;
+            assert!(
+                v % 10 > last[p] % 10,
+                "producer {p} reordered: saw {v} after {}",
+                last[p]
+            );
+            last[p] = v;
+            total += 1;
+        }
+        assert_eq!(total, 4, "shutdown dropped part of the backlog");
+        for producer in producers {
+            producer.join().expect("producer panicked");
+        }
+    });
+}
+
 /// A single consumer drains jobs in push order, and jobs already queued
 /// survive the last sender detaching — shutdown means "no more work",
 /// never "drop the backlog".
 #[test]
-fn work_queue_is_fifo_and_keeps_the_backlog_through_shutdown() {
+fn batch_channel_is_fifo_and_keeps_the_backlog_through_shutdown() {
     loom::model(|| {
-        let queue = Arc::new(WorkQueue::new());
-        queue.push(1u32);
-        queue.push(2u32);
+        let chan = Arc::new(BatchChannel::with_capacity(4));
+        chan.push(1u32);
+        chan.push(2u32);
         let consumer = {
-            let queue = Arc::clone(&queue);
+            let chan = Arc::clone(&chan);
             thread::spawn(move || {
-                let first = queue.pop();
-                queue.job_done();
-                let second = queue.pop();
-                queue.job_done();
-                let third = queue.pop();
+                let first = chan.pop();
+                chan.job_done();
+                let second = chan.pop();
+                chan.job_done();
+                let third = chan.pop();
                 (first, second, third)
             })
         };
-        queue.remove_sender();
+        chan.remove_sender();
         let order = consumer.join().expect("consumer panicked");
         assert_eq!(
             order,
             (Some(1), Some(2), None),
-            "queue reordered or dropped the backlog"
+            "channel reordered or dropped the backlog"
         );
     });
 }
 
 /// `barrier()` returns only after every job enqueued before the call
-/// has been marked done — and the mutex hand-off inside `job_done()`
-/// makes the worker's side effects visible to the thread that was
+/// has been marked done — and the completion protocol's SeqCst fences
+/// make the worker's side effects visible to the thread that was
 /// waiting, in every interleaving.
 #[test]
 fn barrier_waits_for_prior_jobs_and_sees_their_effects() {
     loom::model(|| {
-        let queue = Arc::new(WorkQueue::new());
+        let chan = Arc::new(BatchChannel::with_capacity(4));
         let effect = Arc::new(AtomicUsize::new(0));
-        queue.push(7u32);
+        chan.push(7u32);
         let worker = {
-            let queue = Arc::clone(&queue);
+            let chan = Arc::clone(&chan);
             let effect = Arc::clone(&effect);
             thread::spawn(move || {
-                if let Some(_job) = queue.pop() {
-                    let _done = JobGuard::new(&queue);
-                    // lint:allow(relaxed: ordered by the queue's own
-                    // mutex hand-off, which is what the model checks)
+                if let Some(_job) = chan.pop() {
+                    let _done = JobGuard::new(&chan);
+                    // lint:allow(relaxed: ordered by the channel's own
+                    // completion hand-off, which is what the model checks)
                     effect.store(1, Ordering::Relaxed);
                 }
             })
         };
-        queue.barrier();
+        chan.barrier();
         assert_eq!(
             effect.load(Ordering::Relaxed),
             1,
             "barrier returned before the in-flight job finished"
         );
-        queue.remove_sender();
+        chan.remove_sender();
         worker.join().expect("worker panicked");
     });
 }

@@ -2,11 +2,15 @@
 //! results must be *bit-identical* to in-process `ShardedCamServer`
 //! lookups — same matched global address, same λ, same energy breakdown,
 //! same delay — across all three placement modes and both tag
-//! distributions.  Wire lookups execute directly on the connection thread
-//! (no queue), so the admission cap cannot shed them; the in-process
-//! non-blocking admission sheds with the typed `EngineError::Busy`, and
-//! `Full` stays reserved for "no free CAM slot".  The load generator must
-//! emit a measured bench-JSON row.
+//! distributions.  Wire lookups execute directly on the reactor's worker
+//! pool against the published snapshots (no admission queue), so the
+//! admission cap cannot shed them; the in-process non-blocking admission
+//! sheds with the typed `EngineError::Busy`, and `Full` stays reserved
+//! for "no free CAM slot".  Since protocol v6 the server multiplexes: a
+//! connection's responses may arrive in completion order, and the client
+//! must re-match them by request id (proven deterministically against a
+//! scripted server below).  The load generator must emit a measured
+//! bench-JSON row.
 
 use cscam::bits::BitVec;
 use cscam::config::DesignConfig;
@@ -58,6 +62,8 @@ fn wire_matches_inprocess(
     assert_eq!(hello.shards, 4);
     assert_eq!(hello.bank_m, 64);
     assert_eq!(hello.tag_bits, 32);
+    assert!(hello.multiplex, "a v6 server must advertise multiplexing");
+    assert!(client.multiplexed());
 
     let mut stored = Vec::new();
     for t in &tags {
@@ -146,9 +152,9 @@ fn wire_equals_inprocess_correlated_learned() {
 fn wire_reads_bypass_the_admission_queue_while_inprocess_sheds_busy() {
     // queue capacity 0: the in-process non-blocking admission sheds every
     // queued lookup with the typed Busy (NOT Full — that means "no free
-    // CAM slot").  Wire lookups run directly on the connection thread
-    // against the published snapshot, so the zero-capacity queue cannot
-    // touch them: they must keep answering.
+    // CAM slot").  Wire lookups run directly on the reactor's worker
+    // pool against the published snapshot, so the zero-capacity queue
+    // cannot touch them: they must keep answering.
     let (server, fleet, addr) = start(PlacementMode::TagHash, Some(0), NetConfig::default());
     let mut client = CamClient::connect(addr).expect("connect");
     let mut rng = Rng::seed_from_u64(207);
@@ -331,6 +337,7 @@ fn loadgen_emits_a_measured_bench_row() {
         hit_ratio: 0.9,
         population: 120,
         rate: 0.0,
+        conns: 0,
         seed: 211,
     };
     let report = driver.run().expect("loadgen run");
@@ -375,6 +382,7 @@ fn open_loop_loadgen_paces_arrivals_and_tags_its_row() {
         hit_ratio: 0.9,
         population: 120,
         rate: 10_000.0,
+        conns: 0,
         seed: 213,
     };
     let report = driver.run().expect("open-loop run");
@@ -429,4 +437,73 @@ fn metrics_cross_the_wire_as_prometheus_text() {
     assert!(again.contains("cscam_lookups_total"));
     client.shutdown().expect("shutdown");
     server.join();
+}
+
+#[test]
+fn client_rematches_reordered_bulk_responses_by_id() {
+    // The real server reorders only when the worker pool happens to finish
+    // out of order; this scripted server *always* answers the window in
+    // reverse, so the id re-match is proven deterministically: chunk 1
+    // gets Busy, chunk 2 gets Full, and a positional client would swap
+    // them.
+    use cscam::net::proto::{self, Request, Response, ServerHello};
+    use std::io::{BufReader, BufWriter, Read, Write};
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr").to_string();
+    let server = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().expect("accept");
+        let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+        let mut writer = BufWriter::new(stream);
+        let mut hello = [0u8; 8];
+        reader.read_exact(&mut hello).expect("client hello");
+        proto::parse_client_hello(&hello).expect("magic");
+        proto::write_server_hello(
+            &mut writer,
+            &ServerHello {
+                version: proto::VERSION,
+                busy: false,
+                multiplex: true,
+                shards: 4,
+                bank_m: 64,
+                tag_bits: 32,
+            },
+        )
+        .expect("server hello");
+        writer.flush().expect("flush hello");
+        // the client streams its whole window before reading: both frames
+        // are on the wire now
+        let (id1, req1) = proto::read_request(&mut reader).expect("frame 1");
+        let (id2, req2) = proto::read_request(&mut reader).expect("frame 2");
+        let tags_in = |r: &Request| match r {
+            Request::LookupBulk { tags } => tags.len(),
+            other => panic!("expected LookupBulk, got {other:?}"),
+        };
+        assert_eq!(tags_in(&req1), 4);
+        assert_eq!(tags_in(&req2), 4);
+        assert_ne!(id1, id2);
+        // answer in REVERSE submission order, with distinguishable verdicts
+        proto::write_response(&mut writer, id2, &Response::Error { code: proto::ERR_FULL, aux: 0 })
+            .expect("response 2");
+        proto::write_response(&mut writer, id1, &Response::Error { code: proto::ERR_BUSY, aux: 0 })
+            .expect("response 1");
+        writer.flush().expect("flush responses");
+        // hold the connection open until the client hangs up
+        let mut sink = [0u8; 64];
+        let _ = reader.read(&mut sink);
+    });
+
+    let mut client = CamClient::connect(addr).expect("connect to scripted server");
+    assert!(client.multiplexed(), "the scripted hello advertises multiplexing");
+    let tags: Vec<BitVec> = (0..8).map(|_| BitVec::zeros(32)).collect();
+    let out = client.lookup_bulk(&tags, 4).expect("bulk against scripted server");
+    assert_eq!(out.len(), 8);
+    for r in &out[..4] {
+        assert!(matches!(r, Err(EngineError::Busy)), "chunk 1 must keep its verdict: {r:?}");
+    }
+    for r in &out[4..] {
+        assert!(matches!(r, Err(EngineError::Full)), "chunk 2 must keep its verdict: {r:?}");
+    }
+    drop(client);
+    server.join().expect("scripted server");
 }

@@ -1,0 +1,262 @@
+//! Adversarial-peer torture tests for the reactor front-end: peers that
+//! deliver frames one byte at a time, stall mid-frame forever, pipeline
+//! far past the multiplexing window, or never read their responses.  The
+//! reactor must treat all of them as *state*, not threads — slow peers
+//! cost buffer space, stalled peers are disconnected on the stall clock,
+//! and a peer that refuses to drain its responses hits the bounded write
+//! buffer's hard cap (typed disconnect, never unbounded memory).  The
+//! over-cap shed path must answer `busy` deterministically — the old
+//! thread-per-connection accept loop could silently drop a connection
+//! when a handler-thread spawn failed; the reactor answers inline and has
+//! no spawn to fail.
+
+use cscam::bits::BitVec;
+use cscam::config::DesignConfig;
+use cscam::coordinator::BatchPolicy;
+use cscam::net::proto::{self, Request, Response};
+use cscam::net::{CamClient, CamTcpServer, LoadGen, NetConfig, NetServerHandle, WireError};
+use cscam::shard::{PlacementMode, ShardedCamServer, ShardedServerHandle};
+use cscam::util::Rng;
+use cscam::workload::TagDistribution;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+fn fleet_cfg() -> DesignConfig {
+    DesignConfig { m: 256, n: 32, zeta: 4, c: 3, l: 4, shards: 4, ..DesignConfig::reference() }
+}
+
+fn start(net: NetConfig) -> (NetServerHandle, ShardedServerHandle, String) {
+    let policy = BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(100) };
+    let fleet = ShardedCamServer::new(&fleet_cfg(), PlacementMode::TagHash, policy).spawn();
+    let server = CamTcpServer::bind(fleet.clone(), "127.0.0.1:0", net).expect("bind loopback");
+    let addr = server.local_addr().expect("local addr").to_string();
+    let handle = server.spawn().expect("spawn server");
+    (handle, fleet, addr)
+}
+
+fn stop(server: NetServerHandle, addr: &str) {
+    match CamClient::connect(addr.to_string()) {
+        Ok(mut c) => {
+            let _ = c.shutdown();
+        }
+        Err(_) => server.shutdown(),
+    }
+    server.join();
+}
+
+/// Handshake + one request delivered one byte at a time: the resumable
+/// codec must reassemble the frame across dozens of readiness events and
+/// answer as if it had arrived whole.
+#[test]
+fn byte_at_a_time_frames_are_reassembled() {
+    let (server, _fleet, addr) = start(NetConfig::default());
+    let mut raw = TcpStream::connect(&addr).expect("raw connect");
+    raw.set_nodelay(true).expect("nodelay");
+    raw.set_read_timeout(Some(Duration::from_secs(10))).expect("timeout");
+
+    let mut hello = Vec::new();
+    proto::write_client_hello(&mut hello).expect("serialize hello");
+    let mut frame = Vec::new();
+    proto::write_request(&mut frame, 42, &Request::Stats).expect("serialize request");
+    for chunk in [hello, frame] {
+        for b in chunk {
+            raw.write_all(&[b]).expect("dribble byte");
+            raw.flush().expect("flush byte");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    let mut r = std::io::BufReader::new(raw.try_clone().expect("clone"));
+    let srv_hello = proto::read_server_hello(&mut r).expect("server hello");
+    assert!(srv_hello.multiplex);
+    assert!(!srv_hello.busy);
+    let (id, resp) = proto::read_response(&mut r).expect("response to dribbled frame");
+    assert_eq!(id, 42);
+    assert!(matches!(resp, Response::Stats(_)), "got {resp:?}");
+    drop(raw);
+    stop(server, &addr);
+}
+
+/// A peer that goes silent mid-frame is disconnected once the stall
+/// budget expires — it cannot pin a connection slot forever — while the
+/// budget resets on progress (the byte-at-a-time test above survives a
+/// much longer wall-clock than the budget here).
+#[test]
+fn stalled_mid_frame_writer_is_disconnected() {
+    let net = NetConfig { stall_budget: Duration::from_millis(300), ..NetConfig::default() };
+    let (server, _fleet, addr) = start(net);
+    let mut raw = TcpStream::connect(&addr).expect("raw connect");
+    raw.set_read_timeout(Some(Duration::from_millis(200))).expect("timeout");
+    proto::write_client_hello(&mut raw).expect("hello");
+    let mut r = std::io::BufReader::new(raw.try_clone().expect("clone"));
+    proto::read_server_hello(&mut r).expect("server hello");
+
+    // half a frame, then silence
+    let mut frame = Vec::new();
+    proto::write_request(&mut frame, 7, &Request::Stats).expect("serialize");
+    raw.write_all(&frame[..frame.len() / 2]).expect("half frame");
+    raw.flush().expect("flush");
+
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let mut closed = false;
+    let mut buf = [0u8; 64];
+    while Instant::now() < deadline {
+        match r.read(&mut buf) {
+            Ok(0) => {
+                closed = true;
+                break;
+            }
+            Ok(_) => panic!("server answered a half frame"),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(_) => {
+                closed = true; // reset also counts as a disconnect
+                break;
+            }
+        }
+    }
+    assert!(closed, "stalled writer kept its connection past the stall budget");
+    drop(raw);
+    stop(server, &addr);
+}
+
+/// Pipelining far past the multiplexing window: the reactor pauses
+/// reading (backpressure) instead of buffering without bound, and once
+/// the peer drains, every request is answered exactly once — the "zero
+/// dropped acked requests" property under an aggressive client.
+#[test]
+fn firehose_pipelining_past_the_window_loses_nothing() {
+    let net = NetConfig { inflight_window: 4, write_soft_cap: 2 * 1024, ..NetConfig::default() };
+    let (server, _fleet, addr) = start(net);
+    let mut raw = TcpStream::connect(&addr).expect("raw connect");
+    raw.set_read_timeout(Some(Duration::from_secs(10))).expect("timeout");
+    proto::write_client_hello(&mut raw).expect("hello");
+    let mut r = std::io::BufReader::new(raw.try_clone().expect("clone"));
+    proto::read_server_hello(&mut r).expect("server hello");
+
+    // 100 requests up front, nothing read: 25× the inflight window
+    const BURST: u64 = 100;
+    let mut bytes = Vec::new();
+    for id in 1..=BURST {
+        proto::write_request(&mut bytes, id, &Request::Stats).expect("serialize");
+    }
+    raw.write_all(&bytes).expect("firehose");
+    raw.flush().expect("flush");
+    std::thread::sleep(Duration::from_millis(100)); // let backpressure engage
+
+    let mut seen = std::collections::HashSet::new();
+    for _ in 0..BURST {
+        let (id, resp) = proto::read_response(&mut r).expect("response");
+        assert!(matches!(resp, Response::Stats(_)), "id {id} got {resp:?}");
+        assert!(seen.insert(id), "id {id} answered twice");
+    }
+    assert_eq!(seen.len() as u64, BURST);
+    assert!(seen.iter().all(|id| (1..=BURST).contains(id)));
+    drop((raw, r));
+    stop(server, &addr);
+}
+
+/// A peer that never drains its responses: the bounded write buffer
+/// absorbs up to the hard cap and the peer is then either cut off (a
+/// typed disconnect) or stops being read from (backpressure all the way
+/// to the peer's own sends) — never unbounded server memory.  The client
+/// keeps asking for large bulk responses without ever reading; if the
+/// server buffered everything, hundreds of megabytes of responses would
+/// accumulate and every write here would keep succeeding.
+#[test]
+fn never_draining_reader_hits_the_bounded_write_buffer() {
+    let net = NetConfig {
+        inflight_window: 64,
+        write_soft_cap: 64 * 1024,
+        write_hard_cap: 256 * 1024,
+        ..NetConfig::default()
+    };
+    let (server, _fleet, addr) = start(net);
+    let mut raw = TcpStream::connect(&addr).expect("raw connect");
+    raw.set_write_timeout(Some(Duration::from_secs(2))).expect("write timeout");
+    raw.set_read_timeout(Some(Duration::from_secs(2))).expect("read timeout");
+    proto::write_client_hello(&mut raw).expect("hello");
+    proto::read_server_hello(&mut raw).expect("server hello");
+
+    // Each frame asks for a ~13 KB response; 32k frames would owe the
+    // client ~400 MB.  Long before that the server must either disconnect
+    // us at the hard cap (EPIPE/reset here) or stop reading our socket
+    // entirely (this write times out once the kernel buffers fill).
+    let mut rng = Rng::seed_from_u64(31);
+    let tags: Vec<BitVec> = TagDistribution::Uniform.sample_distinct(32, 256, &mut rng);
+    let mut frame = Vec::new();
+    proto::write_lookup_bulk_request(&mut frame, 1, &tags).expect("serialize bulk");
+    let mut bounded = false;
+    for _ in 0..32_768 {
+        if raw.write_all(&frame).and_then(|()| raw.flush()).is_err() {
+            bounded = true;
+            break;
+        }
+    }
+    assert!(bounded, "server absorbed ~400 MB of owed responses without pushing back");
+    drop(raw);
+    stop(server, &addr);
+}
+
+/// Over the connection cap every surplus connection gets a deterministic
+/// `busy` hello — the old accept loop could silently drop one when its
+/// handler-thread spawn failed; the reactor answers inline.
+#[test]
+fn over_cap_connections_all_get_a_deterministic_busy_hello() {
+    let net = NetConfig { max_connections: 1, ..NetConfig::default() };
+    let (server, _fleet, addr) = start(net);
+    let holder = CamClient::connect(addr.clone()).expect("first connection");
+    for i in 0..10 {
+        match CamClient::connect(addr.clone()) {
+            Err(WireError::Busy) => {}
+            other => panic!(
+                "surplus connection {i} must get the busy hello, got {:?}",
+                other.map(|_| "connected")
+            ),
+        }
+    }
+    drop(holder);
+    // the freed slot must come back
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let mut reconnected = false;
+    while Instant::now() < deadline {
+        if CamClient::connect(addr.clone()).is_ok() {
+            reconnected = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(reconnected, "slot never freed after the holder disconnected");
+    stop(server, &addr);
+}
+
+/// Connection-ramp mode end to end: `conns` multiplexed connections stay
+/// open through the run, every lookup is answered, and the bench row is
+/// tagged with the connection count so gating never mixes scenarios.
+#[test]
+fn loadgen_connection_ramp_holds_conns_open_and_tags_its_row() {
+    let net = NetConfig { max_connections: 64, ..NetConfig::default() };
+    let (server, _fleet, addr) = start(net);
+    let driver = LoadGen {
+        addr: addr.clone(),
+        threads: 2,
+        lookups: 2_000,
+        chunk: 32,
+        hit_ratio: 0.9,
+        population: 120,
+        rate: 0.0,
+        conns: 32,
+        seed: 17,
+    };
+    let report = driver.run().expect("ramp run");
+    assert_eq!(report.conns, 32);
+    assert_eq!(report.lookups + report.errors, 2_000);
+    assert_eq!(report.errors, 0, "no lookup may be dropped or shed in the ramp");
+    let rec = report.to_record();
+    assert!(rec.name.contains("/conns32"), "ramp rows get their own scenario: {}", rec.name);
+    let conns_metric =
+        rec.metrics.iter().find(|(k, _)| k == "conns").map(|(_, v)| *v).expect("conns metric");
+    assert_eq!(conns_metric, 32.0);
+    stop(server, &addr);
+}

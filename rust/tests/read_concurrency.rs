@@ -3,7 +3,7 @@
 //! Two properties anchor the refactor:
 //!
 //! 1. **Equivalence** — lookups served concurrently (reader pools, direct
-//!    reads, the TCP connection threads) are *bit-identical* — matched
+//!    reads, the net reactor's worker pool) are *bit-identical* — matched
 //!    address, all matches, λ, enabled blocks, comparisons, the full
 //!    energy breakdown and the delay report — to the single-threaded
 //!    reference engine, across hash/broadcast/learned placements.
